@@ -1,0 +1,37 @@
+//! Table 3 accuracy sweep on the two genuinely *trained* networks
+//! (LeNet on procedural digits, cifar-net on procedural textures).
+//!
+//! ```bash
+//! cargo run --release --example accuracy_sweep [n_images]
+//! ```
+//!
+//! The ImageNet-class rows are heavier; regenerate them with
+//! `repro table3 --images 50`. This example also demonstrates the
+//! truncation-vs-rounding ablation the paper argues for in §3.1.
+
+use bfp_cnn::harness::table3::{drop_for, eval_set_for, run_model};
+use bfp_cnn::models::ModelId;
+use bfp_cnn::quant::BfpConfig;
+use std::path::Path;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(50);
+    let artifacts = Path::new("artifacts");
+
+    for id in [ModelId::Lenet, ModelId::Cifar10] {
+        run_model(id, 32, n, 1, artifacts).print();
+        println!();
+    }
+
+    // §3.1 ablation: rounding vs truncation at narrow widths.
+    println!("== §3.1 ablation — round-off vs truncation (lenet, {n} images) ==");
+    let model = ModelId::Lenet.build(32, 1, artifacts);
+    let set = eval_set_for(ModelId::Lenet, &model, n, 7);
+    println!("{:<10} {:>12} {:>12}", "width", "round drop", "trunc drop");
+    for bits in [3u32, 4, 5, 6] {
+        let round = drop_for(&model, &set, BfpConfig::new(bits, bits));
+        let trunc = drop_for(&model, &set, BfpConfig::new(bits, bits).with_truncation());
+        println!("{bits:<10} {round:>12.4} {trunc:>12.4}");
+    }
+    println!("\n(truncation's DC bias should show a same-or-larger drop at every width)");
+}

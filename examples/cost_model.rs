@@ -1,0 +1,27 @@
+//! Table 1 cost model explorer.
+//!
+//! ```bash
+//! cargo run --release --example cost_model [M K N [L_W L_I]]
+//! ```
+//!
+//! Prints the storage / block-exponent cost of the four partition
+//! schemes (§3.3) for a custom GEMM geometry, plus the full VGG-16
+//! reproduction of Table 1.
+
+use bfp_cnn::harness::table1;
+
+fn main() {
+    let args: Vec<usize> = std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+    if args.len() >= 3 {
+        let (m, k, n) = (args[0], args[1], args[2]);
+        let lw = *args.get(3).unwrap_or(&8) as u32;
+        let li = *args.get(4).unwrap_or(&8) as u32;
+        table1::run_for_layer("custom", m, k, n, lw, li).print();
+        return;
+    }
+    for t in table1::run(8, 8) {
+        t.print();
+        println!();
+    }
+    println!("hint: pass `M K N [L_W L_I]` for a custom geometry");
+}

@@ -1,0 +1,55 @@
+//! End-to-end serving demo on the pure-Rust backend: the coordinator's
+//! dynamic batcher over the trained LeNet in both numeric modes, with
+//! accuracy + latency/throughput metrics. (The PJRT-artifact variant is
+//! `repro e2e`; this example exercises the same coordinator without
+//! requiring the AOT artifacts.)
+//!
+//! ```bash
+//! cargo run --release --example e2e_serving [requests]
+//! ```
+
+use bfp_cnn::coordinator::batcher::BatchPolicy;
+use bfp_cnn::coordinator::engine::ExecMode;
+use bfp_cnn::coordinator::server::{InferenceServer, RustBackend, ServerConfig};
+use bfp_cnn::data::DigitDataset;
+use bfp_cnn::models::ModelId;
+use bfp_cnn::quant::BfpConfig;
+use std::path::Path;
+
+fn main() {
+    let requests: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(128);
+    let ds = DigitDataset::generate(requests, 2024);
+
+    for (label, mode) in [
+        ("fp32", ExecMode::Fp32),
+        ("bfp 8/8", ExecMode::Bfp(BfpConfig::paper_default())),
+        ("bfp 4/4", ExecMode::Bfp(BfpConfig::new(4, 4))),
+    ] {
+        let model = ModelId::Lenet.build(32, 1, Path::new("artifacts"));
+        let mut server = InferenceServer::start(
+            Box::new(RustBackend { model, mode }),
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 8, linger: std::time::Duration::from_millis(2) },
+            },
+        );
+        let pending: Vec<_> = ds.images.iter().map(|img| server.submit(img.clone())).collect();
+        let mut correct = 0usize;
+        for (rx, &label) in pending.into_iter().zip(&ds.labels) {
+            let resp = rx.recv().expect("response");
+            let pred = resp
+                .logits
+                .data
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if pred == label {
+                correct += 1;
+            }
+        }
+        let metrics = server.shutdown();
+        println!("[{label:>8}] accuracy {}/{} = {:.4}", correct, requests, correct as f64 / requests as f64);
+        println!("[{label:>8}] {}", metrics.summary());
+    }
+}

@@ -1,0 +1,2 @@
+"""Build-time compile path: JAX models + Pallas kernels, AOT-lowered to
+HLO-text artifacts for the Rust runtime. Never imported at request time."""

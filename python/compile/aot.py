@@ -1,0 +1,150 @@
+"""AOT export: train the small nets, dump weight bundles, and lower the
+JAX/Pallas computations to HLO **text** artifacts for the Rust runtime.
+
+HLO text (never ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids. See
+/opt/xla-example/README.md.
+
+Artifacts written to ``--out-dir`` (default ../artifacts):
+  lenet_weights.bfpw / cifar_weights.bfpw   trained parameters
+  lenet_fwd_b8.hlo.txt                      BFP LeNet forward, batch 8
+  lenet_fwd_fp32_b8.hlo.txt                 FP32 LeNet forward, batch 8
+  bfp_gemm_demo.hlo.txt                     standalone BFP GEMM (runtime test)
+  train_log.txt                             loss curves + eval accuracies
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train_small
+
+
+def to_hlo_text(lowered):
+    """Lowered jitted fn → HLO text via stablehlo → XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, example_args, path, log):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    log(f"  wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: ignored single-file path")
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--force", action="store_true", help="retrain even if weights exist")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    log_lines = []
+
+    def log(msg):
+        print(msg)
+        log_lines.append(str(msg))
+
+    # ---- train (or reuse) the small nets ----
+    lenet_w = out / "lenet_weights.bfpw"
+    if args.force or not lenet_w.exists():
+        params, acc, curve = train_small.train_lenet(steps=args.steps, log=log)
+        model.dump_bfpw(params, lenet_w)
+        log(f"  wrote {lenet_w} (eval acc {acc:.4f})")
+    else:
+        log(f"  reusing {lenet_w}")
+        params = load_bfpw(lenet_w)
+
+    cifar_w = out / "cifar_weights.bfpw"
+    if args.force or not cifar_w.exists():
+        cparams, cacc, _ = train_small.train_cifar(steps=args.steps + 100, log=log)
+        model.dump_bfpw(cparams, cifar_w)
+        log(f"  wrote {cifar_w} (eval acc {cacc:.4f})")
+    else:
+        log(f"  reusing {cifar_w}")
+
+    # ---- lower the serving artifacts ----
+    # Weights are lowered as *arguments*, not closed-over constants: the
+    # MLIR-text round trip elides large constants silently, and feeding
+    # weights at execute time is what a real serving runtime does anyway.
+    # The `.args.txt` manifest records the argument order for Rust.
+    params = jax.tree.map(jnp.asarray, params)
+    spec8 = jax.ShapeDtypeStruct((8, 1, 28, 28), jnp.float32)
+    flat, treedef = jax.tree_util.tree_flatten(params)  # dict → sorted keys
+    names = sorted(params.keys())
+    param_specs = tuple(jax.ShapeDtypeStruct(l.shape, l.dtype) for l in flat)
+
+    def write_manifest(path):
+        lines = [f"{n} {' '.join(str(d) for d in params[n].shape)}" for n in names]
+        lines.append("__input__ 8 1 28 28")
+        path.write_text("\n".join(lines) + "\n")
+        log(f"  wrote {path}")
+
+    log("lowering lenet_fwd_b8 (BFP, pallas)")
+    lower_and_write(
+        lambda *a: (
+            model.lenet_fwd_bfp(jax.tree_util.tree_unflatten(treedef, a[:-1]), a[-1], 8, 8, use_pallas=True),
+        ),
+        (*param_specs, spec8),
+        out / "lenet_fwd_b8.hlo.txt",
+        log,
+    )
+    write_manifest(out / "lenet_fwd_b8.args.txt")
+
+    log("lowering lenet_fwd_fp32_b8")
+    lower_and_write(
+        lambda *a: (model.lenet_fwd_fp32(jax.tree_util.tree_unflatten(treedef, a[:-1]), a[-1]),),
+        (*param_specs, spec8),
+        out / "lenet_fwd_fp32_b8.hlo.txt",
+        log,
+    )
+    write_manifest(out / "lenet_fwd_fp32_b8.args.txt")
+
+    log("lowering bfp_gemm_demo (pallas kernel, 4x8 @ 8x16, L=8)")
+    from .kernels import bfp_matmul_pallas
+
+    lower_and_write(
+        lambda w, i: (bfp_matmul_pallas(w, i, 8, 8),),
+        (jax.ShapeDtypeStruct((4, 8), jnp.float32), jax.ShapeDtypeStruct((8, 16), jnp.float32)),
+        out / "bfp_gemm_demo.hlo.txt",
+        log,
+    )
+
+    (out / "train_log.txt").write_text("\n".join(log_lines) + "\n")
+    log("aot done")
+
+
+def load_bfpw(path):
+    """Parse a .bfpw file back into a params dict (for --reuse runs)."""
+    import numpy as np
+
+    lines = [l for l in path.read_text().splitlines() if l.strip() and not l.startswith("#")]
+    assert lines[0] == "bfpw-v1"
+    params = {}
+    i = 1
+    while i < len(lines):
+        parts = lines[i].split()
+        assert parts[0] == "param"
+        name = parts[1]
+        ndim = int(parts[2])
+        shape = tuple(int(d) for d in parts[3 : 3 + ndim])
+        data = np.array([float(v) for v in lines[i + 1].split()], dtype=np.float32)
+        params[name] = jnp.array(data.reshape(shape))
+        i += 2
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Procedural digit dataset — the Python twin of `rust/src/data/digits.rs`.
+
+Shares the same 5×7 glyph table and rendering recipe (scale/offset jitter,
+soft edges, additive noise) so the JAX-trained LeNet sees the same
+distribution the Rust evaluation set draws from. Exact bit-identity with
+the Rust RNG is not required (and not attempted); distribution identity is
+what matters for the trained weights.
+"""
+
+import numpy as np
+
+# 5×7 glyphs for digits 0-9; each row is 5 bits, MSB = leftmost column.
+# MUST stay in sync with rust/src/data/digits.rs::GLYPHS.
+GLYPHS = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110],  # 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110],  # 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111],  # 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110],  # 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010],  # 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110],  # 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110],  # 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000],  # 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110],  # 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100],  # 9
+]
+
+
+def render_digit(digit, rng):
+    """One 28×28 grayscale digit with jitter; values in [0, 1]."""
+    glyph = GLYPHS[digit % 10]
+    img = np.zeros((28, 28), dtype=np.float32)
+    scale = rng.uniform(2.6, 3.8)
+    ox = rng.uniform(2.0, 8.0)
+    oy = rng.uniform(1.0, 5.0)
+    intensity = rng.uniform(0.75, 1.0)
+    ys, xs = np.mgrid[0:28, 0:28]
+    gx = (xs - ox) / scale
+    gy = (ys - oy) / scale
+    valid = (gx >= 0) & (gx < 5) & (gy >= 0) & (gy < 7)
+    cx = np.clip(gx.astype(int), 0, 4)
+    cy = np.clip(gy.astype(int), 0, 6)
+    glyph_arr = np.array(
+        [[(row >> (4 - c)) & 1 for c in range(5)] for row in glyph], dtype=np.float32
+    )
+    lit = glyph_arr[cy, cx] * valid
+    fx = np.abs(gx - cx - 0.5)
+    fy = np.abs(gy - cy - 0.5)
+    soft = np.clip(1.0 - np.maximum(fx, fy) * 0.6, 0.3, 1.0)
+    img = (lit * intensity * soft).astype(np.float32)
+    img += rng.normal(0, 0.03, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def digit_dataset(n, seed):
+    """`n` balanced labelled digits: images [n,1,28,28], labels [n]."""
+    rng = np.random.default_rng(seed)
+    images = np.zeros((n, 1, 28, 28), dtype=np.float32)
+    labels = np.zeros(n, dtype=np.int32)
+    for idx in range(n):
+        d = idx % 10
+        images[idx, 0] = render_digit(d, rng)
+        labels[idx] = d
+    return images, labels
+
+
+# ---- cifar-like procedural textures (python twin of textures.rs) ----
+
+def render_texture(cls, rng):
+    """One 3×32×32 texture of class `cls` in [0, 1]."""
+    phase = rng.uniform(0, 2 * np.pi)
+    freq = rng.uniform(0.5, 1.5)
+    base = rng.uniform(0.2, 0.8, 3)
+    ys, xs = np.mgrid[0:32, 0:32]
+    xf = xs / 32.0
+    yf = ys / 32.0
+    c = cls % 10
+    if c == 0:
+        v = xf
+    elif c == 1:
+        v = yf
+    elif c == 2:
+        v = (((xf * 8 * freq).astype(int) + (yf * 8 * freq).astype(int)) % 2).astype(float)
+    elif c == 3:
+        v = (np.sin(xf * 12 * freq + phase) + 1) / 2
+    elif c == 4:
+        v = (np.sin(yf * 12 * freq + phase) + 1) / 2
+    elif c == 5:
+        v = (np.sin((xf + yf) * 9 * freq + phase) + 1) / 2
+    elif c == 6:
+        r = np.sqrt((xf - 0.5) ** 2 + (yf - 0.5) ** 2)
+        v = (np.sin(r * 20 * freq + phase) + 1) / 2
+    elif c == 7:
+        r2 = (xf - 0.5) ** 2 + (yf - 0.5) ** 2
+        v = np.exp(-r2 * 12 * freq)
+    elif c == 8:
+        v = (np.sin(xf * 25 * freq) * np.sin(yf * 25 * freq) + 1) / 2
+    else:
+        v = rng.uniform(0, 1, (32, 32))
+    img = np.zeros((3, 32, 32), dtype=np.float32)
+    for ch in range(3):
+        chan_mod = 0.6 + 0.4 * np.abs(np.sin((ch + 1.0) * v))
+        img[ch] = np.clip(
+            v * chan_mod * 0.8 + base[ch] * 0.2 + rng.normal(0, 0.02, (32, 32)), 0, 1
+        )
+    return img
+
+
+def texture_dataset(n, seed):
+    """`n` balanced labelled textures: images [n,3,32,32], labels [n]."""
+    rng = np.random.default_rng(seed ^ 0xC1FA)
+    images = np.zeros((n, 3, 32, 32), dtype=np.float32)
+    labels = np.zeros(n, dtype=np.int32)
+    for idx in range(n):
+        c = idx % 10
+        images[idx] = render_texture(c, rng)
+        labels[idx] = c
+    return images, labels

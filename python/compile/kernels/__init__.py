@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels: BFP block formatting and the fixed-point GEMM
+of the paper's Figure 2 data flow, plus the pure-jnp oracle (`ref`).
+
+All kernels run with ``interpret=True`` — the CPU PJRT client cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO so the
+Rust runtime can run the artifacts (see /opt/xla-example/README.md).
+"""
+
+from .bfp_quantize import block_mantissas_pallas, bfp_quantize_pallas
+from .bfp_matmul import bfp_matmul_pallas
+
+__all__ = [
+    "block_mantissas_pallas",
+    "bfp_quantize_pallas",
+    "bfp_matmul_pallas",
+]

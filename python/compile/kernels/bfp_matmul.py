@@ -1,0 +1,84 @@
+"""Pallas kernel: the Figure 2 fixed-point GEMM over aligned mantissas.
+
+The mantissa MAC runs on integer-valued f32 (products ≤ 2^(L_W+L_I-2) and
+K-term sums < 2^24 stay exact in f32 — the §3.4 width plan, asserted
+below), so the kernel is bit-exact against an integer reference while
+targeting the MXU on real hardware (DESIGN.md §6).
+
+Tiling: grid over (M/bm, N/bn) output tiles with the full K panel of both
+operands resident in VMEM — the eq. (4) partition maps W rows to MXU rows
+and broadcasts the shared-exponent I panel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .bfp_quantize import block_mantissas_pallas
+
+
+def _matmul_kernel(qw_ref, qi_ref, o_ref):
+    """One (bm, bn) output tile: mantissa GEMM in f32 (integer-valued)."""
+    o_ref[...] = jnp.dot(
+        qw_ref[...], qi_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def mantissa_matmul_pallas(qw, qi, bm=128, bn=1024):
+    """Tiled mantissa GEMM ``qw [M,K] @ qi [K,N]`` via Pallas.
+
+    Default tiles are sized for the lowered-artifact shapes: large enough
+    to collapse the interpret-mode grid (each grid step costs an XLA
+    while-loop iteration on CPU — §Perf-L1), small enough that one
+    (bm,K)+(K,bn)+(bm,bn) working set stays far below VMEM on a real TPU
+    (see python/compile/vmem_report.py).
+    """
+    m, k = qw.shape
+    k2, n = qi.shape
+    assert k == k2
+    bm = min(bm, m)
+    bn = min(bn, n)
+    # shrink tiles to divide evenly (interpret mode has no masked stores)
+    while m % bm:
+        bm -= 1
+    while n % bn:
+        bn -= 1
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(qw.astype(jnp.float32), qi.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def bfp_matmul_pallas(w, i, l_w, l_i):
+    """Eq. (4) BFP GEMM through Pallas kernels — the Pallas twin of
+    :func:`ref.bfp_matmul`: per-row quantize W, whole-block quantize I,
+    mantissa MAC, per-row rescale."""
+    m, k = w.shape
+    k2, n = i.shape
+    assert k == k2
+    # exact bound: K·(2^(L_W-1)-1)·(2^(L_I-1)-1) must stay in f32's
+    # exact-integer range [0, 2^24] (the §3.4 width plan)
+    assert k * (2 ** (l_w - 1) - 1) * (2 ** (l_i - 1) - 1) <= 2**24, (
+        f"mantissa MAC would lose exactness: K={k}, L_W={l_w}, L_I={l_i}"
+    )
+    f_w, f_i = l_w - 2, l_i - 2
+    qw, ew = block_mantissas_pallas(w, l_w, axis=1)
+    qi, ei = block_mantissas_pallas(i, l_i, axis=None)
+    om = mantissa_matmul_pallas(qw, qi)
+    row_scale = jnp.where(
+        (ew <= ref.ZERO_EXP // 2) | (ei <= ref.ZERO_EXP // 2),
+        jnp.float32(0.0),
+        jnp.exp2((ew + ei - f_w - f_i).astype(jnp.float32)),
+    )
+    return om * row_scale[:, None]

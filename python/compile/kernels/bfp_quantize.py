@@ -1,0 +1,84 @@
+"""Pallas kernel: BFP block formatting (§3.1 / eq. 1).
+
+One grid program per block (a weight row, or the whole matrix flattened to
+a single row). The kernel keeps the entire block resident in VMEM, reduces
+to the block max, extracts the shared exponent from the f32 bit pattern,
+then shifts/rounds every mantissa — the two-pass scan-then-align data flow
+a hardware BFP unit implements, expressed as a BlockSpec.
+
+TPU adaptation note (DESIGN.md §6): the block IS the VMEM tile. The
+max-reduction and the shift/round are VPU work; the downstream mantissa
+GEMM (bfp_matmul.py) is the MXU work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _quantize_row_kernel(x_ref, q_ref, e_ref, *, frac, maxm):
+    """Quantize one block (row) held in VMEM."""
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x))
+    bits = jax.lax.bitcast_convert_type(absmax, jnp.uint32)
+    eps = ((bits >> 23) & 0xFF).astype(jnp.int32) - 127
+    has_signal = absmax > 0
+    # plain-int sentinel: jnp constants would be captured as consts,
+    # which pallas kernels disallow
+    eps = jnp.where(has_signal, eps, jnp.int32(-(2**30)))
+    inv_step = jnp.where(has_signal, jnp.exp2((frac - eps).astype(jnp.float32)), 0.0)
+    q = jnp.clip(ref.round_half_away(x * inv_step), -maxm, maxm)
+    q_ref[...] = q.astype(jnp.float32)
+    e_ref[...] = jnp.full(e_ref.shape, eps, dtype=jnp.int32)
+
+
+def block_mantissas_pallas(x, total_bits, axis=None):
+    """Pallas version of :func:`ref.block_mantissas`.
+
+    ``x`` must be 2-D. ``axis=1`` → per-row blocks; ``axis=None`` → one
+    block over the whole matrix (internally a single grid step over the
+    flattened view).
+    """
+    assert x.ndim == 2, "block_mantissas_pallas expects a 2-D matrix"
+    frac = total_bits - 2
+    maxm = float(2 ** (total_bits - 1) - 1)
+    if axis is None:
+        flat = x.reshape(1, -1)
+        q, e = block_mantissas_pallas(flat, total_bits, axis=1)
+        return q.reshape(x.shape), e[0]
+    assert axis == 1, "only per-row (axis=1) or whole (axis=None) blocks"
+    rows, cols = x.shape
+    kernel = functools.partial(_quantize_row_kernel, frac=frac, maxm=maxm)
+    q, e = pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, cols), lambda r: (r, 0))],
+        out_specs=[
+            pl.BlockSpec((1, cols), lambda r: (r, 0)),
+            pl.BlockSpec((1,), lambda r: (r,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            jax.ShapeDtypeStruct((rows,), jnp.int32),
+        ],
+        interpret=True,
+    )(x.astype(jnp.float32))
+    return q, e
+
+
+def bfp_quantize_pallas(x, total_bits, axis=None):
+    """Quantize-dequantize through the Pallas kernel (block-formatted
+    values back in f32) — the Pallas twin of :func:`ref.bfp_quantize`."""
+    frac = total_bits - 2
+    q, eps = block_mantissas_pallas(x, total_bits, axis=axis)
+    eps_b = eps if axis is None else jnp.expand_dims(eps, axis)
+    step = jnp.where(
+        eps_b <= ref.ZERO_EXP // 2,
+        jnp.float32(0.0),
+        jnp.exp2((eps_b - frac).astype(jnp.float32)),
+    )
+    return q * step

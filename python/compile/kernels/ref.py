@@ -1,0 +1,113 @@
+"""Pure-jnp oracle for the BFP kernels.
+
+Semantics are bit-matched to the Rust substrate (`rust/src/bfp/`):
+
+* mantissa width ``L`` *includes* the sign bit (Table 3 convention);
+  fractional bits ``f = L - 2`` (one sign, one integer bit);
+* block exponent ``eps = max_i floor(log2 |x_i|)`` over the block,
+  extracted from the f32 bit pattern (exact, unlike ``log2``);
+* step ``delta = 2^(eps - f)``; mantissas ``q = round_half_away(x/delta)``
+  saturated to ``±(2^(L-1) - 1)``;
+* the eq. (4) GEMM quantizes ``W`` per row and ``I`` as a whole, then
+  multiply-accumulates mantissas exactly and rescales by
+  ``2^(eps_W(row) + eps_I - f_W - f_I)``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+ZERO_EXP = jnp.int32(-(2**30))  # plays the role of Rust's i32::MIN/2 sentinel
+
+
+def round_half_away(x):
+    """Round to nearest, ties away from zero (Rust ``f32::round``)."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def exponent_of(x):
+    """floor(log2 |x|) per element via the f32 exponent field (exact).
+
+    Zeros map to ZERO_EXP so they never win the block max. Subnormals
+    (absent from CNN activations in practice) are normalised first.
+    """
+    x = x.astype(jnp.float32)
+    absx = jnp.abs(x)
+    is_sub = (absx > 0) & (absx < jnp.float32(2.0**-126))
+    scaled = jnp.where(is_sub, absx * jnp.float32(2.0**64), absx)
+    bits = jax.lax.bitcast_convert_type(scaled, jnp.uint32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32) - 127
+    e = jnp.where(is_sub, e - 64, e)
+    return jnp.where(absx > 0, e, ZERO_EXP)
+
+
+def block_exponent(x, axis=None):
+    """Block exponent: max exponent over ``axis`` (None = whole array)."""
+    return jnp.max(exponent_of(x), axis=axis)
+
+
+def _inv_step(eps_b, frac):
+    return jnp.where(
+        eps_b <= ZERO_EXP // 2,
+        jnp.float32(0.0),
+        jnp.exp2((frac - eps_b).astype(jnp.float32)),
+    )
+
+
+def _step(eps_b, frac):
+    return jnp.where(
+        eps_b <= ZERO_EXP // 2,
+        jnp.float32(0.0),
+        jnp.exp2((eps_b - frac).astype(jnp.float32)),
+    )
+
+
+def block_mantissas(x, total_bits, axis=None):
+    """Block-format ``x`` into integer mantissas (as f32) + exponent(s).
+
+    ``axis=None`` treats the whole array as one block; ``axis=1`` with a
+    2-D array gives per-row blocks (the eq. 4 weight layout).
+
+    Returns ``(q, eps)``: ``q`` integer-valued f32 shaped like ``x``,
+    ``eps`` the int32 block exponent(s).
+    """
+    frac = total_bits - 2
+    maxm = float(2 ** (total_bits - 1) - 1)
+    eps = block_exponent(x, axis=axis)
+    eps_b = eps if axis is None else jnp.expand_dims(eps, axis)
+    q = jnp.clip(round_half_away(x * _inv_step(eps_b, frac)), -maxm, maxm)
+    return q.astype(jnp.float32), eps
+
+
+def bfp_quantize(x, total_bits, axis=None):
+    """Quantize-dequantize round trip: the BFP approximation of ``x``."""
+    frac = total_bits - 2
+    q, eps = block_mantissas(x, total_bits, axis=axis)
+    eps_b = eps if axis is None else jnp.expand_dims(eps, axis)
+    return q * _step(eps_b, frac)
+
+
+def bfp_matmul(w, i, l_w, l_i):
+    """Eq. (4) BFP GEMM oracle: ``O ≈ W @ I`` through the Figure 2 flow.
+
+    ``w`` is ``[M, K]`` (per-row blocks), ``i`` is ``[K, N]`` (one block).
+    The mantissa MAC stays exact in f32 provided
+    ``K · 2^(l_w + l_i - 2) < 2^24`` (asserted; §3.4 width plan).
+    """
+    m, k = w.shape
+    k2, n = i.shape
+    assert k == k2, f"inner dim mismatch {k} vs {k2}"
+    # exact bound: K·(2^(L_W-1)-1)·(2^(L_I-1)-1) must stay in f32's
+    # exact-integer range [0, 2^24] (the §3.4 width plan)
+    assert k * (2 ** (l_w - 1) - 1) * (2 ** (l_i - 1) - 1) <= 2**24, (
+        f"mantissa MAC would lose exactness: K={k}, L_W={l_w}, L_I={l_i}"
+    )
+    f_w, f_i = l_w - 2, l_i - 2
+    qw, ew = block_mantissas(w, l_w, axis=1)     # [M,K], [M]
+    qi, ei = block_mantissas(i, l_i, axis=None)  # [K,N], scalar
+    om = qw @ qi  # integer-valued f32, exact under the width plan
+    row_scale = jnp.where(
+        (ew <= ZERO_EXP // 2) | (ei <= ZERO_EXP // 2),
+        jnp.float32(0.0),
+        jnp.exp2((ew + ei - f_w - f_i).astype(jnp.float32)),
+    )
+    return om * row_scale[:, None]

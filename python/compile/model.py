@@ -1,0 +1,169 @@
+"""Layer-2 JAX models: LeNet (mnist) and the cifar net, with both the
+FP32 training/reference path and the BFP inference path built on the
+Layer-1 Pallas kernels.
+
+Architectures mirror `rust/src/models/{lenet,cifar}.rs` exactly (shapes in
+the module docs there). Weight layout is OIHW for convs, [out, in] for
+dense — the `.bfpw` interchange layout.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bfp_matmul_pallas
+from .kernels import ref as kref
+
+
+# ---------- shared ops ----------
+
+def conv2d_fp32(x, w, b, stride=1, padding=0):
+    """NCHW conv, OIHW weights, symmetric padding."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def im2col(x, kh, kw, stride=1, padding=0):
+    """Patches of NCHW `x`: returns [B, K, N] with K=C·kh·kw, N=oh·ow —
+    the Figure 1 layout (feature order C, kh, kw matches OIHW reshape)."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [B, C*kh*kw, oh, ow]
+    b, k, oh, ow = patches.shape
+    return patches.reshape(b, k, oh * ow), (oh, ow)
+
+
+def conv2d_bfp(x, w, b, l_w, l_i, stride=1, padding=0, use_pallas=True):
+    """BFP conv (Figure 2): per-image eq. (4) block formatting, mantissa
+    GEMM via the Pallas kernel, f32 bias. Loops the (static) batch so each
+    image gets its own whole-matrix input block, matching the Rust engine.
+    """
+    m = w.shape[0]
+    kh, kw = w.shape[2], w.shape[3]
+    wmat = w.reshape(m, -1)
+    cols, (oh, ow) = im2col(x, kh, kw, stride, padding)
+    mm = bfp_matmul_pallas if use_pallas else kref.bfp_matmul
+    outs = [mm(wmat, cols[i], l_w, l_i) for i in range(x.shape[0])]
+    out = jnp.stack(outs).reshape(x.shape[0], m, oh, ow)
+    return out + b[None, :, None, None]
+
+
+def max_pool(x, k=2, s=2):
+    """NCHW max pooling, no padding."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, s, s), "VALID"
+    )
+
+
+# ---------- LeNet ----------
+
+def init_lenet(key):
+    """He-initialised LeNet parameters (layout mirrors lenet.rs)."""
+    ks = jax.random.split(key, 4)
+    he = lambda k, shape, fan: jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan)
+    return {
+        "conv1_w": he(ks[0], (8, 1, 5, 5), 25),
+        "conv1_b": jnp.zeros(8),
+        "conv2_w": he(ks[1], (16, 8, 5, 5), 200),
+        "conv2_b": jnp.zeros(16),
+        "fc1_w": he(ks[2], (64, 784), 784),
+        "fc1_b": jnp.zeros(64),
+        "fc2_w": he(ks[3], (10, 64), 64),
+        "fc2_b": jnp.zeros(10),
+    }
+
+
+def lenet_fwd_fp32(params, x):
+    """FP32 LeNet forward: [B,1,28,28] -> [B,10] logits."""
+    x = jax.nn.relu(conv2d_fp32(x, params["conv1_w"], params["conv1_b"], 1, 2))
+    x = max_pool(x)
+    x = jax.nn.relu(conv2d_fp32(x, params["conv2_w"], params["conv2_b"], 1, 2))
+    x = max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"].T + params["fc1_b"])
+    return x @ params["fc2_w"].T + params["fc2_b"]
+
+
+def lenet_fwd_bfp(params, x, l_w=8, l_i=8, use_pallas=True):
+    """BFP LeNet forward: conv layers through the Figure 2 data flow,
+    FC layers in FP32 (the paper's Caffe port, §5.1)."""
+    x = jax.nn.relu(conv2d_bfp(x, params["conv1_w"], params["conv1_b"], l_w, l_i, 1, 2, use_pallas))
+    x = max_pool(x)
+    x = jax.nn.relu(conv2d_bfp(x, params["conv2_w"], params["conv2_b"], l_w, l_i, 1, 2, use_pallas))
+    x = max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"].T + params["fc1_b"])
+    return x @ params["fc2_w"].T + params["fc2_b"]
+
+
+# ---------- cifar net ----------
+
+def init_cifar(key):
+    """He-initialised cifar-net parameters (layout mirrors cifar.rs)."""
+    ks = jax.random.split(key, 5)
+    he = lambda k, shape, fan: jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan)
+    return {
+        "conv1_w": he(ks[0], (16, 3, 3, 3), 27),
+        "conv1_b": jnp.zeros(16),
+        "conv2_w": he(ks[1], (32, 16, 3, 3), 144),
+        "conv2_b": jnp.zeros(32),
+        "conv3_w": he(ks[2], (64, 32, 3, 3), 288),
+        "conv3_b": jnp.zeros(64),
+        "fc1_w": he(ks[3], (64, 1024), 1024),
+        "fc1_b": jnp.zeros(64),
+        "fc2_w": he(ks[4], (10, 64), 64),
+        "fc2_b": jnp.zeros(10),
+    }
+
+
+def cifar_fwd_fp32(params, x):
+    """FP32 cifar-net forward: [B,3,32,32] -> [B,10] logits."""
+    x = jax.nn.relu(conv2d_fp32(x, params["conv1_w"], params["conv1_b"], 1, 1))
+    x = max_pool(x)
+    x = jax.nn.relu(conv2d_fp32(x, params["conv2_w"], params["conv2_b"], 1, 1))
+    x = max_pool(x)
+    x = jax.nn.relu(conv2d_fp32(x, params["conv3_w"], params["conv3_b"], 1, 1))
+    x = max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"].T + params["fc1_b"])
+    return x @ params["fc2_w"].T + params["fc2_b"]
+
+
+def cifar_fwd_bfp(params, x, l_w=8, l_i=8, use_pallas=True):
+    """BFP cifar-net forward."""
+    x = jax.nn.relu(conv2d_bfp(x, params["conv1_w"], params["conv1_b"], l_w, l_i, 1, 1, use_pallas))
+    x = max_pool(x)
+    x = jax.nn.relu(conv2d_bfp(x, params["conv2_w"], params["conv2_b"], l_w, l_i, 1, 1, use_pallas))
+    x = max_pool(x)
+    x = jax.nn.relu(conv2d_bfp(x, params["conv3_w"], params["conv3_b"], l_w, l_i, 1, 1, use_pallas))
+    x = max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"].T + params["fc1_b"])
+    return x @ params["fc2_w"].T + params["fc2_b"]
+
+
+# ---------- .bfpw interchange ----------
+
+def dump_bfpw(params, path):
+    """Write params in the `.bfpw` text format weights_io.rs parses."""
+    import numpy as np
+
+    lines = ["bfpw-v1"]
+    for name in sorted(params):
+        arr = np.asarray(params[name], dtype=np.float32)
+        dims = " ".join(str(d) for d in arr.shape)
+        lines.append(f"param {name} {arr.ndim} {dims}")
+        lines.append(" ".join(repr(float(v)) for v in arr.reshape(-1)))
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")

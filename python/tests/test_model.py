@@ -1,0 +1,86 @@
+"""L2 model tests: shapes, FP32-vs-BFP consistency, training smoke."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import datagen, model, train_small
+
+
+def test_lenet_shapes():
+    params = model.init_lenet(jax.random.PRNGKey(0))
+    x = jnp.zeros((4, 1, 28, 28))
+    assert model.lenet_fwd_fp32(params, x).shape == (4, 10)
+    assert model.lenet_fwd_bfp(params, x, 8, 8, use_pallas=False).shape == (4, 10)
+
+
+def test_cifar_shapes():
+    params = model.init_cifar(jax.random.PRNGKey(0))
+    x = jnp.zeros((2, 3, 32, 32))
+    assert model.cifar_fwd_fp32(params, x).shape == (2, 10)
+    assert model.cifar_fwd_bfp(params, x, 8, 8, use_pallas=False).shape == (2, 10)
+
+
+def test_bfp_forward_pallas_matches_ref_path():
+    """The Pallas-kernel BFP forward must bit-match the jnp-oracle BFP
+    forward (same math, two implementations)."""
+    params = model.init_lenet(jax.random.PRNGKey(1))
+    x = jnp.array(datagen.digit_dataset(4, 3)[0])
+    a = model.lenet_fwd_bfp(params, x, 8, 8, use_pallas=True)
+    b = model.lenet_fwd_bfp(params, x, 8, 8, use_pallas=False)
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_bfp_forward_tracks_fp32():
+    params = model.init_lenet(jax.random.PRNGKey(2))
+    x = jnp.array(datagen.digit_dataset(6, 5)[0])
+    fp = np.array(model.lenet_fwd_fp32(params, x))
+    bfp = np.array(model.lenet_fwd_bfp(params, x, 8, 8, use_pallas=False))
+    nsr = np.sum((fp - bfp) ** 2) / np.sum(fp**2)
+    assert nsr < 1e-3, nsr
+
+
+def test_im2col_matches_conv():
+    """im2col + matmul == lax conv (Figure 1 equivalence)."""
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(0, 1, (2, 3, 9, 9)).astype(np.float32))
+    w = jnp.array(rng.normal(0, 0.3, (5, 3, 3, 3)).astype(np.float32))
+    b = jnp.zeros(5)
+    want = np.array(model.conv2d_fp32(x, w, b, stride=1, padding=1))
+    cols, (oh, ow) = model.im2col(x, 3, 3, stride=1, padding=1)
+    wmat = w.reshape(5, -1)
+    got = np.stack([np.array(wmat @ cols[i]).reshape(5, oh, ow) for i in range(2)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_training_reduces_loss():
+    params = model.init_lenet(jax.random.PRNGKey(3))
+    x, y = datagen.digit_dataset(300, 11)
+    params, curve = train_small.train(
+        model.lenet_fwd_fp32, params, jnp.array(x), jnp.array(y),
+        steps=40, batch=32, log=lambda *_: None,
+    )
+    assert curve[0][1] > 2.0  # ~ln(10) at init
+    assert curve[-1][1] < 0.8  # clearly learning
+
+
+def test_dump_and_reload_bfpw(tmp_path):
+    params = model.init_lenet(jax.random.PRNGKey(4))
+    p = tmp_path / "w.bfpw"
+    model.dump_bfpw(params, p)
+    from compile.aot import load_bfpw
+
+    back = load_bfpw(p)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.array(params[k]), np.array(back[k]))
+
+
+def test_datagen_determinism_and_balance():
+    x1, y1 = datagen.digit_dataset(50, 7)
+    x2, y2 = datagen.digit_dataset(50, 7)
+    np.testing.assert_array_equal(x1, x2)
+    assert all((y1 == d).sum() == 5 for d in range(10))
+    tx, ty = datagen.texture_dataset(20, 1)
+    assert tx.shape == (20, 3, 32, 32)
+    assert tx.min() >= 0 and tx.max() <= 1

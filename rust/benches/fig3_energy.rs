@@ -1,0 +1,25 @@
+//! Bench for Figure 3: energy-histogram computation over captured layer
+//! outputs, plus the rendered figure table.
+
+use bfp_cnn::analysis::energy::EnergyHistogram;
+use bfp_cnn::data::Rng;
+use bfp_cnn::harness::benchkit::{bench, section};
+use bfp_cnn::harness::fig3;
+use std::path::Path;
+
+fn main() {
+    section("Figure 3 — histogram throughput");
+    let mut rng = Rng::new(1);
+    let values = rng.normal_vec(1 << 20, 1.0);
+    bench("energy_histogram_1M", Some((1 << 20) as f64), "elem", || {
+        std::hint::black_box(EnergyHistogram::compute(&values, 50));
+    });
+
+    section("Figure 3 — layer capture + render (2 images, VGG-16/32px)");
+    bench("fig3_capture_and_render", Some(1.0), "run", || {
+        std::hint::black_box(fig3::run(32, 2, 3, Path::new("artifacts")));
+    });
+
+    section("Figure 3 — rendered (5 images)");
+    fig3::run(32, 5, 3, Path::new("artifacts")).print();
+}

@@ -1,0 +1,86 @@
+//! Hot-path micro-benches for the §Perf optimization loop: block
+//! formatting, the mantissa GEMM inner loops, im2col, and the whole BFP
+//! conv layer. Run before/after each optimization; numbers recorded in
+//! EXPERIMENTS.md §Perf.
+
+use bfp_cnn::bfp::gemm::f32_gemm;
+use bfp_cnn::bfp::{bfp_gemm, block_format, max_exponent, BfpFormat, BfpMatrix};
+use bfp_cnn::bfp::partition::BlockAxis;
+use bfp_cnn::data::Rng;
+use bfp_cnn::harness::benchkit::{bench, section};
+use bfp_cnn::nn::Conv2d;
+use bfp_cnn::tensor::{im2col, Conv2dGeometry, Tensor};
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    section("quantize: max_exponent scan");
+    let xs = rng.normal_vec(1 << 20, 1.0);
+    bench("max_exponent_1M", Some((1 << 20) as f64), "elem", || {
+        std::hint::black_box(max_exponent(&xs));
+    });
+
+    section("quantize: full block format (1M elements, L=8)");
+    let fmt = BfpFormat::new(8);
+    bench("block_format_1M", Some((1 << 20) as f64), "elem", || {
+        std::hint::black_box(block_format(&xs, fmt));
+    });
+    bench("bfp_matrix_whole_1M", Some((1 << 20) as f64), "elem", || {
+        std::hint::black_box(BfpMatrix::quantize(&xs, 1024, 1024, fmt, BlockAxis::Whole));
+    });
+    bench("bfp_matrix_per_row_1M", Some((1 << 20) as f64), "elem", || {
+        std::hint::black_box(BfpMatrix::quantize(&xs, 1024, 1024, fmt, BlockAxis::PerRow));
+    });
+
+    section("GEMM inner loops (conv3_1-like: 256x1152 @ 1152x256)");
+    let (m, k, n) = (256usize, 1152usize, 256usize);
+    let w = rng.laplacian_vec(m * k, 0.05);
+    let i = rng.normal_vec(k * n, 1.0);
+    let macs = (m * k * n) as f64;
+    let mut out = vec![0f32; m * n];
+    bench("f32_gemm", Some(macs), "MAC", || {
+        f32_gemm(&w, &i, m, k, n, &mut out);
+        std::hint::black_box(&out);
+    });
+    let wq = BfpMatrix::quantize(&w, m, k, fmt, BlockAxis::PerRow);
+    let iq = BfpMatrix::quantize(&i, k, n, fmt, BlockAxis::Whole);
+    bench("bfp_gemm (8-bit, f32-mantissa lane)", Some(macs), "MAC", || {
+        std::hint::black_box(bfp_gemm(&wq, &iq));
+    });
+    // force the i64 lane for comparison
+    let fmt16 = BfpFormat::new(16);
+    let wq16 = BfpMatrix::quantize(&w, m, k, fmt16, BlockAxis::PerRow);
+    let iq16 = BfpMatrix::quantize(&i, k, n, fmt16, BlockAxis::Whole);
+    bench("bfp_gemm (16-bit, i64 lane)", Some(macs), "MAC", || {
+        std::hint::black_box(bfp_gemm(&wq16, &iq16));
+    });
+
+    section("im2col (3x64x64, 3x3 kernel, pad 1)");
+    let img = rng.normal_vec(3 * 64 * 64, 1.0);
+    let geo = Conv2dGeometry {
+        in_channels: 3,
+        in_h: 64,
+        in_w: 64,
+        kernel_h: 3,
+        kernel_w: 3,
+        stride: 1,
+        padding: 1,
+    };
+    let mut col = vec![0f32; geo.k() * geo.n()];
+    bench("im2col_3x64x64", Some((geo.k() * geo.n()) as f64), "elem", || {
+        im2col(&img, &geo, &mut col);
+        std::hint::black_box(&col);
+    });
+
+    section("end-to-end BFP conv layer (64ch → 64ch, 32x32)");
+    let weights = Tensor::from_vec(rng.laplacian_vec(64 * 64 * 9, 0.05), &[64, 64, 3, 3]);
+    let conv = Conv2d::new("bench", weights, vec![0.0; 64], 1, 1);
+    let input = Tensor::from_vec(rng.normal_vec(64 * 32 * 32, 1.0), &[64, 32, 32]);
+    let layer_macs = (64 * 64 * 9 * 32 * 32) as f64;
+    bench("conv_fp32", Some(layer_macs), "MAC", || {
+        std::hint::black_box(conv.forward_fp32(&input));
+    });
+    bench("conv_bfp", Some(layer_macs), "MAC", || {
+        std::hint::black_box(conv.forward_bfp(&input, &bfp_cnn::quant::BfpConfig::paper_default()));
+    });
+}

@@ -1,0 +1,46 @@
+//! Bench for Table 1: the storage cost model itself plus the *runtime*
+//! cost the table abstracts — block-formatting throughput per scheme on
+//! the real VGG-16 conv1_1 geometry (M=64, K=9, N=50176).
+//!
+//! Paper shape expected: eq3/eq5 pay thousands more block-format scans
+//! (NBE column); eq2/eq4 amortise. Quantization throughput per element is
+//! near-identical, so total cost tracks NBE.
+
+use bfp_cnn::bfp::{BfpFormat, BfpMatrix, PartitionScheme};
+use bfp_cnn::data::Rng;
+use bfp_cnn::harness::benchkit::{bench, section};
+use bfp_cnn::harness::table1;
+
+fn main() {
+    section("Table 1 — analytic cost model (all VGG-16 layers, 4 schemes)");
+    bench("cost_model_all_layers", Some(13.0 * 4.0), "layer-scheme", || {
+        for (_, m, k, n) in table1::vgg16_geometries() {
+            for s in
+                [PartitionScheme::Eq2, PartitionScheme::Eq3, PartitionScheme::Eq4, PartitionScheme::Eq5]
+            {
+                std::hint::black_box(s.cost(m, k, n, 8, 8, 8));
+            }
+        }
+    });
+
+    section("Table 1 — block formatting throughput, conv1_1 geometry");
+    let (m, k, n) = (64usize, 9usize, 50176usize);
+    let mut rng = Rng::new(1);
+    let w = rng.laplacian_vec(m * k, 0.05);
+    let i = rng.normal_vec(k * n, 40.0);
+    let fmt = BfpFormat::new(8);
+    for scheme in
+        [PartitionScheme::Eq2, PartitionScheme::Eq3, PartitionScheme::Eq4, PartitionScheme::Eq5]
+    {
+        let elems = (m * k + k * n) as f64;
+        bench(&format!("block_format_{scheme:?}"), Some(elems), "elem", || {
+            std::hint::black_box(BfpMatrix::quantize(&w, m, k, fmt, scheme.w_axis()));
+            std::hint::black_box(BfpMatrix::quantize(&i, k, n, fmt, scheme.i_axis()));
+        });
+    }
+
+    section("Table 1 — rendered tables");
+    for t in table1::run(8, 8) {
+        t.print();
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench for Table 2: eq. (2) vs eq. (4) block size on VGG-16 — both the
+//! accuracy outcome (drop vs FP32) and the runtime cost of each scheme's
+//! full BFP forward pass.
+
+use bfp_cnn::coordinator::engine::{forward_batch, ExecMode};
+use bfp_cnn::bfp::PartitionScheme;
+use bfp_cnn::harness::benchkit::{bench, section};
+use bfp_cnn::harness::table2;
+use bfp_cnn::models::ModelId;
+use bfp_cnn::quant::BfpConfig;
+use std::path::Path;
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    let size = 32;
+
+    section("Table 2 — accuracy (12 images, quick; `repro table2` for full)");
+    let t = table2::run(size, 12, 1, artifacts);
+    t.print();
+
+    section("Table 2 — runtime of one VGG-16 BFP forward per scheme");
+    let model = ModelId::Vgg16.build(size, 1, artifacts);
+    let images = bfp_cnn::data::imagenet_like_batch(1, size, 3);
+    for scheme in [PartitionScheme::Eq2, PartitionScheme::Eq4] {
+        let cfg = BfpConfig::paper_default().with_scheme(scheme);
+        bench(&format!("vgg16_bfp_forward_{scheme:?}"), Some(1.0), "img", || {
+            std::hint::black_box(forward_batch(&model, &images, ExecMode::Bfp(cfg)));
+        });
+    }
+    bench("vgg16_fp32_forward", Some(1.0), "img", || {
+        std::hint::black_box(forward_batch(&model, &images, ExecMode::Fp32));
+    });
+}

@@ -1,0 +1,30 @@
+//! Bench for Table 4: the dual-forward instrumentation plus the §4
+//! theory evaluation on VGG-16, and the resulting theory-vs-experiment
+//! deviation (the paper's ≤ 8.9 dB claim).
+
+use bfp_cnn::analysis::multi_layer::propagate_multi_layer;
+use bfp_cnn::harness::benchkit::{bench, section};
+use bfp_cnn::harness::table4::{gather, max_deviation};
+use bfp_cnn::models::ModelId;
+use bfp_cnn::quant::BfpConfig;
+use std::path::Path;
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    let model = ModelId::Vgg16.build(32, 1, artifacts);
+
+    section("Table 4 — instrumented dual forward (1 image, VGG-16/32px)");
+    bench("dual_forward_instrumented", Some(1.0), "img", || {
+        std::hint::black_box(gather(&model, BfpConfig::paper_default(), 1, 3));
+    });
+
+    section("Table 4 — multi-layer propagation model over 13 conv records");
+    let data = gather(&model, BfpConfig::paper_default(), 2, 3);
+    bench("propagate_multi_layer", Some(13.0), "layer", || {
+        std::hint::black_box(propagate_multi_layer(&data.records));
+    });
+
+    let dev = max_deviation(&data);
+    println!("\nmax |multi − ex| conv-output deviation: {dev:.2} dB (paper: ≤ 8.9 dB)");
+    assert!(dev.is_finite());
+}

@@ -1,0 +1,106 @@
+//! Normalized-magnitude energy distributions — Figure 3.
+//!
+//! The paper explains its worst theory-vs-experiment deviation (conv1_2,
+//! 8.9 dB) by showing that strongly filter-correlated layers concentrate
+//! their output *energy* at large normalized magnitudes. The histogram
+//! here reproduces that diagnostic: bucket |x|/max|x| and accumulate x²
+//! per bucket, normalised to sum 1.
+
+/// An energy histogram over normalized magnitude `|x|/max|x| ∈ [0, 1]`.
+#[derive(Debug, Clone)]
+pub struct EnergyHistogram {
+    /// Left edge of each bucket (uniform width).
+    pub edges: Vec<f64>,
+    /// Energy fraction per bucket (sums to 1 for nonzero input).
+    pub fractions: Vec<f64>,
+}
+
+impl EnergyHistogram {
+    /// Build a `bins`-bucket histogram of the energy distribution.
+    pub fn compute(values: &[f32], bins: usize) -> Self {
+        assert!(bins > 0);
+        let max = values.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let mut energy = vec![0f64; bins];
+        let mut total = 0f64;
+        if max > 0.0 {
+            for &v in values {
+                let e = (v as f64) * (v as f64);
+                let idx = (((v.abs() / max) as f64) * bins as f64).min(bins as f64 - 1.0) as usize;
+                energy[idx] += e;
+                total += e;
+            }
+        }
+        if total > 0.0 {
+            for e in &mut energy {
+                *e /= total;
+            }
+        }
+        let edges = (0..bins).map(|i| i as f64 / bins as f64).collect();
+        Self { edges, fractions: energy }
+    }
+
+    /// Fraction of total energy at normalized magnitude ≥ `threshold`
+    /// (Figure 3 plots the [0.8, 1.0] region).
+    pub fn tail_energy(&self, threshold: f64) -> f64 {
+        self.edges
+            .iter()
+            .zip(&self.fractions)
+            .filter(|(e, _)| **e + 1.0 / self.edges.len() as f64 > threshold + 1e-12)
+            .map(|(_, f)| f)
+            .sum()
+    }
+}
+
+/// Correlation proxy used in §4.4's discussion: layers whose filters
+/// strongly match their inputs produce outputs with a heavy large-value
+/// energy tail. Returns the [0.8, 1.0] tail fraction.
+pub fn large_value_energy_fraction(values: &[f32]) -> f64 {
+    EnergyHistogram::compute(values, 50).tail_energy(0.8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<f32> = rng.normal_vec(10_000, 2.0);
+        let h = EnergyHistogram::compute(&xs, 20);
+        let sum: f64 = h.fractions.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_equal_values_land_in_top_bucket() {
+        let xs = vec![3.0f32; 100];
+        let h = EnergyHistogram::compute(&xs, 10);
+        assert!((h.fractions[9] - 1.0).abs() < 1e-12);
+        assert!((h.tail_energy(0.8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_input_is_all_zero() {
+        let h = EnergyHistogram::compute(&[0.0; 10], 10);
+        assert!(h.fractions.iter().all(|&f| f == 0.0));
+    }
+
+    #[test]
+    fn heavy_tail_detected() {
+        // one large value among small noise holds most of the energy
+        let mut rng = Rng::new(2);
+        let mut xs: Vec<f32> = rng.normal_vec(1000, 0.01);
+        xs.push(10.0);
+        let frac = large_value_energy_fraction(&xs);
+        assert!(frac > 0.9, "{frac}");
+    }
+
+    #[test]
+    fn gaussian_tail_is_light() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f32> = rng.normal_vec(100_000, 1.0);
+        let frac = large_value_energy_fraction(&xs);
+        assert!(frac < 0.2, "{frac}");
+    }
+}

@@ -1,0 +1,376 @@
+//! Dual-forward instrumentation: run FP32 and BFP paths in lock-step and
+//! record per-layer signal/error energies — the machinery behind Table 4's
+//! "ex SNR" column and the statistics the §4 theory consumes.
+//!
+//! Energies accumulate across a whole batch of images (the paper gathers
+//! 20 iterations × batch 50); SNRs are computed from the energy totals at
+//! reporting time.
+
+use super::snr::{quant_error_variance, snr_db, theoretical_per_row_snr};
+use crate::bfp::{bfp_gemm, max_exponent, BfpMatrix};
+use crate::nn::graph::Executor;
+use crate::nn::{ops, BatchNorm, Conv2d, Dense};
+use crate::quant::BfpConfig;
+use crate::tensor::{avg_pool2d, global_avg_pool, max_pool2d, Tensor};
+
+/// Which Table 4 row family a record belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Relu,
+    Pool,
+}
+
+/// Finished per-layer record (all values in dB; non-applicable fields are
+/// `f64::NAN`, matching the "—" cells of Table 4).
+#[derive(Debug, Clone)]
+pub struct LayerRecord {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Measured input SNR (conv rows): FP32 im2col vs block-formatted BFP im2col.
+    pub input_snr_ex_db: f64,
+    /// Measured weight quantization SNR (conv rows).
+    pub weight_snr_ex_db: f64,
+    /// Measured output SNR: FP32 output vs BFP output (all rows).
+    pub output_snr_ex_db: f64,
+    /// Single-layer theoretical input SNR — eqs. (9)–(10).
+    pub input_snr_single_db: f64,
+    /// Single-layer theoretical weight SNR — eqs. (11)–(13).
+    pub weight_snr_single_db: f64,
+    /// Single-layer theoretical output SNR — eq. (18).
+    pub output_snr_single_db: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+struct Accum {
+    name: String,
+    kind: Option<LayerKind>,
+    // measured energies
+    sig_in: f64,
+    err_in: f64,
+    sig_w: f64,
+    err_w: f64,
+    sig_out: f64,
+    err_out: f64,
+    // single-layer theory accumulators
+    theory_in_sig: f64,
+    theory_in_noise: f64,
+    theory_w_snr_db: f64,
+    w_done: bool,
+}
+
+/// The dual executor. Thread a `(fp32, bfp)` pair of tensors through the
+/// graph; conv layers run both data flows and record everything.
+pub struct InstrumentExec {
+    pub cfg: BfpConfig,
+    accums: Vec<Accum>,
+    cursor: usize,
+    relu_count: usize,
+}
+
+/// The edge state: FP32 tensor and its BFP-path twin.
+#[derive(Clone)]
+pub struct DualTensor {
+    pub fp: Tensor,
+    pub bfp: Tensor,
+}
+
+impl InstrumentExec {
+    pub fn new(cfg: BfpConfig) -> Self {
+        Self { cfg, accums: Vec::new(), cursor: 0, relu_count: 0 }
+    }
+
+    /// Run one image through the model, accumulating statistics.
+    pub fn run_image(&mut self, graph: &crate::nn::Block, input: &Tensor) -> DualTensor {
+        self.cursor = 0;
+        self.relu_count = 0;
+        graph.execute(DualTensor { fp: input.clone(), bfp: input.clone() }, self)
+    }
+
+    fn slot(&mut self, name: &str, kind: LayerKind) -> &mut Accum {
+        if self.cursor == self.accums.len() {
+            self.accums.push(Accum { name: name.to_string(), kind: Some(kind), ..Default::default() });
+        }
+        let a = &mut self.accums[self.cursor];
+        debug_assert_eq!(a.name, name, "instrumentation order diverged");
+        self.cursor += 1;
+        a
+    }
+
+    /// Finish: convert accumulated energies to dB records.
+    pub fn finish(&self) -> Vec<LayerRecord> {
+        self.accums
+            .iter()
+            .map(|a| {
+                let kind = a.kind.unwrap_or(LayerKind::Conv);
+                let (in_ex, w_ex, in_single, w_single) = if kind == LayerKind::Conv {
+                    (
+                        snr_db(a.sig_in, a.err_in),
+                        snr_db(a.sig_w, a.err_w),
+                        snr_db(a.theory_in_sig, a.theory_in_noise),
+                        a.theory_w_snr_db,
+                    )
+                } else {
+                    (f64::NAN, f64::NAN, f64::NAN, f64::NAN)
+                };
+                let out_single = if kind == LayerKind::Conv {
+                    super::single_layer::output_snr_db(in_single, w_single)
+                } else {
+                    f64::NAN
+                };
+                LayerRecord {
+                    name: a.name.clone(),
+                    kind,
+                    input_snr_ex_db: in_ex,
+                    weight_snr_ex_db: w_ex,
+                    output_snr_ex_db: snr_db(a.sig_out, a.err_out),
+                    input_snr_single_db: in_single,
+                    weight_snr_single_db: w_single,
+                    output_snr_single_db: out_single,
+                }
+            })
+            .collect()
+    }
+}
+
+fn energy_pair(reference: &[f32], distorted: &[f32]) -> (f64, f64) {
+    let mut sig = 0f64;
+    let mut err = 0f64;
+    for (&a, &b) in reference.iter().zip(distorted) {
+        sig += (a as f64) * (a as f64);
+        err += ((b - a) as f64) * ((b - a) as f64);
+    }
+    (sig, err)
+}
+
+impl Executor for InstrumentExec {
+    type T = DualTensor;
+
+    fn conv(&mut self, layer: &Conv2d, x: DualTensor) -> DualTensor {
+        let cfg = self.cfg;
+        // FP32 reference path
+        let fp_out = layer.forward_fp32(&x.fp);
+
+        // BFP path, expanded so intermediates can be measured
+        let (col_bfp, geo) = layer.im2col(&x.bfp);
+        let (col_fp, _) = layer.im2col(&x.fp);
+        let (m, k, n) = (layer.out_channels(), geo.k(), geo.n());
+        let wq = BfpMatrix::quantize(&layer.weights.data, m, k, cfg.w_format(), cfg.scheme.w_axis());
+        let iq = BfpMatrix::quantize(&col_bfp, k, n, cfg.i_format(), cfg.scheme.i_axis());
+
+        // measured input SNR: clean FP32 signal vs the BFP path's
+        // quantized input (inherited error + fresh quantization)
+        let iq_back = iq.to_f32();
+        let (sig_in, err_in) = energy_pair(&col_fp, &iq_back);
+
+        // single-layer theory on the clean signal (eqs. 9–10)
+        let theory_noise = max_exponent(&col_fp)
+            .map(|eps| quant_error_variance(cfg.i_format(), eps) * col_fp.len() as f64)
+            .unwrap_or(0.0);
+        let theory_sig: f64 = col_fp.iter().map(|&v| (v as f64) * (v as f64)).sum();
+
+        // integer-domain GEMM + bias (the Figure 2 data flow)
+        let mut out = bfp_gemm(&wq, &iq).data;
+        if !layer.bias.is_empty() {
+            for (oc, &b) in layer.bias.iter().enumerate() {
+                for v in &mut out[oc * n..(oc + 1) * n] {
+                    *v += b;
+                }
+            }
+        }
+        let bfp_out = Tensor::from_vec(out, &[m, geo.out_h(), geo.out_w()]);
+        let (sig_out, err_out) = energy_pair(&fp_out.data, &bfp_out.data);
+
+        let name = layer.name.clone();
+        let w_fmt = cfg.w_format();
+        let a = self.slot(&name, LayerKind::Conv);
+        a.sig_in += sig_in;
+        a.err_in += err_in;
+        a.theory_in_sig += theory_sig;
+        a.theory_in_noise += theory_noise;
+        a.sig_out += sig_out;
+        a.err_out += err_out;
+        if !a.w_done {
+            let (sig_w, err_w) = energy_pair(&layer.weights.data, &wq.to_f32());
+            a.sig_w = sig_w;
+            a.err_w = err_w;
+            a.theory_w_snr_db = theoretical_per_row_snr(&layer.weights.data, m, k, w_fmt);
+            a.w_done = true;
+        }
+
+        DualTensor { fp: fp_out, bfp: bfp_out }
+    }
+
+    fn dense(&mut self, layer: &Dense, x: DualTensor) -> DualTensor {
+        // FC layers stay FP32 in the paper's port; no record.
+        DualTensor { fp: layer.forward_fp32(&x.fp), bfp: layer.forward_fp32(&x.bfp) }
+    }
+
+    fn batch_norm(&mut self, layer: &BatchNorm, x: DualTensor) -> DualTensor {
+        DualTensor { fp: layer.forward(&x.fp), bfp: layer.forward(&x.bfp) }
+    }
+
+    fn relu(&mut self, x: DualTensor) -> DualTensor {
+        let fp = ops::relu(&x.fp);
+        let bfp = ops::relu(&x.bfp);
+        let (sig, err) = energy_pair(&fp.data, &bfp.data);
+        self.relu_count += 1;
+        let name = format!("relu_{}", self.relu_count);
+        let a = self.slot(&name, LayerKind::Relu);
+        a.sig_out += sig;
+        a.err_out += err;
+        DualTensor { fp, bfp }
+    }
+
+    fn max_pool(&mut self, name: &str, k: usize, s: usize, p: usize, x: DualTensor) -> DualTensor {
+        let fp = max_pool2d(&x.fp, k, s, p);
+        let bfp = max_pool2d(&x.bfp, k, s, p);
+        let (sig, err) = energy_pair(&fp.data, &bfp.data);
+        let a = self.slot(name, LayerKind::Pool);
+        a.sig_out += sig;
+        a.err_out += err;
+        DualTensor { fp, bfp }
+    }
+
+    fn avg_pool(&mut self, name: &str, k: usize, s: usize, p: usize, x: DualTensor) -> DualTensor {
+        let fp = avg_pool2d(&x.fp, k, s, p);
+        let bfp = avg_pool2d(&x.bfp, k, s, p);
+        let (sig, err) = energy_pair(&fp.data, &bfp.data);
+        let a = self.slot(name, LayerKind::Pool);
+        a.sig_out += sig;
+        a.err_out += err;
+        DualTensor { fp, bfp }
+    }
+
+    fn global_avg_pool(&mut self, x: DualTensor) -> DualTensor {
+        DualTensor { fp: global_avg_pool(&x.fp), bfp: global_avg_pool(&x.bfp) }
+    }
+
+    fn flatten(&mut self, x: DualTensor) -> DualTensor {
+        DualTensor { fp: ops::flatten(&x.fp), bfp: ops::flatten(&x.bfp) }
+    }
+
+    fn add(&mut self, a: DualTensor, b: DualTensor) -> DualTensor {
+        DualTensor { fp: ops::add(&a.fp, &b.fp), bfp: ops::add(&a.bfp, &b.bfp) }
+    }
+
+    fn concat(&mut self, parts: Vec<DualTensor>) -> DualTensor {
+        let fps: Vec<Tensor> = parts.iter().map(|p| p.fp.clone()).collect();
+        let bfps: Vec<Tensor> = parts.iter().map(|p| p.bfp.clone()).collect();
+        DualTensor { fp: ops::concat_channels(&fps), bfp: ops::concat_channels(&bfps) }
+    }
+
+    fn softmax(&mut self, x: DualTensor) -> DualTensor {
+        DualTensor { fp: ops::softmax(&x.fp), bfp: ops::softmax(&x.bfp) }
+    }
+
+    fn fork(&mut self, x: &DualTensor) -> DualTensor {
+        x.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::nn::Block;
+
+    fn two_conv_model(seed: u64) -> Block {
+        let mut rng = Rng::new(seed);
+        Block::seq(vec![
+            Block::Conv(crate::models::init::conv2d("conv1", 8, 2, 3, 3, 1, 1, &mut rng)),
+            Block::ReLU,
+            Block::MaxPool { name: "pool1".into(), k: 2, s: 2, p: 0 },
+            Block::Conv(crate::models::init::conv2d("conv2", 8, 8, 3, 3, 1, 1, &mut rng)),
+            Block::ReLU,
+        ])
+    }
+
+    fn image(seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(rng.normal_vec(2 * 12 * 12, 1.0), &[2, 12, 12])
+    }
+
+    #[test]
+    fn records_in_graph_order() {
+        let m = two_conv_model(1);
+        let mut exec = InstrumentExec::new(BfpConfig::paper_default());
+        exec.run_image(&m, &image(2));
+        let recs = exec.finish();
+        let names: Vec<&str> = recs.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["conv1", "relu_1", "pool1", "conv2", "relu_2"]);
+    }
+
+    #[test]
+    fn accumulates_across_images() {
+        let m = two_conv_model(1);
+        let mut exec = InstrumentExec::new(BfpConfig::paper_default());
+        for s in 0..4 {
+            exec.run_image(&m, &image(s));
+        }
+        let recs = exec.finish();
+        assert_eq!(recs.len(), 5);
+        for r in recs.iter().filter(|r| r.kind == LayerKind::Conv) {
+            assert!(r.input_snr_ex_db.is_finite());
+            assert!(r.output_snr_ex_db.is_finite());
+        }
+    }
+
+    /// The single-layer theory should predict the measured quantization
+    /// SNRs to within ~1.5 dB on the first layer (no inherited error).
+    #[test]
+    fn first_layer_theory_close_to_measurement() {
+        let m = two_conv_model(3);
+        let mut exec = InstrumentExec::new(BfpConfig::paper_default());
+        for s in 0..3 {
+            exec.run_image(&m, &image(100 + s));
+        }
+        let recs = exec.finish();
+        let c1 = &recs[0];
+        assert!(
+            (c1.input_snr_single_db - c1.input_snr_ex_db).abs() < 1.5,
+            "input theory {} vs ex {}",
+            c1.input_snr_single_db,
+            c1.input_snr_ex_db
+        );
+        assert!(
+            (c1.weight_snr_single_db - c1.weight_snr_ex_db).abs() < 1.5,
+            "weight theory {} vs ex {}",
+            c1.weight_snr_single_db,
+            c1.weight_snr_ex_db
+        );
+    }
+
+    /// Second conv's measured input SNR must be lower than the fresh-
+    /// quantization theory alone predicts (it inherits layer-1 error).
+    #[test]
+    fn inherited_error_visible_at_layer2() {
+        let m = two_conv_model(5);
+        let mut exec = InstrumentExec::new(BfpConfig::new(6, 6));
+        for s in 0..3 {
+            exec.run_image(&m, &image(200 + s));
+        }
+        let recs = exec.finish();
+        let c2 = recs.iter().find(|r| r.name == "conv2").unwrap();
+        assert!(
+            c2.input_snr_ex_db < c2.input_snr_single_db + 0.5,
+            "ex {} should sit below single-layer theory {}",
+            c2.input_snr_ex_db,
+            c2.input_snr_single_db
+        );
+    }
+
+    /// ReLU must pass SNR through roughly unchanged (§4.4).
+    #[test]
+    fn relu_preserves_snr() {
+        let m = two_conv_model(7);
+        let mut exec = InstrumentExec::new(BfpConfig::paper_default());
+        for s in 0..3 {
+            exec.run_image(&m, &image(300 + s));
+        }
+        let recs = exec.finish();
+        let conv_out = recs[0].output_snr_ex_db;
+        let relu_out = recs[1].output_snr_ex_db;
+        assert!((conv_out - relu_out).abs() < 1.5, "conv {conv_out} vs relu {relu_out}");
+    }
+}

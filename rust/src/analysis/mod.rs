@@ -1,0 +1,20 @@
+//! The paper's §4 three-stage error-analysis model plus the empirical
+//! instrumentation that validates it (Table 4, Figure 3).
+//!
+//! * [`snr`] — SNR/NSR conversions and the quantization-error theory of
+//!   §4.1 (eqs. 8–13).
+//! * [`single_layer`] — the single-layer output-SNR model (eq. 18).
+//! * [`multi_layer`] — the multi-layer propagation model (eqs. 19–20).
+//! * [`instrument`] — the dual (FP32 ∥ BFP) forward pass that gathers the
+//!   experimental SNRs and the per-layer statistics the theory consumes.
+//! * [`energy`] — normalized-magnitude energy histograms (Figure 3).
+
+pub mod energy;
+pub mod instrument;
+pub mod multi_layer;
+pub mod single_layer;
+pub mod snr;
+
+pub use instrument::{InstrumentExec, LayerKind, LayerRecord};
+pub use multi_layer::{propagate_multi_layer, MultiLayerRow};
+pub use snr::{db_to_nsr, nsr_to_db, snr_db};

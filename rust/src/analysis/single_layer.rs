@@ -1,0 +1,77 @@
+//! The single-layer error model of §4.2.
+//!
+//! For the inner product of block-formatted vectors, NSRs add (eq. 16):
+//! `η_r = η_P + η_Q`, so the output NSR of a conv layer is
+//! `η_O = η_I' + η_W'` (eq. 17) and in dB (eq. 18):
+//!
+//! ```text
+//! SNR_O = SNR_I' + SNR_W' − 10·log10(10^(SNR_I'/10) + 10^(SNR_W'/10))
+//! ```
+
+use super::snr::{db_to_nsr, nsr_to_db};
+
+/// Combine input and weight SNRs into the output SNR — eq. (18).
+pub fn output_snr_db(snr_input_db: f64, snr_weight_db: f64) -> f64 {
+    nsr_to_db(db_to_nsr(snr_input_db) + db_to_nsr(snr_weight_db))
+}
+
+/// NSR form of eq. (16)/(17): `η_O = η_I + η_W`.
+pub fn output_nsr(nsr_input: f64, nsr_weight: f64) -> f64 {
+    nsr_input + nsr_weight
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::gemm::f32_gemm;
+    use crate::bfp::{bfp_gemm, BfpFormat, BfpMatrix};
+    use crate::bfp::partition::BlockAxis;
+    use crate::data::Rng;
+
+    #[test]
+    fn eq18_closed_forms() {
+        // equal SNRs: output is 3.01 dB below either input
+        let o = output_snr_db(30.0, 30.0);
+        assert!((o - (30.0 - 10.0 * 2f64.log10())).abs() < 1e-9, "{o}");
+        // one side much cleaner: output approaches the dirty side
+        let o = output_snr_db(20.0, 60.0);
+        assert!((o - 20.0).abs() < 0.05, "{o}");
+    }
+
+    #[test]
+    fn eq18_symmetry() {
+        assert!((output_snr_db(25.0, 33.0) - output_snr_db(33.0, 25.0)).abs() < 1e-12);
+    }
+
+    /// End-to-end check of the §4.2 chain: predict a BFP GEMM's output NSR
+    /// from the measured input/weight quantization NSRs and compare with
+    /// the actually measured output NSR. Statistical independence of the
+    /// operands makes eq. (18) accurate to ~1 dB at these sizes.
+    #[test]
+    fn eq18_predicts_real_gemm() {
+        let mut rng = Rng::new(10);
+        let (m, k, n) = (64, 288, 196);
+        let w: Vec<f32> = rng.laplacian_vec(m * k, 0.06);
+        let i: Vec<f32> = rng.normal_vec(k * n, 1.2);
+        let fmt_w = BfpFormat::new(8);
+        let fmt_i = BfpFormat::new(8);
+        let wq = BfpMatrix::quantize(&w, m, k, fmt_w, BlockAxis::PerRow);
+        let iq = BfpMatrix::quantize(&i, k, n, fmt_i, BlockAxis::Whole);
+
+        // measured quantization SNRs
+        let snr_w = super::super::snr::measured_snr(&w, &wq.to_f32());
+        let snr_i = super::super::snr::measured_snr(&i, &iq.to_f32());
+
+        // measured output SNR
+        let mut exact = vec![0f32; m * n];
+        f32_gemm(&w, &i, m, k, n, &mut exact);
+        let bfp = bfp_gemm(&wq, &iq);
+        let snr_o_measured = super::super::snr::measured_snr(&exact, &bfp.data);
+
+        let snr_o_theory = output_snr_db(snr_i, snr_w);
+        assert!(
+            (snr_o_theory - snr_o_measured).abs() < 1.5,
+            "theory {snr_o_theory:.2} dB vs measured {snr_o_measured:.2} dB"
+        );
+    }
+}

@@ -1,0 +1,220 @@
+//! SNR/NSR arithmetic and the §4.1 quantization-error theory.
+
+use crate::bfp::{max_exponent, BfpFormat};
+
+/// `SNR[dB] = 10·log10(signal_energy / noise_energy)` (eq. 9 shape).
+/// Returns `f64::INFINITY` for zero noise.
+pub fn snr_db(signal_energy: f64, noise_energy: f64) -> f64 {
+    if noise_energy <= 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (signal_energy / noise_energy).log10()
+}
+
+/// NSR `η = 10^(-SNR/10)` (the conversion below eq. 15).
+pub fn db_to_nsr(snr_db: f64) -> f64 {
+    10f64.powf(-snr_db / 10.0)
+}
+
+/// `SNR[dB] = -10·log10(η)`.
+pub fn nsr_to_db(nsr: f64) -> f64 {
+    -10.0 * nsr.log10()
+}
+
+/// Theoretical quantization-error variance of a block with exponent `ε`
+/// under `fmt` — eq. (8): `σ² = 2^(-2·Lm)/12 · 2^(2ε)` with
+/// `Lm = fmt.frac_bits()` (the deterministic-exponent case, eq. 7).
+pub fn quant_error_variance(fmt: BfpFormat, eps: i32) -> f64 {
+    fmt.error_variance(eps)
+}
+
+/// The general eq. (6) variance: quantization-error variance when the
+/// block exponent is a random variable with PMF `p(γ_i)` over exponent
+/// levels — `σ² = 2^(-2·Lm)/12 · Σ_i p_i · 2^(2γ_i)`. Eq. (7)/(8) is the
+/// deterministic special case (`p = δ_ε`), recovered exactly when the PMF
+/// has a single unit mass.
+pub fn pmf_error_variance(fmt: BfpFormat, exponent_pmf: &[(i32, f64)]) -> f64 {
+    let total: f64 = exponent_pmf.iter().map(|(_, p)| p).sum();
+    assert!((total - 1.0).abs() < 1e-9, "PMF must sum to 1, got {total}");
+    let lm = fmt.frac_bits();
+    exponent_pmf
+        .iter()
+        .map(|&(gamma, p)| p * 2f64.powi(2 * (gamma - lm)) / 12.0)
+        .sum()
+}
+
+/// Estimate the block-exponent PMF empirically from a stream of blocks —
+/// feed each block's max exponent; returns `(γ, p)` pairs for
+/// [`pmf_error_variance`]. This is how eq. (6) is used when the input
+/// distribution (not a concrete batch) is the design input.
+pub fn estimate_exponent_pmf(block_exponents: &[i32]) -> Vec<(i32, f64)> {
+    let mut counts = std::collections::BTreeMap::new();
+    for &e in block_exponents {
+        *counts.entry(e).or_insert(0usize) += 1;
+    }
+    let n = block_exponents.len().max(1) as f64;
+    counts.into_iter().map(|(e, c)| (e, c as f64 / n)).collect()
+}
+
+/// Theoretical SNR of block-formatting `values` as ONE block under `fmt`
+/// (eqs. 9–10): `E(Y²) / σ²`.
+pub fn theoretical_block_snr(values: &[f32], fmt: BfpFormat) -> f64 {
+    let Some(eps) = max_exponent(values) else {
+        return f64::INFINITY;
+    };
+    let e_y2 = values.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / values.len() as f64;
+    snr_db(e_y2, quant_error_variance(fmt, eps))
+}
+
+/// Theoretical averaged SNR of a per-row block-formatted matrix
+/// (eqs. 11–13): `Σ_m E(X_m²) / Σ_m σ_wm²`.
+pub fn theoretical_per_row_snr(data: &[f32], rows: usize, cols: usize, fmt: BfpFormat) -> f64 {
+    assert_eq!(data.len(), rows * cols);
+    let mut sum_e = 0f64;
+    let mut sum_sigma = 0f64;
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let e_x2 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / cols as f64;
+        sum_e += e_x2;
+        if let Some(eps) = max_exponent(row) {
+            sum_sigma += quant_error_variance(fmt, eps);
+        }
+    }
+    snr_db(sum_e, sum_sigma)
+}
+
+/// Measured SNR between a reference signal and its distorted version.
+pub fn measured_snr(signal: &[f32], distorted: &[f32]) -> f64 {
+    assert_eq!(signal.len(), distorted.len());
+    let sig: f64 = signal.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let err: f64 = signal.iter().zip(distorted).map(|(&a, &b)| ((b - a) as f64).powi(2)).sum();
+    snr_db(sig, err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::dequantize;
+    use crate::data::Rng;
+
+    #[test]
+    fn db_conversions_roundtrip() {
+        for snr in [0.0, 10.0, 23.7, 40.0] {
+            assert!((nsr_to_db(db_to_nsr(snr)) - snr).abs() < 1e-12);
+        }
+        assert!((db_to_nsr(10.0) - 0.1).abs() < 1e-15);
+        assert!((db_to_nsr(20.0) - 0.01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn snr_db_basics() {
+        assert_eq!(snr_db(100.0, 1.0), 20.0);
+        assert!(snr_db(1.0, 0.0).is_infinite());
+    }
+
+    /// The eq. (8) theory must predict the measured quantization SNR of a
+    /// uniform block to within a fraction of a dB.
+    #[test]
+    fn theory_matches_measurement_uniform() {
+        let mut rng = Rng::new(1);
+        let fmt = BfpFormat::new(8);
+        let xs: Vec<f32> = (0..200_000).map(|_| rng.uniform_range(-1.9, 1.9) as f32).collect();
+        let theory = theoretical_block_snr(&xs, fmt);
+        let measured = measured_snr(&xs, &dequantize(&xs, fmt));
+        assert!(
+            (theory - measured).abs() < 0.3,
+            "theory {theory:.2} dB vs measured {measured:.2} dB"
+        );
+    }
+
+    /// Gaussian data: rounding error is still ±Δ/2-uniform, so eq. (8)
+    /// stays accurate even though the signal is not uniform.
+    #[test]
+    fn theory_matches_measurement_gaussian() {
+        let mut rng = Rng::new(2);
+        let fmt = BfpFormat::new(9);
+        let xs: Vec<f32> = rng.normal_vec(200_000, 0.25);
+        let theory = theoretical_block_snr(&xs, fmt);
+        let measured = measured_snr(&xs, &dequantize(&xs, fmt));
+        assert!(
+            (theory - measured).abs() < 0.5,
+            "theory {theory:.2} dB vs measured {measured:.2} dB"
+        );
+    }
+
+    #[test]
+    fn per_row_beats_whole_when_rows_differ_in_scale() {
+        // rows at wildly different scales: per-row theory must predict
+        // higher SNR than whole-matrix theory
+        let mut rng = Rng::new(3);
+        let rows = 32;
+        let cols = 256;
+        let mut data = Vec::new();
+        for r in 0..rows {
+            let scale = 2f64.powi(-(r as i32 % 8));
+            data.extend(rng.normal_vec(cols, scale * 0.3));
+        }
+        let fmt = BfpFormat::new(8);
+        let per_row = theoretical_per_row_snr(&data, rows, cols, fmt);
+        let whole = theoretical_block_snr(&data, fmt);
+        assert!(per_row > whole + 3.0, "per_row {per_row:.1} vs whole {whole:.1}");
+    }
+
+    #[test]
+    fn pmf_variance_degenerates_to_eq8() {
+        let fmt = BfpFormat::new(8);
+        let v6 = pmf_error_variance(fmt, &[(3, 1.0)]);
+        assert!((v6 - quant_error_variance(fmt, 3)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn pmf_variance_mixes_levels() {
+        let fmt = BfpFormat::new(8);
+        let mixed = pmf_error_variance(fmt, &[(0, 0.5), (2, 0.5)]);
+        let lo = quant_error_variance(fmt, 0);
+        let hi = quant_error_variance(fmt, 2);
+        assert!((mixed - 0.5 * (lo + hi)).abs() < 1e-18);
+        assert!(mixed > lo && mixed < hi);
+    }
+
+    #[test]
+    fn pmf_estimation_from_blocks() {
+        let pmf = estimate_exponent_pmf(&[1, 1, 2, 3]);
+        assert_eq!(pmf, vec![(1, 0.5), (2, 0.25), (3, 0.25)]);
+        // eq. (6) over the estimated PMF == average of per-block eq. (8)
+        let fmt = BfpFormat::new(8);
+        let via_pmf = pmf_error_variance(fmt, &pmf);
+        let direct: f64 = [1, 1, 2, 3].iter().map(|&e| quant_error_variance(fmt, e)).sum::<f64>() / 4.0;
+        assert!((via_pmf - direct).abs() < 1e-18);
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased_lower_snr() {
+        use crate::bfp::format::Rounding;
+        use crate::bfp::BfpFormat as F;
+        let mut rng = Rng::new(77);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.uniform_range(0.5, 1.9) as f32).collect();
+        let fmt_s = F { total_bits: 8, rounding: Rounding::Stochastic };
+        let ys = dequantize(&xs, fmt_s);
+        let bias: f64 =
+            xs.iter().zip(&ys).map(|(a, b)| (b - a) as f64).sum::<f64>() / xs.len() as f64;
+        let step = F::new(8).step(0) as f64;
+        // unbiased like round-off (|bias| ≪ step), unlike truncation
+        assert!(bias.abs() < step * 0.05, "stochastic bias {bias} vs step {step}");
+        // but ~2× the error energy (variance Δ²/6 vs Δ²/12)
+        let e_sto: f64 = xs.iter().zip(&ys).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let yn = dequantize(&xs, F::new(8));
+        let e_rnd: f64 = xs.iter().zip(&yn).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let ratio = e_sto / e_rnd;
+        assert!((1.5..3.0).contains(&ratio), "energy ratio {ratio}");
+    }
+
+    #[test]
+    fn wider_mantissa_raises_snr_6db_per_bit() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f32> = rng.normal_vec(100_000, 0.5);
+        let s8 = theoretical_block_snr(&xs, BfpFormat::new(8));
+        let s9 = theoretical_block_snr(&xs, BfpFormat::new(9));
+        assert!(((s9 - s8) - 6.02).abs() < 0.1, "Δ={}", s9 - s8);
+    }
+}

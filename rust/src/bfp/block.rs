@@ -1,0 +1,110 @@
+//! The [`BfpBlock`] container: integer mantissas sharing one exponent.
+
+use super::format::{exp2i, BfpFormat};
+
+/// A block of numbers in block-floating-point representation.
+///
+/// Every element's value is `mantissas[i] * 2^(exponent - frac_bits)`,
+/// i.e. the mantissas are plain integers in
+/// `[-(2^(L-1)-1), 2^(L-1)-1]` and the whole block shares the scale
+/// `2^(exponent - frac_bits)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BfpBlock {
+    /// Shared block exponent `ε = max_i floor(log2 |x_i|)`.
+    pub exponent: i32,
+    /// Fractional bits of the aligned mantissas (`L - 2`).
+    pub frac_bits: i32,
+    /// Aligned integer mantissas.
+    pub mantissas: Vec<i32>,
+}
+
+impl BfpBlock {
+    /// An all-zero block of length `n` (exponent is a don't-care; we pin it
+    /// to the minimum so the scale underflows to zero consistently).
+    pub fn zeros(n: usize, fmt: BfpFormat) -> Self {
+        Self { exponent: i32::MIN / 2, frac_bits: fmt.frac_bits(), mantissas: vec![0; n] }
+    }
+
+    /// Number of elements in the block.
+    pub fn len(&self) -> usize {
+        self.mantissas.len()
+    }
+
+    /// Whether the block is empty.
+    pub fn is_empty(&self) -> bool {
+        self.mantissas.is_empty()
+    }
+
+    /// The shared scale factor `2^(ε - frac_bits)`.
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        exp2i(self.exponent - self.frac_bits)
+    }
+
+    /// Reconstruct element `i` as f32.
+    #[inline]
+    pub fn value(&self, i: usize) -> f32 {
+        self.mantissas[i] as f32 * self.scale()
+    }
+
+    /// Reconstruct the whole block as f32 values.
+    pub fn to_f32(&self) -> Vec<f32> {
+        let s = self.scale();
+        self.mantissas.iter().map(|&m| m as f32 * s).collect()
+    }
+
+    /// Reconstruct into a caller-provided slice (no allocation).
+    pub fn write_f32(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.mantissas.len());
+        let s = self.scale();
+        for (o, &m) in out.iter_mut().zip(&self.mantissas) {
+            *o = m as f32 * s;
+        }
+    }
+
+    /// Storage cost in bits of this block under format `fmt`:
+    /// `n·L` mantissa bits + `L_e` exponent bits (the Table 1 accounting,
+    /// with `L_e = 8` matching the f32 exponent field).
+    pub fn storage_bits(&self, fmt: BfpFormat) -> usize {
+        self.mantissas.len() * fmt.total_bits as usize + 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::quantize::block_format;
+
+    #[test]
+    fn zeros_reconstruct_to_zero() {
+        let b = BfpBlock::zeros(5, BfpFormat::new(8));
+        assert_eq!(b.to_f32(), vec![0.0; 5]);
+        assert_eq!(b.len(), 5);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn value_matches_to_f32() {
+        let xs = [0.5f32, -1.25, 0.03125, 2.0];
+        let b = block_format(&xs, BfpFormat::new(10));
+        let all = b.to_f32();
+        for i in 0..xs.len() {
+            assert_eq!(b.value(i), all[i]);
+        }
+    }
+
+    #[test]
+    fn write_f32_no_alloc_matches() {
+        let xs = [3.0f32, -0.75, 0.0, 1.5];
+        let b = block_format(&xs, BfpFormat::new(8));
+        let mut out = [0f32; 4];
+        b.write_f32(&mut out);
+        assert_eq!(out.to_vec(), b.to_f32());
+    }
+
+    #[test]
+    fn storage_bits_accounting() {
+        let b = BfpBlock::zeros(64, BfpFormat::new(8));
+        assert_eq!(b.storage_bits(BfpFormat::new(8)), 64 * 8 + 8);
+    }
+}

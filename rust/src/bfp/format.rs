@@ -1,0 +1,211 @@
+//! Word-width bookkeeping for BFP blocks.
+//!
+//! The paper's tables quote mantissa lengths `L_W` / `L_I` *including the
+//! sign bit* (Table 3 caption). With `L` total bits the mantissa layout is
+//!
+//! ```text
+//!   [ sign | 1 integer bit | L-2 fractional bits ]
+//! ```
+//!
+//! because the block-maximum element has mantissa `m ∈ [1, 2)` (one integer
+//! bit) and every other element is right-shifted below it. The
+//! quantization step of a block with exponent `ε` is therefore
+//! `Δ = 2^(ε - (L-2)) = 2^(ε - frac_bits)`, which is exactly the step that
+//! appears in the paper's eq. (8) variance `σ² = 2^(-2·Lm)/12 · 2^(2ε)`
+//! with `Lm = frac_bits`.
+
+
+/// Rounding mode applied to the bits shifted out during block formatting.
+///
+/// §3.1: truncation produces DC (biased) errors that accumulate layer by
+/// layer; round-off produces zero-mean noise. The paper uses round-off; we
+/// keep truncation for the ablation bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Rounding {
+    /// Round to nearest, ties away from zero (the paper's "round off").
+    #[default]
+    Nearest,
+    /// Truncate toward zero (drop the out-shifted bits).
+    Truncate,
+    /// Stochastic rounding (Gupta et al. 2015, §2 related work): round up
+    /// with probability equal to the dropped fraction. Deterministic
+    /// hash-based implementation (the value's own bit pattern seeds the
+    /// threshold), so results stay reproducible.
+    Stochastic,
+}
+
+/// A BFP word-width definition: total mantissa bits including the sign bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BfpFormat {
+    /// Total mantissa bits **including** the sign bit — the paper's
+    /// `L_W` / `L_I` as quoted in Table 3.
+    pub total_bits: u32,
+    /// Rounding mode for the out-shifted bits.
+    pub rounding: Rounding,
+}
+
+impl BfpFormat {
+    /// A format with `total_bits` mantissa bits (incl. sign) and round-off.
+    pub fn new(total_bits: u32) -> Self {
+        assert!(
+            (2..=24).contains(&total_bits),
+            "BFP mantissa width must be in [2, 24] bits incl. sign, got {total_bits}"
+        );
+        Self { total_bits, rounding: Rounding::Nearest }
+    }
+
+    /// Same width, truncating rounding.
+    pub fn truncating(total_bits: u32) -> Self {
+        Self { rounding: Rounding::Truncate, ..Self::new(total_bits) }
+    }
+
+    /// Fractional bits of the aligned mantissa: `total_bits - 2`
+    /// (one sign bit, one integer bit).
+    #[inline]
+    pub fn frac_bits(&self) -> i32 {
+        self.total_bits as i32 - 2
+    }
+
+    /// Largest representable integer mantissa magnitude: `2^(L-1) - 1`.
+    #[inline]
+    pub fn max_mantissa(&self) -> i32 {
+        (1i32 << (self.total_bits - 1)) - 1
+    }
+
+    /// Quantization step `Δ = 2^(ε - frac_bits)` of a block with
+    /// exponent `ε`.
+    #[inline]
+    pub fn step(&self, block_exponent: i32) -> f32 {
+        exp2i(block_exponent - self.frac_bits())
+    }
+
+    /// Theoretical quantization-error variance of a block with exponent
+    /// `ε` — the paper's eq. (8): `σ² = Δ²/12 = 2^(2(ε - Lm))/12` with
+    /// `Lm = frac_bits`.
+    #[inline]
+    pub fn error_variance(&self, block_exponent: i32) -> f64 {
+        let step = 2f64.powi(block_exponent - self.frac_bits());
+        step * step / 12.0
+    }
+}
+
+/// Stochastic rounding: floor(x + u) with a deterministic per-value
+/// uniform u ∈ [0,1) derived by hashing the value's bit pattern.
+/// Unbiased in expectation over value ensembles; reproducible.
+#[inline]
+pub fn round_stochastic(x: f32) -> f32 {
+    let mut h = x.to_bits().wrapping_mul(0x9E3779B9);
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EBCA6B);
+    h ^= h >> 13;
+    let u = (h >> 8) as f32 / (1u32 << 24) as f32; // [0, 1)
+    (x + u).floor()
+}
+
+/// Round half away from zero, vectorizer-friendly (§Perf).
+///
+/// `f32::round` lowers to a libm call that blocks SIMD; this sequence
+/// (abs → +0.5 → trunc → copysign) compiles to `vroundps` + bit ops.
+/// Identical to `f32::round` for all |x| < 2^23 — guaranteed here because
+/// quantized mantissas are bounded by 2^23 (format width ≤ 24 bits).
+#[inline(always)]
+pub fn round_half_away(x: f32) -> f32 {
+    (x.abs() + 0.5).trunc().copysign(x)
+}
+
+/// `2^e` as f32 via exponent-field construction (fast, exact for
+/// `e ∈ [-126, 127]`; falls back to `powi` outside the normal range).
+#[inline]
+pub fn exp2i(e: i32) -> f32 {
+    if (-126..=127).contains(&e) {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else {
+        2f32.powi(e)
+    }
+}
+
+/// `floor(log2(|x|))` of a finite nonzero f32, i.e. the unbiased binary
+/// exponent, extracted from the bit pattern. Returns `None` for zero
+/// (zeros carry no exponent and never constrain the block maximum).
+/// Subnormals are handled by normalising through multiplication.
+#[inline]
+pub fn exponent_of(x: f32) -> Option<i32> {
+    if x == 0.0 || !x.is_finite() {
+        return None;
+    }
+    let bits = x.to_bits();
+    let biased = ((bits >> 23) & 0xFF) as i32;
+    if biased == 0 {
+        // Subnormal: scale up by 2^64 (exact) and correct.
+        let scaled = x * exp2i(64);
+        let b = ((scaled.to_bits() >> 23) & 0xFF) as i32;
+        Some(b - 127 - 64)
+    } else {
+        Some(biased - 127)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponent_of_powers_of_two() {
+        for e in -126..=127 {
+            let x = exp2i(e);
+            assert_eq!(exponent_of(x), Some(e), "2^{e}");
+            assert_eq!(exponent_of(-x), Some(e), "-2^{e}");
+        }
+    }
+
+    #[test]
+    fn exponent_of_general_values() {
+        assert_eq!(exponent_of(1.5), Some(0));
+        assert_eq!(exponent_of(3.0), Some(1));
+        assert_eq!(exponent_of(0.75), Some(-1));
+        assert_eq!(exponent_of(-5.25), Some(2));
+        assert_eq!(exponent_of(0.0), None);
+        assert_eq!(exponent_of(f32::INFINITY), None);
+        assert_eq!(exponent_of(f32::NAN), None);
+    }
+
+    #[test]
+    fn exponent_of_subnormals() {
+        let tiny = f32::from_bits(1); // smallest subnormal, 2^-149
+        assert_eq!(exponent_of(tiny), Some(-149));
+        let sub = f32::from_bits(0x0040_0000); // 2^-127
+        assert_eq!(exponent_of(sub), Some(-127));
+    }
+
+    #[test]
+    fn exp2i_matches_powi() {
+        for e in [-149, -126, -1, 0, 1, 10, 127] {
+            assert_eq!(exp2i(e), 2f32.powi(e), "e={e}");
+        }
+    }
+
+    #[test]
+    fn format_derived_quantities() {
+        let f = BfpFormat::new(8); // paper's 8-bit incl. sign
+        assert_eq!(f.frac_bits(), 6);
+        assert_eq!(f.max_mantissa(), 127);
+        assert_eq!(f.step(0), exp2i(-6));
+        // eq. (8) with ε=0, Lm=6: 2^-12 / 12
+        let v = f.error_variance(0);
+        assert!((v - 2f64.powi(-12) / 12.0).abs() < 1e-18);
+    }
+
+    #[test]
+    #[should_panic]
+    fn format_rejects_too_narrow() {
+        BfpFormat::new(1);
+    }
+
+    #[test]
+    fn paper_example_widths() {
+        // §3.4: the worked example uses L=3 excluding sign → total 4.
+        let f = BfpFormat::new(4);
+        assert_eq!(f.frac_bits(), 2);
+        assert_eq!(f.max_mantissa(), 7);
+    }
+}

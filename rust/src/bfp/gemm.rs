@@ -1,0 +1,374 @@
+//! The Figure 2 data flow: fixed-point GEMM over block-formatted matrices.
+//!
+//! `O = W'·I'` is computed entirely in the integer domain:
+//! `M'_O = M'_W · M'_I` with `ε_O = ε_W + ε_I` per block pair. §3.4 gives
+//! the bit-width rules that make the integer MAC *exact* (no rounding
+//! inside the accumulation):
+//!
+//! * multiplier width ≥ `L_W + L_I + 2` bits (incl. sign),
+//! * accumulator width ≥ `L_W + L_I + 2 + ⌊log2 K⌋` bits.
+//!
+//! [`crate::quant::widths`] plans those widths; this module picks an
+//! `i32` or `i64` accumulator lane accordingly and the result is bit-exact
+//! against an arbitrary-precision reference (see the proptests).
+
+use super::format::exp2i;
+use super::partition::{BfpMatrix, BlockAxis};
+
+/// Result of a BFP GEMM: f32 output plus the bookkeeping the error
+/// analysis wants (block exponents actually used).
+#[derive(Debug, Clone)]
+pub struct BfpGemmOutput {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major f32 reconstruction of `O ≈ W·I`.
+    pub data: Vec<f32>,
+}
+
+/// Fixed-point GEMM `O = W'·I'` between two quantized matrices.
+///
+/// `w` is `M×K`, `i` is `K×N`. Any combination of block axes is accepted
+/// as long as the scale of a product term depends only on `(row, col)` of
+/// the output — i.e. `w` is `Whole`/`PerRow` and `i` is `Whole`/`PerCol`,
+/// which covers all four schemes of §3.3 (for eq. 3 the per-row /
+/// per-column vectors are exactly the inner-product operands).
+pub fn bfp_gemm(w: &BfpMatrix, i: &BfpMatrix) -> BfpGemmOutput {
+    let mut out = vec![0f32; w.rows * i.cols];
+    bfp_gemm_into(w, i, &mut out);
+    BfpGemmOutput { rows: w.rows, cols: i.cols, data: out }
+}
+
+/// [`bfp_gemm`] writing into a caller-provided buffer (hot path).
+pub fn bfp_gemm_into(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32]) {
+    assert_eq!(w.cols, i.rows, "GEMM inner dimension mismatch");
+    assert!(
+        !matches!(w.axis, BlockAxis::PerCol),
+        "weight matrix must be blocked Whole or PerRow (schemes eq2–eq5)"
+    );
+    assert!(
+        !matches!(i.axis, BlockAxis::PerRow),
+        "input matrix must be blocked Whole or PerCol (schemes eq2–eq5)"
+    );
+    let (m, k, n) = (w.rows, w.cols, i.cols);
+    assert_eq!(out.len(), m * n);
+
+    // §3.4 width plan: products fit in lw+li+2 bits, sums add ⌊log2 K⌋.
+    // Mantissa magnitudes are < 2^(frac_bits+1).
+    let prod_bits = (w.frac_bits + 1) + (i.frac_bits + 1) + 1;
+    let acc_bits = prod_bits + (usize::BITS - k.leading_zeros()) as i32;
+    // Fast path (§Perf): integer-valued f32 mantissa GEMM. A product of
+    // two mantissas is ≤ 2^(prod_bits-1) and stays exact in f32; partial
+    // sums over a K-chunk stay exact while they remain ≤ 2^24; chunk sums
+    // are then accumulated in f64 (integers exact to 2^53). FMA-friendly
+    // f32 lanes beat the i32 multiply (vpmulld) substantially — see
+    // EXPERIMENTS.md §Perf — while remaining bit-exact.
+    let max_prod = 1i64 << (prod_bits - 1).min(62);
+    let chunk = ((1i64 << 24) / max_prod.max(1)) as usize;
+    if chunk >= 32 {
+        gemm_f32_mantissa(w, i, out, m, k, n, chunk);
+    } else if acc_bits <= 31 {
+        gemm_lanes::<i32>(w, i, out, m, k, n);
+    } else {
+        gemm_lanes::<i64>(w, i, out, m, k, n);
+    }
+}
+
+/// Exact f32-mantissa GEMM with chunked-K f64 accumulation (see the
+/// exactness argument at the call site). Mantissas are materialised as
+/// f32 once per call; the inner loops are plain f32 MACs that the
+/// auto-vectorizer turns into FMA lanes.
+fn gemm_f32_mantissa(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32], m: usize, k: usize, n: usize, chunk: usize) {
+    let zero_exp_floor = i32::MIN / 4;
+    let wf: Vec<f32> = w.mantissas.iter().map(|&v| v as f32).collect();
+    let if_: Vec<f32> = i.mantissas.iter().map(|&v| v as f32).collect();
+    let single_chunk = k <= chunk;
+    let mut acc32 = vec![0f32; n];
+    let mut acc64 = vec![0f64; if single_chunk { 0 } else { n }];
+    for r in 0..m {
+        let wrow = &wf[r * k..(r + 1) * k];
+        if single_chunk {
+            // common case: the whole K panel stays exact in f32
+            acc32.fill(0.0);
+            for (kk, &wv) in wrow.iter().enumerate() {
+                if wv == 0.0 {
+                    continue;
+                }
+                let irow = &if_[kk * n..(kk + 1) * n];
+                for (a, &iv) in acc32.iter_mut().zip(irow) {
+                    *a += wv * iv;
+                }
+            }
+        } else {
+            acc64.fill(0.0);
+            let mut k0 = 0usize;
+            while k0 < k {
+                let k1 = (k0 + chunk).min(k);
+                acc32.fill(0.0);
+                for kk in k0..k1 {
+                    let wv = wrow[kk];
+                    if wv == 0.0 {
+                        continue;
+                    }
+                    let irow = &if_[kk * n..(kk + 1) * n];
+                    for (a, &iv) in acc32.iter_mut().zip(irow) {
+                        *a += wv * iv;
+                    }
+                }
+                for (a64, &a32) in acc64.iter_mut().zip(&acc32) {
+                    *a64 += a32 as f64;
+                }
+                k0 = k1;
+            }
+        }
+        let we = match w.axis {
+            BlockAxis::Whole => w.exponents[0],
+            BlockAxis::PerRow => w.exponents[r],
+            BlockAxis::PerCol => unreachable!(),
+        };
+        let orow = &mut out[r * n..(r + 1) * n];
+        if we <= zero_exp_floor {
+            orow.fill(0.0);
+            continue;
+        }
+        match i.axis {
+            BlockAxis::Whole => {
+                let ie = i.exponents[0];
+                let scale = if ie <= zero_exp_floor {
+                    0.0
+                } else {
+                    exp2i(we + ie - w.frac_bits - i.frac_bits) as f64
+                };
+                if single_chunk {
+                    let s32 = scale as f32;
+                    for (o, &a) in orow.iter_mut().zip(&acc32) {
+                        *o = a * s32;
+                    }
+                } else {
+                    for (o, &a) in orow.iter_mut().zip(&acc64) {
+                        *o = (a * scale) as f32;
+                    }
+                }
+            }
+            BlockAxis::PerCol => {
+                for (j, (o, &ie)) in orow.iter_mut().zip(&i.exponents).enumerate() {
+                    let a = if single_chunk { acc32[j] as f64 } else { acc64[j] };
+                    *o = if ie <= zero_exp_floor {
+                        0.0
+                    } else {
+                        (a * exp2i(we + ie - w.frac_bits - i.frac_bits) as f64) as f32
+                    };
+                }
+            }
+            BlockAxis::PerRow => unreachable!(),
+        }
+    }
+}
+
+/// Integer accumulator lane abstraction (i32 fast path / i64 wide path).
+trait AccLane: Copy + Default + std::ops::AddAssign {
+    fn mul(a: i32, b: i32) -> Self;
+    fn to_f32(self) -> f32;
+}
+impl AccLane for i32 {
+    #[inline(always)]
+    fn mul(a: i32, b: i32) -> Self {
+        a * b
+    }
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+}
+impl AccLane for i64 {
+    #[inline(always)]
+    fn mul(a: i32, b: i32) -> Self {
+        a as i64 * b as i64
+    }
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+}
+
+fn gemm_lanes<A: AccLane>(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32], m: usize, k: usize, n: usize) {
+    let zero_exp_floor = i32::MIN / 4;
+    // Accumulate one output row at a time in integer lanes (ikj order —
+    // streams through I row-major, vectorizes the inner j loop).
+    let mut acc: Vec<A> = vec![A::default(); n];
+    for r in 0..m {
+        for a in acc.iter_mut() {
+            *a = A::default();
+        }
+        let wrow = &w.mantissas[r * k..(r + 1) * k];
+        for (kk, &wv) in wrow.iter().enumerate() {
+            if wv == 0 {
+                continue;
+            }
+            let irow = &i.mantissas[kk * n..(kk + 1) * n];
+            for (a, &iv) in acc.iter_mut().zip(irow) {
+                *a += A::mul(wv, iv);
+            }
+        }
+        // Rescale: ε_O = ε_W(row) + ε_I(col); frac bits add.
+        let we = match w.axis {
+            BlockAxis::Whole => w.exponents[0],
+            BlockAxis::PerRow => w.exponents[r],
+            BlockAxis::PerCol => unreachable!(),
+        };
+        let orow = &mut out[r * n..(r + 1) * n];
+        if we <= zero_exp_floor {
+            orow.fill(0.0);
+            continue;
+        }
+        match i.axis {
+            BlockAxis::Whole => {
+                let ie = i.exponents[0];
+                let scale = if ie <= zero_exp_floor {
+                    0.0
+                } else {
+                    exp2i(we + ie - w.frac_bits - i.frac_bits)
+                };
+                for (o, a) in orow.iter_mut().zip(&acc) {
+                    *o = a.to_f32() * scale;
+                }
+            }
+            BlockAxis::PerCol => {
+                for ((o, a), &ie) in orow.iter_mut().zip(&acc).zip(&i.exponents) {
+                    *o = if ie <= zero_exp_floor {
+                        0.0
+                    } else {
+                        a.to_f32() * exp2i(we + ie - w.frac_bits - i.frac_bits)
+                    };
+                }
+            }
+            BlockAxis::PerRow => unreachable!(),
+        }
+    }
+}
+
+/// Plain f32 GEMM reference (`O = W·I`), used as the "floating point"
+/// baseline throughout the experiments.
+pub fn f32_gemm(w: &[f32], i: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(w.len(), m * k);
+    assert_eq!(i.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for r in 0..m {
+        let wrow = &w[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (kk, &wv) in wrow.iter().enumerate() {
+            if wv == 0.0 {
+                continue;
+            }
+            let irow = &i[kk * n..(kk + 1) * n];
+            for (o, &iv) in orow.iter_mut().zip(irow) {
+                *o += wv * iv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::format::BfpFormat;
+    use crate::bfp::partition::PartitionScheme;
+
+    fn mat(seed: u64, len: usize, scale: f32) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f32 / (1u64 << 53) as f32 * 2.0 - 0.5) * scale
+            })
+            .collect()
+    }
+
+    /// §3.4 worked example: O = W'·I' with the paper's 4-bit blocks.
+    #[test]
+    fn paper_worked_example_product() {
+        let fmt = BfpFormat::new(4);
+        let w = BfpMatrix::quantize(&[0.5, 1.25], 1, 2, fmt, BlockAxis::PerRow);
+        let i = BfpMatrix::quantize(&[1.25, 1.25, 2.5, 5.0], 2, 2, fmt, BlockAxis::Whole);
+        // mantissas: W=(2,5) ε=0 f=2; I=((1,1),(3,5)) ε=2 f=2
+        // integer O = (2·1+5·3, 2·1+5·5) = (17, 27); scale 2^(0+2-2-2)=2^-2
+        let o = bfp_gemm(&w, &i);
+        assert_eq!(o.data, vec![17.0 / 4.0, 27.0 / 4.0]);
+    }
+
+    #[test]
+    fn bfp_gemm_approximates_f32_gemm() {
+        let (m, k, n) = (8, 32, 16);
+        let w = mat(1, m * k, 2.0);
+        let i = mat(2, k * n, 4.0);
+        let mut exact = vec![0f32; m * n];
+        f32_gemm(&w, &i, m, k, n, &mut exact);
+        for scheme in [PartitionScheme::Eq2, PartitionScheme::Eq3, PartitionScheme::Eq4, PartitionScheme::Eq5] {
+            let fmt = BfpFormat::new(12);
+            let wq = BfpMatrix::quantize(&w, m, k, fmt, scheme.w_axis());
+            let iq = BfpMatrix::quantize(&i, k, n, fmt, scheme.i_axis());
+            let o = bfp_gemm(&wq, &iq);
+            let energy: f64 = exact.iter().map(|x| (*x as f64).powi(2)).sum();
+            let err: f64 = exact.iter().zip(&o.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            assert!(err / energy < 1e-4, "scheme {scheme:?}: NSR {}", err / energy);
+        }
+    }
+
+    /// The integer MAC must be *exact*: dequantized GEMM of the quantized
+    /// matrices equals f32 GEMM of the dequantized matrices (products are
+    /// representable, f32 sums of integer-valued terms < 2^24 are exact).
+    #[test]
+    fn fixed_point_mac_is_exact() {
+        let (m, k, n) = (4, 9, 7);
+        let w = mat(3, m * k, 1.0);
+        let i = mat(4, k * n, 8.0);
+        let fmt = BfpFormat::new(8);
+        let wq = BfpMatrix::quantize(&w, m, k, fmt, BlockAxis::PerRow);
+        let iq = BfpMatrix::quantize(&i, k, n, fmt, BlockAxis::Whole);
+        let o = bfp_gemm(&wq, &iq);
+        let wd = wq.to_f32();
+        let id = iq.to_f32();
+        let mut expect = vec![0f32; m * n];
+        f32_gemm(&wd, &id, m, k, n, &mut expect);
+        for (a, b) in o.data.iter().zip(&expect) {
+            assert_eq!(a, b, "fixed-point GEMM must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn wide_accumulator_path() {
+        // Force acc_bits > 31: wide mantissas + large K.
+        let (m, k, n) = (2, 5000, 3);
+        let w = mat(5, m * k, 1.0);
+        let i = mat(6, k * n, 1.0);
+        let fmt = BfpFormat::new(16);
+        let wq = BfpMatrix::quantize(&w, m, k, fmt, BlockAxis::PerRow);
+        let iq = BfpMatrix::quantize(&i, k, n, fmt, BlockAxis::Whole);
+        let o = bfp_gemm(&wq, &iq);
+        let mut exact = vec![0f32; m * n];
+        f32_gemm(&w, &i, m, k, n, &mut exact);
+        for (a, b) in o.data.iter().zip(&exact) {
+            assert!((a - b).abs() / (b.abs() + 1.0) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn zero_weight_matrix_gives_zero_output() {
+        let fmt = BfpFormat::new(8);
+        let wq = BfpMatrix::quantize(&[0.0; 6], 2, 3, fmt, BlockAxis::PerRow);
+        let iq = BfpMatrix::quantize(&mat(7, 12, 1.0), 3, 4, fmt, BlockAxis::Whole);
+        let o = bfp_gemm(&wq, &iq);
+        assert!(o.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_mismatched_inner_dim() {
+        let fmt = BfpFormat::new(8);
+        let wq = BfpMatrix::quantize(&[1.0; 6], 2, 3, fmt, BlockAxis::PerRow);
+        let iq = BfpMatrix::quantize(&[1.0; 8], 4, 2, fmt, BlockAxis::Whole);
+        bfp_gemm(&wq, &iq);
+    }
+}

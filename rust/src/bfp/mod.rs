@@ -1,0 +1,33 @@
+//! Block floating point (BFP) numeric substrate.
+//!
+//! A BFP block is a group of `n` numbers that share a single exponent — the
+//! maximum exponent in the group (§3.1 of the paper). Every member's
+//! mantissa is right-shifted by the difference between the block exponent
+//! and its own exponent ("block formatting", eq. (1)), so all subsequent
+//! arithmetic on the block happens in plain fixed point.
+//!
+//! Submodules:
+//! * [`format`] — word-width bookkeeping ([`BfpFormat`]): how many mantissa
+//!   bits (the paper's `L_W` / `L_I`, *including* the sign bit, matching
+//!   Table 3's convention) and the derived quantization step.
+//! * [`block`] — the [`BfpBlock`] container: integer mantissas + shared
+//!   exponent, with exact dequantization.
+//! * [`quantize`] — block formatting itself: exponent extraction via f32
+//!   bit manipulation, round-off vs truncation (§3.1 discusses why
+//!   round-off wins; we implement both so the ablation bench can show it).
+//! * [`gemm`] — the Figure 2 data flow: exact fixed-point multiply-
+//!   accumulate over two blocks with the §3.4 bit-width guarantees.
+//! * [`partition`] — the eq. (2)–(5) matrix partition schemes and the
+//!   Table 1 storage / block-exponent cost model.
+
+pub mod block;
+pub mod format;
+pub mod gemm;
+pub mod partition;
+pub mod quantize;
+
+pub use block::BfpBlock;
+pub use format::{exponent_of, BfpFormat, Rounding};
+pub use gemm::{bfp_gemm, bfp_gemm_into, BfpGemmOutput};
+pub use partition::{BfpMatrix, PartitionCost, PartitionScheme};
+pub use quantize::{block_format, dequantize, max_exponent, quantize_into};

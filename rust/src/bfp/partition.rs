@@ -1,0 +1,339 @@
+//! Matrix partition schemes for BFP block formatting — the paper's
+//! eqs. (2)–(5) — plus the Table 1 storage / block-exponent cost model.
+//!
+//! The im2col'd convolution is `O_{M×N} = W_{M×K} · I_{K×N}` (eq. 2).
+//! The four ways to choose BFP blocks over `W` and `I`:
+//!
+//! | scheme | `W` blocks | `I` blocks | paper |
+//! |--------|-----------|-----------|-------|
+//! | [`PartitionScheme::Eq2`] | whole matrix | whole matrix | eq. (2) |
+//! | [`PartitionScheme::Eq3`] | per row      | per column   | eq. (3) |
+//! | [`PartitionScheme::Eq4`] | per row      | whole matrix | eq. (4) — the paper's choice |
+//! | [`PartitionScheme::Eq5`] | whole matrix | per column   | eq. (5) |
+
+use super::format::{exp2i, round_half_away, round_stochastic, BfpFormat, Rounding};
+use super::quantize::max_exponent;
+
+/// How a matrix is carved into BFP blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockAxis {
+    /// One block for the whole matrix.
+    Whole,
+    /// One block per row vector.
+    PerRow,
+    /// One block per column vector.
+    PerCol,
+}
+
+/// The four matrix-partition schemes of §3.3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionScheme {
+    /// Eq. (2): `W` and `I` each block-formatted as a whole.
+    Eq2,
+    /// Eq. (3): `W` per row, `I` per column (vector-wise).
+    Eq3,
+    /// Eq. (4): `W` per row, `I` as a whole — the paper's chosen tradeoff.
+    #[default]
+    Eq4,
+    /// Eq. (5): `W` as a whole, `I` per column.
+    Eq5,
+}
+
+impl PartitionScheme {
+    /// Block axis applied to the weight matrix `W`.
+    pub fn w_axis(&self) -> BlockAxis {
+        match self {
+            PartitionScheme::Eq2 | PartitionScheme::Eq5 => BlockAxis::Whole,
+            PartitionScheme::Eq3 | PartitionScheme::Eq4 => BlockAxis::PerRow,
+        }
+    }
+
+    /// Block axis applied to the input matrix `I`.
+    pub fn i_axis(&self) -> BlockAxis {
+        match self {
+            PartitionScheme::Eq2 | PartitionScheme::Eq4 => BlockAxis::Whole,
+            PartitionScheme::Eq3 | PartitionScheme::Eq5 => BlockAxis::PerCol,
+        }
+    }
+
+    /// Table 1 cost row for matrices `W_{M×K}`, `I_{K×N}` with mantissa
+    /// widths `l_w` / `l_i` (incl. sign) and exponent width `l_e`.
+    pub fn cost(&self, m: usize, k: usize, n: usize, l_w: u32, l_i: u32, l_e: u32) -> PartitionCost {
+        let (lw, li, le) = (l_w as f64, l_i as f64, l_e as f64);
+        // Average stored length per number: mantissa bits (incl. sign)
+        // plus the block exponent amortised over the block size.
+        // (The paper's "1 + L + Le/n" counts the sign separately; our L
+        // already includes it, so AL = L + Le/block.)
+        let (al_w, al_i, nbe) = match self {
+            PartitionScheme::Eq2 => (lw + le / (m * k) as f64, li + le / (k * n) as f64, 2),
+            PartitionScheme::Eq3 => (lw + le / k as f64, li + le / k as f64, m + n),
+            PartitionScheme::Eq4 => (lw + le / k as f64, li + le / (k * n) as f64, 1 + m),
+            PartitionScheme::Eq5 => (lw + le / (m * k) as f64, li + le / k as f64, 1 + n),
+        };
+        PartitionCost {
+            scheme: *self,
+            avg_len_w: al_w,
+            avg_len_i: al_i,
+            num_block_exponents: nbe,
+            total_bits_w: (al_w * (m * k) as f64).round() as usize,
+            total_bits_i: (al_i * (k * n) as f64).round() as usize,
+            block_format_ops: nbe,
+        }
+    }
+}
+
+/// One row of Table 1: the storage and bookkeeping cost of a scheme.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionCost {
+    pub scheme: PartitionScheme,
+    /// Average stored bits per `W` entry (`AL_W'` in Table 1).
+    pub avg_len_w: f64,
+    /// Average stored bits per `I` entry (`AL_I'` in Table 1).
+    pub avg_len_i: f64,
+    /// Number of block exponents that must be stored (`NBE`).
+    pub num_block_exponents: usize,
+    /// Total `W` storage in bits.
+    pub total_bits_w: usize,
+    /// Total `I` storage in bits.
+    pub total_bits_i: usize,
+    /// Number of block-formatting scans required.
+    pub block_format_ops: usize,
+}
+
+/// A matrix quantized to BFP under a chosen block axis.
+///
+/// Mantissas are stored row-major regardless of the block axis; the
+/// exponent table has one entry per block (1, `rows`, or `cols`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BfpMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub axis: BlockAxis,
+    pub frac_bits: i32,
+    /// Row-major integer mantissas.
+    pub mantissas: Vec<i32>,
+    /// Block exponents: `[ε]` for `Whole`, `[ε_0 … ε_{rows-1}]` for
+    /// `PerRow`, `[ε_0 … ε_{cols-1}]` for `PerCol`. `i32::MIN/2` marks an
+    /// all-zero block.
+    pub exponents: Vec<i32>,
+}
+
+impl BfpMatrix {
+    /// Quantize a row-major `rows×cols` f32 matrix under `fmt` and `axis`.
+    pub fn quantize(data: &[f32], rows: usize, cols: usize, fmt: BfpFormat, axis: BlockAxis) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix shape mismatch");
+        let frac = fmt.frac_bits();
+        let max_m = fmt.max_mantissa();
+        let round = fmt.rounding;
+        let mut mantissas = vec![0i32; rows * cols];
+        let mut exponents;
+        let zero_exp = i32::MIN / 2;
+        match axis {
+            BlockAxis::Whole => {
+                let eps = max_exponent(data).unwrap_or(zero_exp);
+                exponents = vec![eps];
+                if eps != zero_exp {
+                    quantize_slice(data, &mut mantissas, frac, eps, max_m, round);
+                }
+            }
+            BlockAxis::PerRow => {
+                exponents = vec![zero_exp; rows];
+                for r in 0..rows {
+                    let row = &data[r * cols..(r + 1) * cols];
+                    if let Some(eps) = max_exponent(row) {
+                        exponents[r] = eps;
+                        quantize_slice(row, &mut mantissas[r * cols..(r + 1) * cols], frac, eps, max_m, round);
+                    }
+                }
+            }
+            BlockAxis::PerCol => {
+                exponents = vec![zero_exp; cols];
+                // column-wise max exponent
+                let mut max_bits = vec![0u32; cols];
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let v = data[r * cols + c];
+                        if v.is_finite() {
+                            let b = v.to_bits() & 0x7FFF_FFFF;
+                            if b > max_bits[c] {
+                                max_bits[c] = b;
+                            }
+                        }
+                    }
+                }
+                for c in 0..cols {
+                    if max_bits[c] != 0 {
+                        exponents[c] =
+                            super::format::exponent_of(f32::from_bits(max_bits[c])).unwrap();
+                    }
+                }
+                let inv_steps: Vec<f32> = exponents
+                    .iter()
+                    .map(|&e| if e == zero_exp { 0.0 } else { exp2i(frac - e) })
+                    .collect();
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let scaled = data[r * cols + c] * inv_steps[c];
+                        let q = apply_round(scaled, round) as i32;
+                        mantissas[r * cols + c] = q.clamp(-max_m, max_m);
+                    }
+                }
+            }
+        }
+        Self { rows, cols, axis, frac_bits: frac, mantissas, exponents }
+    }
+
+    /// Block exponent governing entry `(r, c)`.
+    #[inline]
+    pub fn exponent_at(&self, r: usize, c: usize) -> i32 {
+        match self.axis {
+            BlockAxis::Whole => self.exponents[0],
+            BlockAxis::PerRow => self.exponents[r],
+            BlockAxis::PerCol => self.exponents[c],
+        }
+    }
+
+    /// Dequantize back to f32 (row-major).
+    pub fn to_f32(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let e = self.exponent_at(r, c);
+                let s = if e <= i32::MIN / 2 { 0.0 } else { exp2i(e - self.frac_bits) };
+                out[r * self.cols + c] = self.mantissas[r * self.cols + c] as f32 * s;
+            }
+        }
+        out
+    }
+}
+
+#[inline(always)]
+fn apply_round(x: f32, mode: Rounding) -> f32 {
+    match mode {
+        Rounding::Nearest => round_half_away(x),
+        Rounding::Truncate => x.trunc(),
+        Rounding::Stochastic => round_stochastic(x),
+    }
+}
+
+#[inline]
+fn quantize_slice(src: &[f32], dst: &mut [i32], frac: i32, eps: i32, max_m: i32, round: Rounding) {
+    let inv_step = exp2i(frac - eps);
+    match round {
+        Rounding::Nearest => {
+            for (q, &v) in dst.iter_mut().zip(src) {
+                *q = (round_half_away(v * inv_step) as i32).clamp(-max_m, max_m);
+            }
+        }
+        Rounding::Truncate => {
+            for (q, &v) in dst.iter_mut().zip(src) {
+                *q = ((v * inv_step).trunc() as i32).clamp(-max_m, max_m);
+            }
+        }
+        Rounding::Stochastic => {
+            for (q, &v) in dst.iter_mut().zip(src) {
+                *q = (round_stochastic(v * inv_step) as i32).clamp(-max_m, max_m);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_matrix(rows: usize, cols: usize) -> Vec<f32> {
+        (0..rows * cols).map(|i| ((i as f32 * 0.7).sin() * 3.0) + 0.1).collect()
+    }
+
+    #[test]
+    fn scheme_axes_match_paper() {
+        assert_eq!(PartitionScheme::Eq2.w_axis(), BlockAxis::Whole);
+        assert_eq!(PartitionScheme::Eq2.i_axis(), BlockAxis::Whole);
+        assert_eq!(PartitionScheme::Eq3.w_axis(), BlockAxis::PerRow);
+        assert_eq!(PartitionScheme::Eq3.i_axis(), BlockAxis::PerCol);
+        assert_eq!(PartitionScheme::Eq4.w_axis(), BlockAxis::PerRow);
+        assert_eq!(PartitionScheme::Eq4.i_axis(), BlockAxis::Whole);
+        assert_eq!(PartitionScheme::Eq5.w_axis(), BlockAxis::Whole);
+        assert_eq!(PartitionScheme::Eq5.i_axis(), BlockAxis::PerCol);
+    }
+
+    /// Table 1 identities for VGG-16 conv1_1 (M=64, K=9, N=50176).
+    #[test]
+    fn table1_vgg_conv1_1() {
+        let (m, k, n) = (64usize, 9usize, 50176usize);
+        let (lw, li, le) = (8u32, 8u32, 8u32);
+        let c2 = PartitionScheme::Eq2.cost(m, k, n, lw, li, le);
+        let c3 = PartitionScheme::Eq3.cost(m, k, n, lw, li, le);
+        let c4 = PartitionScheme::Eq4.cost(m, k, n, lw, li, le);
+        let c5 = PartitionScheme::Eq5.cost(m, k, n, lw, li, le);
+        assert_eq!(c2.num_block_exponents, 2);
+        assert_eq!(c3.num_block_exponents, m + n);
+        assert_eq!(c4.num_block_exponents, 1 + m);
+        assert_eq!(c5.num_block_exponents, 1 + n);
+        // eq3/eq5 store hundreds of times more exponents than eq2/eq4
+        assert!(c3.num_block_exponents > 100 * c4.num_block_exponents);
+        assert!(c5.num_block_exponents > 100 * c4.num_block_exponents);
+        // per-row W amortises the exponent over K only
+        assert!((c4.avg_len_w - (8.0 + 8.0 / 9.0)).abs() < 1e-12);
+        assert!((c4.avg_len_i - (8.0 + 8.0 / (9.0 * 50176.0))).abs() < 1e-12);
+        assert!((c2.avg_len_w - (8.0 + 8.0 / (64.0 * 9.0))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn whole_axis_single_exponent_is_global_max() {
+        let data = sample_matrix(4, 5);
+        let q = BfpMatrix::quantize(&data, 4, 5, BfpFormat::new(8), BlockAxis::Whole);
+        assert_eq!(q.exponents.len(), 1);
+        assert_eq!(q.exponents[0], max_exponent(&data).unwrap());
+    }
+
+    #[test]
+    fn per_row_exponents_are_row_maxima() {
+        let data = vec![1.0f32, 0.1, 0.2, 8.0, 0.3, 0.4];
+        let q = BfpMatrix::quantize(&data, 2, 3, BfpFormat::new(8), BlockAxis::PerRow);
+        assert_eq!(q.exponents, vec![0, 3]);
+    }
+
+    #[test]
+    fn per_col_exponents_are_col_maxima() {
+        let data = vec![1.0f32, 0.1, 0.2, 8.0, 0.3, 0.4];
+        let q = BfpMatrix::quantize(&data, 2, 3, BfpFormat::new(8), BlockAxis::PerCol);
+        assert_eq!(q.exponents, vec![3, -2, -2]); // col maxima: 8.0, 0.3, 0.4
+    }
+
+    #[test]
+    fn finer_partitions_are_no_less_accurate() {
+        // per-row quantization error ≤ whole-matrix error (row maxima ≤ global max)
+        let mut data = sample_matrix(16, 16);
+        data[0] = 100.0; // one large outlier hurts the Whole scheme
+        let fmt = BfpFormat::new(8);
+        let err = |axis| {
+            let q = BfpMatrix::quantize(&data, 16, 16, fmt, axis);
+            let back = q.to_f32();
+            data.iter().zip(&back).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+        };
+        assert!(err(BlockAxis::PerRow) <= err(BlockAxis::Whole) + 1e-12);
+    }
+
+    #[test]
+    fn zero_rows_handled() {
+        let data = vec![0.0f32, 0.0, 1.0, 2.0];
+        let q = BfpMatrix::quantize(&data, 2, 2, BfpFormat::new(8), BlockAxis::PerRow);
+        let back = q.to_f32();
+        assert_eq!(&back[0..2], &[0.0, 0.0]);
+        assert!((back[2] - 1.0).abs() < 0.02 && (back[3] - 2.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn dequantize_roundtrip_reasonable() {
+        let data = sample_matrix(8, 8);
+        for axis in [BlockAxis::Whole, BlockAxis::PerRow, BlockAxis::PerCol] {
+            let q = BfpMatrix::quantize(&data, 8, 8, BfpFormat::new(12), axis);
+            let back = q.to_f32();
+            for (a, b) in data.iter().zip(&back) {
+                assert!((a - b).abs() < 0.01, "{a} vs {b} axis={axis:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Block formatting: the BFP quantization procedure of §3.1 / eq. (1).
+//!
+//! 1. Scan the block for the maximum exponent `ε = max_i floor(log2 |x_i|)`.
+//! 2. Express every element as an integer mantissa at scale
+//!    `2^(ε - frac_bits)`: `q_i = round(x_i / Δ)` with `Δ = 2^(ε - f)` —
+//!    this is exactly "right-shift the mantissa by `ε - e_i` and round the
+//!    out-shifted bits".
+//! 3. Saturate at `±(2^(L-1) - 1)` (a round-up of the block maximum from
+//!    `m = 1.11…1` would otherwise need one extra bit; real hardware
+//!    saturates).
+
+use super::block::BfpBlock;
+use super::format::{exp2i, exponent_of, round_half_away, round_stochastic, BfpFormat, Rounding};
+
+/// Maximum exponent over a slice — the block exponent `ε` (eq. of §3.1).
+/// Returns `None` if the slice contains no finite nonzero value.
+pub fn max_exponent(values: &[f32]) -> Option<i32> {
+    // The binary exponent is monotone in |x| for finite floats, so the max
+    // exponent is the exponent of the max |x|. Comparing payload bits
+    // (sign cleared) avoids per-element exponent extraction.
+    let mut max_abs_bits: u32 = 0;
+    for &v in values {
+        if v.is_finite() {
+            let b = v.to_bits() & 0x7FFF_FFFF;
+            if b > max_abs_bits {
+                max_abs_bits = b;
+            }
+        }
+    }
+    if max_abs_bits == 0 {
+        None
+    } else {
+        exponent_of(f32::from_bits(max_abs_bits))
+    }
+}
+
+/// Block-format `values` into a [`BfpBlock`] under `fmt`.
+pub fn block_format(values: &[f32], fmt: BfpFormat) -> BfpBlock {
+    let mut block = BfpBlock::zeros(values.len(), fmt);
+    quantize_into(values, fmt, &mut block);
+    block
+}
+
+/// Block-format into an existing block (no allocation when the length
+/// matches). The hot-path entry point used by the GEMM pipeline.
+pub fn quantize_into(values: &[f32], fmt: BfpFormat, block: &mut BfpBlock) {
+    block.frac_bits = fmt.frac_bits();
+    block.mantissas.resize(values.len(), 0);
+    let Some(eps) = max_exponent(values) else {
+        block.exponent = i32::MIN / 2;
+        block.mantissas.fill(0);
+        return;
+    };
+    block.exponent = eps;
+    let inv_step = exp2i(fmt.frac_bits() - eps); // 1/Δ, exact power of two
+    let max_m = fmt.max_mantissa();
+    match fmt.rounding {
+        Rounding::Nearest => {
+            for (q, &v) in block.mantissas.iter_mut().zip(values) {
+                let scaled = v * inv_step;
+                // round half away from zero (vectorized), then saturate
+                let r = round_half_away(scaled) as i32;
+                *q = r.clamp(-max_m, max_m);
+            }
+        }
+        Rounding::Truncate => {
+            for (q, &v) in block.mantissas.iter_mut().zip(values) {
+                let scaled = v * inv_step;
+                let r = scaled.trunc() as i32;
+                *q = r.clamp(-max_m, max_m);
+            }
+        }
+        Rounding::Stochastic => {
+            for (q, &v) in block.mantissas.iter_mut().zip(values) {
+                let r = round_stochastic(v * inv_step) as i32;
+                *q = r.clamp(-max_m, max_m);
+            }
+        }
+    }
+}
+
+/// Quantize-dequantize round trip: the BFP approximation `x'` of `x`.
+/// This is what the accuracy experiments apply to weights / activations.
+pub fn dequantize(values: &[f32], fmt: BfpFormat) -> Vec<f32> {
+    block_format(values, fmt).to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §3.4 worked example: I = [[1.01e0, 1.01e0], [1.01e1, 1.01e2]] (bin),
+    /// L_I = 3 excl. sign → total 4 bits. Expect ε=2 and mantissas
+    /// (0.01, 0.01, 0.11, 1.01) i.e. q = (1, 1, 3, 5) at frac_bits=2.
+    #[test]
+    fn paper_worked_example_input_matrix() {
+        let m101 = 1.25f32; // (1.01)_2
+        let xs = [m101, m101, m101 * 2.0, m101 * 4.0];
+        let fmt = BfpFormat::new(4);
+        let b = block_format(&xs, fmt);
+        assert_eq!(b.exponent, 2);
+        assert_eq!(b.frac_bits, 2);
+        assert_eq!(b.mantissas, vec![1, 1, 3, 5]);
+    }
+
+    /// §3.4 worked example: W = [1.00e-1, 1.01e0] → ε=0,
+    /// mantissas (0.10, 1.01) = (2, 5).
+    #[test]
+    fn paper_worked_example_weight_matrix() {
+        let xs = [0.5f32, 1.25];
+        let b = block_format(&xs, BfpFormat::new(4));
+        assert_eq!(b.exponent, 0);
+        assert_eq!(b.mantissas, vec![2, 5]);
+    }
+
+    #[test]
+    fn max_exponent_basic() {
+        assert_eq!(max_exponent(&[0.5, -3.0, 1.0]), Some(1));
+        assert_eq!(max_exponent(&[0.0, 0.0]), None);
+        assert_eq!(max_exponent(&[]), None);
+        assert_eq!(max_exponent(&[f32::NAN, 2.0]), Some(1));
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let fmt = BfpFormat::new(8);
+        let xs: Vec<f32> = (0..1000).map(|i| ((i * 2654435761u64 as usize) as f32).sin() * 7.3).collect();
+        let b = block_format(&xs, fmt);
+        let step = fmt.step(b.exponent);
+        let ys = b.to_f32();
+        for (x, y) in xs.iter().zip(&ys) {
+            // round-off: |err| ≤ Δ/2 (+ tiny slack for the saturated max)
+            assert!(
+                (x - y).abs() <= step * 0.5 + step * 1e-3 || (x - y).abs() <= step,
+                "x={x} y={y} step={step}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_biases_toward_zero() {
+        let fmt = BfpFormat::truncating(8);
+        let xs = [0.777f32, 1.999, -0.333, 1.0];
+        let b = block_format(&xs, fmt);
+        for (x, y) in xs.iter().zip(b.to_f32()) {
+            assert!(y.abs() <= x.abs() + 1e-7, "truncation must not grow magnitude");
+        }
+    }
+
+    #[test]
+    fn exact_values_roundtrip_losslessly() {
+        // Values already on the quantization grid survive unchanged.
+        let fmt = BfpFormat::new(8); // frac_bits = 6
+        let step = fmt.step(0); // block exp will be 0 (max |x| in [1,2))
+        let xs = [1.0f32, 0.5, step * 17.0, -step * 40.0];
+        let b = block_format(&xs, fmt);
+        assert_eq!(b.to_f32(), xs.to_vec());
+    }
+
+    #[test]
+    fn wide_format_is_near_lossless() {
+        let fmt = BfpFormat::new(24);
+        let xs = [0.123456f32, -3.14159, 0.577215, 1.41421];
+        let ys = dequantize(&xs, fmt);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert!((x - y).abs() <= (x.abs() + 1.0) * 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_zero_block() {
+        let b = block_format(&[0.0, 0.0, 0.0], BfpFormat::new(8));
+        assert_eq!(b.to_f32(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn saturation_at_max_mantissa() {
+        let fmt = BfpFormat::new(4); // max_mantissa = 7, frac = 2
+        // 1.999… has mantissa ~(1.1111)_2; rounding to 2 frac bits would
+        // give (10.00)_2 = 8 — must saturate to 7.
+        let xs = [1.99f32, 1.0];
+        let b = block_format(&xs, fmt);
+        assert_eq!(b.exponent, 0);
+        assert_eq!(b.mantissas[0], 7);
+    }
+
+    #[test]
+    fn quantize_into_reuses_buffer() {
+        let fmt = BfpFormat::new(8);
+        let mut b = BfpBlock::zeros(4, fmt);
+        quantize_into(&[1.0, 2.0, 3.0, 4.0], fmt, &mut b);
+        let first = b.clone();
+        quantize_into(&[1.0, 2.0, 3.0, 4.0], fmt, &mut b);
+        assert_eq!(b, first);
+    }
+
+    #[test]
+    fn negative_values_symmetric() {
+        let fmt = BfpFormat::new(8);
+        let xs = [1.3f32, -1.3, 0.7, -0.7];
+        let b = block_format(&xs, fmt);
+        assert_eq!(b.mantissas[0], -b.mantissas[1]);
+        assert_eq!(b.mantissas[2], -b.mantissas[3]);
+    }
+}

@@ -1,0 +1,110 @@
+//! Dynamic batcher: groups queued requests into batches bounded by a
+//! maximum size and a linger deadline — the standard accelerator-serving
+//! pattern (a hardware BFP engine amortises block formatting and weight
+//! reuse across the batch).
+
+use crate::tensor::Tensor;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// One inference request: an image plus the channel to answer on.
+pub struct Request {
+    pub id: u64,
+    pub image: Tensor,
+    pub respond: std::sync::mpsc::Sender<Response>,
+    pub enqueued_at: Instant,
+}
+
+/// The answer: logits plus timing metadata.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Tensor,
+    pub queue_wait: Duration,
+    pub batch_size: usize,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time the first request may wait for the batch to fill.
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, linger: Duration::from_millis(5) }
+    }
+}
+
+/// Pull the next batch from the queue: blocks for the first request, then
+/// lingers up to `policy.linger` (or until `max_batch`) for more.
+/// Returns `None` when the queue has disconnected and drained.
+pub fn next_batch(rx: &Receiver<Request>, policy: BatchPolicy) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.linger;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64) -> (Request, Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            Request { id, image: Tensor::zeros(&[1, 2, 2]), respond: tx, enqueued_at: Instant::now() },
+            rx,
+        )
+    }
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = channel();
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, resp) = req(i);
+            keep.push(resp);
+            tx.send(r).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 3, linger: Duration::from_millis(50) };
+        let batch = next_batch(&rx, policy).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch = next_batch(&rx, policy).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn returns_none_when_disconnected() {
+        let (tx, rx) = channel::<Request>();
+        drop(tx);
+        assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn linger_bounds_wait() {
+        let (tx, rx) = channel();
+        let (r, _resp) = req(1);
+        tx.send(r).unwrap();
+        let policy = BatchPolicy { max_batch: 100, linger: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let batch = next_batch(&rx, policy).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+}

@@ -1,0 +1,63 @@
+//! Inference engine: run a model over a batch of images in a chosen
+//! numeric mode.
+
+use crate::models::Model;
+use crate::nn::{BfpExec, Fp32Exec};
+use crate::quant::BfpConfig;
+use crate::tensor::Tensor;
+
+/// Numeric execution mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ExecMode {
+    /// FP32 reference (the paper's "floating point" rows).
+    Fp32,
+    /// Block-floating-point conv layers (the Figure 2 data flow).
+    Bfp(BfpConfig),
+}
+
+/// Forward a batch of `[C,H,W]` images, returning per-image logits.
+pub fn forward_batch(model: &Model, images: &[Tensor], mode: ExecMode) -> Vec<Tensor> {
+    images
+        .iter()
+        .map(|img| {
+            assert_eq!(img.shape, model.input_shape, "input shape mismatch for {}", model.name);
+            match mode {
+                ExecMode::Fp32 => model.graph.execute(img.clone(), &mut Fp32Exec),
+                ExecMode::Bfp(cfg) => model.graph.execute(img.clone(), &mut BfpExec::new(cfg)),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelId;
+    use std::path::Path;
+
+    #[test]
+    fn batch_forward_lenet_both_modes() {
+        let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+        let images = crate::data::DigitDataset::generate(3, 1).images;
+        let fp = forward_batch(&model, &images, ExecMode::Fp32);
+        let bfp = forward_batch(&model, &images, ExecMode::Bfp(BfpConfig::paper_default()));
+        assert_eq!(fp.len(), 3);
+        assert_eq!(bfp.len(), 3);
+        for (a, b) in fp.iter().zip(&bfp) {
+            assert_eq!(a.shape, vec![10]);
+            assert_eq!(b.shape, vec![10]);
+            // 8-bit BFP predictions should track fp32 closely on lenet
+            let nsr = a.data.iter().zip(&b.data).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>()
+                / a.energy().max(1e-12);
+            assert!(nsr < 0.05, "NSR {nsr}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_shape() {
+        let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+        let bad = vec![Tensor::zeros(&[3, 32, 32])];
+        forward_batch(&model, &bad, ExecMode::Fp32);
+    }
+}

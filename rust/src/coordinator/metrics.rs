@@ -1,0 +1,110 @@
+//! Serving metrics: latency distribution and throughput.
+
+use std::time::Duration;
+
+/// Accumulated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    queue_waits_us: Vec<u64>,
+    batch_sizes: Vec<usize>,
+    pub total_requests: usize,
+    pub wall_time: Duration,
+}
+
+impl Metrics {
+    pub fn record(&mut self, latency: Duration, queue_wait: Duration, batch_size: usize) {
+        self.latencies_us.push(latency.as_micros() as u64);
+        self.queue_waits_us.push(queue_wait.as_micros() as u64);
+        self.batch_sizes.push(batch_size);
+        self.total_requests += 1;
+    }
+
+    /// Latency percentile in milliseconds (`p` in [0, 100]).
+    pub fn latency_p(&self, p: f64) -> f64 {
+        percentile(&self.latencies_us, p) / 1000.0
+    }
+
+    /// Mean queue wait in ms.
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        if self.queue_waits_us.is_empty() {
+            return 0.0;
+        }
+        self.queue_waits_us.iter().sum::<u64>() as f64 / self.queue_waits_us.len() as f64 / 1000.0
+    }
+
+    /// Mean batch size actually served.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    /// Requests per second over the recorded wall time.
+    pub fn throughput(&self) -> f64 {
+        let s = self.wall_time.as_secs_f64();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.total_requests as f64 / s
+    }
+
+    /// One-line summary for logs and EXPERIMENTS.md.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs, {:.1} req/s, p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms, mean batch {:.2}, mean queue wait {:.2} ms",
+            self.total_requests,
+            self.throughput(),
+            self.latency_p(50.0),
+            self.latency_p(95.0),
+            self.latency_p(99.0),
+            self.mean_batch_size(),
+            self.mean_queue_wait_ms(),
+        )
+    }
+}
+
+fn percentile(xs: &[u64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_unstable();
+    let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i * 1000), Duration::ZERO, 4);
+        }
+        assert!((m.latency_p(50.0) - 50.0).abs() <= 1.0);
+        assert!((m.latency_p(99.0) - 99.0).abs() <= 1.0);
+        assert_eq!(m.mean_batch_size(), 4.0);
+    }
+
+    #[test]
+    fn throughput_from_wall_time() {
+        let mut m = Metrics::default();
+        for _ in 0..10 {
+            m.record(Duration::from_millis(1), Duration::ZERO, 1);
+        }
+        m.wall_time = Duration::from_secs(2);
+        assert_eq!(m.throughput(), 5.0);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_p(50.0), 0.0);
+        assert_eq!(m.throughput(), 0.0);
+        assert!(!m.summary().is_empty());
+    }
+}

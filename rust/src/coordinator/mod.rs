@@ -1,0 +1,15 @@
+//! The L3 serving layer: a batched inference coordinator.
+//!
+//! The paper's contribution is the numeric format, so the coordinator is
+//! a thin-but-real driver (DESIGN.md §2): a request queue, a dynamic
+//! batcher, worker execution over either the pure-Rust engine or the
+//! AOT-compiled PJRT artifacts, and latency/throughput metrics.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use engine::{forward_batch, ExecMode};
+pub use metrics::Metrics;
+pub use server::{InferenceServer, ServerConfig};

@@ -1,0 +1,175 @@
+//! The inference server: a worker thread pulls dynamic batches off the
+//! queue and executes them on a pluggable backend (pure-Rust engine or a
+//! PJRT-compiled artifact).
+
+use super::batcher::{next_batch, BatchPolicy, Request, Response};
+use super::metrics::Metrics;
+use crate::tensor::Tensor;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A pluggable batch-inference backend.
+///
+/// Backends need not be `Send` (PJRT handles are thread-pinned); use
+/// [`InferenceServer::start_with`] to construct the backend *on* the
+/// worker thread.
+pub trait Backend: 'static {
+    /// Run a batch of `[C,H,W]` images, returning per-image logits.
+    fn infer_batch(&mut self, images: &[Tensor]) -> Vec<Tensor>;
+    /// Human-readable backend description (for logs).
+    fn describe(&self) -> String;
+}
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { policy: BatchPolicy::default() }
+    }
+}
+
+/// Handle to a running inference server.
+pub struct InferenceServer {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+    next_id: u64,
+    started: Instant,
+}
+
+impl InferenceServer {
+    /// Spawn the worker thread over a `Send` backend.
+    pub fn start(backend: Box<dyn Backend + Send>, config: ServerConfig) -> Self {
+        Self::start_with(move || backend as Box<dyn Backend>, config)
+    }
+
+    /// Spawn the worker thread, constructing the backend on it — required
+    /// for thread-pinned backends such as PJRT executables.
+    pub fn start_with<F>(factory: F, config: ServerConfig) -> Self
+    where
+        F: FnOnce() -> Box<dyn Backend> + Send + 'static,
+    {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics_worker = Arc::clone(&metrics);
+        let worker = std::thread::spawn(move || {
+            let mut backend = factory();
+            while let Some(batch) = next_batch(&rx, config.policy) {
+                let t0 = Instant::now();
+                let images: Vec<Tensor> = batch.iter().map(|r| r.image.clone()).collect();
+                let logits = backend.infer_batch(&images);
+                let batch_size = batch.len();
+                for (req, out) in batch.into_iter().zip(logits) {
+                    let queue_wait = t0.duration_since(req.enqueued_at);
+                    let latency = req.enqueued_at.elapsed();
+                    metrics_worker.lock().unwrap().record(latency, queue_wait, batch_size);
+                    let _ = req.respond.send(Response {
+                        id: req.id,
+                        logits: out,
+                        queue_wait,
+                        batch_size,
+                    });
+                }
+            }
+        });
+        Self { tx: Some(tx), worker: Some(worker), metrics, next_id: 0, started: Instant::now() }
+    }
+
+    /// Submit one image; returns the receiver for its response.
+    pub fn submit(&mut self, image: Tensor) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        self.next_id += 1;
+        self.tx
+            .as_ref()
+            .expect("server stopped")
+            .send(Request { id: self.next_id, image, respond: tx, enqueued_at: Instant::now() })
+            .expect("worker gone");
+        rx
+    }
+
+    /// Submit and wait (convenience for tests / simple clients).
+    pub fn infer(&mut self, image: Tensor) -> Response {
+        self.submit(image).recv().expect("worker dropped response")
+    }
+
+    /// Stop the worker and return the final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.wall_time = self.started.elapsed();
+        m
+    }
+}
+
+/// Pure-Rust backend over a model from the zoo.
+pub struct RustBackend {
+    pub model: crate::models::Model,
+    pub mode: super::engine::ExecMode,
+}
+
+impl Backend for RustBackend {
+    fn infer_batch(&mut self, images: &[Tensor]) -> Vec<Tensor> {
+        super::engine::forward_batch(&self.model, images, self.mode)
+    }
+    fn describe(&self) -> String {
+        format!("rust/{}/{:?}", self.model.name, self.mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::ExecMode;
+    use crate::models::ModelId;
+    use crate::quant::BfpConfig;
+    use std::path::Path;
+
+    #[test]
+    fn serves_lenet_requests() {
+        let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+        let backend = RustBackend { model, mode: ExecMode::Bfp(BfpConfig::paper_default()) };
+        let mut server = InferenceServer::start(Box::new(backend), ServerConfig::default());
+        let images = crate::data::DigitDataset::generate(6, 4).images;
+        let mut pending = Vec::new();
+        for img in images {
+            pending.push(server.submit(img));
+        }
+        for rx in pending {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.logits.shape, vec![10]);
+            assert!(resp.batch_size >= 1);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.total_requests, 6);
+        assert!(metrics.throughput() > 0.0);
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+        let backend = RustBackend { model, mode: ExecMode::Fp32 };
+        let cfg = ServerConfig {
+            policy: crate::coordinator::batcher::BatchPolicy {
+                max_batch: 4,
+                linger: std::time::Duration::from_millis(20),
+            },
+        };
+        let mut server = InferenceServer::start(Box::new(backend), cfg);
+        let images = crate::data::DigitDataset::generate(8, 5).images;
+        let pending: Vec<_> = images.into_iter().map(|i| server.submit(i)).collect();
+        let sizes: Vec<usize> = pending.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.total_requests, 8);
+        // at least one response should have been served in a batch > 1
+        assert!(sizes.iter().any(|&s| s > 1), "no batching observed: {sizes:?}");
+    }
+}

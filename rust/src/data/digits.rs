@@ -1,0 +1,137 @@
+//! Procedural digit dataset (mnist-like), DESIGN.md §4.
+//!
+//! 28×28 grayscale digits rendered from 5×7 stroke-font bitmaps with random
+//! sub-pixel shift, scale jitter, stroke-intensity jitter and additive
+//! noise. Labels are the digit identities, so a small CNN can genuinely be
+//! *trained* on this set (the JAX build-time trainer uses the same
+//! generator, re-implemented in `python/compile/datagen.py` with identical
+//! glyphs — the Rust and Python sides share golden vectors in tests).
+
+use super::rng::Rng;
+use crate::tensor::Tensor;
+
+/// 5×7 glyphs for digits 0–9 (1 bit per cell, row-major, top to bottom).
+pub const GLYPHS: [[u8; 7]; 10] = [
+    // each row is 5 bits, MSB = leftmost column
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// A generated mnist-like dataset: images `[n, 1, 28, 28]`, labels `[n]`.
+pub struct DigitDataset {
+    pub images: Vec<Tensor>,
+    pub labels: Vec<usize>,
+}
+
+/// Render one 28×28 digit image with the given jitter parameters.
+pub fn render_digit(digit: usize, rng: &mut Rng) -> Tensor {
+    let glyph = &GLYPHS[digit % 10];
+    let mut img = vec![0f32; 28 * 28];
+    // random placement: glyph scaled ~3.2±0.6 px/cell, shifted ±3 px
+    let scale = rng.uniform_range(2.6, 3.8);
+    let ox = rng.uniform_range(2.0, 8.0);
+    let oy = rng.uniform_range(1.0, 5.0);
+    let intensity = rng.uniform_range(0.75, 1.0) as f32;
+    for y in 0..28 {
+        for x in 0..28 {
+            // map pixel back to glyph cell (bilinear-ish coverage)
+            let gx = (x as f64 - ox) / scale;
+            let gy = (y as f64 - oy) / scale;
+            if (0.0..5.0).contains(&gx) && (0.0..7.0).contains(&gy) {
+                let (cx, cy) = (gx as usize, gy as usize);
+                let bit = (glyph[cy] >> (4 - cx)) & 1;
+                if bit == 1 {
+                    // soft edges: fade near the cell boundary
+                    let fx = (gx - cx as f64 - 0.5).abs();
+                    let fy = (gy - cy as f64 - 0.5).abs();
+                    let soft = (1.0 - (fx.max(fy) * 0.6)) as f32;
+                    img[y * 28 + x] = intensity * soft.clamp(0.3, 1.0);
+                }
+            }
+        }
+    }
+    // additive noise + normalization roughly matching mnist preprocessing
+    for v in &mut img {
+        *v += (rng.normal() * 0.03) as f32;
+        *v = v.clamp(0.0, 1.0);
+    }
+    Tensor::from_vec(img, &[1, 28, 28])
+}
+
+impl DigitDataset {
+    /// Generate `n` labelled digit images from `seed`.
+    pub fn generate(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut images = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let digit = i % 10; // balanced classes
+            images.push(render_digit(digit, &mut rng));
+            labels.push(digit);
+        }
+        Self { images, labels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_are_deterministic() {
+        let a = DigitDataset::generate(10, 1);
+        let b = DigitDataset::generate(10, 1);
+        assert_eq!(a.images[3].data, b.images[3].data);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn digits_differ_across_seeds_and_classes() {
+        let a = DigitDataset::generate(20, 1);
+        let b = DigitDataset::generate(20, 2);
+        assert_ne!(a.images[0].data, b.images[0].data);
+        assert_ne!(a.images[0].data, a.images[1].data, "different digits must differ");
+    }
+
+    #[test]
+    fn images_are_normalized() {
+        let d = DigitDataset::generate(30, 5);
+        for img in &d.images {
+            assert_eq!(img.shape, vec![1, 28, 28]);
+            assert!(img.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(img.energy() > 1.0, "digit must have visible strokes");
+        }
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let d = DigitDataset::generate(100, 3);
+        for digit in 0..10 {
+            assert_eq!(d.labels.iter().filter(|&&l| l == digit).count(), 10);
+        }
+    }
+
+    #[test]
+    fn same_class_varies_by_jitter() {
+        let d = DigitDataset::generate(30, 9);
+        // samples 0, 10, 20 are all digit 0 but jittered differently
+        assert_ne!(d.images[0].data, d.images[10].data);
+        assert_ne!(d.images[10].data, d.images[20].data);
+    }
+}

@@ -1,0 +1,106 @@
+//! ImageNet-statistics input generator, DESIGN.md §4.
+//!
+//! The large-network experiments (VGG-16, ResNets, GoogLeNet) need inputs
+//! whose *value distribution* resembles mean-subtracted natural images:
+//! spatially correlated, heavy-tailed, per-channel offsets. We synthesise
+//! them as multi-octave value noise (random low-resolution grids,
+//! bilinearly upsampled and summed), which reproduces the 1/f-ish spatial
+//! spectrum of natural images — the property that matters for BFP because
+//! it controls the block max / mean ratio that drives quantization error.
+
+use super::rng::Rng;
+use crate::tensor::Tensor;
+
+/// One synthetic "natural" image, `[3, size, size]`, roughly
+/// mean-subtracted-RGB distributed (values ~ [-120, 130] like Caffe's
+/// BGR-minus-mean inputs).
+pub fn imagenet_like_image(size: usize, rng: &mut Rng) -> Tensor {
+    let mut img = vec![0f32; 3 * size * size];
+    // channel means of ImageNet BGR mean subtraction leave slight offsets
+    let chan_offset = [rng.normal() * 8.0, rng.normal() * 8.0, rng.normal() * 8.0];
+    for c in 0..3 {
+        let plane = &mut img[c * size * size..(c + 1) * size * size];
+        // multi-octave value noise: grids of 4, 8, 16 cells
+        for (octave, amp) in [(4usize, 60.0f64), (8, 30.0), (16, 15.0)] {
+            let g = octave + 1;
+            let grid: Vec<f64> = (0..g * g).map(|_| rng.normal()).collect();
+            for y in 0..size {
+                for x in 0..size {
+                    let gy = y as f64 / size as f64 * octave as f64;
+                    let gx = x as f64 / size as f64 * octave as f64;
+                    let (y0, x0) = (gy as usize, gx as usize);
+                    let (fy, fx) = (gy - y0 as f64, gx - x0 as f64);
+                    let v00 = grid[y0 * g + x0];
+                    let v01 = grid[y0 * g + x0 + 1];
+                    let v10 = grid[(y0 + 1) * g + x0];
+                    let v11 = grid[(y0 + 1) * g + x0 + 1];
+                    let v = v00 * (1.0 - fy) * (1.0 - fx)
+                        + v01 * (1.0 - fy) * fx
+                        + v10 * fy * (1.0 - fx)
+                        + v11 * fy * fx;
+                    plane[y * size + x] += (v * amp) as f64 as f32;
+                }
+            }
+        }
+        // pixel noise + channel offset, clamp to the mean-subtracted range
+        for v in plane.iter_mut() {
+            *v += (rng.normal() * 6.0) as f32 + chan_offset[c] as f32;
+            *v = v.clamp(-123.0, 132.0);
+        }
+    }
+    Tensor::from_vec(img, &[3, size, size])
+}
+
+/// A batch of `n` imagenet-like images.
+pub fn imagenet_like_batch(n: usize, size: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed ^ 0x1A6E_7E57);
+    (0..n).map(|_| imagenet_like_image(size, &mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = imagenet_like_batch(2, 32, 9);
+        let b = imagenet_like_batch(2, 32, 9);
+        assert_eq!(a[1].data, b[1].data);
+    }
+
+    #[test]
+    fn shape_and_range() {
+        let imgs = imagenet_like_batch(3, 64, 1);
+        for img in &imgs {
+            assert_eq!(img.shape, vec![3, 64, 64]);
+            assert!(img.data.iter().all(|&v| (-123.0..=132.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn spatially_correlated() {
+        // neighbouring pixels must correlate far more than distant ones
+        let img = &imagenet_like_batch(1, 64, 7)[0];
+        let plane = &img.data[0..64 * 64];
+        let mut near = 0f64;
+        let mut far = 0f64;
+        let mean: f64 = plane.iter().map(|&v| v as f64).sum::<f64>() / plane.len() as f64;
+        for y in 0..63 {
+            for x in 0..32 {
+                let a = plane[y * 64 + x] as f64 - mean;
+                near += a * (plane[y * 64 + x + 1] as f64 - mean);
+                far += a * (plane[y * 64 + x + 31] as f64 - mean);
+            }
+        }
+        assert!(near.abs() > 2.0 * far.abs(), "near={near} far={far}");
+    }
+
+    #[test]
+    fn wide_dynamic_range() {
+        // BFP cares about max/mean ratio; natural-image stats are heavy-ish
+        let img = &imagenet_like_batch(1, 64, 3)[0];
+        let ms = img.mean_square().sqrt();
+        let max = img.max_abs() as f64;
+        assert!(max / ms > 1.5, "dynamic range too flat: {}", max / ms);
+    }
+}

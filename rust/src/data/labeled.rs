@@ -1,0 +1,95 @@
+//! Labelled imagenet-like dataset for the random-features evaluation of
+//! the large networks (DESIGN.md §4).
+//!
+//! Each image is multi-octave natural-image noise ([`super::imagenet_like`])
+//! plus a class-conditional texture pattern, giving a 10-way task that a
+//! linear readout on frozen conv features can genuinely learn — so
+//! "accuracy drop" has trained-network semantics (real margins) instead
+//! of the flip-rate of an arbitrary random projection.
+
+use super::rng::Rng;
+use super::textures::render_texture;
+use crate::tensor::Tensor;
+
+/// Amplitude of the class pattern relative to the ±120 image range.
+const PATTERN_AMPLITUDE: f32 = 95.0;
+
+/// One labelled image: natural-noise background + class texture.
+pub fn labeled_image(class: usize, size: usize, rng: &mut Rng) -> Tensor {
+    let mut img = super::imagenet_like::imagenet_like_image(size, rng);
+    let pattern = render_texture(class, rng); // [3, 32, 32] in [0,1]
+    for c in 0..3 {
+        for y in 0..size {
+            for x in 0..size {
+                // nearest-neighbour stretch of the 32×32 pattern
+                let py = y * 32 / size;
+                let px = x * 32 / size;
+                let p = pattern.data[(c * 32 + py) * 32 + px] - 0.5;
+                let v = &mut img.data[(c * size + y) * size + x];
+                *v = (*v + p * 2.0 * PATTERN_AMPLITUDE).clamp(-123.0, 132.0);
+            }
+        }
+    }
+    img
+}
+
+/// A balanced labelled set: `(images, labels)` over 10 classes.
+pub fn labeled_imagenet_like(n: usize, size: usize, seed: u64) -> (Vec<Tensor>, Vec<usize>) {
+    let mut rng = Rng::new(seed ^ 0x1AB_E1ED);
+    let mut images = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        images.push(labeled_image(class, size, &mut rng));
+        labels.push(class);
+    }
+    (images, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let (a, la) = labeled_imagenet_like(20, 32, 3);
+        let (b, _) = labeled_imagenet_like(20, 32, 3);
+        assert_eq!(a[7].data, b[7].data);
+        for c in 0..10 {
+            assert_eq!(la.iter().filter(|&&l| l == c).count(), 2);
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_in_pixel_space() {
+        // same-class images correlate more than cross-class (pattern term)
+        let (imgs, labels) = labeled_imagenet_like(40, 32, 5);
+        let dot = |a: &Tensor, b: &Tensor| -> f64 {
+            a.data.iter().zip(&b.data).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+        };
+        let mut same = 0f64;
+        let mut diff = 0f64;
+        let mut ns = 0;
+        let mut nd = 0;
+        for i in 0..imgs.len() {
+            for j in (i + 1)..imgs.len() {
+                if labels[i] == labels[j] {
+                    same += dot(&imgs[i], &imgs[j]);
+                    ns += 1;
+                } else {
+                    diff += dot(&imgs[i], &imgs[j]);
+                    nd += 1;
+                }
+            }
+        }
+        assert!(same / ns as f64 > diff / nd as f64, "class structure missing");
+    }
+
+    #[test]
+    fn values_in_caffe_range() {
+        let (imgs, _) = labeled_imagenet_like(5, 32, 1);
+        for img in imgs {
+            assert!(img.data.iter().all(|&v| (-123.0..=132.0).contains(&v)));
+        }
+    }
+}

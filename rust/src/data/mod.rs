@@ -1,0 +1,16 @@
+//! Synthetic workloads substituting for the paper's proprietary data
+//! (DESIGN.md §4): deterministic RNG, a procedural digit dataset
+//! (mnist-like), a procedural texture dataset (cifar-like) and
+//! ImageNet-statistics activation generators.
+
+pub mod digits;
+pub mod labeled;
+pub mod imagenet_like;
+pub mod rng;
+pub mod textures;
+
+pub use digits::DigitDataset;
+pub use imagenet_like::imagenet_like_batch;
+pub use labeled::labeled_imagenet_like;
+pub use rng::Rng;
+pub use textures::TextureDataset;

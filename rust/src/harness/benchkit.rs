@@ -1,0 +1,121 @@
+//! Minimal benchmark harness (criterion is not available in the offline
+//! image): warmup + timed repetitions with mean / min / throughput
+//! reporting. Used by every `rust/benches/*.rs` target via `cargo bench`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+    /// Optional work units per iteration (flops, bytes, elements…).
+    pub work_per_iter: Option<f64>,
+    pub work_unit: &'static str,
+}
+
+impl BenchResult {
+    /// Work units per second at the mean time.
+    pub fn rate(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.mean.as_secs_f64())
+    }
+
+    /// One aligned report line.
+    pub fn line(&self) -> String {
+        let rate = match self.rate() {
+            Some(r) if r >= 1e9 => format!("  {:8.2} G{}/s", r / 1e9, self.work_unit),
+            Some(r) if r >= 1e6 => format!("  {:8.2} M{}/s", r / 1e6, self.work_unit),
+            Some(r) => format!("  {:8.2} {}/s", r, self.work_unit),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10.3} ms/iter (min {:>8.3} ms, {} iters){}",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.iters,
+            rate
+        )
+    }
+}
+
+/// Configuration for a bench run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub min_time: Duration,
+    pub max_iters: u32,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { min_time: Duration::from_millis(400), max_iters: 1000 }
+    }
+}
+
+/// Time `f` until `opts.min_time` has elapsed (≥3 iterations), printing
+/// and returning the measurement. A `std::hint::black_box` inside `f` is
+/// the caller's responsibility.
+pub fn bench<F: FnMut()>(name: &str, work_per_iter: Option<f64>, work_unit: &'static str, mut f: F) -> BenchResult {
+    bench_opts(name, work_per_iter, work_unit, BenchOpts::default(), &mut f)
+}
+
+/// [`bench`] with explicit options.
+pub fn bench_opts<F: FnMut()>(
+    name: &str,
+    work_per_iter: Option<f64>,
+    work_unit: &'static str,
+    opts: BenchOpts,
+    f: &mut F,
+) -> BenchResult {
+    // warmup
+    f();
+    let mut iters = 0u32;
+    let mut total = Duration::ZERO;
+    let mut min = Duration::MAX;
+    while (total < opts.min_time || iters < 3) && iters < opts.max_iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        total += dt;
+        min = min.min(dt);
+        iters += 1;
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters,
+        min,
+        work_per_iter,
+        work_unit,
+    };
+    println!("{}", result.line());
+    result
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_opts(
+            "spin",
+            Some(1000.0),
+            "op",
+            BenchOpts { min_time: Duration::from_millis(5), max_iters: 50 },
+            &mut || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+        );
+        assert!(r.iters >= 3);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.rate().unwrap() > 0.0);
+    }
+}

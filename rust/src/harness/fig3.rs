@@ -1,0 +1,143 @@
+//! Figure 3 — normalized-magnitude energy distribution of the early
+//! VGG-16 layers (conv1_1, conv1_2, conv2_1, conv2_2).
+//!
+//! The paper uses this plot to explain conv1_2's outsized theory-vs-
+//! experiment deviation: its output energy concentrates near the maximum
+//! magnitude (strong filter/input correlation), breaking the independence
+//! assumption of §4.2.
+
+use super::report::Table;
+use crate::analysis::energy::EnergyHistogram;
+use crate::models::{Model, ModelId};
+use crate::nn::graph::Executor;
+use crate::nn::{ops, BatchNorm, Conv2d, Dense, Fp32Exec};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// FP32 executor that additionally captures named conv outputs.
+pub struct CaptureExec {
+    inner: Fp32Exec,
+    pub wanted: Vec<String>,
+    pub captured: HashMap<String, Vec<f32>>,
+}
+
+impl CaptureExec {
+    pub fn new(wanted: &[&str]) -> Self {
+        Self { inner: Fp32Exec, wanted: wanted.iter().map(|s| s.to_string()).collect(), captured: HashMap::new() }
+    }
+}
+
+impl Executor for CaptureExec {
+    type T = Tensor;
+    fn conv(&mut self, layer: &Conv2d, x: Tensor) -> Tensor {
+        let out = self.inner.conv(layer, x);
+        if self.wanted.iter().any(|w| w == &layer.name) {
+            self.captured.entry(layer.name.clone()).or_default().extend_from_slice(&out.data);
+        }
+        out
+    }
+    fn dense(&mut self, layer: &Dense, x: Tensor) -> Tensor {
+        self.inner.dense(layer, x)
+    }
+    fn batch_norm(&mut self, layer: &BatchNorm, x: Tensor) -> Tensor {
+        self.inner.batch_norm(layer, x)
+    }
+    fn relu(&mut self, x: Tensor) -> Tensor {
+        ops::relu(&x)
+    }
+    fn max_pool(&mut self, n: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        self.inner.max_pool(n, k, s, p, x)
+    }
+    fn avg_pool(&mut self, n: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        self.inner.avg_pool(n, k, s, p, x)
+    }
+    fn global_avg_pool(&mut self, x: Tensor) -> Tensor {
+        self.inner.global_avg_pool(x)
+    }
+    fn flatten(&mut self, x: Tensor) -> Tensor {
+        ops::flatten(&x)
+    }
+    fn add(&mut self, a: Tensor, b: Tensor) -> Tensor {
+        ops::add(&a, &b)
+    }
+    fn concat(&mut self, parts: Vec<Tensor>) -> Tensor {
+        ops::concat_channels(&parts)
+    }
+    fn softmax(&mut self, x: Tensor) -> Tensor {
+        ops::softmax(&x)
+    }
+    fn fork(&mut self, x: &Tensor) -> Tensor {
+        x.clone()
+    }
+}
+
+/// The four layers Figure 3 plots.
+pub const FIG3_LAYERS: [&str; 4] = ["conv1_1", "conv1_2", "conv2_1", "conv2_2"];
+
+/// Capture the Figure 3 layer outputs over a batch.
+pub fn capture(model: &Model, n_images: usize, seed: u64) -> HashMap<String, Vec<f32>> {
+    let size = model.input_shape[1];
+    let images = crate::data::imagenet_like_batch(n_images, size, seed ^ 0xF163);
+    let mut exec = CaptureExec::new(&FIG3_LAYERS);
+    for img in &images {
+        model.graph.execute(img.clone(), &mut exec);
+    }
+    exec.captured
+}
+
+/// Render the Figure 3 reproduction: per-layer energy fraction in the
+/// normalized-magnitude buckets of [0.8, 1.0] (the paper's plotted range).
+pub fn run(input_size: usize, n_images: usize, seed: u64, artifacts: &Path) -> Table {
+    let model = ModelId::Vgg16.build(input_size, seed, artifacts);
+    let captured = capture(&model, n_images, seed);
+    let bins = 50; // 0.02-wide buckets; [0.8, 1.0] = last 10
+    let mut t = Table::new(
+        format!("Figure 3 — energy distribution at normalized magnitude ≥ 0.8 ({n_images} images)"),
+        &["layer", "0.80-0.84", "0.84-0.88", "0.88-0.92", "0.92-0.96", "0.96-1.00", "total ≥0.8"],
+    );
+    for layer in FIG3_LAYERS {
+        let values = captured.get(layer).map(|v| v.as_slice()).unwrap_or(&[]);
+        let h = EnergyHistogram::compute(values, bins);
+        let bucket = |lo: f64| -> f64 {
+            h.edges
+                .iter()
+                .zip(&h.fractions)
+                .filter(|(e, _)| **e >= lo - 1e-9 && **e < lo + 0.04 - 1e-9)
+                .map(|(_, f)| f)
+                .sum()
+        };
+        let tail = h.tail_energy(0.8);
+        t.row(vec![
+            layer.to_string(),
+            format!("{:.4}", bucket(0.80)),
+            format!("{:.4}", bucket(0.84)),
+            format!("{:.4}", bucket(0.88)),
+            format!("{:.4}", bucket(0.92)),
+            format!("{:.4}", bucket(0.96)),
+            format!("{tail:.4}"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn captures_all_four_layers() {
+        let model = ModelId::Vgg16.build(32, 1, Path::new("artifacts"));
+        let cap = capture(&model, 1, 2);
+        for l in FIG3_LAYERS {
+            assert!(cap.contains_key(l), "missing {l}");
+            assert!(!cap[l].is_empty());
+        }
+    }
+
+    #[test]
+    fn table_has_four_rows() {
+        let t = run(32, 1, 3, Path::new("artifacts"));
+        assert_eq!(t.rows.len(), 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment drivers that regenerate every table and figure of the
+//! paper's evaluation section (see DESIGN.md §3 for the index).
+
+pub mod benchkit;
+pub mod fig3;
+pub mod readout;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+pub use report::Table;

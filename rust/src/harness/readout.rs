@@ -1,0 +1,190 @@
+//! Linear-readout training on frozen conv features (DESIGN.md §4).
+//!
+//! The large networks carry synthetic conv weights; to give their
+//! accuracy numbers trained-network semantics we fit the final dense
+//! layer (softmax regression) on the class-conditional dataset of
+//! [`crate::data::labeled`]. The conv stack — the part BFP perturbs —
+//! stays frozen, so quantization-error propagation is unchanged while
+//! logit margins become realistic.
+
+use crate::models::Model;
+use crate::nn::{Block, Dense, Fp32Exec};
+use crate::tensor::Tensor;
+
+/// Split a sequential model into (feature extractor, final dense).
+/// Returns `None` if the graph does not end in a Dense layer.
+pub fn split_trailing_dense(graph: Block) -> Option<(Block, Dense)> {
+    match graph {
+        Block::Seq(mut items) => match items.pop()? {
+            Block::Dense(d) => Some((Block::Seq(items), d)),
+            last => {
+                items.push(last);
+                None
+            }
+        },
+        _ => None,
+    }
+}
+
+/// Train a softmax-regression head on precomputed features.
+/// Plain full-batch gradient descent; features are L2-normalised
+/// internally for conditioning.
+pub fn train_linear_head(
+    features: &[Vec<f32>],
+    labels: &[usize],
+    classes: usize,
+    epochs: usize,
+    lr: f32,
+) -> Dense {
+    assert_eq!(features.len(), labels.len());
+    let n = features.len();
+    let dim = features[0].len();
+    // normalise features to unit RMS (shared scale, preserved at eval)
+    let rms = (features.iter().flat_map(|f| f.iter()).map(|&v| (v as f64).powi(2)).sum::<f64>()
+        / (n * dim) as f64)
+        .sqrt()
+        .max(1e-12) as f32;
+    let mut w = vec![0f32; classes * dim];
+    let mut b = vec![0f32; classes];
+    let mut probs = vec![0f32; classes];
+    for _ in 0..epochs {
+        let mut gw = vec![0f32; classes * dim];
+        let mut gb = vec![0f32; classes];
+        for (f, &y) in features.iter().zip(labels) {
+            // logits
+            let mut maxv = f32::NEG_INFINITY;
+            for c in 0..classes {
+                let row = &w[c * dim..(c + 1) * dim];
+                let mut acc = b[c];
+                for (wv, fv) in row.iter().zip(f) {
+                    acc += wv * fv / rms;
+                }
+                probs[c] = acc;
+                maxv = maxv.max(acc);
+            }
+            let mut sum = 0f32;
+            for p in probs.iter_mut() {
+                *p = (*p - maxv).exp();
+                sum += *p;
+            }
+            for (c, p) in probs.iter_mut().enumerate() {
+                *p /= sum;
+                let err = *p - if c == y { 1.0 } else { 0.0 };
+                gb[c] += err;
+                let grow = &mut gw[c * dim..(c + 1) * dim];
+                for (g, fv) in grow.iter_mut().zip(f) {
+                    *g += err * fv / rms;
+                }
+            }
+        }
+        let scale = lr / n as f32;
+        for (wv, g) in w.iter_mut().zip(&gw) {
+            *wv -= scale * g;
+        }
+        for (bv, g) in b.iter_mut().zip(&gb) {
+            *bv -= scale * g;
+        }
+    }
+    // fold the RMS normalisation into the weights
+    for wv in w.iter_mut() {
+        *wv /= rms;
+    }
+    Dense::new("readout", Tensor::from_vec(w, &[classes, dim]), b)
+}
+
+/// Replace a model's final dense layer with a head trained on the
+/// labelled imagenet-like task. Returns the new model (10 classes) or
+/// the original when the graph has no trailing dense.
+pub fn with_trained_readout(model: Model, n_train: usize, seed: u64) -> Model {
+    let size = model.input_shape[1];
+    let Some((prefix, _)) = split_trailing_dense(model.graph) else {
+        panic!("model {} does not end in a dense layer", model.name);
+    };
+    let (images, labels) = crate::data::labeled::labeled_imagenet_like(n_train, size, seed);
+    let features: Vec<Vec<f32>> = images
+        .iter()
+        .map(|img| prefix.execute(img.clone(), &mut Fp32Exec).data)
+        .collect();
+    let head = train_linear_head(&features, &labels, 10, 1000, 2.0);
+    let mut items = match prefix {
+        Block::Seq(items) => items,
+        other => vec![other],
+    };
+    items.push(Block::Dense(head));
+    Model {
+        name: model.name,
+        graph: Block::Seq(items),
+        input_shape: model.input_shape,
+        num_classes: 10,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn split_returns_prefix_and_head() {
+        let d = Dense::new("fc", Tensor::from_vec(vec![1.0; 4], &[2, 2]), vec![]);
+        let g = Block::Seq(vec![Block::ReLU, Block::Dense(d)]);
+        let (prefix, head) = split_trailing_dense(g).unwrap();
+        assert_eq!(head.name, "fc");
+        assert!(matches!(prefix, Block::Seq(items) if items.len() == 1));
+    }
+
+    #[test]
+    fn split_rejects_non_dense_tail() {
+        let g = Block::Seq(vec![Block::ReLU]);
+        assert!(split_trailing_dense(g).is_none());
+    }
+
+    #[test]
+    fn linear_head_learns_separable_data() {
+        // two gaussian blobs in 8-d
+        let mut rng = Rng::new(4);
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..60 {
+            let c = i % 2;
+            let mut f = rng.normal_vec(8, 0.3);
+            f[0] += if c == 0 { 1.0 } else { -1.0 };
+            feats.push(f);
+            labels.push(c);
+        }
+        let head = train_linear_head(&feats, &labels, 2, 200, 1.0);
+        let correct = feats
+            .iter()
+            .zip(&labels)
+            .filter(|(f, &y)| {
+                let out = head.forward_fp32(&Tensor::from_vec((*f).clone(), &[8]));
+                (out.data[1] > out.data[0]) as usize == y
+            })
+            .count();
+        assert!(correct >= 55, "linear head only {correct}/60");
+    }
+
+    #[test]
+    fn readout_makes_vgg_accurate() {
+        // tiny check: trained readout beats chance on held-out data
+        let model = crate::models::ModelId::Vgg16.build(32, 1, std::path::Path::new("artifacts"));
+        let model = with_trained_readout(model, 160, 7);
+        let (images, labels) = crate::data::labeled::labeled_imagenet_like(30, 32, 991);
+        let correct = images
+            .iter()
+            .zip(&labels)
+            .filter(|(img, &y)| {
+                let out = model.graph.execute((*img).clone(), &mut Fp32Exec);
+                let pred = out
+                    .data
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                pred == y
+            })
+            .count();
+        assert!(correct >= 9, "readout vgg only {correct}/30 (chance = 3)");
+    }
+}

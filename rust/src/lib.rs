@@ -1,0 +1,44 @@
+//! # bfp-cnn — Block Floating Point arithmetic for CNN accelerators
+//!
+//! Reproduction of *"Computation Error Analysis of Block Floating Point
+//! Arithmetic Oriented Convolution Neural Network Accelerator Design"*
+//! (Song, Liu & Wang — AAAI 2018).
+//!
+//! The crate is organised as the three-layer stack described in `DESIGN.md`:
+//!
+//! * [`bfp`] — the numeric substrate: block formatting (shared-exponent
+//!   quantization), exact fixed-point GEMM over aligned mantissas, and the
+//!   matrix-partition schemes of the paper's eqs. (2)–(5) with their
+//!   storage cost model (Table 1).
+//! * [`tensor`] + [`nn`] + [`models`] — a from-scratch CNN inference stack
+//!   (im2col convolution, pooling, batch-norm, residual / inception
+//!   composition) plus structural definitions of the six networks the
+//!   paper evaluates (VGG-16, ResNet-18/50, GoogLeNet, LeNet/mnist,
+//!   CIFAR-10).
+//! * [`analysis`] — the paper's §4 three-stage error model: quantization
+//!   SNR (eqs. 8–13), single-layer output SNR (eq. 18) and multi-layer
+//!   propagation (eqs. 19–20), along with the empirical dual-forward
+//!   instrumentation that produces Table 4 and Figure 3.
+//! * [`coordinator`] + [`runtime`] — the serving layer: a batched
+//!   inference engine that can execute either the pure-Rust path or the
+//!   AOT-compiled JAX/Pallas artifacts through PJRT.
+//! * [`harness`] — drivers that regenerate every table and figure of the
+//!   paper's evaluation section.
+//! * [`data`] — synthetic workload generators (procedural digit / texture
+//!   datasets, ImageNet-statistics activation generators) substituting for
+//!   the proprietary datasets per `DESIGN.md` §4.
+
+pub mod analysis;
+pub mod bfp;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod models;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+
+pub use bfp::{BfpBlock, BfpFormat, Rounding};
+pub use quant::BfpConfig;
+pub use tensor::Tensor;

@@ -1,0 +1,282 @@
+//! `repro` — the CLI over the bfp-cnn library.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts:
+//!
+//! ```text
+//! repro table1 [--lw 8] [--li 8]
+//! repro table2 [--images 20] [--size 32] [--seed 1]
+//! repro table3 [--model vgg16|resnet18|...|all] [--images 20] [--size 32]
+//! repro table4 [--images 5] [--size 32]
+//! repro fig3   [--images 5] [--size 32]
+//! repro serve  [--model lenet] [--requests 64] [--mode bfp|fp32] [--batch 8]
+//! repro e2e    [--requests 64] [--artifacts artifacts]
+//! repro all    [--images 10]
+//! ```
+
+use bfp_cnn::coordinator::engine::ExecMode;
+use bfp_cnn::coordinator::server::{Backend, InferenceServer, RustBackend, ServerConfig};
+use bfp_cnn::harness::{fig3, table1, table2, table3, table4};
+use bfp_cnn::models::ModelId;
+use bfp_cnn::quant::BfpConfig;
+use std::path::{Path, PathBuf};
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn model_by_name(name: &str) -> Option<ModelId> {
+    ModelId::all().into_iter().find(|m| m.name() == name)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let size: usize = args.get("size", 32);
+    let seed: u64 = args.get("seed", 1);
+
+    match cmd {
+        "table1" => {
+            for t in table1::run(args.get("lw", 8), args.get("li", 8)) {
+                t.print();
+                println!();
+            }
+        }
+        "table2" => {
+            let images: usize = args.get("images", 20);
+            table2::run(size, images, seed, &artifacts).print();
+        }
+        "table3" => {
+            let images: usize = args.get("images", 20);
+            let which = args.get_str("model", "all");
+            let ids: Vec<ModelId> = if which == "all" {
+                ModelId::all().to_vec()
+            } else {
+                vec![model_by_name(&which).unwrap_or_else(|| {
+                    eprintln!("unknown model {which}; choose from:");
+                    for m in ModelId::all() {
+                        eprintln!("  {}", m.name());
+                    }
+                    std::process::exit(2);
+                })]
+            };
+            for id in ids {
+                let t0 = std::time::Instant::now();
+                table3::run_model(id, size, images, seed, &artifacts).print();
+                println!("({:.1}s)\n", t0.elapsed().as_secs_f64());
+            }
+        }
+        "table4" => {
+            let images: usize = args.get("images", 5);
+            let (t, dev) = table4::run(size, images, seed, &artifacts);
+            t.print();
+            println!("\nmax |multi-model − experimental| output deviation: {dev:.2} dB (paper: ≤ 8.9 dB)");
+        }
+        "fig3" => {
+            let images: usize = args.get("images", 5);
+            fig3::run(size, images, seed, &artifacts).print();
+        }
+        "serve" => {
+            let requests: usize = args.get("requests", 64);
+            let batch: usize = args.get("batch", 8);
+            let mode = match args.get_str("mode", "bfp").as_str() {
+                "fp32" => ExecMode::Fp32,
+                _ => ExecMode::Bfp(BfpConfig::new(args.get("lw", 8), args.get("li", 8))),
+            };
+            let id = model_by_name(&args.get_str("model", "lenet")).expect("unknown model");
+            serve_demo(id, size, seed, &artifacts, requests, batch, mode);
+        }
+        "e2e" => {
+            let requests: usize = args.get("requests", 64);
+            if let Err(e) = e2e(&artifacts, requests, args.get("batch", 8)) {
+                eprintln!("e2e failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        "all" => {
+            let images: usize = args.get("images", 10);
+            for t in table1::run(8, 8) {
+                t.print();
+                println!();
+            }
+            table2::run(size, images, seed, &artifacts).print();
+            println!();
+            for id in ModelId::all() {
+                table3::run_model(id, size, images, seed, &artifacts).print();
+                println!();
+            }
+            let (t, dev) = table4::run(size, images.min(5), seed, &artifacts);
+            t.print();
+            println!("max deviation: {dev:.2} dB\n");
+            fig3::run(size, images.min(5), seed, &artifacts).print();
+        }
+        _ => {
+            eprintln!("usage: repro <table1|table2|table3|table4|fig3|serve|e2e|all> [--flags]");
+            eprintln!("see rust/src/main.rs docs for flags");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Coordinator demo: serve a stream of requests through the dynamic
+/// batcher and print the metrics line.
+fn serve_demo(id: ModelId, size: usize, seed: u64, artifacts: &Path, requests: usize, batch: usize, mode: ExecMode) {
+    let model = id.build(size, seed, artifacts);
+    let input_shape = model.input_shape.clone();
+    let backend = RustBackend { model, mode };
+    println!("serving {} requests on {} ...", requests, backend.describe());
+    let mut server = InferenceServer::start(
+        Box::new(backend),
+        ServerConfig {
+            policy: bfp_cnn::coordinator::batcher::BatchPolicy {
+                max_batch: batch,
+                linger: std::time::Duration::from_millis(2),
+            },
+        },
+    );
+    let images: Vec<bfp_cnn::tensor::Tensor> = match id {
+        ModelId::Lenet => bfp_cnn::data::DigitDataset::generate(requests, seed).images,
+        ModelId::Cifar10 => bfp_cnn::data::TextureDataset::generate(requests, seed).images,
+        _ => bfp_cnn::data::imagenet_like_batch(requests, input_shape[1], seed),
+    };
+    let pending: Vec<_> = images.into_iter().map(|img| server.submit(img)).collect();
+    for rx in pending {
+        rx.recv().expect("response");
+    }
+    let metrics = server.shutdown();
+    println!("{}", metrics.summary());
+}
+
+/// End-to-end driver: PJRT-compiled LeNet (JAX/Pallas artifact) served
+/// through the coordinator on the procedural digit workload, reporting
+/// accuracy and latency. See EXPERIMENTS.md §E2E.
+fn e2e(artifacts: &Path, requests: usize, batch: usize) -> anyhow::Result<()> {
+    use bfp_cnn::runtime::PjrtRuntime;
+
+    let hlo = artifacts.join("lenet_fwd_b8.hlo.txt");
+    anyhow::ensure!(hlo.exists(), "{} missing — run `make artifacts` first", hlo.display());
+    let manifest = artifacts.join("lenet_fwd_b8.args.txt");
+    let weights = bfp_cnn::models::weights_io::WeightBundle::load(&artifacts.join("lenet_weights.bfpw"))?;
+
+    // Weight arguments in manifest order (the artifact takes weights as
+    // parameters — see aot.py), followed by the image batch.
+    let mut weight_args: Vec<(Vec<f32>, Vec<i64>)> = Vec::new();
+    for line in std::fs::read_to_string(&manifest)?.lines() {
+        let mut parts = line.split_whitespace();
+        let name = parts.next().unwrap_or("");
+        if name == "__input__" {
+            continue;
+        }
+        let shape: Vec<i64> = parts.map(|d| d.parse().unwrap()).collect();
+        weight_args.push((weights.vec(name)?, shape));
+    }
+
+    // PJRT backend: pad each batch to the lowered batch size (8).
+    struct PjrtBackend {
+        art: bfp_cnn::runtime::CompiledArtifact,
+        weight_args: Vec<(Vec<f32>, Vec<i64>)>,
+        lowered_batch: usize,
+    }
+    impl Backend for PjrtBackend {
+        fn infer_batch(&mut self, images: &[bfp_cnn::tensor::Tensor]) -> Vec<bfp_cnn::tensor::Tensor> {
+            let b = self.lowered_batch;
+            let per: usize = images[0].len();
+            let mut flat = vec![0f32; b * per];
+            for (i, img) in images.iter().take(b).enumerate() {
+                flat[i * per..(i + 1) * per].copy_from_slice(&img.data);
+            }
+            let shape = [b as i64, 1, 28, 28];
+            let mut args: Vec<(&[f32], &[i64])> = self
+                .weight_args
+                .iter()
+                .map(|(d, s)| (d.as_slice(), s.as_slice()))
+                .collect();
+            args.push((&flat, &shape));
+            let outs = self.art.run_f32(&args).expect("pjrt execute");
+            let logits = &outs[0];
+            let classes = logits.len() / b;
+            images
+                .iter()
+                .take(b)
+                .enumerate()
+                .map(|(i, _)| {
+                    bfp_cnn::tensor::Tensor::from_vec(logits[i * classes..(i + 1) * classes].to_vec(), &[classes])
+                })
+                .collect()
+        }
+        fn describe(&self) -> String {
+            format!("pjrt/{}", self.art.name)
+        }
+    }
+
+    let ds = bfp_cnn::data::DigitDataset::generate(requests, 777);
+    // PJRT handles are thread-pinned: build client + executable on the
+    // worker thread via the factory entry point.
+    let mut server = InferenceServer::start_with(
+        move || {
+            let rt = PjrtRuntime::cpu().expect("PJRT cpu client");
+            println!("PJRT: {}", rt.describe());
+            let art = rt.load_hlo_text(&hlo).expect("compile artifact");
+            Box::new(PjrtBackend { art, weight_args, lowered_batch: 8 })
+        },
+        ServerConfig {
+            policy: bfp_cnn::coordinator::batcher::BatchPolicy {
+                max_batch: batch.min(8),
+                linger: std::time::Duration::from_millis(2),
+            },
+        },
+    );
+    let pending: Vec<_> = ds.images.iter().map(|img| server.submit(img.clone())).collect();
+    let mut correct = 0usize;
+    for (rx, &label) in pending.into_iter().zip(&ds.labels) {
+        let resp = rx.recv()?;
+        if argmax(&resp.logits.data) == label {
+            correct += 1;
+        }
+    }
+    let metrics = server.shutdown();
+    println!("accuracy: {}/{} = {:.4}", correct, requests, correct as f64 / requests as f64);
+    println!("{}", metrics.summary());
+    Ok(())
+}

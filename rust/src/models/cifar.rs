@@ -1,0 +1,95 @@
+//! Small CIFAR-10-class network — the "cifar10" column of Table 3.
+//!
+//! Architecture (shared with `python/compile/model.py`):
+//!
+//! ```text
+//! conv1: 16×3×3×3  p1 → ReLU → maxpool 2×2
+//! conv2: 32×16×3×3 p1 → ReLU → maxpool 2×2
+//! conv3: 64×32×3×3 p1 → ReLU → maxpool 2×2
+//! fc1:   64×1024 → ReLU
+//! fc2:   10×64
+//! ```
+
+use super::init;
+use super::weights_io::WeightBundle;
+use super::zoo::Model;
+use crate::data::rng::Rng;
+use crate::nn::{Block, Conv2d, Dense};
+use std::path::Path;
+
+/// Build the cifar net, from a trained bundle when available.
+pub fn cifar_net(weights: Option<&WeightBundle>, seed: u64) -> Model {
+    let graph = match weights {
+        Some(w) => graph_from_bundle(w).expect("malformed cifar weight bundle"),
+        None => synthetic_graph(seed),
+    };
+    Model { name: "cifar10".into(), graph, input_shape: vec![3, 32, 32], num_classes: 10 }
+}
+
+/// Load from `artifacts/` when present, else synthetic.
+pub fn cifar_from_artifacts(dir: &Path, seed: u64) -> Model {
+    let path = dir.join("cifar_weights.bfpw");
+    match WeightBundle::load(&path) {
+        Ok(w) => cifar_net(Some(&w), seed),
+        Err(_) => cifar_net(None, seed),
+    }
+}
+
+fn graph_from_bundle(w: &WeightBundle) -> anyhow::Result<Block> {
+    Ok(assemble(
+        Conv2d::new("conv1", w.tensor("conv1_w")?, w.vec("conv1_b")?, 1, 1),
+        Conv2d::new("conv2", w.tensor("conv2_w")?, w.vec("conv2_b")?, 1, 1),
+        Conv2d::new("conv3", w.tensor("conv3_w")?, w.vec("conv3_b")?, 1, 1),
+        Dense::new("fc1", w.tensor("fc1_w")?, w.vec("fc1_b")?),
+        Dense::new("fc2", w.tensor("fc2_w")?, w.vec("fc2_b")?),
+    ))
+}
+
+fn synthetic_graph(seed: u64) -> Block {
+    let mut rng = Rng::new(seed ^ 0xC1FA_0001);
+    assemble(
+        init::conv2d("conv1", 16, 3, 3, 3, 1, 1, &mut rng),
+        init::conv2d("conv2", 32, 16, 3, 3, 1, 1, &mut rng),
+        init::conv2d("conv3", 64, 32, 3, 3, 1, 1, &mut rng),
+        init::dense("fc1", 64, 1024, &mut rng),
+        init::dense("fc2", 10, 64, &mut rng),
+    )
+}
+
+fn assemble(c1: Conv2d, c2: Conv2d, c3: Conv2d, fc1: Dense, fc2: Dense) -> Block {
+    Block::seq(vec![
+        Block::Conv(c1),
+        Block::ReLU,
+        Block::MaxPool { name: "pool1".into(), k: 2, s: 2, p: 0 },
+        Block::Conv(c2),
+        Block::ReLU,
+        Block::MaxPool { name: "pool2".into(), k: 2, s: 2, p: 0 },
+        Block::Conv(c3),
+        Block::ReLU,
+        Block::MaxPool { name: "pool3".into(), k: 2, s: 2, p: 0 },
+        Block::Flatten,
+        Block::Dense(fc1),
+        Block::ReLU,
+        Block::Dense(fc2),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Fp32Exec;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn forward_shape() {
+        let m = cifar_net(None, 1);
+        let x = Tensor::from_vec((0..3 * 32 * 32).map(|i| (i as f32 * 0.007).sin().abs()).collect(), &[3, 32, 32]);
+        let y = m.graph.execute(x, &mut Fp32Exec);
+        assert_eq!(y.shape, vec![10]);
+    }
+
+    #[test]
+    fn three_convs() {
+        assert_eq!(cifar_net(None, 1).graph.conv_count(), 3);
+    }
+}

@@ -1,0 +1,192 @@
+//! GoogLeNet v1 (Szegedy et al. 2015) with its three classifier heads.
+//!
+//! The paper's Table 3 reports top-1 separately for `loss1` (aux head
+//! after inception 4a), `loss2` (aux head after 4d) and `loss3` (the main
+//! head). We expose each head as its own [`Model`] sharing the same seed,
+//! so the trunk weights are identical across heads.
+
+use super::init;
+use super::zoo::Model;
+use crate::data::rng::Rng;
+use crate::nn::Block;
+
+/// Inception module: 1×1 / 1×1→3×3 / 1×1→5×5 / pool→1×1 branches.
+#[allow(clippy::too_many_arguments)]
+fn inception(name: &str, in_ch: usize, c1: usize, c3r: usize, c3: usize, c5r: usize, c5: usize, pp: usize, rng: &mut Rng) -> Block {
+    Block::Concat(vec![
+        Block::Seq(vec![
+            Block::Conv(init::conv2d(&format!("{name}_1x1"), c1, in_ch, 1, 1, 1, 0, rng)),
+            Block::ReLU,
+        ]),
+        Block::Seq(vec![
+            Block::Conv(init::conv2d(&format!("{name}_3x3r"), c3r, in_ch, 1, 1, 1, 0, rng)),
+            Block::ReLU,
+            Block::Conv(init::conv2d(&format!("{name}_3x3"), c3, c3r, 3, 3, 1, 1, rng)),
+            Block::ReLU,
+        ]),
+        Block::Seq(vec![
+            Block::Conv(init::conv2d(&format!("{name}_5x5r"), c5r, in_ch, 1, 1, 1, 0, rng)),
+            Block::ReLU,
+            Block::Conv(init::conv2d(&format!("{name}_5x5"), c5, c5r, 5, 5, 1, 2, rng)),
+            Block::ReLU,
+        ]),
+        Block::Seq(vec![
+            Block::MaxPool { name: format!("{name}_pool"), k: 3, s: 1, p: 1 },
+            Block::Conv(init::conv2d(&format!("{name}_poolproj"), pp, in_ch, 1, 1, 1, 0, rng)),
+            Block::ReLU,
+        ]),
+    ])
+}
+
+/// Which classifier head to attach.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Head {
+    /// Aux classifier branching after inception 4a.
+    Loss1,
+    /// Aux classifier branching after inception 4d.
+    Loss2,
+    /// The main head after inception 5b.
+    Loss3,
+}
+
+/// The canonical GoogLeNet inception parameter table
+/// (name, c1, c3r, c3, c5r, c5, pool-proj, output channels).
+const INCEPTIONS: [(&str, usize, usize, usize, usize, usize, usize); 9] = [
+    ("3a", 64, 96, 128, 16, 32, 32),
+    ("3b", 128, 128, 192, 32, 96, 64),
+    ("4a", 192, 96, 208, 16, 48, 64),
+    ("4b", 160, 112, 224, 24, 64, 64),
+    ("4c", 128, 128, 256, 24, 64, 64),
+    ("4d", 112, 144, 288, 32, 64, 64),
+    ("4e", 256, 160, 320, 32, 128, 128),
+    ("5a", 256, 160, 320, 32, 128, 128),
+    ("5b", 384, 192, 384, 48, 128, 128),
+];
+
+fn aux_head(name: &str, in_ch: usize, num_classes: usize, rng: &mut Rng) -> Vec<Block> {
+    vec![
+        // 5×5 avg pool stride 3 in the original; adapt kernel to the small
+        // spatial size by using global-avg + 1×1-equivalent dense stack.
+        Block::AvgPool { name: format!("{name}_pool"), k: 3, s: 2, p: 1 },
+        Block::Conv(init::conv2d(&format!("{name}_conv"), 128, in_ch, 1, 1, 1, 0, rng)),
+        Block::ReLU,
+        Block::GlobalAvgPool,
+        Block::Dense(init::dense(&format!("{name}_fc1"), 256, 128, rng)),
+        Block::ReLU,
+        Block::Dense(init::dense(&format!("{name}_fc2"), num_classes, 256, rng)),
+    ]
+}
+
+/// Build GoogLeNet with the requested head for `[3, s, s]` inputs
+/// (s divisible by 32).
+pub fn googlenet(head: Head, input_size: usize, num_classes: usize, seed: u64) -> Model {
+    assert_eq!(input_size % 32, 0);
+    let mut rng = Rng::new(seed ^ 0x6007_1e47);
+    let mut blocks = vec![
+        Block::Conv(init::conv2d("conv1", 64, 3, 7, 7, 2, 3, &mut rng)),
+        Block::ReLU,
+        Block::MaxPool { name: "pool1".into(), k: 3, s: 2, p: 1 },
+        Block::Conv(init::conv2d("conv2_reduce", 64, 64, 1, 1, 1, 0, &mut rng)),
+        Block::ReLU,
+        Block::Conv(init::conv2d("conv2", 192, 64, 3, 3, 1, 1, &mut rng)),
+        Block::ReLU,
+        Block::MaxPool { name: "pool2".into(), k: 3, s: 2, p: 1 },
+    ];
+    let mut in_ch = 192usize;
+    for (iname, c1, c3r, c3, c5r, c5, pp) in INCEPTIONS {
+        blocks.push(inception(&format!("inception_{iname}"), in_ch, c1, c3r, c3, c5r, c5, pp, &mut rng));
+        in_ch = c1 + c3 + c5 + pp;
+        // The trunk pools after 3b and 4e; heads branch after 4a / 4d.
+        if iname == "3b" || iname == "4e" {
+            blocks.push(Block::MaxPool { name: format!("pool_{iname}"), k: 3, s: 2, p: 1 });
+        }
+        if iname == "4a" && head == Head::Loss1 {
+            blocks.extend(aux_head("loss1", in_ch, num_classes, &mut rng));
+            return finish(head, blocks, input_size, num_classes);
+        }
+        if iname == "4d" && head == Head::Loss2 {
+            blocks.extend(aux_head("loss2", in_ch, num_classes, &mut rng));
+            return finish(head, blocks, input_size, num_classes);
+        }
+    }
+    blocks.push(Block::GlobalAvgPool);
+    blocks.push(Block::Dropout);
+    blocks.push(Block::Dense(init::dense("loss3_fc", num_classes, in_ch, &mut rng)));
+    finish(head, blocks, input_size, num_classes)
+}
+
+fn finish(head: Head, blocks: Vec<Block>, input_size: usize, num_classes: usize) -> Model {
+    let name = match head {
+        Head::Loss1 => "googlenet_loss1",
+        Head::Loss2 => "googlenet_loss2",
+        Head::Loss3 => "googlenet_loss3",
+    };
+    Model {
+        name: name.into(),
+        graph: Block::Seq(blocks),
+        input_shape: vec![3, input_size, input_size],
+        num_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Fp32Exec;
+    use crate::tensor::Tensor;
+
+    fn input(s: usize) -> Tensor {
+        Tensor::from_vec((0..3 * s * s).map(|i| (i as f32 * 0.013).sin() * 50.0).collect(), &[3, s, s])
+    }
+
+    #[test]
+    fn loss3_forward_shape() {
+        let m = googlenet(Head::Loss3, 32, 10, 1);
+        let y = m.graph.execute(input(32), &mut Fp32Exec);
+        assert_eq!(y.shape, vec![10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn loss1_branches_early() {
+        let m1 = googlenet(Head::Loss1, 32, 10, 1);
+        let m3 = googlenet(Head::Loss3, 32, 10, 1);
+        assert!(m1.graph.conv_count() < m3.graph.conv_count());
+        let y = m1.graph.execute(input(32), &mut Fp32Exec);
+        assert_eq!(y.shape, vec![10]);
+    }
+
+    #[test]
+    fn loss2_between() {
+        let m1 = googlenet(Head::Loss1, 32, 10, 1);
+        let m2 = googlenet(Head::Loss2, 32, 10, 1);
+        let m3 = googlenet(Head::Loss3, 32, 10, 1);
+        assert!(m1.graph.conv_count() < m2.graph.conv_count());
+        assert!(m2.graph.conv_count() < m3.graph.conv_count());
+        let y = m2.graph.execute(input(32), &mut Fp32Exec);
+        assert_eq!(y.shape, vec![10]);
+    }
+
+    #[test]
+    fn trunk_weights_shared_across_heads() {
+        // Same seed ⇒ the common prefix must have identical weights.
+        let m1 = googlenet(Head::Loss1, 32, 10, 42);
+        let m3 = googlenet(Head::Loss3, 32, 10, 42);
+        let mut w1 = Vec::new();
+        m1.graph.visit_convs(&mut |c| w1.push((c.name.clone(), c.weights.data.clone())));
+        let mut w3 = Vec::new();
+        m3.graph.visit_convs(&mut |c| w3.push((c.name.clone(), c.weights.data.clone())));
+        // every trunk conv in m1 (up to 4a) must appear identically in m3
+        for (name, data) in w1.iter().filter(|(n, _)| !n.starts_with("loss")) {
+            let found = w3.iter().find(|(n, _)| n == name).expect(name);
+            assert_eq!(&found.1, data, "trunk weight {name} differs between heads");
+        }
+    }
+
+    #[test]
+    fn full_conv_count() {
+        // stem 3 + 9 inceptions × 6 convs = 57
+        let m = googlenet(Head::Loss3, 32, 10, 1);
+        assert_eq!(m.graph.conv_count(), 57);
+    }
+}

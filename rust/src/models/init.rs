@@ -1,0 +1,80 @@
+//! Synthetic "pretrained" weight initialisation.
+//!
+//! Trained CNN weights are well modelled by zero-mean heavy-tailed
+//! distributions at Kaiming scale (`std = gain·sqrt(2/fan_in)`); we use a
+//! Laplacian with matching variance, which reproduces the block max /
+//! RMS ratio that determines BFP quantization error (DESIGN.md §4).
+
+use crate::data::rng::Rng;
+use crate::nn::{BatchNorm, Conv2d, Dense};
+use crate::tensor::Tensor;
+
+/// Laplacian weights at Kaiming scale for a conv `[m, c, kh, kw]`.
+pub fn conv2d(name: &str, m: usize, c: usize, kh: usize, kw: usize, stride: usize, padding: usize, rng: &mut Rng) -> Conv2d {
+    let fan_in = (c * kh * kw) as f64;
+    let std = (2.0 / fan_in).sqrt();
+    let scale = std / std::f64::consts::SQRT_2; // Laplacian var = 2·scale²
+    let w = rng.laplacian_vec(m * c * kh * kw, scale);
+    // small biases, as in trained nets
+    let b = rng.normal_vec(m, std * 0.1);
+    Conv2d::new(name, Tensor::from_vec(w, &[m, c, kh, kw]), b, stride, padding)
+}
+
+/// Laplacian weights at Kaiming scale for a dense `[out, inp]`.
+pub fn dense(name: &str, out: usize, inp: usize, rng: &mut Rng) -> Dense {
+    let std = (2.0 / inp as f64).sqrt();
+    let scale = std / std::f64::consts::SQRT_2;
+    let w = rng.laplacian_vec(out * inp, scale);
+    let b = rng.normal_vec(out, std * 0.1);
+    Dense::new(name, Tensor::from_vec(w, &[out, inp]), b)
+}
+
+/// Batch-norm with mildly jittered scale/shift (inference-folded stats of
+/// a trained net are near identity but not exactly).
+pub fn batch_norm(name: &str, c: usize, rng: &mut Rng) -> BatchNorm {
+    let scale = (0..c).map(|_| (1.0 + rng.normal() * 0.15) as f32).collect();
+    let shift = (0..c).map(|_| (rng.normal() * 0.1) as f32).collect();
+    BatchNorm::new(name, scale, shift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_kaiming_scale() {
+        let mut rng = Rng::new(1);
+        let c = conv2d("c", 64, 32, 3, 3, 1, 1, &mut rng);
+        let fan_in: f64 = 32.0 * 9.0;
+        let expect_std = (2.0 / fan_in).sqrt();
+        let n = c.weights.len() as f64;
+        let var = c.weights.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / n;
+        assert!((var.sqrt() - expect_std).abs() / expect_std < 0.1, "std {} vs {}", var.sqrt(), expect_std);
+    }
+
+    #[test]
+    fn weights_heavy_tailed() {
+        // Laplacian kurtosis ≈ 6 > Gaussian 3; check excess kurtosis > 1
+        let mut rng = Rng::new(2);
+        let c = conv2d("c", 128, 64, 3, 3, 1, 1, &mut rng);
+        let n = c.weights.len() as f64;
+        let var = c.weights.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / n;
+        let m4 = c.weights.data.iter().map(|&x| (x as f64).powi(4)).sum::<f64>() / n;
+        let kurt = m4 / (var * var);
+        assert!(kurt > 4.0, "kurtosis {kurt} not heavy-tailed");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = conv2d("c", 8, 4, 3, 3, 1, 1, &mut Rng::new(7));
+        let b = conv2d("c", 8, 4, 3, 3, 1, 1, &mut Rng::new(7));
+        assert_eq!(a.weights.data, b.weights.data);
+    }
+
+    #[test]
+    fn bn_near_identity() {
+        let bn = batch_norm("bn", 256, &mut Rng::new(3));
+        let mean_scale: f32 = bn.scale.iter().sum::<f32>() / 256.0;
+        assert!((mean_scale - 1.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,109 @@
+//! LeNet-style mnist network — the "mnist" column of Table 3.
+//!
+//! Architecture (shared bit-for-bit with `python/compile/model.py`, which
+//! trains it at build time on the procedural digit dataset):
+//!
+//! ```text
+//! conv1: 8×1×5×5  s1 p2 → ReLU → maxpool 2×2
+//! conv2: 16×8×5×5 s1 p2 → ReLU → maxpool 2×2
+//! fc1:   64×784 → ReLU
+//! fc2:   10×64
+//! ```
+
+use super::weights_io::WeightBundle;
+use super::zoo::Model;
+use super::init;
+use crate::data::rng::Rng;
+use crate::nn::{Block, Conv2d, Dense};
+use std::path::Path;
+
+/// Build LeNet. If `weights` is given (the JAX-trained bundle), use it;
+/// otherwise fall back to synthetic weights so tests run without
+/// artifacts.
+pub fn lenet(weights: Option<&WeightBundle>, seed: u64) -> Model {
+    let graph = match weights {
+        Some(w) => graph_from_bundle(w).expect("malformed lenet weight bundle"),
+        None => synthetic_graph(seed),
+    };
+    Model { name: "lenet".into(), graph, input_shape: vec![1, 28, 28], num_classes: 10 }
+}
+
+/// Convenience: load from the default artifact path when present.
+pub fn lenet_from_artifacts(dir: &Path, seed: u64) -> Model {
+    let path = dir.join("lenet_weights.bfpw");
+    match WeightBundle::load(&path) {
+        Ok(w) => lenet(Some(&w), seed),
+        Err(_) => lenet(None, seed),
+    }
+}
+
+fn graph_from_bundle(w: &WeightBundle) -> anyhow::Result<Block> {
+    Ok(assemble(
+        Conv2d::new("conv1", w.tensor("conv1_w")?, w.vec("conv1_b")?, 1, 2),
+        Conv2d::new("conv2", w.tensor("conv2_w")?, w.vec("conv2_b")?, 1, 2),
+        Dense::new("fc1", w.tensor("fc1_w")?, w.vec("fc1_b")?),
+        Dense::new("fc2", w.tensor("fc2_w")?, w.vec("fc2_b")?),
+    ))
+}
+
+fn synthetic_graph(seed: u64) -> Block {
+    let mut rng = Rng::new(seed ^ 0x1e4e_7000);
+    assemble(
+        init::conv2d("conv1", 8, 1, 5, 5, 1, 2, &mut rng),
+        init::conv2d("conv2", 16, 8, 5, 5, 1, 2, &mut rng),
+        init::dense("fc1", 64, 784, &mut rng),
+        init::dense("fc2", 10, 64, &mut rng),
+    )
+}
+
+fn assemble(conv1: Conv2d, conv2: Conv2d, fc1: Dense, fc2: Dense) -> Block {
+    Block::seq(vec![
+        Block::Conv(conv1),
+        Block::ReLU,
+        Block::MaxPool { name: "pool1".into(), k: 2, s: 2, p: 0 },
+        Block::Conv(conv2),
+        Block::ReLU,
+        Block::MaxPool { name: "pool2".into(), k: 2, s: 2, p: 0 },
+        Block::Flatten,
+        Block::Dense(fc1),
+        Block::ReLU,
+        Block::Dense(fc2),
+    ])
+}
+
+/// Shape sanity used by both the loader and the tests.
+pub fn expected_shapes() -> Vec<(&'static str, Vec<usize>)> {
+    vec![
+        ("conv1_w", vec![8, 1, 5, 5]),
+        ("conv2_w", vec![16, 8, 5, 5]),
+        ("fc1_w", vec![64, 784]),
+        ("fc2_w", vec![10, 64]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Fp32Exec;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn synthetic_forward_shape() {
+        let m = lenet(None, 1);
+        let x = Tensor::from_vec((0..784).map(|i| (i as f32 * 0.011).sin().abs()).collect(), &[1, 28, 28]);
+        let y = m.graph.execute(x, &mut Fp32Exec);
+        assert_eq!(y.shape, vec![10]);
+    }
+
+    #[test]
+    fn conv_count_is_two() {
+        assert_eq!(lenet(None, 1).graph.conv_count(), 2);
+    }
+
+    #[test]
+    fn fallback_when_artifacts_missing() {
+        let m = lenet_from_artifacts(Path::new("/nonexistent"), 3);
+        assert_eq!(m.name, "lenet");
+        assert_eq!(m.graph.conv_count(), 2);
+    }
+}

@@ -1,0 +1,24 @@
+//! Structural definitions of the six networks evaluated in the paper.
+//!
+//! Per DESIGN.md §4, the large networks carry deterministic synthetic
+//! "pretrained" weights (Kaiming-scaled Laplacian — see [`init`]); the two
+//! small networks (LeNet / CIFAR-net) load genuinely trained weights from
+//! `artifacts/` when present (trained at build time by
+//! `python/compile/train_small.py`) and fall back to synthetic weights so
+//! `cargo test` works without the artifacts.
+//!
+//! Spatial resolution of the ImageNet-class models is configurable
+//! (default 64×64 instead of 224×224) — the architecture, depth and layer
+//! shapes that drive BFP quantization error are preserved while keeping
+//! the sweeps laptop-scale; see DESIGN.md §4.
+
+pub mod cifar;
+pub mod googlenet;
+pub mod init;
+pub mod lenet;
+pub mod resnet;
+pub mod vgg;
+pub mod weights_io;
+pub mod zoo;
+
+pub use zoo::{Model, ModelId};

@@ -1,0 +1,155 @@
+//! ResNet-18 and ResNet-50 (He et al. 2016).
+//!
+//! ResNet-18: stem + 4 stages of 2 BasicBlocks (3×3+3×3).
+//! ResNet-50: stem + stages of [3,4,6,3] Bottlenecks (1×1, 3×3, 1×1 ×4).
+//! Projection (1×1 stride-2) shortcuts at stage boundaries; BN after every
+//! conv (inference-folded affine).
+
+use super::init;
+use super::zoo::Model;
+use crate::data::rng::Rng;
+use crate::nn::Block;
+
+fn conv_bn(name: &str, m: usize, c: usize, k: usize, stride: usize, pad: usize, rng: &mut Rng) -> Vec<Block> {
+    vec![
+        Block::Conv(init::conv2d(name, m, c, k, k, stride, pad, rng)),
+        Block::BatchNorm(init::batch_norm(&format!("{name}_bn"), m, rng)),
+    ]
+}
+
+/// BasicBlock: 3×3 → BN → ReLU → 3×3 → BN, plus shortcut, then ReLU.
+fn basic_block(name: &str, in_ch: usize, out_ch: usize, stride: usize, rng: &mut Rng) -> Block {
+    let mut main = conv_bn(&format!("{name}_conv1"), out_ch, in_ch, 3, stride, 1, rng);
+    main.push(Block::ReLU);
+    main.extend(conv_bn(&format!("{name}_conv2"), out_ch, out_ch, 3, 1, 1, rng));
+    let shortcut = if stride != 1 || in_ch != out_ch {
+        Block::Seq(conv_bn(&format!("{name}_proj"), out_ch, in_ch, 1, stride, 0, rng))
+    } else {
+        Block::Seq(vec![])
+    };
+    Block::Seq(vec![
+        Block::Residual { main: Box::new(Block::Seq(main)), shortcut: Box::new(shortcut) },
+        Block::ReLU,
+    ])
+}
+
+/// Bottleneck: 1×1 reduce → 3×3 → 1×1 expand (×4), plus shortcut, ReLU.
+fn bottleneck(name: &str, in_ch: usize, mid_ch: usize, stride: usize, rng: &mut Rng) -> Block {
+    let out_ch = mid_ch * 4;
+    let mut main = conv_bn(&format!("{name}_conv1"), mid_ch, in_ch, 1, 1, 0, rng);
+    main.push(Block::ReLU);
+    main.extend(conv_bn(&format!("{name}_conv2"), mid_ch, mid_ch, 3, stride, 1, rng));
+    main.push(Block::ReLU);
+    main.extend(conv_bn(&format!("{name}_conv3"), out_ch, mid_ch, 1, 1, 0, rng));
+    let shortcut = if stride != 1 || in_ch != out_ch {
+        Block::Seq(conv_bn(&format!("{name}_proj"), out_ch, in_ch, 1, stride, 0, rng))
+    } else {
+        Block::Seq(vec![])
+    };
+    Block::Seq(vec![
+        Block::Residual { main: Box::new(Block::Seq(main)), shortcut: Box::new(shortcut) },
+        Block::ReLU,
+    ])
+}
+
+fn stem(rng: &mut Rng) -> Vec<Block> {
+    let mut blocks = conv_bn("conv1", 64, 3, 7, 2, 3, rng);
+    blocks.push(Block::ReLU);
+    blocks.push(Block::MaxPool { name: "pool1".into(), k: 3, s: 2, p: 1 });
+    blocks
+}
+
+/// ResNet-18 for `[3, s, s]` inputs (s divisible by 32).
+pub fn resnet18(input_size: usize, num_classes: usize, seed: u64) -> Model {
+    assert_eq!(input_size % 32, 0);
+    let mut rng = Rng::new(seed ^ 0x4E54_1218);
+    let mut blocks = stem(&mut rng);
+    let stage_ch = [64usize, 128, 256, 512];
+    let mut in_ch = 64;
+    for (si, &ch) in stage_ch.iter().enumerate() {
+        for b in 0..2 {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            blocks.push(basic_block(&format!("res{}_{}", si + 2, b), in_ch, ch, stride, &mut rng));
+            in_ch = ch;
+        }
+    }
+    blocks.push(Block::GlobalAvgPool);
+    blocks.push(Block::Dense(init::dense("fc", num_classes, 512, &mut rng)));
+    Model {
+        name: "resnet18".into(),
+        graph: Block::Seq(blocks),
+        input_shape: vec![3, input_size, input_size],
+        num_classes,
+    }
+}
+
+/// ResNet-50 for `[3, s, s]` inputs (s divisible by 32).
+pub fn resnet50(input_size: usize, num_classes: usize, seed: u64) -> Model {
+    assert_eq!(input_size % 32, 0);
+    let mut rng = Rng::new(seed ^ 0x4E54_5050);
+    let mut blocks = stem(&mut rng);
+    let plan: [(usize, usize); 4] = [(64, 3), (128, 4), (256, 6), (512, 3)];
+    let mut in_ch = 64usize;
+    for (si, &(mid, count)) in plan.iter().enumerate() {
+        for b in 0..count {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            blocks.push(bottleneck(&format!("res{}_{}", si + 2, b), in_ch, mid, stride, &mut rng));
+            in_ch = mid * 4;
+        }
+    }
+    blocks.push(Block::GlobalAvgPool);
+    blocks.push(Block::Dense(init::dense("fc", num_classes, 2048, &mut rng)));
+    Model {
+        name: "resnet50".into(),
+        graph: Block::Seq(blocks),
+        input_shape: vec![3, input_size, input_size],
+        num_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Fp32Exec;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn resnet18_conv_count() {
+        // 1 stem + 8 blocks × 2 convs + 3 projection convs = 20
+        let m = resnet18(32, 10, 1);
+        assert_eq!(m.graph.conv_count(), 20);
+    }
+
+    #[test]
+    fn resnet50_conv_count() {
+        // 1 stem + 16 bottlenecks × 3 + 4 projections = 53
+        let m = resnet50(32, 10, 1);
+        assert_eq!(m.graph.conv_count(), 53);
+    }
+
+    #[test]
+    fn resnet18_forward_shape() {
+        let m = resnet18(32, 10, 1);
+        let x = Tensor::from_vec((0..3 * 32 * 32).map(|i| (i as f32 * 0.02).sin()).collect(), &[3, 32, 32]);
+        let y = m.graph.execute(x, &mut Fp32Exec);
+        assert_eq!(y.shape, vec![10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn resnet50_forward_shape() {
+        let m = resnet50(32, 10, 2);
+        let x = Tensor::from_vec((0..3 * 32 * 32).map(|i| (i as f32 * 0.03).cos()).collect(), &[3, 32, 32]);
+        let y = m.graph.execute(x, &mut Fp32Exec);
+        assert_eq!(y.shape, vec![10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn resnet18_param_count_plausible() {
+        // True ResNet-18 has ~11.7M params; ours differs only in the FC head.
+        let m = resnet18(32, 10, 1);
+        let p = m.graph.param_count();
+        assert!((10_000_000..13_000_000).contains(&p), "{p}");
+    }
+}

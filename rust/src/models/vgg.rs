@@ -1,0 +1,100 @@
+//! VGG-16 (Simonyan & Zisserman 2014): 13 conv layers in 5 stages, each
+//! followed by ReLU, max-pool after every stage, then 3 FC layers.
+//!
+//! Layer names match the paper's Table 4 rows (`conv1_1` … `conv5_3`,
+//! `pool1` … `pool5`) so the error-analysis harness can line up directly.
+
+use super::init;
+use super::zoo::Model;
+use crate::data::rng::Rng;
+use crate::nn::Block;
+
+/// VGG-16 stage plan: (stage, convs, channels).
+pub const STAGES: [(usize, usize, usize); 5] =
+    [(1, 2, 64), (2, 2, 128), (3, 3, 256), (4, 3, 512), (5, 3, 512)];
+
+/// Build VGG-16 for `input` = `[3, s, s]` with synthetic weights.
+///
+/// `s` must be divisible by 32 (five 2× pools). The FC head adapts to the
+/// final spatial size; FC widths are scaled down from 4096 to keep the
+/// parameter count laptop-scale while preserving all 13 conv shapes.
+pub fn vgg16(input_size: usize, num_classes: usize, seed: u64) -> Model {
+    assert_eq!(input_size % 32, 0, "VGG-16 needs input divisible by 32");
+    let mut rng = Rng::new(seed ^ 0x7661_6716); // "vgg16"
+    let mut blocks = Vec::new();
+    let mut in_ch = 3usize;
+    for (stage, convs, ch) in STAGES {
+        for i in 1..=convs {
+            blocks.push(Block::Conv(init::conv2d(
+                &format!("conv{stage}_{i}"),
+                ch,
+                in_ch,
+                3,
+                3,
+                1,
+                1,
+                &mut rng,
+            )));
+            blocks.push(Block::ReLU);
+            in_ch = ch;
+        }
+        blocks.push(Block::MaxPool { name: format!("pool{stage}"), k: 2, s: 2, p: 0 });
+    }
+    let spatial = input_size / 32;
+    let fc_in = 512 * spatial * spatial;
+    let fc_width = 512; // scaled-down stand-in for 4096 (DESIGN.md §4)
+    blocks.push(Block::Flatten);
+    blocks.push(Block::Dense(init::dense("fc6", fc_width, fc_in, &mut rng)));
+    blocks.push(Block::ReLU);
+    blocks.push(Block::Dropout);
+    blocks.push(Block::Dense(init::dense("fc7", fc_width, fc_width, &mut rng)));
+    blocks.push(Block::ReLU);
+    blocks.push(Block::Dropout);
+    blocks.push(Block::Dense(init::dense("fc8", num_classes, fc_width, &mut rng)));
+    Model {
+        name: "vgg16".into(),
+        graph: Block::Seq(blocks),
+        input_shape: vec![3, input_size, input_size],
+        num_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Fp32Exec;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn thirteen_convs() {
+        let m = vgg16(32, 10, 1);
+        assert_eq!(m.graph.conv_count(), 13);
+    }
+
+    #[test]
+    fn forward_shape_32() {
+        let m = vgg16(32, 10, 1);
+        let x = Tensor::zeros(&[3, 32, 32]);
+        let y = m.graph.execute(x, &mut Fp32Exec);
+        assert_eq!(y.shape, vec![10]);
+    }
+
+    #[test]
+    fn forward_shape_64() {
+        let m = vgg16(64, 1000, 2);
+        let x = Tensor::from_vec((0..3 * 64 * 64).map(|i| (i as f32 * 0.01).sin()).collect(), &[3, 64, 64]);
+        let y = m.graph.execute(x, &mut Fp32Exec);
+        assert_eq!(y.shape, vec![1000]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn activations_do_not_explode() {
+        // Kaiming init keeps the activation scale stable through 13 layers.
+        let m = vgg16(32, 10, 3);
+        let x = Tensor::from_vec(crate::data::imagenet_like_batch(1, 32, 5)[0].data.clone(), &[3, 32, 32]);
+        let y = m.graph.execute(x, &mut Fp32Exec);
+        assert!(y.max_abs() < 1e6, "logits exploded: {}", y.max_abs());
+        assert!(y.max_abs() > 1e-6, "logits vanished");
+    }
+}

@@ -1,0 +1,132 @@
+//! Trained-weight interchange with the JAX build-time trainer.
+//!
+//! `python/compile/train_small.py` dumps `artifacts/<model>_weights.bfpw`,
+//! a deliberately trivial line-oriented text format (the offline build has
+//! no JSON dependency and the files are a few MB, written once):
+//!
+//! ```text
+//! bfpw-v1
+//! param <name> <ndim> <d0> <d1> ...
+//! <v0> <v1> ... <vN-1>          # one whitespace-separated line of f32
+//! param ...
+//! ```
+
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One serialized parameter tensor.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A named bundle of parameter tensors.
+#[derive(Debug, Clone, Default)]
+pub struct WeightBundle {
+    pub params: HashMap<String, ParamEntry>,
+}
+
+impl WeightBundle {
+    /// Parse a bundle from `.bfpw` text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty() && !l.starts_with('#'));
+        ensure!(lines.next() == Some("bfpw-v1"), "missing bfpw-v1 header");
+        let mut params = HashMap::new();
+        while let Some(header) = lines.next() {
+            let mut parts = header.split_whitespace();
+            ensure!(parts.next() == Some("param"), "expected 'param' line, got: {header}");
+            let name = parts.next().context("param line missing name")?.to_string();
+            let ndim: usize = parts.next().context("param line missing ndim")?.parse()?;
+            let shape: Vec<usize> =
+                parts.take(ndim).map(|s| s.parse::<usize>()).collect::<std::result::Result<_, _>>()?;
+            ensure!(shape.len() == ndim, "param {name}: expected {ndim} dims");
+            let count: usize = shape.iter().product();
+            let data_line = lines.next().with_context(|| format!("param {name}: missing data line"))?;
+            let data: Vec<f32> = data_line
+                .split_whitespace()
+                .map(|s| s.parse::<f32>())
+                .collect::<std::result::Result<_, _>>()
+                .with_context(|| format!("param {name}: bad f32"))?;
+            ensure!(data.len() == count, "param {name}: {} values != shape {:?}", data.len(), shape);
+            if params.insert(name.clone(), ParamEntry { shape, data }).is_some() {
+                bail!("duplicate parameter {name}");
+            }
+        }
+        Ok(Self { params })
+    }
+
+    /// Load a bundle from a `.bfpw` file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Fetch a tensor by name.
+    pub fn tensor(&self, name: &str) -> Result<Tensor> {
+        let p = self.params.get(name).with_context(|| format!("missing parameter {name}"))?;
+        Ok(Tensor::from_vec(p.data.clone(), &p.shape))
+    }
+
+    /// Fetch a flat vector by name.
+    pub fn vec(&self, name: &str) -> Result<Vec<f32>> {
+        Ok(self.params.get(name).with_context(|| format!("missing parameter {name}"))?.data.clone())
+    }
+
+    /// The default artifact path for a model name.
+    pub fn artifact_path(dir: &Path, model: &str) -> std::path::PathBuf {
+        dir.join(format!("{model}_weights.bfpw"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "bfpw-v1\nparam conv1_w 4 2 1 2 2\n1 2 3 4 5 6 7 8\nparam conv1_b 1 2\n0.5 -0.5\n";
+
+    #[test]
+    fn parse_roundtrip() {
+        let b = WeightBundle::parse(SAMPLE).unwrap();
+        let t = b.tensor("conv1_w").unwrap();
+        assert_eq!(t.shape, vec![2, 1, 2, 2]);
+        assert_eq!(t.data[3], 4.0);
+        assert_eq!(b.vec("conv1_b").unwrap(), vec![0.5, -0.5]);
+        assert!(b.tensor("nope").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let text = format!("# trained by jax\n\n{SAMPLE}");
+        assert!(WeightBundle::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(WeightBundle::parse("nope\n").is_err());
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let text = "bfpw-v1\nparam w 1 3\n1 2\n";
+        assert!(WeightBundle::parse(text).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let text = "bfpw-v1\nparam w 1 1\n1\nparam w 1 1\n2\n";
+        assert!(WeightBundle::parse(text).is_err());
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = std::env::temp_dir().join("bfp_cnn_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bfpw");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let b = WeightBundle::load(&path).unwrap();
+        assert_eq!(b.params.len(), 2);
+    }
+}

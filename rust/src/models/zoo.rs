@@ -1,0 +1,117 @@
+//! The model zoo: a uniform handle over the six evaluated networks.
+
+use super::{cifar, googlenet, lenet, resnet, vgg};
+use crate::nn::Block;
+use std::path::Path;
+
+/// A network ready for inference.
+pub struct Model {
+    pub name: String,
+    pub graph: Block,
+    /// `[C, H, W]` expected input shape.
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+}
+
+/// Identifiers for every network in Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelId {
+    Vgg16,
+    Resnet18,
+    Resnet50,
+    GooglenetLoss1,
+    GooglenetLoss2,
+    GooglenetLoss3,
+    Lenet,
+    Cifar10,
+}
+
+impl ModelId {
+    /// All Table 3 rows in paper order.
+    pub fn all() -> [ModelId; 8] {
+        [
+            ModelId::Vgg16,
+            ModelId::GooglenetLoss1,
+            ModelId::GooglenetLoss2,
+            ModelId::GooglenetLoss3,
+            ModelId::Resnet18,
+            ModelId::Resnet50,
+            ModelId::Lenet,
+            ModelId::Cifar10,
+        ]
+    }
+
+    /// Short name used in reports and CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelId::Vgg16 => "vgg16",
+            ModelId::Resnet18 => "resnet18",
+            ModelId::Resnet50 => "resnet50",
+            ModelId::GooglenetLoss1 => "googlenet_loss1",
+            ModelId::GooglenetLoss2 => "googlenet_loss2",
+            ModelId::GooglenetLoss3 => "googlenet_loss3",
+            ModelId::Lenet => "lenet",
+            ModelId::Cifar10 => "cifar10",
+        }
+    }
+
+    /// Instantiate the network. `input_size` applies to the ImageNet-class
+    /// models (must be divisible by 32); LeNet / cifar have fixed inputs.
+    /// `artifacts` is searched for trained weights for the small nets.
+    pub fn build(&self, input_size: usize, seed: u64, artifacts: &Path) -> Model {
+        const IMAGENET_CLASSES: usize = 1000;
+        match self {
+            ModelId::Vgg16 => vgg::vgg16(input_size, IMAGENET_CLASSES, seed),
+            ModelId::Resnet18 => resnet::resnet18(input_size, IMAGENET_CLASSES, seed),
+            ModelId::Resnet50 => resnet::resnet50(input_size, IMAGENET_CLASSES, seed),
+            ModelId::GooglenetLoss1 => googlenet::googlenet(googlenet::Head::Loss1, input_size, IMAGENET_CLASSES, seed),
+            ModelId::GooglenetLoss2 => googlenet::googlenet(googlenet::Head::Loss2, input_size, IMAGENET_CLASSES, seed),
+            ModelId::GooglenetLoss3 => googlenet::googlenet(googlenet::Head::Loss3, input_size, IMAGENET_CLASSES, seed),
+            ModelId::Lenet => lenet::lenet_from_artifacts(artifacts, seed),
+            ModelId::Cifar10 => cifar::cifar_from_artifacts(artifacts, seed),
+        }
+    }
+
+    /// Is this one of the ImageNet-class (synthetic-weight) models?
+    pub fn is_imagenet_class(&self) -> bool {
+        !matches!(self, ModelId::Lenet | ModelId::Cifar10)
+    }
+
+    /// The `L_W`/`L_I` grid the paper sweeps for this model (Table 3).
+    pub fn table3_widths(&self) -> Vec<u32> {
+        match self {
+            ModelId::Lenet => vec![3, 4, 5, 6],
+            ModelId::Cifar10 => vec![5, 6, 7, 8],
+            _ => vec![6, 7, 8, 9],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_unique() {
+        let names: Vec<&str> = ModelId::all().iter().map(|m| m.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn table3_grids_match_paper() {
+        assert_eq!(ModelId::Vgg16.table3_widths(), vec![6, 7, 8, 9]);
+        assert_eq!(ModelId::Lenet.table3_widths(), vec![3, 4, 5, 6]);
+        assert_eq!(ModelId::Cifar10.table3_widths(), vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn build_small_models() {
+        let m = ModelId::Lenet.build(32, 1, Path::new("artifacts"));
+        assert_eq!(m.input_shape, vec![1, 28, 28]);
+        let m = ModelId::Cifar10.build(32, 1, Path::new("artifacts"));
+        assert_eq!(m.input_shape, vec![3, 32, 32]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Production executors: the FP32 reference path and the BFP path.
+
+use super::graph::Executor;
+use super::layers::{BatchNorm, Conv2d, Dense};
+use super::ops;
+use crate::quant::BfpConfig;
+use crate::tensor::{avg_pool2d, global_avg_pool, max_pool2d, Tensor};
+
+/// Plain FP32 inference — the "floating point" baseline of every table.
+pub struct Fp32Exec;
+
+impl Executor for Fp32Exec {
+    type T = Tensor;
+    fn conv(&mut self, layer: &Conv2d, x: Tensor) -> Tensor {
+        layer.forward_fp32(&x)
+    }
+    fn dense(&mut self, layer: &Dense, x: Tensor) -> Tensor {
+        layer.forward_fp32(&x)
+    }
+    fn batch_norm(&mut self, layer: &BatchNorm, x: Tensor) -> Tensor {
+        layer.forward(&x)
+    }
+    fn relu(&mut self, x: Tensor) -> Tensor {
+        ops::relu(&x)
+    }
+    fn max_pool(&mut self, _name: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        max_pool2d(&x, k, s, p)
+    }
+    fn avg_pool(&mut self, _name: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        avg_pool2d(&x, k, s, p)
+    }
+    fn global_avg_pool(&mut self, x: Tensor) -> Tensor {
+        global_avg_pool(&x)
+    }
+    fn flatten(&mut self, x: Tensor) -> Tensor {
+        ops::flatten(&x)
+    }
+    fn add(&mut self, a: Tensor, b: Tensor) -> Tensor {
+        ops::add(&a, &b)
+    }
+    fn concat(&mut self, parts: Vec<Tensor>) -> Tensor {
+        ops::concat_channels(&parts)
+    }
+    fn softmax(&mut self, x: Tensor) -> Tensor {
+        ops::softmax(&x)
+    }
+    fn fork(&mut self, x: &Tensor) -> Tensor {
+        x.clone()
+    }
+}
+
+/// BFP inference: conv layers run the Figure 2 fixed-point data flow;
+/// everything else (ReLU, pooling, BN, FC, softmax) stays in floating
+/// point exactly as in the paper's Caffe port (§5.1).
+pub struct BfpExec {
+    pub cfg: BfpConfig,
+    /// Also quantize fully-connected layers (extension; paper: false).
+    pub quantize_dense: bool,
+}
+
+impl BfpExec {
+    pub fn new(cfg: BfpConfig) -> Self {
+        Self { cfg, quantize_dense: false }
+    }
+}
+
+impl Executor for BfpExec {
+    type T = Tensor;
+    fn conv(&mut self, layer: &Conv2d, x: Tensor) -> Tensor {
+        layer.forward_bfp(&x, &self.cfg)
+    }
+    fn dense(&mut self, layer: &Dense, x: Tensor) -> Tensor {
+        if self.quantize_dense {
+            layer.forward_bfp(&x, &self.cfg)
+        } else {
+            layer.forward_fp32(&x)
+        }
+    }
+    fn batch_norm(&mut self, layer: &BatchNorm, x: Tensor) -> Tensor {
+        layer.forward(&x)
+    }
+    fn relu(&mut self, x: Tensor) -> Tensor {
+        ops::relu(&x)
+    }
+    fn max_pool(&mut self, _name: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        max_pool2d(&x, k, s, p)
+    }
+    fn avg_pool(&mut self, _name: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        avg_pool2d(&x, k, s, p)
+    }
+    fn global_avg_pool(&mut self, x: Tensor) -> Tensor {
+        global_avg_pool(&x)
+    }
+    fn flatten(&mut self, x: Tensor) -> Tensor {
+        ops::flatten(&x)
+    }
+    fn add(&mut self, a: Tensor, b: Tensor) -> Tensor {
+        ops::add(&a, &b)
+    }
+    fn concat(&mut self, parts: Vec<Tensor>) -> Tensor {
+        ops::concat_channels(&parts)
+    }
+    fn softmax(&mut self, x: Tensor) -> Tensor {
+        ops::softmax(&x)
+    }
+    fn fork(&mut self, x: &Tensor) -> Tensor {
+        x.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::graph::Block;
+
+    fn model() -> Block {
+        let w: Vec<f32> = (0..4 * 2 * 9).map(|i| ((i as f32) * 0.17).sin() * 0.4).collect();
+        Block::seq(vec![
+            Block::Conv(Conv2d::new("c1", Tensor::from_vec(w, &[4, 2, 3, 3]), vec![], 1, 1)),
+            Block::ReLU,
+            Block::MaxPool { name: "p1".into(), k: 2, s: 2, p: 0 },
+            Block::Flatten,
+        ])
+    }
+
+    fn input() -> Tensor {
+        Tensor::from_vec((0..2 * 8 * 8).map(|i| ((i as f32) * 0.31).cos() * 2.0).collect(), &[2, 8, 8])
+    }
+
+    #[test]
+    fn bfp_exec_tracks_fp32_at_wide_width() {
+        let m = model();
+        let fp = m.execute(input(), &mut Fp32Exec);
+        let bfp = m.execute(input(), &mut BfpExec::new(BfpConfig::new(14, 14)));
+        assert_eq!(fp.shape, bfp.shape);
+        let nsr = fp.data.iter().zip(&bfp.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+            / fp.energy().max(1e-12);
+        assert!(nsr < 1e-5, "NSR {nsr}");
+    }
+
+    #[test]
+    fn narrow_width_is_noisier() {
+        let m = model();
+        let fp = m.execute(input(), &mut Fp32Exec);
+        let nsr = |bits| {
+            let b = m.execute(input(), &mut BfpExec::new(BfpConfig::new(bits, bits)));
+            fp.data.iter().zip(&b.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+                / fp.energy().max(1e-12)
+        };
+        assert!(nsr(5) > nsr(9));
+    }
+}

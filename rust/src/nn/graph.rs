@@ -1,0 +1,185 @@
+//! Composable model graph: a [`Block`] tree walked by an [`Executor`].
+//!
+//! The executor pattern lets the FP32 reference path, the BFP path and the
+//! instrumented dual path (Table 4) share one traversal, so layer order and
+//! branch semantics can never diverge between them.
+
+use super::layers::{BatchNorm, Conv2d, Dense};
+
+/// A model is a tree of blocks. Leaves are layers; interior nodes compose.
+#[derive(Debug, Clone)]
+pub enum Block {
+    /// Run children in order.
+    Seq(Vec<Block>),
+    Conv(Conv2d),
+    Dense(Dense),
+    BatchNorm(BatchNorm),
+    ReLU,
+    /// Max pooling, square window `k`, stride `s`, padding `p`.
+    MaxPool { name: String, k: usize, s: usize, p: usize },
+    /// Average pooling, square window `k`, stride `s`, padding `p`.
+    AvgPool { name: String, k: usize, s: usize, p: usize },
+    /// Global average pooling `[C,H,W] -> [C]`.
+    GlobalAvgPool,
+    /// Flatten to 1-D.
+    Flatten,
+    /// Inference-time identity (kept so graph shapes mirror the papers).
+    Dropout,
+    /// `main(x) + shortcut(x)` (ResNet). Shapes must match.
+    Residual { main: Box<Block>, shortcut: Box<Block> },
+    /// Channel-wise concat of parallel branches (GoogLeNet inception).
+    Concat(Vec<Block>),
+    Softmax,
+}
+
+impl Block {
+    /// Sequential convenience constructor.
+    pub fn seq(blocks: Vec<Block>) -> Block {
+        Block::Seq(blocks)
+    }
+
+    /// Walk the tree with an executor, threading the tensor state through.
+    pub fn execute<E: Executor>(&self, x: E::T, e: &mut E) -> E::T {
+        match self {
+            Block::Seq(items) => items.iter().fold(x, |acc, b| b.execute(acc, e)),
+            Block::Conv(c) => e.conv(c, x),
+            Block::Dense(d) => e.dense(d, x),
+            Block::BatchNorm(bn) => e.batch_norm(bn, x),
+            Block::ReLU => e.relu(x),
+            Block::MaxPool { name, k, s, p } => e.max_pool(name, *k, *s, *p, x),
+            Block::AvgPool { name, k, s, p } => e.avg_pool(name, *k, *s, *p, x),
+            Block::GlobalAvgPool => e.global_avg_pool(x),
+            Block::Flatten => e.flatten(x),
+            Block::Dropout => x,
+            Block::Residual { main, shortcut } => {
+                let lhs = main.execute(e.fork(&x), e);
+                let rhs = shortcut.execute(x, e);
+                e.add(lhs, rhs)
+            }
+            Block::Concat(branches) => {
+                let outs: Vec<E::T> = branches.iter().map(|b| b.execute(e.fork(&x), e)).collect();
+                e.concat(outs)
+            }
+            Block::Softmax => e.softmax(x),
+        }
+    }
+
+    /// Count conv layers (used by the harness to size Table 4).
+    pub fn conv_count(&self) -> usize {
+        match self {
+            Block::Seq(items) => items.iter().map(|b| b.conv_count()).sum(),
+            Block::Conv(_) => 1,
+            Block::Residual { main, shortcut } => main.conv_count() + shortcut.conv_count(),
+            Block::Concat(branches) => branches.iter().map(|b| b.conv_count()).sum(),
+            _ => 0,
+        }
+    }
+
+    /// Total learnable parameters.
+    pub fn param_count(&self) -> usize {
+        match self {
+            Block::Seq(items) => items.iter().map(|b| b.param_count()).sum(),
+            Block::Conv(c) => c.weights.len() + c.bias.len(),
+            Block::Dense(d) => d.weights.len() + d.bias.len(),
+            Block::BatchNorm(bn) => bn.scale.len() * 2,
+            Block::Residual { main, shortcut } => main.param_count() + shortcut.param_count(),
+            Block::Concat(branches) => branches.iter().map(|b| b.param_count()).sum(),
+            _ => 0,
+        }
+    }
+
+    /// Visit every conv layer in execution order.
+    pub fn visit_convs<'a>(&'a self, f: &mut impl FnMut(&'a Conv2d)) {
+        match self {
+            Block::Seq(items) => items.iter().for_each(|b| b.visit_convs(f)),
+            Block::Conv(c) => f(c),
+            Block::Residual { main, shortcut } => {
+                main.visit_convs(f);
+                shortcut.visit_convs(f);
+            }
+            Block::Concat(branches) => branches.iter().for_each(|b| b.visit_convs(f)),
+            _ => {}
+        }
+    }
+}
+
+/// Tensor-state visitor for [`Block::execute`].
+///
+/// `T` is whatever flows along the graph edges — a plain [`crate::tensor::Tensor`]
+/// for the production paths, a (fp32, bfp) pair for the instrumented path.
+pub trait Executor {
+    type T;
+    fn conv(&mut self, layer: &Conv2d, x: Self::T) -> Self::T;
+    fn dense(&mut self, layer: &Dense, x: Self::T) -> Self::T;
+    fn batch_norm(&mut self, layer: &BatchNorm, x: Self::T) -> Self::T;
+    fn relu(&mut self, x: Self::T) -> Self::T;
+    fn max_pool(&mut self, name: &str, k: usize, s: usize, p: usize, x: Self::T) -> Self::T;
+    fn avg_pool(&mut self, name: &str, k: usize, s: usize, p: usize, x: Self::T) -> Self::T;
+    fn global_avg_pool(&mut self, x: Self::T) -> Self::T;
+    fn flatten(&mut self, x: Self::T) -> Self::T;
+    fn add(&mut self, a: Self::T, b: Self::T) -> Self::T;
+    fn concat(&mut self, parts: Vec<Self::T>) -> Self::T;
+    fn softmax(&mut self, x: Self::T) -> Self::T;
+    /// Duplicate the state at a branch point.
+    fn fork(&mut self, x: &Self::T) -> Self::T;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::exec::Fp32Exec;
+    use crate::tensor::Tensor;
+
+    fn tiny_conv(name: &str, c_in: usize, c_out: usize) -> Conv2d {
+        let w: Vec<f32> = (0..c_out * c_in * 9).map(|i| ((i as f32) * 0.1).sin() * 0.3).collect();
+        Conv2d::new(name, Tensor::from_vec(w, &[c_out, c_in, 3, 3]), vec![], 1, 1)
+    }
+
+    #[test]
+    fn seq_threads_shapes() {
+        let model = Block::seq(vec![
+            Block::Conv(tiny_conv("c1", 1, 4)),
+            Block::ReLU,
+            Block::MaxPool { name: "p1".into(), k: 2, s: 2, p: 0 },
+            Block::Flatten,
+        ]);
+        let x = Tensor::from_vec((0..64).map(|i| i as f32 * 0.01).collect(), &[1, 8, 8]);
+        let y = model.execute(x, &mut Fp32Exec);
+        assert_eq!(y.shape, vec![4 * 4 * 4]);
+    }
+
+    #[test]
+    fn residual_identity_shortcut_doubles() {
+        let model = Block::Residual {
+            main: Box::new(Block::Seq(vec![])),
+            shortcut: Box::new(Block::Seq(vec![])),
+        };
+        let x = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let y = model.execute(x, &mut Fp32Exec);
+        assert_eq!(y.data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn concat_branches() {
+        let model = Block::Concat(vec![
+            Block::Conv(tiny_conv("b1", 2, 3)),
+            Block::Conv(tiny_conv("b2", 2, 5)),
+        ]);
+        let x = Tensor::from_vec((0..2 * 6 * 6).map(|i| i as f32 * 0.05).collect(), &[2, 6, 6]);
+        let y = model.execute(x, &mut Fp32Exec);
+        assert_eq!(y.shape, vec![8, 6, 6]);
+    }
+
+    #[test]
+    fn conv_count_and_params() {
+        let model = Block::seq(vec![
+            Block::Conv(tiny_conv("c1", 1, 2)),
+            Block::Residual {
+                main: Box::new(Block::Conv(tiny_conv("c2", 2, 2))),
+                shortcut: Box::new(Block::Seq(vec![])),
+            },
+        ]);
+        assert_eq!(model.conv_count(), 2);
+        assert_eq!(model.param_count(), 2 * 9 + 2 * 2 * 9);
+    }
+}

@@ -1,0 +1,262 @@
+//! Parameterised layers: convolution, dense, batch-norm.
+
+use crate::bfp::gemm::f32_gemm;
+use crate::bfp::{bfp_gemm, BfpMatrix};
+use crate::quant::BfpConfig;
+use crate::tensor::{im2col, Conv2dGeometry, Tensor};
+
+/// 2-D convolution layer (NCHW, square stride/padding).
+#[derive(Debug, Clone)]
+pub struct Conv2d {
+    pub name: String,
+    /// `[out_channels, in_channels, kh, kw]`
+    pub weights: Tensor,
+    /// Per-output-channel bias (empty = no bias).
+    pub bias: Vec<f32>,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl Conv2d {
+    pub fn new(name: impl Into<String>, weights: Tensor, bias: Vec<f32>, stride: usize, padding: usize) -> Self {
+        assert_eq!(weights.ndim(), 4, "conv weights must be [M,C,kh,kw]");
+        if !bias.is_empty() {
+            assert_eq!(bias.len(), weights.shape[0]);
+        }
+        Self { name: name.into(), weights, bias, stride, padding }
+    }
+
+    /// Geometry for an input of shape `[C,H,W]`.
+    pub fn geometry(&self, input_shape: &[usize]) -> Conv2dGeometry {
+        assert_eq!(input_shape.len(), 3, "conv input must be [C,H,W]");
+        assert_eq!(input_shape[0], self.weights.shape[1], "channel mismatch in {}", self.name);
+        Conv2dGeometry {
+            in_channels: input_shape[0],
+            in_h: input_shape[1],
+            in_w: input_shape[2],
+            kernel_h: self.weights.shape[2],
+            kernel_w: self.weights.shape[3],
+            stride: self.stride,
+            padding: self.padding,
+        }
+    }
+
+    /// Number of output channels `M`.
+    pub fn out_channels(&self) -> usize {
+        self.weights.shape[0]
+    }
+
+    /// Expand the input into its im2col matrix (`K×N`, row-major).
+    pub fn im2col(&self, input: &Tensor) -> (Vec<f32>, Conv2dGeometry) {
+        let geo = self.geometry(&input.shape);
+        let mut col = vec![0f32; geo.k() * geo.n()];
+        im2col(&input.data, &geo, &mut col);
+        (col, geo)
+    }
+
+    /// FP32 reference forward: im2col + f32 GEMM + bias.
+    pub fn forward_fp32(&self, input: &Tensor) -> Tensor {
+        let (col, geo) = self.im2col(input);
+        let (m, k, n) = (self.out_channels(), geo.k(), geo.n());
+        let mut out = vec![0f32; m * n];
+        f32_gemm(&self.weights.data, &col, m, k, n, &mut out);
+        self.add_bias(&mut out, n);
+        Tensor::from_vec(out, &[m, geo.out_h(), geo.out_w()])
+    }
+
+    /// BFP forward (the Figure 2 data flow): block-format `W` and the
+    /// im2col'd input per `cfg.scheme`, multiply-accumulate in fixed
+    /// point, rescale to f32, add bias in f32 (the bias path stays float
+    /// in the paper's Caffe port as well).
+    pub fn forward_bfp(&self, input: &Tensor, cfg: &BfpConfig) -> Tensor {
+        let (col, geo) = self.im2col(input);
+        let (m, k, n) = (self.out_channels(), geo.k(), geo.n());
+        let wq = BfpMatrix::quantize(&self.weights.data, m, k, cfg.w_format(), cfg.scheme.w_axis());
+        let iq = BfpMatrix::quantize(&col, k, n, cfg.i_format(), cfg.scheme.i_axis());
+        let mut out = bfp_gemm(&wq, &iq).data;
+        self.add_bias(&mut out, n);
+        Tensor::from_vec(out, &[m, geo.out_h(), geo.out_w()])
+    }
+
+    fn add_bias(&self, out: &mut [f32], n: usize) {
+        if self.bias.is_empty() {
+            return;
+        }
+        for (oc, &b) in self.bias.iter().enumerate() {
+            for v in &mut out[oc * n..(oc + 1) * n] {
+                *v += b;
+            }
+        }
+    }
+}
+
+/// Fully-connected layer.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub name: String,
+    /// `[out_features, in_features]`
+    pub weights: Tensor,
+    pub bias: Vec<f32>,
+}
+
+impl Dense {
+    pub fn new(name: impl Into<String>, weights: Tensor, bias: Vec<f32>) -> Self {
+        assert_eq!(weights.ndim(), 2);
+        if !bias.is_empty() {
+            assert_eq!(bias.len(), weights.shape[0]);
+        }
+        Self { name: name.into(), weights, bias }
+    }
+
+    /// FP32 forward: `y = Wx + b`. (The paper's Caffe port keeps
+    /// fully-connected layers in floating point; see §5.1 "Experiment
+    /// Setup". [`Dense::forward_bfp`] exists for the extension ablation.)
+    pub fn forward_fp32(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.ndim(), 1, "dense input must be flat");
+        let (o, i) = (self.weights.shape[0], self.weights.shape[1]);
+        assert_eq!(x.len(), i, "dense {}: input {} != {}", self.name, x.len(), i);
+        let mut out = vec![0f32; o];
+        for r in 0..o {
+            let row = &self.weights.data[r * i..(r + 1) * i];
+            let mut acc = 0f32;
+            for (w, v) in row.iter().zip(&x.data) {
+                acc += w * v;
+            }
+            out[r] = acc + self.bias.get(r).copied().unwrap_or(0.0);
+        }
+        Tensor::from_vec(out, &[o])
+    }
+
+    /// BFP forward: treat `x` as a `K×1` input matrix (extension; not the
+    /// paper's default data flow).
+    pub fn forward_bfp(&self, x: &Tensor, cfg: &BfpConfig) -> Tensor {
+        let (o, i) = (self.weights.shape[0], self.weights.shape[1]);
+        assert_eq!(x.len(), i);
+        let wq = BfpMatrix::quantize(&self.weights.data, o, i, cfg.w_format(), cfg.scheme.w_axis());
+        let iq = BfpMatrix::quantize(&x.data, i, 1, cfg.i_format(), crate::bfp::partition::BlockAxis::Whole);
+        let mut out = bfp_gemm(&wq, &iq).data;
+        for (r, v) in out.iter_mut().enumerate() {
+            *v += self.bias.get(r).copied().unwrap_or(0.0);
+        }
+        Tensor::from_vec(out, &[o])
+    }
+}
+
+/// Inference-time batch normalisation: `y = scale·x + shift` per channel
+/// (running statistics already folded into scale/shift).
+#[derive(Debug, Clone)]
+pub struct BatchNorm {
+    pub name: String,
+    pub scale: Vec<f32>,
+    pub shift: Vec<f32>,
+}
+
+impl BatchNorm {
+    pub fn new(name: impl Into<String>, scale: Vec<f32>, shift: Vec<f32>) -> Self {
+        assert_eq!(scale.len(), shift.len());
+        Self { name: name.into(), scale, shift }
+    }
+
+    /// Identity batch-norm over `c` channels.
+    pub fn identity(name: impl Into<String>, c: usize) -> Self {
+        Self::new(name, vec![1.0; c], vec![0.0; c])
+    }
+
+    /// Apply per-channel affine to a `[C,H,W]` tensor.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.ndim(), 3);
+        let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+        assert_eq!(c, self.scale.len(), "bn {} channel mismatch", self.name);
+        let mut out = x.clone();
+        for ch in 0..c {
+            let (s, b) = (self.scale[ch], self.shift[ch]);
+            for v in &mut out.data[ch * h * w..(ch + 1) * h * w] {
+                *v = s * *v + b;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::im2col::direct_conv2d;
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.61).sin() + 0.1) * scale).collect()
+    }
+
+    #[test]
+    fn conv_fp32_matches_direct() {
+        let img = Tensor::from_vec(seq(3 * 7 * 7, 1.0), &[3, 7, 7]);
+        let w = Tensor::from_vec(seq(4 * 3 * 3 * 3, 0.5), &[4, 3, 3, 3]);
+        let bias = vec![0.1, -0.2, 0.3, 0.0];
+        let conv = Conv2d::new("c", w.clone(), bias.clone(), 1, 1);
+        let out = conv.forward_fp32(&img);
+        let reference = direct_conv2d(&img, &w, Some(&bias), 1, 1);
+        assert_eq!(out.shape, reference.shape);
+        for (a, b) in out.data.iter().zip(&reference.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn conv_bfp_close_to_fp32_at_wide_mantissa() {
+        let img = Tensor::from_vec(seq(3 * 8 * 8, 2.0), &[3, 8, 8]);
+        let w = Tensor::from_vec(seq(8 * 3 * 3 * 3, 0.3), &[8, 3, 3, 3]);
+        let conv = Conv2d::new("c", w, vec![], 1, 1);
+        let fp = conv.forward_fp32(&img);
+        let bfp = conv.forward_bfp(&img, &BfpConfig::new(14, 14));
+        let nsr = fp.data.iter().zip(&bfp.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / fp.energy();
+        assert!(nsr < 1e-5, "NSR {nsr}");
+    }
+
+    #[test]
+    fn conv_bfp_error_grows_as_width_shrinks() {
+        let img = Tensor::from_vec(seq(2 * 10 * 10, 3.0), &[2, 10, 10]);
+        let w = Tensor::from_vec(seq(4 * 2 * 3 * 3, 0.4), &[4, 2, 3, 3]);
+        let conv = Conv2d::new("c", w, vec![], 1, 1);
+        let fp = conv.forward_fp32(&img);
+        let nsr = |bits: u32| {
+            let bfp = conv.forward_bfp(&img, &BfpConfig::new(bits, bits));
+            fp.data.iter().zip(&bfp.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / fp.energy()
+        };
+        assert!(nsr(6) > nsr(8), "6-bit must be noisier than 8-bit");
+        assert!(nsr(8) > nsr(12), "8-bit must be noisier than 12-bit");
+    }
+
+    #[test]
+    fn dense_forward() {
+        let d = Dense::new("fc", Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]), vec![0.5, -0.5]);
+        let y = d.forward_fp32(&Tensor::from_vec(vec![1.0, 1.0], &[2]));
+        assert_eq!(y.data, vec![3.5, 6.5]);
+    }
+
+    #[test]
+    fn dense_bfp_approximates() {
+        let d = Dense::new("fc", Tensor::from_vec(seq(16 * 32, 0.2), &[16, 32]), vec![0.0; 16]);
+        let x = Tensor::from_vec(seq(32, 1.5), &[32]);
+        let fp = d.forward_fp32(&x);
+        let bfp = d.forward_bfp(&x, &BfpConfig::new(12, 12));
+        for (a, b) in fp.data.iter().zip(&bfp.data) {
+            assert!((a - b).abs() < 0.01, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batchnorm_affine() {
+        let bn = BatchNorm::new("bn", vec![2.0, 0.5], vec![1.0, 0.0]);
+        let x = Tensor::from_vec(vec![1., 1., 1., 1., 4., 4., 4., 4.], &[2, 2, 2]);
+        let y = bn.forward(&x);
+        assert_eq!(&y.data[0..4], &[3.0, 3.0, 3.0, 3.0]);
+        assert_eq!(&y.data[4..8], &[2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn batchnorm_identity_is_noop() {
+        let bn = BatchNorm::identity("bn", 2);
+        let x = Tensor::from_vec(seq(2 * 3 * 3, 1.0), &[2, 3, 3]);
+        assert_eq!(bn.forward(&x).data, x.data);
+    }
+}

@@ -1,0 +1,18 @@
+//! CNN layer zoo and composable model graph.
+//!
+//! * [`layers`] — parameterised layers: [`Conv2d`], [`Dense`],
+//!   [`BatchNorm`] (+ stateless activations in [`ops`]).
+//! * [`graph`] — the [`Block`] composition tree (sequential, residual,
+//!   inception concat) walked by an [`Executor`]; the same tree serves the
+//!   FP32 reference path, the BFP path and the instrumented dual path.
+//! * [`exec`] — the two production executors: [`exec::Fp32Exec`] and
+//!   [`exec::BfpExec`] (the Figure 2 data flow per conv layer).
+
+pub mod exec;
+pub mod graph;
+pub mod layers;
+pub mod ops;
+
+pub use exec::{BfpExec, Fp32Exec};
+pub use graph::{Block, Executor};
+pub use layers::{BatchNorm, Conv2d, Dense};

@@ -1,0 +1,89 @@
+//! Stateless tensor operations shared by all executors.
+
+use crate::tensor::Tensor;
+
+/// ReLU: `max(x, 0)` elementwise.
+pub fn relu(x: &Tensor) -> Tensor {
+    Tensor::from_vec(x.data.iter().map(|&v| v.max(0.0)).collect(), &x.shape)
+}
+
+/// Numerically stable softmax over the last axis of a 1-D tensor.
+pub fn softmax(x: &Tensor) -> Tensor {
+    assert_eq!(x.ndim(), 1, "softmax expects a flat logits vector");
+    let max = x.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = x.data.iter().map(|&v| (v - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    Tensor::from_vec(exps.iter().map(|&e| e / sum).collect(), &x.shape)
+}
+
+/// Elementwise add of two same-shape tensors (residual connections).
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape, "residual add shape mismatch: {:?} vs {:?}", a.shape, b.shape);
+    Tensor::from_vec(a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(), &a.shape)
+}
+
+/// Concatenate CHW tensors along the channel axis (inception merge).
+pub fn concat_channels(parts: &[Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let (h, w) = (parts[0].shape[1], parts[0].shape[2]);
+    let mut channels = 0;
+    for p in parts {
+        assert_eq!(p.ndim(), 3, "concat expects [C,H,W] parts");
+        assert_eq!((p.shape[1], p.shape[2]), (h, w), "spatial mismatch in concat");
+        channels += p.shape[0];
+    }
+    let mut data = Vec::with_capacity(channels * h * w);
+    for p in parts {
+        data.extend_from_slice(&p.data);
+    }
+    Tensor::from_vec(data, &[channels, h, w])
+}
+
+/// Flatten to 1-D.
+pub fn flatten(x: &Tensor) -> Tensor {
+    let n = x.len();
+    x.clone().reshape(&[n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let x = Tensor::from_vec(vec![-1.0, 0.0, 2.5], &[3]);
+        assert_eq!(relu(&x).data, vec![0.0, 0.0, 2.5]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let x = Tensor::from_vec(vec![1.0, 2.0, 3.0], &[3]);
+        let s = softmax(&x);
+        assert!((s.data.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s.data[2] > s.data[1] && s.data[1] > s.data[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let x = Tensor::from_vec(vec![1000.0, 1001.0], &[2]);
+        let s = softmax(&x);
+        assert!(s.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn add_residual() {
+        let a = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let b = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        assert_eq!(add(&a, &b).data, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn concat_stacks_channels() {
+        let a = Tensor::from_vec(vec![1.0; 4], &[1, 2, 2]);
+        let b = Tensor::from_vec(vec![2.0; 8], &[2, 2, 2]);
+        let c = concat_channels(&[a, b]);
+        assert_eq!(c.shape, vec![3, 2, 2]);
+        assert_eq!(c.data[0], 1.0);
+        assert_eq!(c.data[4], 2.0);
+    }
+}

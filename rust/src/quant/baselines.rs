@@ -1,0 +1,144 @@
+//! Baseline numeric formats the paper positions BFP against (§2 related
+//! work), used by the `ablation_formats` bench:
+//!
+//! * **Uniform fixed point** — one global Q-format for the whole network
+//!   (Page & Mohsenin 2016 style: e.g. Q3.6). Its word width must cover
+//!   the union of every layer's dynamic range, which is why Hill et al.
+//!   2016 measure GoogLeNet needing ~40 bits.
+//! * **Dynamic fixed point** — per-matrix power-of-two scaling chosen
+//!   from the data (Mellempudi et al. 2017's cluster scaling with one
+//!   cluster): equivalent to BFP eq. (2) with the scale restricted to the
+//!   max exponent, i.e. whole-matrix BFP. Included to show the gap that
+//!   *block-level* exponent sharing (eq. 4) closes.
+//!
+//! Both quantizers mirror the BFP API so the same conv/GEMM pipeline can
+//! run all formats.
+
+use crate::bfp::format::{exp2i, Rounding};
+
+/// Uniform fixed point Q(int_bits).(frac_bits) with sign, saturating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedPointFormat {
+    /// Integer bits (excluding sign).
+    pub int_bits: i32,
+    /// Fractional bits.
+    pub frac_bits: i32,
+}
+
+impl FixedPointFormat {
+    pub fn new(int_bits: i32, frac_bits: i32) -> Self {
+        assert!(int_bits >= 0 && frac_bits >= 0 && int_bits + frac_bits >= 1);
+        Self { int_bits, frac_bits }
+    }
+
+    /// Total width including sign.
+    pub fn total_bits(&self) -> u32 {
+        (1 + self.int_bits + self.frac_bits) as u32
+    }
+
+    /// Largest representable magnitude.
+    pub fn max_value(&self) -> f32 {
+        let max_q = (1i64 << (self.int_bits + self.frac_bits)) - 1;
+        max_q as f32 * exp2i(-self.frac_bits)
+    }
+
+    /// Quantize one value (round-to-nearest, saturate).
+    #[inline]
+    pub fn quantize(&self, x: f32, rounding: Rounding) -> f32 {
+        let scale = exp2i(self.frac_bits);
+        let scaled = x * scale;
+        let q = match rounding {
+            Rounding::Nearest => scaled.round(),
+            Rounding::Truncate => scaled.trunc(),
+            Rounding::Stochastic => crate::bfp::format::round_stochastic(scaled),
+        };
+        let max_q = ((1i64 << (self.int_bits + self.frac_bits)) - 1) as f32;
+        q.clamp(-max_q, max_q) * exp2i(-self.frac_bits)
+    }
+
+    /// Quantize a slice.
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.quantize(x, Rounding::Nearest)).collect()
+    }
+
+    /// The smallest Q-format of `total` bits (incl. sign) that avoids
+    /// saturating `max_abs`: spend integer bits on range, rest on
+    /// precision — how a designer would pick a global format.
+    pub fn for_range(total: u32, max_abs: f32) -> Self {
+        assert!(total >= 2);
+        let needed_int = if max_abs <= 0.0 {
+            0
+        } else {
+            let e = max_abs.log2().ceil() as i32;
+            e.max(0)
+        };
+        let int_bits = needed_int.min(total as i32 - 1);
+        Self { int_bits, frac_bits: total as i32 - 1 - int_bits }
+    }
+}
+
+/// Dynamic fixed point: per-matrix power-of-two scale from the data max
+/// (one "cluster" of Mellempudi et al.) — exactly whole-matrix BFP, so we
+/// delegate and keep the name for the ablation's readability.
+pub fn dynamic_fixed_quantize(xs: &[f32], total_bits: u32) -> Vec<f32> {
+    crate::bfp::dequantize(xs, crate::bfp::BfpFormat::new(total_bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn q3_6_basics() {
+        let f = FixedPointFormat::new(3, 6);
+        assert_eq!(f.total_bits(), 10);
+        assert!((f.max_value() - (2f32.powi(3) - 2f32.powi(-6))).abs() < 1e-6);
+        assert_eq!(f.quantize(1.0, Rounding::Nearest), 1.0);
+        // step = 1/64
+        assert!((f.quantize(0.011, Rounding::Nearest) - 0.015625).abs() < 1e-7);
+    }
+
+    #[test]
+    fn saturation() {
+        let f = FixedPointFormat::new(2, 5);
+        assert!((f.quantize(100.0, Rounding::Nearest) - f.max_value()).abs() < 1e-6);
+        assert!((f.quantize(-100.0, Rounding::Nearest) + f.max_value()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn for_range_covers_max() {
+        for max in [0.3f32, 1.0, 7.9, 100.0] {
+            let f = FixedPointFormat::for_range(8, max);
+            assert_eq!(f.total_bits(), 8);
+            assert!(f.max_value() >= max * 0.99 || f.int_bits == 7, "max={max} fmt={f:?}");
+        }
+    }
+
+    #[test]
+    fn fixed_point_loses_to_bfp_on_wide_dynamic_range() {
+        // Data spanning many octaves: a single global Q-format must
+        // either clip or starve precision; BFP adapts per block.
+        let mut rng = Rng::new(5);
+        let mut xs = rng.normal_vec(4096, 0.01);
+        xs.extend(rng.normal_vec(64, 10.0)); // rare large values
+        let bits = 8u32;
+        let fixed = FixedPointFormat::for_range(bits, xs.iter().fold(0f32, |m, &v| m.max(v.abs())));
+        let fq = fixed.quantize_slice(&xs);
+        let bq = dynamic_fixed_quantize(&xs, bits);
+        let err = |ys: &[f32]| -> f64 {
+            xs.iter().zip(ys).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        // dynamic (data-scaled) ≥ static at the same width
+        assert!(err(&bq) <= err(&fq) * 1.01, "bfp {} vs fixed {}", err(&bq), err(&fq));
+    }
+
+    #[test]
+    fn dynamic_fixed_is_whole_matrix_bfp() {
+        let xs = [0.5f32, -1.25, 3.0, 0.125];
+        assert_eq!(
+            dynamic_fixed_quantize(&xs, 8),
+            crate::bfp::dequantize(&xs, crate::bfp::BfpFormat::new(8))
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! End-to-end BFP configuration: the knobs swept in the paper's Table 3.
+
+use crate::bfp::{BfpFormat, PartitionScheme, Rounding};
+
+/// A full BFP configuration for running a network: weight / input mantissa
+/// widths (incl. sign, Table 3 convention), rounding mode and partition
+/// scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BfpConfig {
+    /// `L_W`: weight mantissa bits including sign.
+    pub l_w: u32,
+    /// `L_I`: activation mantissa bits including sign.
+    pub l_i: u32,
+    /// Rounding of out-shifted bits (paper default: round-off).
+    pub rounding: Rounding,
+    /// Matrix partition scheme (paper default: eq. 4).
+    pub scheme: PartitionScheme,
+}
+
+impl BfpConfig {
+    /// The paper's recommended configuration: 8-bit mantissas, round-off,
+    /// eq. (4) partitioning.
+    pub fn paper_default() -> Self {
+        Self::new(8, 8)
+    }
+
+    /// Config with the given widths and paper-default scheme/rounding.
+    pub fn new(l_w: u32, l_i: u32) -> Self {
+        Self { l_w, l_i, rounding: Rounding::Nearest, scheme: PartitionScheme::Eq4 }
+    }
+
+    /// Same widths, different scheme.
+    pub fn with_scheme(mut self, scheme: PartitionScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Same widths, truncating rounding (ablation).
+    pub fn with_truncation(mut self) -> Self {
+        self.rounding = Rounding::Truncate;
+        self
+    }
+
+    /// Same widths, arbitrary rounding mode (ablation).
+    pub fn with_rounding(mut self, rounding: Rounding) -> Self {
+        self.rounding = rounding;
+        self
+    }
+
+    /// Weight-matrix format.
+    pub fn w_format(&self) -> BfpFormat {
+        BfpFormat { total_bits: self.l_w, rounding: self.rounding }
+    }
+
+    /// Input-matrix format.
+    pub fn i_format(&self) -> BfpFormat {
+        BfpFormat { total_bits: self.l_i, rounding: self.rounding }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_8bit_eq4_rounding() {
+        let c = BfpConfig::paper_default();
+        assert_eq!((c.l_w, c.l_i), (8, 8));
+        assert_eq!(c.scheme, PartitionScheme::Eq4);
+        assert_eq!(c.rounding, Rounding::Nearest);
+    }
+
+    #[test]
+    fn builders() {
+        let c = BfpConfig::new(6, 9).with_scheme(PartitionScheme::Eq2).with_truncation();
+        assert_eq!(c.w_format().total_bits, 6);
+        assert_eq!(c.i_format().total_bits, 9);
+        assert_eq!(c.scheme, PartitionScheme::Eq2);
+        assert_eq!(c.rounding, Rounding::Truncate);
+        assert_eq!(c.w_format().rounding, Rounding::Truncate);
+    }
+}

@@ -1,0 +1,113 @@
+//! FPGA resource cost model for the §3.1 hardware argument.
+//!
+//! The paper motivates BFP with Virtex-7 690T datapoints: a 32-bit
+//! fixed-point adder costs 1 DSP slice at 300 MHz, while a 16-bit
+//! 4-stage-pipelined floating-point adder costs 2 DSPs + 117 LUTs at
+//! 219 MHz. This module generalises those anchors into a coarse
+//! per-operator cost model so the accelerator-level saving of the BFP
+//! data flow (Figure 2) can be tabulated for any word width — the kind
+//! of estimate §4's NSR model is meant to be paired with.
+//!
+//! The model is deliberately simple (linear DSP/LUT scaling between
+//! anchor points); its purpose is ranking formats, not gate-accurate
+//! synthesis.
+
+/// Resource estimate for one arithmetic operator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    pub dsp: f64,
+    pub lut: f64,
+    pub fmax_mhz: f64,
+}
+
+/// Fixed-point adder of `bits` width (anchor: 32-bit = 1 DSP @ 300 MHz).
+pub fn fixed_adder(bits: u32) -> OpCost {
+    OpCost { dsp: (bits as f64 / 32.0).min(1.0).max(0.25), lut: 0.0, fmax_mhz: 300.0 }
+}
+
+/// Fixed-point multiplier of `a`×`b` bits: DSP48 handles 18×25; count the
+/// DSP tiles needed by decomposition.
+pub fn fixed_multiplier(a_bits: u32, b_bits: u32) -> OpCost {
+    let tiles_a = (a_bits as f64 / 18.0).ceil();
+    let tiles_b = (b_bits as f64 / 25.0).ceil();
+    OpCost { dsp: tiles_a * tiles_b, lut: 0.0, fmax_mhz: 300.0 }
+}
+
+/// Floating-point adder (anchor: fp16 = 2 DSP + 117 LUT @ 219 MHz;
+/// fp32 scales to ~2 DSP + ~230 LUT per vendor IP tables).
+pub fn float_adder(bits: u32) -> OpCost {
+    let scale = bits as f64 / 16.0;
+    OpCost { dsp: 2.0, lut: 117.0 * scale, fmax_mhz: 219.0 }
+}
+
+/// Floating-point multiplier (vendor IP: fp16 ≈ 1 DSP + ~80 LUT; fp32 ≈
+/// 3 DSP + ~150 LUT).
+pub fn float_multiplier(bits: u32) -> OpCost {
+    let scale = bits as f64 / 16.0;
+    OpCost { dsp: (1.0 + 2.0 * (scale - 1.0)).max(1.0), lut: 80.0 * scale, fmax_mhz: 230.0 }
+}
+
+/// Cost of one MAC lane in the Figure 2 BFP engine at mantissa widths
+/// `l_w`/`l_i` for inner dimension `k`: a fixed multiplier of the §3.4
+/// product width plus a fixed adder of the accumulator width.
+pub fn bfp_mac(l_w: u32, l_i: u32, k: usize) -> OpCost {
+    let plan = crate::quant::widths::WidthPlan::plan(k, l_w, l_i);
+    let mul = fixed_multiplier(l_w, l_i);
+    let add = fixed_adder(plan.accumulator_bits);
+    OpCost { dsp: mul.dsp + add.dsp, lut: mul.lut + add.lut, fmax_mhz: mul.fmax_mhz.min(add.fmax_mhz) }
+}
+
+/// Cost of one MAC lane in an fp32 engine (multiplier + adder).
+pub fn float_mac(bits: u32) -> OpCost {
+    let m = float_multiplier(bits);
+    let a = float_adder(bits);
+    OpCost { dsp: m.dsp + a.dsp, lut: m.lut + a.lut, fmax_mhz: m.fmax_mhz.min(a.fmax_mhz) }
+}
+
+/// DSP-count advantage of the 8-bit BFP MAC over the fp32 MAC — the
+/// §3.1 headline, as a single ratio (≈ effective MACs per DSP per clock,
+/// normalised by fmax).
+pub fn bfp_vs_float_dsp_ratio(l_w: u32, l_i: u32, k: usize, float_bits: u32) -> f64 {
+    let b = bfp_mac(l_w, l_i, k);
+    let f = float_mac(float_bits);
+    (f.dsp * f.fmax_mhz.recip()) / (b.dsp * b.fmax_mhz.recip())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_points() {
+        let fixed32 = fixed_adder(32);
+        assert_eq!(fixed32.dsp, 1.0);
+        assert_eq!(fixed32.fmax_mhz, 300.0);
+        let fp16 = float_adder(16);
+        assert_eq!(fp16.dsp, 2.0);
+        assert_eq!(fp16.lut, 117.0);
+        assert_eq!(fp16.fmax_mhz, 219.0);
+    }
+
+    #[test]
+    fn bfp8_mac_is_single_dsp_class() {
+        // 8×8 mantissa product fits one DSP48 tile; accumulator add ≤ 1.
+        let c = bfp_mac(8, 8, 4608);
+        assert!(c.dsp <= 2.0, "{c:?}");
+    }
+
+    #[test]
+    fn bfp_beats_float_substantially() {
+        let r = bfp_vs_float_dsp_ratio(8, 8, 4608, 32);
+        assert!(r > 1.5, "expected a clear DSP advantage, got {r}");
+    }
+
+    #[test]
+    fn wider_mantissas_cost_more_dsp() {
+        let c8 = bfp_mac(8, 8, 1024);
+        let c16 = bfp_mac(16, 16, 1024);
+        // 16×16 still decomposes into one 18×25 tile; 19+ would not.
+        assert!(c16.dsp >= c8.dsp);
+        let c20 = bfp_mac(20, 20, 1024);
+        assert!(c20.dsp > c16.dsp, "{c20:?} vs {c16:?}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Quantization configuration, the §3.4 bit-width planner, baseline
+//! numeric formats (§2 related work) and the §3.1 FPGA cost model.
+
+pub mod baselines;
+pub mod config;
+pub mod hw_cost;
+pub mod widths;
+
+pub use config::BfpConfig;
+pub use widths::WidthPlan;

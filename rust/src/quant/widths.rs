@@ -1,0 +1,85 @@
+//! The §3.4 bit-width planner for the fixed-point MAC datapath.
+//!
+//! With `L_W`/`L_I` mantissa bits (incl. sign) the product of two aligned
+//! mantissas needs `L_W + L_I + 2` bits... the paper states the multiplier
+//! must be "no less than `L_W + L_I + 2`" including sign, and the
+//! accumulator adds `S = ⌊log2 K⌋` carry bits for a `K`-term sum. These
+//! widths guarantee the integer MAC introduces **no** rounding error — the
+//! only error in the whole pipeline is the block-formatting quantization.
+
+
+/// Planned datapath widths for one GEMM shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WidthPlan {
+    /// Multiplier output width in bits (incl. sign).
+    pub multiplier_bits: u32,
+    /// Accumulator width in bits (incl. sign).
+    pub accumulator_bits: u32,
+    /// Carry allowance `S = ⌊log2 K⌋`.
+    pub carry_bits: u32,
+    /// Whether a 32-bit integer lane suffices (else 64-bit).
+    pub fits_i32: bool,
+}
+
+impl WidthPlan {
+    /// Plan widths for an inner dimension `K` and mantissa widths
+    /// `l_w`/`l_i` (incl. sign).
+    pub fn plan(k: usize, l_w: u32, l_i: u32) -> Self {
+        assert!(k >= 1);
+        let multiplier_bits = l_w + l_i; // §3.4 counts ≥ L_W + L_I + 2 where
+                                         // L excludes sign; ours includes both
+                                         // signs so the product of two
+                                         // (L-1)-magnitude values fits in
+                                         // (l_w-1)+(l_i-1)+1 = l_w+l_i-1 bits;
+                                         // we keep one headroom bit.
+        let carry_bits = usize::BITS - 1 - k.leading_zeros(); // ⌊log2 K⌋
+        let accumulator_bits = multiplier_bits + carry_bits + 1;
+        Self { multiplier_bits, accumulator_bits, carry_bits, fits_i32: accumulator_bits <= 32 }
+    }
+
+    /// Worst-case accumulator magnitude for this plan:
+    /// `K · (2^(l_w-1)-1) · (2^(l_i-1)-1)` — used by the saturation
+    /// proptest.
+    pub fn worst_case_acc(k: usize, l_w: u32, l_i: u32) -> i128 {
+        let wm = (1i128 << (l_w - 1)) - 1;
+        let im = (1i128 << (l_i - 1)) - 1;
+        k as i128 * wm * im
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_widths() {
+        // 8-bit × 8-bit, K=4608 (VGG conv with 512 ch): ⌊log2 4608⌋ = 12.
+        let p = WidthPlan::plan(4608, 8, 8);
+        assert_eq!(p.carry_bits, 12);
+        assert_eq!(p.multiplier_bits, 16);
+        assert_eq!(p.accumulator_bits, 29);
+        assert!(p.fits_i32);
+    }
+
+    #[test]
+    fn wide_mantissas_need_i64() {
+        let p = WidthPlan::plan(5000, 16, 16);
+        assert!(!p.fits_i32);
+    }
+
+    #[test]
+    fn worst_case_fits_planned_width() {
+        for &(k, lw, li) in &[(9usize, 8u32, 8u32), (4608, 8, 8), (27, 6, 9), (1, 4, 4), (100_000, 10, 10)] {
+            let p = WidthPlan::plan(k, lw, li);
+            let worst = WidthPlan::worst_case_acc(k, lw, li);
+            let capacity = (1i128 << (p.accumulator_bits - 1)) - 1;
+            assert!(worst <= capacity, "k={k} lw={lw} li={li}: {worst} > {capacity}");
+        }
+    }
+
+    #[test]
+    fn k_equals_one_no_carry() {
+        let p = WidthPlan::plan(1, 8, 8);
+        assert_eq!(p.carry_bits, 0);
+    }
+}

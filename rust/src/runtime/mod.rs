@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto` — jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod pjrt;
+
+pub use pjrt::{CompiledArtifact, PjrtRuntime};

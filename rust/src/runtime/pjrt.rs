@@ -1,0 +1,99 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU). One per process; artifacts share it.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled artifact ready to execute.
+pub struct CompiledArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    /// Platform description (for logs).
+    pub fn describe(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<CompiledArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("artifact").to_string();
+        Ok(CompiledArtifact { exe, name })
+    }
+}
+
+impl CompiledArtifact {
+    /// Execute with f32 inputs of the given shapes. The artifact must have
+    /// been lowered with `return_tuple=True`; all tuple elements are
+    /// returned as flat f32 vectors.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(shape).map_err(|e| anyhow::anyhow!("reshape to {shape:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = first.to_tuple().map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration smoke test against a real artifact; skipped (pass) when
+    /// `make artifacts` hasn't run.
+    #[test]
+    fn loads_and_runs_gemm_artifact_when_present() {
+        let path = Path::new("artifacts/bfp_gemm_demo.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: {} not built", path.display());
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let art = rt.load_hlo_text(path).unwrap();
+        // artifact computes bfp_matmul(w: [4,8], i: [8,16]) as 1-tuple
+        let w = vec![0.5f32; 32];
+        let i = vec![0.25f32; 128];
+        let outs = art.run_f32(&[(&w, &[4, 8]), (&i, &[8, 16])]).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].len(), 64);
+        // 0.5·0.25·8 = 1.0 per output element (all values exactly representable)
+        for v in &outs[0] {
+            assert!((v - 1.0).abs() < 1e-3, "{v}");
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! The Figure 1 transformation: expand convolution into matrix
+//! multiplication.
+//!
+//! Kernels of one output channel form a row of `W_{M×K}`; the receptive
+//! field of each output pixel forms a column of `I_{K×N}` with
+//! `M = out_channels`, `K = in_channels·kh·kw`, `N = out_h·out_w`.
+
+use super::tensor::Tensor;
+
+/// Geometry of a 2-D convolution (single image; batching is handled a
+/// level up).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dGeometry {
+    pub in_channels: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl Conv2dGeometry {
+    /// Output spatial height.
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.padding - self.kernel_h) / self.stride + 1
+    }
+
+    /// Output spatial width.
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.padding - self.kernel_w) / self.stride + 1
+    }
+
+    /// GEMM inner dimension `K = C·kh·kw`.
+    pub fn k(&self) -> usize {
+        self.in_channels * self.kernel_h * self.kernel_w
+    }
+
+    /// GEMM output columns `N = out_h·out_w`.
+    pub fn n(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+}
+
+/// Expand one CHW image into the `K×N` im2col matrix (row-major).
+///
+/// Rows iterate `(channel, kernel_row, kernel_col)`, columns iterate
+/// output pixels `(oy, ox)` — the layout of Figure 1.
+pub fn im2col(img: &[f32], geo: &Conv2dGeometry, out: &mut [f32]) {
+    let (c, h, w) = (geo.in_channels, geo.in_h, geo.in_w);
+    assert_eq!(img.len(), c * h * w, "image size mismatch");
+    let (oh, ow) = (geo.out_h(), geo.out_w());
+    let n = oh * ow;
+    assert_eq!(out.len(), geo.k() * n, "im2col buffer size mismatch");
+    let pad = geo.padding as isize;
+    let stride = geo.stride as isize;
+    let mut row = 0usize;
+    for ch in 0..c {
+        let plane = &img[ch * h * w..(ch + 1) * h * w];
+        for ky in 0..geo.kernel_h {
+            for kx in 0..geo.kernel_w {
+                let dst = &mut out[row * n..(row + 1) * n];
+                let mut idx = 0usize;
+                for oy in 0..oh {
+                    let iy = oy as isize * stride - pad + ky as isize;
+                    if iy < 0 || iy >= h as isize {
+                        dst[idx..idx + ow].fill(0.0);
+                        idx += ow;
+                        continue;
+                    }
+                    let src_row = &plane[iy as usize * w..(iy as usize + 1) * w];
+                    for ox in 0..ow {
+                        let ix = ox as isize * stride - pad + kx as isize;
+                        dst[idx] = if ix < 0 || ix >= w as isize { 0.0 } else { src_row[ix as usize] };
+                        idx += 1;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Direct (naive) convolution reference used to validate `im2col`+GEMM.
+pub fn direct_conv2d(
+    img: &Tensor, // [C, H, W]
+    weights: &Tensor, // [M, C, kh, kw]
+    bias: Option<&[f32]>,
+    stride: usize,
+    padding: usize,
+) -> Tensor {
+    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
+    let (m, wc, kh, kw) = (weights.shape[0], weights.shape[1], weights.shape[2], weights.shape[3]);
+    assert_eq!(c, wc);
+    let geo = Conv2dGeometry { in_channels: c, in_h: h, in_w: w, kernel_h: kh, kernel_w: kw, stride, padding };
+    let (oh, ow) = (geo.out_h(), geo.out_w());
+    let mut out = Tensor::zeros(&[m, oh, ow]);
+    for oc in 0..m {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = bias.map(|b| b[oc]).unwrap_or(0.0);
+                for ic in 0..c {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * stride + ky) as isize - padding as isize;
+                            let ix = (ox * stride + kx) as isize - padding as isize;
+                            if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                                let iv = img.data[(ic * h + iy as usize) * w + ix as usize];
+                                let wv = weights.data[((oc * c + ic) * kh + ky) * kw + kx];
+                                acc += iv * wv;
+                            }
+                        }
+                    }
+                }
+                out.data[(oc * oh + oy) * ow + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::gemm::f32_gemm;
+
+    fn seq(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.37).sin()).collect()
+    }
+
+    #[test]
+    fn geometry_basics() {
+        let g = Conv2dGeometry { in_channels: 3, in_h: 224, in_w: 224, kernel_h: 3, kernel_w: 3, stride: 1, padding: 1 };
+        assert_eq!(g.out_h(), 224);
+        assert_eq!(g.out_w(), 224);
+        assert_eq!(g.k(), 27);
+        assert_eq!(g.n(), 224 * 224);
+    }
+
+    /// Figure 1's example: 3×3 input, 2×2 kernel, no padding, stride 1.
+    #[test]
+    fn figure1_layout() {
+        let img = [1., 2., 3., 4., 5., 6., 7., 8., 9.];
+        let geo = Conv2dGeometry { in_channels: 1, in_h: 3, in_w: 3, kernel_h: 2, kernel_w: 2, stride: 1, padding: 0 };
+        let mut col = vec![0f32; geo.k() * geo.n()];
+        im2col(&img, &geo, &mut col);
+        // K=4 rows (k00,k01,k10,k11) × N=4 receptive fields
+        assert_eq!(col, vec![
+            1., 2., 4., 5., // kernel (0,0) over the 4 fields
+            2., 3., 5., 6.,
+            4., 5., 7., 8.,
+            5., 6., 8., 9.,
+        ]);
+    }
+
+    #[test]
+    fn im2col_gemm_matches_direct_conv() {
+        for (c, h, w, m, k, stride, pad) in
+            [(1, 5, 5, 2, 3, 1, 0), (3, 8, 8, 4, 3, 1, 1), (2, 9, 7, 3, 3, 2, 1), (4, 6, 6, 5, 1, 1, 0)]
+        {
+            let img = Tensor::from_vec(seq(c * h * w), &[c, h, w]);
+            let wt = Tensor::from_vec(seq(m * c * k * k), &[m, c, k, k]);
+            let geo = Conv2dGeometry { in_channels: c, in_h: h, in_w: w, kernel_h: k, kernel_w: k, stride, padding: pad };
+            let mut col = vec![0f32; geo.k() * geo.n()];
+            im2col(&img.data, &geo, &mut col);
+            let mut out = vec![0f32; m * geo.n()];
+            f32_gemm(&wt.data, &col, m, geo.k(), geo.n(), &mut out);
+            let reference = direct_conv2d(&img, &wt, None, stride, pad);
+            for (a, b) in out.iter().zip(&reference.data) {
+                assert!((a - b).abs() < 1e-4, "conv mismatch: {a} vs {b} (c={c},h={h},stride={stride},pad={pad})");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_zero_fills() {
+        let img = [1.0f32; 4]; // 1×2×2
+        let geo = Conv2dGeometry { in_channels: 1, in_h: 2, in_w: 2, kernel_h: 3, kernel_w: 3, stride: 1, padding: 1 };
+        let mut col = vec![9f32; geo.k() * geo.n()];
+        im2col(&img, &geo, &mut col);
+        // top-left output pixel's first kernel tap reads the padded corner
+        assert_eq!(col[0], 0.0);
+        // centre taps read real data
+        assert_eq!(col[4 * geo.n()], 1.0); // kernel (1,1), first field
+    }
+}

@@ -1,0 +1,14 @@
+//! Minimal dense tensor substrate (NCHW) for the CNN inference stack.
+//!
+//! * [`tensor`] — the [`Tensor`] container with shape/stride bookkeeping.
+//! * [`im2col`] — the Figure 1 transformation: convolution as GEMM.
+//! * [`pool`] — max / average pooling windows.
+
+pub mod im2col;
+pub mod pool;
+#[allow(clippy::module_inception)]
+pub mod tensor;
+
+pub use im2col::{im2col, Conv2dGeometry};
+pub use pool::{avg_pool2d, global_avg_pool, max_pool2d};
+pub use tensor::Tensor;

@@ -1,0 +1,156 @@
+//! Pooling operators (single image, CHW) with symmetric zero padding.
+//!
+//! Max pooling treats padded cells as absent (−∞), average pooling counts
+//! only valid cells — matching Caffe's semantics, which the paper's
+//! experiments ran on.
+
+use super::tensor::Tensor;
+
+/// Max pooling with square window `k`, stride `s`, symmetric padding `p`.
+pub fn max_pool2d(img: &Tensor, k: usize, s: usize, p: usize) -> Tensor {
+    pool2d(img, k, s, p, true)
+}
+
+/// Average pooling with square window `k`, stride `s`, padding `p`
+/// (padded cells excluded from the mean).
+pub fn avg_pool2d(img: &Tensor, k: usize, s: usize, p: usize) -> Tensor {
+    pool2d(img, k, s, p, false)
+}
+
+fn pool2d(img: &Tensor, k: usize, s: usize, p: usize, is_max: bool) -> Tensor {
+    assert_eq!(img.ndim(), 3, "pool2d expects [C,H,W]");
+    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
+    assert!(h + 2 * p >= k && w + 2 * p >= k, "pool window {k} larger than padded input {h}x{w}+{p}");
+    let oh = (h + 2 * p - k) / s + 1;
+    let ow = (w + 2 * p - k) / s + 1;
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for ch in 0..c {
+        let plane = &img.data[ch * h * w..(ch + 1) * h * w];
+        let oplane = &mut out.data[ch * oh * ow..(ch + 1) * oh * ow];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let y0 = (oy * s) as isize - p as isize;
+                let x0 = (ox * s) as isize - p as isize;
+                let mut acc = if is_max { f32::NEG_INFINITY } else { 0.0 };
+                let mut count = 0usize;
+                for ky in 0..k as isize {
+                    let iy = y0 + ky;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k as isize {
+                        let ix = x0 + kx;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let v = plane[iy as usize * w + ix as usize];
+                        if is_max {
+                            acc = acc.max(v);
+                        } else {
+                            acc += v;
+                        }
+                        count += 1;
+                    }
+                }
+                oplane[oy * ow + ox] = if is_max {
+                    if count == 0 {
+                        0.0
+                    } else {
+                        acc
+                    }
+                } else if count == 0 {
+                    0.0
+                } else {
+                    acc / count as f32
+                };
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling: `[C,H,W] -> [C]`.
+pub fn global_avg_pool(img: &Tensor) -> Tensor {
+    assert_eq!(img.ndim(), 3);
+    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
+    let mut out = Tensor::zeros(&[c]);
+    for ch in 0..c {
+        let plane = &img.data[ch * h * w..(ch + 1) * h * w];
+        out.data[ch] = plane.iter().sum::<f32>() / (h * w) as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_pool_2x2_stride2() {
+        let img = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6., 7., 8., 9., 10., 11., 12., 13., 14., 15., 16.], &[1, 4, 4]);
+        let out = max_pool2d(&img, 2, 2, 0);
+        assert_eq!(out.shape, vec![1, 2, 2]);
+        assert_eq!(out.data, vec![6., 8., 14., 16.]);
+    }
+
+    #[test]
+    fn avg_pool_2x2_stride2() {
+        let img = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6., 7., 8., 9., 10., 11., 12., 13., 14., 15., 16.], &[1, 4, 4]);
+        let out = avg_pool2d(&img, 2, 2, 0);
+        assert_eq!(out.data, vec![3.5, 5.5, 11.5, 13.5]);
+    }
+
+    #[test]
+    fn pool_multi_channel() {
+        let mut data = vec![0.0; 2 * 4 * 4];
+        data[0] = 5.0;
+        data[16 + 5] = 7.0;
+        let img = Tensor::from_vec(data, &[2, 4, 4]);
+        let out = max_pool2d(&img, 2, 2, 0);
+        assert_eq!(out.data[0], 5.0);
+        assert_eq!(out.data[4], 7.0);
+    }
+
+    #[test]
+    fn padded_max_pool_keeps_spatial_dims() {
+        // 3×3 window, stride 1, pad 1 — the inception pool-proj branch.
+        let img = Tensor::from_vec((0..16).map(|x| x as f32).collect(), &[1, 4, 4]);
+        let out = max_pool2d(&img, 3, 1, 1);
+        assert_eq!(out.shape, vec![1, 4, 4]);
+        assert_eq!(out.data[0], 5.0); // max of the valid 2×2 corner
+        assert_eq!(out.data[15], 15.0);
+    }
+
+    #[test]
+    fn padded_avg_counts_valid_only() {
+        let img = Tensor::from_vec(vec![4.0; 4], &[1, 2, 2]);
+        let out = avg_pool2d(&img, 3, 1, 1);
+        // every window sees only 4.0s, so the mean must be exactly 4.0
+        assert_eq!(out.shape, vec![1, 2, 2]);
+        assert!(out.data.iter().all(|&v| v == 4.0));
+    }
+
+    #[test]
+    fn stem_pool_3x3_s2_p1() {
+        // ResNet/GoogLeNet stem: 8×8 → 4×4
+        let img = Tensor::from_vec((0..64).map(|x| x as f32).collect(), &[1, 8, 8]);
+        let out = max_pool2d(&img, 3, 2, 1);
+        assert_eq!(out.shape, vec![1, 4, 4]);
+        assert_eq!(out.data[0], 9.0); // window over rows 0..2, cols 0..2
+    }
+
+    #[test]
+    fn pool_stride1_overlapping() {
+        let img = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6., 7., 8., 9.], &[1, 3, 3]);
+        let out = max_pool2d(&img, 2, 1, 0);
+        assert_eq!(out.shape, vec![1, 2, 2]);
+        assert_eq!(out.data, vec![5., 6., 8., 9.]);
+    }
+
+    #[test]
+    fn global_avg() {
+        let img = Tensor::from_vec(vec![1., 2., 3., 4., 10., 10., 10., 10.], &[2, 2, 2]);
+        let out = global_avg_pool(&img);
+        assert_eq!(out.data, vec![2.5, 10.0]);
+    }
+}

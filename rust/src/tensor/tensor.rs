@@ -1,0 +1,146 @@
+//! Dense row-major tensor with lightweight shape bookkeeping.
+
+
+/// A dense f32 tensor, row-major (last axis fastest). CNN code uses the
+/// NCHW convention: `[batch, channels, height, width]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// A tensor of zeros with the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Wrap existing data; panics if the element count mismatches.
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data length {} != shape {:?}",
+            data.len(),
+            shape
+        );
+        Self { data, shape: shape.to_vec() }
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Whether the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of axes.
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Axis length with bounds check.
+    pub fn dim(&self, axis: usize) -> usize {
+        self.shape[axis]
+    }
+
+    /// Reshape in place (element count must be preserved).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.len(), shape.iter().product::<usize>(), "reshape changes element count");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Mean of squares — the signal energy `E(Y²)` used throughout §4.
+    pub fn mean_square(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Sum of squares.
+    pub fn energy(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+    }
+
+    /// Largest |x|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// View of batch element `b` of an N≥1-dim tensor (first axis = batch).
+    pub fn batch(&self, b: usize) -> &[f32] {
+        let per: usize = self.shape[1..].iter().product();
+        &self.data[b * per..(b + 1) * per]
+    }
+
+    /// Argmax over the last axis for each row of a 2-D `[batch, classes]`
+    /// tensor — top-1 predictions.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.ndim(), 2, "argmax_rows expects [batch, classes]");
+        let classes = self.shape[1];
+        self.data
+            .chunks_exact(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.ndim(), 3);
+        assert_eq!(t.dim(1), 3);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_length() {
+        Tensor::from_vec(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec((0..6).map(|x| x as f32).collect(), &[2, 3]);
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data, t.data);
+        assert_eq!(r.shape, vec![3, 2]);
+    }
+
+    #[test]
+    fn energy_and_mean_square() {
+        let t = Tensor::from_vec(vec![1.0, -2.0, 2.0], &[3]);
+        assert_eq!(t.energy(), 9.0);
+        assert_eq!(t.mean_square(), 3.0);
+        assert_eq!(t.max_abs(), 2.0);
+    }
+
+    #[test]
+    fn batch_views() {
+        let t = Tensor::from_vec((0..12).map(|x| x as f32).collect(), &[2, 2, 3]);
+        assert_eq!(t.batch(0), &[0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.batch(1), &[6., 7., 8., 9., 10., 11.]);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::from_vec(vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0], &[2, 3]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+}

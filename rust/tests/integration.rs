@@ -1,0 +1,207 @@
+//! Cross-module integration tests: trained artifacts → Rust engine →
+//! harness → PJRT runtime (artifact-dependent tests skip gracefully when
+//! `make artifacts` hasn't run, so plain `cargo test` stays green).
+
+use bfp_cnn::coordinator::engine::{forward_batch, ExecMode};
+use bfp_cnn::harness::table3::{drop_for, eval_set_for};
+use bfp_cnn::models::{weights_io::WeightBundle, ModelId};
+use bfp_cnn::quant::BfpConfig;
+use std::path::Path;
+
+fn artifacts() -> &'static Path {
+    Path::new("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("lenet_weights.bfpw").exists()
+}
+
+/// The JAX-trained LeNet must classify the Rust-generated digit set
+/// accurately — proving the datagen twins and the .bfpw interchange line
+/// up across the language boundary.
+#[test]
+fn trained_lenet_transfers_across_languages() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = ModelId::Lenet.build(32, 1, artifacts());
+    let ds = bfp_cnn::data::DigitDataset::generate(100, 31337);
+    let logits = forward_batch(&model, &ds.images, ExecMode::Fp32);
+    let correct = logits
+        .iter()
+        .zip(&ds.labels)
+        .filter(|(l, &y)| {
+            l.data.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 == y
+        })
+        .count();
+    assert!(correct >= 90, "trained lenet only {correct}/100 on rust digits");
+}
+
+/// 8-bit BFP must cost (almost) no accuracy on the trained nets — the
+/// paper's headline claim, end to end through the Rust engine.
+#[test]
+fn bfp8_near_lossless_on_trained_nets() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for id in [ModelId::Lenet, ModelId::Cifar10] {
+        let model = id.build(32, 1, artifacts());
+        let set = eval_set_for(id, &model, 60, 99);
+        let drop = drop_for(&model, &set, BfpConfig::paper_default());
+        assert!(drop.abs() <= 0.05, "{}: 8-bit drop {drop}", id.name());
+    }
+}
+
+/// Width monotonicity on a trained net: aggressive narrowing hurts more.
+#[test]
+fn narrower_widths_hurt_more() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = ModelId::Cifar10.build(32, 1, artifacts());
+    let set = eval_set_for(ModelId::Cifar10, &model, 60, 5);
+    let d3 = drop_for(&model, &set, BfpConfig::new(3, 3));
+    let d8 = drop_for(&model, &set, BfpConfig::new(8, 8));
+    assert!(d3 >= d8 - 0.02, "3-bit drop {d3} should exceed 8-bit drop {d8}");
+}
+
+/// The weight bundle parses and has exactly the LeNet shapes.
+#[test]
+fn weight_bundle_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let b = WeightBundle::load(&artifacts().join("lenet_weights.bfpw")).unwrap();
+    for (name, shape) in bfp_cnn::models::lenet::expected_shapes() {
+        let t = b.tensor(name).unwrap();
+        assert_eq!(t.shape, shape, "{name}");
+    }
+}
+
+/// PJRT runtime: load + execute the standalone BFP GEMM artifact and
+/// check it against the Rust BFP GEMM on the same inputs.
+#[test]
+fn pjrt_bfp_gemm_matches_rust_engine() {
+    let path = artifacts().join("bfp_gemm_demo.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: {} not built", path.display());
+        return;
+    }
+    use bfp_cnn::bfp::partition::BlockAxis;
+    use bfp_cnn::bfp::{bfp_gemm, BfpFormat, BfpMatrix};
+
+    let rt = bfp_cnn::runtime::PjrtRuntime::cpu().unwrap();
+    let art = rt.load_hlo_text(&path).unwrap();
+
+    let mut rng = bfp_cnn::data::Rng::new(17);
+    let w = rng.laplacian_vec(4 * 8, 0.3);
+    let i = rng.normal_vec(8 * 16, 1.0);
+    let outs = art.run_f32(&[(&w, &[4, 8]), (&i, &[8, 16])]).unwrap();
+    assert_eq!(outs.len(), 1);
+
+    let wq = BfpMatrix::quantize(&w, 4, 8, BfpFormat::new(8), BlockAxis::PerRow);
+    let iq = BfpMatrix::quantize(&i, 8, 16, BfpFormat::new(8), BlockAxis::Whole);
+    let rust_out = bfp_gemm(&wq, &iq);
+    assert_eq!(outs[0].len(), rust_out.data.len());
+    for (a, b) in outs[0].iter().zip(&rust_out.data) {
+        assert!(
+            (a - b).abs() <= a.abs().max(b.abs()) * 1e-5 + 1e-6,
+            "pallas artifact {a} vs rust engine {b}"
+        );
+    }
+}
+
+/// PJRT LeNet artifact agrees with the Rust fp-engine's BFP path on the
+/// same batch (full L1=L2=L3 stack consistency).
+#[test]
+fn pjrt_lenet_artifact_matches_rust_bfp_path() {
+    let hlo = artifacts().join("lenet_fwd_b8.hlo.txt");
+    if !hlo.exists() {
+        eprintln!("skipping: {} not built", hlo.display());
+        return;
+    }
+    let rt = bfp_cnn::runtime::PjrtRuntime::cpu().unwrap();
+    let art = rt.load_hlo_text(&hlo).unwrap();
+    let weights = WeightBundle::load(&artifacts().join("lenet_weights.bfpw")).unwrap();
+
+    // weight args in manifest order
+    let manifest = std::fs::read_to_string(artifacts().join("lenet_fwd_b8.args.txt")).unwrap();
+    let mut args_owned: Vec<(Vec<f32>, Vec<i64>)> = Vec::new();
+    for line in manifest.lines() {
+        let mut parts = line.split_whitespace();
+        let name = parts.next().unwrap();
+        if name == "__input__" {
+            continue;
+        }
+        let shape: Vec<i64> = parts.map(|d| d.parse().unwrap()).collect();
+        args_owned.push((weights.vec(name).unwrap(), shape));
+    }
+
+    let ds = bfp_cnn::data::DigitDataset::generate(8, 4242);
+    let mut flat = Vec::new();
+    for img in &ds.images {
+        flat.extend_from_slice(&img.data);
+    }
+    let shape = [8i64, 1, 28, 28];
+    let mut args: Vec<(&[f32], &[i64])> =
+        args_owned.iter().map(|(d, s)| (d.as_slice(), s.as_slice())).collect();
+    args.push((&flat, &shape));
+    let outs = art.run_f32(&args).unwrap();
+    let pjrt_logits = &outs[0];
+
+    let model = ModelId::Lenet.build(32, 1, artifacts());
+    let rust_logits = forward_batch(&model, &ds.images, ExecMode::Bfp(BfpConfig::paper_default()));
+
+    for (b, rust) in rust_logits.iter().enumerate() {
+        for (c, &rv) in rust.data.iter().enumerate() {
+            let pv = pjrt_logits[b * 10 + c];
+            assert!(
+                (pv - rv).abs() <= rv.abs().max(1.0) * 5e-3,
+                "batch {b} class {c}: pjrt {pv} vs rust {rv}"
+            );
+        }
+    }
+}
+
+/// Whole-harness smoke: every table/figure driver runs end to end on a
+/// tiny configuration.
+#[test]
+fn all_harnesses_smoke() {
+    use bfp_cnn::harness::{fig3, table1, table2, table3, table4};
+    assert_eq!(table1::run(8, 8).len(), 2);
+    let t2 = table2::run(32, 2, 1, artifacts());
+    assert_eq!(t2.rows.len(), 5); // eq2/eq4 × {L=8, L=6} + fp32 row
+    let t3 = table3::run_model(ModelId::Lenet, 32, 4, 1, artifacts());
+    assert_eq!(t3.rows.len(), 4);
+    let (t4, dev) = table4::run(32, 1, 1, artifacts());
+    assert!(t4.rows.len() > 40);
+    assert!(dev.is_finite());
+    let f3 = fig3::run(32, 1, 1, artifacts());
+    assert_eq!(f3.rows.len(), 4);
+}
+
+/// Serving pipeline: batched BFP inference through the coordinator hits
+/// the same accuracy as direct engine calls.
+#[test]
+fn coordinator_matches_direct_engine() {
+    use bfp_cnn::coordinator::server::{InferenceServer, RustBackend, ServerConfig};
+    let model = ModelId::Lenet.build(32, 1, artifacts());
+    let ds = bfp_cnn::data::DigitDataset::generate(16, 909);
+    let direct = forward_batch(&model, &ds.images, ExecMode::Bfp(BfpConfig::paper_default()));
+
+    let model2 = ModelId::Lenet.build(32, 1, artifacts());
+    let mut server = InferenceServer::start(
+        Box::new(RustBackend { model: model2, mode: ExecMode::Bfp(BfpConfig::paper_default()) }),
+        ServerConfig::default(),
+    );
+    let pending: Vec<_> = ds.images.iter().map(|i| server.submit(i.clone())).collect();
+    for (rx, want) in pending.into_iter().zip(&direct) {
+        let got = rx.recv().unwrap().logits;
+        assert_eq!(got.data, want.data, "served logits must match direct engine");
+    }
+    server.shutdown();
+}

@@ -1,0 +1,236 @@
+//! Property-style randomized tests over the BFP invariants (DESIGN.md §7).
+//!
+//! proptest is unavailable in the offline image, so each property is
+//! driven by the library's deterministic [`Rng`] across a few hundred
+//! random cases with mixed shapes, widths and distributions — failures
+//! print the seed for replay.
+
+use bfp_cnn::analysis::snr::{db_to_nsr, measured_snr};
+use bfp_cnn::bfp::gemm::f32_gemm;
+use bfp_cnn::bfp::partition::{BlockAxis, PartitionScheme};
+use bfp_cnn::bfp::{bfp_gemm, block_format, dequantize, max_exponent, BfpFormat, BfpMatrix};
+use bfp_cnn::data::Rng;
+use bfp_cnn::quant::widths::WidthPlan;
+
+fn random_values(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let kind = rng.below(4);
+    let scale = 2f64.powf(rng.uniform_range(-8.0, 8.0));
+    match kind {
+        0 => rng.normal_vec(n, scale),
+        1 => rng.laplacian_vec(n, scale),
+        2 => (0..n).map(|_| rng.uniform_range(-scale, scale) as f32).collect(),
+        _ => {
+            // sparse with outliers — worst case for shared exponents
+            let mut v = rng.normal_vec(n, scale * 0.01);
+            if n > 0 {
+                let idx = rng.below(n);
+                v[idx] = (scale * 10.0) as f32;
+            }
+            v
+        }
+    }
+}
+
+/// |x − x'| ≤ Δ/2 for round-off (Δ for the saturated block max).
+#[test]
+fn prop_quantize_error_bounded() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..300 {
+        let n = 1 + rng.below(257);
+        let bits = 3 + rng.below(10) as u32;
+        let xs = random_values(&mut rng, n);
+        let fmt = BfpFormat::new(bits);
+        let b = block_format(&xs, fmt);
+        let Some(eps) = max_exponent(&xs) else { continue };
+        let step = fmt.step(eps) as f64;
+        for (x, y) in xs.iter().zip(b.to_f32()) {
+            let err = (*x as f64 - y as f64).abs();
+            assert!(err <= step * 1.0000001, "case {case}: |{x} - {y}| = {err} > step {step} (bits={bits})");
+        }
+    }
+}
+
+/// The block exponent equals the max element exponent.
+#[test]
+fn prop_block_exponent_is_max() {
+    let mut rng = Rng::new(0xB0B);
+    for _ in 0..300 {
+        let n = 1 + rng.below(100);
+        let xs = random_values(&mut rng, n);
+        if let Some(eps) = max_exponent(&xs) {
+            let b = block_format(&xs, BfpFormat::new(8));
+            assert_eq!(b.exponent, eps);
+            // every element's exponent ≤ block exponent
+            for &x in &xs {
+                if let Some(e) = bfp_cnn::bfp::exponent_of(x) {
+                    assert!(e <= eps);
+                }
+            }
+        }
+    }
+}
+
+/// Quantization is a projection: quantizing an already-quantized block
+/// changes nothing (idempotence).
+#[test]
+fn prop_quantize_idempotent() {
+    let mut rng = Rng::new(0x1DE);
+    for _ in 0..200 {
+        let n = 1 + rng.below(128);
+        let bits = 4 + rng.below(9) as u32;
+        let xs = random_values(&mut rng, n);
+        let once = dequantize(&xs, BfpFormat::new(bits));
+        let twice = dequantize(&once, BfpFormat::new(bits));
+        assert_eq!(once, twice, "bits={bits}");
+    }
+}
+
+/// The fixed-point GEMM is bit-exact against an i128 integer reference —
+/// the §3.4 width-plan guarantee, for every partition scheme.
+#[test]
+fn prop_gemm_exact_vs_integer_reference() {
+    let mut rng = Rng::new(0x6E33);
+    for case in 0..120 {
+        let m = 1 + rng.below(12);
+        let k = 1 + rng.below(48);
+        let n = 1 + rng.below(24);
+        let lw = 3 + rng.below(8) as u32;
+        let li = 3 + rng.below(8) as u32;
+        let scheme = match rng.below(4) {
+            0 => PartitionScheme::Eq2,
+            1 => PartitionScheme::Eq3,
+            2 => PartitionScheme::Eq4,
+            _ => PartitionScheme::Eq5,
+        };
+        let w = random_values(&mut rng, m * k);
+        let i = random_values(&mut rng, k * n);
+        let wq = BfpMatrix::quantize(&w, m, k, BfpFormat::new(lw), scheme.w_axis());
+        let iq = BfpMatrix::quantize(&i, k, n, BfpFormat::new(li), scheme.i_axis());
+        let o = bfp_gemm(&wq, &iq);
+        // i128 mantissa reference
+        for r in 0..m {
+            for c in 0..n {
+                let mut acc: i128 = 0;
+                for kk in 0..k {
+                    acc += wq.mantissas[r * k + kk] as i128 * iq.mantissas[kk * n + c] as i128;
+                }
+                let we = wq.exponent_at(r, 0);
+                let ie = iq.exponent_at(0, c);
+                let expect = if we <= i32::MIN / 4 || ie <= i32::MIN / 4 {
+                    0.0
+                } else {
+                    acc as f64 * 2f64.powi(we + ie - wq.frac_bits - iq.frac_bits)
+                };
+                let got = o.data[r * n + c] as f64;
+                let tol = expect.abs() * 1e-6 + 1e-30;
+                assert!(
+                    (got - expect).abs() <= tol,
+                    "case {case} ({scheme:?}, lw={lw}, li={li}): O[{r},{c}] = {got} vs {expect}"
+                );
+            }
+        }
+    }
+}
+
+/// The planned accumulator width never saturates: worst-case |acc| fits.
+#[test]
+fn prop_width_plan_no_overflow() {
+    let mut rng = Rng::new(0x57EE1);
+    for _ in 0..300 {
+        let k = 1 + rng.below(100_000);
+        let lw = 3 + rng.below(14) as u32;
+        let li = 3 + rng.below(14) as u32;
+        let plan = WidthPlan::plan(k, lw, li);
+        let worst = WidthPlan::worst_case_acc(k, lw, li);
+        let cap = (1i128 << (plan.accumulator_bits - 1)) - 1;
+        assert!(worst <= cap, "k={k} lw={lw} li={li}: {worst} > {cap}");
+    }
+}
+
+/// Finer partitions never lose SNR: eq3 ≥ eq4/eq5 ≥ eq2 (within noise).
+#[test]
+fn prop_partition_snr_ordering() {
+    let mut rng = Rng::new(0x0DD);
+    for _ in 0..40 {
+        let (m, k, n) = (8 + rng.below(16), 16 + rng.below(64), 8 + rng.below(32));
+        let w = random_values(&mut rng, m * k);
+        let i = random_values(&mut rng, k * n);
+        let fmt = BfpFormat::new(8);
+        let err = |axis: BlockAxis, data: &[f32], r: usize, c: usize| -> f64 {
+            let q = BfpMatrix::quantize(data, r, c, fmt, axis);
+            let back = q.to_f32();
+            data.iter().zip(&back).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        // W: per-row ≤ whole; I: per-col ≤ whole (energy of quant error)
+        assert!(err(BlockAxis::PerRow, &w, m, k) <= err(BlockAxis::Whole, &w, m, k) * 1.0001);
+        assert!(err(BlockAxis::PerCol, &i, k, n) <= err(BlockAxis::Whole, &i, k, n) * 1.0001);
+    }
+}
+
+/// Eq. (16) NSR additivity: measured output NSR ≈ η_W + η_I for
+/// independent operands (within a factor ~2 — it's a statistical model).
+#[test]
+fn prop_nsr_additivity() {
+    let mut rng = Rng::new(0xADD);
+    for _ in 0..20 {
+        let (m, k, n) = (32, 256, 64);
+        let w = rng.laplacian_vec(m * k, 0.1);
+        let i = rng.normal_vec(k * n, 1.0);
+        let fmt = BfpFormat::new(8);
+        let wq = BfpMatrix::quantize(&w, m, k, fmt, BlockAxis::PerRow);
+        let iq = BfpMatrix::quantize(&i, k, n, fmt, BlockAxis::Whole);
+        let o = bfp_gemm(&wq, &iq);
+        let mut exact = vec![0f32; m * n];
+        f32_gemm(&w, &i, m, k, n, &mut exact);
+        let eta_o = db_to_nsr(measured_snr(&exact, &o.data));
+        let eta_w = db_to_nsr(measured_snr(&w, &wq.to_f32()));
+        let eta_i = db_to_nsr(measured_snr(&i, &iq.to_f32()));
+        let predicted = eta_w + eta_i;
+        assert!(
+            eta_o / predicted < 2.5 && predicted / eta_o < 2.5,
+            "eta_o {eta_o:.3e} vs predicted {predicted:.3e}"
+        );
+    }
+}
+
+/// Rounding beats truncation in quantization SNR (§3.1's argument).
+#[test]
+fn prop_rounding_beats_truncation() {
+    let mut rng = Rng::new(0x7271);
+    for _ in 0..50 {
+        let n = 512 + rng.below(2048);
+        let xs = random_values(&mut rng, n);
+        if max_exponent(&xs).is_none() {
+            continue;
+        }
+        let round_err: f64 = xs
+            .iter()
+            .zip(dequantize(&xs, BfpFormat::new(8)))
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        let trunc_err: f64 = xs
+            .iter()
+            .zip(dequantize(&xs, BfpFormat::truncating(8)))
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!(round_err <= trunc_err * 1.001, "round {round_err} vs trunc {trunc_err}");
+    }
+}
+
+/// Truncation has a DC bias toward zero; rounding is (near) unbiased —
+/// the mechanism behind the paper's layer-wise bias-accumulation warning.
+#[test]
+fn prop_truncation_bias_rounding_unbiased() {
+    let mut rng = Rng::new(0xB1A5);
+    let n = 200_000;
+    let xs: Vec<f32> = (0..n).map(|_| rng.uniform_range(0.5, 1.9) as f32).collect();
+    let mean_err = |fmt: BfpFormat| -> f64 {
+        xs.iter().zip(dequantize(&xs, fmt)).map(|(a, b)| (b - a) as f64).sum::<f64>() / n as f64
+    };
+    let round_bias = mean_err(BfpFormat::new(8));
+    let trunc_bias = mean_err(BfpFormat::truncating(8));
+    let step = BfpFormat::new(8).step(0) as f64;
+    assert!(round_bias.abs() < step * 0.02, "rounding bias {round_bias} vs step {step}");
+    // truncation of positive values biases low by ~step/2
+    assert!(trunc_bias < -step * 0.3, "truncation bias {trunc_bias} vs step {step}");
+}
