@@ -1,0 +1,69 @@
+//! NSR-guided mixed-precision autotuning in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example autotune_plan [n_calib_images]
+//! ```
+//!
+//! Plans per-layer `(L_W, L_I)` mantissa widths for LeNet against the
+//! quality of the paper's uniform 8/8 configuration, prints the plan and
+//! its Pareto frontier, then executes the plan per-layer through the
+//! coordinator engine to show the serving stack honours it.
+
+use bfp_cnn::autotune::{
+    autotune_with_stats, calibrate, measure_schedule, uniform_predicted_snr_db, PlannerOptions,
+};
+use bfp_cnn::coordinator::engine::{forward_batch, ExecMode};
+use bfp_cnn::harness::autotune_report;
+use bfp_cnn::models::ModelId;
+use bfp_cnn::quant::{BfpConfig, LayerSchedule};
+use std::path::Path;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(4);
+    let model = ModelId::Lenet.build(32, 1, Path::new("artifacts"));
+    let calib = bfp_cnn::data::DigitDataset::generate(n, 2024).images;
+
+    // --- 1. calibrate once, derive the budget from uniform 8/8 ---
+    let opts = PlannerOptions::default();
+    let convs = calibrate(&model, &calib, &opts).expect("calibration");
+    let budget = uniform_predicted_snr_db(&convs, 8);
+    println!("budget: match uniform 8/8 predicted output SNR = {budget:.2} dB\n");
+
+    // --- 2. plan + measure + refine ---
+    let plan = autotune_with_stats(&model, &calib, &convs, budget, &opts);
+    autotune_report::plan_table(&plan).print();
+    println!();
+    autotune_report::frontier_table(&plan).print();
+
+    // --- 3. compare against the uniform baseline ---
+    let uni = measure_schedule(&model, &calib, &LayerSchedule::uniform(BfpConfig::paper_default()));
+    println!(
+        "\nuniform 8/8 measured {:.2} dB @ {:.1} kbit | plan measured {:.2} dB @ {:.1} kbit ({:.1}% saved)",
+        uni.conv_out_snr_db,
+        plan.uniform_traffic_bits(8, 8) / 1000.0,
+        plan.measured_snr_db,
+        plan.total_traffic_bits() / 1000.0,
+        100.0 * plan.savings_vs_uniform8(),
+    );
+
+    // --- 4. the serving engine executes the plan per-layer ---
+    let eval = bfp_cnn::data::DigitDataset::generate(4, 7).images;
+    let fp = forward_batch(&model, &eval, ExecMode::Fp32);
+    let mixed = forward_batch(&model, &eval, ExecMode::Mixed(plan.to_schedule()));
+    let agree = fp
+        .iter()
+        .zip(&mixed)
+        .filter(|(a, b)| argmax(&a.data) == argmax(&b.data))
+        .count();
+    println!("engine ExecMode::Mixed: {agree}/{} top-1 agreement with fp32", eval.len());
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}

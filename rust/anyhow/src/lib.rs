@@ -1,0 +1,141 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this path dependency
+//! provides the slice of `anyhow` the workspace actually uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait (on `Result` and `Option`)
+//! and the `anyhow!` / `bail!` / `ensure!` macros. Errors are carried as
+//! rendered strings — source-chain downcasting is not supported (nothing
+//! in this workspace uses it).
+
+use std::fmt;
+
+/// A string-backed error type mirroring `anyhow::Error`'s surface.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (`anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e:?}` / `{e:#}` on anyhow::Error print the message (+ chain);
+        // we carry the chain pre-rendered inside `msg`.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error (`anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {}", e.into())))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", f(), e.into())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("...")` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "...")` — bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_even(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("not a number")?;
+        ensure!(n % 2 == 0, "{n} is odd");
+        Ok(n)
+    }
+
+    #[test]
+    fn happy_path() {
+        assert_eq!(parse_even("4").unwrap(), 4);
+    }
+
+    #[test]
+    fn context_wraps_std_errors() {
+        let e = parse_even("x").unwrap_err();
+        assert!(e.to_string().starts_with("not a number: "), "{e}");
+    }
+
+    #[test]
+    fn ensure_formats() {
+        let e = parse_even("3").unwrap_err();
+        assert_eq!(e.to_string(), "3 is odd");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e:?}"), "missing");
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "9x".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+}

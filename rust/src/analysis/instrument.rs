@@ -10,7 +10,7 @@ use super::snr::{quant_error_variance, snr_db, theoretical_per_row_snr};
 use crate::bfp::{bfp_gemm, max_exponent, BfpMatrix};
 use crate::nn::graph::Executor;
 use crate::nn::{ops, BatchNorm, Conv2d, Dense};
-use crate::quant::BfpConfig;
+use crate::quant::{BfpConfig, LayerSchedule};
 use crate::tensor::{avg_pool2d, global_avg_pool, max_pool2d, Tensor};
 
 /// Which Table 4 row family a record belongs to.
@@ -61,8 +61,13 @@ struct Accum {
 
 /// The dual executor. Thread a `(fp32, bfp)` pair of tensors through the
 /// graph; conv layers run both data flows and record everything.
+///
+/// Precision is a per-layer [`LayerSchedule`], so the same machinery
+/// measures the paper's uniform sweeps ([`InstrumentExec::new`]) and the
+/// mixed-precision plans of [`crate::autotune`]
+/// ([`InstrumentExec::with_schedule`]).
 pub struct InstrumentExec {
-    pub cfg: BfpConfig,
+    pub schedule: LayerSchedule,
     accums: Vec<Accum>,
     cursor: usize,
     relu_count: usize,
@@ -76,8 +81,14 @@ pub struct DualTensor {
 }
 
 impl InstrumentExec {
+    /// Uniform precision across every conv layer.
     pub fn new(cfg: BfpConfig) -> Self {
-        Self { cfg, accums: Vec::new(), cursor: 0, relu_count: 0 }
+        Self::with_schedule(LayerSchedule::uniform(cfg))
+    }
+
+    /// Per-layer precision (dual-forward measurement of a mixed plan).
+    pub fn with_schedule(schedule: LayerSchedule) -> Self {
+        Self { schedule, accums: Vec::new(), cursor: 0, relu_count: 0 }
     }
 
     /// Run one image through the model, accumulating statistics.
@@ -147,7 +158,7 @@ impl Executor for InstrumentExec {
     type T = DualTensor;
 
     fn conv(&mut self, layer: &Conv2d, x: DualTensor) -> DualTensor {
-        let cfg = self.cfg;
+        let cfg = self.schedule.for_layer(&layer.name);
         // FP32 reference path
         let fp_out = layer.forward_fp32(&x.fp);
 

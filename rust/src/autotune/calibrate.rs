@@ -1,0 +1,283 @@
+//! Calibration pass: gather the per-layer statistics the analytic NSR
+//! surrogate consumes, in ONE fp32 forward per calibration image.
+//!
+//! The paper's §4 theory needs only width-independent signal statistics:
+//! per conv layer, the im2col matrix's energy and block exponent (for the
+//! eq. 8–10 input quantization noise at any candidate `L_I`) and the
+//! weight matrix's per-row SNR at each candidate `L_W` (eqs. 11–13).
+//! Collecting them once lets the planner evaluate thousands of width
+//! assignments without touching the network again — the surrogate chains
+//! the stats through the §4.3 multi-layer propagation
+//! ([`predict_chain`]).
+
+use crate::analysis::multi_layer::{eta2, total_input_nsr};
+use crate::analysis::single_layer::output_nsr;
+use crate::analysis::snr::{db_to_nsr, nsr_to_db, quant_error_variance, theoretical_per_row_snr};
+use crate::bfp::gemm::f32_gemm;
+use crate::bfp::{max_exponent, BfpFormat};
+use crate::nn::graph::Executor;
+use crate::nn::{ops, BatchNorm, Block, Conv2d, Dense};
+use crate::tensor::{avg_pool2d, global_avg_pool, max_pool2d, Tensor};
+use std::collections::BTreeMap;
+
+/// Width-independent quantization statistics of one conv layer,
+/// accumulated over the calibration set.
+#[derive(Debug, Clone)]
+pub struct ConvCalibration {
+    pub name: String,
+    /// GEMM geometry `W_{M×K} · I_{K×N}`.
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Σ over images of the im2col signal energy.
+    in_sig: f64,
+    /// Per candidate `L_I`: Σ over images of the eq. (8) noise energy.
+    in_noise: BTreeMap<u32, f64>,
+    /// Per candidate `L_W`: theoretical per-row weight SNR (dB).
+    weight_snr_db: BTreeMap<u32, f64>,
+}
+
+impl ConvCalibration {
+    /// Fresh-quantization input NSR at activation width `l_i` (eqs. 9–10).
+    pub fn input_nsr(&self, l_i: u32) -> f64 {
+        let noise = self.in_noise.get(&l_i).copied().unwrap_or(f64::NAN);
+        if self.in_sig <= 0.0 {
+            return 0.0;
+        }
+        noise / self.in_sig
+    }
+
+    /// Weight quantization NSR at weight width `l_w` (eqs. 11–13).
+    pub fn weight_nsr(&self, l_w: u32) -> f64 {
+        db_to_nsr(self.weight_snr_db.get(&l_w).copied().unwrap_or(f64::NAN))
+    }
+}
+
+/// FP32 calibration executor: normal fp32 inference, recording surrogate
+/// statistics at every conv layer for a fixed candidate-width set.
+pub struct CalibExec {
+    widths: Vec<u32>,
+    convs: Vec<ConvCalibration>,
+    cursor: usize,
+}
+
+impl CalibExec {
+    /// `widths`: the candidate mantissa widths (incl. sign) the planner
+    /// may assign — statistics are gathered for each.
+    pub fn new(widths: &[u32]) -> Self {
+        assert!(!widths.is_empty(), "need at least one candidate width");
+        Self { widths: widths.to_vec(), convs: Vec::new(), cursor: 0 }
+    }
+
+    /// Run one calibration image, accumulating statistics.
+    pub fn run_image(&mut self, graph: &Block, input: &Tensor) -> Tensor {
+        self.cursor = 0;
+        graph.execute(input.clone(), self)
+    }
+
+    /// Finished per-conv statistics in execution order.
+    pub fn finish(self) -> Vec<ConvCalibration> {
+        self.convs
+    }
+}
+
+impl Executor for CalibExec {
+    type T = Tensor;
+
+    fn conv(&mut self, layer: &Conv2d, x: Tensor) -> Tensor {
+        let (col, geo) = layer.im2col(&x);
+        let (m, k, n) = (layer.out_channels(), geo.k(), geo.n());
+
+        if self.cursor == self.convs.len() {
+            // first image: create the slot and compute the (image-
+            // independent) weight statistics once per candidate width
+            let mut weight_snr_db = BTreeMap::new();
+            for &w in &self.widths {
+                weight_snr_db
+                    .insert(w, theoretical_per_row_snr(&layer.weights.data, m, k, BfpFormat::new(w)));
+            }
+            self.convs.push(ConvCalibration {
+                name: layer.name.clone(),
+                m,
+                k,
+                n,
+                in_sig: 0.0,
+                in_noise: self.widths.iter().map(|&w| (w, 0.0)).collect(),
+                weight_snr_db,
+            });
+        }
+        let slot = &mut self.convs[self.cursor];
+        debug_assert_eq!(slot.name, layer.name, "calibration order diverged");
+        self.cursor += 1;
+
+        // input statistics: whole-matrix block exponent (eq. 4's I axis)
+        slot.in_sig += col.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        if let Some(eps) = max_exponent(&col) {
+            for (&w, noise) in slot.in_noise.iter_mut() {
+                *noise += quant_error_variance(BfpFormat::new(w), eps) * col.len() as f64;
+            }
+        }
+
+        // continue the fp32 forward from the already-built im2col
+        let mut out = vec![0f32; m * n];
+        f32_gemm(&layer.weights.data, &col, m, k, n, &mut out);
+        if !layer.bias.is_empty() {
+            for (oc, &b) in layer.bias.iter().enumerate() {
+                for v in &mut out[oc * n..(oc + 1) * n] {
+                    *v += b;
+                }
+            }
+        }
+        Tensor::from_vec(out, &[m, geo.out_h(), geo.out_w()])
+    }
+
+    fn dense(&mut self, layer: &Dense, x: Tensor) -> Tensor {
+        layer.forward_fp32(&x)
+    }
+    fn batch_norm(&mut self, layer: &BatchNorm, x: Tensor) -> Tensor {
+        layer.forward(&x)
+    }
+    fn relu(&mut self, x: Tensor) -> Tensor {
+        ops::relu(&x)
+    }
+    fn max_pool(&mut self, _name: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        max_pool2d(&x, k, s, p)
+    }
+    fn avg_pool(&mut self, _name: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        avg_pool2d(&x, k, s, p)
+    }
+    fn global_avg_pool(&mut self, x: Tensor) -> Tensor {
+        global_avg_pool(&x)
+    }
+    fn flatten(&mut self, x: Tensor) -> Tensor {
+        ops::flatten(&x)
+    }
+    fn add(&mut self, a: Tensor, b: Tensor) -> Tensor {
+        ops::add(&a, &b)
+    }
+    fn concat(&mut self, parts: Vec<Tensor>) -> Tensor {
+        ops::concat_channels(&parts)
+    }
+    fn softmax(&mut self, x: Tensor) -> Tensor {
+        ops::softmax(&x)
+    }
+    fn fork(&mut self, x: &Tensor) -> Tensor {
+        x.clone()
+    }
+}
+
+/// Chain per-layer width assignments through the §4.3 multi-layer model.
+///
+/// `widths[i]` is the `(L_W, L_I)` pair of conv `i` (execution order,
+/// matching `convs`). Pooling/ReLU between convs is treated as
+/// NSR-preserving (§4.4's argument; the table-4 pool re-anchor needs a
+/// measured SNR, which a surrogate by definition doesn't have — the
+/// dual-forward refinement step covers the residual).
+///
+/// Returns the per-conv predicted *output* SNR (dB) and the final conv
+/// output NSR (linear).
+pub fn predict_chain(convs: &[ConvCalibration], widths: &[(u32, u32)]) -> (Vec<f64>, f64) {
+    assert_eq!(convs.len(), widths.len());
+    let mut per_layer = Vec::with_capacity(convs.len());
+    let mut carried: Option<f64> = None;
+    for (c, &(l_w, l_i)) in convs.iter().zip(widths) {
+        let eta_single_in = c.input_nsr(l_i);
+        let input_nsr = match carried {
+            None => eta_single_in,
+            Some(eta1) => total_input_nsr(eta1, eta2(eta_single_in, eta1)),
+        };
+        let out = output_nsr(input_nsr, c.weight_nsr(l_w));
+        per_layer.push(nsr_to_db(out));
+        carried = Some(out);
+    }
+    (per_layer, carried.unwrap_or(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::models::init;
+
+    fn two_conv_model(seed: u64) -> Block {
+        let mut rng = Rng::new(seed);
+        Block::seq(vec![
+            Block::Conv(init::conv2d("conv1", 8, 2, 3, 3, 1, 1, &mut rng)),
+            Block::ReLU,
+            Block::MaxPool { name: "pool1".into(), k: 2, s: 2, p: 0 },
+            Block::Conv(init::conv2d("conv2", 8, 8, 3, 3, 1, 1, &mut rng)),
+            Block::ReLU,
+        ])
+    }
+
+    fn image(seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_vec(rng.normal_vec(2 * 12 * 12, 1.0), &[2, 12, 12])
+    }
+
+    #[test]
+    fn gathers_stats_in_order() {
+        let m = two_conv_model(1);
+        let mut exec = CalibExec::new(&[6, 8, 10]);
+        for s in 0..3 {
+            exec.run_image(&m, &image(s));
+        }
+        let convs = exec.finish();
+        assert_eq!(convs.len(), 2);
+        assert_eq!(convs[0].name, "conv1");
+        assert_eq!(convs[1].name, "conv2");
+        for c in &convs {
+            assert!(c.in_sig > 0.0);
+            // 6 dB/bit: each extra mantissa bit quarters the noise power
+            let r = c.input_nsr(6) / c.input_nsr(8);
+            assert!((r - 16.0).abs() < 1e-6, "ratio {r}");
+            assert!(c.weight_nsr(6) > c.weight_nsr(8));
+        }
+    }
+
+    /// The surrogate must agree with the single-layer theory the
+    /// instrumented dual forward computes (same formulas, same stats).
+    #[test]
+    fn surrogate_matches_instrumented_theory_on_first_layer() {
+        let m = two_conv_model(3);
+        let mut calib = CalibExec::new(&[8]);
+        let mut inst = crate::analysis::InstrumentExec::new(crate::quant::BfpConfig::paper_default());
+        for s in 0..3 {
+            calib.run_image(&m, &image(100 + s));
+            inst.run_image(&m, &image(100 + s));
+        }
+        let convs = calib.finish();
+        let recs = inst.finish();
+        let c1 = &recs[0];
+        let calib_in_db = nsr_to_db(convs[0].input_nsr(8));
+        assert!(
+            (calib_in_db - c1.input_snr_single_db).abs() < 1e-9,
+            "calib {calib_in_db} vs instrument {}",
+            c1.input_snr_single_db
+        );
+        let (per_layer, _) = predict_chain(&convs, &[(8, 8), (8, 8)]);
+        assert!(
+            (per_layer[0] - c1.output_snr_single_db).abs() < 1e-9,
+            "chain {} vs single-layer {}",
+            per_layer[0],
+            c1.output_snr_single_db
+        );
+    }
+
+    #[test]
+    fn chain_widths_move_final_nsr() {
+        let m = two_conv_model(5);
+        let mut exec = CalibExec::new(&[4, 6, 8, 10]);
+        for s in 0..2 {
+            exec.run_image(&m, &image(200 + s));
+        }
+        let convs = exec.finish();
+        let (_, wide) = predict_chain(&convs, &[(10, 10), (10, 10)]);
+        let (_, narrow) = predict_chain(&convs, &[(4, 4), (4, 4)]);
+        assert!(narrow > wide * 100.0, "narrow {narrow} vs wide {wide}");
+        // narrowing only the *last* layer hurts less than the first
+        let (_, late) = predict_chain(&convs, &[(10, 10), (6, 6)]);
+        let (_, early) = predict_chain(&convs, &[(6, 6), (10, 10)]);
+        assert!(late > wide && early > wide);
+    }
+}

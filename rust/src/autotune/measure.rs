@@ -1,0 +1,101 @@
+//! Dual-forward measurement of a per-layer schedule — the empirical half
+//! of the planner's predict → measure → refine loop.
+
+use crate::analysis::instrument::{InstrumentExec, LayerKind};
+use crate::models::Model;
+use crate::quant::LayerSchedule;
+use crate::tensor::Tensor;
+
+/// Measured SNRs of one schedule over a calibration set.
+#[derive(Debug, Clone)]
+pub struct PlanMeasurement {
+    /// Per conv layer (execution order): measured output SNR in dB.
+    pub per_layer: Vec<(String, f64)>,
+    /// Output SNR of the last conv layer — the quantity the §4.3
+    /// surrogate predicts.
+    pub conv_out_snr_db: f64,
+    /// End-to-end SNR at the network output (through the fp32 dense
+    /// tail), for reporting.
+    pub logits_snr_db: f64,
+}
+
+/// Run the instrumented dual forward (fp32 ∥ scheduled BFP) over
+/// `images` and aggregate the measured SNRs.
+pub fn measure_schedule(model: &Model, images: &[Tensor], schedule: &LayerSchedule) -> PlanMeasurement {
+    assert!(!images.is_empty(), "measurement needs at least one image");
+    let mut exec = InstrumentExec::with_schedule(schedule.clone());
+    let mut out_sig = 0f64;
+    let mut out_err = 0f64;
+    for img in images {
+        let dual = exec.run_image(&model.graph, img);
+        for (&a, &b) in dual.fp.data.iter().zip(&dual.bfp.data) {
+            out_sig += (a as f64) * (a as f64);
+            out_err += ((b - a) as f64) * ((b - a) as f64);
+        }
+    }
+    let records = exec.finish();
+    let per_layer: Vec<(String, f64)> = records
+        .iter()
+        .filter(|r| r.kind == LayerKind::Conv)
+        .map(|r| (r.name.clone(), r.output_snr_ex_db))
+        .collect();
+    let conv_out_snr_db = per_layer.last().map(|(_, s)| *s).unwrap_or(f64::INFINITY);
+    PlanMeasurement {
+        per_layer,
+        conv_out_snr_db,
+        logits_snr_db: crate::analysis::snr_db(out_sig, out_err),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelId;
+    use crate::quant::BfpConfig;
+    use std::path::Path;
+
+    fn lenet_and_images() -> (Model, Vec<Tensor>) {
+        let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+        let images = crate::data::DigitDataset::generate(3, 11).images;
+        (model, images)
+    }
+
+    #[test]
+    fn measures_every_conv() {
+        let (model, images) = lenet_and_images();
+        let sched = LayerSchedule::uniform(BfpConfig::paper_default());
+        let m = measure_schedule(&model, &images, &sched);
+        assert_eq!(m.per_layer.len(), 2);
+        assert_eq!(m.per_layer[0].0, "conv1");
+        assert_eq!(m.per_layer[1].0, "conv2");
+        assert!(m.conv_out_snr_db.is_finite());
+        assert!(m.logits_snr_db.is_finite());
+    }
+
+    #[test]
+    fn wider_schedule_measures_cleaner() {
+        let (model, images) = lenet_and_images();
+        let narrow = measure_schedule(&model, &images, &LayerSchedule::uniform(BfpConfig::new(5, 5)));
+        let wide = measure_schedule(&model, &images, &LayerSchedule::uniform(BfpConfig::new(10, 10)));
+        assert!(
+            wide.conv_out_snr_db > narrow.conv_out_snr_db + 6.0,
+            "wide {} vs narrow {}",
+            wide.conv_out_snr_db,
+            narrow.conv_out_snr_db
+        );
+    }
+
+    #[test]
+    fn mixed_schedule_sits_between_uniforms() {
+        let (model, images) = lenet_and_images();
+        let lo = measure_schedule(&model, &images, &LayerSchedule::uniform(BfpConfig::new(5, 5)));
+        let hi = measure_schedule(&model, &images, &LayerSchedule::uniform(BfpConfig::new(9, 9)));
+        let mixed = measure_schedule(
+            &model,
+            &images,
+            &LayerSchedule::uniform(BfpConfig::new(5, 5)).with_layer("conv1", BfpConfig::new(9, 9)),
+        );
+        assert!(mixed.conv_out_snr_db > lo.conv_out_snr_db - 0.5);
+        assert!(mixed.conv_out_snr_db < hi.conv_out_snr_db + 0.5);
+    }
+}

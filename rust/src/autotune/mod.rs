@@ -1,0 +1,41 @@
+//! NSR-guided mixed-precision autotuning — the design loop the paper's
+//! abstract promises ("the NSR upper bound … provides the promising
+//! guidance for BFP based CNN engine design"), closed.
+//!
+//! Given a model and an output-SNR budget, the autotuner searches
+//! per-layer `(L_W, L_I)` mantissa widths using the paper's own §4 error
+//! theory as a fast analytic surrogate, then verifies and refines the
+//! result empirically:
+//!
+//! 1. [`calibrate`] — one fp32 forward per calibration image gathers the
+//!    width-independent signal statistics (im2col energy + block
+//!    exponents, per-row weight SNRs) each conv layer contributes to the
+//!    eq. (8)–(13) quantization noise model.
+//! 2. [`planner::plan_with_stats`] — greedy bit-stripping: repeatedly
+//!    remove the mantissa bit with the best predicted-NSR-per-traffic-bit
+//!    score (§4.3 multi-layer propagation over the stats ÷ Table 1
+//!    storage model) until the budget binds. The walk's visited
+//!    trade-offs form a Pareto frontier ([`pareto::ParetoFront`]).
+//! 3. [`measure::measure_schedule`] — the dual-forward instrumentation
+//!    measures the chosen plan; if reality misses the budget the
+//!    surrogate budget tightens and planning repeats ([`autotune`]).
+//!
+//! The product is a serializable [`PrecisionPlan`]; `plan.to_schedule()`
+//! yields the [`crate::quant::LayerSchedule`] that
+//! [`crate::coordinator::engine::ExecMode::Mixed`] executes in the
+//! serving stack.
+
+pub mod calibrate;
+pub mod measure;
+pub mod pareto;
+pub mod plan;
+pub mod planner;
+
+pub use calibrate::{predict_chain, CalibExec, ConvCalibration};
+pub use measure::{measure_schedule, PlanMeasurement};
+pub use pareto::ParetoFront;
+pub use plan::{LayerPlan, ParetoPoint, PrecisionPlan};
+pub use planner::{
+    autotune, autotune_with_stats, calibrate, plan_with_stats, uniform_predicted_snr_db,
+    PlannerOptions,
+};

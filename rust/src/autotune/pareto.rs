@@ -1,0 +1,99 @@
+//! Pareto frontier over (traffic bits ↓, predicted SNR ↑) plan points.
+//!
+//! The greedy planner walks one trajectory through width space; every
+//! visited assignment is a candidate trade-off. The frontier keeps the
+//! non-dominated subset so callers (CLI, reports) can show the whole
+//! cost/quality curve, not just the budget-selected endpoint.
+
+use super::plan::ParetoPoint;
+
+/// Maintains the set of non-dominated `(traffic_bits, predicted_snr_db)`
+/// points. A point dominates another when it is no more expensive AND no
+/// noisier, strictly better in at least one.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFront {
+    points: Vec<ParetoPoint>,
+}
+
+fn dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    let no_worse = a.traffic_bits <= b.traffic_bits && a.predicted_snr_db >= b.predicted_snr_db;
+    let better = a.traffic_bits < b.traffic_bits || a.predicted_snr_db > b.predicted_snr_db;
+    no_worse && better
+}
+
+impl ParetoFront {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a candidate; returns true if it survives (is non-dominated).
+    pub fn insert(&mut self, p: ParetoPoint) -> bool {
+        if self.points.iter().any(|q| dominates(q, &p) || *q == p) {
+            return false;
+        }
+        self.points.retain(|q| !dominates(&p, q));
+        self.points.push(p);
+        true
+    }
+
+    /// The frontier sorted by ascending traffic cost.
+    pub fn into_sorted(mut self) -> Vec<ParetoPoint> {
+        self.points.sort_by(|a, b| a.traffic_bits.total_cmp(&b.traffic_bits));
+        self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(bits: f64, snr: f64) -> ParetoPoint {
+        ParetoPoint { traffic_bits: bits, predicted_snr_db: snr }
+    }
+
+    #[test]
+    fn keeps_non_dominated() {
+        let mut f = ParetoFront::new();
+        assert!(f.insert(p(100.0, 30.0)));
+        assert!(f.insert(p(80.0, 25.0))); // cheaper but noisier: survives
+        assert!(f.insert(p(120.0, 35.0))); // pricier but cleaner: survives
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn drops_dominated_insert() {
+        let mut f = ParetoFront::new();
+        f.insert(p(100.0, 30.0));
+        assert!(!f.insert(p(110.0, 29.0))); // pricier AND noisier
+        assert!(!f.insert(p(100.0, 30.0))); // duplicate
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn evicts_newly_dominated() {
+        let mut f = ParetoFront::new();
+        f.insert(p(100.0, 30.0));
+        f.insert(p(120.0, 32.0));
+        assert!(f.insert(p(90.0, 33.0))); // dominates both
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.into_sorted(), vec![p(90.0, 33.0)]);
+    }
+
+    #[test]
+    fn sorted_by_cost() {
+        let mut f = ParetoFront::new();
+        f.insert(p(300.0, 40.0));
+        f.insert(p(100.0, 20.0));
+        f.insert(p(200.0, 30.0));
+        let v = f.into_sorted();
+        assert_eq!(v.iter().map(|q| q.traffic_bits as u64).collect::<Vec<_>>(), vec![100, 200, 300]);
+    }
+}

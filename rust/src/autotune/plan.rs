@@ -1,0 +1,315 @@
+//! The serializable output of the mixed-precision planner.
+//!
+//! A [`PrecisionPlan`] is the artifact the autotuner hands to the serving
+//! stack: per-conv-layer mantissa widths with the predicted (analytic
+//! surrogate) and measured (dual-forward) output SNRs, plus the Table 1
+//! traffic cost relative to the uniform 8-bit baseline. Plans round-trip
+//! through a line-oriented text format (the same spirit as the `.bfpw`
+//! weight interchange) so the CLI can emit them and the server can load
+//! them later.
+
+use crate::bfp::PartitionScheme;
+use crate::quant::{hw_cost, BfpConfig, LayerSchedule};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// Exponent width assumed by the traffic cost model (the paper uses
+/// 8-bit block exponents throughout).
+pub const EXPONENT_BITS: u32 = 8;
+
+/// One conv layer's slot in a [`PrecisionPlan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlan {
+    pub name: String,
+    /// Weight mantissa bits (incl. sign).
+    pub l_w: u32,
+    /// Activation mantissa bits (incl. sign).
+    pub l_i: u32,
+    /// GEMM geometry `W_{M×K}·I_{K×N}` (drives the traffic cost).
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Surrogate-predicted output SNR at this layer (dB, multi-layer
+    /// propagation up to and including this conv).
+    pub predicted_snr_db: f64,
+    /// Dual-forward measured output SNR (dB); NaN until measured.
+    pub measured_snr_db: f64,
+}
+
+impl LayerPlan {
+    /// Table 1 storage/traffic bits this layer moves per inference.
+    pub fn traffic_bits(&self) -> f64 {
+        hw_cost::layer_traffic_bits(
+            self.m,
+            self.k,
+            self.n,
+            self.l_w,
+            self.l_i,
+            PartitionScheme::Eq4,
+            EXPONENT_BITS,
+        )
+    }
+
+    /// Traffic of the same geometry at a uniform width pair.
+    pub fn traffic_bits_at(&self, l_w: u32, l_i: u32) -> f64 {
+        hw_cost::layer_traffic_bits(self.m, self.k, self.n, l_w, l_i, PartitionScheme::Eq4, EXPONENT_BITS)
+    }
+}
+
+/// A point on the planner's cost/quality trade-off curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParetoPoint {
+    /// Total Table 1 traffic bits per inference across all conv layers.
+    pub traffic_bits: f64,
+    /// Surrogate-predicted network output SNR (dB).
+    pub predicted_snr_db: f64,
+}
+
+/// The autotuner's product: per-layer widths + predictions + cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionPlan {
+    pub model: String,
+    /// The SNR floor (dB) the plan was asked to respect.
+    pub budget_snr_db: f64,
+    /// Per-conv-layer width assignment, in execution order.
+    pub layers: Vec<LayerPlan>,
+    /// Surrogate-predicted network output SNR (dB, last conv).
+    pub predicted_snr_db: f64,
+    /// Dual-forward measured network output SNR (dB, last conv);
+    /// NaN until the calibration measurement has run.
+    pub measured_snr_db: f64,
+    /// The planner's cost/quality frontier (greedy trajectory, dominated
+    /// points pruned).
+    pub frontier: Vec<ParetoPoint>,
+}
+
+impl PrecisionPlan {
+    /// Convert to the executable per-layer schedule (default 8/8 for any
+    /// layer the plan doesn't name — e.g. dense layers stay at the paper
+    /// default if `quantize_dense` is ever enabled).
+    pub fn to_schedule(&self) -> LayerSchedule {
+        LayerSchedule::from_pairs(
+            BfpConfig::paper_default(),
+            self.layers.iter().map(|l| (l.name.clone(), BfpConfig::new(l.l_w, l.l_i))),
+        )
+    }
+
+    /// Sum of per-layer mantissa width pairs (the "plan size" in bits,
+    /// independent of geometry).
+    pub fn total_width_bits(&self) -> u32 {
+        self.layers.iter().map(|l| l.l_w + l.l_i).sum()
+    }
+
+    /// Total Table 1 traffic bits per inference.
+    pub fn total_traffic_bits(&self) -> f64 {
+        self.layers.iter().map(|l| l.traffic_bits()).sum()
+    }
+
+    /// Traffic of the uniform-width baseline on the same geometries.
+    pub fn uniform_traffic_bits(&self, l_w: u32, l_i: u32) -> f64 {
+        self.layers.iter().map(|l| l.traffic_bits_at(l_w, l_i)).sum()
+    }
+
+    /// Fraction of the uniform 8/8 traffic this plan saves (0.12 = 12%).
+    pub fn savings_vs_uniform8(&self) -> f64 {
+        let base = self.uniform_traffic_bits(8, 8);
+        if base <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.total_traffic_bits() / base
+    }
+
+    // ---- text serialization ------------------------------------------
+
+    /// Render to the `bfp-plan-v1` text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("bfp-plan-v1\n");
+        out.push_str(&format!("model {}\n", self.model));
+        out.push_str(&format!("budget_snr_db {}\n", self.budget_snr_db));
+        out.push_str(&format!("predicted_snr_db {}\n", self.predicted_snr_db));
+        out.push_str(&format!("measured_snr_db {}\n", self.measured_snr_db));
+        for l in &self.layers {
+            out.push_str(&format!(
+                "layer {} lw {} li {} m {} k {} n {} predicted_snr_db {} measured_snr_db {}\n",
+                l.name, l.l_w, l.l_i, l.m, l.k, l.n, l.predicted_snr_db, l.measured_snr_db
+            ));
+        }
+        for p in &self.frontier {
+            out.push_str(&format!("pareto {} {}\n", p.traffic_bits, p.predicted_snr_db));
+        }
+        out
+    }
+
+    /// Parse the `bfp-plan-v1` text format.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        ensure!(lines.next() == Some("bfp-plan-v1"), "missing bfp-plan-v1 header");
+        let mut model = None;
+        let mut budget = f64::NAN;
+        let mut predicted = f64::NAN;
+        let mut measured = f64::NAN;
+        let mut layers = Vec::new();
+        let mut frontier = Vec::new();
+        for line in lines {
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("model") => model = Some(parts.next().context("model line missing name")?.to_string()),
+                Some("budget_snr_db") => budget = parse_f64(parts.next(), "budget_snr_db")?,
+                Some("predicted_snr_db") => predicted = parse_f64(parts.next(), "predicted_snr_db")?,
+                Some("measured_snr_db") => measured = parse_f64(parts.next(), "measured_snr_db")?,
+                Some("layer") => layers.push(parse_layer(line)?),
+                Some("pareto") => {
+                    let bits = parse_f64(parts.next(), "pareto bits")?;
+                    let snr = parse_f64(parts.next(), "pareto snr")?;
+                    frontier.push(ParetoPoint { traffic_bits: bits, predicted_snr_db: snr });
+                }
+                Some(other) => bail!("unknown plan line kind: {other}"),
+                None => {}
+            }
+        }
+        Ok(Self {
+            model: model.context("plan missing model line")?,
+            budget_snr_db: budget,
+            layers,
+            predicted_snr_db: predicted,
+            measured_snr_db: measured,
+            frontier,
+        })
+    }
+
+    /// Write the plan to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing plan to {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a plan from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing plan {}", path.display()))
+    }
+}
+
+fn parse_f64(tok: Option<&str>, what: &str) -> Result<f64> {
+    let t = tok.with_context(|| format!("missing {what} value"))?;
+    if t == "NaN" {
+        return Ok(f64::NAN);
+    }
+    t.parse::<f64>().with_context(|| format!("bad {what} value {t}"))
+}
+
+fn expect_kv<'a>(toks: &[&'a str], key: &str, idx: usize) -> Result<&'a str> {
+    ensure!(toks[idx] == key, "layer line: expected `{key}` at token {idx}, got `{}`", toks[idx]);
+    Ok(toks[idx + 1])
+}
+
+fn parse_layer(line: &str) -> Result<LayerPlan> {
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    ensure!(toks.len() == 16 && toks[0] == "layer", "malformed layer line: {line}");
+    Ok(LayerPlan {
+        name: toks[1].to_string(),
+        l_w: expect_kv(&toks, "lw", 2)?.parse().context("bad lw")?,
+        l_i: expect_kv(&toks, "li", 4)?.parse().context("bad li")?,
+        m: expect_kv(&toks, "m", 6)?.parse().context("bad m")?,
+        k: expect_kv(&toks, "k", 8)?.parse().context("bad k")?,
+        n: expect_kv(&toks, "n", 10)?.parse().context("bad n")?,
+        predicted_snr_db: parse_f64(Some(expect_kv(&toks, "predicted_snr_db", 12)?), "layer predicted")?,
+        measured_snr_db: parse_f64(Some(expect_kv(&toks, "measured_snr_db", 14)?), "layer measured")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_plan() -> PrecisionPlan {
+        PrecisionPlan {
+            model: "lenet".into(),
+            budget_snr_db: 28.5,
+            layers: vec![
+                LayerPlan {
+                    name: "conv1".into(),
+                    l_w: 7,
+                    l_i: 8,
+                    m: 8,
+                    k: 25,
+                    n: 784,
+                    predicted_snr_db: 40.25,
+                    measured_snr_db: f64::NAN,
+                },
+                LayerPlan {
+                    name: "conv2".into(),
+                    l_w: 5,
+                    l_i: 6,
+                    m: 16,
+                    k: 200,
+                    n: 196,
+                    predicted_snr_db: 30.5,
+                    measured_snr_db: 30.1,
+                },
+            ],
+            predicted_snr_db: 30.5,
+            measured_snr_db: f64::NAN,
+            frontier: vec![ParetoPoint { traffic_bits: 1000.0, predicted_snr_db: 30.5 }],
+        }
+    }
+
+    #[test]
+    fn text_round_trip() {
+        let p = demo_plan();
+        let q = PrecisionPlan::parse(&p.to_text()).unwrap();
+        assert_eq!(q.model, "lenet");
+        assert_eq!(q.layers.len(), 2);
+        assert_eq!(q.layers[0].l_w, 7);
+        assert_eq!(q.layers[1].l_i, 6);
+        assert!((q.budget_snr_db - 28.5).abs() < 1e-12);
+        assert!(q.layers[0].measured_snr_db.is_nan());
+        assert!((q.layers[1].measured_snr_db - 30.1).abs() < 1e-12);
+        assert_eq!(q.frontier.len(), 1);
+    }
+
+    #[test]
+    fn schedule_carries_widths() {
+        let s = demo_plan().to_schedule();
+        assert_eq!(s.for_layer("conv1"), BfpConfig::new(7, 8));
+        assert_eq!(s.for_layer("conv2"), BfpConfig::new(5, 6));
+        assert_eq!(s.for_layer("fc1"), BfpConfig::paper_default());
+    }
+
+    #[test]
+    fn traffic_below_uniform8() {
+        let p = demo_plan();
+        assert!(p.total_traffic_bits() < p.uniform_traffic_bits(8, 8));
+        assert!(p.savings_vs_uniform8() > 0.0);
+        assert_eq!(p.total_width_bits(), 7 + 8 + 5 + 6);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(PrecisionPlan::parse("nope").is_err());
+        assert!(PrecisionPlan::parse("bfp-plan-v1\nmystery 1").is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let p = demo_plan();
+        let dir = std::env::temp_dir().join("bfp_cnn_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lenet.plan");
+        p.save(&path).unwrap();
+        let q = PrecisionPlan::load(&path).unwrap();
+        // field-wise compare: measured fields are NaN, and NaN != NaN
+        // would defeat a whole-struct assert_eq!
+        assert_eq!(q.layers.len(), p.layers.len());
+        for (a, b) in q.layers.iter().zip(&p.layers) {
+            assert_eq!((a.name.as_str(), a.l_w, a.l_i, a.m, a.k, a.n),
+                       (b.name.as_str(), b.l_w, b.l_i, b.m, b.k, b.n));
+            assert_eq!(a.predicted_snr_db.to_bits(), b.predicted_snr_db.to_bits());
+            assert_eq!(a.measured_snr_db.is_nan(), b.measured_snr_db.is_nan());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

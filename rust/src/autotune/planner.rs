@@ -1,0 +1,353 @@
+//! The NSR-guided mixed-precision planner.
+//!
+//! Greedy bit-stripping over the analytic surrogate: start every conv
+//! layer at a generous uniform width, then repeatedly remove the single
+//! mantissa bit (one layer, weight or activation side) with the best
+//! predicted-NSR-per-traffic-bit ratio, until the next removal would sink
+//! the predicted network output SNR below the budget. Because the
+//! candidate ranking never consults the budget, the trajectory is
+//! identical across budgets — a tighter budget simply stops earlier,
+//! which makes the planner deterministic and bit-monotone by
+//! construction (tested below).
+//!
+//! The surrogate is the paper's own §4 theory ([`predict_chain`]); the
+//! cost is the Table 1 storage/traffic model
+//! ([`crate::quant::hw_cost::layer_traffic_bits`]). After the analytic
+//! walk, [`autotune`] refines against reality: it measures the plan with
+//! the dual-forward instrumentation and, if the measured SNR misses the
+//! budget, re-plans with a tightened surrogate budget until it fits.
+
+use super::calibrate::{predict_chain, CalibExec, ConvCalibration};
+use super::measure::measure_schedule;
+use super::pareto::ParetoFront;
+use super::plan::{LayerPlan, ParetoPoint, PrecisionPlan};
+use crate::analysis::snr::nsr_to_db;
+use crate::models::Model;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Planner knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlannerOptions {
+    /// Starting (and maximum) mantissa width, incl. sign.
+    pub max_width: u32,
+    /// Narrowest width the planner may assign, incl. sign.
+    pub min_width: u32,
+    /// Measured-refinement rounds (0 = analytic plan only).
+    pub refine_rounds: u32,
+}
+
+impl Default for PlannerOptions {
+    fn default() -> Self {
+        Self { max_width: 10, min_width: 3, refine_rounds: 3 }
+    }
+}
+
+impl PlannerOptions {
+    /// The candidate width grid statistics must cover.
+    pub fn width_grid(&self) -> Vec<u32> {
+        (self.min_width..=self.max_width).collect()
+    }
+}
+
+/// Which side of a conv layer a strip step narrows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Knob {
+    Weight,
+    Input,
+}
+
+fn traffic_of(c: &ConvCalibration, l_w: u32, l_i: u32) -> f64 {
+    crate::quant::hw_cost::layer_traffic_bits(
+        c.m,
+        c.k,
+        c.n,
+        l_w,
+        l_i,
+        crate::bfp::PartitionScheme::Eq4,
+        super::plan::EXPONENT_BITS,
+    )
+}
+
+fn total_traffic(convs: &[ConvCalibration], widths: &[(u32, u32)]) -> f64 {
+    convs.iter().zip(widths).map(|(c, &(w, i))| traffic_of(c, w, i)).sum()
+}
+
+/// Pure analytic planning over pre-gathered calibration statistics.
+///
+/// Deterministic: same stats + same budget + same options → same plan.
+pub fn plan_with_stats(
+    model_name: &str,
+    convs: &[ConvCalibration],
+    budget_snr_db: f64,
+    opts: &PlannerOptions,
+) -> PrecisionPlan {
+    assert!(!convs.is_empty(), "model has no conv layers to plan");
+    assert!(opts.min_width >= 2 && opts.min_width <= opts.max_width);
+
+    let mut widths: Vec<(u32, u32)> = vec![(opts.max_width, opts.max_width); convs.len()];
+    let (_, mut cur_nsr) = predict_chain(convs, &widths);
+    let mut front = ParetoFront::new();
+    front.insert(ParetoPoint {
+        traffic_bits: total_traffic(convs, &widths),
+        predicted_snr_db: nsr_to_db(cur_nsr),
+    });
+
+    loop {
+        // rank every legal single-bit strip by ΔNSR per saved traffic bit
+        let mut best: Option<(f64, usize, Knob, f64, f64)> = None; // (score, idx, knob, new_nsr, new_traffic)
+        for idx in 0..convs.len() {
+            for knob in [Knob::Weight, Knob::Input] {
+                let (l_w, l_i) = widths[idx];
+                let cand = match knob {
+                    Knob::Weight if l_w > opts.min_width => (l_w - 1, l_i),
+                    Knob::Input if l_i > opts.min_width => (l_w, l_i - 1),
+                    _ => continue,
+                };
+                let saved = traffic_of(&convs[idx], widths[idx].0, widths[idx].1)
+                    - traffic_of(&convs[idx], cand.0, cand.1);
+                if saved <= 0.0 {
+                    continue;
+                }
+                let mut trial = widths.clone();
+                trial[idx] = cand;
+                let (_, nsr) = predict_chain(convs, &trial);
+                let score = (nsr - cur_nsr).max(0.0) / saved;
+                let new_traffic = total_traffic(convs, &trial);
+                match best {
+                    Some((s, ..)) if score >= s => {}
+                    _ => best = Some((score, idx, knob, nsr, new_traffic)),
+                }
+            }
+        }
+        let Some((_, idx, knob, new_nsr, new_traffic)) = best else {
+            break; // everything is at min_width
+        };
+        if nsr_to_db(new_nsr) < budget_snr_db {
+            break; // the best strip would violate the budget
+        }
+        match knob {
+            Knob::Weight => widths[idx].0 -= 1,
+            Knob::Input => widths[idx].1 -= 1,
+        }
+        cur_nsr = new_nsr;
+        front.insert(ParetoPoint { traffic_bits: new_traffic, predicted_snr_db: nsr_to_db(new_nsr) });
+    }
+
+    let (per_layer_db, final_nsr) = predict_chain(convs, &widths);
+    let layers = convs
+        .iter()
+        .zip(&widths)
+        .zip(&per_layer_db)
+        .map(|((c, &(l_w, l_i)), &snr)| LayerPlan {
+            name: c.name.clone(),
+            l_w,
+            l_i,
+            m: c.m,
+            k: c.k,
+            n: c.n,
+            predicted_snr_db: snr,
+            measured_snr_db: f64::NAN,
+        })
+        .collect();
+    PrecisionPlan {
+        model: model_name.to_string(),
+        budget_snr_db,
+        layers,
+        predicted_snr_db: nsr_to_db(final_nsr),
+        measured_snr_db: f64::NAN,
+        frontier: front.into_sorted(),
+    }
+}
+
+/// Gather calibration statistics for `model` over `calib` images.
+pub fn calibrate(model: &Model, calib: &[Tensor], opts: &PlannerOptions) -> Result<Vec<ConvCalibration>> {
+    ensure!(!calib.is_empty(), "autotune needs a non-empty calibration set");
+    ensure!(
+        opts.min_width >= 2 && opts.min_width <= opts.max_width && opts.max_width <= 24,
+        "width bounds must satisfy 2 <= min ({}) <= max ({}) <= 24",
+        opts.min_width,
+        opts.max_width
+    );
+    let mut exec = CalibExec::new(&opts.width_grid());
+    for img in calib {
+        ensure!(
+            img.shape == model.input_shape,
+            "calibration image shape {:?} != model input {:?}",
+            img.shape,
+            model.input_shape
+        );
+        exec.run_image(&model.graph, img);
+    }
+    let convs = exec.finish();
+    ensure!(!convs.is_empty(), "model {} has no conv layers to plan", model.name);
+    Ok(convs)
+}
+
+/// Surrogate-predicted conv-stack output SNR (dB) at a uniform width —
+/// the natural default budget ("match uniform 8/8 quality with fewer
+/// bits").
+pub fn uniform_predicted_snr_db(convs: &[ConvCalibration], width: u32) -> f64 {
+    let (_, nsr) = predict_chain(convs, &vec![(width, width); convs.len()]);
+    nsr_to_db(nsr)
+}
+
+/// The full predict → measure → refine loop: the autotuner entry point.
+///
+/// Plans analytically against `budget_snr_db` (minimum acceptable conv-
+/// stack output SNR), then measures the plan with the dual-forward
+/// instrumentation on the same calibration set. If measurement misses
+/// the budget (the surrogate ignores pooling re-anchoring, so it can be
+/// a little optimistic), the surrogate budget is tightened by the
+/// deficit and planning repeats — each round only ever *adds* bits back.
+pub fn autotune(
+    model: &Model,
+    calib: &[Tensor],
+    budget_snr_db: f64,
+    opts: &PlannerOptions,
+) -> Result<PrecisionPlan> {
+    let convs = calibrate(model, calib, opts)?;
+    Ok(autotune_with_stats(model, calib, &convs, budget_snr_db, opts))
+}
+
+/// [`autotune`] over pre-gathered calibration statistics (lets callers
+/// calibrate once, derive a budget from the stats, then plan).
+pub fn autotune_with_stats(
+    model: &Model,
+    calib: &[Tensor],
+    convs: &[ConvCalibration],
+    budget_snr_db: f64,
+    opts: &PlannerOptions,
+) -> PrecisionPlan {
+    let mut margin = 0.0f64;
+    let mut plan = plan_with_stats(&model.name, convs, budget_snr_db, opts);
+    for round in 0..=opts.refine_rounds {
+        let measurement = measure_schedule(model, calib, &plan.to_schedule());
+        plan.measured_snr_db = measurement.conv_out_snr_db;
+        for (l, (name, snr)) in plan.layers.iter_mut().zip(&measurement.per_layer) {
+            debug_assert_eq!(&l.name, name);
+            l.measured_snr_db = *snr;
+        }
+        let deficit = budget_snr_db - measurement.conv_out_snr_db;
+        if deficit <= 0.05 || round == opts.refine_rounds {
+            break; // budget met (within measurement noise) or out of rounds
+        }
+        margin += deficit + 0.25;
+        let stricter = plan_with_stats(&model.name, convs, budget_snr_db + margin, opts);
+        let unchanged = stricter
+            .layers
+            .iter()
+            .zip(&plan.layers)
+            .all(|(a, b)| a.l_w == b.l_w && a.l_i == b.l_i);
+        if unchanged {
+            break; // widths are maxed out — the budget is simply infeasible
+        }
+        plan = PrecisionPlan { budget_snr_db, ..stricter };
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelId;
+    use std::path::Path;
+
+    fn lenet() -> Model {
+        ModelId::Lenet.build(32, 1, Path::new("/nonexistent"))
+    }
+
+    fn calib_images(n: usize, seed: u64) -> Vec<Tensor> {
+        crate::data::DigitDataset::generate(n, seed).images
+    }
+
+    fn stats() -> Vec<ConvCalibration> {
+        calibrate(&lenet(), &calib_images(3, 42), &PlannerOptions::default()).unwrap()
+    }
+
+    /// Width assignment + predictions of a plan, NaN-free (the measured
+    /// fields are NaN before refinement, and NaN != NaN would defeat a
+    /// whole-struct `assert_eq!`).
+    fn plan_key(p: &PrecisionPlan) -> Vec<(String, u32, u32, u64)> {
+        p.layers
+            .iter()
+            .map(|l| (l.name.clone(), l.l_w, l.l_i, l.predicted_snr_db.to_bits()))
+            .collect()
+    }
+
+    #[test]
+    fn planner_is_deterministic() {
+        let convs = stats();
+        let a = plan_with_stats("lenet", &convs, 30.0, &PlannerOptions::default());
+        let b = plan_with_stats("lenet", &convs, 30.0, &PlannerOptions::default());
+        assert_eq!(plan_key(&a), plan_key(&b));
+        assert_eq!(a.predicted_snr_db.to_bits(), b.predicted_snr_db.to_bits());
+        assert_eq!(a.frontier.len(), b.frontier.len());
+        // and across independent calibration runs on the same data
+        let c = plan_with_stats("lenet", &stats(), 30.0, &PlannerOptions::default());
+        assert_eq!(plan_key(&a), plan_key(&c));
+    }
+
+    #[test]
+    fn tighter_budget_never_fewer_bits() {
+        let convs = stats();
+        let opts = PlannerOptions::default();
+        let mut prev_bits: Option<u32> = None;
+        // ascending SNR budget = tightening quality requirement
+        for budget in [10.0, 20.0, 30.0, 40.0, 50.0] {
+            let p = plan_with_stats("lenet", &convs, budget, &opts);
+            let bits = p.total_width_bits();
+            if let Some(pb) = prev_bits {
+                assert!(bits >= pb, "budget {budget}: {bits} bits < {pb} bits");
+            }
+            prev_bits = Some(bits);
+        }
+    }
+
+    #[test]
+    fn plan_respects_width_bounds_and_predicts_budget() {
+        let convs = stats();
+        let opts = PlannerOptions::default();
+        let p = plan_with_stats("lenet", &convs, 28.0, &opts);
+        for l in &p.layers {
+            assert!(l.l_w >= opts.min_width && l.l_w <= opts.max_width);
+            assert!(l.l_i >= opts.min_width && l.l_i <= opts.max_width);
+        }
+        assert!(
+            p.predicted_snr_db >= 28.0,
+            "plan predicts {} dB under a 28 dB budget",
+            p.predicted_snr_db
+        );
+        assert!(!p.frontier.is_empty());
+    }
+
+    #[test]
+    fn strips_below_start_width() {
+        let convs = stats();
+        let p = plan_with_stats("lenet", &convs, 20.0, &PlannerOptions::default());
+        let start_bits = 2 * 10 * convs.len() as u32;
+        assert!(p.total_width_bits() < start_bits, "planner stripped nothing");
+    }
+
+    #[test]
+    fn autotune_end_to_end_meets_measured_budget() {
+        let model = lenet();
+        let images = calib_images(4, 7);
+        let budget = 26.0;
+        let plan = autotune(&model, &images, budget, &PlannerOptions::default()).unwrap();
+        assert!(plan.measured_snr_db.is_finite());
+        assert!(
+            plan.measured_snr_db >= budget - 1.0,
+            "measured {} dB misses budget {budget} dB",
+            plan.measured_snr_db
+        );
+        for l in &plan.layers {
+            assert!(l.measured_snr_db.is_finite(), "layer {} unmeasured", l.name);
+        }
+    }
+
+    #[test]
+    fn rejects_empty_calibration() {
+        assert!(autotune(&lenet(), &[], 30.0, &PlannerOptions::default()).is_err());
+    }
+}

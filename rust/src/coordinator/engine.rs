@@ -3,27 +3,60 @@
 
 use crate::models::Model;
 use crate::nn::{BfpExec, Fp32Exec};
-use crate::quant::BfpConfig;
+use crate::quant::{BfpConfig, LayerSchedule};
 use crate::tensor::Tensor;
 
 /// Numeric execution mode.
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// No longer `Copy`: [`ExecMode::Mixed`] carries a per-layer
+/// [`LayerSchedule`] (a name → config map), so clone where a copy was
+/// previously taken.
+#[derive(Debug, Clone, PartialEq)]
 pub enum ExecMode {
     /// FP32 reference (the paper's "floating point" rows).
     Fp32,
-    /// Block-floating-point conv layers (the Figure 2 data flow).
+    /// Block-floating-point conv layers (the Figure 2 data flow), one
+    /// uniform width pair for the whole network.
     Bfp(BfpConfig),
+    /// Per-layer mixed precision — the execution mode of an autotuned
+    /// [`crate::autotune::PrecisionPlan`].
+    Mixed(LayerSchedule),
+}
+
+impl ExecMode {
+    /// Short human-readable tag for logs/metrics.
+    pub fn describe(&self) -> String {
+        match self {
+            ExecMode::Fp32 => "fp32".to_string(),
+            ExecMode::Bfp(cfg) => format!("bfp{}/{}", cfg.l_w, cfg.l_i),
+            ExecMode::Mixed(s) => {
+                let d = s.default_config();
+                format!("mixed({} overrides, default {}/{})", s.overrides().len(), d.l_w, d.l_i)
+            }
+        }
+    }
 }
 
 /// Forward a batch of `[C,H,W]` images, returning per-image logits.
 pub fn forward_batch(model: &Model, images: &[Tensor], mode: ExecMode) -> Vec<Tensor> {
+    // one executor for the whole batch (a Mixed schedule clones its
+    // name → config map once here, not once per image)
+    enum AnyExec {
+        Fp(Fp32Exec),
+        Bfp(BfpExec),
+    }
+    let mut exec = match &mode {
+        ExecMode::Fp32 => AnyExec::Fp(Fp32Exec),
+        ExecMode::Bfp(cfg) => AnyExec::Bfp(BfpExec::new(*cfg)),
+        ExecMode::Mixed(sched) => AnyExec::Bfp(BfpExec::with_schedule(sched.clone())),
+    };
     images
         .iter()
         .map(|img| {
             assert_eq!(img.shape, model.input_shape, "input shape mismatch for {}", model.name);
-            match mode {
-                ExecMode::Fp32 => model.graph.execute(img.clone(), &mut Fp32Exec),
-                ExecMode::Bfp(cfg) => model.graph.execute(img.clone(), &mut BfpExec::new(cfg)),
+            match &mut exec {
+                AnyExec::Fp(e) => model.graph.execute(img.clone(), e),
+                AnyExec::Bfp(e) => model.graph.execute(img.clone(), e),
             }
         })
         .collect()
@@ -50,6 +83,22 @@ mod tests {
             let nsr = a.data.iter().zip(&b.data).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>()
                 / a.energy().max(1e-12);
             assert!(nsr < 0.05, "NSR {nsr}");
+        }
+    }
+
+    #[test]
+    fn mixed_mode_executes_per_layer_plan() {
+        let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+        let images = crate::data::DigitDataset::generate(2, 7).images;
+        let fp = forward_batch(&model, &images, ExecMode::Fp32);
+        let sched = LayerSchedule::uniform(BfpConfig::new(6, 6))
+            .with_layer("conv1", BfpConfig::new(9, 9));
+        let mixed = forward_batch(&model, &images, ExecMode::Mixed(sched));
+        for (a, b) in fp.iter().zip(&mixed) {
+            assert_eq!(b.shape, vec![10]);
+            let nsr = a.data.iter().zip(&b.data).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>()
+                / a.energy().max(1e-12);
+            assert!(nsr < 0.2, "NSR {nsr}");
         }
     }
 

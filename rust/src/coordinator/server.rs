@@ -118,10 +118,10 @@ pub struct RustBackend {
 
 impl Backend for RustBackend {
     fn infer_batch(&mut self, images: &[Tensor]) -> Vec<Tensor> {
-        super::engine::forward_batch(&self.model, images, self.mode)
+        super::engine::forward_batch(&self.model, images, self.mode.clone())
     }
     fn describe(&self) -> String {
-        format!("rust/{}/{:?}", self.model.name, self.mode)
+        format!("rust/{}/{}", self.model.name, self.mode.describe())
     }
 }
 

@@ -1,0 +1,93 @@
+//! Report rendering for autotuned precision plans: the per-layer width
+//! table (predicted vs measured SNR, bits saved vs uniform 8-bit) and
+//! the planner's Pareto frontier.
+
+use super::report::{db, Table};
+use crate::autotune::PrecisionPlan;
+
+/// The per-layer plan table.
+pub fn plan_table(plan: &PrecisionPlan) -> Table {
+    let mut t = Table::new(
+        format!("Autotuned precision plan — {} (budget ≥ {:.2} dB)", plan.model, plan.budget_snr_db),
+        &["layer", "L_W", "L_I", "pred SNR (dB)", "meas SNR (dB)", "traffic (kbit)", "vs 8/8"],
+    );
+    for l in &plan.layers {
+        let base = l.traffic_bits_at(8, 8);
+        let saving = if base > 0.0 { 100.0 * (1.0 - l.traffic_bits() / base) } else { 0.0 };
+        t.row(vec![
+            l.name.clone(),
+            l.l_w.to_string(),
+            l.l_i.to_string(),
+            db(l.predicted_snr_db),
+            db(l.measured_snr_db),
+            format!("{:.1}", l.traffic_bits() / 1000.0),
+            format!("{saving:+.1}%"),
+        ]);
+    }
+    let base = plan.uniform_traffic_bits(8, 8);
+    t.row(vec![
+        "TOTAL".into(),
+        "-".into(),
+        "-".into(),
+        db(plan.predicted_snr_db),
+        db(plan.measured_snr_db),
+        format!("{:.1}", plan.total_traffic_bits() / 1000.0),
+        format!("{:+.1}%", 100.0 * (1.0 - plan.total_traffic_bits() / base.max(1e-12))),
+    ]);
+    t
+}
+
+/// The cost/quality frontier the greedy walk traced.
+pub fn frontier_table(plan: &PrecisionPlan) -> Table {
+    let mut t = Table::new(
+        format!("Pareto frontier — {} ({} points)", plan.model, plan.frontier.len()),
+        &["traffic (kbit)", "predicted SNR (dB)"],
+    );
+    for p in &plan.frontier {
+        t.row(vec![format!("{:.1}", p.traffic_bits / 1000.0), db(p.predicted_snr_db)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{LayerPlan, ParetoPoint};
+
+    fn plan() -> PrecisionPlan {
+        PrecisionPlan {
+            model: "lenet".into(),
+            budget_snr_db: 28.0,
+            layers: vec![LayerPlan {
+                name: "conv1".into(),
+                l_w: 6,
+                l_i: 7,
+                m: 8,
+                k: 25,
+                n: 784,
+                predicted_snr_db: 31.5,
+                measured_snr_db: f64::NAN,
+            }],
+            predicted_snr_db: 31.5,
+            measured_snr_db: f64::NAN,
+            frontier: vec![ParetoPoint { traffic_bits: 2048.0, predicted_snr_db: 31.5 }],
+        }
+    }
+
+    #[test]
+    fn renders_plan_and_frontier() {
+        let p = plan();
+        let s = plan_table(&p).render();
+        assert!(s.contains("conv1"), "{s}");
+        assert!(s.contains("TOTAL"), "{s}");
+        assert!(s.contains("31.5000"), "{s}");
+        let f = frontier_table(&p).render();
+        assert!(f.contains("2.0"), "{f}");
+    }
+
+    #[test]
+    fn unmeasured_cells_render_as_dash() {
+        let s = plan_table(&plan()).render();
+        assert!(s.lines().any(|l| l.contains("conv1") && l.contains(" - ")), "{s}");
+    }
+}

@@ -1,6 +1,7 @@
 //! Experiment drivers that regenerate every table and figure of the
 //! paper's evaluation section (see DESIGN.md §3 for the index).
 
+pub mod autotune_report;
 pub mod benchkit;
 pub mod fig3;
 pub mod readout;

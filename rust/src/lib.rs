@@ -19,6 +19,13 @@
 //!   SNR (eqs. 8–13), single-layer output SNR (eq. 18) and multi-layer
 //!   propagation (eqs. 19–20), along with the empirical dual-forward
 //!   instrumentation that produces Table 4 and Figure 3.
+//! * [`autotune`] — the NSR-guided mixed-precision planner: uses the §4
+//!   theory as an analytic surrogate to search per-layer `(L_W, L_I)`
+//!   widths against an output-SNR budget, scores candidates with the
+//!   Table 1 traffic model, refines with dual-forward measurement and
+//!   emits a serializable [`autotune::PrecisionPlan`] whose
+//!   [`quant::LayerSchedule`] the serving stack executes per layer
+//!   (`ExecMode::Mixed`).
 //! * [`coordinator`] + [`runtime`] — the serving layer: a batched
 //!   inference engine that can execute either the pure-Rust path or the
 //!   AOT-compiled JAX/Pallas artifacts through PJRT.
@@ -29,6 +36,7 @@
 //!   the proprietary datasets per `DESIGN.md` §4.
 
 pub mod analysis;
+pub mod autotune;
 pub mod bfp;
 pub mod coordinator;
 pub mod data;

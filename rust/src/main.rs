@@ -3,21 +3,31 @@
 //! Subcommands map one-to-one onto the paper's evaluation artifacts:
 //!
 //! ```text
-//! repro table1 [--lw 8] [--li 8]
-//! repro table2 [--images 20] [--size 32] [--seed 1]
-//! repro table3 [--model vgg16|resnet18|...|all] [--images 20] [--size 32]
-//! repro table4 [--images 5] [--size 32]
-//! repro fig3   [--images 5] [--size 32]
-//! repro serve  [--model lenet] [--requests 64] [--mode bfp|fp32] [--batch 8]
-//! repro e2e    [--requests 64] [--artifacts artifacts]
-//! repro all    [--images 10]
+//! bfp-cnn table1 [--lw 8] [--li 8]
+//! bfp-cnn table2 [--images 20] [--size 32] [--seed 1]
+//! bfp-cnn table3 [--model vgg16|resnet18|...|all] [--images 20] [--size 32]
+//! bfp-cnn table4 [--images 5] [--size 32]
+//! bfp-cnn fig3   [--images 5] [--size 32]
+//! bfp-cnn autotune <model> [--budget-db <snr>] [--images 4] [--size 32]
+//!                 [--max-width 10] [--min-width 3] [--out plan.txt]
+//! bfp-cnn serve  [--model lenet] [--requests 64] [--mode bfp|fp32|plan]
+//!                [--plan plan.txt] [--batch 8]
+//! bfp-cnn e2e    [--requests 64] [--artifacts artifacts]
+//! bfp-cnn all    [--images 10]
 //! ```
+//!
+//! `autotune` runs the NSR-guided mixed-precision planner: it calibrates
+//! on generated images, searches per-layer mantissa widths against the
+//! SNR budget (default: match the uniform 8/8 prediction), prints the
+//! plan + Pareto frontier, demonstrates per-layer execution through the
+//! coordinator engine, and optionally serializes the plan for
+//! `serve --mode plan`.
 
-use bfp_cnn::coordinator::engine::ExecMode;
+use bfp_cnn::coordinator::engine::{forward_batch, ExecMode};
 use bfp_cnn::coordinator::server::{Backend, InferenceServer, RustBackend, ServerConfig};
-use bfp_cnn::harness::{fig3, table1, table2, table3, table4};
+use bfp_cnn::harness::{autotune_report, fig3, table1, table2, table3, table4};
 use bfp_cnn::models::ModelId;
-use bfp_cnn::quant::BfpConfig;
+use bfp_cnn::quant::{BfpConfig, LayerSchedule};
 use std::path::{Path, PathBuf};
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -117,11 +127,68 @@ fn main() {
             let images: usize = args.get("images", 5);
             fig3::run(size, images, seed, &artifacts).print();
         }
+        "autotune" => {
+            let name = argv
+                .get(1)
+                .filter(|a| !a.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| args.get_str("model", "lenet"));
+            let id = model_by_name(&name).unwrap_or_else(|| {
+                eprintln!("unknown model {name}; choose from:");
+                for m in ModelId::all() {
+                    eprintln!("  {}", m.name());
+                }
+                std::process::exit(2);
+            });
+            let images: usize = args.get("images", 4);
+            let out = args.flags.get("out").map(PathBuf::from);
+            let opts = bfp_cnn::autotune::PlannerOptions {
+                max_width: args.get("max-width", 10),
+                min_width: args.get("min-width", 3),
+                refine_rounds: args.get("refine", 3),
+            };
+            let budget: Option<f64> = match args.flags.get("budget-db") {
+                None => None,
+                Some(v) => match v.parse() {
+                    Ok(x) => Some(x),
+                    Err(_) => {
+                        eprintln!("invalid --budget-db value `{v}` (expected a dB number, e.g. 30.0)");
+                        std::process::exit(2);
+                    }
+                },
+            };
+            if let Err(e) = autotune_cmd(id, size, seed, &artifacts, images, budget, &opts, out.as_deref()) {
+                eprintln!("autotune failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
         "serve" => {
             let requests: usize = args.get("requests", 64);
             let batch: usize = args.get("batch", 8);
             let mode = match args.get_str("mode", "bfp").as_str() {
                 "fp32" => ExecMode::Fp32,
+                "plan" => {
+                    let path = PathBuf::from(args.get_str("plan", "plan.txt"));
+                    match bfp_cnn::autotune::PrecisionPlan::load(&path) {
+                        Ok(plan) => {
+                            let served = args.get_str("model", "lenet");
+                            if plan.model != served {
+                                eprintln!(
+                                    "precision plan {} was tuned for model `{}`, refusing to serve `{}` with it",
+                                    path.display(),
+                                    plan.model,
+                                    served
+                                );
+                                std::process::exit(2);
+                            }
+                            ExecMode::Mixed(plan.to_schedule())
+                        }
+                        Err(e) => {
+                            eprintln!("cannot load precision plan: {e:#}");
+                            std::process::exit(1);
+                        }
+                    }
+                }
                 _ => ExecMode::Bfp(BfpConfig::new(args.get("lw", 8), args.get("li", 8))),
             };
             let id = model_by_name(&args.get_str("model", "lenet")).expect("unknown model");
@@ -152,10 +219,19 @@ fn main() {
             fig3::run(size, images.min(5), seed, &artifacts).print();
         }
         _ => {
-            eprintln!("usage: repro <table1|table2|table3|table4|fig3|serve|e2e|all> [--flags]");
+            eprintln!("usage: bfp-cnn <table1|table2|table3|table4|fig3|autotune|serve|e2e|all> [--flags]");
             eprintln!("see rust/src/main.rs docs for flags");
             std::process::exit(2);
         }
+    }
+}
+
+/// Generate a model-appropriate synthetic image batch.
+fn gen_images(id: ModelId, input_shape: &[usize], n: usize, seed: u64) -> Vec<bfp_cnn::tensor::Tensor> {
+    match id {
+        ModelId::Lenet => bfp_cnn::data::DigitDataset::generate(n, seed).images,
+        ModelId::Cifar10 => bfp_cnn::data::TextureDataset::generate(n, seed).images,
+        _ => bfp_cnn::data::imagenet_like_batch(n, input_shape[1], seed),
     }
 }
 
@@ -175,11 +251,7 @@ fn serve_demo(id: ModelId, size: usize, seed: u64, artifacts: &Path, requests: u
             },
         },
     );
-    let images: Vec<bfp_cnn::tensor::Tensor> = match id {
-        ModelId::Lenet => bfp_cnn::data::DigitDataset::generate(requests, seed).images,
-        ModelId::Cifar10 => bfp_cnn::data::TextureDataset::generate(requests, seed).images,
-        _ => bfp_cnn::data::imagenet_like_batch(requests, input_shape[1], seed),
-    };
+    let images = gen_images(id, &input_shape, requests, seed);
     let pending: Vec<_> = images.into_iter().map(|img| server.submit(img)).collect();
     for rx in pending {
         rx.recv().expect("response");
@@ -188,11 +260,101 @@ fn serve_demo(id: ModelId, size: usize, seed: u64, artifacts: &Path, requests: u
     println!("{}", metrics.summary());
 }
 
+/// The `autotune` subcommand: calibrate → plan → measure → report, then
+/// prove the plan executes per-layer through the coordinator engine.
+#[allow(clippy::too_many_arguments)]
+fn autotune_cmd(
+    id: ModelId,
+    size: usize,
+    seed: u64,
+    artifacts: &Path,
+    images: usize,
+    budget_db: Option<f64>,
+    opts: &bfp_cnn::autotune::PlannerOptions,
+    out: Option<&Path>,
+) -> anyhow::Result<()> {
+    use bfp_cnn::autotune;
+
+    let model = id.build(size, seed, artifacts);
+    let calib = gen_images(id, &model.input_shape, images, seed);
+    let t0 = std::time::Instant::now();
+    let convs = autotune::calibrate(&model, &calib, opts)?;
+    // default budget: match the uniform-8/8 prediction — clamped into the
+    // calibrated grid so e.g. --max-width 7 still derives a real budget
+    let ref_w = 8u32.clamp(opts.min_width, opts.max_width);
+    let uniform_pred = autotune::uniform_predicted_snr_db(&convs, ref_w);
+    let budget = budget_db.unwrap_or(uniform_pred);
+    println!(
+        "calibrated {} conv layers on {} images ({:.2}s); uniform {ref_w}/{ref_w} predicts {:.2} dB; budget ≥ {:.2} dB",
+        convs.len(),
+        calib.len(),
+        t0.elapsed().as_secs_f64(),
+        uniform_pred,
+        budget
+    );
+
+    let plan = autotune::autotune_with_stats(&model, &calib, &convs, budget, opts);
+    autotune_report::plan_table(&plan).print();
+    println!();
+    autotune_report::frontier_table(&plan).print();
+    println!();
+
+    let uni = autotune::measure_schedule(&model, &calib, &LayerSchedule::uniform(BfpConfig::paper_default()));
+    println!(
+        "uniform 8/8: measured conv-out SNR {:>8.2} dB, traffic {:>10.1} kbit",
+        uni.conv_out_snr_db,
+        plan.uniform_traffic_bits(8, 8) / 1000.0
+    );
+    println!(
+        "mixed plan : measured conv-out SNR {:>8.2} dB, traffic {:>10.1} kbit ({:.1}% saved)",
+        plan.measured_snr_db,
+        plan.total_traffic_bits() / 1000.0,
+        100.0 * plan.savings_vs_uniform8()
+    );
+    if plan.measured_snr_db + 0.05 < budget {
+        eprintln!(
+            "warning: measured SNR {:.2} dB misses the {:.2} dB budget — the budget may be \
+             infeasible within widths {}..={}",
+            plan.measured_snr_db, budget, opts.min_width, opts.max_width
+        );
+    }
+
+    // per-layer execution through the engine on fresh images
+    let eval = gen_images(id, &model.input_shape, images.min(4), seed + 1);
+    let fp = forward_batch(&model, &eval, ExecMode::Fp32);
+    let mixed = forward_batch(&model, &eval, ExecMode::Mixed(plan.to_schedule()));
+    let (mut sig, mut err) = (0f64, 0f64);
+    for (a, b) in fp.iter().zip(&mixed) {
+        for (&x, &y) in a.data.iter().zip(&b.data) {
+            sig += (x as f64) * (x as f64);
+            err += ((y - x) as f64) * ((y - x) as f64);
+        }
+    }
+    println!(
+        "engine ExecMode::Mixed over {} fresh images: output SNR {:.2} dB vs fp32",
+        eval.len(),
+        bfp_cnn::analysis::snr_db(sig, err)
+    );
+
+    if let Some(path) = out {
+        plan.save(path)?;
+        println!("plan written to {} (serve it: bfp-cnn serve --model {} --mode plan --plan {})",
+            path.display(), id.name(), path.display());
+    }
+    Ok(())
+}
+
 /// End-to-end driver: PJRT-compiled LeNet (JAX/Pallas artifact) served
 /// through the coordinator on the procedural digit workload, reporting
 /// accuracy and latency. See EXPERIMENTS.md §E2E.
 fn e2e(artifacts: &Path, requests: usize, batch: usize) -> anyhow::Result<()> {
     use bfp_cnn::runtime::PjrtRuntime;
+
+    if cfg!(not(feature = "pjrt")) {
+        anyhow::bail!(
+            "e2e needs the PJRT runtime: rebuild with `--features pjrt` (and the `xla` dependency)"
+        );
+    }
 
     let hlo = artifacts.join("lenet_fwd_b8.hlo.txt");
     anyhow::ensure!(hlo.exists(), "{} missing — run `make artifacts` first", hlo.display());

@@ -3,7 +3,7 @@
 use super::graph::Executor;
 use super::layers::{BatchNorm, Conv2d, Dense};
 use super::ops;
-use crate::quant::BfpConfig;
+use crate::quant::{BfpConfig, LayerSchedule};
 use crate::tensor::{avg_pool2d, global_avg_pool, max_pool2d, Tensor};
 
 /// Plain FP32 inference — the "floating point" baseline of every table.
@@ -52,26 +52,39 @@ impl Executor for Fp32Exec {
 /// BFP inference: conv layers run the Figure 2 fixed-point data flow;
 /// everything else (ReLU, pooling, BN, FC, softmax) stays in floating
 /// point exactly as in the paper's Caffe port (§5.1).
+///
+/// Precision is a per-layer [`LayerSchedule`], so one executor serves
+/// both the paper's uniform sweeps ([`BfpExec::new`]) and the
+/// mixed-precision plans emitted by [`crate::autotune`]
+/// ([`BfpExec::with_schedule`]).
 pub struct BfpExec {
-    pub cfg: BfpConfig,
+    pub schedule: LayerSchedule,
     /// Also quantize fully-connected layers (extension; paper: false).
     pub quantize_dense: bool,
 }
 
 impl BfpExec {
+    /// Uniform precision: every layer runs at `cfg`.
     pub fn new(cfg: BfpConfig) -> Self {
-        Self { cfg, quantize_dense: false }
+        Self::with_schedule(LayerSchedule::uniform(cfg))
+    }
+
+    /// Mixed precision: each conv layer looks up its own config.
+    pub fn with_schedule(schedule: LayerSchedule) -> Self {
+        Self { schedule, quantize_dense: false }
     }
 }
 
 impl Executor for BfpExec {
     type T = Tensor;
     fn conv(&mut self, layer: &Conv2d, x: Tensor) -> Tensor {
-        layer.forward_bfp(&x, &self.cfg)
+        let cfg = self.schedule.for_layer(&layer.name);
+        layer.forward_bfp(&x, &cfg)
     }
     fn dense(&mut self, layer: &Dense, x: Tensor) -> Tensor {
         if self.quantize_dense {
-            layer.forward_bfp(&x, &self.cfg)
+            let cfg = self.schedule.for_layer(&layer.name);
+            layer.forward_bfp(&x, &cfg)
         } else {
             layer.forward_fp32(&x)
         }
@@ -148,5 +161,33 @@ mod tests {
                 / fp.energy().max(1e-12)
         };
         assert!(nsr(5) > nsr(9));
+    }
+
+    #[test]
+    fn per_layer_schedule_overrides_default() {
+        let m = model();
+        let fp = m.execute(input(), &mut Fp32Exec);
+        let nsr_of = |exec: &mut BfpExec| {
+            let b = m.execute(input(), exec);
+            fp.data.iter().zip(&b.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+                / fp.energy().max(1e-12)
+        };
+        // overriding the only conv to 14 bits must match uniform 14-bit
+        // execution exactly, regardless of the (narrow) default
+        let sched = crate::quant::LayerSchedule::uniform(BfpConfig::new(4, 4))
+            .with_layer("c1", BfpConfig::new(14, 14));
+        let mixed = m.execute(input(), &mut BfpExec::with_schedule(sched));
+        let uniform = m.execute(input(), &mut BfpExec::new(BfpConfig::new(14, 14)));
+        assert_eq!(mixed.data, uniform.data);
+        // and a narrow override must be noisier than a wide one
+        let narrow = nsr_of(&mut BfpExec::with_schedule(
+            crate::quant::LayerSchedule::uniform(BfpConfig::new(8, 8))
+                .with_layer("c1", BfpConfig::new(4, 4)),
+        ));
+        let wide = nsr_of(&mut BfpExec::with_schedule(
+            crate::quant::LayerSchedule::uniform(BfpConfig::new(8, 8))
+                .with_layer("c1", BfpConfig::new(12, 12)),
+        ));
+        assert!(narrow > wide, "narrow {narrow} vs wide {wide}");
     }
 }

@@ -73,6 +73,24 @@ pub fn bfp_vs_float_dsp_ratio(l_w: u32, l_i: u32, k: usize, float_bits: u32) -> 
     (f.dsp * f.fmax_mhz.recip()) / (b.dsp * b.fmax_mhz.recip())
 }
 
+/// Off-chip storage/traffic bits one conv GEMM `W_{M×K}·I_{K×N}` moves
+/// under the Table 1 model (mantissas incl. sign plus amortised block
+/// exponents). This is the per-layer cost the mixed-precision planner
+/// ([`crate::autotune`]) minimises when it trades mantissa bits between
+/// layers.
+pub fn layer_traffic_bits(
+    m: usize,
+    k: usize,
+    n: usize,
+    l_w: u32,
+    l_i: u32,
+    scheme: crate::bfp::PartitionScheme,
+    l_e: u32,
+) -> f64 {
+    let c = scheme.cost(m, k, n, l_w, l_i, l_e);
+    (c.total_bits_w + c.total_bits_i) as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +117,18 @@ mod tests {
     fn bfp_beats_float_substantially() {
         let r = bfp_vs_float_dsp_ratio(8, 8, 4608, 32);
         assert!(r > 1.5, "expected a clear DSP advantage, got {r}");
+    }
+
+    #[test]
+    fn traffic_grows_with_width_and_tracks_table1() {
+        use crate::bfp::PartitionScheme;
+        let (m, k, n) = (64usize, 9usize, 50176usize);
+        let t8 = layer_traffic_bits(m, k, n, 8, 8, PartitionScheme::Eq4, 8);
+        let t6 = layer_traffic_bits(m, k, n, 6, 6, PartitionScheme::Eq4, 8);
+        assert!(t6 < t8, "{t6} vs {t8}");
+        // mantissa term dominates: 8-bit total ≈ 8·(MK + KN)
+        let mantissa = 8.0 * ((m * k + k * n) as f64);
+        assert!((t8 - mantissa).abs() / mantissa < 0.02, "{t8} vs {mantissa}");
     }
 
     #[test]

@@ -4,7 +4,9 @@
 pub mod baselines;
 pub mod config;
 pub mod hw_cost;
+pub mod schedule;
 pub mod widths;
 
 pub use config::BfpConfig;
+pub use schedule::LayerSchedule;
 pub use widths::WidthPlan;

@@ -1,0 +1,109 @@
+//! Per-layer BFP precision schedules.
+//!
+//! A [`LayerSchedule`] maps conv/dense layer names to [`BfpConfig`]s with
+//! a uniform fallback, so the executor stack can run *mixed-precision*
+//! networks: the sensitive early layers keep wide mantissas while the
+//! error-tolerant deep layers shed bits. Schedules are produced by the
+//! [`crate::autotune`] planner (as part of a `PrecisionPlan`) and consumed
+//! by [`crate::nn::exec::BfpExec`] and
+//! [`crate::coordinator::engine::ExecMode::Mixed`].
+
+use super::BfpConfig;
+use std::collections::HashMap;
+
+/// A per-layer precision assignment: named overrides over a default
+/// [`BfpConfig`]. Layers not named run at the default.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSchedule {
+    default: BfpConfig,
+    overrides: HashMap<String, BfpConfig>,
+}
+
+impl LayerSchedule {
+    /// A schedule that runs every layer at `cfg` (equivalent to the
+    /// classic uniform `ExecMode::Bfp`).
+    pub fn uniform(cfg: BfpConfig) -> Self {
+        Self { default: cfg, overrides: HashMap::new() }
+    }
+
+    /// Build from `(layer, config)` pairs over a default.
+    pub fn from_pairs<I, S>(default: BfpConfig, pairs: I) -> Self
+    where
+        I: IntoIterator<Item = (S, BfpConfig)>,
+        S: Into<String>,
+    {
+        let overrides = pairs.into_iter().map(|(n, c)| (n.into(), c)).collect();
+        Self { default, overrides }
+    }
+
+    /// Override one layer's config (builder form).
+    pub fn with_layer(mut self, layer: impl Into<String>, cfg: BfpConfig) -> Self {
+        self.set(layer, cfg);
+        self
+    }
+
+    /// Override one layer's config.
+    pub fn set(&mut self, layer: impl Into<String>, cfg: BfpConfig) {
+        self.overrides.insert(layer.into(), cfg);
+    }
+
+    /// The config a named layer runs at.
+    pub fn for_layer(&self, layer: &str) -> BfpConfig {
+        self.overrides.get(layer).copied().unwrap_or(self.default)
+    }
+
+    /// The fallback config for layers without an override.
+    pub fn default_config(&self) -> BfpConfig {
+        self.default
+    }
+
+    /// Named overrides (unordered).
+    pub fn overrides(&self) -> &HashMap<String, BfpConfig> {
+        &self.overrides
+    }
+
+    /// True when no layer deviates from the default.
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.values().all(|c| *c == self.default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_falls_through() {
+        let s = LayerSchedule::uniform(BfpConfig::new(8, 8));
+        assert_eq!(s.for_layer("conv1"), BfpConfig::new(8, 8));
+        assert!(s.is_uniform());
+    }
+
+    #[test]
+    fn overrides_take_precedence() {
+        let s = LayerSchedule::uniform(BfpConfig::new(8, 8))
+            .with_layer("conv1", BfpConfig::new(9, 10))
+            .with_layer("conv3", BfpConfig::new(5, 6));
+        assert_eq!(s.for_layer("conv1"), BfpConfig::new(9, 10));
+        assert_eq!(s.for_layer("conv2"), BfpConfig::new(8, 8));
+        assert_eq!(s.for_layer("conv3"), BfpConfig::new(5, 6));
+        assert!(!s.is_uniform());
+    }
+
+    #[test]
+    fn from_pairs_round_trips() {
+        let s = LayerSchedule::from_pairs(
+            BfpConfig::new(8, 8),
+            vec![("a", BfpConfig::new(4, 4)), ("b", BfpConfig::new(6, 7))],
+        );
+        assert_eq!(s.for_layer("a"), BfpConfig::new(4, 4));
+        assert_eq!(s.for_layer("b"), BfpConfig::new(6, 7));
+        assert_eq!(s.overrides().len(), 2);
+    }
+
+    #[test]
+    fn redundant_overrides_still_uniform() {
+        let s = LayerSchedule::uniform(BfpConfig::new(8, 8)).with_layer("x", BfpConfig::new(8, 8));
+        assert!(s.is_uniform());
+    }
+}
