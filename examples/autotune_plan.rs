@@ -12,7 +12,7 @@
 use bfp_cnn::autotune::{
     autotune_with_stats, calibrate, measure_schedule, uniform_predicted_snr_db, PlannerOptions,
 };
-use bfp_cnn::coordinator::engine::{forward_batch, ExecMode};
+use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
 use bfp_cnn::harness::autotune_report;
 use bfp_cnn::models::ModelId;
 use bfp_cnn::quant::{BfpConfig, LayerSchedule};
@@ -48,8 +48,8 @@ fn main() {
 
     // --- 4. the serving engine executes the plan per-layer ---
     let eval = bfp_cnn::data::DigitDataset::generate(4, 7).images;
-    let fp = forward_batch(&model, &eval, ExecMode::Fp32);
-    let mixed = forward_batch(&model, &eval, ExecMode::Mixed(plan.to_schedule()));
+    let fp = forward_batch_ref(&model, &eval, ExecMode::Fp32);
+    let mixed = forward_batch_ref(&model, &eval, ExecMode::Mixed(plan.to_schedule()));
     let agree = fp
         .iter()
         .zip(&mixed)

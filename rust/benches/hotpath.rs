@@ -1,86 +1,188 @@
 //! Hot-path micro-benches for the §Perf optimization loop: block
-//! formatting, the mantissa GEMM inner loops, im2col, and the whole BFP
-//! conv layer. Run before/after each optimization; numbers recorded in
-//! EXPERIMENTS.md §Perf.
+//! formatting, the mantissa GEMM inner loops, im2col, the whole BFP conv
+//! layer, and the prepared-model serving path (cached weight
+//! quantization + scratch arenas + panel-parallel GEMM). Run
+//! before/after each optimization; numbers recorded in EXPERIMENTS.md
+//! §Perf and emitted machine-readably to `BENCH_hotpath.json` (override
+//! the path with `BENCH_JSON=...`).
+//!
+//! `cargo bench --bench hotpath -- --smoke` runs every bench at tiny
+//! shapes in a few seconds — the CI smoke job uses it so the perf
+//! harness can never silently rot.
 
 use bfp_cnn::bfp::gemm::f32_gemm;
-use bfp_cnn::bfp::{bfp_gemm, block_format, max_exponent, BfpFormat, BfpMatrix};
 use bfp_cnn::bfp::partition::BlockAxis;
+use bfp_cnn::bfp::{bfp_gemm, block_format, max_exponent, BfpFormat, BfpMatrix};
 use bfp_cnn::data::Rng;
-use bfp_cnn::harness::benchkit::{bench, section};
-use bfp_cnn::nn::Conv2d;
+use bfp_cnn::harness::benchkit::{bench_opts, section, write_json, BenchOpts, BenchResult};
+use bfp_cnn::models::Model;
+use bfp_cnn::nn::prepared::PreparedModel;
+use bfp_cnn::nn::{Block, Conv2d};
+use bfp_cnn::quant::{BfpConfig, LayerSchedule};
+use bfp_cnn::runtime::pool;
 use bfp_cnn::tensor::{im2col, Conv2dGeometry, Tensor};
+use std::time::Duration;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke") || std::env::var("BENCH_SMOKE").is_ok();
+    let opts = if smoke {
+        BenchOpts { min_time: Duration::from_millis(10), max_iters: 12 }
+    } else {
+        BenchOpts::default()
+    };
+    let mut results: Vec<BenchResult> = Vec::new();
     let mut rng = Rng::new(1);
+    if smoke {
+        println!("(smoke mode: tiny shapes, few iterations)");
+    }
 
-    section("quantize: max_exponent scan");
-    let xs = rng.normal_vec(1 << 20, 1.0);
-    bench("max_exponent_1M", Some((1 << 20) as f64), "elem", || {
-        std::hint::black_box(max_exponent(&xs));
-    });
-
-    section("quantize: full block format (1M elements, L=8)");
+    section("quantize: max_exponent scan + full block format (L=8)");
+    let quant_n = if smoke { 1 << 14 } else { 1 << 20 };
+    let side = (quant_n as f64).sqrt() as usize;
+    let xs = rng.normal_vec(quant_n, 1.0);
     let fmt = BfpFormat::new(8);
-    bench("block_format_1M", Some((1 << 20) as f64), "elem", || {
+    results.push(bench_opts("max_exponent", Some(quant_n as f64), "elem", opts, &mut || {
+        std::hint::black_box(max_exponent(&xs));
+    }));
+    results.push(bench_opts("block_format", Some(quant_n as f64), "elem", opts, &mut || {
         std::hint::black_box(block_format(&xs, fmt));
-    });
-    bench("bfp_matrix_whole_1M", Some((1 << 20) as f64), "elem", || {
-        std::hint::black_box(BfpMatrix::quantize(&xs, 1024, 1024, fmt, BlockAxis::Whole));
-    });
-    bench("bfp_matrix_per_row_1M", Some((1 << 20) as f64), "elem", || {
-        std::hint::black_box(BfpMatrix::quantize(&xs, 1024, 1024, fmt, BlockAxis::PerRow));
-    });
+    }));
+    results.push(bench_opts("bfp_matrix_whole", Some(quant_n as f64), "elem", opts, &mut || {
+        std::hint::black_box(BfpMatrix::quantize(&xs, side, side, fmt, BlockAxis::Whole));
+    }));
+    results.push(bench_opts("bfp_matrix_per_row", Some(quant_n as f64), "elem", opts, &mut || {
+        std::hint::black_box(BfpMatrix::quantize(&xs, side, side, fmt, BlockAxis::PerRow));
+    }));
 
-    section("GEMM inner loops (conv3_1-like: 256x1152 @ 1152x256)");
-    let (m, k, n) = (256usize, 1152usize, 256usize);
+    section("GEMM inner loops (conv3_1-like: M x K @ K x N)");
+    let (m, k, n) = if smoke { (32usize, 144usize, 64usize) } else { (256usize, 1152usize, 256usize) };
     let w = rng.laplacian_vec(m * k, 0.05);
     let i = rng.normal_vec(k * n, 1.0);
     let macs = (m * k * n) as f64;
     let mut out = vec![0f32; m * n];
-    bench("f32_gemm", Some(macs), "MAC", || {
-        f32_gemm(&w, &i, m, k, n, &mut out);
-        std::hint::black_box(&out);
-    });
+    // serial pins: legacy-named benches stay comparable with PR 1
+    // baselines; the *_t{N} sweeps below measure thread scaling.
+    results.push(pool::with_threads(1, || {
+        bench_opts("f32_gemm", Some(macs), "MAC", opts, &mut || {
+            f32_gemm(&w, &i, m, k, n, &mut out);
+            std::hint::black_box(&out);
+        })
+    }));
     let wq = BfpMatrix::quantize(&w, m, k, fmt, BlockAxis::PerRow);
     let iq = BfpMatrix::quantize(&i, k, n, fmt, BlockAxis::Whole);
-    bench("bfp_gemm (8-bit, f32-mantissa lane)", Some(macs), "MAC", || {
-        std::hint::black_box(bfp_gemm(&wq, &iq));
-    });
+    results.push(pool::with_threads(1, || {
+        bench_opts("bfp_gemm_8bit_f32_lane", Some(macs), "MAC", opts, &mut || {
+            std::hint::black_box(bfp_gemm(&wq, &iq));
+        })
+    }));
     // force the i64 lane for comparison
     let fmt16 = BfpFormat::new(16);
     let wq16 = BfpMatrix::quantize(&w, m, k, fmt16, BlockAxis::PerRow);
     let iq16 = BfpMatrix::quantize(&i, k, n, fmt16, BlockAxis::Whole);
-    bench("bfp_gemm (16-bit, i64 lane)", Some(macs), "MAC", || {
-        std::hint::black_box(bfp_gemm(&wq16, &iq16));
-    });
+    results.push(pool::with_threads(1, || {
+        bench_opts("bfp_gemm_16bit_i64_lane", Some(macs), "MAC", opts, &mut || {
+            std::hint::black_box(bfp_gemm(&wq16, &iq16));
+        })
+    }));
+    // panel-parallel scaling on the 8-bit lane
+    for t in [1usize, 2, 4] {
+        results.push(pool::with_threads(t, || {
+            bench_opts(&format!("bfp_gemm_8bit_t{t}"), Some(macs), "MAC", opts, &mut || {
+                std::hint::black_box(bfp_gemm(&wq, &iq));
+            })
+        }));
+    }
 
-    section("im2col (3x64x64, 3x3 kernel, pad 1)");
-    let img = rng.normal_vec(3 * 64 * 64, 1.0);
+    section("im2col (3x3 kernel, pad 1)");
+    let im_side = if smoke { 16 } else { 64 };
+    let img = rng.normal_vec(3 * im_side * im_side, 1.0);
     let geo = Conv2dGeometry {
         in_channels: 3,
-        in_h: 64,
-        in_w: 64,
+        in_h: im_side,
+        in_w: im_side,
         kernel_h: 3,
         kernel_w: 3,
         stride: 1,
         padding: 1,
     };
     let mut col = vec![0f32; geo.k() * geo.n()];
-    bench("im2col_3x64x64", Some((geo.k() * geo.n()) as f64), "elem", || {
+    results.push(bench_opts("im2col_3ch", Some((geo.k() * geo.n()) as f64), "elem", opts, &mut || {
         im2col(&img, &geo, &mut col);
         std::hint::black_box(&col);
-    });
+    }));
 
-    section("end-to-end BFP conv layer (64ch → 64ch, 32x32)");
-    let weights = Tensor::from_vec(rng.laplacian_vec(64 * 64 * 9, 0.05), &[64, 64, 3, 3]);
-    let conv = Conv2d::new("bench", weights, vec![0.0; 64], 1, 1);
-    let input = Tensor::from_vec(rng.normal_vec(64 * 32 * 32, 1.0), &[64, 32, 32]);
-    let layer_macs = (64 * 64 * 9 * 32 * 32) as f64;
-    bench("conv_fp32", Some(layer_macs), "MAC", || {
-        std::hint::black_box(conv.forward_fp32(&input));
-    });
-    bench("conv_bfp", Some(layer_macs), "MAC", || {
-        std::hint::black_box(conv.forward_bfp(&input, &bfp_cnn::quant::BfpConfig::paper_default()));
-    });
+    section("end-to-end BFP conv layer (square channels)");
+    let (ch, sp) = if smoke { (8usize, 8usize) } else { (64usize, 32usize) };
+    let weights = Tensor::from_vec(rng.laplacian_vec(ch * ch * 9, 0.05), &[ch, ch, 3, 3]);
+    let conv = Conv2d::new("bench", weights, vec![0.0; ch], 1, 1);
+    let input = Tensor::from_vec(rng.normal_vec(ch * sp * sp, 1.0), &[ch, sp, sp]);
+    let layer_macs = (ch * ch * 9 * sp * sp) as f64;
+    let cfg = BfpConfig::paper_default();
+    results.push(pool::with_threads(1, || {
+        bench_opts("conv_fp32", Some(layer_macs), "MAC", opts, &mut || {
+            std::hint::black_box(conv.forward_fp32(&input));
+        })
+    }));
+    results.push(pool::with_threads(1, || {
+        bench_opts("conv_bfp", Some(layer_macs), "MAC", opts, &mut || {
+            std::hint::black_box(conv.forward_bfp(&input, &cfg));
+        })
+    }));
+
+    section("prepared-model serving (conv3_1-like conv, warm cache)");
+    // conv3_1-like: K = cin*9, spatial N = sp31^2
+    let (cout31, cin31, sp31) = if smoke { (32usize, 16usize, 8usize) } else { (256usize, 128usize, 16usize) };
+    let w31 = Tensor::from_vec(rng.laplacian_vec(cout31 * cin31 * 9, 0.05), &[cout31, cin31, 3, 3]);
+    let conv31 = Conv2d::new("conv3_1", w31, vec![0.0; cout31], 1, 1);
+    let input31 = Tensor::from_vec(rng.normal_vec(cin31 * sp31 * sp31, 1.0), &[cin31, sp31, sp31]);
+    let macs31 = (cout31 * cin31 * 9 * sp31 * sp31) as f64;
+    results.push(pool::with_threads(1, || {
+        bench_opts("conv3_1_bfp_cold", Some(macs31), "MAC", opts, &mut || {
+            // PR 1 baseline path: re-quantizes weights + allocates per
+            // call, pinned serial — the true pre-PR-2 configuration
+            std::hint::black_box(conv31.forward_bfp(&input31, &cfg));
+        })
+    }));
+    let model31 = Model {
+        name: "conv3_1".into(),
+        graph: Block::seq(vec![Block::Conv(conv31.clone())]),
+        input_shape: vec![cin31, sp31, sp31],
+        num_classes: 0,
+    };
+    let prepared = PreparedModel::new(model31, LayerSchedule::uniform(cfg));
+    prepared.warm();
+    results.push(bench_opts("conv3_1_prepared_warm", Some(macs31), "MAC", opts, &mut || {
+        std::hint::black_box(prepared.forward(&input31));
+    }));
+    for t in [1usize, 2, 4] {
+        results.push(pool::with_threads(t, || {
+            bench_opts(&format!("conv3_1_prepared_warm_t{t}"), Some(macs31), "MAC", opts, &mut || {
+                std::hint::black_box(prepared.forward(&input31));
+            })
+        }));
+    }
+
+    section("prepared forward_batch (8 images, image-parallel)");
+    let batch: Vec<Tensor> = (0..8)
+        .map(|_| Tensor::from_vec(rng.normal_vec(cin31 * sp31 * sp31, 1.0), &[cin31, sp31, sp31]))
+        .collect();
+    results.push(bench_opts("conv3_1_prepared_batch8", Some(macs31 * 8.0), "MAC", opts, &mut || {
+        std::hint::black_box(prepared.forward_batch(batch.clone()));
+    }));
+
+    let tag = if smoke { "hotpath-smoke" } else { "hotpath" };
+    // cargo bench runs with cwd = the package root (rust/); default the
+    // JSON next to the workspace root where the tracked copy lives.
+    // Smoke runs get their own file so a CI-style invocation can never
+    // clobber the tracked full-shape trajectory numbers.
+    let default_name = if smoke { "BENCH_hotpath_smoke.json" } else { "BENCH_hotpath.json" };
+    let path = match std::env::var("BENCH_JSON") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => match std::env::var("CARGO_MANIFEST_DIR") {
+            Ok(d) => std::path::Path::new(&d).join("..").join(default_name),
+            Err(_) => std::path::PathBuf::from(default_name),
+        },
+    };
+    write_json(&path, tag, &results).expect("write bench json");
+    println!("\nwrote {} ({} benches)", path.display(), results.len());
 }

@@ -2,7 +2,7 @@
 //! accuracy outcome (drop vs FP32) and the runtime cost of each scheme's
 //! full BFP forward pass.
 
-use bfp_cnn::coordinator::engine::{forward_batch, ExecMode};
+use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
 use bfp_cnn::bfp::PartitionScheme;
 use bfp_cnn::harness::benchkit::{bench, section};
 use bfp_cnn::harness::table2;
@@ -24,10 +24,10 @@ fn main() {
     for scheme in [PartitionScheme::Eq2, PartitionScheme::Eq4] {
         let cfg = BfpConfig::paper_default().with_scheme(scheme);
         bench(&format!("vgg16_bfp_forward_{scheme:?}"), Some(1.0), "img", || {
-            std::hint::black_box(forward_batch(&model, &images, ExecMode::Bfp(cfg)));
+            std::hint::black_box(forward_batch_ref(&model, &images, ExecMode::Bfp(cfg)));
         });
     }
     bench("vgg16_fp32_forward", Some(1.0), "img", || {
-        std::hint::black_box(forward_batch(&model, &images, ExecMode::Fp32));
+        std::hint::black_box(forward_batch_ref(&model, &images, ExecMode::Fp32));
     });
 }

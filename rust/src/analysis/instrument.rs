@@ -9,6 +9,7 @@
 use super::snr::{quant_error_variance, snr_db, theoretical_per_row_snr};
 use crate::bfp::{bfp_gemm, max_exponent, BfpMatrix};
 use crate::nn::graph::Executor;
+use crate::nn::prepared::WeightCache;
 use crate::nn::{ops, BatchNorm, Conv2d, Dense};
 use crate::quant::{BfpConfig, LayerSchedule};
 use crate::tensor::{avg_pool2d, global_avg_pool, max_pool2d, Tensor};
@@ -71,6 +72,11 @@ pub struct InstrumentExec {
     accums: Vec<Accum>,
     cursor: usize,
     relu_count: usize,
+    /// Weights are static: quantize once per `(layer, weight format)`
+    /// instead of once per image — and, via
+    /// [`InstrumentExec::with_schedule_and_cache`], once per autotune
+    /// refinement *loop* instead of once per candidate.
+    cache: WeightCache,
 }
 
 /// The edge state: FP32 tensor and its BFP-path twin.
@@ -88,7 +94,19 @@ impl InstrumentExec {
 
     /// Per-layer precision (dual-forward measurement of a mixed plan).
     pub fn with_schedule(schedule: LayerSchedule) -> Self {
-        Self { schedule, accums: Vec::new(), cursor: 0, relu_count: 0 }
+        Self::with_schedule_and_cache(schedule, WeightCache::default())
+    }
+
+    /// [`InstrumentExec::with_schedule`] seeded with an existing weight
+    /// cache, so repeated measurements (the autotuner's refine loop) skip
+    /// quantizing layers whose config is unchanged from prior candidates.
+    pub fn with_schedule_and_cache(schedule: LayerSchedule, cache: WeightCache) -> Self {
+        Self { schedule, accums: Vec::new(), cursor: 0, relu_count: 0, cache }
+    }
+
+    /// Recover the weight cache to seed the next measurement.
+    pub fn into_cache(self) -> WeightCache {
+        self.cache
     }
 
     /// Run one image through the model, accumulating statistics.
@@ -166,7 +184,8 @@ impl Executor for InstrumentExec {
         let (col_bfp, geo) = layer.im2col(&x.bfp);
         let (col_fp, _) = layer.im2col(&x.fp);
         let (m, k, n) = (layer.out_channels(), geo.k(), geo.n());
-        let wq = BfpMatrix::quantize(&layer.weights.data, m, k, cfg.w_format(), cfg.scheme.w_axis());
+        debug_assert_eq!(layer.weights.len(), m * k);
+        let wq = self.cache.get_or_quantize(layer, cfg).wq;
         let iq = BfpMatrix::quantize(&col_bfp, k, n, cfg.i_format(), cfg.scheme.i_axis());
 
         // measured input SNR: clean FP32 signal vs the BFP path's

@@ -3,6 +3,7 @@
 
 use crate::analysis::instrument::{InstrumentExec, LayerKind};
 use crate::models::Model;
+use crate::nn::prepared::WeightCache;
 use crate::quant::LayerSchedule;
 use crate::tensor::Tensor;
 
@@ -22,8 +23,21 @@ pub struct PlanMeasurement {
 /// Run the instrumented dual forward (fp32 ∥ scheduled BFP) over
 /// `images` and aggregate the measured SNRs.
 pub fn measure_schedule(model: &Model, images: &[Tensor], schedule: &LayerSchedule) -> PlanMeasurement {
+    measure_schedule_cached(model, images, schedule, &mut WeightCache::default())
+}
+
+/// [`measure_schedule`] threading a persistent [`WeightCache`] through:
+/// the refine loop re-measures the full network once per candidate
+/// schedule, and most layers keep their widths between candidates, so
+/// their quantized weights come straight from the cache.
+pub fn measure_schedule_cached(
+    model: &Model,
+    images: &[Tensor],
+    schedule: &LayerSchedule,
+    cache: &mut WeightCache,
+) -> PlanMeasurement {
     assert!(!images.is_empty(), "measurement needs at least one image");
-    let mut exec = InstrumentExec::with_schedule(schedule.clone());
+    let mut exec = InstrumentExec::with_schedule_and_cache(schedule.clone(), std::mem::take(cache));
     let mut out_sig = 0f64;
     let mut out_err = 0f64;
     for img in images {
@@ -34,6 +48,7 @@ pub fn measure_schedule(model: &Model, images: &[Tensor], schedule: &LayerSchedu
         }
     }
     let records = exec.finish();
+    *cache = exec.into_cache();
     let per_layer: Vec<(String, f64)> = records
         .iter()
         .filter(|r| r.kind == LayerKind::Conv)
@@ -83,6 +98,26 @@ mod tests {
             wide.conv_out_snr_db,
             narrow.conv_out_snr_db
         );
+    }
+
+    /// A persistent cache across candidate schedules must not change the
+    /// measurement, and must actually get hits on unchanged layers.
+    #[test]
+    fn cached_measurement_matches_fresh() {
+        let (model, images) = lenet_and_images();
+        let a = LayerSchedule::uniform(BfpConfig::new(7, 7));
+        let b = a.clone().with_layer("conv2", BfpConfig::new(5, 5));
+        let mut cache = WeightCache::default();
+        let am_cached = measure_schedule_cached(&model, &images, &a, &mut cache);
+        let bm_cached = measure_schedule_cached(&model, &images, &b, &mut cache);
+        // conv1 kept its config between candidates → cache hit
+        assert!(cache.hits() > 0, "no cache hits across candidates");
+        let am = measure_schedule(&model, &images, &a);
+        let bm = measure_schedule(&model, &images, &b);
+        assert_eq!(am.conv_out_snr_db.to_bits(), am_cached.conv_out_snr_db.to_bits());
+        assert_eq!(bm.conv_out_snr_db.to_bits(), bm_cached.conv_out_snr_db.to_bits());
+        assert_eq!(am.logits_snr_db.to_bits(), am_cached.logits_snr_db.to_bits());
+        assert_eq!(bm.logits_snr_db.to_bits(), bm_cached.logits_snr_db.to_bits());
     }
 
     #[test]

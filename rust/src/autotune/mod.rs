@@ -32,7 +32,7 @@ pub mod plan;
 pub mod planner;
 
 pub use calibrate::{predict_chain, CalibExec, ConvCalibration};
-pub use measure::{measure_schedule, PlanMeasurement};
+pub use measure::{measure_schedule, measure_schedule_cached, PlanMeasurement};
 pub use pareto::ParetoFront;
 pub use plan::{LayerPlan, ParetoPoint, PrecisionPlan};
 pub use planner::{

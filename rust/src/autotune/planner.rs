@@ -18,7 +18,7 @@
 //! budget, re-plans with a tightened surrogate budget until it fits.
 
 use super::calibrate::{predict_chain, CalibExec, ConvCalibration};
-use super::measure::measure_schedule;
+use super::measure::measure_schedule_cached;
 use super::pareto::ParetoFront;
 use super::plan::{LayerPlan, ParetoPoint, PrecisionPlan};
 use crate::analysis::snr::nsr_to_db;
@@ -221,8 +221,11 @@ pub fn autotune_with_stats(
 ) -> PrecisionPlan {
     let mut margin = 0.0f64;
     let mut plan = plan_with_stats(&model.name, convs, budget_snr_db, opts);
+    // one weight cache across all refinement candidates: layers whose
+    // widths survive from round to round are never re-quantized
+    let mut wcache = crate::nn::prepared::WeightCache::default();
     for round in 0..=opts.refine_rounds {
-        let measurement = measure_schedule(model, calib, &plan.to_schedule());
+        let measurement = measure_schedule_cached(model, calib, &plan.to_schedule(), &mut wcache);
         plan.measured_snr_db = measurement.conv_out_snr_db;
         for (l, (name, snr)) in plan.layers.iter_mut().zip(&measurement.per_layer) {
             debug_assert_eq!(&l.name, name);

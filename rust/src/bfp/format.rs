@@ -124,6 +124,26 @@ pub fn exp2i(e: i32) -> f32 {
     }
 }
 
+/// `2^e` as f64 via bit construction: exact for every representable
+/// exponent, including subnormals (`e ∈ [-1074, -1023]`, where a `powi`
+/// fallback may flush to zero via `1/2^|e|` overflow); saturates to
+/// `0.0` / `inf` outside `[-1074, 1023]`. GEMM rescaling uses this so
+/// extreme block-exponent sums that overflow or underflow the f32
+/// exponent range survive the multiply (§Perf).
+#[inline]
+pub fn exp2i64(e: i32) -> f64 {
+    if (-1022..=1023).contains(&e) {
+        f64::from_bits(((e as i64 + 1023) as u64) << 52)
+    } else if (-1074..-1022).contains(&e) {
+        // subnormal: single significand bit at position e + 1074
+        f64::from_bits(1u64 << (e + 1074))
+    } else if e > 1023 {
+        f64::INFINITY
+    } else {
+        0.0
+    }
+}
+
 /// `floor(log2(|x|))` of a finite nonzero f32, i.e. the unbiased binary
 /// exponent, extracted from the bit pattern. Returns `None` for zero
 /// (zeros carry no exponent and never constrain the block maximum).
@@ -182,6 +202,23 @@ mod tests {
         for e in [-149, -126, -1, 0, 1, 10, 127] {
             assert_eq!(exp2i(e), 2f32.powi(e), "e={e}");
         }
+    }
+
+    #[test]
+    fn exp2i64_exact_across_whole_range() {
+        // normal range agrees with powi (both exact here)
+        for e in [-1022, -200, -149, -1, 0, 1, 64, 150, 1023] {
+            assert_eq!(exp2i64(e), 2f64.powi(e), "e={e}");
+        }
+        // subnormals asserted against raw bit patterns, not powi — the
+        // powi expansion 1/2^|e| can overflow to inf and yield 0 here
+        assert_eq!(exp2i64(-1074).to_bits(), 1, "smallest subnormal");
+        assert_eq!(exp2i64(-1030).to_bits(), 1u64 << 44);
+        assert!(exp2i64(-1030) > 0.0 && exp2i64(-1023) > 0.0);
+        assert_eq!(exp2i64(-1023), exp2i64(-1022) / 2.0);
+        // saturation
+        assert_eq!(exp2i64(-1075), 0.0);
+        assert_eq!(exp2i64(1024), f64::INFINITY);
     }
 
     #[test]

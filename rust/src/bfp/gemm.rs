@@ -12,8 +12,9 @@
 //! `i32` or `i64` accumulator lane accordingly and the result is bit-exact
 //! against an arbitrary-precision reference (see the proptests).
 
-use super::format::exp2i;
+use super::format::exp2i64;
 use super::partition::{BfpMatrix, BlockAxis};
+use crate::runtime::pool;
 
 /// Result of a BFP GEMM: f32 output plus the bookkeeping the error
 /// analysis wants (block exponents actually used).
@@ -40,6 +41,55 @@ pub fn bfp_gemm(w: &BfpMatrix, i: &BfpMatrix) -> BfpGemmOutput {
 
 /// [`bfp_gemm`] writing into a caller-provided buffer (hot path).
 pub fn bfp_gemm_into(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32]) {
+    let mut scratch = GemmScratch::default();
+    bfp_gemm_into_prepared(w, None, i, out, &mut scratch);
+}
+
+/// Reusable mantissa-staging buffers for the f32-lane GEMM. The prepared
+/// serving path keeps one per [`crate::nn::prepared::Workspace`] so the
+/// per-call `i32 → f32` materialisation reuses its allocation.
+#[derive(Debug, Default)]
+pub struct GemmScratch {
+    wf: Vec<f32>,
+    if_: Vec<f32>,
+}
+
+/// Does the exact f32-mantissa lane apply at these fractional widths?
+/// Returns the K-chunk length over which f32 partial sums stay exact
+/// (products ≤ 2^(prod_bits−1), sums bounded by 2^24), or `None` when the
+/// integer lanes must run. [`crate::nn::prepared`] uses this to decide
+/// whether pre-packing a weight panel to f32 will pay off.
+pub fn f32_lane_chunk(w_frac_bits: i32, i_frac_bits: i32) -> Option<usize> {
+    let prod_bits = (w_frac_bits + 1) + (i_frac_bits + 1) + 1;
+    let max_prod = 1i64 << (prod_bits - 1).min(62);
+    let chunk = ((1i64 << 24) / max_prod.max(1)) as usize;
+    (chunk >= 32).then_some(chunk)
+}
+
+/// Materialise a matrix's integer mantissas as exact f32 values — the
+/// "packed panel" a [`crate::nn::prepared::PreparedModel`] caches per
+/// conv layer so the hot loop never re-converts static weights.
+pub fn pack_mantissas(m: &BfpMatrix) -> Vec<f32> {
+    m.mantissas.iter().map(|&v| v as f32).collect()
+}
+
+fn pack_into(mantissas: &[i32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(mantissas.iter().map(|&v| v as f32));
+}
+
+/// [`bfp_gemm_into`] with optional pre-packed f32 weight mantissas
+/// (`w_packed`, produced by [`pack_mantissas`]) and caller-owned scratch.
+/// Row panels run on the [`pool`] workers; each output row is computed
+/// with the exact serial instruction sequence (same K-chunk order), so
+/// the result is bit-identical for every thread count.
+pub fn bfp_gemm_into_prepared(
+    w: &BfpMatrix,
+    w_packed: Option<&[f32]>,
+    i: &BfpMatrix,
+    out: &mut [f32],
+    scratch: &mut GemmScratch,
+) {
     assert_eq!(w.cols, i.rows, "GEMM inner dimension mismatch");
     assert!(
         !matches!(w.axis, BlockAxis::PerCol),
@@ -62,10 +112,8 @@ pub fn bfp_gemm_into(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32]) {
     // are then accumulated in f64 (integers exact to 2^53). FMA-friendly
     // f32 lanes beat the i32 multiply (vpmulld) substantially — see
     // EXPERIMENTS.md §Perf — while remaining bit-exact.
-    let max_prod = 1i64 << (prod_bits - 1).min(62);
-    let chunk = ((1i64 << 24) / max_prod.max(1)) as usize;
-    if chunk >= 32 {
-        gemm_f32_mantissa(w, i, out, m, k, n, chunk);
+    if let Some(chunk) = f32_lane_chunk(w.frac_bits, i.frac_bits) {
+        gemm_f32_mantissa(w, w_packed, i, out, m, k, n, chunk, scratch);
     } else if acc_bits <= 31 {
         gemm_lanes::<i32>(w, i, out, m, k, n);
     } else {
@@ -74,38 +122,49 @@ pub fn bfp_gemm_into(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32]) {
 }
 
 /// Exact f32-mantissa GEMM with chunked-K f64 accumulation (see the
-/// exactness argument at the call site). Mantissas are materialised as
-/// f32 once per call; the inner loops are plain f32 MACs that the
-/// auto-vectorizer turns into FMA lanes.
-fn gemm_f32_mantissa(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32], m: usize, k: usize, n: usize, chunk: usize) {
+/// exactness argument at the call site). Input mantissas are materialised
+/// as f32 once per call (into `scratch`); weight mantissas come pre-packed
+/// from the prepared-model cache when available. The inner loops are plain
+/// f32 MACs that the auto-vectorizer turns into FMA lanes. Rescaling is
+/// done per element in f64 with an f64-constructed power of two, so
+/// extreme block-exponent sums neither overflow to `inf`/NaN nor flush
+/// representable subnormal outputs to zero.
+#[allow(clippy::too_many_arguments)]
+fn gemm_f32_mantissa(
+    w: &BfpMatrix,
+    w_packed: Option<&[f32]>,
+    i: &BfpMatrix,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    chunk: usize,
+    scratch: &mut GemmScratch,
+) {
     let zero_exp_floor = i32::MIN / 4;
-    let wf: Vec<f32> = w.mantissas.iter().map(|&v| v as f32).collect();
-    let if_: Vec<f32> = i.mantissas.iter().map(|&v| v as f32).collect();
+    pack_into(&i.mantissas, &mut scratch.if_);
+    if w_packed.is_none() {
+        pack_into(&w.mantissas, &mut scratch.wf);
+    }
+    let wf: &[f32] = match w_packed {
+        Some(p) => {
+            assert_eq!(p.len(), m * k, "pre-packed weight panel shape mismatch");
+            p
+        }
+        None => &scratch.wf,
+    };
+    let if_: &[f32] = &scratch.if_;
     let single_chunk = k <= chunk;
-    let mut acc32 = vec![0f32; n];
-    let mut acc64 = vec![0f64; if single_chunk { 0 } else { n }];
-    for r in 0..m {
-        let wrow = &wf[r * k..(r + 1) * k];
-        if single_chunk {
-            // common case: the whole K panel stays exact in f32
-            acc32.fill(0.0);
-            for (kk, &wv) in wrow.iter().enumerate() {
-                if wv == 0.0 {
-                    continue;
-                }
-                let irow = &if_[kk * n..(kk + 1) * n];
-                for (a, &iv) in acc32.iter_mut().zip(irow) {
-                    *a += wv * iv;
-                }
-            }
-        } else {
-            acc64.fill(0.0);
-            let mut k0 = 0usize;
-            while k0 < k {
-                let k1 = (k0 + chunk).min(k);
+    pool::parallel_row_panels(out, m, n, k.saturating_mul(n), |r0, panel| {
+        let mut acc32 = vec![0f32; n];
+        let mut acc64 = vec![0f64; if single_chunk { 0 } else { n }];
+        for (pr, orow) in panel.chunks_mut(n).enumerate() {
+            let r = r0 + pr;
+            let wrow = &wf[r * k..(r + 1) * k];
+            if single_chunk {
+                // common case: the whole K panel stays exact in f32
                 acc32.fill(0.0);
-                for kk in k0..k1 {
-                    let wv = wrow[kk];
+                for (kk, &wv) in wrow.iter().enumerate() {
                     if wv == 0.0 {
                         continue;
                     }
@@ -114,60 +173,75 @@ fn gemm_f32_mantissa(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32], m: usize, k:
                         *a += wv * iv;
                     }
                 }
-                for (a64, &a32) in acc64.iter_mut().zip(&acc32) {
-                    *a64 += a32 as f64;
-                }
-                k0 = k1;
-            }
-        }
-        let we = match w.axis {
-            BlockAxis::Whole => w.exponents[0],
-            BlockAxis::PerRow => w.exponents[r],
-            BlockAxis::PerCol => unreachable!(),
-        };
-        let orow = &mut out[r * n..(r + 1) * n];
-        if we <= zero_exp_floor {
-            orow.fill(0.0);
-            continue;
-        }
-        match i.axis {
-            BlockAxis::Whole => {
-                let ie = i.exponents[0];
-                let scale = if ie <= zero_exp_floor {
-                    0.0
-                } else {
-                    exp2i(we + ie - w.frac_bits - i.frac_bits) as f64
-                };
-                if single_chunk {
-                    let s32 = scale as f32;
-                    for (o, &a) in orow.iter_mut().zip(&acc32) {
-                        *o = a * s32;
+            } else {
+                acc64.fill(0.0);
+                let mut k0 = 0usize;
+                while k0 < k {
+                    let k1 = (k0 + chunk).min(k);
+                    acc32.fill(0.0);
+                    for kk in k0..k1 {
+                        let wv = wrow[kk];
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        let irow = &if_[kk * n..(kk + 1) * n];
+                        for (a, &iv) in acc32.iter_mut().zip(irow) {
+                            *a += wv * iv;
+                        }
                     }
-                } else {
-                    for (o, &a) in orow.iter_mut().zip(&acc64) {
-                        *o = (a * scale) as f32;
+                    for (a64, &a32) in acc64.iter_mut().zip(&acc32) {
+                        *a64 += a32 as f64;
                     }
+                    k0 = k1;
                 }
             }
-            BlockAxis::PerCol => {
-                for (j, (o, &ie)) in orow.iter_mut().zip(&i.exponents).enumerate() {
-                    let a = if single_chunk { acc32[j] as f64 } else { acc64[j] };
-                    *o = if ie <= zero_exp_floor {
-                        0.0
+            let we = match w.axis {
+                BlockAxis::Whole => w.exponents[0],
+                BlockAxis::PerRow => w.exponents[r],
+                BlockAxis::PerCol => unreachable!(),
+            };
+            if we <= zero_exp_floor {
+                orow.fill(0.0);
+                continue;
+            }
+            match i.axis {
+                BlockAxis::Whole => {
+                    let ie = i.exponents[0];
+                    if ie <= zero_exp_floor {
+                        orow.fill(0.0);
+                        continue;
+                    }
+                    let scale = exp2i64(we + ie - w.frac_bits - i.frac_bits);
+                    if single_chunk {
+                        for (o, &a) in orow.iter_mut().zip(&acc32) {
+                            *o = (a as f64 * scale) as f32;
+                        }
                     } else {
-                        (a * exp2i(we + ie - w.frac_bits - i.frac_bits) as f64) as f32
-                    };
+                        for (o, &a) in orow.iter_mut().zip(&acc64) {
+                            *o = (a * scale) as f32;
+                        }
+                    }
                 }
+                BlockAxis::PerCol => {
+                    for (j, (o, &ie)) in orow.iter_mut().zip(&i.exponents).enumerate() {
+                        let a = if single_chunk { acc32[j] as f64 } else { acc64[j] };
+                        *o = if ie <= zero_exp_floor {
+                            0.0
+                        } else {
+                            (a * exp2i64(we + ie - w.frac_bits - i.frac_bits)) as f32
+                        };
+                    }
+                }
+                BlockAxis::PerRow => unreachable!(),
             }
-            BlockAxis::PerRow => unreachable!(),
         }
-    }
+    });
 }
 
 /// Integer accumulator lane abstraction (i32 fast path / i64 wide path).
-trait AccLane: Copy + Default + std::ops::AddAssign {
+trait AccLane: Copy + Default + Send + Sync + std::ops::AddAssign {
     fn mul(a: i32, b: i32) -> Self;
-    fn to_f32(self) -> f32;
+    fn to_f64(self) -> f64;
 }
 impl AccLane for i32 {
     #[inline(always)]
@@ -175,8 +249,8 @@ impl AccLane for i32 {
         a * b
     }
     #[inline(always)]
-    fn to_f32(self) -> f32 {
-        self as f32
+    fn to_f64(self) -> f64 {
+        self as f64
     }
 }
 impl AccLane for i64 {
@@ -185,87 +259,96 @@ impl AccLane for i64 {
         a as i64 * b as i64
     }
     #[inline(always)]
-    fn to_f32(self) -> f32 {
-        self as f32
+    fn to_f64(self) -> f64 {
+        self as f64
     }
 }
 
 fn gemm_lanes<A: AccLane>(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32], m: usize, k: usize, n: usize) {
     let zero_exp_floor = i32::MIN / 4;
     // Accumulate one output row at a time in integer lanes (ikj order —
-    // streams through I row-major, vectorizes the inner j loop).
-    let mut acc: Vec<A> = vec![A::default(); n];
-    for r in 0..m {
-        for a in acc.iter_mut() {
-            *a = A::default();
-        }
-        let wrow = &w.mantissas[r * k..(r + 1) * k];
-        for (kk, &wv) in wrow.iter().enumerate() {
-            if wv == 0 {
+    // streams through I row-major, vectorizes the inner j loop). Rows are
+    // independent, so panels parallelize with bit-identical results.
+    pool::parallel_row_panels(out, m, n, k.saturating_mul(n), |r0, panel| {
+        let mut acc: Vec<A> = vec![A::default(); n];
+        for (pr, orow) in panel.chunks_mut(n).enumerate() {
+            let r = r0 + pr;
+            for a in acc.iter_mut() {
+                *a = A::default();
+            }
+            let wrow = &w.mantissas[r * k..(r + 1) * k];
+            for (kk, &wv) in wrow.iter().enumerate() {
+                if wv == 0 {
+                    continue;
+                }
+                let irow = &i.mantissas[kk * n..(kk + 1) * n];
+                for (a, &iv) in acc.iter_mut().zip(irow) {
+                    *a += A::mul(wv, iv);
+                }
+            }
+            // Rescale: ε_O = ε_W(row) + ε_I(col); frac bits add. The scale
+            // is an exact f64 power of two and the multiply runs in f64, so
+            // wide i64 accumulations keep their precision and extreme
+            // exponent sums behave (see gemm_f32_mantissa).
+            let we = match w.axis {
+                BlockAxis::Whole => w.exponents[0],
+                BlockAxis::PerRow => w.exponents[r],
+                BlockAxis::PerCol => unreachable!(),
+            };
+            if we <= zero_exp_floor {
+                orow.fill(0.0);
                 continue;
             }
-            let irow = &i.mantissas[kk * n..(kk + 1) * n];
-            for (a, &iv) in acc.iter_mut().zip(irow) {
-                *a += A::mul(wv, iv);
-            }
-        }
-        // Rescale: ε_O = ε_W(row) + ε_I(col); frac bits add.
-        let we = match w.axis {
-            BlockAxis::Whole => w.exponents[0],
-            BlockAxis::PerRow => w.exponents[r],
-            BlockAxis::PerCol => unreachable!(),
-        };
-        let orow = &mut out[r * n..(r + 1) * n];
-        if we <= zero_exp_floor {
-            orow.fill(0.0);
-            continue;
-        }
-        match i.axis {
-            BlockAxis::Whole => {
-                let ie = i.exponents[0];
-                let scale = if ie <= zero_exp_floor {
-                    0.0
-                } else {
-                    exp2i(we + ie - w.frac_bits - i.frac_bits)
-                };
-                for (o, a) in orow.iter_mut().zip(&acc) {
-                    *o = a.to_f32() * scale;
+            match i.axis {
+                BlockAxis::Whole => {
+                    let ie = i.exponents[0];
+                    if ie <= zero_exp_floor {
+                        orow.fill(0.0);
+                        continue;
+                    }
+                    let scale = exp2i64(we + ie - w.frac_bits - i.frac_bits);
+                    for (o, a) in orow.iter_mut().zip(&acc) {
+                        *o = (a.to_f64() * scale) as f32;
+                    }
                 }
-            }
-            BlockAxis::PerCol => {
-                for ((o, a), &ie) in orow.iter_mut().zip(&acc).zip(&i.exponents) {
-                    *o = if ie <= zero_exp_floor {
-                        0.0
-                    } else {
-                        a.to_f32() * exp2i(we + ie - w.frac_bits - i.frac_bits)
-                    };
+                BlockAxis::PerCol => {
+                    for ((o, a), &ie) in orow.iter_mut().zip(&acc).zip(&i.exponents) {
+                        *o = if ie <= zero_exp_floor {
+                            0.0
+                        } else {
+                            (a.to_f64() * exp2i64(we + ie - w.frac_bits - i.frac_bits)) as f32
+                        };
+                    }
                 }
+                BlockAxis::PerRow => unreachable!(),
             }
-            BlockAxis::PerRow => unreachable!(),
         }
-    }
+    });
 }
 
 /// Plain f32 GEMM reference (`O = W·I`), used as the "floating point"
-/// baseline throughout the experiments.
+/// baseline throughout the experiments. Parallelized over row panels;
+/// each row keeps the serial accumulation order (bit-identical output).
 pub fn f32_gemm(w: &[f32], i: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(w.len(), m * k);
     assert_eq!(i.len(), k * n);
     assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for r in 0..m {
-        let wrow = &w[r * k..(r + 1) * k];
-        let orow = &mut out[r * n..(r + 1) * n];
-        for (kk, &wv) in wrow.iter().enumerate() {
-            if wv == 0.0 {
-                continue;
-            }
-            let irow = &i[kk * n..(kk + 1) * n];
-            for (o, &iv) in orow.iter_mut().zip(irow) {
-                *o += wv * iv;
+    pool::parallel_row_panels(out, m, n, k.saturating_mul(n), |r0, panel| {
+        for (pr, orow) in panel.chunks_mut(n).enumerate() {
+            let r = r0 + pr;
+            orow.fill(0.0);
+            let wrow = &w[r * k..(r + 1) * k];
+            for (kk, &wv) in wrow.iter().enumerate() {
+                if wv == 0.0 {
+                    continue;
+                }
+                let irow = &i[kk * n..(kk + 1) * n];
+                for (o, &iv) in orow.iter_mut().zip(irow) {
+                    *o += wv * iv;
+                }
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -361,6 +444,94 @@ mod tests {
         let iq = BfpMatrix::quantize(&mat(7, 12, 1.0), 3, 4, fmt, BlockAxis::Whole);
         let o = bfp_gemm(&wq, &iq);
         assert!(o.data.iter().all(|&x| x == 0.0));
+    }
+
+    /// Regression for the single-chunk rescale path: the per-row scale
+    /// used to be narrowed to f32 before the multiply, flushing outputs
+    /// to zero whenever the block-exponent sum fell below the f32
+    /// exponent range even though the products themselves are
+    /// representable (subnormal) f32 values.
+    #[test]
+    fn single_chunk_rescale_survives_near_denormal_scales() {
+        use crate::bfp::format::exp2i;
+        let fmt = BfpFormat::new(8); // frac_bits = 6 → f32 lane, chunk ≫ K
+        let (m, k, n) = (2usize, 8usize, 3usize);
+        // w ~ 2^-100, i ~ 2^-40 → combined scale ≈ 2^-152 (underflows the
+        // f32 exponent range) while outputs land near 2^-135 (valid f32
+        // subnormals).
+        let w: Vec<f32> = (0..m * k).map(|j| ((j % 5) as f32 - 2.0) * exp2i(-100)).collect();
+        let i: Vec<f32> = (0..k * n).map(|j| ((j % 7) as f32 - 3.0) * exp2i(-40)).collect();
+        let wq = BfpMatrix::quantize(&w, m, k, fmt, BlockAxis::PerRow);
+        let iq = BfpMatrix::quantize(&i, k, n, fmt, BlockAxis::Whole);
+        let o = bfp_gemm(&wq, &iq);
+        assert!(o.data.iter().any(|&x| x != 0.0), "tiny-scale output flushed to zero: {:?}", o.data);
+        // f64 integer reference
+        for r in 0..m {
+            for c in 0..n {
+                let mut acc: i128 = 0;
+                for kk in 0..k {
+                    acc += wq.mantissas[r * k + kk] as i128 * iq.mantissas[kk * n + c] as i128;
+                }
+                let expect = (acc as f64
+                    * exp2i64(wq.exponents[r] + iq.exponents[0] - wq.frac_bits - iq.frac_bits))
+                    as f32;
+                let got = o.data[r * n + c];
+                let tol = expect.abs() as f64 * 1e-3 + 1e-44;
+                assert!(
+                    ((got - expect) as f64).abs() <= tol,
+                    "O[{r},{c}] = {got:e} vs {expect:e}"
+                );
+            }
+        }
+    }
+
+    /// With an overflowing block-exponent sum and a fully cancelled
+    /// accumulator, the old `acc * f32::INFINITY` rescale produced NaN;
+    /// the f64 path must yield an exact 0.
+    #[test]
+    fn overflowing_scale_with_cancellation_is_zero_not_nan() {
+        use crate::bfp::format::exp2i;
+        let fmt = BfpFormat::new(8);
+        // row [2^105, -2^105] against identical input rows ⇒ acc = 0, but
+        // the combined scale 2^(105+39-12) = 2^132 overflows f32.
+        let w = vec![exp2i(105), -exp2i(105)];
+        let i = vec![exp2i(39), exp2i(39), exp2i(39), exp2i(39)];
+        let wq = BfpMatrix::quantize(&w, 1, 2, fmt, BlockAxis::PerRow);
+        let iq = BfpMatrix::quantize(&i, 2, 2, fmt, BlockAxis::Whole);
+        let o = bfp_gemm(&wq, &iq);
+        for &x in &o.data {
+            assert!(x == 0.0, "cancelled overflow-scale output must be 0, got {x}");
+        }
+    }
+
+    /// Pre-packed weight panels and caller-owned scratch must reproduce
+    /// the plain entry point bit-for-bit.
+    #[test]
+    fn prepacked_weights_match_plain_path() {
+        let (m, k, n) = (6, 40, 11);
+        let w = mat(8, m * k, 1.5);
+        let i = mat(9, k * n, 3.0);
+        let fmt = BfpFormat::new(8);
+        let wq = BfpMatrix::quantize(&w, m, k, fmt, BlockAxis::PerRow);
+        let iq = BfpMatrix::quantize(&i, k, n, fmt, BlockAxis::Whole);
+        assert!(f32_lane_chunk(wq.frac_bits, iq.frac_bits).is_some());
+        let plain = bfp_gemm(&wq, &iq).data;
+        let packed = pack_mantissas(&wq);
+        let mut out = vec![0f32; m * n];
+        let mut scratch = GemmScratch::default();
+        bfp_gemm_into_prepared(&wq, Some(&packed), &iq, &mut out, &mut scratch);
+        for (a, b) in plain.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // scratch reuse across differently-shaped calls must not leak
+        let wq2 = BfpMatrix::quantize(&mat(10, 3 * 5, 1.0), 3, 5, fmt, BlockAxis::PerRow);
+        let iq2 = BfpMatrix::quantize(&mat(11, 5 * 2, 1.0), 5, 2, fmt, BlockAxis::Whole);
+        let mut out2 = vec![0f32; 3 * 2];
+        bfp_gemm_into_prepared(&wq2, None, &iq2, &mut out2, &mut scratch);
+        let fresh = bfp_gemm(&wq2, &iq2).data;
+        for (a, b) in fresh.iter().zip(&out2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

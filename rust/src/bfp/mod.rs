@@ -28,6 +28,9 @@ pub mod quantize;
 
 pub use block::BfpBlock;
 pub use format::{exponent_of, BfpFormat, Rounding};
-pub use gemm::{bfp_gemm, bfp_gemm_into, BfpGemmOutput};
+pub use gemm::{
+    bfp_gemm, bfp_gemm_into, bfp_gemm_into_prepared, f32_lane_chunk, pack_mantissas, BfpGemmOutput,
+    GemmScratch,
+};
 pub use partition::{BfpMatrix, PartitionCost, PartitionScheme};
 pub use quantize::{block_format, dequantize, max_exponent, quantize_into};

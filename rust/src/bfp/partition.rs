@@ -119,25 +119,47 @@ pub struct BfpMatrix {
 }
 
 impl BfpMatrix {
+    /// An empty placeholder to [`BfpMatrix::requantize`] into — the
+    /// prepared-serving workspace holds one per arena so the hot path
+    /// reuses the mantissa/exponent allocations across layers and images.
+    pub fn empty() -> Self {
+        Self { rows: 0, cols: 0, axis: BlockAxis::Whole, frac_bits: 0, mantissas: Vec::new(), exponents: Vec::new() }
+    }
+
     /// Quantize a row-major `rows×cols` f32 matrix under `fmt` and `axis`.
     pub fn quantize(data: &[f32], rows: usize, cols: usize, fmt: BfpFormat, axis: BlockAxis) -> Self {
+        let mut out = Self::empty();
+        out.requantize(data, rows, cols, fmt, axis);
+        out
+    }
+
+    /// [`BfpMatrix::quantize`] in place, reusing this matrix's buffers.
+    /// Produces results identical to a fresh `quantize` call.
+    pub fn requantize(&mut self, data: &[f32], rows: usize, cols: usize, fmt: BfpFormat, axis: BlockAxis) {
         assert_eq!(data.len(), rows * cols, "matrix shape mismatch");
         let frac = fmt.frac_bits();
         let max_m = fmt.max_mantissa();
         let round = fmt.rounding;
-        let mut mantissas = vec![0i32; rows * cols];
-        let mut exponents;
+        self.rows = rows;
+        self.cols = cols;
+        self.axis = axis;
+        self.frac_bits = frac;
+        self.mantissas.clear();
+        self.mantissas.resize(rows * cols, 0);
+        self.exponents.clear();
+        let mantissas = &mut self.mantissas;
+        let exponents = &mut self.exponents;
         let zero_exp = i32::MIN / 2;
         match axis {
             BlockAxis::Whole => {
                 let eps = max_exponent(data).unwrap_or(zero_exp);
-                exponents = vec![eps];
+                exponents.push(eps);
                 if eps != zero_exp {
-                    quantize_slice(data, &mut mantissas, frac, eps, max_m, round);
+                    quantize_slice(data, mantissas, frac, eps, max_m, round);
                 }
             }
             BlockAxis::PerRow => {
-                exponents = vec![zero_exp; rows];
+                exponents.resize(rows, zero_exp);
                 for r in 0..rows {
                     let row = &data[r * cols..(r + 1) * cols];
                     if let Some(eps) = max_exponent(row) {
@@ -147,7 +169,7 @@ impl BfpMatrix {
                 }
             }
             BlockAxis::PerCol => {
-                exponents = vec![zero_exp; cols];
+                exponents.resize(cols, zero_exp);
                 // column-wise max exponent
                 let mut max_bits = vec![0u32; cols];
                 for r in 0..rows {
@@ -180,7 +202,6 @@ impl BfpMatrix {
                 }
             }
         }
-        Self { rows, cols, axis, frac_bits: frac, mantissas, exponents }
     }
 
     /// Block exponent governing entry `(r, c)`.
@@ -323,6 +344,26 @@ mod tests {
         let back = q.to_f32();
         assert_eq!(&back[0..2], &[0.0, 0.0]);
         assert!((back[2] - 1.0).abs() < 0.02 && (back[3] - 2.0).abs() < 0.02);
+    }
+
+    /// In-place requantization over a reused buffer must equal a fresh
+    /// quantize, across shrinking/growing shapes and every axis (no stale
+    /// mantissas or exponents may survive).
+    #[test]
+    fn requantize_reuse_matches_fresh() {
+        let mut reused = BfpMatrix::quantize(&sample_matrix(16, 16), 16, 16, BfpFormat::new(6), BlockAxis::PerRow);
+        for (rows, cols, bits, axis) in [
+            (4usize, 5usize, 8u32, BlockAxis::Whole),
+            (9, 3, 10, BlockAxis::PerRow),
+            (2, 11, 5, BlockAxis::PerCol),
+            (12, 12, 8, BlockAxis::PerRow),
+            (1, 1, 4, BlockAxis::Whole),
+        ] {
+            let data = sample_matrix(rows, cols);
+            reused.requantize(&data, rows, cols, BfpFormat::new(bits), axis);
+            let fresh = BfpMatrix::quantize(&data, rows, cols, BfpFormat::new(bits), axis);
+            assert_eq!(reused, fresh, "{rows}x{cols} bits={bits} axis={axis:?}");
+        }
     }
 
     #[test]

@@ -39,6 +39,25 @@ impl Default for BatchPolicy {
     }
 }
 
+/// The response half of a [`Request`] after its image has moved on to
+/// the backend — serving never copies input tensors (§Perf).
+pub struct Responder {
+    pub id: u64,
+    pub respond: std::sync::mpsc::Sender<Response>,
+    pub enqueued_at: Instant,
+}
+
+/// Split a batch into backend inputs (by value) and response handles.
+pub fn split_batch(batch: Vec<Request>) -> (Vec<Tensor>, Vec<Responder>) {
+    let mut images = Vec::with_capacity(batch.len());
+    let mut responders = Vec::with_capacity(batch.len());
+    for Request { id, image, respond, enqueued_at } in batch {
+        images.push(image);
+        responders.push(Responder { id, respond, enqueued_at });
+    }
+    (images, responders)
+}
+
 /// Pull the next batch from the queue: blocks for the first request, then
 /// lingers up to `policy.linger` (or until `max_batch`) for more.
 /// Returns `None` when the queue has disconnected and drained.
@@ -94,6 +113,17 @@ mod tests {
         let (tx, rx) = channel::<Request>();
         drop(tx);
         assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn split_batch_pairs_images_with_responders() {
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        let (images, responders) = split_batch(vec![r1, r2]);
+        assert_eq!(images.len(), 2);
+        assert_eq!(responders.len(), 2);
+        assert_eq!(responders[0].id, 1);
+        assert_eq!(responders[1].id, 2);
     }
 
     #[test]

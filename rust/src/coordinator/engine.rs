@@ -4,6 +4,7 @@
 use crate::models::Model;
 use crate::nn::{BfpExec, Fp32Exec};
 use crate::quant::{BfpConfig, LayerSchedule};
+use crate::runtime::pool;
 use crate::tensor::Tensor;
 
 /// Numeric execution mode.
@@ -38,28 +39,39 @@ impl ExecMode {
 }
 
 /// Forward a batch of `[C,H,W]` images, returning per-image logits.
-pub fn forward_batch(model: &Model, images: &[Tensor], mode: ExecMode) -> Vec<Tensor> {
-    // one executor for the whole batch (a Mixed schedule clones its
-    // name → config map once here, not once per image)
-    enum AnyExec {
-        Fp(Fp32Exec),
-        Bfp(BfpExec),
+///
+/// Takes the batch by value: images flow into `Block::execute` without a
+/// per-image copy (the serving path moves tensors straight out of the
+/// request queue). Work is spread over the [`pool`] by image — one
+/// executor per worker thread, so a Mixed schedule clones its
+/// name → config map per thread, not per image — and each image's result
+/// is bit-identical to a serial run (the GEMM row panels parallelize
+/// instead when the batch is a single image).
+pub fn forward_batch(model: &Model, images: Vec<Tensor>, mode: ExecMode) -> Vec<Tensor> {
+    for img in &images {
+        assert_eq!(img.shape, model.input_shape, "input shape mismatch for {}", model.name);
     }
-    let mut exec = match &mode {
-        ExecMode::Fp32 => AnyExec::Fp(Fp32Exec),
-        ExecMode::Bfp(cfg) => AnyExec::Bfp(BfpExec::new(*cfg)),
-        ExecMode::Mixed(sched) => AnyExec::Bfp(BfpExec::with_schedule(sched.clone())),
-    };
-    images
-        .iter()
-        .map(|img| {
-            assert_eq!(img.shape, model.input_shape, "input shape mismatch for {}", model.name);
-            match &mut exec {
-                AnyExec::Fp(e) => model.graph.execute(img.clone(), e),
-                AnyExec::Bfp(e) => model.graph.execute(img.clone(), e),
-            }
-        })
-        .collect()
+    match mode {
+        ExecMode::Fp32 => pool::parallel_map_with(images, || Fp32Exec, |e, img| model.graph.execute(img, e)),
+        ExecMode::Bfp(cfg) => {
+            pool::parallel_map_with(images, move || BfpExec::new(cfg), |e, img| model.graph.execute(img, e))
+        }
+        ExecMode::Mixed(sched) => {
+            let sched = &sched;
+            pool::parallel_map_with(
+                images,
+                move || BfpExec::with_schedule(sched.clone()),
+                |e, img| model.graph.execute(img, e),
+            )
+        }
+    }
+}
+
+/// [`forward_batch`] over borrowed images: clones the batch once up
+/// front. Analysis and harness code that reuses its image set calls
+/// this; the serving path uses the by-value form to avoid the copies.
+pub fn forward_batch_ref(model: &Model, images: &[Tensor], mode: ExecMode) -> Vec<Tensor> {
+    forward_batch(model, images.to_vec(), mode)
 }
 
 #[cfg(test)]
@@ -72,8 +84,8 @@ mod tests {
     fn batch_forward_lenet_both_modes() {
         let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
         let images = crate::data::DigitDataset::generate(3, 1).images;
-        let fp = forward_batch(&model, &images, ExecMode::Fp32);
-        let bfp = forward_batch(&model, &images, ExecMode::Bfp(BfpConfig::paper_default()));
+        let fp = forward_batch_ref(&model, &images, ExecMode::Fp32);
+        let bfp = forward_batch(&model, images, ExecMode::Bfp(BfpConfig::paper_default()));
         assert_eq!(fp.len(), 3);
         assert_eq!(bfp.len(), 3);
         for (a, b) in fp.iter().zip(&bfp) {
@@ -90,10 +102,10 @@ mod tests {
     fn mixed_mode_executes_per_layer_plan() {
         let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
         let images = crate::data::DigitDataset::generate(2, 7).images;
-        let fp = forward_batch(&model, &images, ExecMode::Fp32);
+        let fp = forward_batch_ref(&model, &images, ExecMode::Fp32);
         let sched = LayerSchedule::uniform(BfpConfig::new(6, 6))
             .with_layer("conv1", BfpConfig::new(9, 9));
-        let mixed = forward_batch(&model, &images, ExecMode::Mixed(sched));
+        let mixed = forward_batch(&model, images, ExecMode::Mixed(sched));
         for (a, b) in fp.iter().zip(&mixed) {
             assert_eq!(b.shape, vec![10]);
             let nsr = a.data.iter().zip(&b.data).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>()
@@ -102,11 +114,29 @@ mod tests {
         }
     }
 
+    /// Image-level parallelism must not change a single bit of output.
+    #[test]
+    fn parallel_batch_is_bit_identical_to_serial() {
+        let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+        let images = crate::data::DigitDataset::generate(5, 3).images;
+        let mode = ExecMode::Bfp(BfpConfig::paper_default());
+        let serial = crate::runtime::pool::with_threads(1, || forward_batch_ref(&model, &images, mode.clone()));
+        for t in [2usize, 4] {
+            let par = crate::runtime::pool::with_threads(t, || forward_batch_ref(&model, &images, mode.clone()));
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.shape, b.shape);
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "threads={t}");
+                }
+            }
+        }
+    }
+
     #[test]
     #[should_panic]
     fn rejects_wrong_shape() {
         let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
         let bad = vec![Tensor::zeros(&[3, 32, 32])];
-        forward_batch(&model, &bad, ExecMode::Fp32);
+        forward_batch(&model, bad, ExecMode::Fp32);
     }
 }

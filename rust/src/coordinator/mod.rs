@@ -10,6 +10,6 @@ pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use engine::{forward_batch, ExecMode};
+pub use engine::{forward_batch, forward_batch_ref, ExecMode};
 pub use metrics::Metrics;
-pub use server::{InferenceServer, ServerConfig};
+pub use server::{InferenceServer, PreparedBackend, RustBackend, ServerConfig};

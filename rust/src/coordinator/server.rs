@@ -2,7 +2,7 @@
 //! queue and executes them on a pluggable backend (pure-Rust engine or a
 //! PJRT-compiled artifact).
 
-use super::batcher::{next_batch, BatchPolicy, Request, Response};
+use super::batcher::{next_batch, split_batch, BatchPolicy, Request, Response};
 use super::metrics::Metrics;
 use crate::tensor::Tensor;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -17,7 +17,9 @@ use std::time::Instant;
 /// worker thread.
 pub trait Backend: 'static {
     /// Run a batch of `[C,H,W]` images, returning per-image logits.
-    fn infer_batch(&mut self, images: &[Tensor]) -> Vec<Tensor>;
+    /// Images arrive by value — they move straight out of the request
+    /// queue, so serving never copies an input tensor.
+    fn infer_batch(&mut self, images: Vec<Tensor>) -> Vec<Tensor>;
     /// Human-readable backend description (for logs).
     fn describe(&self) -> String;
 }
@@ -62,15 +64,16 @@ impl InferenceServer {
             let mut backend = factory();
             while let Some(batch) = next_batch(&rx, config.policy) {
                 let t0 = Instant::now();
-                let images: Vec<Tensor> = batch.iter().map(|r| r.image.clone()).collect();
-                let logits = backend.infer_batch(&images);
-                let batch_size = batch.len();
-                for (req, out) in batch.into_iter().zip(logits) {
-                    let queue_wait = t0.duration_since(req.enqueued_at);
-                    let latency = req.enqueued_at.elapsed();
+                // images move out of the requests — no per-request copy
+                let (images, responders) = split_batch(batch);
+                let logits = backend.infer_batch(images);
+                let batch_size = responders.len();
+                for (resp, out) in responders.into_iter().zip(logits) {
+                    let queue_wait = t0.duration_since(resp.enqueued_at);
+                    let latency = resp.enqueued_at.elapsed();
                     metrics_worker.lock().unwrap().record(latency, queue_wait, batch_size);
-                    let _ = req.respond.send(Response {
-                        id: req.id,
+                    let _ = resp.respond.send(Response {
+                        id: resp.id,
                         logits: out,
                         queue_wait,
                         batch_size,
@@ -110,18 +113,55 @@ impl InferenceServer {
     }
 }
 
-/// Pure-Rust backend over a model from the zoo.
+/// Pure-Rust backend over a model from the zoo. Quantizes conv weights
+/// on every call — [`PreparedBackend`] is the steady-state configuration.
 pub struct RustBackend {
     pub model: crate::models::Model,
     pub mode: super::engine::ExecMode,
 }
 
 impl Backend for RustBackend {
-    fn infer_batch(&mut self, images: &[Tensor]) -> Vec<Tensor> {
+    fn infer_batch(&mut self, images: Vec<Tensor>) -> Vec<Tensor> {
         super::engine::forward_batch(&self.model, images, self.mode.clone())
     }
     fn describe(&self) -> String {
         format!("rust/{}/{}", self.model.name, self.mode.describe())
+    }
+}
+
+/// Prepared-model backend: weight quantization cached per
+/// `(layer, config)`, scratch arenas reused across requests, batches
+/// parallelized over images — bit-identical to [`RustBackend`] in a BFP
+/// or mixed mode, minus the per-request preprocessing.
+pub struct PreparedBackend {
+    pub prepared: crate::nn::prepared::PreparedModel,
+    desc: String,
+}
+
+impl PreparedBackend {
+    /// Prepare `model` for `mode`. Returns `None` for [`ExecMode::Fp32`]
+    /// — there are no quantized weights to cache; serve it through
+    /// [`RustBackend`] instead.
+    pub fn new(model: crate::models::Model, mode: &super::engine::ExecMode) -> Option<Self> {
+        use super::engine::ExecMode;
+        let schedule = match mode {
+            ExecMode::Fp32 => return None,
+            ExecMode::Bfp(cfg) => crate::quant::LayerSchedule::uniform(*cfg),
+            ExecMode::Mixed(s) => s.clone(),
+        };
+        let desc = format!("rust-prepared/{}/{}", model.name, mode.describe());
+        let prepared = crate::nn::prepared::PreparedModel::new(model, schedule);
+        prepared.warm();
+        Some(Self { prepared, desc })
+    }
+}
+
+impl Backend for PreparedBackend {
+    fn infer_batch(&mut self, images: Vec<Tensor>) -> Vec<Tensor> {
+        self.prepared.forward_batch(images)
+    }
+    fn describe(&self) -> String {
+        self.desc.clone()
     }
 }
 
@@ -151,6 +191,36 @@ mod tests {
         let metrics = server.shutdown();
         assert_eq!(metrics.total_requests, 6);
         assert!(metrics.throughput() > 0.0);
+    }
+
+    /// The prepared backend must serve logits bit-identical to the
+    /// unprepared engine path for the same requests.
+    #[test]
+    fn prepared_backend_matches_unprepared() {
+        let mode = ExecMode::Bfp(BfpConfig::paper_default());
+        let images = crate::data::DigitDataset::generate(4, 21).images;
+        let collect = |backend: Box<dyn Backend + Send>| -> Vec<crate::tensor::Tensor> {
+            let mut server = InferenceServer::start(backend, ServerConfig::default());
+            let pending: Vec<_> = images.iter().map(|i| server.submit(i.clone())).collect();
+            let out = pending.into_iter().map(|rx| rx.recv().unwrap().logits).collect();
+            server.shutdown();
+            out
+        };
+        let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+        let plain = collect(Box::new(RustBackend { model: model.clone(), mode: mode.clone() }));
+        let prepared = collect(Box::new(PreparedBackend::new(model, &mode).unwrap()));
+        for (a, b) in plain.iter().zip(&prepared) {
+            assert_eq!(a.shape, b.shape);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_backend_refuses_fp32() {
+        let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+        assert!(PreparedBackend::new(model, &ExecMode::Fp32).is_none());
     }
 
     #[test]

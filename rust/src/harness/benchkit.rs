@@ -14,12 +14,49 @@ pub struct BenchResult {
     /// Optional work units per iteration (flops, bytes, elements…).
     pub work_per_iter: Option<f64>,
     pub work_unit: &'static str,
+    /// Pool thread count in effect while this bench ran (benches pinned
+    /// via `pool::with_threads` record their pinned value, not the
+    /// ambient one — essential for reading the scaling sweeps).
+    pub threads: usize,
 }
 
 impl BenchResult {
     /// Work units per second at the mean time.
     pub fn rate(&self) -> Option<f64> {
         self.work_per_iter.map(|w| w / self.mean.as_secs_f64())
+    }
+
+    /// Mean nanoseconds per iteration.
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+
+    /// Minimum nanoseconds per iteration.
+    pub fn min_ns(&self) -> f64 {
+        self.min.as_secs_f64() * 1e9
+    }
+
+    /// One machine-readable `BENCH_*.json` entry.
+    pub fn json_entry(&self) -> String {
+        let work = match self.work_per_iter {
+            Some(w) => format!("{w:.1}"),
+            None => "null".to_string(),
+        };
+        let rate = match self.rate() {
+            Some(r) => format!("{r:.3}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"threads\":{},\"mean_ns\":{:.1},\"min_ns\":{:.1},\"work_per_iter\":{},\"work_unit\":\"{}\",\"rate_per_s\":{}}}",
+            json_escape(&self.name),
+            self.iters,
+            self.threads,
+            self.mean_ns(),
+            self.min_ns(),
+            work,
+            json_escape(self.work_unit),
+            rate
+        )
     }
 
     /// One aligned report line.
@@ -89,6 +126,7 @@ pub fn bench_opts<F: FnMut()>(
         min,
         work_per_iter,
         work_unit,
+        threads: crate::runtime::pool::num_threads(),
     };
     println!("{}", result.line());
     result
@@ -97,6 +135,40 @@ pub fn bench_opts<F: FnMut()>(
 /// Section header for bench output.
 pub fn section(title: &str) {
     println!("\n### {title}");
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write a machine-readable `BENCH_<tag>.json` so the perf trajectory
+/// (EXPERIMENTS.md §Perf) can be tracked across PRs and checked in CI.
+/// Hand-rolled JSON — the offline image has no serde.
+pub fn write_json(path: &std::path::Path, tag: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(tag)));
+    // ambient pool width; per-entry "threads" records each bench's pin
+    s.push_str(&format!("  \"default_threads\": {},\n", crate::runtime::pool::num_threads()));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&r.json_entry());
+        s.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
 }
 
 #[cfg(test)]
@@ -117,5 +189,30 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.mean > Duration::ZERO);
         assert!(r.rate().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_round_trips_structure() {
+        let r = BenchResult {
+            name: "gemm \"fast\"".to_string(),
+            iters: 7,
+            mean: Duration::from_micros(1500),
+            min: Duration::from_micros(1200),
+            work_per_iter: Some(1e6),
+            work_unit: "MAC",
+            threads: 3,
+        };
+        let entry = r.json_entry();
+        assert!(entry.contains("\\\"fast\\\""), "quotes must be escaped: {entry}");
+        assert!(entry.contains("\"iters\":7"));
+        assert!(entry.contains("\"threads\":3"));
+        assert!(entry.contains("\"work_unit\":\"MAC\""));
+        let path = std::env::temp_dir().join("bfp_cnn_benchkit_test.json");
+        write_json(&path, "unit-test", &[r]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("{\n"));
+        assert!(body.contains("\"bench\": \"unit-test\""));
+        assert!(body.trim_end().ends_with('}'));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -23,13 +23,13 @@ use std::path::Path;
 pub fn run(input_size: usize, n_images: usize, seed: u64, artifacts: &Path) -> Table {
     let id = ModelId::Vgg16;
     let (model, set) = prepare_model_and_set(id, input_size, n_images, seed, artifacts);
-    let fp_logits = crate::coordinator::engine::forward_batch(
+    let fp_logits = crate::coordinator::engine::forward_batch_ref(
         &model,
         &set.images,
         crate::coordinator::engine::ExecMode::Fp32,
     );
     let logit_snr = |cfg: BfpConfig| -> f64 {
-        let out = crate::coordinator::engine::forward_batch(
+        let out = crate::coordinator::engine::forward_batch_ref(
             &model,
             &set.images,
             crate::coordinator::engine::ExecMode::Bfp(cfg),
@@ -83,14 +83,14 @@ mod tests {
     /// (Accuracy flips on a few images can tie, so assert on NSR.)
     #[test]
     fn eq4_output_noise_no_worse_than_eq2() {
-        use crate::coordinator::engine::{forward_batch, ExecMode};
+        use crate::coordinator::engine::{forward_batch_ref, ExecMode};
         let id = ModelId::Vgg16;
         let model = id.build(32, 1, Path::new("artifacts"));
         let images = crate::data::imagenet_like_batch(2, 32, 5);
-        let fp = forward_batch(&model, &images, ExecMode::Fp32);
+        let fp = forward_batch_ref(&model, &images, ExecMode::Fp32);
         let nsr = |scheme| {
             let cfg = BfpConfig::new(8, 8).with_scheme(scheme);
-            let out = forward_batch(&model, &images, ExecMode::Bfp(cfg));
+            let out = forward_batch_ref(&model, &images, ExecMode::Bfp(cfg));
             let mut sig = 0f64;
             let mut err = 0f64;
             for (f, b) in fp.iter().zip(&out) {

@@ -12,7 +12,7 @@
 //! EXPERIMENTS.md as the conservative upper bound.
 
 use super::report::{drop_cell, Table};
-use crate::coordinator::engine::{forward_batch, ExecMode};
+use crate::coordinator::engine::{forward_batch_ref, ExecMode};
 use crate::models::{Model, ModelId};
 use crate::quant::BfpConfig;
 use crate::tensor::Tensor;
@@ -31,7 +31,7 @@ pub struct EvalSet {
 
 /// Run the FP32 reference once over the images.
 pub fn prepare(model: &Model, images: Vec<Tensor>, labels: Option<Vec<usize>>) -> EvalSet {
-    let logits = forward_batch(model, &images, ExecMode::Fp32);
+    let logits = forward_batch_ref(model, &images, ExecMode::Fp32);
     let fp_top1: Vec<usize> = logits.iter().map(|l| argmax(&l.data)).collect();
     let labels = labels.unwrap_or_else(|| fp_top1.clone());
     let correct = fp_top1.iter().zip(&labels).filter(|(a, b)| a == b).count();
@@ -41,7 +41,7 @@ pub fn prepare(model: &Model, images: Vec<Tensor>, labels: Option<Vec<usize>>) -
 
 /// Top-1 accuracy drop of a BFP configuration against the eval set.
 pub fn drop_for(model: &Model, set: &EvalSet, cfg: BfpConfig) -> f64 {
-    let logits = forward_batch(model, &set.images, ExecMode::Bfp(cfg));
+    let logits = forward_batch_ref(model, &set.images, ExecMode::Bfp(cfg));
     let correct = logits
         .iter()
         .zip(&set.labels)

@@ -28,7 +28,11 @@
 //!   (`ExecMode::Mixed`).
 //! * [`coordinator`] + [`runtime`] — the serving layer: a batched
 //!   inference engine that can execute either the pure-Rust path or the
-//!   AOT-compiled JAX/Pallas artifacts through PJRT.
+//!   AOT-compiled JAX/Pallas artifacts through PJRT. Steady-state serving
+//!   uses [`nn::prepared`] (weight quantization cached per
+//!   `(layer, config)`, scratch-arena workspaces) on the zero-dependency
+//!   scoped thread pool in [`runtime::pool`] (`BFP_NUM_THREADS`), with
+//!   output bit-identical to the serial path at every thread count.
 //! * [`harness`] — drivers that regenerate every table and figure of the
 //!   paper's evaluation section.
 //! * [`data`] — synthetic workload generators (procedural digit / texture

@@ -11,7 +11,7 @@
 //! bfp-cnn autotune <model> [--budget-db <snr>] [--images 4] [--size 32]
 //!                 [--max-width 10] [--min-width 3] [--out plan.txt]
 //! bfp-cnn serve  [--model lenet] [--requests 64] [--mode bfp|fp32|plan]
-//!                [--plan plan.txt] [--batch 8]
+//!                [--plan plan.txt] [--batch 8] [--prepared]
 //! bfp-cnn e2e    [--requests 64] [--artifacts artifacts]
 //! bfp-cnn all    [--images 10]
 //! ```
@@ -23,8 +23,8 @@
 //! coordinator engine, and optionally serializes the plan for
 //! `serve --mode plan`.
 
-use bfp_cnn::coordinator::engine::{forward_batch, ExecMode};
-use bfp_cnn::coordinator::server::{Backend, InferenceServer, RustBackend, ServerConfig};
+use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
+use bfp_cnn::coordinator::server::{Backend, InferenceServer, PreparedBackend, RustBackend, ServerConfig};
 use bfp_cnn::harness::{autotune_report, fig3, table1, table2, table3, table4};
 use bfp_cnn::models::ModelId;
 use bfp_cnn::quant::{BfpConfig, LayerSchedule};
@@ -192,7 +192,8 @@ fn main() {
                 _ => ExecMode::Bfp(BfpConfig::new(args.get("lw", 8), args.get("li", 8))),
             };
             let id = model_by_name(&args.get_str("model", "lenet")).expect("unknown model");
-            serve_demo(id, size, seed, &artifacts, requests, batch, mode);
+            let prepared = args.get_str("prepared", "false") == "true";
+            serve_demo(id, size, seed, &artifacts, requests, batch, mode, prepared);
         }
         "e2e" => {
             let requests: usize = args.get("requests", 64);
@@ -236,14 +237,34 @@ fn gen_images(id: ModelId, input_shape: &[usize], n: usize, seed: u64) -> Vec<bf
 }
 
 /// Coordinator demo: serve a stream of requests through the dynamic
-/// batcher and print the metrics line.
-fn serve_demo(id: ModelId, size: usize, seed: u64, artifacts: &Path, requests: usize, batch: usize, mode: ExecMode) {
+/// batcher and print the metrics line. With `prepared`, serve through the
+/// [`PreparedBackend`] (cached weight quantization + scratch arenas —
+/// the steady-state configuration; see EXPERIMENTS.md §Perf).
+#[allow(clippy::too_many_arguments)]
+fn serve_demo(
+    id: ModelId,
+    size: usize,
+    seed: u64,
+    artifacts: &Path,
+    requests: usize,
+    batch: usize,
+    mode: ExecMode,
+    prepared: bool,
+) {
     let model = id.build(size, seed, artifacts);
     let input_shape = model.input_shape.clone();
-    let backend = RustBackend { model, mode };
+    let use_prepared = prepared && !matches!(mode, ExecMode::Fp32);
+    if prepared && !use_prepared {
+        eprintln!("--prepared has no cached weights in fp32 mode; serving unprepared");
+    }
+    let backend: Box<dyn Backend + Send> = if use_prepared {
+        Box::new(PreparedBackend::new(model, &mode).expect("non-fp32 mode"))
+    } else {
+        Box::new(RustBackend { model, mode })
+    };
     println!("serving {} requests on {} ...", requests, backend.describe());
     let mut server = InferenceServer::start(
-        Box::new(backend),
+        backend,
         ServerConfig {
             policy: bfp_cnn::coordinator::batcher::BatchPolicy {
                 max_batch: batch,
@@ -321,8 +342,8 @@ fn autotune_cmd(
 
     // per-layer execution through the engine on fresh images
     let eval = gen_images(id, &model.input_shape, images.min(4), seed + 1);
-    let fp = forward_batch(&model, &eval, ExecMode::Fp32);
-    let mixed = forward_batch(&model, &eval, ExecMode::Mixed(plan.to_schedule()));
+    let fp = forward_batch_ref(&model, &eval, ExecMode::Fp32);
+    let mixed = forward_batch_ref(&model, &eval, ExecMode::Mixed(plan.to_schedule()));
     let (mut sig, mut err) = (0f64, 0f64);
     for (a, b) in fp.iter().zip(&mixed) {
         for (&x, &y) in a.data.iter().zip(&b.data) {
@@ -381,7 +402,7 @@ fn e2e(artifacts: &Path, requests: usize, batch: usize) -> anyhow::Result<()> {
         lowered_batch: usize,
     }
     impl Backend for PjrtBackend {
-        fn infer_batch(&mut self, images: &[bfp_cnn::tensor::Tensor]) -> Vec<bfp_cnn::tensor::Tensor> {
+        fn infer_batch(&mut self, images: Vec<bfp_cnn::tensor::Tensor>) -> Vec<bfp_cnn::tensor::Tensor> {
             let b = self.lowered_batch;
             let per: usize = images[0].len();
             let mut flat = vec![0f32; b * per];

@@ -5,6 +5,7 @@ use crate::nn::Block;
 use std::path::Path;
 
 /// A network ready for inference.
+#[derive(Debug, Clone)]
 pub struct Model {
     pub name: String,
     pub graph: Block,

@@ -64,21 +64,37 @@ impl Conv2d {
         Tensor::from_vec(out, &[m, geo.out_h(), geo.out_w()])
     }
 
+    /// Quantize this layer's weights as the `M×K` GEMM operand under
+    /// `cfg` — the single routine shared by [`Conv2d::forward_bfp`], the
+    /// instrumented dual path and the prepared-model weight cache, so all
+    /// paths quantize identically by construction.
+    pub fn quantize_weights(&self, cfg: &BfpConfig) -> BfpMatrix {
+        let m = self.out_channels();
+        let k = self.weights.len() / m;
+        BfpMatrix::quantize(&self.weights.data, m, k, cfg.w_format(), cfg.scheme.w_axis())
+    }
+
     /// BFP forward (the Figure 2 data flow): block-format `W` and the
     /// im2col'd input per `cfg.scheme`, multiply-accumulate in fixed
     /// point, rescale to f32, add bias in f32 (the bias path stays float
     /// in the paper's Caffe port as well).
+    ///
+    /// Quantizes the (static) weight matrix on every call; steady-state
+    /// serving goes through [`crate::nn::prepared::PreparedModel`], which
+    /// caches the quantization per `(layer, config)`.
     pub fn forward_bfp(&self, input: &Tensor, cfg: &BfpConfig) -> Tensor {
         let (col, geo) = self.im2col(input);
         let (m, k, n) = (self.out_channels(), geo.k(), geo.n());
-        let wq = BfpMatrix::quantize(&self.weights.data, m, k, cfg.w_format(), cfg.scheme.w_axis());
+        let wq = self.quantize_weights(cfg);
+        debug_assert_eq!(wq.cols, k);
         let iq = BfpMatrix::quantize(&col, k, n, cfg.i_format(), cfg.scheme.i_axis());
         let mut out = bfp_gemm(&wq, &iq).data;
         self.add_bias(&mut out, n);
         Tensor::from_vec(out, &[m, geo.out_h(), geo.out_w()])
     }
 
-    fn add_bias(&self, out: &mut [f32], n: usize) {
+    /// Add the per-output-channel bias to a row-major `M×n` GEMM output.
+    pub fn add_bias(&self, out: &mut [f32], n: usize) {
         if self.bias.is_empty() {
             return;
         }

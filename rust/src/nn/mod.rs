@@ -7,12 +7,17 @@
 //!   FP32 reference path, the BFP path and the instrumented dual path.
 //! * [`exec`] — the two production executors: [`exec::Fp32Exec`] and
 //!   [`exec::BfpExec`] (the Figure 2 data flow per conv layer).
+//! * [`prepared`] — the steady-state serving path: weight quantization
+//!   cached per `(layer, config)`, scratch-arena workspaces, and batch
+//!   forwards parallelized on the [`crate::runtime::pool`].
 
 pub mod exec;
 pub mod graph;
 pub mod layers;
 pub mod ops;
+pub mod prepared;
 
 pub use exec::{BfpExec, Fp32Exec};
 pub use graph::{Block, Executor};
 pub use layers::{BatchNorm, Conv2d, Dense};
+pub use prepared::{PreparedModel, WeightCache, Workspace};

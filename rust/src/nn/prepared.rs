@@ -1,0 +1,485 @@
+//! Prepared-model serving: the steady-state inference hot path.
+//!
+//! [`crate::nn::layers::Conv2d::forward_bfp`] re-quantizes its (static)
+//! weight matrix and allocates im2col / mantissa / output buffers on
+//! every call. That is fine for one-shot analysis runs, but a server
+//! answering millions of requests pays that cost per image. This module
+//! amortizes it:
+//!
+//! * [`WeightCache`] quantizes each conv's weights **once** per
+//!   `(layer, weight format)` — keyed by what the weight operand of the
+//!   configs a [`LayerSchedule`] resolves to actually depends on, so
+//!   uniform, `Bfp` and `Mixed` modes share entries and a schedule swap
+//!   only quantizes layers whose weight format actually changed — and
+//!   lazily holds the pre-packed f32 mantissa panel for the GEMM fast
+//!   lane (serving path only).
+//! * [`Workspace`] is a scratch arena (im2col panel, quantized-input
+//!   staging, GEMM mantissa scratch) that grows to the model's high-water
+//!   mark and is reused across layers, images and server requests.
+//! * [`PreparedModel`] ties both to a [`Model`] + [`LayerSchedule`] and
+//!   runs `forward`/`forward_batch` **bit-identically** to the unprepared
+//!   [`crate::nn::BfpExec`] path (tested in `tests/prepared_parallel.rs`),
+//!   parallelizing batches over images via the [`crate::runtime::pool`].
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::graph::Executor;
+use super::layers::{BatchNorm, Conv2d, Dense};
+use super::ops;
+use crate::bfp::gemm::{bfp_gemm_into_prepared, f32_lane_chunk, pack_mantissas, GemmScratch};
+use crate::bfp::partition::BfpMatrix;
+use crate::models::Model;
+use crate::quant::{BfpConfig, LayerSchedule};
+use crate::runtime::pool;
+use crate::tensor::{avg_pool2d, global_avg_pool, im2col, max_pool2d, Tensor};
+
+/// A conv layer's weights, quantized once and shared read-only.
+#[derive(Clone)]
+pub struct CachedWeights {
+    /// Quantized `M×K` weight matrix.
+    pub wq: Arc<BfpMatrix>,
+    /// Pre-packed f32 mantissa panel when the GEMM's exact f32 lane
+    /// applies at this config (`None` → integer lanes).
+    pub packed: Option<Arc<Vec<f32>>>,
+}
+
+/// Cross-schedule cache of quantized conv weights, keyed by layer name
+/// plus the parts of a [`BfpConfig`] the weight operand actually depends
+/// on — its [`crate::bfp::BfpFormat`] (width + rounding) and block axis.
+/// Configs that differ only in the *input* width resolve to the same
+/// entry, so an autotune candidate that strips an activation bit never
+/// re-quantizes (or duplicates) the weights.
+#[derive(Default)]
+pub struct WeightCache {
+    /// Per layer: the weight formats seen so far (a handful at most —
+    /// linear scan beats hashing).
+    entries: HashMap<String, Vec<(WeightKey, CachedWeights)>>,
+    hits: usize,
+    misses: usize,
+}
+
+/// What weight quantization depends on: `W`'s format, block axis, and a
+/// cheap O(1) fingerprint of the weight tensor itself. The fingerprint
+/// guards against reusing one cache across models whose same-named
+/// layers carry different weights (every zoo model has a "conv1") —
+/// a mismatch is a clean cache miss, never a silently wrong matrix.
+#[derive(PartialEq, Eq, Clone, Copy)]
+struct WeightKey {
+    format: crate::bfp::BfpFormat,
+    axis: crate::bfp::partition::BlockAxis,
+    fingerprint: u64,
+}
+
+impl WeightKey {
+    fn of(layer: &Conv2d, cfg: &BfpConfig) -> Self {
+        Self {
+            format: cfg.w_format(),
+            axis: cfg.scheme.w_axis(),
+            fingerprint: weights_fingerprint(&layer.weights),
+        }
+    }
+}
+
+/// O(1) tensor fingerprint: length plus sampled element bits. Collisions
+/// require same-shaped tensors agreeing at the sampled positions — and a
+/// collision only ever returns a quantization of those other weights, so
+/// the worst case of this *heuristic* misuse guard matches today's
+/// intended single-model behaviour.
+fn weights_fingerprint(t: &Tensor) -> u64 {
+    let d = &t.data;
+    let sample = |i: usize| d.get(i).map(|v| v.to_bits() as u64).unwrap_or(0);
+    (d.len() as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .rotate_left(17)
+        ^ (sample(0) << 32)
+        ^ (sample(d.len() / 2) << 16)
+        ^ sample(d.len().saturating_sub(1))
+}
+
+impl WeightCache {
+    /// Look up (or quantize and insert) `layer`'s weights under `cfg`.
+    /// Does **not** build the packed f32 panel — the analysis/autotune
+    /// instrumentation only needs the quantized mantissas, and eagerly
+    /// packing every candidate would double its footprint for nothing.
+    pub fn get_or_quantize(&mut self, layer: &Conv2d, cfg: BfpConfig) -> CachedWeights {
+        self.lookup(layer, cfg, false)
+    }
+
+    /// [`WeightCache::get_or_quantize`], additionally materialising (and
+    /// caching, lazily on first request) the pre-packed f32 mantissa
+    /// panel when the GEMM fast lane applies — the serving path.
+    pub fn get_or_quantize_packed(&mut self, layer: &Conv2d, cfg: BfpConfig) -> CachedWeights {
+        self.lookup(layer, cfg, true)
+    }
+
+    fn lookup(&mut self, layer: &Conv2d, cfg: BfpConfig, want_packed: bool) -> CachedWeights {
+        let key = WeightKey::of(layer, &cfg);
+        // The packed panel is a property of the weights alone; whether a
+        // given GEMM *uses* it depends on both widths, checked here only
+        // to avoid packing for configs that will never hit the f32 lane.
+        let packable =
+            || f32_lane_chunk(cfg.w_format().frac_bits(), cfg.i_format().frac_bits()).is_some();
+        if let Some(list) = self.entries.get_mut(layer.name.as_str()) {
+            if let Some((_, cached)) = list.iter_mut().find(|(k, _)| *k == key) {
+                self.hits += 1;
+                if want_packed && cached.packed.is_none() && packable() {
+                    cached.packed = Some(Arc::new(pack_mantissas(&cached.wq)));
+                }
+                return cached.clone();
+            }
+        }
+        self.misses += 1;
+        let wq = Arc::new(layer.quantize_weights(&cfg));
+        let packed = if want_packed && packable() { Some(Arc::new(pack_mantissas(&wq))) } else { None };
+        let cached = CachedWeights { wq, packed };
+        self.entries.entry(layer.name.clone()).or_default().push((key, cached.clone()));
+        cached
+    }
+
+    /// Cache lookups that were served without quantizing.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Cache fills (one weight quantization each).
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Total `(layer, config)` entries held.
+    pub fn len(&self) -> usize {
+        self.entries.values().map(|v| v.len()).sum()
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Reusable scratch arena for the prepared forward pass. Buffers only
+/// grow (to the model's high-water mark); every byte handed to a kernel
+/// is fully overwritten before use, so reuse across differently-shaped
+/// layers can never leak state (tested in `tests/prepared_parallel.rs`).
+pub struct Workspace {
+    col: Vec<f32>,
+    iq: BfpMatrix,
+    scratch: GemmScratch,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workspace {
+    /// An empty arena; it grows on first use.
+    pub fn new() -> Self {
+        Self { col: Vec::new(), iq: BfpMatrix::empty(), scratch: GemmScratch::default() }
+    }
+
+    /// Current im2col high-water mark in elements (reporting/tests).
+    pub fn col_capacity(&self) -> usize {
+        self.col.len()
+    }
+}
+
+/// The executor behind [`PreparedModel::forward`]: identical graph
+/// semantics to [`crate::nn::BfpExec`], with conv layers reading the
+/// weight cache and staging through the workspace arena.
+struct PreparedExec<'a> {
+    convs: &'a HashMap<String, CachedWeights>,
+    schedule: &'a LayerSchedule,
+    ws: &'a mut Workspace,
+}
+
+impl Executor for PreparedExec<'_> {
+    type T = Tensor;
+
+    fn conv(&mut self, layer: &Conv2d, x: Tensor) -> Tensor {
+        let cached = self
+            .convs
+            .get(layer.name.as_str())
+            .unwrap_or_else(|| panic!("conv layer `{}` missing from the prepared cache", layer.name));
+        let cfg = self.schedule.for_layer(&layer.name);
+        let geo = layer.geometry(&x.shape);
+        let (m, k, n) = (layer.out_channels(), geo.k(), geo.n());
+        let Workspace { col, iq, scratch } = &mut *self.ws;
+        if col.len() < k * n {
+            col.resize(k * n, 0.0);
+        }
+        let col = &mut col[..k * n];
+        im2col(&x.data, &geo, col);
+        iq.requantize(col, k, n, cfg.i_format(), cfg.scheme.i_axis());
+        // the output buffer becomes the layer's tensor, so it is the one
+        // allocation this path keeps
+        let mut out = vec![0f32; m * n];
+        bfp_gemm_into_prepared(&cached.wq, cached.packed.as_deref().map(|p| &p[..]), iq, &mut out, scratch);
+        layer.add_bias(&mut out, n);
+        Tensor::from_vec(out, &[m, geo.out_h(), geo.out_w()])
+    }
+
+    fn dense(&mut self, layer: &Dense, x: Tensor) -> Tensor {
+        // FC layers stay FP32, matching `BfpExec { quantize_dense: false }`
+        layer.forward_fp32(&x)
+    }
+
+    fn batch_norm(&mut self, layer: &BatchNorm, x: Tensor) -> Tensor {
+        layer.forward(&x)
+    }
+
+    fn relu(&mut self, x: Tensor) -> Tensor {
+        ops::relu(&x)
+    }
+
+    fn max_pool(&mut self, _name: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        max_pool2d(&x, k, s, p)
+    }
+
+    fn avg_pool(&mut self, _name: &str, k: usize, s: usize, p: usize, x: Tensor) -> Tensor {
+        avg_pool2d(&x, k, s, p)
+    }
+
+    fn global_avg_pool(&mut self, x: Tensor) -> Tensor {
+        global_avg_pool(&x)
+    }
+
+    fn flatten(&mut self, x: Tensor) -> Tensor {
+        ops::flatten(&x)
+    }
+
+    fn add(&mut self, a: Tensor, b: Tensor) -> Tensor {
+        ops::add(&a, &b)
+    }
+
+    fn concat(&mut self, parts: Vec<Tensor>) -> Tensor {
+        ops::concat_channels(&parts)
+    }
+
+    fn softmax(&mut self, x: Tensor) -> Tensor {
+        ops::softmax(&x)
+    }
+
+    fn fork(&mut self, x: &Tensor) -> Tensor {
+        x.clone()
+    }
+}
+
+/// A model prepared for steady-state serving: weights quantized up front
+/// per the active schedule, scratch arenas pooled for reuse.
+pub struct PreparedModel {
+    model: Model,
+    schedule: LayerSchedule,
+    cache: WeightCache,
+    /// Active view for the current schedule: layer name → cached weights.
+    active: HashMap<String, CachedWeights>,
+    /// Idle scratch arenas, checked out per forward and returned after —
+    /// the pool grows to the peak concurrency and then stops allocating.
+    workspaces: Mutex<Vec<Workspace>>,
+}
+
+impl PreparedModel {
+    /// Quantize every conv layer of `model` under `schedule`.
+    pub fn new(model: Model, schedule: LayerSchedule) -> Self {
+        let mut prepared = Self {
+            model,
+            schedule: LayerSchedule::uniform(BfpConfig::paper_default()),
+            cache: WeightCache::default(),
+            active: HashMap::new(),
+            workspaces: Mutex::new(Vec::new()),
+        };
+        prepared.set_schedule(schedule);
+        prepared
+    }
+
+    /// Swap the precision schedule (plan hot-swap, autotune refinement).
+    /// Only layers whose resolved config changed are re-quantized; every
+    /// other layer is a cache hit.
+    pub fn set_schedule(&mut self, schedule: LayerSchedule) {
+        let mut active = HashMap::new();
+        let cache = &mut self.cache;
+        let graph = &self.model.graph;
+        graph.visit_convs(&mut |c: &Conv2d| {
+            let cfg = schedule.for_layer(&c.name);
+            active.insert(c.name.clone(), cache.get_or_quantize_packed(c, cfg));
+        });
+        self.active = active;
+        self.schedule = schedule;
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// The active precision schedule.
+    pub fn schedule(&self) -> &LayerSchedule {
+        &self.schedule
+    }
+
+    /// `(entries, hits, misses)` of the weight cache.
+    pub fn cache_stats(&self) -> (usize, usize, usize) {
+        (self.cache.len(), self.cache.hits(), self.cache.misses())
+    }
+
+    fn take_workspace(&self) -> Workspace {
+        self.workspaces.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put_workspace(&self, ws: Workspace) {
+        self.workspaces.lock().unwrap().push(ws);
+    }
+
+    /// Grow the scratch arena to its high-water mark with one zero image,
+    /// so the first real request pays no allocation.
+    pub fn warm(&self) {
+        let _ = self.forward(&Tensor::zeros(&self.model.input_shape));
+    }
+
+    /// Forward one image (bit-identical to the unprepared BFP path).
+    pub fn forward(&self, input: &Tensor) -> Tensor {
+        let mut ws = self.take_workspace();
+        let out = self.forward_with(input, &mut ws);
+        self.put_workspace(ws);
+        out
+    }
+
+    /// [`PreparedModel::forward`] with a caller-owned workspace
+    /// (benchmarks and the stale-data tests).
+    pub fn forward_with(&self, input: &Tensor, ws: &mut Workspace) -> Tensor {
+        assert_eq!(input.shape, self.model.input_shape, "input shape mismatch for {}", self.model.name);
+        let mut exec = PreparedExec { convs: &self.active, schedule: &self.schedule, ws };
+        self.model.graph.execute(input.clone(), &mut exec)
+    }
+
+    /// Forward a batch, parallelized over images on the thread pool (each
+    /// worker checks out its own workspace; a single-image batch instead
+    /// parallelizes its GEMM row panels). Output order matches input
+    /// order and every image's result is bit-identical to [`Self::forward`].
+    pub fn forward_batch(&self, images: Vec<Tensor>) -> Vec<Tensor> {
+        for img in &images {
+            assert_eq!(img.shape, self.model.input_shape, "input shape mismatch for {}", self.model.name);
+        }
+        struct ArenaGuard<'a> {
+            ws: Option<Workspace>,
+            owner: &'a PreparedModel,
+        }
+        impl Drop for ArenaGuard<'_> {
+            fn drop(&mut self) {
+                if let Some(ws) = self.ws.take() {
+                    self.owner.put_workspace(ws);
+                }
+            }
+        }
+        pool::parallel_map_with(
+            images,
+            || ArenaGuard { ws: Some(self.take_workspace()), owner: self },
+            |guard, img| {
+                let ws = guard.ws.as_mut().expect("workspace checked out");
+                let mut exec = PreparedExec { convs: &self.active, schedule: &self.schedule, ws };
+                self.model.graph.execute(img, &mut exec)
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{BfpExec, Block};
+
+    fn tiny_model(seed: u64) -> Model {
+        let mut rng = crate::data::Rng::new(seed);
+        Model {
+            name: "tiny".into(),
+            graph: Block::seq(vec![
+                Block::Conv(crate::models::init::conv2d("c1", 6, 2, 3, 3, 1, 1, &mut rng)),
+                Block::ReLU,
+                Block::MaxPool { name: "p1".into(), k: 2, s: 2, p: 0 },
+                Block::Conv(crate::models::init::conv2d("c2", 4, 6, 3, 3, 1, 1, &mut rng)),
+                Block::Flatten,
+            ]),
+            input_shape: vec![2, 10, 10],
+            num_classes: 0,
+        }
+    }
+
+    fn image(seed: u64) -> Tensor {
+        let mut rng = crate::data::Rng::new(seed);
+        Tensor::from_vec(rng.normal_vec(2 * 10 * 10, 1.5), &[2, 10, 10])
+    }
+
+    #[test]
+    fn prepared_matches_unprepared_bit_for_bit() {
+        let model = tiny_model(3);
+        let cfg = BfpConfig::paper_default();
+        let img = image(7);
+        let want = model.graph.execute(img.clone(), &mut BfpExec::new(cfg));
+        let prepared = PreparedModel::new(model, LayerSchedule::uniform(cfg));
+        let got = prepared.forward(&img);
+        assert_eq!(want.shape, got.shape);
+        for (a, b) in want.data.iter().zip(&got.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn schedule_swap_requantizes_only_changes() {
+        let model = tiny_model(5);
+        let uniform = LayerSchedule::uniform(BfpConfig::paper_default());
+        let mut prepared = PreparedModel::new(model, uniform.clone());
+        assert_eq!(prepared.cache_stats(), (2, 0, 2), "two convs quantized once each");
+        // override one layer: one new entry, one hit
+        let mixed = uniform.clone().with_layer("c2", BfpConfig::new(6, 6));
+        prepared.set_schedule(mixed);
+        assert_eq!(prepared.cache_stats(), (3, 1, 3));
+        // swap back: all hits
+        prepared.set_schedule(uniform);
+        assert_eq!(prepared.cache_stats(), (3, 3, 3));
+    }
+
+    #[test]
+    fn batch_matches_sequential_forwards() {
+        let model = tiny_model(11);
+        let prepared = PreparedModel::new(model, LayerSchedule::uniform(BfpConfig::new(7, 9)));
+        prepared.warm();
+        let images: Vec<Tensor> = (0..5).map(|s| image(100 + s)).collect();
+        let one_by_one: Vec<Tensor> = images.iter().map(|i| prepared.forward(i)).collect();
+        let batched = prepared.forward_batch(images);
+        for (a, b) in one_by_one.iter().zip(&batched) {
+            assert_eq!(a.shape, b.shape);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    /// Two models with a same-named layer but different weights must get
+    /// separate cache entries (the fingerprint in the key), never share.
+    #[test]
+    fn cache_never_serves_another_models_weights() {
+        let mut cache = WeightCache::default();
+        let mut rng_a = crate::data::Rng::new(1);
+        let mut rng_b = crate::data::Rng::new(2);
+        let a = crate::models::init::conv2d("conv1", 4, 2, 3, 3, 1, 1, &mut rng_a);
+        let b = crate::models::init::conv2d("conv1", 4, 2, 3, 3, 1, 1, &mut rng_b);
+        let cfg = BfpConfig::paper_default();
+        let wa = cache.get_or_quantize(&a, cfg);
+        let wb = cache.get_or_quantize(&b, cfg);
+        assert_eq!(cache.misses(), 2, "distinct weights behind one name must both quantize");
+        assert_eq!(cache.hits(), 0);
+        assert_ne!(wa.wq.mantissas, wb.wq.mantissas);
+        // repeat lookups hit their own entries
+        assert_eq!(cache.get_or_quantize(&a, cfg).wq.mantissas, wa.wq.mantissas);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_input_shape() {
+        let prepared = PreparedModel::new(tiny_model(1), LayerSchedule::uniform(BfpConfig::paper_default()));
+        prepared.forward(&Tensor::zeros(&[2, 8, 8]));
+    }
+}

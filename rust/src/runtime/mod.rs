@@ -1,10 +1,12 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and execute them from the Rust hot path.
+//! Execution runtimes: the scoped thread [`pool`] that parallelizes the
+//! pure-Rust hot path, and the PJRT loader for AOT-compiled HLO-text
+//! artifacts produced by `python/compile/aot.py`.
 //!
 //! Interchange is HLO **text**, not serialized `HloModuleProto` — jax ≥0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
 
 pub mod pjrt;
+pub mod pool;
 
 pub use pjrt::{CompiledArtifact, PjrtRuntime};

@@ -1,0 +1,236 @@
+//! Zero-dependency scoped thread pool for the inference hot path.
+//!
+//! Two primitives, both built on `std::thread::scope` (no persistent
+//! worker threads, no channels, nothing to shut down):
+//!
+//! * [`parallel_row_panels`] — split a row-major output buffer into
+//!   contiguous row panels and compute each panel on its own worker. The
+//!   GEMM kernels parallelize over output rows, and every row is computed
+//!   with exactly the instruction sequence of the serial path (including
+//!   the chunked-K accumulation order), so results are **bit-identical**
+//!   for every thread count.
+//! * [`parallel_map_with`] — order-preserving parallel map with
+//!   per-thread state (an executor, a scratch [`crate::nn::prepared::Workspace`]),
+//!   used to spread `forward_batch` over images.
+//!
+//! Thread count resolves as: [`with_threads`] override (tests) →
+//! `BFP_NUM_THREADS` env var → `std::thread::available_parallelism()`.
+//! Workers mark themselves with a thread-local flag and any nested
+//! parallel region degrades to serial, so image-level and panel-level
+//! parallelism compose without oversubscription: a batch of one image
+//! parallelizes its GEMM panels, a full batch parallelizes over images
+//! and runs each GEMM serially.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Safety valve against absurd `BFP_NUM_THREADS` values.
+const MAX_THREADS: usize = 64;
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+    /// 0 = no override; set by [`with_threads`].
+    static OVERRIDE: Cell<usize> = const { Cell::new(0) };
+}
+
+fn env_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        match std::env::var("BFP_NUM_THREADS").ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+            Some(n) if n >= 1 => n.min(MAX_THREADS),
+            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_THREADS),
+        }
+    })
+}
+
+/// Worker threads a parallel primitive may use from the current thread
+/// (1 inside a pool worker — nested regions run serial).
+pub fn num_threads() -> usize {
+    if IN_POOL.with(|c| c.get()) {
+        return 1;
+    }
+    let o = OVERRIDE.with(|c| c.get());
+    if o > 0 {
+        o.min(MAX_THREADS)
+    } else {
+        env_threads()
+    }
+}
+
+/// Run `f` with an explicit thread count, overriding `BFP_NUM_THREADS`
+/// for the current thread (the bit-exactness tests sweep {1, 2, 4}).
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    assert!(n >= 1, "thread count must be >= 1");
+    struct Reset(usize);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _reset = Reset(OVERRIDE.with(|c| c.replace(n)));
+    f()
+}
+
+/// Below this much total work (caller-defined units; the GEMMs pass
+/// MACs), a parallel region runs serial: spawning and joining scoped OS
+/// threads costs tens of microseconds, which would swamp a small kernel
+/// (a LeNet conv is ~10^5 MACs; a VGG conv3_1 is ~7.5·10^7).
+pub const MIN_PARALLEL_WORK: usize = 1 << 17;
+
+/// Split `out` (`rows × row_width`, row-major) into contiguous row panels
+/// and run `f(first_row, panel)` on scoped workers. Rows are never split
+/// across panels, so workers write disjoint slices and per-row results
+/// are bit-identical to the serial path regardless of thread count.
+///
+/// `work_per_row` is the caller's estimate of the cost of one row (the
+/// GEMMs pass `K·N` MACs); when `rows · work_per_row` falls under
+/// [`MIN_PARALLEL_WORK`] the call runs serial on the calling thread —
+/// tiny layers must not pay thread spawn/join latency.
+pub fn parallel_row_panels<F>(out: &mut [f32], rows: usize, row_width: usize, work_per_row: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), rows * row_width, "panel buffer shape mismatch");
+    if rows == 0 || row_width == 0 {
+        return;
+    }
+    let threads = if rows.saturating_mul(work_per_row) < MIN_PARALLEL_WORK {
+        1
+    } else {
+        num_threads().min(rows)
+    };
+    if threads <= 1 {
+        f(0, out);
+        return;
+    }
+    let panel_rows = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (p, panel) in out.chunks_mut(panel_rows * row_width).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                IN_POOL.with(|c| c.set(true));
+                f(p * panel_rows, panel);
+            });
+        }
+    });
+}
+
+/// Order-preserving parallel map with per-thread state: each worker
+/// builds one `S` via `init` and folds its contiguous chunk of `items`
+/// through `f`. Serial (single state, in order) when one thread is
+/// available or when already inside a pool region.
+pub fn parallel_map_with<T, R, S, I, F>(items: Vec<T>, init: I, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = num_threads().min(n);
+    if threads <= 1 {
+        let mut state = init();
+        return items.into_iter().map(|t| f(&mut state, t)).collect();
+    }
+    let per = n.div_ceil(threads);
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(threads);
+    let mut it = items.into_iter();
+    loop {
+        let c: Vec<T> = it.by_ref().take(per).collect();
+        if c.is_empty() {
+            break;
+        }
+        chunks.push(c);
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|c| {
+                let (init, f) = (&init, &f);
+                s.spawn(move || {
+                    IN_POOL.with(|cell| cell.set(true));
+                    let mut state = init();
+                    c.into_iter().map(|t| f(&mut state, t)).collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("pool worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let outer = num_threads();
+        with_threads(3, || assert_eq!(num_threads(), 3));
+        assert_eq!(num_threads(), outer);
+    }
+
+    #[test]
+    fn row_panels_cover_every_row_once() {
+        for threads in [1, 2, 4, 7] {
+            with_threads(threads, || {
+                let (rows, width) = (13, 5);
+                let mut out = vec![0f32; rows * width];
+                // work_per_row above the cutoff so the parallel path runs
+                parallel_row_panels(&mut out, rows, width, MIN_PARALLEL_WORK, |r0, panel| {
+                    for (pr, row) in panel.chunks_mut(width).enumerate() {
+                        row.fill((r0 + pr) as f32);
+                    }
+                });
+                for r in 0..rows {
+                    assert!(out[r * width..(r + 1) * width].iter().all(|&v| v == r as f32), "row {r}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn nested_region_degrades_to_serial() {
+        with_threads(4, || {
+            let mut out = vec![0f32; 8];
+            parallel_row_panels(&mut out, 4, 2, MIN_PARALLEL_WORK, |_, _| {
+                // inside a worker the pool must report a single thread
+                assert_eq!(num_threads(), 1);
+            });
+        });
+    }
+
+    #[test]
+    fn tiny_work_stays_on_the_calling_thread() {
+        with_threads(4, || {
+            let caller = std::thread::current().id();
+            let mut out = vec![0f32; 8];
+            // 4 rows × 10 work units ≪ MIN_PARALLEL_WORK → serial
+            parallel_row_panels(&mut out, 4, 2, 10, |_, _| {
+                assert_eq!(std::thread::current().id(), caller, "small kernel must not spawn");
+            });
+        });
+    }
+
+    #[test]
+    fn map_preserves_order_with_per_thread_state() {
+        for threads in [1, 2, 4] {
+            let got = with_threads(threads, || {
+                parallel_map_with((0..23u32).collect(), || 0u32, |count, x| {
+                    *count += 1;
+                    x * 2
+                })
+            });
+            assert_eq!(got, (0..23u32).map(|x| x * 2).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        parallel_row_panels(&mut [], 0, 4, MIN_PARALLEL_WORK, |_, _| unreachable!());
+        let out: Vec<u32> = parallel_map_with(Vec::<u32>::new(), || (), |_, x| x);
+        assert!(out.is_empty());
+    }
+}

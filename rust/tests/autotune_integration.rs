@@ -7,7 +7,7 @@ use bfp_cnn::autotune::{
     autotune_with_stats, calibrate, measure_schedule, plan_with_stats, PlannerOptions,
     PrecisionPlan,
 };
-use bfp_cnn::coordinator::engine::{forward_batch, ExecMode};
+use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
 use bfp_cnn::coordinator::server::{InferenceServer, RustBackend, ServerConfig};
 use bfp_cnn::models::ModelId;
 use bfp_cnn::quant::{BfpConfig, LayerSchedule};
@@ -60,8 +60,8 @@ fn engine_executes_plan_per_layer() {
     assert!(plan.measured_snr_db >= 25.0, "plan misses budget: {} dB", plan.measured_snr_db);
 
     let eval = calib_images(6, 321);
-    let fp = forward_batch(&model, &eval, ExecMode::Fp32);
-    let mixed = forward_batch(&model, &eval, ExecMode::Mixed(plan.to_schedule()));
+    let fp = forward_batch_ref(&model, &eval, ExecMode::Fp32);
+    let mixed = forward_batch_ref(&model, &eval, ExecMode::Mixed(plan.to_schedule()));
     assert_eq!(mixed.len(), 6);
     for (a, b) in fp.iter().zip(&mixed) {
         assert_eq!(b.shape, vec![10]);
@@ -114,7 +114,7 @@ fn plan_file_round_trips_into_execution() {
     assert_eq!(key(&loaded), key(&plan));
     assert_eq!(loaded.to_schedule(), plan.to_schedule());
 
-    let out = forward_batch(&model, &calib, ExecMode::Mixed(loaded.to_schedule()));
+    let out = forward_batch_ref(&model, &calib, ExecMode::Mixed(loaded.to_schedule()));
     assert_eq!(out.len(), 3);
     std::fs::remove_file(&path).ok();
 }

@@ -2,7 +2,7 @@
 //! harness → PJRT runtime (artifact-dependent tests skip gracefully when
 //! `make artifacts` hasn't run, so plain `cargo test` stays green).
 
-use bfp_cnn::coordinator::engine::{forward_batch, ExecMode};
+use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
 use bfp_cnn::harness::table3::{drop_for, eval_set_for};
 use bfp_cnn::models::{weights_io::WeightBundle, ModelId};
 use bfp_cnn::quant::BfpConfig;
@@ -27,7 +27,7 @@ fn trained_lenet_transfers_across_languages() {
     }
     let model = ModelId::Lenet.build(32, 1, artifacts());
     let ds = bfp_cnn::data::DigitDataset::generate(100, 31337);
-    let logits = forward_batch(&model, &ds.images, ExecMode::Fp32);
+    let logits = forward_batch_ref(&model, &ds.images, ExecMode::Fp32);
     let correct = logits
         .iter()
         .zip(&ds.labels)
@@ -154,7 +154,7 @@ fn pjrt_lenet_artifact_matches_rust_bfp_path() {
     let pjrt_logits = &outs[0];
 
     let model = ModelId::Lenet.build(32, 1, artifacts());
-    let rust_logits = forward_batch(&model, &ds.images, ExecMode::Bfp(BfpConfig::paper_default()));
+    let rust_logits = forward_batch_ref(&model, &ds.images, ExecMode::Bfp(BfpConfig::paper_default()));
 
     for (b, rust) in rust_logits.iter().enumerate() {
         for (c, &rv) in rust.data.iter().enumerate() {
@@ -191,7 +191,7 @@ fn coordinator_matches_direct_engine() {
     use bfp_cnn::coordinator::server::{InferenceServer, RustBackend, ServerConfig};
     let model = ModelId::Lenet.build(32, 1, artifacts());
     let ds = bfp_cnn::data::DigitDataset::generate(16, 909);
-    let direct = forward_batch(&model, &ds.images, ExecMode::Bfp(BfpConfig::paper_default()));
+    let direct = forward_batch_ref(&model, &ds.images, ExecMode::Bfp(BfpConfig::paper_default()));
 
     let model2 = ModelId::Lenet.build(32, 1, artifacts());
     let mut server = InferenceServer::start(

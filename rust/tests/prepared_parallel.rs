@@ -1,0 +1,191 @@
+//! Determinism and cache-coherence properties of the prepared-model
+//! engine and the panel-parallel kernels:
+//!
+//! * panel-parallel GEMM output is bit-identical to the serial reference
+//!   across all four partition schemes and every accumulator lane, at
+//!   thread counts {1, 2, 4};
+//! * a `PreparedModel` forward equals the unprepared `BfpExec` forward
+//!   bit-for-bit, including after schedule swaps invalidate cached
+//!   weights;
+//! * `Workspace` reuse across differently-shaped layers leaves no stale
+//!   data.
+//!
+//! proptest is unavailable in the offline image, so properties run over
+//! the library's deterministic `Rng` across randomized shapes/widths.
+
+use bfp_cnn::bfp::gemm::f32_gemm;
+use bfp_cnn::bfp::partition::PartitionScheme;
+use bfp_cnn::bfp::{bfp_gemm, BfpFormat, BfpMatrix};
+use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
+use bfp_cnn::data::Rng;
+use bfp_cnn::models::{Model, ModelId};
+use bfp_cnn::nn::prepared::{PreparedModel, Workspace};
+use bfp_cnn::nn::{Block, Conv2d};
+use bfp_cnn::quant::{BfpConfig, LayerSchedule};
+use bfp_cnn::runtime::pool;
+use bfp_cnn::tensor::Tensor;
+use std::path::Path;
+
+const SCHEMES: [PartitionScheme; 4] =
+    [PartitionScheme::Eq2, PartitionScheme::Eq3, PartitionScheme::Eq4, PartitionScheme::Eq5];
+
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Every lane (f32 mantissa single- and multi-chunk, i32, i64), every
+/// scheme, thread counts {1, 2, 4}: parallel output must equal serial
+/// bit-for-bit.
+#[test]
+fn parallel_gemm_bit_identical_to_serial() {
+    let mut rng = Rng::new(0x9A7A11E1);
+    // widths chosen to pin each lane: 8 → f32 single-chunk, 10 → f32
+    // multi-chunk once K > 64, 12 → i32, 16 → i64. Shapes sit above
+    // pool::MIN_PARALLEL_WORK MACs so the panel-parallel path actually
+    // runs (m·k·n ≥ 24·65·96 > 2^17).
+    for (case, &bits) in [8u32, 10, 12, 16].iter().cycle().take(12).enumerate() {
+        let m = 24 + rng.below(16);
+        let k = 65 + rng.below(31);
+        let n = 96 + rng.below(32);
+        assert!(m * k * n >= pool::MIN_PARALLEL_WORK);
+        let w = rng.normal_vec(m * k, 1.0);
+        let i = rng.normal_vec(k * n, 2.0);
+        for scheme in SCHEMES {
+            let wq = BfpMatrix::quantize(&w, m, k, BfpFormat::new(bits), scheme.w_axis());
+            let iq = BfpMatrix::quantize(&i, k, n, BfpFormat::new(bits), scheme.i_axis());
+            let serial = pool::with_threads(1, || bfp_gemm(&wq, &iq).data);
+            for t in [2usize, 4] {
+                let par = pool::with_threads(t, || bfp_gemm(&wq, &iq).data);
+                assert_bits_eq(
+                    &serial,
+                    &par,
+                    &format!("case {case} ({m}x{k}x{n}, L={bits}, {scheme:?}, t={t})"),
+                );
+            }
+        }
+        // and the f32 reference GEMM
+        let mut serial = vec![0f32; m * n];
+        pool::with_threads(1, || f32_gemm(&w, &i, m, k, n, &mut serial));
+        for t in [2usize, 4] {
+            let mut par = vec![0f32; m * n];
+            pool::with_threads(t, || f32_gemm(&w, &i, m, k, n, &mut par));
+            assert_bits_eq(&serial, &par, &format!("f32_gemm case {case} t={t}"));
+        }
+    }
+}
+
+/// PreparedModel output == unprepared BfpExec output, bit for bit, for
+/// uniform and mixed schedules, before and after schedule swaps, at
+/// every thread count.
+#[test]
+fn prepared_model_matches_bfp_exec_bit_for_bit() {
+    let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+    let images = bfp_cnn::data::DigitDataset::generate(3, 17).images;
+    let uniform = BfpConfig::paper_default();
+    let mixed = LayerSchedule::uniform(BfpConfig::new(6, 6)).with_layer("conv1", BfpConfig::new(9, 9));
+
+    let want_uniform = forward_batch_ref(&model, &images, ExecMode::Bfp(uniform));
+    let want_mixed = forward_batch_ref(&model, &images, ExecMode::Mixed(mixed.clone()));
+
+    let mut prepared = PreparedModel::new(model, LayerSchedule::uniform(uniform));
+    for t in [1usize, 2, 4] {
+        let got = pool::with_threads(t, || prepared.forward_batch(images.clone()));
+        for (a, b) in want_uniform.iter().zip(&got) {
+            assert_bits_eq(&a.data, &b.data, &format!("uniform t={t}"));
+        }
+    }
+
+    // schedule swap: cached weights for changed layers must be replaced
+    prepared.set_schedule(mixed);
+    let got = prepared.forward_batch(images.clone());
+    for (a, b) in want_mixed.iter().zip(&got) {
+        assert_bits_eq(&a.data, &b.data, "after swap to mixed");
+    }
+
+    // swap back: served from cache, still bit-identical
+    prepared.set_schedule(LayerSchedule::uniform(uniform));
+    let got = prepared.forward_batch(images.clone());
+    for (a, b) in want_uniform.iter().zip(&got) {
+        assert_bits_eq(&a.data, &b.data, "after swap back to uniform");
+    }
+    let (_, hits, misses) = prepared.cache_stats();
+    assert!(hits >= 2, "swap back must hit the cache (hits={hits})");
+    // lenet has 2 convs: uniform (2 misses) + mixed (2 misses), then all hits
+    assert_eq!(misses, 4, "unexpected quantization count");
+}
+
+/// One Workspace reused across two models with very different layer
+/// shapes (and interleaved directions) must reproduce fresh-arena
+/// results exactly — no stale im2col / mantissa state may leak.
+#[test]
+fn workspace_reuse_across_shapes_leaves_no_stale_data() {
+    let mut rng = Rng::new(0x57A1E);
+    let big_conv = Conv2d::new(
+        "big",
+        Tensor::from_vec(rng.laplacian_vec(8 * 4 * 9, 0.2), &[8, 4, 3, 3]),
+        rng.normal_vec(8, 0.1),
+        1,
+        1,
+    );
+    let small_conv = Conv2d::new(
+        "small",
+        Tensor::from_vec(rng.laplacian_vec(3 * 2 * 9, 0.3), &[3, 2, 3, 3]),
+        vec![],
+        2,
+        0,
+    );
+    let big = Model {
+        name: "big".into(),
+        graph: Block::seq(vec![Block::Conv(big_conv), Block::ReLU]),
+        input_shape: vec![4, 16, 16],
+        num_classes: 0,
+    };
+    let small = Model {
+        name: "small".into(),
+        graph: Block::seq(vec![Block::Conv(small_conv)]),
+        input_shape: vec![2, 7, 7],
+        num_classes: 0,
+    };
+    let img_big = Tensor::from_vec(rng.normal_vec(4 * 16 * 16, 1.0), &[4, 16, 16]);
+    let img_small = Tensor::from_vec(rng.normal_vec(2 * 7 * 7, 1.0), &[2, 7, 7]);
+
+    let pm_big = PreparedModel::new(big, LayerSchedule::uniform(BfpConfig::paper_default()));
+    let pm_small = PreparedModel::new(small, LayerSchedule::uniform(BfpConfig::new(6, 10)));
+
+    let fresh_big = pm_big.forward_with(&img_big, &mut Workspace::new());
+    let fresh_small = pm_small.forward_with(&img_small, &mut Workspace::new());
+
+    let mut shared = Workspace::new();
+    // big grows the arena; small must not read the leftovers, and a
+    // second big pass must be unaffected by the small pass in between
+    let a = pm_big.forward_with(&img_big, &mut shared);
+    let b = pm_small.forward_with(&img_small, &mut shared);
+    let c = pm_big.forward_with(&img_big, &mut shared);
+    assert_bits_eq(&fresh_big.data, &a.data, "big through fresh vs shared");
+    assert_bits_eq(&fresh_small.data, &b.data, "small after big");
+    assert_bits_eq(&fresh_big.data, &c.data, "big after small");
+    assert!(shared.col_capacity() >= 4 * 9 * 16 * 16, "arena did not grow to the big layer");
+}
+
+/// The engine's image-parallel forward_batch and the prepared batch path
+/// agree with each other and across thread counts.
+#[test]
+fn batch_paths_agree_across_thread_counts() {
+    let model = ModelId::Lenet.build(32, 1, Path::new("/nonexistent"));
+    let images = bfp_cnn::data::DigitDataset::generate(6, 5).images;
+    let cfg = BfpConfig::paper_default();
+    let reference =
+        pool::with_threads(1, || forward_batch_ref(&model, &images, ExecMode::Bfp(cfg)));
+    let prepared = PreparedModel::new(model.clone(), LayerSchedule::uniform(cfg));
+    for t in [1usize, 2, 4] {
+        let engine = pool::with_threads(t, || forward_batch_ref(&model, &images, ExecMode::Bfp(cfg)));
+        let warm = pool::with_threads(t, || prepared.forward_batch(images.clone()));
+        for ((a, b), c) in reference.iter().zip(&engine).zip(&warm) {
+            assert_bits_eq(&a.data, &b.data, &format!("engine t={t}"));
+            assert_bits_eq(&a.data, &c.data, &format!("prepared t={t}"));
+        }
+    }
+}
