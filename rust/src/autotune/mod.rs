@@ -33,9 +33,9 @@ pub mod planner;
 
 pub use calibrate::{predict_chain, CalibExec, ConvCalibration};
 pub use measure::{measure_schedule, measure_schedule_cached, PlanMeasurement};
-pub use pareto::ParetoFront;
+pub use pareto::{select_lane_points, ParetoFront};
 pub use plan::{LayerPlan, ParetoPoint, PrecisionPlan};
 pub use planner::{
-    autotune, autotune_with_stats, calibrate, plan_with_stats, uniform_predicted_snr_db,
-    PlannerOptions,
+    autotune, autotune_with_stats, calibrate, plan_lane_set, plan_with_stats,
+    uniform_predicted_snr_db, PlannerOptions,
 };

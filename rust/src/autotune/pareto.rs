@@ -51,6 +51,34 @@ impl ParetoFront {
     }
 }
 
+/// Select up to `k` spread operating points from a frontier for a lane
+/// set, returned **safest first** (descending predicted SNR). The safest
+/// and cheapest points are always included; the rest are evenly spaced
+/// along the (traffic-sorted) curve. Duplicate SNR levels collapse, so
+/// the result may be shorter than `k` on a short or flat frontier.
+pub fn select_lane_points(frontier: &[ParetoPoint], k: usize) -> Vec<ParetoPoint> {
+    if frontier.is_empty() || k == 0 {
+        return Vec::new();
+    }
+    let mut sorted = frontier.to_vec();
+    sorted.sort_by(|a, b| a.traffic_bits.total_cmp(&b.traffic_bits));
+    let n = sorted.len();
+    let picks: Vec<usize> = if k == 1 {
+        vec![n - 1] // one lane: take the safest (most expensive) point
+    } else {
+        (0..k).map(|j| (j as f64 * (n - 1) as f64 / (k - 1) as f64).round() as usize).collect()
+    };
+    let mut out: Vec<ParetoPoint> = Vec::new();
+    for idx in picks {
+        let p = sorted[idx.min(n - 1)];
+        if !out.iter().any(|q| q.predicted_snr_db == p.predicted_snr_db) {
+            out.push(p);
+        }
+    }
+    out.sort_by(|a, b| b.predicted_snr_db.total_cmp(&a.predicted_snr_db));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +113,32 @@ mod tests {
         assert!(f.insert(p(90.0, 33.0))); // dominates both
         assert_eq!(f.len(), 1);
         assert_eq!(f.into_sorted(), vec![p(90.0, 33.0)]);
+    }
+
+    #[test]
+    fn lane_points_spread_and_ordered_safest_first() {
+        let frontier: Vec<ParetoPoint> =
+            (0..10).map(|i| p(100.0 + 10.0 * i as f64, 20.0 + i as f64)).collect();
+        let lanes = select_lane_points(&frontier, 3);
+        assert_eq!(lanes.len(), 3);
+        // safest first, and endpoints always included
+        assert_eq!(lanes[0].predicted_snr_db, 29.0);
+        assert_eq!(lanes[2].predicted_snr_db, 20.0);
+        assert!(lanes[0].predicted_snr_db > lanes[1].predicted_snr_db);
+        assert!(lanes[1].predicted_snr_db > lanes[2].predicted_snr_db);
+    }
+
+    #[test]
+    fn lane_points_degenerate_inputs() {
+        assert!(select_lane_points(&[], 3).is_empty());
+        let one = vec![p(100.0, 30.0)];
+        assert_eq!(select_lane_points(&one, 3), one);
+        // one lane from a long frontier: the safest point
+        let frontier: Vec<ParetoPoint> =
+            (0..5).map(|i| p(100.0 + i as f64, 20.0 + i as f64)).collect();
+        assert_eq!(select_lane_points(&frontier, 1), vec![p(104.0, 24.0)]);
+        // k larger than the frontier: every distinct point, no panic
+        assert_eq!(select_lane_points(&one, 10).len(), 1);
     }
 
     #[test]

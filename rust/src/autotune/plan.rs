@@ -110,6 +110,18 @@ impl PrecisionPlan {
         self.layers.iter().map(|l| l.traffic_bits_at(l_w, l_i)).sum()
     }
 
+    /// Budgets (predicted-SNR floors, safest first) for a `k`-lane QoS
+    /// serving set drawn from this plan's frontier: each budget re-plans
+    /// to one lane's operating point
+    /// ([`crate::autotune::planner::plan_lane_set`] does this from raw
+    /// calibration stats when no plan file exists yet).
+    pub fn lane_budgets(&self, k: usize) -> Vec<f64> {
+        super::pareto::select_lane_points(&self.frontier, k)
+            .iter()
+            .map(|p| p.predicted_snr_db)
+            .collect()
+    }
+
     /// Fraction of the uniform 8/8 traffic this plan saves (0.12 = 12%).
     pub fn savings_vs_uniform8(&self) -> f64 {
         let base = self.uniform_traffic_bits(8, 8);

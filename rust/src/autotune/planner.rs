@@ -192,6 +192,27 @@ pub fn uniform_predicted_snr_db(convs: &[ConvCalibration], width: u32) -> f64 {
     nsr_to_db(nsr)
 }
 
+/// Plan the precision lane set of a QoS serving fabric: walk the greedy
+/// trajectory to the bottom of the width grid (no budget) to chart the
+/// full cost/quality frontier, select `k` spread operating points
+/// ([`crate::autotune::pareto::select_lane_points`]), and re-plan at each
+/// point's predicted SNR. Returns plans **safest first** (Gold → Economy
+/// order). Because the greedy walk is budget-monotone (tested below), the
+/// lane plans nest: a safer lane never carries fewer bits on any layer,
+/// so a telemetry hot-swap to the next-safer plan is always a widening.
+pub fn plan_lane_set(
+    model_name: &str,
+    convs: &[ConvCalibration],
+    k: usize,
+    opts: &PlannerOptions,
+) -> Vec<PrecisionPlan> {
+    let full = plan_with_stats(model_name, convs, f64::NEG_INFINITY, opts);
+    super::pareto::select_lane_points(&full.frontier, k)
+        .iter()
+        .map(|p| plan_with_stats(model_name, convs, p.predicted_snr_db, opts))
+        .collect()
+}
+
 /// The full predict → measure → refine loop: the autotuner entry point.
 ///
 /// Plans analytically against `budget_snr_db` (minimum acceptable conv-
@@ -330,6 +351,39 @@ mod tests {
         let p = plan_with_stats("lenet", &convs, 20.0, &PlannerOptions::default());
         let start_bits = 2 * 10 * convs.len() as u32;
         assert!(p.total_width_bits() < start_bits, "planner stripped nothing");
+    }
+
+    /// Lane-set planning: safest-first ordering, nested width
+    /// assignments (a safer lane never has fewer bits on any layer), and
+    /// strictly decreasing traffic toward the cheap lanes.
+    #[test]
+    fn lane_set_plans_nest_safest_first() {
+        let convs = stats();
+        let lanes = plan_lane_set("lenet", &convs, 3, &PlannerOptions::default());
+        assert!(
+            (2..=3).contains(&lanes.len()),
+            "expected up to 3 distinct lanes, got {}",
+            lanes.len()
+        );
+        for pair in lanes.windows(2) {
+            let (safe, cheap) = (&pair[0], &pair[1]);
+            assert!(safe.predicted_snr_db >= cheap.predicted_snr_db);
+            assert!(safe.total_traffic_bits() > cheap.total_traffic_bits());
+            for (a, b) in safe.layers.iter().zip(&cheap.layers) {
+                assert!(a.l_w >= b.l_w && a.l_i >= b.l_i, "lane plans do not nest at {}", a.name);
+            }
+        }
+        // plan.lane_budgets on the full frontier agrees with the lane set
+        let full = plan_with_stats("lenet", &convs, f64::NEG_INFINITY, &PlannerOptions::default());
+        let budgets = full.lane_budgets(3);
+        assert_eq!(budgets.len(), lanes.len());
+        for (b, lane) in budgets.iter().zip(&lanes) {
+            assert!(
+                lane.predicted_snr_db >= *b,
+                "lane predicts {} under budget {b}",
+                lane.predicted_snr_db
+            );
+        }
     }
 
     #[test]

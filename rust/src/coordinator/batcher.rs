@@ -59,21 +59,31 @@ pub fn split_batch(batch: Vec<Request>) -> (Vec<Tensor>, Vec<Responder>) {
 }
 
 /// Pull the next batch from the queue: blocks for the first request, then
-/// lingers up to `policy.linger` (or until `max_batch`) for more.
-/// Returns `None` when the queue has disconnected and drained.
+/// lingers (or until `max_batch`) for more. The linger deadline anchors
+/// at the **first request's `enqueued_at`**, not at batch start: a
+/// request that already sat in the channel while the worker executed the
+/// previous batch has spent its linger budget, so the batch closes as
+/// soon as the backlog is drained instead of making it wait up to twice
+/// the configured linger. Returns `None` when the queue has disconnected
+/// and drained.
 pub fn next_batch(rx: &Receiver<Request>, policy: BatchPolicy) -> Option<Vec<Request>> {
     let first = rx.recv().ok()?;
+    let deadline = first.enqueued_at + policy.linger;
     let mut batch = vec![first];
-    let deadline = Instant::now() + policy.linger;
     while batch.len() < policy.max_batch {
         let now = Instant::now();
         if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(req) => batch.push(req),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+            // linger budget spent: take only what is already queued
+            match rx.try_recv() {
+                Ok(req) => batch.push(req),
+                Err(_) => break,
+            }
+        } else {
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
         }
     }
     Some(batch)
@@ -124,6 +134,49 @@ mod tests {
         assert_eq!(responders.len(), 2);
         assert_eq!(responders[0].id, 1);
         assert_eq!(responders[1].id, 2);
+    }
+
+    /// Regression: the linger deadline anchors at the first request's
+    /// `enqueued_at`. A request that already waited in the channel longer
+    /// than the linger must not wait again — the old batch-start anchor
+    /// made it wait up to ~2× the configured linger.
+    #[test]
+    fn linger_anchors_at_enqueue_time() {
+        let (tx, rx) = channel();
+        let linger = Duration::from_millis(200);
+        let stale = Request {
+            id: 1,
+            image: Tensor::zeros(&[1, 2, 2]),
+            respond: channel().0,
+            enqueued_at: Instant::now() - 2 * linger,
+        };
+        tx.send(stale).unwrap();
+        let policy = BatchPolicy { max_batch: 100, linger };
+        let t0 = Instant::now();
+        let batch = next_batch(&rx, policy).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "stale request lingered again: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    /// Even past the linger deadline, requests already sitting in the
+    /// channel still join the batch (draining costs no extra latency).
+    #[test]
+    fn expired_linger_still_drains_backlog() {
+        let (tx, rx) = channel();
+        let linger = Duration::from_millis(50);
+        let mut keep = Vec::new();
+        for id in 0..3 {
+            let (mut r, resp) = req(id);
+            r.enqueued_at = Instant::now() - 2 * linger;
+            keep.push(resp);
+            tx.send(r).unwrap();
+        }
+        let batch = next_batch(&rx, BatchPolicy { max_batch: 8, linger }).unwrap();
+        assert_eq!(batch.len(), 3, "queued backlog should batch together");
     }
 
     #[test]

@@ -1,44 +1,238 @@
 //! Serving metrics: latency distribution and throughput.
+//!
+//! Latency and queue-wait distributions live in fixed-size log-linear
+//! histograms ([`LogHistogram`]): a long-running server records millions
+//! of requests into a few KB of counters, and percentile queries walk the
+//! buckets instead of cloning + sorting a sample vector. Per-class
+//! breakdowns ([`ClassMetrics`]) feed the QoS report — each serving class
+//! gets its own distributions plus downgrade / deadline-miss counters.
 
 use std::time::Duration;
+
+/// Exact buckets below this value (µs); log-linear above.
+const LINEAR_CUTOVER: u64 = 32;
+/// Sub-buckets per octave above the cutover: 32 ⇒ the bucket midpoint is
+/// within 1/64 (≈1.6%) of any recorded value.
+const SUB_BUCKETS: usize = 32;
+/// Octaves 5..=63 cover the full `u64` range above the cutover.
+const BUCKETS: usize = LINEAR_CUTOVER as usize + (64 - 5) * SUB_BUCKETS;
+
+/// Fixed-size log-linear histogram over `u64` samples (HdrHistogram-style):
+/// exact below [`LINEAR_CUTOVER`], then [`SUB_BUCKETS`] linear sub-buckets
+/// per power of two. Memory is constant regardless of how many samples are
+/// recorded, and percentiles are read by a single cumulative walk with a
+/// bounded ≈1.6% relative error.
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self { counts: vec![0; BUCKETS], total: 0, sum: 0, max: 0 }
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("total", &self.total)
+            .field("sum", &self.sum)
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_CUTOVER {
+        return v as usize;
+    }
+    let octave = 63 - v.leading_zeros() as usize; // >= 5
+    let sub = ((v >> (octave - 5)) & (SUB_BUCKETS as u64 - 1)) as usize;
+    LINEAR_CUTOVER as usize + (octave - 5) * SUB_BUCKETS + sub
+}
+
+/// Midpoint of the bucket's value range — what percentile queries return.
+fn bucket_value(idx: usize) -> u64 {
+    if idx < LINEAR_CUTOVER as usize {
+        return idx as u64;
+    }
+    let rel = idx - LINEAR_CUTOVER as usize;
+    let octave = 5 + rel / SUB_BUCKETS;
+    let sub = (rel % SUB_BUCKETS) as u64;
+    let step = 1u64 << (octave - 5);
+    (LINEAR_CUTOVER + sub) * step + step / 2
+}
+
+impl LogHistogram {
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Percentile (`p` in [0, 100]) by cumulative bucket walk; returns the
+    /// midpoint of the bucket holding the ranked sample.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = (p.clamp(0.0, 100.0) / 100.0 * (self.total - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_value(idx) as f64;
+            }
+        }
+        self.max as f64
+    }
+
+    /// Merge another histogram into this one (bucket-wise sum).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Per-QoS-class serving metrics: the same distributions as the global
+/// [`Metrics`] plus the counters the QoS report needs.
+#[derive(Debug, Clone)]
+pub struct ClassMetrics {
+    pub label: String,
+    latencies_us: LogHistogram,
+    queue_waits_us: LogHistogram,
+    pub requests: u64,
+    /// Requests served by a cheaper lane than their class asked for.
+    pub downgrades: u64,
+    /// Requests answered after their deadline had passed.
+    pub deadline_misses: u64,
+}
+
+impl ClassMetrics {
+    fn new(label: &str) -> Self {
+        Self {
+            label: label.to_string(),
+            latencies_us: LogHistogram::default(),
+            queue_waits_us: LogHistogram::default(),
+            requests: 0,
+            downgrades: 0,
+            deadline_misses: 0,
+        }
+    }
+
+    /// Latency percentile in milliseconds.
+    pub fn latency_p(&self, p: f64) -> f64 {
+        self.latencies_us.percentile(p) / 1000.0
+    }
+
+    /// Queue-wait percentile in milliseconds.
+    pub fn queue_wait_p(&self, p: f64) -> f64 {
+        self.queue_waits_us.percentile(p) / 1000.0
+    }
+
+    /// Fraction of this class's requests served on a cheaper lane.
+    pub fn downgrade_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.downgrades as f64 / self.requests as f64
+    }
+}
 
 /// Accumulated serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
-    latencies_us: Vec<u64>,
-    queue_waits_us: Vec<u64>,
-    batch_sizes: Vec<usize>,
+    latencies_us: LogHistogram,
+    queue_waits_us: LogHistogram,
+    batch_size_sum: u64,
+    batch_obs: u64,
     pub total_requests: usize,
     pub wall_time: Duration,
+    /// Per-class breakdowns in first-seen order (empty for classless
+    /// serving through the plain [`super::InferenceServer`]).
+    classes: Vec<ClassMetrics>,
 }
 
 impl Metrics {
     pub fn record(&mut self, latency: Duration, queue_wait: Duration, batch_size: usize) {
-        self.latencies_us.push(latency.as_micros() as u64);
-        self.queue_waits_us.push(queue_wait.as_micros() as u64);
-        self.batch_sizes.push(batch_size);
+        self.latencies_us.record(latency.as_micros() as u64);
+        self.queue_waits_us.record(queue_wait.as_micros() as u64);
+        self.batch_size_sum += batch_size as u64;
+        self.batch_obs += 1;
         self.total_requests += 1;
+    }
+
+    /// [`Metrics::record`] with a per-class breakdown: also counts the
+    /// request under `class`, plus its downgrade / deadline-miss flags.
+    pub fn record_class(
+        &mut self,
+        class: &str,
+        latency: Duration,
+        queue_wait: Duration,
+        batch_size: usize,
+        downgraded: bool,
+        deadline_missed: bool,
+    ) {
+        self.record(latency, queue_wait, batch_size);
+        let idx = match self.classes.iter().position(|c| c.label == class) {
+            Some(i) => i,
+            None => {
+                self.classes.push(ClassMetrics::new(class));
+                self.classes.len() - 1
+            }
+        };
+        let cm = &mut self.classes[idx];
+        cm.latencies_us.record(latency.as_micros() as u64);
+        cm.queue_waits_us.record(queue_wait.as_micros() as u64);
+        cm.requests += 1;
+        if downgraded {
+            cm.downgrades += 1;
+        }
+        if deadline_missed {
+            cm.deadline_misses += 1;
+        }
     }
 
     /// Latency percentile in milliseconds (`p` in [0, 100]).
     pub fn latency_p(&self, p: f64) -> f64 {
-        percentile(&self.latencies_us, p) / 1000.0
+        self.latencies_us.percentile(p) / 1000.0
     }
 
     /// Mean queue wait in ms.
     pub fn mean_queue_wait_ms(&self) -> f64 {
-        if self.queue_waits_us.is_empty() {
-            return 0.0;
-        }
-        self.queue_waits_us.iter().sum::<u64>() as f64 / self.queue_waits_us.len() as f64 / 1000.0
+        self.queue_waits_us.mean() / 1000.0
     }
 
     /// Mean batch size actually served.
     pub fn mean_batch_size(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
+        if self.batch_obs == 0 {
             return 0.0;
         }
-        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        self.batch_size_sum as f64 / self.batch_obs as f64
     }
 
     /// Requests per second over the recorded wall time.
@@ -48,6 +242,16 @@ impl Metrics {
             return 0.0;
         }
         self.total_requests as f64 / s
+    }
+
+    /// Per-class breakdowns (first-seen order).
+    pub fn classes(&self) -> &[ClassMetrics] {
+        &self.classes
+    }
+
+    /// The breakdown for one class label, if any requests carried it.
+    pub fn class(&self, label: &str) -> Option<&ClassMetrics> {
+        self.classes.iter().find(|c| c.label == label)
     }
 
     /// One-line summary for logs and EXPERIMENTS.md.
@@ -65,16 +269,6 @@ impl Metrics {
     }
 }
 
-fn percentile(xs: &[u64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
-    let mut sorted = xs.to_vec();
-    sorted.sort_unstable();
-    let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
-    sorted[rank.min(sorted.len() - 1)] as f64
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,8 +279,9 @@ mod tests {
         for i in 1..=100u64 {
             m.record(Duration::from_micros(i * 1000), Duration::ZERO, 4);
         }
-        assert!((m.latency_p(50.0) - 50.0).abs() <= 1.0);
-        assert!((m.latency_p(99.0) - 99.0).abs() <= 1.0);
+        // log-linear buckets: midpoint within 1/64 of the true value
+        assert!((m.latency_p(50.0) - 50.0).abs() <= 1.5, "p50 {}", m.latency_p(50.0));
+        assert!((m.latency_p(99.0) - 99.0).abs() <= 2.0, "p99 {}", m.latency_p(99.0));
         assert_eq!(m.mean_batch_size(), 4.0);
     }
 
@@ -106,5 +301,71 @@ mod tests {
         assert_eq!(m.latency_p(50.0), 0.0);
         assert_eq!(m.throughput(), 0.0);
         assert!(!m.summary().is_empty());
+        assert!(m.classes().is_empty());
+        assert!(m.class("gold").is_none());
+    }
+
+    #[test]
+    fn histogram_is_fixed_size_and_accurate() {
+        let mut h = LogHistogram::default();
+        for v in [0u64, 1, 31, 32, 33, 1000, 50_000, 1_000_000, u64::MAX / 2] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 9);
+        assert_eq!(h.max(), u64::MAX / 2);
+        // exact below the cutover
+        let mut exact = LogHistogram::default();
+        exact.record(17);
+        assert_eq!(exact.percentile(50.0), 17.0);
+        // bounded relative error above it
+        let mut big = LogHistogram::default();
+        big.record(123_456);
+        let got = big.percentile(50.0);
+        assert!((got - 123_456.0).abs() / 123_456.0 < 1.0 / 32.0, "got {got}");
+    }
+
+    #[test]
+    fn histogram_percentile_walk_matches_sorted_rank() {
+        let mut h = LogHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(i);
+        }
+        for p in [0.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            let want = (p / 100.0 * 999.0).round() + 1.0;
+            let got = h.percentile(p);
+            assert!((got - want).abs() / want.max(1.0) < 0.05, "p{p}: got {got}, want ~{want}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_accumulates() {
+        let (mut a, mut b) = (LogHistogram::default(), LogHistogram::default());
+        a.record(100);
+        b.record(300);
+        b.record(500);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 500);
+    }
+
+    #[test]
+    fn per_class_breakdowns() {
+        let mut m = Metrics::default();
+        let ms = Duration::from_millis;
+        m.record_class("gold", ms(5), Duration::ZERO, 2, false, false);
+        m.record_class("economy", ms(50), ms(10), 4, true, true);
+        m.record_class("economy", ms(60), ms(12), 4, false, false);
+        assert_eq!(m.total_requests, 3);
+        assert_eq!(m.classes().len(), 2);
+        let gold = m.class("gold").unwrap();
+        assert_eq!(gold.requests, 1);
+        assert_eq!(gold.downgrades, 0);
+        let eco = m.class("economy").unwrap();
+        assert_eq!(eco.requests, 2);
+        assert_eq!(eco.downgrades, 1);
+        assert_eq!(eco.deadline_misses, 1);
+        assert!((eco.downgrade_rate() - 0.5).abs() < 1e-12);
+        assert!(eco.latency_p(99.0) > gold.latency_p(99.0));
+        assert!(eco.queue_wait_p(50.0) > 0.0);
     }
 }

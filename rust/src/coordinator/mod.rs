@@ -3,13 +3,21 @@
 //! The paper's contribution is the numeric format, so the coordinator is
 //! a thin-but-real driver (DESIGN.md §2): a request queue, a dynamic
 //! batcher, worker execution over either the pure-Rust engine or the
-//! AOT-compiled PJRT artifacts, and latency/throughput metrics.
+//! AOT-compiled PJRT artifacts, and latency/throughput metrics. On top
+//! of the single-plan server sits the QoS precision router ([`qos`]):
+//! multi-lane serving with per-class precision plans, deadline-aware
+//! scheduling, admission/shed downgrades and online NSR telemetry.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod qos;
 pub mod server;
 
 pub use engine::{forward_batch, forward_batch_ref, ExecMode};
-pub use metrics::Metrics;
+pub use metrics::{ClassMetrics, LogHistogram, Metrics};
+pub use qos::{
+    LaneReport, LaneSet, LaneSpec, LaneStep, QosClass, QosConfig, QosReport, QosResponse,
+    QosServer, ShedPolicy,
+};
 pub use server::{InferenceServer, PreparedBackend, RustBackend, ServerConfig};

@@ -1,0 +1,895 @@
+//! QoS precision router: multi-lane serving with per-class precision
+//! plans, deadline-aware scheduling and online NSR telemetry.
+//!
+//! The paper's result is that BFP mantissa width trades accuracy for
+//! hardware cost along a curve the NSR bound predicts — which makes
+//! precision a *runtime resource*. This module turns that knob into a
+//! serving fabric:
+//!
+//! * Every request carries a [`QosClass`] (`Gold`/`Standard`/`Economy`)
+//!   and an absolute deadline (explicit, or the class default).
+//! * The server runs one *lane* per class — a
+//!   [`PreparedModel`] bound to that class's precision plan, all lanes
+//!   built over **one** [`SharedWeightCache`] so a weight format used by
+//!   two lanes is quantized once, not once per lane.
+//! * A deadline-aware scheduler extends the dynamic batcher: per-class
+//!   earliest-deadline-first queues, batches are **never** mixed across
+//!   classes (the lanes run different plans), linger is anchored to the
+//!   head request's enqueue time, and under queue pressure the
+//!   admission/shed policy routes non-`Gold` traffic to the next-cheaper
+//!   lane (recording the downgrade) instead of blowing `Gold` deadlines.
+//! * Each lane carries an online [`NsrMonitor`]
+//!   ([`crate::telemetry`]): sampled BFP-vs-f32 probe forwards stream
+//!   into a Welford accumulator, and when the measured SNR falls below
+//!   the plan's predicted §4 bound the lane hot-swaps to the next-safer
+//!   step of its precision ladder through the existing schedule-swap
+//!   path — without dropping a single in-flight request.
+
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+use crate::autotune::PrecisionPlan;
+use crate::models::Model;
+use crate::nn::prepared::{PreparedModel, SharedWeightCache, WeightCache};
+use crate::nn::Fp32Exec;
+use crate::quant::{BfpConfig, LayerSchedule};
+use crate::telemetry::{MonitorConfig, NsrMonitor, Verdict};
+use crate::tensor::Tensor;
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A request's latency/quality class. `Gold` buys the safest precision
+/// plan and the tightest deadline; `Economy` the cheapest plan and the
+/// loosest deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QosClass {
+    Gold,
+    Standard,
+    Economy,
+}
+
+impl QosClass {
+    pub const ALL: [QosClass; 3] = [QosClass::Gold, QosClass::Standard, QosClass::Economy];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Gold => "gold",
+            QosClass::Standard => "standard",
+            QosClass::Economy => "economy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "gold" => Some(QosClass::Gold),
+            "standard" => Some(QosClass::Standard),
+            "economy" => Some(QosClass::Economy),
+            _ => None,
+        }
+    }
+
+    /// Deadline applied when a request does not carry its own.
+    pub fn default_deadline(self) -> Duration {
+        match self {
+            QosClass::Gold => Duration::from_millis(25),
+            QosClass::Standard => Duration::from_millis(100),
+            QosClass::Economy => Duration::from_millis(400),
+        }
+    }
+
+    /// Lane index: 0 = safest/most expensive, rising toward cheap.
+    fn rank(self) -> usize {
+        match self {
+            QosClass::Gold => 0,
+            QosClass::Standard => 1,
+            QosClass::Economy => 2,
+        }
+    }
+}
+
+/// One rung of a lane's precision ladder: the schedule to execute plus
+/// the predicted §4 SNR bound telemetry judges it against (NaN ⇒
+/// unmonitored — e.g. the uniform paper-default fallback).
+#[derive(Debug, Clone)]
+pub struct LaneStep {
+    pub schedule: LayerSchedule,
+    pub predicted_snr_db: f64,
+    pub label: String,
+}
+
+impl LaneStep {
+    pub fn new(schedule: LayerSchedule, predicted_snr_db: f64, label: impl Into<String>) -> Self {
+        Self { schedule, predicted_snr_db, label: label.into() }
+    }
+
+    /// A step executing an autotuned plan, bounded by its §4 prediction.
+    pub fn from_plan(plan: &PrecisionPlan) -> Self {
+        Self::new(
+            plan.to_schedule(),
+            plan.predicted_snr_db,
+            format!("plan[{:.1}dB]", plan.predicted_snr_db),
+        )
+    }
+
+    /// The ultimate fallback: the paper's uniform 8/8, unmonitored.
+    pub fn uniform_paper() -> Self {
+        Self::new(LayerSchedule::uniform(BfpConfig::paper_default()), f64::NAN, "uniform8/8")
+    }
+
+    /// An unmonitored uniform-width step (CLI `gold=9/9` syntax, tests).
+    pub fn uniform(l_w: u32, l_i: u32) -> Self {
+        let schedule = LayerSchedule::uniform(BfpConfig::new(l_w, l_i));
+        Self::new(schedule, f64::NAN, format!("uniform{l_w}/{l_i}"))
+    }
+}
+
+/// One lane's full precision ladder, operating point first, safer rungs
+/// after — the hot-swap path walks toward the back.
+#[derive(Debug, Clone)]
+pub struct LaneSpec {
+    pub ladder: Vec<LaneStep>,
+}
+
+impl LaneSpec {
+    pub fn new(ladder: Vec<LaneStep>) -> Self {
+        assert!(!ladder.is_empty(), "a lane needs at least one precision step");
+        Self { ladder }
+    }
+}
+
+/// The lane set of a QoS server: one lane per class plus an optional
+/// *shed* lane below `Economy` that only downgraded traffic reaches.
+#[derive(Debug, Clone)]
+pub struct LaneSet {
+    pub gold: LaneSpec,
+    pub standard: LaneSpec,
+    pub economy: LaneSpec,
+    pub shed: Option<LaneSpec>,
+}
+
+impl LaneSet {
+    /// Assemble the set from one operating step per lane. Ladders are
+    /// derived automatically: each lane falls back through the safer
+    /// classes' steps and terminates at the unmonitored uniform paper
+    /// default (consecutive duplicate schedules collapse).
+    pub fn from_steps(
+        gold: LaneStep,
+        standard: LaneStep,
+        economy: LaneStep,
+        shed: Option<LaneStep>,
+    ) -> Self {
+        fn ladder(own: &LaneStep, safer: &[&LaneStep]) -> Vec<LaneStep> {
+            let mut steps = vec![own.clone()];
+            for s in safer {
+                if steps.last().unwrap().schedule != s.schedule {
+                    steps.push((*s).clone());
+                }
+            }
+            let fallback = LaneStep::uniform_paper();
+            if steps.last().unwrap().schedule != fallback.schedule {
+                steps.push(fallback);
+            }
+            steps
+        }
+        Self {
+            gold: LaneSpec::new(ladder(&gold, &[])),
+            standard: LaneSpec::new(ladder(&standard, &[&gold])),
+            economy: LaneSpec::new(ladder(&economy, &[&standard, &gold])),
+            shed: shed.map(|s| LaneSpec::new(ladder(&s, &[&economy, &standard, &gold]))),
+        }
+    }
+
+    /// Build the set from autotuned plans, safest plan → `Gold`. With
+    /// fewer plans than classes the cheapest plan is reused; a fourth
+    /// plan becomes the shed lane.
+    pub fn from_plans(plans: &[PrecisionPlan]) -> anyhow::Result<Self> {
+        anyhow::ensure!(!plans.is_empty(), "lane set needs at least one precision plan");
+        let mut sorted: Vec<&PrecisionPlan> = plans.iter().collect();
+        sorted.sort_by(|a, b| b.predicted_snr_db.total_cmp(&a.predicted_snr_db));
+        let step = |i: usize| LaneStep::from_plan(sorted[i.min(sorted.len() - 1)]);
+        let shed = if sorted.len() > 3 { Some(step(3)) } else { None };
+        Ok(Self::from_steps(step(0), step(1), step(2), shed))
+    }
+}
+
+/// Outcome of one request through the QoS fabric.
+#[derive(Debug, Clone)]
+pub struct QosResponse {
+    pub id: u64,
+    pub logits: Tensor,
+    /// The class the request asked for.
+    pub class: QosClass,
+    /// The lane that actually served it (differs from `class` on a
+    /// downgrade).
+    pub served_by: String,
+    /// The active precision step of the serving lane.
+    pub lane_plan: String,
+    pub downgraded: bool,
+    pub deadline_missed: bool,
+    pub queue_wait: Duration,
+    pub batch_size: usize,
+    /// Monotone batch counter — responses sharing a `batch_seq` were
+    /// served in the same batch (the class-purity invariant is asserted
+    /// over this in the integration tests).
+    pub batch_seq: u64,
+}
+
+/// Admission/shed policy: when the total backlog exceeds
+/// `queue_pressure`, non-`Gold` batches route one lane cheaper
+/// (`Standard` → economy lane, `Economy` → shed lane when configured).
+/// `Gold` is never downgraded.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedPolicy {
+    pub enabled: bool,
+    /// Backlog (requests still queued at batch dispatch) above which
+    /// downgrade kicks in.
+    pub queue_pressure: usize,
+}
+
+impl Default for ShedPolicy {
+    fn default() -> Self {
+        Self { enabled: true, queue_pressure: 32 }
+    }
+}
+
+/// QoS server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct QosConfig {
+    pub policy: BatchPolicy,
+    pub shed: ShedPolicy,
+    pub monitor: MonitorConfig,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        Self {
+            policy: BatchPolicy::default(),
+            shed: ShedPolicy::default(),
+            monitor: MonitorConfig::default(),
+        }
+    }
+}
+
+/// Pick the serving lane for a batch of `class` requests given the
+/// backlog left in the queues. Returns `(lane index, downgraded)`.
+fn route(class: QosClass, backlog: usize, shed: &ShedPolicy, lane_count: usize) -> (usize, bool) {
+    let own = class.rank();
+    if !shed.enabled || backlog <= shed.queue_pressure || class == QosClass::Gold {
+        return (own, false);
+    }
+    let target = (own + 1).min(lane_count - 1);
+    (target, target != own)
+}
+
+// ---- deadline-aware scheduling ---------------------------------------
+
+struct QueuedRequest {
+    id: u64,
+    class: QosClass,
+    image: Tensor,
+    respond: Sender<QosResponse>,
+    enqueued_at: Instant,
+    deadline: Instant,
+    /// Submission order; tie-break for equal deadlines (FIFO).
+    seq: u64,
+}
+
+/// Max-heap entry ordered so the earliest deadline pops first.
+struct EdfEntry(QueuedRequest);
+
+impl PartialEq for EdfEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.deadline == other.0.deadline && self.0.seq == other.0.seq
+    }
+}
+impl Eq for EdfEntry {}
+impl PartialOrd for EdfEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EdfEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap pops the max, we want the earliest deadline
+        other.0.deadline.cmp(&self.0.deadline).then(other.0.seq.cmp(&self.0.seq))
+    }
+}
+
+/// Per-class earliest-deadline-first queues. Batches are popped from one
+/// class only — the no-mixing invariant is structural.
+#[derive(Default)]
+struct EdfQueues {
+    heaps: [BinaryHeap<EdfEntry>; 3],
+}
+
+impl EdfQueues {
+    fn push(&mut self, r: QueuedRequest) {
+        self.heaps[r.class.rank()].push(EdfEntry(r));
+    }
+
+    fn is_empty(&self) -> bool {
+        self.heaps.iter().all(|h| h.is_empty())
+    }
+
+    fn total(&self) -> usize {
+        self.heaps.iter().map(|h| h.len()).sum()
+    }
+
+    fn class_len(&self, c: QosClass) -> usize {
+        self.heaps[c.rank()].len()
+    }
+
+    /// EDF across classes: the class whose head request is most urgent.
+    fn pick_class(&self) -> Option<QosClass> {
+        QosClass::ALL
+            .iter()
+            .copied()
+            .filter_map(|c| self.heaps[c.rank()].peek().map(|e| (e.0.deadline, e.0.seq, c)))
+            .min_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)))
+            .map(|(_, _, c)| c)
+    }
+
+    fn head_enqueued(&self, c: QosClass) -> Option<Instant> {
+        self.heaps[c.rank()].peek().map(|e| e.0.enqueued_at)
+    }
+
+    /// Pop up to `max` requests of one class in deadline order.
+    fn pop_batch(&mut self, c: QosClass, max: usize) -> Vec<QueuedRequest> {
+        let heap = &mut self.heaps[c.rank()];
+        let mut batch = Vec::with_capacity(max.min(heap.len()));
+        while batch.len() < max {
+            match heap.pop() {
+                Some(EdfEntry(r)) => batch.push(r),
+                None => break,
+            }
+        }
+        batch
+    }
+}
+
+// ---- lanes -----------------------------------------------------------
+
+struct Lane {
+    label: &'static str,
+    prepared: PreparedModel,
+    ladder: Vec<LaneStep>,
+    pos: usize,
+    monitor: NsrMonitor,
+    swaps: u64,
+    batches: u64,
+}
+
+impl Lane {
+    fn new(
+        label: &'static str,
+        model: Model,
+        spec: &LaneSpec,
+        cache: &SharedWeightCache,
+        monitor: MonitorConfig,
+    ) -> Self {
+        let prepared =
+            PreparedModel::with_cache(model, spec.ladder[0].schedule.clone(), Arc::clone(cache));
+        prepared.warm();
+        Self {
+            label,
+            prepared,
+            ladder: spec.ladder.clone(),
+            pos: 0,
+            monitor: NsrMonitor::new(monitor),
+            swaps: 0,
+            batches: 0,
+        }
+    }
+
+    fn step(&self) -> &LaneStep {
+        &self.ladder[self.pos]
+    }
+
+    /// Forward one class-pure batch. For a sampled batch the first image
+    /// is returned as the telemetry probe input — the probe itself
+    /// ([`Lane::probe`]) runs *after* the batch's responses have been
+    /// sent, so its extra f32 reference forward never sits on the
+    /// response path.
+    fn forward(&mut self, images: Vec<Tensor>) -> (Vec<Tensor>, Option<Tensor>) {
+        let probe_input = if self.monitor.tick_batch() { Some(images[0].clone()) } else { None };
+        let outputs = self.prepared.forward_batch(images);
+        self.batches += 1;
+        (outputs, probe_input)
+    }
+
+    /// Telemetry probe for a sampled batch: run the f32 reference forward
+    /// for `img`, fold the NSR against the lane's already-computed BFP
+    /// output into the monitor, and hot-swap one rung safer on a bound
+    /// violation.
+    fn probe(&mut self, img: Tensor, bfp_output: &Tensor) {
+        let reference = self.prepared.model().graph.execute(img, &mut Fp32Exec);
+        self.monitor.record_probe(&reference.data, &bfp_output.data);
+        if self.monitor.verdict(self.step().predicted_snr_db) == Verdict::Violation {
+            self.swap_safer();
+        }
+    }
+
+    /// Hot-swap to the next-safer ladder rung through the prepared
+    /// model's schedule-swap path. In-flight batches are unaffected: the
+    /// swap happens between batches on the serving thread, and queued
+    /// requests simply execute under the safer schedule.
+    fn swap_safer(&mut self) {
+        if self.pos + 1 >= self.ladder.len() {
+            return; // already at the safest rung
+        }
+        self.pos += 1;
+        self.prepared.set_schedule(self.ladder[self.pos].schedule.clone());
+        self.monitor.reset_probes();
+        self.swaps += 1;
+    }
+
+    fn report(&self) -> LaneReport {
+        LaneReport {
+            label: self.label.to_string(),
+            plan: self.step().label.clone(),
+            predicted_snr_db: self.step().predicted_snr_db,
+            measured_snr_db: self.monitor.measured_snr_db(),
+            probes: self.monitor.probes(),
+            batches: self.batches,
+            swaps: self.swaps,
+            ladder_pos: self.pos,
+            ladder_len: self.ladder.len(),
+        }
+    }
+}
+
+/// Telemetry snapshot of one lane at shutdown.
+#[derive(Debug, Clone)]
+pub struct LaneReport {
+    pub label: String,
+    /// The precision step the lane ended on.
+    pub plan: String,
+    pub predicted_snr_db: f64,
+    /// Streaming measured SNR since the last hot-swap (+∞ = no probes).
+    pub measured_snr_db: f64,
+    pub probes: u64,
+    pub batches: u64,
+    pub swaps: u64,
+    pub ladder_pos: usize,
+    pub ladder_len: usize,
+}
+
+/// Everything the QoS server knows at shutdown: per-class serving
+/// metrics plus per-lane telemetry.
+#[derive(Debug, Clone)]
+pub struct QosReport {
+    pub metrics: Metrics,
+    pub lanes: Vec<LaneReport>,
+}
+
+// ---- the server ------------------------------------------------------
+
+/// Handle to a running QoS precision router.
+pub struct QosServer {
+    tx: Option<Sender<QueuedRequest>>,
+    worker: Option<JoinHandle<Vec<LaneReport>>>,
+    metrics: Arc<Mutex<Metrics>>,
+    next_id: u64,
+    started: Instant,
+}
+
+impl QosServer {
+    /// Build every lane over one shared weight cache and spawn the
+    /// scheduler/worker thread.
+    pub fn start(model: Model, set: &LaneSet, config: QosConfig) -> Self {
+        let cache = WeightCache::shared();
+        let mut lanes = vec![
+            Lane::new("gold", model.clone(), &set.gold, &cache, config.monitor),
+            Lane::new("standard", model.clone(), &set.standard, &cache, config.monitor),
+            Lane::new("economy", model.clone(), &set.economy, &cache, config.monitor),
+        ];
+        if let Some(shed) = &set.shed {
+            lanes.push(Lane::new("shed", model, shed, &cache, config.monitor));
+        }
+
+        let (tx, rx): (Sender<QueuedRequest>, Receiver<QueuedRequest>) = channel();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics_worker = Arc::clone(&metrics);
+        let worker = std::thread::spawn(move || run_worker(rx, lanes, config, metrics_worker));
+        Self { tx: Some(tx), worker: Some(worker), metrics, next_id: 0, started: Instant::now() }
+    }
+
+    /// Submit one image under `class` with the class-default deadline.
+    pub fn submit(&mut self, class: QosClass, image: Tensor) -> Receiver<QosResponse> {
+        let deadline = class.default_deadline();
+        self.submit_with_deadline(class, image, deadline)
+    }
+
+    /// Submit with an explicit per-request deadline (relative to now).
+    pub fn submit_with_deadline(
+        &mut self,
+        class: QosClass,
+        image: Tensor,
+        deadline: Duration,
+    ) -> Receiver<QosResponse> {
+        let (tx, rx) = channel();
+        self.next_id += 1;
+        let now = Instant::now();
+        self.tx
+            .as_ref()
+            .expect("server stopped")
+            .send(QueuedRequest {
+                id: self.next_id,
+                class,
+                image,
+                respond: tx,
+                enqueued_at: now,
+                deadline: now + deadline,
+                seq: self.next_id,
+            })
+            .expect("qos worker gone");
+        rx
+    }
+
+    /// Submit and wait (tests / simple clients).
+    pub fn infer(&mut self, class: QosClass, image: Tensor) -> QosResponse {
+        self.submit(class, image).recv().expect("qos worker dropped response")
+    }
+
+    /// Snapshot of the metrics so far (the wall time keeps running).
+    pub fn metrics(&self) -> Metrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.wall_time = self.started.elapsed();
+        m
+    }
+
+    /// Drain the queues, stop the worker, and return the final report.
+    pub fn shutdown(mut self) -> QosReport {
+        drop(self.tx.take());
+        let lanes = self
+            .worker
+            .take()
+            .map(|w| w.join().expect("qos worker panicked"))
+            .unwrap_or_default();
+        let mut metrics = self.metrics.lock().unwrap().clone();
+        metrics.wall_time = self.started.elapsed();
+        QosReport { metrics, lanes }
+    }
+}
+
+fn run_worker(
+    rx: Receiver<QueuedRequest>,
+    mut lanes: Vec<Lane>,
+    config: QosConfig,
+    metrics: Arc<Mutex<Metrics>>,
+) -> Vec<LaneReport> {
+    let mut queues = EdfQueues::default();
+    let mut open = true;
+    let mut batch_seq = 0u64;
+    while open || !queues.is_empty() {
+        if queues.is_empty() {
+            match rx.recv() {
+                Ok(r) => queues.push(r),
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
+        }
+        // drain everything already waiting in the channel
+        while open {
+            match rx.try_recv() {
+                Ok(r) => queues.push(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+        let Some(mut class) = queues.pick_class() else { continue };
+        // linger anchored at the head request's enqueue time (not batch
+        // start): a request that already waited its linger in the channel
+        // closes the batch immediately
+        if open && queues.class_len(class) < config.policy.max_batch {
+            let anchor = queues.head_enqueued(class).expect("head exists") + config.policy.linger;
+            loop {
+                if queues.class_len(class) >= config.policy.max_batch {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= anchor {
+                    break;
+                }
+                match rx.recv_timeout(anchor - now) {
+                    Ok(r) => queues.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+            // linger arrivals may be more urgent — EDF re-pick
+            class = queues.pick_class().expect("queues non-empty");
+        }
+        let batch = queues.pop_batch(class, config.policy.max_batch);
+        let backlog = queues.total();
+        let (lane_idx, downgraded) = route(class, backlog, &config.shed, lanes.len());
+        let lane = &mut lanes[lane_idx];
+        batch_seq += 1;
+        let t0 = Instant::now();
+        let batch_size = batch.len();
+        let mut images = Vec::with_capacity(batch_size);
+        let mut meta = Vec::with_capacity(batch_size);
+        for r in batch {
+            images.push(r.image);
+            meta.push((r.id, r.respond, r.enqueued_at, r.deadline));
+        }
+        let (outputs, probe_img) = lane.forward(images);
+        // retained for the post-response telemetry probe (logits are small)
+        let probe_out = probe_img.as_ref().map(|_| outputs[0].clone());
+        let served_by = lane.label.to_string();
+        let lane_plan = lane.step().label.clone();
+        for ((id, respond, enqueued_at, deadline), logits) in meta.into_iter().zip(outputs) {
+            let queue_wait = t0.duration_since(enqueued_at);
+            let latency = enqueued_at.elapsed();
+            let deadline_missed = Instant::now() > deadline;
+            metrics.lock().unwrap().record_class(
+                class.name(),
+                latency,
+                queue_wait,
+                batch_size,
+                downgraded,
+                deadline_missed,
+            );
+            let _ = respond.send(QosResponse {
+                id,
+                logits,
+                class,
+                served_by: served_by.clone(),
+                lane_plan: lane_plan.clone(),
+                downgraded,
+                deadline_missed,
+                queue_wait,
+                batch_size,
+                batch_seq,
+            });
+        }
+        // responses are out — now the sampled probe (and a possible
+        // hot-swap for the *next* batch) may spend its f32 forward
+        if let (Some(img), Some(out)) = (probe_img, probe_out) {
+            lane.probe(img, &out);
+        }
+    }
+    lanes.iter().map(Lane::report).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Block;
+
+    fn tiny_model(seed: u64) -> Model {
+        let mut rng = crate::data::Rng::new(seed);
+        Model {
+            name: "tiny".into(),
+            graph: Block::seq(vec![
+                Block::Conv(crate::models::init::conv2d("c1", 4, 2, 3, 3, 1, 1, &mut rng)),
+                Block::ReLU,
+                Block::Conv(crate::models::init::conv2d("c2", 3, 4, 3, 3, 1, 1, &mut rng)),
+                Block::Flatten,
+            ]),
+            input_shape: vec![2, 8, 8],
+            num_classes: 0,
+        }
+    }
+
+    fn image(seed: u64) -> Tensor {
+        let mut rng = crate::data::Rng::new(seed);
+        Tensor::from_vec(rng.normal_vec(2 * 8 * 8, 1.2), &[2, 8, 8])
+    }
+
+    fn queued(class: QosClass, seq: u64, deadline_ms: u64) -> QueuedRequest {
+        let now = Instant::now();
+        QueuedRequest {
+            id: seq,
+            class,
+            image: Tensor::zeros(&[1, 1, 1]),
+            respond: channel().0,
+            enqueued_at: now,
+            deadline: now + Duration::from_millis(deadline_ms),
+            seq,
+        }
+    }
+
+    #[test]
+    fn edf_orders_within_class() {
+        let mut q = EdfQueues::default();
+        q.push(queued(QosClass::Gold, 1, 50));
+        q.push(queued(QosClass::Gold, 2, 10));
+        q.push(queued(QosClass::Gold, 3, 30));
+        let batch = q.pop_batch(QosClass::Gold, 8);
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 1], "not earliest-deadline-first");
+    }
+
+    #[test]
+    fn edf_picks_most_urgent_class() {
+        let mut q = EdfQueues::default();
+        q.push(queued(QosClass::Gold, 1, 100));
+        q.push(queued(QosClass::Economy, 2, 5));
+        assert_eq!(q.pick_class(), Some(QosClass::Economy));
+        q.push(queued(QosClass::Gold, 3, 1));
+        assert_eq!(q.pick_class(), Some(QosClass::Gold));
+    }
+
+    #[test]
+    fn equal_deadlines_fall_back_to_fifo() {
+        let mut q = EdfQueues::default();
+        let base = Instant::now() + Duration::from_millis(50);
+        for seq in 1..=3 {
+            let mut r = queued(QosClass::Standard, seq, 0);
+            r.deadline = base;
+            q.push(r);
+        }
+        let ids: Vec<u64> = q.pop_batch(QosClass::Standard, 8).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pop_batch_never_mixes_classes_and_respects_max() {
+        let mut q = EdfQueues::default();
+        for seq in 0..6 {
+            q.push(queued(QosClass::Gold, seq, 10 + seq));
+            q.push(queued(QosClass::Economy, 100 + seq, 10 + seq));
+        }
+        let batch = q.pop_batch(QosClass::Gold, 4);
+        assert_eq!(batch.len(), 4, "max_batch cutoff");
+        assert!(batch.iter().all(|r| r.class == QosClass::Gold), "classes mixed in a batch");
+        assert_eq!(q.class_len(QosClass::Gold), 2);
+        assert_eq!(q.class_len(QosClass::Economy), 6);
+    }
+
+    #[test]
+    fn route_downgrades_only_under_pressure_and_never_gold() {
+        let shed = ShedPolicy { enabled: true, queue_pressure: 4 };
+        // no pressure: everyone stays home
+        for c in QosClass::ALL {
+            assert_eq!(route(c, 4, &shed, 4), (c.rank(), false));
+        }
+        // pressure: gold stays, standard → economy lane, economy → shed lane
+        assert_eq!(route(QosClass::Gold, 100, &shed, 4), (0, false));
+        assert_eq!(route(QosClass::Standard, 100, &shed, 4), (2, true));
+        assert_eq!(route(QosClass::Economy, 100, &shed, 4), (3, true));
+        // without a shed lane economy has nowhere cheaper to go
+        assert_eq!(route(QosClass::Economy, 100, &shed, 3), (2, false));
+        // disabled policy never downgrades
+        let off = ShedPolicy { enabled: false, queue_pressure: 0 };
+        assert_eq!(route(QosClass::Standard, 100, &off, 4), (1, false));
+    }
+
+    #[test]
+    fn lane_set_ladders_fall_back_through_safer_classes() {
+        let set = LaneSet::from_steps(
+            LaneStep::uniform(9, 9),
+            LaneStep::uniform(7, 7),
+            LaneStep::uniform(5, 5),
+            Some(LaneStep::uniform(4, 4)),
+        );
+        assert_eq!(set.gold.ladder.len(), 2, "gold: own + paper fallback");
+        assert_eq!(set.standard.ladder.len(), 3);
+        assert_eq!(set.economy.ladder.len(), 4);
+        let shed = set.shed.as_ref().unwrap();
+        assert_eq!(shed.ladder.len(), 5);
+        // economy's next-safer rung is standard's operating point
+        assert_eq!(set.economy.ladder[1].label, "uniform7/7");
+        // every ladder terminates at the unmonitored paper default
+        for spec in [&set.gold, &set.standard, &set.economy, shed] {
+            let last = spec.ladder.last().unwrap();
+            assert_eq!(last.label, "uniform8/8");
+            assert!(last.predicted_snr_db.is_nan());
+        }
+    }
+
+    #[test]
+    fn lane_set_dedups_identical_neighbour_steps() {
+        let set = LaneSet::from_steps(
+            LaneStep::uniform(8, 8), // == paper default → no extra fallback rung
+            LaneStep::uniform(8, 8),
+            LaneStep::uniform(5, 5),
+            None,
+        );
+        assert_eq!(set.gold.ladder.len(), 1, "own step == paper default → no extra fallback");
+        assert_eq!(set.standard.ladder.len(), 1, "standard == gold == fallback → single rung");
+        assert_eq!(set.economy.ladder.len(), 2, "standard/gold/fallback collapse to one rung");
+        assert!(set.shed.is_none());
+    }
+
+    /// A lane whose measured SNR violates its (impossible) predicted
+    /// bound hot-swaps to the next-safer rung between batches.
+    #[test]
+    fn lane_hot_swaps_on_forced_violation() {
+        let model = tiny_model(3);
+        let cache = WeightCache::shared();
+        let spec = LaneSpec::new(vec![
+            LaneStep::new(LayerSchedule::uniform(BfpConfig::new(4, 4)), 1000.0, "impossible"),
+            LaneStep::uniform(8, 8),
+        ]);
+        let mcfg = MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 };
+        let mut lane = Lane::new("economy", model.clone(), &spec, &cache, mcfg);
+        assert_eq!(lane.pos, 0);
+        let (out_noisy, probe_img) = lane.forward(vec![image(5)]);
+        assert_eq!(lane.pos, 0, "probe (and any swap) must wait until responses are out");
+        lane.probe(probe_img.expect("sample_every=1 probes every batch"), &out_noisy[0]);
+        assert_eq!(lane.pos, 1, "violation did not trigger the hot-swap");
+        assert_eq!(lane.swaps, 1);
+        assert_eq!(lane.monitor.probes(), 0, "probe window must reset after a swap");
+        // post-swap batches run the safer schedule, bit-identical to a
+        // standalone prepared model on that schedule
+        let (out_safe, probe2) = lane.forward(vec![image(5)]);
+        // the safer rung carries no finite bound → probing never swaps again
+        lane.probe(probe2.unwrap(), &out_safe[0]);
+        assert_eq!((lane.pos, lane.swaps), (1, 1));
+        let safer = PreparedModel::new(model, LayerSchedule::uniform(BfpConfig::new(8, 8)));
+        let reference = safer.forward(&image(5));
+        for (a, b) in reference.data.iter().zip(&out_safe[0].data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and the pre-swap output really was the noisy plan
+        assert_ne!(
+            out_noisy[0].data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            out_safe[0].data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn lane_at_top_of_ladder_stays_put() {
+        let model = tiny_model(4);
+        let cache = WeightCache::shared();
+        let spec = LaneSpec::new(vec![LaneStep::new(
+            LayerSchedule::uniform(BfpConfig::new(4, 4)),
+            1000.0,
+            "impossible",
+        )]);
+        let mcfg = MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 };
+        let mut lane = Lane::new("gold", model, &spec, &cache, mcfg);
+        let (out, probe_img) = lane.forward(vec![image(6)]);
+        lane.probe(probe_img.unwrap(), &out[0]);
+        assert_eq!(lane.pos, 0);
+        assert_eq!(lane.swaps, 0, "single-rung ladder cannot swap");
+    }
+
+    /// End-to-end smoke over the tiny model: three classes, responses for
+    /// everyone, per-class metrics populated.
+    #[test]
+    fn qos_server_serves_all_classes() {
+        let set = LaneSet::from_steps(
+            LaneStep::uniform(9, 9),
+            LaneStep::uniform(7, 7),
+            LaneStep::uniform(5, 5),
+            None,
+        );
+        let config = QosConfig {
+            policy: BatchPolicy { max_batch: 4, linger: Duration::from_millis(2) },
+            shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+            monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+        };
+        let mut server = QosServer::start(tiny_model(8), &set, config);
+        let mut pending = Vec::new();
+        for i in 0..9u64 {
+            let class = QosClass::ALL[(i % 3) as usize];
+            pending.push((class, server.submit(class, image(50 + i))));
+        }
+        for (class, rx) in pending {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.class, class);
+            assert_eq!(resp.served_by, class.name(), "downgrade with shedding disabled");
+            assert!(!resp.downgraded);
+            assert_eq!(resp.logits.shape, vec![3 * 8 * 8]);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.metrics.total_requests, 9);
+        for class in QosClass::ALL {
+            let cm = report.metrics.class(class.name()).expect("class metrics");
+            assert_eq!(cm.requests, 3);
+            assert_eq!(cm.downgrades, 0);
+        }
+        assert_eq!(report.lanes.len(), 3);
+        assert!(report.lanes.iter().all(|l| l.swaps == 0));
+    }
+}

@@ -1,0 +1,102 @@
+//! QoS serving report: per-class latency/downgrade tables plus per-lane
+//! measured-vs-predicted NSR telemetry (EXPERIMENTS.md §QoS).
+
+use super::report::{db, Table};
+use crate::coordinator::qos::QosReport;
+
+/// Per-class serving table: request counts, latency percentiles,
+/// downgrade and deadline-miss accounting.
+pub fn class_table(report: &QosReport) -> Table {
+    let header = [
+        "class", "requests", "p50 ms", "p99 ms", "queue p50 ms", "downgrades", "downgrade %",
+        "deadline misses",
+    ];
+    let mut t = Table::new("QoS per-class serving metrics", &header);
+    for c in report.metrics.classes() {
+        t.row(vec![
+            c.label.clone(),
+            c.requests.to_string(),
+            format!("{:.2}", c.latency_p(50.0)),
+            format!("{:.2}", c.latency_p(99.0)),
+            format!("{:.2}", c.queue_wait_p(50.0)),
+            c.downgrades.to_string(),
+            format!("{:.1}", 100.0 * c.downgrade_rate()),
+            c.deadline_misses.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Per-lane telemetry table: the precision step each lane ended on, its
+/// predicted §4 bound, the streaming measured SNR, and hot-swap counts.
+pub fn lane_table(report: &QosReport) -> Table {
+    let mut t = Table::new(
+        "QoS lane telemetry (measured vs predicted NSR)",
+        &["lane", "plan", "predicted dB", "measured dB", "probes", "batches", "swaps", "ladder"],
+    );
+    for l in &report.lanes {
+        t.row(vec![
+            l.label.clone(),
+            l.plan.clone(),
+            db(l.predicted_snr_db),
+            db(l.measured_snr_db),
+            l.probes.to_string(),
+            l.batches.to_string(),
+            l.swaps.to_string(),
+            format!("{}/{}", l.ladder_pos + 1, l.ladder_len),
+        ]);
+    }
+    t
+}
+
+/// Print the full report (summary line + both tables).
+pub fn print(report: &QosReport) {
+    println!("{}", report.metrics.summary());
+    println!();
+    class_table(report).print();
+    println!();
+    lane_table(report).print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::qos::LaneReport;
+    use crate::coordinator::Metrics;
+    use std::time::Duration;
+
+    fn demo_report() -> QosReport {
+        let mut metrics = Metrics::default();
+        let ms = Duration::from_millis;
+        metrics.record_class("gold", ms(4), Duration::ZERO, 2, false, false);
+        metrics.record_class("economy", ms(40), ms(8), 4, true, true);
+        metrics.wall_time = Duration::from_secs(1);
+        QosReport {
+            metrics,
+            lanes: vec![LaneReport {
+                label: "economy".into(),
+                plan: "plan[26.0dB]".into(),
+                predicted_snr_db: 26.0,
+                measured_snr_db: 24.5,
+                probes: 7,
+                batches: 50,
+                swaps: 1,
+                ladder_pos: 1,
+                ladder_len: 4,
+            }],
+        }
+    }
+
+    #[test]
+    fn tables_render_all_classes_and_lanes() {
+        let r = demo_report();
+        let ct = class_table(&r).render();
+        assert!(ct.contains("gold"));
+        assert!(ct.contains("economy"));
+        assert!(ct.contains("100.0"), "downgrade rate column: {ct}");
+        let lt = lane_table(&r).render();
+        assert!(lt.contains("plan[26.0dB]"));
+        assert!(lt.contains("24.5"));
+        assert!(lt.contains("2/4"));
+    }
+}

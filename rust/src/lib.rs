@@ -32,7 +32,15 @@
 //!   uses [`nn::prepared`] (weight quantization cached per
 //!   `(layer, config)`, scratch-arena workspaces) on the zero-dependency
 //!   scoped thread pool in [`runtime::pool`] (`BFP_NUM_THREADS`), with
-//!   output bit-identical to the serial path at every thread count.
+//!   output bit-identical to the serial path at every thread count. The
+//!   QoS precision router ([`coordinator::qos`]) serves multiple lanes —
+//!   one [`nn::prepared::PreparedModel`] per latency/quality class, all
+//!   over one shared weight cache — with earliest-deadline-first
+//!   class-pure batching and pressure-driven downgrades.
+//! * [`telemetry`] — online NSR telemetry: Welford-streamed BFP-vs-f32
+//!   probe forwards per lane, hot-swapping a lane to the next-safer
+//!   frontier plan when the measured SNR breaks its plan's predicted
+//!   §4 bound.
 //! * [`harness`] — drivers that regenerate every table and figure of the
 //!   paper's evaluation section.
 //! * [`data`] — synthetic workload generators (procedural digit / texture
@@ -49,6 +57,7 @@ pub mod models;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 
 pub use bfp::{BfpBlock, BfpFormat, Rounding};

@@ -12,6 +12,10 @@
 //!                 [--max-width 10] [--min-width 3] [--out plan.txt]
 //! bfp-cnn serve  [--model lenet] [--requests 64] [--mode bfp|fp32|plan]
 //!                [--plan plan.txt] [--batch 8] [--prepared]
+//! bfp-cnn serve  --qos [gold=<plan.txt|9/9>] [standard=<spec>] [economy=<spec>]
+//!                [shed=<spec>] [--pressure 32] [--mix 1:1:1]
+//! bfp-cnn loadgen [--model lenet] [--requests 96] [--mix 1:3:8] [--lanes 4]
+//!                 [--pressure 16] [--calib 3] [--batch 8]
 //! bfp-cnn e2e    [--requests 64] [--artifacts artifacts]
 //! bfp-cnn all    [--images 10]
 //! ```
@@ -22,6 +26,14 @@
 //! plan + Pareto frontier, demonstrates per-layer execution through the
 //! coordinator engine, and optionally serializes the plan for
 //! `serve --mode plan`.
+//!
+//! `serve --qos` starts the QoS precision router: one serving lane per
+//! class (`gold=`/`standard=`/`economy=` each take a plan file or a
+//! `lw/li` uniform width pair; missing classes default to 9/9, 7/7 and
+//! 5/5), class-pure EDF batching, pressure-driven downgrades and online
+//! NSR telemetry. `loadgen` is the self-contained demo: it autotunes a
+//! lane set off the Pareto frontier, then drives a mixed-class workload
+//! through the router and prints the per-class / per-lane QoS report.
 
 use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
 use bfp_cnn::coordinator::server::{Backend, InferenceServer, PreparedBackend, RustBackend, ServerConfig};
@@ -165,6 +177,30 @@ fn main() {
         "serve" => {
             let requests: usize = args.get("requests", 64);
             let batch: usize = args.get("batch", 8);
+            let id = model_by_name(&args.get_str("model", "lenet")).expect("unknown model");
+            let class_specs = collect_class_specs(&argv);
+            if args.flags.contains_key("qos") || !class_specs.is_empty() {
+                let set = match lane_set_from_specs(&class_specs, id.name()) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("cannot build QoS lane set: {e:#}");
+                        std::process::exit(1);
+                    }
+                };
+                let mix = parse_mix(&args.get_str("mix", "1:1:1"));
+                qos_serve_demo(
+                    id,
+                    size,
+                    seed,
+                    &artifacts,
+                    requests,
+                    batch,
+                    args.get("pressure", 32),
+                    set,
+                    &mix,
+                );
+                return;
+            }
             let mode = match args.get_str("mode", "bfp").as_str() {
                 "fp32" => ExecMode::Fp32,
                 "plan" => {
@@ -191,9 +227,32 @@ fn main() {
                 }
                 _ => ExecMode::Bfp(BfpConfig::new(args.get("lw", 8), args.get("li", 8))),
             };
-            let id = model_by_name(&args.get_str("model", "lenet")).expect("unknown model");
             let prepared = args.get_str("prepared", "false") == "true";
             serve_demo(id, size, seed, &artifacts, requests, batch, mode, prepared);
+        }
+        "loadgen" => {
+            let id = model_by_name(&args.get_str("model", "lenet")).expect("unknown model");
+            let opts = bfp_cnn::autotune::PlannerOptions {
+                max_width: args.get("max-width", 10),
+                min_width: args.get("min-width", 3),
+                refine_rounds: 0,
+            };
+            if let Err(e) = loadgen(
+                id,
+                size,
+                seed,
+                &artifacts,
+                args.get("requests", 96),
+                args.get("batch", 8),
+                args.get("calib", 3),
+                args.get("lanes", 4),
+                args.get("pressure", 16),
+                &parse_mix(&args.get_str("mix", "1:3:8")),
+                &opts,
+            ) {
+                eprintln!("loadgen failed: {e:#}");
+                std::process::exit(1);
+            }
         }
         "e2e" => {
             let requests: usize = args.get("requests", 64);
@@ -220,7 +279,9 @@ fn main() {
             fig3::run(size, images.min(5), seed, &artifacts).print();
         }
         _ => {
-            eprintln!("usage: bfp-cnn <table1|table2|table3|table4|fig3|autotune|serve|e2e|all> [--flags]");
+            eprintln!(
+                "usage: bfp-cnn <table1|table2|table3|table4|fig3|autotune|serve|loadgen|e2e|all> [--flags]"
+            );
             eprintln!("see rust/src/main.rs docs for flags");
             std::process::exit(2);
         }
@@ -279,6 +340,176 @@ fn serve_demo(
     }
     let metrics = server.shutdown();
     println!("{}", metrics.summary());
+}
+
+/// Gather `class=spec` tokens (any position) for the QoS lane set:
+/// `gold=plan.txt standard=7/7 economy=5/5 [shed=4/4]`.
+fn collect_class_specs(argv: &[String]) -> Vec<(String, String)> {
+    use bfp_cnn::coordinator::QosClass;
+    argv.iter()
+        .filter_map(|tok| {
+            let (class, spec) = tok.split_once('=')?;
+            (QosClass::parse(class).is_some() || class == "shed")
+                .then(|| (class.to_string(), spec.to_string()))
+        })
+        .collect()
+}
+
+/// Parse one lane spec: a `lw/li` uniform width pair, or a precision-plan
+/// file produced by `bfp-cnn autotune --out`.
+fn parse_lane_step(spec: &str, model: &str) -> anyhow::Result<bfp_cnn::coordinator::LaneStep> {
+    if let Some((lw, li)) = spec.split_once('/') {
+        if let (Ok(lw), Ok(li)) = (lw.parse::<u32>(), li.parse::<u32>()) {
+            return Ok(bfp_cnn::coordinator::LaneStep::uniform(lw, li));
+        }
+    }
+    let plan = bfp_cnn::autotune::PrecisionPlan::load(Path::new(spec))?;
+    anyhow::ensure!(
+        plan.model == model,
+        "precision plan {spec} was tuned for model `{}`, refusing to serve `{model}` with it",
+        plan.model
+    );
+    Ok(bfp_cnn::coordinator::LaneStep::from_plan(&plan))
+}
+
+/// Build the lane set from CLI specs; unspecified classes fall back to
+/// demo uniform widths (gold 9/9, standard 7/7, economy 5/5, no shed).
+fn lane_set_from_specs(
+    specs: &[(String, String)],
+    model: &str,
+) -> anyhow::Result<bfp_cnn::coordinator::LaneSet> {
+    use bfp_cnn::coordinator::{LaneSet, LaneStep};
+    let find = |class: &str| specs.iter().find(|(c, _)| c == class).map(|(_, s)| s.as_str());
+    let step = |class: &str, default: (u32, u32)| -> anyhow::Result<LaneStep> {
+        match find(class) {
+            Some(spec) => parse_lane_step(spec, model),
+            None => Ok(LaneStep::uniform(default.0, default.1)),
+        }
+    };
+    let shed = match find("shed") {
+        Some(spec) => Some(parse_lane_step(spec, model)?),
+        None => None,
+    };
+    Ok(LaneSet::from_steps(
+        step("gold", (9, 9))?,
+        step("standard", (7, 7))?,
+        step("economy", (5, 5))?,
+        shed,
+    ))
+}
+
+/// Parse a `g:s:e` class-mix ratio into a submission pattern. Rejects
+/// malformed components — a silently-coerced typo would serve a
+/// different mix than the one the experiment asked for.
+fn parse_mix(s: &str) -> Vec<bfp_cnn::coordinator::QosClass> {
+    use bfp_cnn::coordinator::QosClass;
+    let counts: Vec<usize> = s
+        .split(':')
+        .map(|t| {
+            t.parse().unwrap_or_else(|_| {
+                eprintln!(
+                    "invalid --mix component `{t}` in `{s}` (expected g:s:e counts, e.g. 1:3:8)"
+                );
+                std::process::exit(2);
+            })
+        })
+        .collect();
+    let mut pattern = Vec::new();
+    for (i, class) in QosClass::ALL.into_iter().enumerate() {
+        for _ in 0..counts.get(i).copied().unwrap_or(1) {
+            pattern.push(class);
+        }
+    }
+    if pattern.is_empty() {
+        pattern.push(QosClass::Standard);
+    }
+    pattern
+}
+
+/// QoS router demo: serve a mixed-class stream and print the QoS report.
+#[allow(clippy::too_many_arguments)]
+fn qos_serve_demo(
+    id: ModelId,
+    size: usize,
+    seed: u64,
+    artifacts: &Path,
+    requests: usize,
+    batch: usize,
+    pressure: usize,
+    set: bfp_cnn::coordinator::LaneSet,
+    mix: &[bfp_cnn::coordinator::QosClass],
+) {
+    use bfp_cnn::coordinator::{QosConfig, QosServer, ShedPolicy};
+    let model = id.build(size, seed, artifacts);
+    let input_shape = model.input_shape.clone();
+    let config = QosConfig {
+        policy: bfp_cnn::coordinator::batcher::BatchPolicy {
+            max_batch: batch,
+            linger: std::time::Duration::from_millis(2),
+        },
+        shed: ShedPolicy { enabled: true, queue_pressure: pressure },
+        ..QosConfig::default()
+    };
+    println!(
+        "serving {} mixed-class requests on qos/{} (lanes gold/standard/economy{}) ...",
+        requests,
+        id.name(),
+        if set.shed.is_some() { "/shed" } else { "" }
+    );
+    let mut server = QosServer::start(model, &set, config);
+    let images = gen_images(id, &input_shape, requests, seed);
+    let pending: Vec<_> = images
+        .into_iter()
+        .enumerate()
+        .map(|(i, img)| server.submit(mix[i % mix.len()], img))
+        .collect();
+    for rx in pending {
+        rx.recv().expect("qos response");
+    }
+    let report = server.shutdown();
+    bfp_cnn::harness::qos_report::print(&report);
+}
+
+/// The `loadgen` subcommand: autotune a lane set off the Pareto
+/// frontier, then drive a mixed-class workload through the QoS router.
+#[allow(clippy::too_many_arguments)]
+fn loadgen(
+    id: ModelId,
+    size: usize,
+    seed: u64,
+    artifacts: &Path,
+    requests: usize,
+    batch: usize,
+    calib: usize,
+    lanes: usize,
+    pressure: usize,
+    mix: &[bfp_cnn::coordinator::QosClass],
+    opts: &bfp_cnn::autotune::PlannerOptions,
+) -> anyhow::Result<()> {
+    use bfp_cnn::autotune;
+    use bfp_cnn::coordinator::LaneSet;
+
+    let model = id.build(size, seed, artifacts);
+    let calib_images = gen_images(id, &model.input_shape, calib.max(1), seed);
+    let t0 = std::time::Instant::now();
+    let convs = autotune::calibrate(&model, &calib_images, opts)?;
+    let plans = autotune::plan_lane_set(&model.name, &convs, lanes.max(1), opts);
+    println!(
+        "lane set from the Pareto frontier ({} plans, {:.2}s calibration+planning):",
+        plans.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    for p in &plans {
+        println!(
+            "  predicted {:>7.2} dB, traffic {:>9.1} kbit ({:.1}% saved vs uniform 8/8)",
+            p.predicted_snr_db,
+            p.total_traffic_bits() / 1000.0,
+            100.0 * p.savings_vs_uniform8()
+        );
+    }
+    let set = LaneSet::from_plans(&plans)?;
+    qos_serve_demo(id, size, seed, artifacts, requests, batch, pressure, set, mix);
+    Ok(())
 }
 
 /// The `autotune` subcommand: calibrate → plan → measure → report, then

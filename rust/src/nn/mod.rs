@@ -20,4 +20,4 @@ pub mod prepared;
 pub use exec::{BfpExec, Fp32Exec};
 pub use graph::{Block, Executor};
 pub use layers::{BatchNorm, Conv2d, Dense};
-pub use prepared::{PreparedModel, WeightCache, Workspace};
+pub use prepared::{PreparedModel, SharedWeightCache, WeightCache, Workspace};

@@ -97,7 +97,19 @@ fn weights_fingerprint(t: &Tensor) -> u64 {
         ^ sample(d.len().saturating_sub(1))
 }
 
+/// A [`WeightCache`] shared between several [`PreparedModel`]s — the
+/// multi-lane serving configuration, where every lane runs the same model
+/// under a different [`LayerSchedule`] and a weight format used by two
+/// lanes is quantized exactly once.
+pub type SharedWeightCache = Arc<Mutex<WeightCache>>;
+
 impl WeightCache {
+    /// A fresh cache behind the shared handle several [`PreparedModel`]s
+    /// can be built over ([`PreparedModel::with_cache`]).
+    pub fn shared() -> SharedWeightCache {
+        Arc::new(Mutex::new(WeightCache::default()))
+    }
+
     /// Look up (or quantize and insert) `layer`'s weights under `cfg`.
     /// Does **not** build the packed f32 panel — the analysis/autotune
     /// instrumentation only needs the quantized mantissas, and eagerly
@@ -272,7 +284,10 @@ impl Executor for PreparedExec<'_> {
 pub struct PreparedModel {
     model: Model,
     schedule: LayerSchedule,
-    cache: WeightCache,
+    /// Shared across lanes serving the same model under different
+    /// schedules — a weight format is quantized once per cache, not once
+    /// per lane.
+    cache: SharedWeightCache,
     /// Active view for the current schedule: layer name → cached weights.
     active: HashMap<String, CachedWeights>,
     /// Idle scratch arenas, checked out per forward and returned after —
@@ -283,10 +298,17 @@ pub struct PreparedModel {
 impl PreparedModel {
     /// Quantize every conv layer of `model` under `schedule`.
     pub fn new(model: Model, schedule: LayerSchedule) -> Self {
+        Self::with_cache(model, schedule, WeightCache::shared())
+    }
+
+    /// [`PreparedModel::new`] over a caller-provided [`SharedWeightCache`]
+    /// — the multi-lane constructor: every lane built over the same handle
+    /// shares quantized weights per distinct `(layer, weight format)`.
+    pub fn with_cache(model: Model, schedule: LayerSchedule, cache: SharedWeightCache) -> Self {
         let mut prepared = Self {
             model,
             schedule: LayerSchedule::uniform(BfpConfig::paper_default()),
-            cache: WeightCache::default(),
+            cache,
             active: HashMap::new(),
             workspaces: Mutex::new(Vec::new()),
         };
@@ -299,12 +321,13 @@ impl PreparedModel {
     /// other layer is a cache hit.
     pub fn set_schedule(&mut self, schedule: LayerSchedule) {
         let mut active = HashMap::new();
-        let cache = &mut self.cache;
+        let mut cache = self.cache.lock().unwrap();
         let graph = &self.model.graph;
         graph.visit_convs(&mut |c: &Conv2d| {
             let cfg = schedule.for_layer(&c.name);
             active.insert(c.name.clone(), cache.get_or_quantize_packed(c, cfg));
         });
+        drop(cache);
         self.active = active;
         self.schedule = schedule;
     }
@@ -319,9 +342,15 @@ impl PreparedModel {
         &self.schedule
     }
 
+    /// The shared weight-cache handle (build further lanes over it).
+    pub fn shared_cache(&self) -> SharedWeightCache {
+        Arc::clone(&self.cache)
+    }
+
     /// `(entries, hits, misses)` of the weight cache.
     pub fn cache_stats(&self) -> (usize, usize, usize) {
-        (self.cache.len(), self.cache.hits(), self.cache.misses())
+        let cache = self.cache.lock().unwrap();
+        (cache.len(), cache.hits(), cache.misses())
     }
 
     fn take_workspace(&self) -> Workspace {
@@ -454,6 +483,39 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
+    }
+
+    /// Multi-lane construction over one shared cache: lanes whose
+    /// schedules resolve to the same weight format share quantized
+    /// weights — a model's weights are quantized once per distinct
+    /// format, not once per lane.
+    #[test]
+    fn lanes_share_one_weight_cache() {
+        let model = tiny_model(9);
+        let cache = WeightCache::shared();
+        let gold = PreparedModel::with_cache(
+            model.clone(),
+            LayerSchedule::uniform(BfpConfig::new(8, 8)),
+            Arc::clone(&cache),
+        );
+        assert_eq!(gold.cache_stats(), (2, 0, 2));
+        // same weight widths, narrower activations: weight format is
+        // unchanged, so the second lane is all cache hits
+        let standard = PreparedModel::with_cache(
+            model.clone(),
+            LayerSchedule::uniform(BfpConfig::new(8, 6)),
+            Arc::clone(&cache),
+        );
+        assert_eq!(standard.cache_stats(), (2, 2, 2), "second lane re-quantized shared weights");
+        // a genuinely narrower weight format quantizes once more
+        let economy = PreparedModel::with_cache(
+            model.clone(),
+            LayerSchedule::uniform(BfpConfig::new(5, 5)),
+            Arc::clone(&cache),
+        );
+        assert_eq!(economy.cache_stats(), (4, 2, 4));
+        // all lanes report through the same handle
+        assert_eq!(gold.cache_stats(), economy.cache_stats());
     }
 
     /// Two models with a same-named layer but different weights must get

@@ -1,0 +1,18 @@
+//! Online numeric-quality telemetry for the serving stack.
+//!
+//! The §4 error analysis predicts each precision plan's output SNR from
+//! calibration statistics — but calibration traffic is not production
+//! traffic. This module closes the loop online: a [`NsrMonitor`] samples
+//! served batches at a configurable rate, runs a BFP-vs-f32 probe forward
+//! on the sampled image, and folds the observed noise-to-signal ratio
+//! into a [`Welford`] streaming accumulator. When the measured SNR falls
+//! below the plan's predicted §4 bound (minus a slack margin), the
+//! monitor reports a [`Verdict::Violation`] and the QoS lane hot-swaps to
+//! the next-safer frontier plan through the existing schedule-swap path
+//! ([`crate::nn::prepared::PreparedModel::set_schedule`]).
+
+pub mod monitor;
+pub mod welford;
+
+pub use monitor::{MonitorConfig, NsrMonitor, Verdict};
+pub use welford::Welford;

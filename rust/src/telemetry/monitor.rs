@@ -1,0 +1,216 @@
+//! Streaming NSR/logit-drift monitor: measured-vs-predicted quality for
+//! one serving lane.
+//!
+//! Probing is sampled — every [`MonitorConfig::sample_every`]-th batch
+//! runs one extra f32 reference forward on a single image and compares it
+//! against the lane's (already computed) BFP output. The per-probe
+//! noise-to-signal ratio accumulates in a [`Welford`] stream; once enough
+//! probes are in, [`NsrMonitor::verdict`] compares the running measured
+//! SNR against the plan's predicted §4 bound minus a slack margin (the
+//! surrogate is deliberately a bound, so a few dB of model-vs-reality gap
+//! is expected and tolerated).
+
+use super::welford::Welford;
+
+/// Sampling and judgement knobs for a lane monitor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MonitorConfig {
+    /// Probe every Nth served batch (0 disables probing entirely).
+    pub sample_every: u64,
+    /// Probes required before the monitor will judge the lane — a single
+    /// unlucky image must not trigger a swap.
+    pub min_probes: u64,
+    /// Slack below the predicted bound (dB) before a violation fires.
+    pub margin_db: f64,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        Self { sample_every: 8, min_probes: 4, margin_db: 3.0 }
+    }
+}
+
+/// The monitor's judgement of a lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Measured SNR respects the predicted bound (within the margin), or
+    /// the lane carries no finite bound to check against.
+    Healthy,
+    /// Not enough probes accumulated to judge.
+    Warming,
+    /// Measured SNR fell below `bound − margin`: the plan is noisier in
+    /// production than the §4 analysis predicted — hot-swap to the
+    /// next-safer plan.
+    Violation,
+}
+
+/// Per-lane streaming NSR monitor.
+#[derive(Debug, Clone, Default)]
+pub struct NsrMonitor {
+    cfg: MonitorConfig,
+    batches: u64,
+    probes: u64,
+    /// Linear (not dB) per-probe NSR — averaging in linear space weights
+    /// noisy outliers correctly; the dB view is derived on read.
+    nsr: Welford,
+}
+
+impl NsrMonitor {
+    pub fn new(cfg: MonitorConfig) -> Self {
+        Self { cfg, ..Self::default() }
+    }
+
+    pub fn config(&self) -> &MonitorConfig {
+        &self.cfg
+    }
+
+    /// Count one served batch; returns true when this batch should be
+    /// probed (the caller then runs the f32 reference forward and calls
+    /// [`NsrMonitor::record_probe`]).
+    pub fn tick_batch(&mut self) -> bool {
+        if self.cfg.sample_every == 0 {
+            return false;
+        }
+        self.batches += 1;
+        self.batches % self.cfg.sample_every == 0
+    }
+
+    /// Fold in one probe: `reference` is the f32 forward of the sampled
+    /// image, `quantized` the lane's BFP output for the same image.
+    /// Returns this probe's SNR in dB.
+    pub fn record_probe(&mut self, reference: &[f32], quantized: &[f32]) -> f64 {
+        assert_eq!(reference.len(), quantized.len(), "probe output shapes differ");
+        let (mut sig, mut err) = (0f64, 0f64);
+        for (&a, &b) in reference.iter().zip(quantized) {
+            sig += (a as f64) * (a as f64);
+            err += ((b - a) as f64) * ((b - a) as f64);
+        }
+        let nsr = if sig > 0.0 {
+            err / sig
+        } else if err > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        };
+        self.probes += 1;
+        self.nsr.push(nsr);
+        crate::analysis::snr_db(sig, err)
+    }
+
+    /// Batches seen (probed or not).
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Probes folded in since the last reset.
+    pub fn probes(&self) -> u64 {
+        self.probes
+    }
+
+    /// Running measured SNR in dB (−10·log₁₀ of the mean linear NSR);
+    /// +∞ before any probe or when no noise has been observed.
+    pub fn measured_snr_db(&self) -> f64 {
+        if self.probes == 0 {
+            return f64::INFINITY;
+        }
+        let mean = self.nsr.mean();
+        if mean <= 0.0 {
+            f64::INFINITY
+        } else {
+            -10.0 * mean.log10()
+        }
+    }
+
+    /// Judge the lane against its plan's predicted SNR bound (dB). A NaN
+    /// or non-finite bound means the lane is unmonitored → always healthy.
+    pub fn verdict(&self, predicted_bound_db: f64) -> Verdict {
+        if !predicted_bound_db.is_finite() || self.cfg.sample_every == 0 {
+            return Verdict::Healthy;
+        }
+        if self.probes < self.cfg.min_probes {
+            return Verdict::Warming;
+        }
+        if self.measured_snr_db() < predicted_bound_db - self.cfg.margin_db {
+            Verdict::Violation
+        } else {
+            Verdict::Healthy
+        }
+    }
+
+    /// Forget accumulated probes (after a hot-swap: the observations
+    /// describe the plan that was just retired). Batch count is kept so
+    /// sampling cadence continues.
+    pub fn reset_probes(&mut self) {
+        self.probes = 0;
+        self.nsr.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_every_nth_batch() {
+        let mut m =
+            NsrMonitor::new(MonitorConfig { sample_every: 3, min_probes: 1, margin_db: 0.0 });
+        let probed: Vec<bool> = (0..9).map(|_| m.tick_batch()).collect();
+        assert_eq!(probed, vec![false, false, true, false, false, true, false, false, true]);
+        assert_eq!(m.batches(), 9);
+    }
+
+    #[test]
+    fn disabled_sampling_never_probes_and_stays_healthy() {
+        let mut m =
+            NsrMonitor::new(MonitorConfig { sample_every: 0, min_probes: 0, margin_db: 0.0 });
+        assert!(!m.tick_batch());
+        assert_eq!(m.verdict(100.0), Verdict::Healthy);
+    }
+
+    #[test]
+    fn probe_snr_matches_hand_computation() {
+        let mut m =
+            NsrMonitor::new(MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 });
+        // signal energy 100, error energy 1 → SNR 20 dB
+        let snr = m.record_probe(&[10.0, 0.0], &[10.0, 1.0]);
+        assert!((snr - 20.0).abs() < 1e-9, "snr {snr}");
+        assert!((m.measured_snr_db() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn verdict_respects_margin_and_warmup() {
+        let cfg = MonitorConfig { sample_every: 1, min_probes: 2, margin_db: 3.0 };
+        let mut m = NsrMonitor::new(cfg);
+        m.record_probe(&[10.0, 0.0], &[10.0, 1.0]); // 20 dB
+        assert_eq!(m.verdict(30.0), Verdict::Warming, "one probe is not evidence");
+        m.record_probe(&[10.0, 0.0], &[10.0, 1.0]); // still 20 dB
+        // bound 22 dB, margin 3 → tolerated down to 19 dB
+        assert_eq!(m.verdict(22.0), Verdict::Healthy);
+        // bound 30 dB → 20 dB measured is a clear violation
+        assert_eq!(m.verdict(30.0), Verdict::Violation);
+        // an unmonitored lane (NaN bound) never violates
+        assert_eq!(m.verdict(f64::NAN), Verdict::Healthy);
+    }
+
+    #[test]
+    fn reset_probes_restarts_judgement() {
+        let mut m =
+            NsrMonitor::new(MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 });
+        m.record_probe(&[1.0], &[2.0]); // 0 dB
+        assert_eq!(m.verdict(10.0), Verdict::Violation);
+        m.reset_probes();
+        assert_eq!(m.probes(), 0);
+        assert_eq!(m.verdict(10.0), Verdict::Warming);
+        assert!(m.measured_snr_db().is_infinite());
+    }
+
+    #[test]
+    fn mean_is_linear_not_db() {
+        let mut m =
+            NsrMonitor::new(MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 });
+        m.record_probe(&[10.0], &[10.0]); // zero noise → NSR 0
+        m.record_probe(&[10.0], &[11.0]); // NSR 0.01 → 20 dB
+        // mean linear NSR 0.005 → ≈23.01 dB, NOT the dB-average (∞+20)/2
+        assert!((m.measured_snr_db() - 23.0103).abs() < 1e-3, "{}", m.measured_snr_db());
+    }
+}

@@ -1,0 +1,304 @@
+//! Integration tests for the QoS precision router (ISSUE 3 acceptance):
+//!
+//! (a) every lane serves logits bit-identical to a standalone
+//!     [`PreparedModel`] on the same plan;
+//! (b) classes are never mixed within a batch;
+//! (c) a forced NSR-bound violation hot-swaps the lane to the next-safer
+//!     plan without dropping in-flight requests;
+//! (d) per-class metrics (p50/p99, downgrade count) are reported, and
+//!     synthetic overload downgrades non-Gold traffic to cheaper lanes.
+
+use bfp_cnn::coordinator::batcher::BatchPolicy;
+use bfp_cnn::coordinator::{
+    LaneSet, LaneStep, QosClass, QosConfig, QosResponse, QosServer, ShedPolicy,
+};
+use bfp_cnn::models::ModelId;
+use bfp_cnn::nn::PreparedModel;
+use bfp_cnn::quant::{BfpConfig, LayerSchedule};
+use bfp_cnn::telemetry::MonitorConfig;
+use bfp_cnn::Tensor;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+fn lenet() -> bfp_cnn::models::Model {
+    ModelId::Lenet.build(32, 1, Path::new("/nonexistent"))
+}
+
+fn images(n: usize, seed: u64) -> Vec<Tensor> {
+    bfp_cnn::data::DigitDataset::generate(n, seed).images
+}
+
+fn demo_lane_set() -> LaneSet {
+    LaneSet::from_steps(
+        LaneStep::uniform(9, 9),
+        LaneStep::uniform(7, 7),
+        LaneStep::uniform(5, 5),
+        Some(LaneStep::uniform(4, 4)),
+    )
+}
+
+/// Telemetry off, shedding off: pure routing.
+fn quiet_config() -> QosConfig {
+    QosConfig {
+        policy: BatchPolicy { max_batch: 4, linger: Duration::from_millis(2) },
+        shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+        monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+    }
+}
+
+/// (a) + (b) + (d): a three-class mixed workload ends with bit-identical
+/// logits per lane, class-pure batches, and populated per-class metrics.
+#[test]
+fn mixed_workload_is_bit_identical_class_pure_and_metered() {
+    let model = lenet();
+    let set = demo_lane_set();
+    let mut server = QosServer::start(model.clone(), &set, quiet_config());
+
+    let imgs = images(18, 42);
+    let classes: Vec<QosClass> = (0..imgs.len()).map(|i| QosClass::ALL[i % 3]).collect();
+    let pending: Vec<_> = imgs
+        .iter()
+        .zip(&classes)
+        .map(|(img, &c)| server.submit(c, img.clone()))
+        .collect();
+    let responses: Vec<QosResponse> = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let report = server.shutdown();
+
+    // (a) bit-identical to a standalone PreparedModel on the same plan
+    let widths = |c: QosClass| match c {
+        QosClass::Gold => BfpConfig::new(9, 9),
+        QosClass::Standard => BfpConfig::new(7, 7),
+        QosClass::Economy => BfpConfig::new(5, 5),
+    };
+    for class in QosClass::ALL {
+        let reference = PreparedModel::new(model.clone(), LayerSchedule::uniform(widths(class)));
+        for (i, resp) in responses.iter().enumerate() {
+            if classes[i] != class {
+                continue;
+            }
+            assert_eq!(resp.served_by, class.name(), "no downgrades with shedding off");
+            let want = reference.forward(&imgs[i]);
+            assert_eq!(want.shape, resp.logits.shape);
+            for (a, b) in want.data.iter().zip(&resp.logits.data) {
+                let lane = class.name();
+                assert_eq!(a.to_bits(), b.to_bits(), "lane {lane} diverged from its plan");
+            }
+        }
+    }
+
+    // (b) responses sharing a batch_seq all carry the same class
+    let mut by_batch: HashMap<u64, Vec<&QosResponse>> = HashMap::new();
+    for r in &responses {
+        by_batch.entry(r.batch_seq).or_default().push(r);
+    }
+    for (seq, members) in &by_batch {
+        let first = members[0].class;
+        assert!(
+            members.iter().all(|r| r.class == first),
+            "batch {seq} mixed classes: {:?}",
+            members.iter().map(|r| r.class).collect::<Vec<_>>()
+        );
+        assert!(members.iter().all(|r| r.batch_size >= members.len()));
+    }
+
+    // (d) per-class metrics are populated
+    assert_eq!(report.metrics.total_requests, 18);
+    for class in QosClass::ALL {
+        let cm = report.metrics.class(class.name()).expect("per-class metrics");
+        assert_eq!(cm.requests, 6);
+        assert_eq!(cm.downgrades, 0);
+        assert!(cm.latency_p(50.0) > 0.0);
+        assert!(cm.latency_p(99.0) >= cm.latency_p(50.0));
+    }
+    assert_eq!(report.lanes.len(), 4, "three class lanes + shed lane");
+}
+
+/// (c) a lane whose measured NSR breaks its (impossibly optimistic)
+/// predicted bound hot-swaps to the next-safer frontier step while the
+/// workload is in flight — and every request still gets its response.
+#[test]
+fn forced_nsr_violation_hot_swaps_without_dropping_requests() {
+    let model = lenet();
+    // economy operates a deliberately noisy 4/4 plan whose claimed bound
+    // (200 dB) no BFP execution can meet → first probe violates
+    let set = LaneSet::from_steps(
+        LaneStep::uniform(9, 9),
+        LaneStep::uniform(7, 7),
+        LaneStep::new(LayerSchedule::uniform(BfpConfig::new(4, 4)), 200.0, "noisy4/4"),
+        None,
+    );
+    let config = QosConfig {
+        policy: BatchPolicy { max_batch: 2, linger: Duration::from_millis(1) },
+        shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+        monitor: MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 },
+    };
+    let mut server = QosServer::start(model.clone(), &set, config);
+    let imgs = images(12, 7);
+    let pending: Vec<_> =
+        imgs.iter().map(|img| server.submit(QosClass::Economy, img.clone())).collect();
+    let responses: Vec<QosResponse> = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    assert_eq!(responses.len(), 12, "in-flight requests were dropped");
+    let report = server.shutdown();
+
+    let economy = report.lanes.iter().find(|l| l.label == "economy").unwrap();
+    assert!(economy.swaps >= 1, "violation did not trigger a hot-swap: {economy:?}");
+    assert!(economy.ladder_pos >= 1);
+    // the lane walked to a safer rung: economy's next-safer step is
+    // standard's 7/7 operating point
+    assert_eq!(economy.plan, "uniform7/7");
+
+    // post-swap responses are bit-identical to the safer plan
+    let safer = PreparedModel::new(model, LayerSchedule::uniform(BfpConfig::new(7, 7)));
+    let last = responses.last().unwrap();
+    let want = safer.forward(imgs.last().unwrap());
+    for (a, b) in want.data.iter().zip(&last.logits.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-swap lane is not serving the safer plan");
+    }
+}
+
+/// (d) synthetic overload: with a tiny pressure threshold, queued
+/// non-Gold traffic downgrades to cheaper lanes and the accounting shows
+/// it — while Gold is never downgraded.
+#[test]
+fn overload_downgrades_non_gold_and_accounts_for_it() {
+    let model = lenet();
+    let config = QosConfig {
+        policy: BatchPolicy { max_batch: 2, linger: Duration::from_millis(1) },
+        shed: ShedPolicy { enabled: true, queue_pressure: 2 },
+        monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+    };
+    let mut server = QosServer::start(model, &demo_lane_set(), config);
+    // burst far beyond the pressure threshold before the worker can drain
+    let imgs = images(48, 9);
+    let classes: Vec<QosClass> = (0..imgs.len()).map(|i| QosClass::ALL[i % 3]).collect();
+    let pending: Vec<_> = imgs
+        .into_iter()
+        .zip(&classes)
+        .map(|(img, &c)| server.submit_with_deadline(c, img, Duration::from_secs(5)))
+        .collect();
+    let responses: Vec<QosResponse> = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let report = server.shutdown();
+
+    // gold is never downgraded, even under pressure
+    for r in responses.iter().filter(|r| r.class == QosClass::Gold) {
+        assert!(!r.downgraded, "gold request downgraded");
+        assert_eq!(r.served_by, "gold");
+    }
+    // the burst kept the backlog over the threshold: standard traffic
+    // must have shed to the economy lane (and economy to the shed lane)
+    let std_downgrades = report.metrics.class("standard").map(|c| c.downgrades).unwrap_or(0);
+    let eco_downgrades = report.metrics.class("economy").map(|c| c.downgrades).unwrap_or(0);
+    assert!(
+        std_downgrades + eco_downgrades > 0,
+        "no downgrades under synthetic overload: {:?}",
+        report.metrics.summary()
+    );
+    // response flags agree with the metrics
+    let flagged = responses.iter().filter(|r| r.downgraded).count() as u64;
+    assert_eq!(flagged, std_downgrades + eco_downgrades);
+    for r in responses.iter().filter(|r| r.downgraded) {
+        match r.class {
+            QosClass::Standard => assert_eq!(r.served_by, "economy"),
+            QosClass::Economy => assert_eq!(r.served_by, "shed"),
+            QosClass::Gold => panic!("gold downgraded"),
+        }
+    }
+}
+
+/// Deadline-aware batching: a request arriving during another request's
+/// linger window joins that batch (closing it at `max_batch`) instead of
+/// waiting for its own — and the batch closes well before the long
+/// linger expires. (EDF *ordering* itself is covered deterministically
+/// by the scheduler unit tests in `coordinator::qos`.)
+#[test]
+fn late_arrival_joins_the_lingering_batch() {
+    let model = lenet();
+    let linger = Duration::from_millis(400);
+    let config = QosConfig {
+        policy: BatchPolicy { max_batch: 2, linger },
+        shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+        monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+    };
+    let mut server = QosServer::start(model, &demo_lane_set(), config);
+    let imgs = images(2, 5);
+    let t0 = std::time::Instant::now();
+    let first =
+        server.submit_with_deadline(QosClass::Economy, imgs[0].clone(), Duration::from_secs(10));
+    std::thread::sleep(Duration::from_millis(20)); // worker is now lingering
+    let late =
+        server.submit_with_deadline(QosClass::Economy, imgs[1].clone(), Duration::from_millis(50));
+    let (r1, r2) = (first.recv().unwrap(), late.recv().unwrap());
+    let elapsed = t0.elapsed();
+    server.shutdown();
+    assert_eq!(r1.batch_seq, r2.batch_seq, "late arrival did not join the lingering batch");
+    assert_eq!(r1.batch_size, 2);
+    assert!(
+        elapsed < linger,
+        "batch should close at max_batch, not at linger expiry ({elapsed:?})"
+    );
+}
+
+/// The lane set built from autotuned frontier plans serves end to end
+/// and its telemetry stays healthy under its own predicted bounds
+/// (margin-tolerant), exercising autotune → lanes → QoS serving.
+#[test]
+fn autotuned_lane_set_serves_with_healthy_telemetry() {
+    let model = lenet();
+    let calib = images(2, 31);
+    let opts = bfp_cnn::autotune::PlannerOptions { max_width: 9, min_width: 4, refine_rounds: 0 };
+    let convs = bfp_cnn::autotune::calibrate(&model, &calib, &opts).unwrap();
+    let plans = bfp_cnn::autotune::plan_lane_set(&model.name, &convs, 3, &opts);
+    assert!(!plans.is_empty());
+    let set = LaneSet::from_plans(&plans).unwrap();
+    // frontier lanes: gold's operating plan is at least as safe as economy's
+    assert!(
+        set.gold.ladder[0].predicted_snr_db >= set.economy.ladder[0].predicted_snr_db,
+        "lane set not ordered safest-first"
+    );
+    let config = QosConfig {
+        policy: BatchPolicy { max_batch: 4, linger: Duration::from_millis(1) },
+        shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+        // probe every batch with a wide margin: the surrogate is an
+        // upper bound, so a generous margin must not trip a swap
+        monitor: MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 30.0 },
+    };
+    let mut server = QosServer::start(model, &set, config);
+    let imgs = images(9, 13);
+    let pending: Vec<_> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, img)| server.submit(QosClass::ALL[i % 3], img.clone()))
+        .collect();
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    let report = server.shutdown();
+    for lane in report.lanes.iter().filter(|l| l.label != "shed") {
+        assert!(lane.probes > 0, "lane {} never probed", lane.label);
+        assert!(lane.measured_snr_db.is_finite());
+        assert_eq!(lane.swaps, 0, "lane {} swapped under a 30 dB margin", lane.label);
+    }
+}
+
+/// One shared weight cache across lanes: building the whole lane set
+/// must not quantize a distinct weight format more than once.
+#[test]
+fn lane_construction_shares_the_weight_cache() {
+    use bfp_cnn::nn::WeightCache;
+    let model = lenet(); // 2 conv layers
+    let cache = WeightCache::shared();
+    // gold and standard share weight width 8 (formats equal), economy differs
+    for cfg in [BfpConfig::new(8, 9), BfpConfig::new(8, 6), BfpConfig::new(5, 5)] {
+        let lane = PreparedModel::with_cache(
+            model.clone(),
+            LayerSchedule::uniform(cfg),
+            std::sync::Arc::clone(&cache),
+        );
+        lane.warm();
+    }
+    let stats = cache.lock().unwrap();
+    assert_eq!(stats.misses(), 4, "weights quantized once per distinct format, not per lane");
+    assert_eq!(stats.len(), 4);
+    assert!(stats.hits() >= 2, "second lane should hit the shared cache");
+}
