@@ -9,12 +9,21 @@
 //! `cargo bench --bench hotpath -- --smoke` runs every bench at tiny
 //! shapes in a few seconds — the CI smoke job uses it so the perf
 //! harness can never silently rot.
+//!
+//! `-- --baseline[=<path>]` additionally diffs the run against a
+//! committed `BENCH_hotpath.json` (default: the tracked workspace-root
+//! copy) and exits non-zero on any >15% mean-time regression, provided
+//! the baseline has comparable entries and matching shapes (tag).
 
 use bfp_cnn::bfp::gemm::f32_gemm;
+use bfp_cnn::bfp::kernel::{gemm_tiled, pack_weights_f32, pack_weights_i32, select_lane, ActPanels, WeightPanels};
 use bfp_cnn::bfp::partition::BlockAxis;
 use bfp_cnn::bfp::{bfp_gemm, block_format, max_exponent, BfpFormat, BfpMatrix};
 use bfp_cnn::data::Rng;
-use bfp_cnn::harness::benchkit::{bench_opts, section, write_json, BenchOpts, BenchResult};
+use bfp_cnn::harness::benchkit::{
+    bench_opts, diff_against_baseline, read_baseline, report_baseline_diff, section, write_json,
+    BenchOpts, BenchResult,
+};
 use bfp_cnn::models::Model;
 use bfp_cnn::nn::prepared::PreparedModel;
 use bfp_cnn::nn::{Block, Conv2d};
@@ -93,6 +102,38 @@ fn main() {
         }));
     }
 
+    section("tiled microkernel vs naive reference (pre-packed operands)");
+    let lane8 = select_lane(wq.frac_bits, iq.frac_bits, k);
+    let wq_panels = pack_weights_f32(&wq);
+    let mut acts8 = ActPanels::new();
+    acts8.pack_matrix(&iq, lane8);
+    results.push(pool::with_threads(1, || {
+        bench_opts("bfp_gemm_8bit_tiled", Some(macs), "MAC", opts, &mut || {
+            gemm_tiled(&wq, WeightPanels::F32(&wq_panels), &acts8, &mut out);
+            std::hint::black_box(&out);
+        })
+    }));
+    // 2D (M panel × N block) scaling of the tiled kernel
+    for t in [1usize, 2, 4] {
+        results.push(pool::with_threads(t, || {
+            bench_opts(&format!("bfp_gemm_8bit_tiled_t{t}"), Some(macs), "MAC", opts, &mut || {
+                gemm_tiled(&wq, WeightPanels::F32(&wq_panels), &acts8, &mut out);
+                std::hint::black_box(&out);
+            })
+        }));
+    }
+    // wide-mantissa i64 lane, tiled vs the naive reference above
+    let lane16 = select_lane(wq16.frac_bits, iq16.frac_bits, k);
+    let wq16_panels = pack_weights_i32(&wq16);
+    let mut acts16 = ActPanels::new();
+    acts16.pack_matrix(&iq16, lane16);
+    results.push(pool::with_threads(1, || {
+        bench_opts("bfp_gemm_16bit_tiled", Some(macs), "MAC", opts, &mut || {
+            gemm_tiled(&wq16, WeightPanels::Int(&wq16_panels), &acts16, &mut out);
+            std::hint::black_box(&out);
+        })
+    }));
+
     section("im2col (3x3 kernel, pad 1)");
     let im_side = if smoke { 16 } else { 64 };
     let img = rng.normal_vec(3 * im_side * im_side, 1.0);
@@ -138,8 +179,9 @@ fn main() {
     let macs31 = (cout31 * cin31 * 9 * sp31 * sp31) as f64;
     results.push(pool::with_threads(1, || {
         bench_opts("conv3_1_bfp_cold", Some(macs31), "MAC", opts, &mut || {
-            // PR 1 baseline path: re-quantizes weights + allocates per
-            // call, pinned serial — the true pre-PR-2 configuration
+            // cold path: re-quantizes + re-packs weights and allocates
+            // per call, pinned serial — the cost the prepared path
+            // amortizes (the kernel itself is tiled as of PR 4)
             std::hint::black_box(conv31.forward_bfp(&input31, &cfg));
         })
     }));
@@ -161,6 +203,38 @@ fn main() {
             })
         }));
     }
+
+    section("activation pipeline at conv3_1 shape: fused im2col→quantize→pack vs unfused");
+    let geo31 = Conv2dGeometry {
+        in_channels: cin31,
+        in_h: sp31,
+        in_w: sp31,
+        kernel_h: 3,
+        kernel_w: 3,
+        stride: 1,
+        padding: 1,
+    };
+    let (k31, n31) = (geo31.k(), geo31.n());
+    let lane31 = select_lane(cfg.w_format().frac_bits(), cfg.i_format().frac_bits(), k31);
+    let elems31 = (k31 * n31) as f64;
+    // unfused (pre-tiling data path): full K×N im2col buffer → K×N i32
+    // quantize → pack into panels
+    let mut col31 = vec![0f32; k31 * n31];
+    let mut iq31 = BfpMatrix::empty();
+    let mut acts_unfused = ActPanels::new();
+    results.push(bench_opts("conv3_1_pipeline_unfused", Some(elems31), "elem", opts, &mut || {
+        im2col(&input31.data, &geo31, &mut col31);
+        iq31.requantize(&col31, k31, n31, cfg.i_format(), cfg.scheme.i_axis());
+        acts_unfused.pack_matrix(&iq31, lane31);
+        std::hint::black_box(&acts_unfused);
+    }));
+    // fused: NC-wide tiles quantized straight into the packed panels
+    let mut acts_fused = ActPanels::new();
+    let mut tile31 = Vec::new();
+    results.push(bench_opts("conv3_1_pipeline_fused", Some(elems31), "elem", opts, &mut || {
+        acts_fused.pack_im2col(&input31.data, &geo31, cfg.i_format(), cfg.scheme.i_axis(), lane31, &mut tile31);
+        std::hint::black_box(&acts_fused);
+    }));
 
     section("prepared forward_batch (8 images, image-parallel)");
     let batch: Vec<Tensor> = (0..8)
@@ -185,4 +259,42 @@ fn main() {
     };
     write_json(&path, tag, &results).expect("write bench json");
     println!("\nwrote {} ({} benches)", path.display(), results.len());
+
+    // `--baseline[=<path>]` (or BENCH_BASELINE=<path>): diff this run
+    // against a committed baseline JSON and exit non-zero on any >15%
+    // throughput regression — only when the baseline actually carries
+    // comparable results (the tracked file starts as an empty
+    // placeholder until a cargo-equipped host populates it).
+    let baseline_path = std::env::args()
+        .find_map(|a| {
+            if a == "--baseline" {
+                Some(None)
+            } else {
+                a.strip_prefix("--baseline=").map(|p| Some(std::path::PathBuf::from(p)))
+            }
+        })
+        .or_else(|| std::env::var("BENCH_BASELINE").ok().map(|p| Some(std::path::PathBuf::from(p))));
+    if let Some(explicit) = baseline_path {
+        let bpath = explicit.unwrap_or_else(|| match std::env::var("CARGO_MANIFEST_DIR") {
+            Ok(d) => std::path::Path::new(&d).join("..").join("BENCH_hotpath.json"),
+            Err(_) => std::path::PathBuf::from("BENCH_hotpath.json"),
+        });
+        match read_baseline(&bpath) {
+            Ok(base) if base.tag != tag => {
+                println!("baseline {} is tagged {:?}, this run is {:?} — shapes differ, skipping diff", bpath.display(), base.tag, tag);
+            }
+            Ok(base) if base.entries.is_empty() => {
+                println!("baseline {} has no results (placeholder) — nothing to compare", bpath.display());
+            }
+            Ok(base) => {
+                let deltas = diff_against_baseline(&results, &base);
+                let regressions = report_baseline_diff(&deltas);
+                if regressions > 0 {
+                    eprintln!("{regressions} bench(es) regressed >15% vs {}", bpath.display());
+                    std::process::exit(1);
+                }
+            }
+            Err(e) => println!("no baseline at {}: {e}", bpath.display()),
+        }
+    }
 }

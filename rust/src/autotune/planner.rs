@@ -73,25 +73,44 @@ fn total_traffic(convs: &[ConvCalibration], widths: &[(u32, u32)]) -> f64 {
     convs.iter().zip(widths).map(|(c, &(w, i))| traffic_of(c, w, i)).sum()
 }
 
-/// Pure analytic planning over pre-gathered calibration statistics.
-///
-/// Deterministic: same stats + same budget + same options → same plan.
-pub fn plan_with_stats(
-    model_name: &str,
-    convs: &[ConvCalibration],
-    budget_snr_db: f64,
-    opts: &PlannerOptions,
-) -> PrecisionPlan {
+/// One applied strip of the greedy walk, with the post-strip state the
+/// budget test and the frontier need.
+#[derive(Debug, Clone, Copy)]
+struct StripStep {
+    idx: usize,
+    knob: Knob,
+    /// Predicted whole-chain NSR after applying this strip.
+    nsr: f64,
+    /// Total traffic after applying this strip.
+    traffic_bits: f64,
+}
+
+/// The full budget-independent greedy trajectory: the candidate ranking
+/// never consults the budget, so a single walk to the bottom of the
+/// width grid determines the plan for *every* budget — a tighter budget
+/// is just an earlier stop along `steps` ([`materialize_plan`]).
+#[derive(Debug, Clone)]
+struct GreedyWalk {
+    start_nsr: f64,
+    start_traffic: f64,
+    steps: Vec<StripStep>,
+}
+
+/// Walk the greedy bit-strip trajectory over `convs` all the way down:
+/// repeatedly apply the single-bit strip (one layer, weight or input
+/// side) with the best predicted-NSR-per-saved-traffic-bit score until
+/// every knob sits at `min_width`.
+fn greedy_walk(convs: &[ConvCalibration], opts: &PlannerOptions) -> GreedyWalk {
     assert!(!convs.is_empty(), "model has no conv layers to plan");
     assert!(opts.min_width >= 2 && opts.min_width <= opts.max_width);
 
     let mut widths: Vec<(u32, u32)> = vec![(opts.max_width, opts.max_width); convs.len()];
     let (_, mut cur_nsr) = predict_chain(convs, &widths);
-    let mut front = ParetoFront::new();
-    front.insert(ParetoPoint {
-        traffic_bits: total_traffic(convs, &widths),
-        predicted_snr_db: nsr_to_db(cur_nsr),
-    });
+    let mut walk = GreedyWalk {
+        start_nsr: cur_nsr,
+        start_traffic: total_traffic(convs, &widths),
+        steps: Vec::new(),
+    };
 
     loop {
         // rank every legal single-bit strip by ΔNSR per saved traffic bit
@@ -123,15 +142,45 @@ pub fn plan_with_stats(
         let Some((_, idx, knob, new_nsr, new_traffic)) = best else {
             break; // everything is at min_width
         };
-        if nsr_to_db(new_nsr) < budget_snr_db {
-            break; // the best strip would violate the budget
-        }
         match knob {
             Knob::Weight => widths[idx].0 -= 1,
             Knob::Input => widths[idx].1 -= 1,
         }
         cur_nsr = new_nsr;
-        front.insert(ParetoPoint { traffic_bits: new_traffic, predicted_snr_db: nsr_to_db(new_nsr) });
+        walk.steps.push(StripStep { idx, knob, nsr: new_nsr, traffic_bits: new_traffic });
+    }
+    walk
+}
+
+/// Replay a recorded walk up to `budget_snr_db` and build the plan at
+/// the stopping point — by construction the exact plan the pre-recorded
+/// planner produced for that budget (the stop rule, the frontier points
+/// and the final `predict_chain` all see identical f64 state).
+fn materialize_plan(
+    model_name: &str,
+    convs: &[ConvCalibration],
+    budget_snr_db: f64,
+    opts: &PlannerOptions,
+    walk: &GreedyWalk,
+) -> PrecisionPlan {
+    let mut widths: Vec<(u32, u32)> = vec![(opts.max_width, opts.max_width); convs.len()];
+    let mut front = ParetoFront::new();
+    front.insert(ParetoPoint {
+        traffic_bits: walk.start_traffic,
+        predicted_snr_db: nsr_to_db(walk.start_nsr),
+    });
+    for step in &walk.steps {
+        if nsr_to_db(step.nsr) < budget_snr_db {
+            break; // this strip would violate the budget
+        }
+        match step.knob {
+            Knob::Weight => widths[step.idx].0 -= 1,
+            Knob::Input => widths[step.idx].1 -= 1,
+        }
+        front.insert(ParetoPoint {
+            traffic_bits: step.traffic_bits,
+            predicted_snr_db: nsr_to_db(step.nsr),
+        });
     }
 
     let (per_layer_db, final_nsr) = predict_chain(convs, &widths);
@@ -158,6 +207,18 @@ pub fn plan_with_stats(
         measured_snr_db: f64::NAN,
         frontier: front.into_sorted(),
     }
+}
+
+/// Pure analytic planning over pre-gathered calibration statistics.
+///
+/// Deterministic: same stats + same budget + same options → same plan.
+pub fn plan_with_stats(
+    model_name: &str,
+    convs: &[ConvCalibration],
+    budget_snr_db: f64,
+    opts: &PlannerOptions,
+) -> PrecisionPlan {
+    materialize_plan(model_name, convs, budget_snr_db, opts, &greedy_walk(convs, opts))
 }
 
 /// Gather calibration statistics for `model` over `calib` images.
@@ -200,16 +261,21 @@ pub fn uniform_predicted_snr_db(convs: &[ConvCalibration], width: u32) -> f64 {
 /// order). Because the greedy walk is budget-monotone (tested below), the
 /// lane plans nest: a safer lane never carries fewer bits on any layer,
 /// so a telemetry hot-swap to the next-safer plan is always a widening.
+/// The greedy trajectory is budget-independent, so the walk runs
+/// **once**; the full-frontier chart and every lane plan are then
+/// materialized from the recorded trajectory at replay cost (`k+1`
+/// `predict_chain` calls instead of `k+1` full walks).
 pub fn plan_lane_set(
     model_name: &str,
     convs: &[ConvCalibration],
     k: usize,
     opts: &PlannerOptions,
 ) -> Vec<PrecisionPlan> {
-    let full = plan_with_stats(model_name, convs, f64::NEG_INFINITY, opts);
+    let walk = greedy_walk(convs, opts);
+    let full = materialize_plan(model_name, convs, f64::NEG_INFINITY, opts, &walk);
     super::pareto::select_lane_points(&full.frontier, k)
         .iter()
-        .map(|p| plan_with_stats(model_name, convs, p.predicted_snr_db, opts))
+        .map(|p| materialize_plan(model_name, convs, p.predicted_snr_db, opts, &walk))
         .collect()
 }
 
@@ -241,7 +307,9 @@ pub fn autotune_with_stats(
     opts: &PlannerOptions,
 ) -> PrecisionPlan {
     let mut margin = 0.0f64;
-    let mut plan = plan_with_stats(&model.name, convs, budget_snr_db, opts);
+    // one budget-independent walk reused by every refinement round
+    let walk = greedy_walk(convs, opts);
+    let mut plan = materialize_plan(&model.name, convs, budget_snr_db, opts, &walk);
     // one weight cache across all refinement candidates: layers whose
     // widths survive from round to round are never re-quantized
     let mut wcache = crate::nn::prepared::WeightCache::default();
@@ -257,7 +325,7 @@ pub fn autotune_with_stats(
             break; // budget met (within measurement noise) or out of rounds
         }
         margin += deficit + 0.25;
-        let stricter = plan_with_stats(&model.name, convs, budget_snr_db + margin, opts);
+        let stricter = materialize_plan(&model.name, convs, budget_snr_db + margin, opts, &walk);
         let unchanged = stricter
             .layers
             .iter()
@@ -383,6 +451,27 @@ mod tests {
                 "lane predicts {} under budget {b}",
                 lane.predicted_snr_db
             );
+        }
+    }
+
+    /// The single-walk lane-set path must produce exactly the plans a
+    /// fresh per-budget walk produces — widths, predictions and frontier
+    /// bit-for-bit (the recorded trajectory is budget-independent).
+    #[test]
+    fn lane_set_single_walk_matches_per_budget_plans() {
+        let convs = stats();
+        let opts = PlannerOptions::default();
+        let lanes = plan_lane_set("lenet", &convs, 3, &opts);
+        assert!(!lanes.is_empty());
+        for lane in &lanes {
+            let fresh = plan_with_stats("lenet", &convs, lane.budget_snr_db, &opts);
+            assert_eq!(plan_key(lane), plan_key(&fresh));
+            assert_eq!(lane.predicted_snr_db.to_bits(), fresh.predicted_snr_db.to_bits());
+            assert_eq!(lane.frontier.len(), fresh.frontier.len());
+            for (a, b) in lane.frontier.iter().zip(&fresh.frontier) {
+                assert_eq!(a.traffic_bits.to_bits(), b.traffic_bits.to_bits());
+                assert_eq!(a.predicted_snr_db.to_bits(), b.predicted_snr_db.to_bits());
+            }
         }
     }
 

@@ -22,7 +22,7 @@ impl BfpBlock {
     /// An all-zero block of length `n` (exponent is a don't-care; we pin it
     /// to the minimum so the scale underflows to zero consistently).
     pub fn zeros(n: usize, fmt: BfpFormat) -> Self {
-        Self { exponent: i32::MIN / 2, frac_bits: fmt.frac_bits(), mantissas: vec![0; n] }
+        Self { exponent: super::format::ZERO_EXP, frac_bits: fmt.frac_bits(), mantissas: vec![0; n] }
     }
 
     /// Number of elements in the block.

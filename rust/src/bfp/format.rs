@@ -15,6 +15,18 @@
 //! with `Lm = frac_bits`.
 
 
+/// Block-exponent sentinel for an all-zero block (no finite nonzero
+/// value → no exponent). One definition shared by every quantization and
+/// GEMM path so the zero-block bit-equality between the naive and tiled
+/// kernels can never drift.
+pub(crate) const ZERO_EXP: i32 = i32::MIN / 2;
+
+/// Exponents at or below this floor are treated as all-zero markers by
+/// the GEMM rescale steps (strictly between valid exponents and
+/// [`ZERO_EXP`], so sums of a valid exponent with a sentinel still land
+/// below it).
+pub(crate) const ZERO_EXP_FLOOR: i32 = i32::MIN / 4;
+
 /// Rounding mode applied to the bits shifted out during block formatting.
 ///
 /// §3.1: truncation produces DC (biased) errors that accumulate layer by

@@ -11,10 +11,56 @@
 //! [`crate::quant::widths`] plans those widths; this module picks an
 //! `i32` or `i64` accumulator lane accordingly and the result is bit-exact
 //! against an arbitrary-precision reference (see the proptests).
+//!
+//! The serving hot path runs the cache-blocked microkernel in
+//! [`crate::bfp::kernel`]; the row-at-a-time ikj kernels here are
+//! retained as the bit-exact reference the tiled kernel is tested
+//! against (`rust/tests/tiled_kernel.rs`), and still serve the
+//! instrumentation paths that want plain [`BfpMatrix`] operands.
 
 use super::format::exp2i64;
 use super::partition::{BfpMatrix, BlockAxis};
 use crate::runtime::pool;
+use std::sync::Mutex;
+
+/// Reusable accumulator rows for the row-panel kernels below. Each
+/// worker checks one set out per panel and returns it after; the pool
+/// grows to the peak worker count (capped) and then stops allocating,
+/// where the accumulators used to be allocated fresh inside every panel
+/// closure of every GEMM call. (A process-wide pool, not a thread-local:
+/// the scoped pool spawns fresh OS threads per parallel region, so
+/// thread-locals would never be revisited.)
+#[derive(Default)]
+pub(crate) struct PanelAcc {
+    f32v: Vec<f32>,
+    f64v: Vec<f64>,
+    i32v: Vec<i32>,
+    i64v: Vec<i64>,
+}
+
+static PANEL_ACC_POOL: Mutex<Vec<PanelAcc>> = Mutex::new(Vec::new());
+
+fn take_panel_acc() -> PanelAcc {
+    PANEL_ACC_POOL.lock().map(|mut p| p.pop().unwrap_or_default()).unwrap_or_default()
+}
+
+fn put_panel_acc(acc: PanelAcc) {
+    if let Ok(mut p) = PANEL_ACC_POOL.lock() {
+        // idle sets are bounded by the pool's own thread cap
+        if p.len() < 64 {
+            p.push(acc);
+        }
+    }
+}
+
+/// Grow-only view: resize to at least `n` and hand back the `n` prefix.
+/// Contents are stale from previous use; callers fully overwrite.
+fn grown<T: Copy + Default>(v: &mut Vec<T>, n: usize) -> &mut [T] {
+    if v.len() < n {
+        v.resize(n, T::default());
+    }
+    &mut v[..n]
+}
 
 /// Result of a BFP GEMM: f32 output plus the bookkeeping the error
 /// analysis wants (block exponents actually used).
@@ -66,6 +112,48 @@ pub fn f32_lane_chunk(w_frac_bits: i32, i_frac_bits: i32) -> Option<usize> {
     (chunk >= 32).then_some(chunk)
 }
 
+/// Which exact accumulator lane a `(L_W, L_I, K)` combination runs.
+/// **The single dispatch rule**: this naive reference kernel
+/// ([`bfp_gemm_into_prepared`]) and the tiled microkernel
+/// ([`crate::bfp::kernel::gemm_tiled`]) both match on [`select_lane`],
+/// so the reference always exercises the lane that ships.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Integer-valued f32 mantissa MACs, exact in segments of `chunk`
+    /// products, accumulated across segments in f64.
+    F32 {
+        /// Maximum exact f32 accumulation segment length.
+        chunk: usize,
+    },
+    /// Plain i32 multiply-accumulate (acc width ≤ 31 bits).
+    I32,
+    /// Widening i64 multiply-accumulate.
+    I64,
+}
+
+impl Lane {
+    /// Does this lane consume f32-materialised mantissa panels?
+    pub fn is_f32(self) -> bool {
+        matches!(self, Lane::F32 { .. })
+    }
+}
+
+/// Pick the accumulator lane for fractional widths and inner dimension
+/// `k` — §3.4: products need `l_w + l_i + 2` bits, accumulation adds
+/// `⌊log2 K⌋ + 1`.
+pub fn select_lane(w_frac_bits: i32, i_frac_bits: i32, k: usize) -> Lane {
+    if let Some(chunk) = f32_lane_chunk(w_frac_bits, i_frac_bits) {
+        return Lane::F32 { chunk };
+    }
+    let prod_bits = (w_frac_bits + 1) + (i_frac_bits + 1) + 1;
+    let acc_bits = prod_bits + (usize::BITS - k.leading_zeros()) as i32;
+    if acc_bits <= 31 {
+        Lane::I32
+    } else {
+        Lane::I64
+    }
+}
+
 /// Materialise a matrix's integer mantissas as exact f32 values — the
 /// "packed panel" a [`crate::nn::prepared::PreparedModel`] caches per
 /// conv layer so the hot loop never re-converts static weights.
@@ -102,22 +190,18 @@ pub fn bfp_gemm_into_prepared(
     let (m, k, n) = (w.rows, w.cols, i.cols);
     assert_eq!(out.len(), m * n);
 
-    // §3.4 width plan: products fit in lw+li+2 bits, sums add ⌊log2 K⌋.
-    // Mantissa magnitudes are < 2^(frac_bits+1).
-    let prod_bits = (w.frac_bits + 1) + (i.frac_bits + 1) + 1;
-    let acc_bits = prod_bits + (usize::BITS - k.leading_zeros()) as i32;
-    // Fast path (§Perf): integer-valued f32 mantissa GEMM. A product of
-    // two mantissas is ≤ 2^(prod_bits-1) and stays exact in f32; partial
-    // sums over a K-chunk stay exact while they remain ≤ 2^24; chunk sums
-    // are then accumulated in f64 (integers exact to 2^53). FMA-friendly
-    // f32 lanes beat the i32 multiply (vpmulld) substantially — see
-    // EXPERIMENTS.md §Perf — while remaining bit-exact.
-    if let Some(chunk) = f32_lane_chunk(w.frac_bits, i.frac_bits) {
-        gemm_f32_mantissa(w, w_packed, i, out, m, k, n, chunk, scratch);
-    } else if acc_bits <= 31 {
-        gemm_lanes::<i32>(w, i, out, m, k, n);
-    } else {
-        gemm_lanes::<i64>(w, i, out, m, k, n);
+    // §3.4 width plan via the shared lane rule ([`select_lane`]). The
+    // f32 fast path (§Perf) runs integer-valued f32 mantissa MACs: a
+    // product of two mantissas is ≤ 2^(prod_bits-1) and stays exact in
+    // f32; partial sums over a K-chunk stay exact while they remain
+    // ≤ 2^24; chunk sums are then accumulated in f64 (integers exact to
+    // 2^53). FMA-friendly f32 lanes beat the i32 multiply (vpmulld)
+    // substantially — see EXPERIMENTS.md §Perf — while remaining
+    // bit-exact.
+    match select_lane(w.frac_bits, i.frac_bits, k) {
+        Lane::F32 { chunk } => gemm_f32_mantissa(w, w_packed, i, out, m, k, n, chunk, scratch),
+        Lane::I32 => gemm_lanes::<i32>(w, i, out, m, k, n),
+        Lane::I64 => gemm_lanes::<i64>(w, i, out, m, k, n),
     }
 }
 
@@ -141,7 +225,7 @@ fn gemm_f32_mantissa(
     chunk: usize,
     scratch: &mut GemmScratch,
 ) {
-    let zero_exp_floor = i32::MIN / 4;
+    let zero_exp_floor = super::format::ZERO_EXP_FLOOR;
     pack_into(&i.mantissas, &mut scratch.if_);
     if w_packed.is_none() {
         pack_into(&w.mantissas, &mut scratch.wf);
@@ -156,8 +240,10 @@ fn gemm_f32_mantissa(
     let if_: &[f32] = &scratch.if_;
     let single_chunk = k <= chunk;
     pool::parallel_row_panels(out, m, n, k.saturating_mul(n), |r0, panel| {
-        let mut acc32 = vec![0f32; n];
-        let mut acc64 = vec![0f64; if single_chunk { 0 } else { n }];
+        let mut panel_acc = take_panel_acc();
+        let PanelAcc { f32v, f64v, .. } = &mut panel_acc;
+        let acc32 = grown(f32v, n);
+        let acc64 = grown(f64v, if single_chunk { 0 } else { n });
         for (pr, orow) in panel.chunks_mut(n).enumerate() {
             let r = r0 + pr;
             let wrow = &wf[r * k..(r + 1) * k];
@@ -189,7 +275,7 @@ fn gemm_f32_mantissa(
                             *a += wv * iv;
                         }
                     }
-                    for (a64, &a32) in acc64.iter_mut().zip(&acc32) {
+                    for (a64, &a32) in acc64.iter_mut().zip(acc32.iter()) {
                         *a64 += a32 as f64;
                     }
                     k0 = k1;
@@ -213,11 +299,11 @@ fn gemm_f32_mantissa(
                     }
                     let scale = exp2i64(we + ie - w.frac_bits - i.frac_bits);
                     if single_chunk {
-                        for (o, &a) in orow.iter_mut().zip(&acc32) {
+                        for (o, &a) in orow.iter_mut().zip(acc32.iter()) {
                             *o = (a as f64 * scale) as f32;
                         }
                     } else {
-                        for (o, &a) in orow.iter_mut().zip(&acc64) {
+                        for (o, &a) in orow.iter_mut().zip(acc64.iter()) {
                             *o = (a * scale) as f32;
                         }
                     }
@@ -235,13 +321,17 @@ fn gemm_f32_mantissa(
                 BlockAxis::PerRow => unreachable!(),
             }
         }
+        put_panel_acc(panel_acc);
     });
 }
 
-/// Integer accumulator lane abstraction (i32 fast path / i64 wide path).
-trait AccLane: Copy + Default + Send + Sync + std::ops::AddAssign {
+/// Integer accumulator lane abstraction (i32 fast path / i64 wide path),
+/// shared with the tiled microkernel in [`crate::bfp::kernel`].
+pub(crate) trait AccLane: Copy + Default + Send + Sync + std::ops::AddAssign {
     fn mul(a: i32, b: i32) -> Self;
     fn to_f64(self) -> f64;
+    /// This lane's per-worker accumulator row from the scratch set.
+    fn panel_scratch(acc: &mut PanelAcc, n: usize) -> &mut [Self];
 }
 impl AccLane for i32 {
     #[inline(always)]
@@ -251,6 +341,9 @@ impl AccLane for i32 {
     #[inline(always)]
     fn to_f64(self) -> f64 {
         self as f64
+    }
+    fn panel_scratch(acc: &mut PanelAcc, n: usize) -> &mut [Self] {
+        grown(&mut acc.i32v, n)
     }
 }
 impl AccLane for i64 {
@@ -262,15 +355,19 @@ impl AccLane for i64 {
     fn to_f64(self) -> f64 {
         self as f64
     }
+    fn panel_scratch(acc: &mut PanelAcc, n: usize) -> &mut [Self] {
+        grown(&mut acc.i64v, n)
+    }
 }
 
 fn gemm_lanes<A: AccLane>(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32], m: usize, k: usize, n: usize) {
-    let zero_exp_floor = i32::MIN / 4;
+    let zero_exp_floor = super::format::ZERO_EXP_FLOOR;
     // Accumulate one output row at a time in integer lanes (ikj order —
     // streams through I row-major, vectorizes the inner j loop). Rows are
     // independent, so panels parallelize with bit-identical results.
     pool::parallel_row_panels(out, m, n, k.saturating_mul(n), |r0, panel| {
-        let mut acc: Vec<A> = vec![A::default(); n];
+        let mut panel_acc = take_panel_acc();
+        let acc: &mut [A] = A::panel_scratch(&mut panel_acc, n);
         for (pr, orow) in panel.chunks_mut(n).enumerate() {
             let r = r0 + pr;
             for a in acc.iter_mut() {
@@ -307,12 +404,12 @@ fn gemm_lanes<A: AccLane>(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32], m: usiz
                         continue;
                     }
                     let scale = exp2i64(we + ie - w.frac_bits - i.frac_bits);
-                    for (o, a) in orow.iter_mut().zip(&acc) {
+                    for (o, a) in orow.iter_mut().zip(acc.iter()) {
                         *o = (a.to_f64() * scale) as f32;
                     }
                 }
                 BlockAxis::PerCol => {
-                    for ((o, a), &ie) in orow.iter_mut().zip(&acc).zip(&i.exponents) {
+                    for ((o, a), &ie) in orow.iter_mut().zip(acc.iter()).zip(&i.exponents) {
                         *o = if ie <= zero_exp_floor {
                             0.0
                         } else {
@@ -323,6 +420,7 @@ fn gemm_lanes<A: AccLane>(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32], m: usiz
                 BlockAxis::PerRow => unreachable!(),
             }
         }
+        put_panel_acc(panel_acc);
     });
 }
 

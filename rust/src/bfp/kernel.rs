@@ -1,0 +1,691 @@
+//! Cache-blocked, register-tiled BFP GEMM microkernel with a fused
+//! im2col→quantize→pack activation pipeline — the serving hot path.
+//!
+//! ## Why re-tiling is free (bit-exactly)
+//!
+//! The §3.4 width plan makes every lane's arithmetic *exact*: products
+//! fit the multiplier, chunk sums stay below 2^24 in the f32 lane, and
+//! integer/f64 accumulation is exact to the accumulator width. Sums of
+//! exactly-representable values are associative, so **any** re-tiling of
+//! the reduction produces bit-identical output to the naive ikj loop in
+//! [`crate::bfp::gemm`] — the only constraint is that each f32-lane
+//! accumulation segment spans at most [`crate::bfp::gemm::f32_lane_chunk`]
+//! products. That retained naive kernel is the test reference
+//! (`rust/tests/tiled_kernel.rs` sweeps the scheme × width × thread
+//! matrix).
+//!
+//! ## Structure
+//!
+//! * **Packing.** Weights are packed once into `MR`-row panels, K-major
+//!   ([`pack_weights_f32`] / [`pack_weights_i32`]; cached per layer by
+//!   [`crate::nn::prepared::WeightCache`]). Activations are packed into
+//!   `NR`-column panels ([`ActPanels`]) — by [`ActPanels::pack_im2col`]
+//!   on the conv path, which emits `NC`-wide im2col tiles
+//!   ([`crate::tensor::im2col::im2col_tile`]) and quantizes them
+//!   **directly into the panels**: the full `K×N` f32 column buffer, the
+//!   intermediate `K×N` i32 mantissa matrix and the separate i32→f32
+//!   repack pass of the naive pipeline all disappear (per-image staging
+//!   shrinks from ~3·K·N to one K·NC tile plus the packed operand).
+//! * **Microkernel.** An `MR×NR` register accumulator block streams both
+//!   panels K-major. The f32 lane accumulates `KC ≤ chunk` segments in
+//!   f32 and flushes each segment into an f64 accumulator (both steps
+//!   exact); the integer lanes accumulate straight through K.
+//! * **Blocking & parallelism.** Output is carved into `MC×NC` tiles,
+//!   distributed in 2D over the [`pool`] workers
+//!   ([`crate::runtime::pool::parallel_tasks`]); inside a tile, an
+//!   `NR`-panel's B strip (`K·NR` elements, L1-resident) is reused
+//!   across all `MC/MR` weight panels. Each task owns a disjoint output
+//!   tile and every tile's value is exact, so output is bit-identical
+//!   for every thread count and task schedule.
+
+use super::format::{exp2i, exp2i64, exponent_of, round_half_away, round_stochastic, BfpFormat, Rounding};
+use super::gemm::AccLane;
+use super::partition::{BfpMatrix, BlockAxis};
+// The lane dispatch rule is owned by the naive reference kernel so both
+// kernels can never disagree on which accumulator runs a config.
+pub use super::gemm::{select_lane, Lane};
+use crate::runtime::pool;
+use crate::tensor::im2col::{im2col_tile, im2col_whole_exponent, Conv2dGeometry};
+
+/// Register-tile rows (weight panel height).
+pub const MR: usize = 4;
+/// Register-tile columns (activation panel width).
+pub const NR: usize = 8;
+/// Output rows per parallel task block.
+pub const MC: usize = 64;
+/// Output columns per parallel task block — also the fused pipeline's
+/// im2col tile width.
+pub const NC: usize = 256;
+/// K-segment length for the f32 lane's chunked accumulation (clamped to
+/// the exactness chunk at runtime); integer lanes stream the full K.
+pub const KC: usize = 512;
+
+const _: () = assert!(MC % MR == 0 && NC % NR == 0, "blocks must tile evenly into register tiles");
+
+use super::format::{ZERO_EXP, ZERO_EXP_FLOOR};
+
+/// Weight mantissas packed into `MR`-row panels for the microkernel,
+/// in the representation the selected lane consumes.
+#[derive(Debug, Clone, Copy)]
+pub enum WeightPanels<'a> {
+    /// f32-materialised panels (the [`Lane::F32`] fast lane).
+    F32(&'a [f32]),
+    /// Raw i32 mantissa panels (both integer lanes).
+    Int(&'a [i32]),
+}
+
+/// Length of a packed weight-panel buffer for an `m×k` matrix.
+pub fn weight_panels_len(m: usize, k: usize) -> usize {
+    m.div_ceil(MR) * MR * k
+}
+
+/// Pack an `M×K` weight matrix into `MR`-row panels, K-major within each
+/// panel (`data[p·K·MR + kk·MR + r] = W[p·MR + r, kk]`), elements mapped
+/// through `conv`. Rows past `M` pad with zero mantissas — zero products
+/// leave every exact sum unchanged, so padded tails cost a few MACs but
+/// never a bit.
+fn pack_weights<T: Copy + Default>(w: &BfpMatrix, conv: impl Fn(i32) -> T) -> Vec<T> {
+    assert!(!matches!(w.axis, BlockAxis::PerCol), "weight matrix must be blocked Whole or PerRow");
+    let (m, k) = (w.rows, w.cols);
+    let mut out = vec![T::default(); weight_panels_len(m, k)];
+    for p in 0..m.div_ceil(MR) {
+        let base = p * k * MR;
+        for kk in 0..k {
+            for r in 0..MR.min(m - p * MR) {
+                out[base + kk * MR + r] = conv(w.mantissas[(p * MR + r) * k + kk]);
+            }
+        }
+    }
+    out
+}
+
+/// [`pack_weights`] with the mantissas materialised as exact f32 (the
+/// [`Lane::F32`] fast lane).
+pub fn pack_weights_f32(w: &BfpMatrix) -> Vec<f32> {
+    pack_weights(w, |v| v as f32)
+}
+
+/// [`pack_weights`] keeping the mantissas as i32 (integer lanes).
+pub fn pack_weights_i32(w: &BfpMatrix) -> Vec<i32> {
+    pack_weights(w, |v| v)
+}
+
+/// Quantized activations packed into `NR`-column panels, K-major within
+/// each panel (`data[q·K·NR + kk·NR + j] = I'[kk, q·NR + j]`), with the
+/// block exponents the rescale step needs. Buffers only grow (workspace
+/// semantics): every slot of the active region — including column
+/// padding — is rewritten on each pack, so reuse never leaks state.
+#[derive(Debug, Default)]
+pub struct ActPanels {
+    k: usize,
+    n: usize,
+    axis: BlockAxis,
+    frac_bits: i32,
+    lane_f32: bool,
+    /// `[ε]` for `Whole`, `[ε_0 … ε_{n-1}]` for `PerCol` (`ZERO_EXP`
+    /// marks an all-zero block, as in [`BfpMatrix`]).
+    exponents: Vec<i32>,
+    f32_data: Vec<f32>,
+    i32_data: Vec<i32>,
+    // per-tile scratch for the PerCol exponent scan
+    col_max_bits: Vec<u32>,
+    col_inv_steps: Vec<f32>,
+}
+
+impl ActPanels {
+    /// An empty panel set; buffers grow on first pack.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Logical inner dimension `K`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical column count `N`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Block axis of the packed operand.
+    pub fn axis(&self) -> BlockAxis {
+        self.axis
+    }
+
+    /// Fractional mantissa bits of the packed operand.
+    pub fn frac_bits(&self) -> i32 {
+        self.frac_bits
+    }
+
+    /// Block exponents (layout per [`ActPanels::exponents`] docs).
+    pub fn exponents(&self) -> &[i32] {
+        &self.exponents
+    }
+
+    /// High-water mark of the packed-panel buffers, in elements.
+    pub fn capacity(&self) -> usize {
+        self.f32_data.len().max(self.i32_data.len())
+    }
+
+    /// Elements the current `(k, n)` shape occupies in the panel buffer
+    /// (columns padded up to `NR`).
+    pub fn active_len(&self) -> usize {
+        self.n.div_ceil(NR) * self.k * NR
+    }
+
+    /// Active f32 panel data (empty when packed for an integer lane) —
+    /// equality checks in the bit-exactness tests.
+    pub fn f32_panels(&self) -> &[f32] {
+        if self.lane_f32 {
+            &self.f32_data[..self.active_len()]
+        } else {
+            &[]
+        }
+    }
+
+    /// Active i32 panel data (empty when packed for the f32 lane).
+    pub fn i32_panels(&self) -> &[i32] {
+        if self.lane_f32 {
+            &[]
+        } else {
+            &self.i32_data[..self.active_len()]
+        }
+    }
+
+    fn begin(&mut self, k: usize, n: usize, axis: BlockAxis, frac_bits: i32, lane: Lane) {
+        assert!(!matches!(axis, BlockAxis::PerRow), "activations must be blocked Whole or PerCol");
+        self.k = k;
+        self.n = n;
+        self.axis = axis;
+        self.frac_bits = frac_bits;
+        self.lane_f32 = lane.is_f32();
+        self.exponents.clear();
+        let len = self.active_len();
+        if self.lane_f32 {
+            if self.f32_data.len() < len {
+                self.f32_data.resize(len, 0.0);
+            }
+        } else if self.i32_data.len() < len {
+            self.i32_data.resize(len, 0);
+        }
+    }
+
+    /// Pack an already-quantized matrix (the unfused / reference path,
+    /// and non-conv GEMM callers).
+    pub fn pack_matrix(&mut self, i: &BfpMatrix, lane: Lane) {
+        self.begin(i.rows, i.cols, i.axis, i.frac_bits, lane);
+        self.exponents.extend_from_slice(&i.exponents);
+        let (k, n) = (self.k, self.n);
+        for q in 0..n.div_ceil(NR) {
+            let base = q * k * NR;
+            let jw = NR.min(n - q * NR);
+            for kk in 0..k {
+                let src = &i.mantissas[kk * n + q * NR..kk * n + q * NR + jw];
+                let off = base + kk * NR;
+                if self.lane_f32 {
+                    let dst = &mut self.f32_data[off..off + NR];
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d = v as f32;
+                    }
+                    dst[jw..].fill(0.0);
+                } else {
+                    let dst = &mut self.i32_data[off..off + NR];
+                    dst[..jw].copy_from_slice(src);
+                    dst[jw..].fill(0);
+                }
+            }
+        }
+    }
+
+    /// The fused conv pipeline: expand one image into `NC`-wide im2col
+    /// tiles, exponent-scan and quantize each tile, and write the
+    /// mantissas straight into packed panels. Produces exponents and
+    /// mantissas bit-identical to
+    /// `im2col → BfpMatrix::requantize → pack_matrix` (tested in
+    /// `tests/tiled_kernel.rs`) without ever holding the `K×N` matrix:
+    /// `tile` is the only staging buffer and never exceeds `K×NC`.
+    pub fn pack_im2col(
+        &mut self,
+        img: &[f32],
+        geo: &Conv2dGeometry,
+        fmt: BfpFormat,
+        axis: BlockAxis,
+        lane: Lane,
+        tile: &mut Vec<f32>,
+    ) {
+        let (k, n) = (geo.k(), geo.n());
+        self.begin(k, n, axis, fmt.frac_bits(), lane);
+        let max_m = fmt.max_mantissa();
+        match axis {
+            BlockAxis::Whole => {
+                // the Whole-axis exponent is known from the source image
+                // before any tile exists (coverage scan) — the global
+                // data dependency that would otherwise force two passes
+                let eps = im2col_whole_exponent(img, geo).unwrap_or(ZERO_EXP);
+                self.exponents.push(eps);
+                if eps == ZERO_EXP {
+                    let len = self.active_len();
+                    if self.lane_f32 {
+                        self.f32_data[..len].fill(0.0);
+                    } else {
+                        self.i32_data[..len].fill(0);
+                    }
+                    return;
+                }
+                let inv = exp2i(self.frac_bits - eps);
+                self.for_each_tile(img, geo, tile, |this, tile, c0, cw| {
+                    this.fill_block(tile, c0, cw, |_| inv, max_m, fmt.rounding);
+                });
+            }
+            BlockAxis::PerCol => {
+                self.exponents.resize(n, ZERO_EXP);
+                let frac = self.frac_bits;
+                self.for_each_tile(img, geo, tile, |this, tile, c0, cw| {
+                    // per-column max-|bits| scan of the tile — each
+                    // column is fully contained in its tile, so the
+                    // eq. (3)/(5) exponents are tile-local
+                    this.col_max_bits.clear();
+                    this.col_max_bits.resize(cw, 0);
+                    for kk in 0..this.k {
+                        let row = &tile[kk * cw..(kk + 1) * cw];
+                        for (mb, &v) in this.col_max_bits.iter_mut().zip(row) {
+                            if v.is_finite() {
+                                let b = v.to_bits() & 0x7FFF_FFFF;
+                                if b > *mb {
+                                    *mb = b;
+                                }
+                            }
+                        }
+                    }
+                    this.col_inv_steps.clear();
+                    this.col_inv_steps.resize(cw, 0.0);
+                    for j in 0..cw {
+                        if this.col_max_bits[j] != 0 {
+                            let e = exponent_of(f32::from_bits(this.col_max_bits[j])).unwrap();
+                            this.exponents[c0 + j] = e;
+                            this.col_inv_steps[j] = exp2i(frac - e);
+                        }
+                    }
+                    let inv_steps = std::mem::take(&mut this.col_inv_steps);
+                    this.fill_block(tile, c0, cw, |j| inv_steps[j], max_m, fmt.rounding);
+                    this.col_inv_steps = inv_steps;
+                });
+            }
+            BlockAxis::PerRow => unreachable!("rejected by begin()"),
+        }
+    }
+
+    /// Drive `f` over the image's im2col tiles (`NC` columns at a time).
+    fn for_each_tile(
+        &mut self,
+        img: &[f32],
+        geo: &Conv2dGeometry,
+        tile: &mut Vec<f32>,
+        mut f: impl FnMut(&mut Self, &[f32], usize, usize),
+    ) {
+        let (k, n) = (self.k, self.n);
+        let mut c0 = 0usize;
+        while c0 < n {
+            let cw = NC.min(n - c0);
+            if tile.len() < k * cw {
+                tile.resize(k * cw, 0.0);
+            }
+            im2col_tile(img, geo, c0, cw, &mut tile[..k * cw]);
+            f(self, &tile[..k * cw], c0, cw);
+            c0 += cw;
+        }
+    }
+
+    /// Quantize one staged tile (columns `[c0, c0+cw)`, row-major
+    /// `K×cw`) into the packed panels. `inv(j)` is the column's exact
+    /// `1/Δ` (0.0 for all-zero blocks, reproducing the naive path's
+    /// `0·x` mantissas bit-for-bit, NaN inputs included).
+    fn fill_block(
+        &mut self,
+        tile: &[f32],
+        c0: usize,
+        cw: usize,
+        inv: impl Fn(usize) -> f32 + Copy,
+        max_m: i32,
+        rounding: Rounding,
+    ) {
+        match rounding {
+            Rounding::Nearest => self.fill_rounded(tile, c0, cw, inv, max_m, round_half_away),
+            Rounding::Truncate => self.fill_rounded(tile, c0, cw, inv, max_m, |x: f32| x.trunc()),
+            Rounding::Stochastic => self.fill_rounded(tile, c0, cw, inv, max_m, round_stochastic),
+        }
+    }
+
+    fn fill_rounded(
+        &mut self,
+        tile: &[f32],
+        c0: usize,
+        cw: usize,
+        inv: impl Fn(usize) -> f32 + Copy,
+        max_m: i32,
+        round: impl Fn(f32) -> f32 + Copy,
+    ) {
+        debug_assert_eq!(c0 % NR, 0, "tiles start on a panel boundary (NC is a multiple of NR)");
+        let k = self.k;
+        let mut lj0 = 0usize;
+        while lj0 < cw {
+            let q = (c0 + lj0) / NR;
+            let jw = NR.min(cw - lj0);
+            let base = q * k * NR;
+            for kk in 0..k {
+                let src = &tile[kk * cw + lj0..kk * cw + lj0 + jw];
+                let off = base + kk * NR;
+                if self.lane_f32 {
+                    let dst = &mut self.f32_data[off..off + NR];
+                    for jj in 0..jw {
+                        let qv = (round(src[jj] * inv(lj0 + jj)) as i32).clamp(-max_m, max_m);
+                        dst[jj] = qv as f32;
+                    }
+                    dst[jw..].fill(0.0);
+                } else {
+                    let dst = &mut self.i32_data[off..off + NR];
+                    for jj in 0..jw {
+                        dst[jj] = (round(src[jj] * inv(lj0 + jj)) as i32).clamp(-max_m, max_m);
+                    }
+                    dst[jw..].fill(0);
+                }
+            }
+            lj0 += NR;
+        }
+    }
+}
+
+/// The tiled fixed-point GEMM `O = W'·I'` over packed operands. Output
+/// is bit-identical to [`crate::bfp::gemm::bfp_gemm`] on the same
+/// quantized matrices (see the module docs for why), at every thread
+/// count.
+pub fn gemm_tiled(w: &BfpMatrix, panels: WeightPanels<'_>, acts: &ActPanels, out: &mut [f32]) {
+    let (m, k, n) = (w.rows, w.cols, acts.n);
+    assert_eq!(k, acts.k, "GEMM inner dimension mismatch");
+    assert_eq!(out.len(), m * n, "output buffer shape mismatch");
+    assert!(!matches!(w.axis, BlockAxis::PerCol), "weight matrix must be blocked Whole or PerRow");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let lane = select_lane(w.frac_bits, acts.frac_bits, k);
+    let panels_len = weight_panels_len(m, k);
+    match panels {
+        WeightPanels::F32(p) => {
+            assert!(lane.is_f32(), "f32 weight panels but lane {lane:?} selected");
+            assert_eq!(p.len(), panels_len, "weight panel shape mismatch");
+        }
+        WeightPanels::Int(p) => {
+            assert!(!lane.is_f32(), "i32 weight panels but lane {lane:?} selected");
+            assert_eq!(p.len(), panels_len, "weight panel shape mismatch");
+        }
+    }
+    assert_eq!(acts.lane_f32, lane.is_f32(), "activation panels packed for the wrong lane");
+
+    let nblocks = n.div_ceil(NC);
+    let tasks = m.div_ceil(MC) * nblocks;
+    let outp = OutPtr(out.as_mut_ptr());
+    let work = m.saturating_mul(k).saturating_mul(n);
+    pool::parallel_tasks(tasks, work, |t| {
+        let (mb, nb) = (t / nblocks, t % nblocks);
+        let (r0, r1) = (mb * MC, ((mb + 1) * MC).min(m));
+        let (c0, c1) = (nb * NC, ((nb + 1) * NC).min(n));
+        // SAFETY: each task writes only rows [r0, r1) × cols [c0, c1) of
+        // `out`; the task grid tiles the output disjointly.
+        match (lane, panels) {
+            (Lane::F32 { chunk }, WeightPanels::F32(wp)) => unsafe {
+                block_f32(w, wp, acts, outp, r0, r1, c0, c1, chunk)
+            },
+            (Lane::I32, WeightPanels::Int(wp)) => unsafe { block_int::<i32>(w, wp, acts, outp, r0, r1, c0, c1) },
+            (Lane::I64, WeightPanels::Int(wp)) => unsafe { block_int::<i64>(w, wp, acts, outp, r0, r1, c0, c1) },
+            _ => unreachable!("panel kind verified against lane above"),
+        }
+    });
+}
+
+/// Convenience wrapper packing both operands and running [`gemm_tiled`]
+/// (tests, benches, the per-call conv path).
+pub fn bfp_gemm_tiled(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32]) {
+    let lane = select_lane(w.frac_bits, i.frac_bits, w.cols);
+    let mut acts = ActPanels::new();
+    acts.pack_matrix(i, lane);
+    if lane.is_f32() {
+        gemm_tiled(w, WeightPanels::F32(&pack_weights_f32(w)), &acts, out);
+    } else {
+        gemm_tiled(w, WeightPanels::Int(&pack_weights_i32(w)), &acts, out);
+    }
+}
+
+/// Raw output pointer shared across tile tasks (each task writes a
+/// disjoint tile — see the SAFETY note at the spawn site).
+#[derive(Clone, Copy)]
+struct OutPtr(*mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// f32-lane block: `MR×NR` register tiles, `KC`-segmented (≤ `chunk`)
+/// f32 accumulation flushed into f64 per segment — the exact mirror of
+/// the naive lane's chunked reduction, re-associated.
+#[allow(clippy::too_many_arguments)]
+unsafe fn block_f32(
+    w: &BfpMatrix,
+    wp: &[f32],
+    acts: &ActPanels,
+    out: OutPtr,
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+    chunk: usize,
+) {
+    let k = w.cols;
+    let kc = KC.min(chunk);
+    for q in (c0 / NR)..c1.div_ceil(NR) {
+        let bpanel = &acts.f32_data[q * k * NR..(q + 1) * k * NR];
+        let cbase = q * NR;
+        let cols = NR.min(c1 - cbase);
+        for p in (r0 / MR)..r1.div_ceil(MR) {
+            let apanel = &wp[p * k * MR..(p + 1) * k * MR];
+            let mut acc64 = [[0f64; NR]; MR];
+            let mut k0 = 0usize;
+            while k0 < k {
+                let k1 = (k0 + kc).min(k);
+                let mut acc = [[0f32; NR]; MR];
+                for kk in k0..k1 {
+                    let a = &apanel[kk * MR..kk * MR + MR];
+                    let b = &bpanel[kk * NR..kk * NR + NR];
+                    for r in 0..MR {
+                        let wv = a[r];
+                        for jj in 0..NR {
+                            acc[r][jj] += wv * b[jj];
+                        }
+                    }
+                }
+                for (a64, a32) in acc64.iter_mut().zip(&acc) {
+                    for (x, &y) in a64.iter_mut().zip(a32) {
+                        *x += y as f64;
+                    }
+                }
+                k0 = k1;
+            }
+            let rbase = p * MR;
+            store_tile(out, w, acts, rbase, MR.min(r1 - rbase), cbase, cols, &acc64);
+        }
+    }
+}
+
+/// Integer-lane block (`A` = i32 or i64): exact integer accumulation is
+/// associative at any grouping, so the register tile streams the whole K.
+#[allow(clippy::too_many_arguments)]
+unsafe fn block_int<A: AccLane>(
+    w: &BfpMatrix,
+    wp: &[i32],
+    acts: &ActPanels,
+    out: OutPtr,
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+) {
+    let k = w.cols;
+    for q in (c0 / NR)..c1.div_ceil(NR) {
+        let bpanel = &acts.i32_data[q * k * NR..(q + 1) * k * NR];
+        let cbase = q * NR;
+        let cols = NR.min(c1 - cbase);
+        for p in (r0 / MR)..r1.div_ceil(MR) {
+            let apanel = &wp[p * k * MR..(p + 1) * k * MR];
+            let mut acc = [[A::default(); NR]; MR];
+            for kk in 0..k {
+                let a = &apanel[kk * MR..kk * MR + MR];
+                let b = &bpanel[kk * NR..kk * NR + NR];
+                for r in 0..MR {
+                    let wv = a[r];
+                    for jj in 0..NR {
+                        acc[r][jj] += A::mul(wv, b[jj]);
+                    }
+                }
+            }
+            let mut acc64 = [[0f64; NR]; MR];
+            for (a64, arow) in acc64.iter_mut().zip(&acc) {
+                for (x, &y) in a64.iter_mut().zip(arow) {
+                    *x = y.to_f64();
+                }
+            }
+            let rbase = p * MR;
+            store_tile(out, w, acts, rbase, MR.min(r1 - rbase), cbase, cols, &acc64);
+        }
+    }
+}
+
+/// Rescale an accumulator tile and store the valid `rows×cols` region —
+/// per element the exact expression of the naive kernel
+/// (`(acc_f64 · 2^{ε_W+ε_I−f_W−f_I}) as f32`, zero blocks → +0.0).
+///
+/// # Safety
+/// The caller guarantees rows `[r0, r0+rows)` × cols `[c0, c0+cols)` of
+/// the `w.rows × acts.n` output behind `out` are owned by this task.
+#[allow(clippy::too_many_arguments)]
+unsafe fn store_tile(
+    out: OutPtr,
+    w: &BfpMatrix,
+    acts: &ActPanels,
+    r0: usize,
+    rows: usize,
+    c0: usize,
+    cols: usize,
+    acc: &[[f64; NR]; MR],
+) {
+    let n = acts.n;
+    for (r, arow) in acc.iter().enumerate().take(rows) {
+        let gr = r0 + r;
+        let we = match w.axis {
+            BlockAxis::Whole => w.exponents[0],
+            BlockAxis::PerRow => w.exponents[gr],
+            BlockAxis::PerCol => unreachable!(),
+        };
+        let orow = std::slice::from_raw_parts_mut(out.0.add(gr * n + c0), cols);
+        if we <= ZERO_EXP_FLOOR {
+            orow.fill(0.0);
+            continue;
+        }
+        match acts.axis {
+            BlockAxis::Whole => {
+                let ie = acts.exponents[0];
+                if ie <= ZERO_EXP_FLOOR {
+                    orow.fill(0.0);
+                    continue;
+                }
+                let scale = exp2i64(we + ie - w.frac_bits - acts.frac_bits);
+                for (o, &a) in orow.iter_mut().zip(arow) {
+                    *o = (a * scale) as f32;
+                }
+            }
+            BlockAxis::PerCol => {
+                for (jj, (o, &a)) in orow.iter_mut().zip(arow).enumerate() {
+                    let ie = acts.exponents[c0 + jj];
+                    *o = if ie <= ZERO_EXP_FLOOR {
+                        0.0
+                    } else {
+                        (a * exp2i64(we + ie - w.frac_bits - acts.frac_bits)) as f32
+                    };
+                }
+            }
+            BlockAxis::PerRow => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::gemm::bfp_gemm;
+    use crate::bfp::partition::PartitionScheme;
+
+    fn mat(seed: u64, len: usize, scale: f32) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f32 / (1u64 << 53) as f32 * 2.0 - 0.5) * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lane_selection_matches_naive_dispatch() {
+        // 8-bit: f32 lane; 12-bit: i32 (chunk < 32); 16-bit + large K: i64
+        assert!(matches!(select_lane(6, 6, 100), Lane::F32 { .. }));
+        assert_eq!(select_lane(10, 10, 100), Lane::I32);
+        assert_eq!(select_lane(14, 14, 5000), Lane::I64);
+    }
+
+    /// §3.4 worked example through the tiled kernel.
+    #[test]
+    fn paper_worked_example_product() {
+        let fmt = BfpFormat::new(4);
+        let w = BfpMatrix::quantize(&[0.5, 1.25], 1, 2, fmt, BlockAxis::PerRow);
+        let i = BfpMatrix::quantize(&[1.25, 1.25, 2.5, 5.0], 2, 2, fmt, BlockAxis::Whole);
+        let mut out = vec![0f32; 2];
+        bfp_gemm_tiled(&w, &i, &mut out);
+        assert_eq!(out, vec![17.0 / 4.0, 27.0 / 4.0]);
+    }
+
+    /// Tiled output equals the retained naive kernel bit-for-bit on a
+    /// tail-heavy shape across every scheme (the full matrix sweep lives
+    /// in tests/tiled_kernel.rs).
+    #[test]
+    fn tiled_matches_naive_reference() {
+        let (m, k, n) = (7, 23, 13); // all non-multiples of MR/NR/KC
+        let w = mat(1, m * k, 1.5);
+        let i = mat(2, k * n, 3.0);
+        for scheme in [PartitionScheme::Eq2, PartitionScheme::Eq3, PartitionScheme::Eq4, PartitionScheme::Eq5] {
+            let fmt = BfpFormat::new(8);
+            let wq = BfpMatrix::quantize(&w, m, k, fmt, scheme.w_axis());
+            let iq = BfpMatrix::quantize(&i, k, n, fmt, scheme.i_axis());
+            let want = bfp_gemm(&wq, &iq).data;
+            let mut got = vec![0f32; m * n];
+            bfp_gemm_tiled(&wq, &iq, &mut got);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{scheme:?}");
+            }
+        }
+    }
+
+    /// ActPanels reuse across shapes/axes/lanes must leave no stale data.
+    #[test]
+    fn act_panels_reuse_is_clean() {
+        let mut acts = ActPanels::new();
+        let fmt = BfpFormat::new(8);
+        let big = BfpMatrix::quantize(&mat(3, 40 * 30, 2.0), 40, 30, fmt, BlockAxis::Whole);
+        acts.pack_matrix(&big, Lane::F32 { chunk: 64 });
+        // smaller PerCol pack over the same buffers
+        let small = BfpMatrix::quantize(&mat(4, 5 * 7, 1.0), 5, 7, fmt, BlockAxis::PerCol);
+        acts.pack_matrix(&small, Lane::F32 { chunk: 64 });
+        let mut fresh = ActPanels::new();
+        fresh.pack_matrix(&small, Lane::F32 { chunk: 64 });
+        assert_eq!(acts.exponents, fresh.exponents);
+        assert_eq!(acts.f32_data[..acts.active_len()], fresh.f32_data[..fresh.active_len()]);
+    }
+}

@@ -16,13 +16,19 @@
 //!   bit manipulation, round-off vs truncation (§3.1 discusses why
 //!   round-off wins; we implement both so the ablation bench can show it).
 //! * [`gemm`] — the Figure 2 data flow: exact fixed-point multiply-
-//!   accumulate over two blocks with the §3.4 bit-width guarantees.
+//!   accumulate over two blocks with the §3.4 bit-width guarantees
+//!   (naive ikj kernels — the bit-exact reference).
+//! * [`kernel`] — the production GEMM: cache-blocked, register-tiled
+//!   microkernel over packed mantissa panels, with the fused
+//!   im2col→quantize→pack activation pipeline. Bit-identical to
+//!   [`gemm`] by the §3.4 exactness argument.
 //! * [`partition`] — the eq. (2)–(5) matrix partition schemes and the
 //!   Table 1 storage / block-exponent cost model.
 
 pub mod block;
 pub mod format;
 pub mod gemm;
+pub mod kernel;
 pub mod partition;
 pub mod quantize;
 
@@ -31,6 +37,10 @@ pub use format::{exponent_of, BfpFormat, Rounding};
 pub use gemm::{
     bfp_gemm, bfp_gemm_into, bfp_gemm_into_prepared, f32_lane_chunk, pack_mantissas, BfpGemmOutput,
     GemmScratch,
+};
+pub use kernel::{
+    bfp_gemm_tiled, gemm_tiled, pack_weights_f32, pack_weights_i32, select_lane, ActPanels, Lane,
+    WeightPanels,
 };
 pub use partition::{BfpMatrix, PartitionCost, PartitionScheme};
 pub use quantize::{block_format, dequantize, max_exponent, quantize_into};

@@ -11,13 +11,14 @@
 //! | [`PartitionScheme::Eq4`] | per row      | whole matrix | eq. (4) — the paper's choice |
 //! | [`PartitionScheme::Eq5`] | whole matrix | per column   | eq. (5) |
 
-use super::format::{exp2i, round_half_away, round_stochastic, BfpFormat, Rounding};
-use super::quantize::max_exponent;
+use super::format::{exp2i, BfpFormat};
+use super::quantize::{apply_round, max_exponent, quantize_slice};
 
 /// How a matrix is carved into BFP blocks.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BlockAxis {
     /// One block for the whole matrix.
+    #[default]
     Whole,
     /// One block per row vector.
     PerRow,
@@ -149,7 +150,7 @@ impl BfpMatrix {
         self.exponents.clear();
         let mantissas = &mut self.mantissas;
         let exponents = &mut self.exponents;
-        let zero_exp = i32::MIN / 2;
+        let zero_exp = super::format::ZERO_EXP;
         match axis {
             BlockAxis::Whole => {
                 let eps = max_exponent(data).unwrap_or(zero_exp);
@@ -220,42 +221,11 @@ impl BfpMatrix {
         for r in 0..self.rows {
             for c in 0..self.cols {
                 let e = self.exponent_at(r, c);
-                let s = if e <= i32::MIN / 2 { 0.0 } else { exp2i(e - self.frac_bits) };
+                let s = if e <= super::format::ZERO_EXP { 0.0 } else { exp2i(e - self.frac_bits) };
                 out[r * self.cols + c] = self.mantissas[r * self.cols + c] as f32 * s;
             }
         }
         out
-    }
-}
-
-#[inline(always)]
-fn apply_round(x: f32, mode: Rounding) -> f32 {
-    match mode {
-        Rounding::Nearest => round_half_away(x),
-        Rounding::Truncate => x.trunc(),
-        Rounding::Stochastic => round_stochastic(x),
-    }
-}
-
-#[inline]
-fn quantize_slice(src: &[f32], dst: &mut [i32], frac: i32, eps: i32, max_m: i32, round: Rounding) {
-    let inv_step = exp2i(frac - eps);
-    match round {
-        Rounding::Nearest => {
-            for (q, &v) in dst.iter_mut().zip(src) {
-                *q = (round_half_away(v * inv_step) as i32).clamp(-max_m, max_m);
-            }
-        }
-        Rounding::Truncate => {
-            for (q, &v) in dst.iter_mut().zip(src) {
-                *q = ((v * inv_step).trunc() as i32).clamp(-max_m, max_m);
-            }
-        }
-        Rounding::Stochastic => {
-            for (q, &v) in dst.iter_mut().zip(src) {
-                *q = (round_stochastic(v * inv_step) as i32).clamp(-max_m, max_m);
-            }
-        }
     }
 }
 

@@ -47,42 +47,58 @@ pub fn quantize_into(values: &[f32], fmt: BfpFormat, block: &mut BfpBlock) {
     block.frac_bits = fmt.frac_bits();
     block.mantissas.resize(values.len(), 0);
     let Some(eps) = max_exponent(values) else {
-        block.exponent = i32::MIN / 2;
+        block.exponent = super::format::ZERO_EXP;
         block.mantissas.fill(0);
         return;
     };
     block.exponent = eps;
-    let inv_step = exp2i(fmt.frac_bits() - eps); // 1/Δ, exact power of two
-    let max_m = fmt.max_mantissa();
-    match fmt.rounding {
-        Rounding::Nearest => {
-            for (q, &v) in block.mantissas.iter_mut().zip(values) {
-                let scaled = v * inv_step;
-                // round half away from zero (vectorized), then saturate
-                let r = round_half_away(scaled) as i32;
-                *q = r.clamp(-max_m, max_m);
-            }
-        }
-        Rounding::Truncate => {
-            for (q, &v) in block.mantissas.iter_mut().zip(values) {
-                let scaled = v * inv_step;
-                let r = scaled.trunc() as i32;
-                *q = r.clamp(-max_m, max_m);
-            }
-        }
-        Rounding::Stochastic => {
-            for (q, &v) in block.mantissas.iter_mut().zip(values) {
-                let r = round_stochastic(v * inv_step) as i32;
-                *q = r.clamp(-max_m, max_m);
-            }
-        }
-    }
+    quantize_slice(values, &mut block.mantissas, fmt.frac_bits(), eps, fmt.max_mantissa(), fmt.rounding);
 }
 
 /// Quantize-dequantize round trip: the BFP approximation `x'` of `x`.
 /// This is what the accuracy experiments apply to weights / activations.
 pub fn dequantize(values: &[f32], fmt: BfpFormat) -> Vec<f32> {
     block_format(values, fmt).to_f32()
+}
+
+/// One element of eq. (1): scale by `1/Δ`, round per `mode`, saturate.
+/// Every quantization path in the crate ([`quantize_into`],
+/// [`crate::bfp::partition::BfpMatrix::requantize`], the fused
+/// im2col→pack pipeline in [`crate::bfp::kernel`]) reduces to this exact
+/// f32 instruction sequence, so they agree bit-for-bit by construction.
+#[inline(always)]
+pub(crate) fn apply_round(x: f32, mode: Rounding) -> f32 {
+    match mode {
+        Rounding::Nearest => round_half_away(x),
+        Rounding::Truncate => x.trunc(),
+        Rounding::Stochastic => round_stochastic(x),
+    }
+}
+
+/// Quantize a contiguous slice that shares one block exponent `eps`
+/// (rounding dispatched once, not per element — the inner loops
+/// vectorize). Shared by the `Whole`/`PerRow` matrix paths and the
+/// fused activation pipeline.
+#[inline]
+pub(crate) fn quantize_slice(src: &[f32], dst: &mut [i32], frac: i32, eps: i32, max_m: i32, round: Rounding) {
+    let inv_step = exp2i(frac - eps);
+    match round {
+        Rounding::Nearest => {
+            for (q, &v) in dst.iter_mut().zip(src) {
+                *q = (round_half_away(v * inv_step) as i32).clamp(-max_m, max_m);
+            }
+        }
+        Rounding::Truncate => {
+            for (q, &v) in dst.iter_mut().zip(src) {
+                *q = ((v * inv_step).trunc() as i32).clamp(-max_m, max_m);
+            }
+        }
+        Rounding::Stochastic => {
+            for (q, &v) in dst.iter_mut().zip(src) {
+                *q = (round_stochastic(v * inv_step) as i32).clamp(-max_m, max_m);
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -171,6 +171,154 @@ pub fn write_json(path: &std::path::Path, tag: &str, results: &[BenchResult]) ->
     std::fs::write(path, s)
 }
 
+/// One entry parsed back out of a committed `BENCH_*.json` baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineEntry {
+    pub name: String,
+    pub threads: usize,
+    pub mean_ns: f64,
+}
+
+/// A parsed baseline file: the bench tag plus its recorded entries.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub tag: String,
+    pub entries: Vec<BaselineEntry>,
+}
+
+/// Parse a `BENCH_*.json` previously written by [`write_json`]
+/// (hand-rolled, like the writer — the offline image has no serde). The
+/// format is line-oriented by construction: one `"bench"` header line
+/// and one object per result line.
+pub fn read_baseline(path: &std::path::Path) -> std::io::Result<Baseline> {
+    let body = std::fs::read_to_string(path)?;
+    let mut base = Baseline::default();
+    for line in body.lines() {
+        if base.tag.is_empty() {
+            if let Some(tag) = json_str_field(line, "bench") {
+                base.tag = tag;
+                continue;
+            }
+        }
+        if let Some(name) = json_str_field(line, "name") {
+            let threads = json_num_field(line, "threads").unwrap_or(0.0) as usize;
+            let Some(mean_ns) = json_num_field(line, "mean_ns") else { continue };
+            base.entries.push(BaselineEntry { name, threads, mean_ns });
+        }
+    }
+    Ok(base)
+}
+
+/// Extract a `"key":"string"` field from one JSON line, undoing
+/// [`json_escape`].
+fn json_str_field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let mut rest = line[line.find(&pat)? + pat.len()..].trim_start();
+    rest = rest.strip_prefix('"')?;
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                'u' => {
+                    let hex: String = chars.by_ref().take(4).collect();
+                    out.push(char::from_u32(u32::from_str_radix(&hex, 16).ok()?)?);
+                }
+                esc => out.push(esc), // \" and \\ (and tolerate others)
+            },
+            c => out.push(c),
+        }
+    }
+    None
+}
+
+/// Extract a `"key":number` field from one JSON line.
+fn json_num_field(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let rest = line[line.find(&pat)? + pat.len()..].trim_start();
+    let end = rest
+        .char_indices()
+        .find(|(_, c)| !matches!(c, '0'..='9' | '-' | '+' | '.' | 'e' | 'E'))
+        .map(|(i, _)| i)
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// A fresh result matched against its baseline entry (same name *and*
+/// thread pin — numbers at different thread counts are not comparable).
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub name: String,
+    pub threads: usize,
+    pub base_mean_ns: f64,
+    pub new_mean_ns: f64,
+}
+
+impl BenchDelta {
+    /// Slowdown factor vs the baseline (>1 is slower).
+    pub fn ratio(&self) -> f64 {
+        self.new_mean_ns / self.base_mean_ns
+    }
+
+    /// Throughput regression beyond `tolerance` (e.g. 0.15 = 15%)?
+    pub fn regressed(&self, tolerance: f64) -> bool {
+        self.ratio() > 1.0 + tolerance
+    }
+}
+
+/// Mean-time slowdown beyond this fraction counts as a regression in
+/// [`report_baseline_diff`].
+pub const REGRESSION_TOLERANCE: f64 = 0.15;
+
+/// Match fresh results against a baseline by `(name, threads)`. Benches
+/// present on only one side are skipped (the suite grows over PRs).
+pub fn diff_against_baseline(results: &[BenchResult], base: &Baseline) -> Vec<BenchDelta> {
+    results
+        .iter()
+        .filter_map(|r| {
+            let b = base.entries.iter().find(|b| b.name == r.name && b.threads == r.threads)?;
+            (b.mean_ns > 0.0).then(|| BenchDelta {
+                name: r.name.clone(),
+                threads: r.threads,
+                base_mean_ns: b.mean_ns,
+                new_mean_ns: r.mean_ns(),
+            })
+        })
+        .collect()
+}
+
+/// Print the per-bench baseline deltas and return the number of
+/// regressions beyond [`REGRESSION_TOLERANCE`] (callers exit non-zero
+/// when this is > 0 and the baseline actually had matching entries).
+pub fn report_baseline_diff(deltas: &[BenchDelta]) -> usize {
+    let mut regressions = 0usize;
+    println!("\n### baseline diff (mean ns/iter, >{:.0}% slower flagged)", REGRESSION_TOLERANCE * 100.0);
+    for d in deltas {
+        let flag = if d.regressed(REGRESSION_TOLERANCE) {
+            regressions += 1;
+            "  REGRESSION"
+        } else {
+            ""
+        };
+        println!(
+            "{:<44} t{} {:>12.1} -> {:>12.1}  ({:+6.1}%){}",
+            d.name,
+            d.threads,
+            d.base_mean_ns,
+            d.new_mean_ns,
+            (d.ratio() - 1.0) * 100.0,
+            flag
+        );
+    }
+    if deltas.is_empty() {
+        println!("(no comparable entries)");
+    }
+    regressions
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,5 +362,59 @@ mod tests {
         assert!(body.contains("\"bench\": \"unit-test\""));
         assert!(body.trim_end().ends_with('}'));
         let _ = std::fs::remove_file(&path);
+    }
+
+    fn result(name: &str, threads: usize, mean_us: u64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 5,
+            mean: Duration::from_micros(mean_us),
+            min: Duration::from_micros(mean_us),
+            work_per_iter: Some(1e6),
+            work_unit: "MAC",
+            threads,
+        }
+    }
+
+    /// write_json → read_baseline round trip, including escaped names.
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let results = vec![result("gemm \"tiled\"", 1, 1500), result("gemm \"tiled\"", 4, 600)];
+        let path = std::env::temp_dir().join("bfp_cnn_baseline_roundtrip.json");
+        write_json(&path, "hotpath", &results).unwrap();
+        let base = read_baseline(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(base.tag, "hotpath");
+        assert_eq!(base.entries.len(), 2);
+        assert_eq!(base.entries[0].name, "gemm \"tiled\"");
+        assert_eq!(base.entries[0].threads, 1);
+        assert!((base.entries[0].mean_ns - 1_500_000.0).abs() < 0.5);
+        assert_eq!(base.entries[1].threads, 4);
+    }
+
+    /// Diff matches on (name, threads), flags >15% slowdowns only.
+    #[test]
+    fn baseline_diff_flags_regressions() {
+        let base = Baseline {
+            tag: "hotpath".into(),
+            entries: vec![
+                BaselineEntry { name: "a".into(), threads: 1, mean_ns: 1_000_000.0 },
+                BaselineEntry { name: "a".into(), threads: 4, mean_ns: 400_000.0 },
+                BaselineEntry { name: "gone".into(), threads: 1, mean_ns: 1.0 },
+            ],
+        };
+        let fresh = vec![
+            result("a", 1, 1100),  // +10%: within tolerance
+            result("a", 4, 600),   // +50% at t4: regression
+            result("new", 1, 100), // not in baseline: skipped
+        ];
+        let deltas = diff_against_baseline(&fresh, &base);
+        assert_eq!(deltas.len(), 2, "only (name, threads) matches compare");
+        assert!(!deltas[0].regressed(REGRESSION_TOLERANCE));
+        assert!(deltas[1].regressed(REGRESSION_TOLERANCE));
+        assert_eq!(report_baseline_diff(&deltas), 1);
+        // empty placeholder baseline: nothing comparable, no regressions
+        let empty = Baseline { tag: "hotpath".into(), entries: vec![] };
+        assert!(diff_against_baseline(&fresh, &empty).is_empty());
     }
 }

@@ -7,9 +7,12 @@
 //! The crate is organised as the three-layer stack described in `DESIGN.md`:
 //!
 //! * [`bfp`] — the numeric substrate: block formatting (shared-exponent
-//!   quantization), exact fixed-point GEMM over aligned mantissas, and the
-//!   matrix-partition schemes of the paper's eqs. (2)–(5) with their
-//!   storage cost model (Table 1).
+//!   quantization), exact fixed-point GEMM over aligned mantissas (the
+//!   naive reference in [`bfp::gemm`] and the cache-blocked,
+//!   register-tiled production microkernel with its fused
+//!   im2col→quantize→pack pipeline in [`bfp::kernel`] — bit-identical
+//!   by the §3.4 exactness argument), and the matrix-partition schemes
+//!   of the paper's eqs. (2)–(5) with their storage cost model (Table 1).
 //! * [`tensor`] + [`nn`] + [`models`] — a from-scratch CNN inference stack
 //!   (im2col convolution, pooling, batch-norm, residual / inception
 //!   composition) plus structural definitions of the six networks the

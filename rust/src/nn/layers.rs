@@ -1,6 +1,7 @@
 //! Parameterised layers: convolution, dense, batch-norm.
 
 use crate::bfp::gemm::f32_gemm;
+use crate::bfp::kernel::{self, ActPanels, WeightPanels};
 use crate::bfp::{bfp_gemm, BfpMatrix};
 use crate::quant::BfpConfig;
 use crate::tensor::{im2col, Conv2dGeometry, Tensor};
@@ -79,16 +80,30 @@ impl Conv2d {
     /// point, rescale to f32, add bias in f32 (the bias path stays float
     /// in the paper's Caffe port as well).
     ///
-    /// Quantizes the (static) weight matrix on every call; steady-state
-    /// serving goes through [`crate::nn::prepared::PreparedModel`], which
-    /// caches the quantization per `(layer, config)`.
+    /// Runs the tiled microkernel with the fused im2col→quantize→pack
+    /// activation pipeline ([`crate::bfp::kernel`]) — bit-identical to
+    /// the naive `im2col` + [`bfp_gemm`] pipeline it replaced (the §3.4
+    /// exactness argument; enforced by `tests/tiled_kernel.rs`).
+    ///
+    /// Quantizes and packs the (static) weight matrix on every call;
+    /// steady-state serving goes through
+    /// [`crate::nn::prepared::PreparedModel`], which caches both per
+    /// `(layer, weight format)`.
     pub fn forward_bfp(&self, input: &Tensor, cfg: &BfpConfig) -> Tensor {
-        let (col, geo) = self.im2col(input);
+        let geo = self.geometry(&input.shape);
         let (m, k, n) = (self.out_channels(), geo.k(), geo.n());
         let wq = self.quantize_weights(cfg);
         debug_assert_eq!(wq.cols, k);
-        let iq = BfpMatrix::quantize(&col, k, n, cfg.i_format(), cfg.scheme.i_axis());
-        let mut out = bfp_gemm(&wq, &iq).data;
+        let lane = kernel::select_lane(wq.frac_bits, cfg.i_format().frac_bits(), k);
+        let mut acts = ActPanels::new();
+        let mut tile = Vec::new();
+        acts.pack_im2col(&input.data, &geo, cfg.i_format(), cfg.scheme.i_axis(), lane, &mut tile);
+        let mut out = vec![0f32; m * n];
+        if lane.is_f32() {
+            kernel::gemm_tiled(&wq, WeightPanels::F32(&kernel::pack_weights_f32(&wq)), &acts, &mut out);
+        } else {
+            kernel::gemm_tiled(&wq, WeightPanels::Int(&kernel::pack_weights_i32(&wq)), &acts, &mut out);
+        }
         self.add_bias(&mut out, n);
         Tensor::from_vec(out, &[m, geo.out_h(), geo.out_w()])
     }
@@ -226,6 +241,36 @@ mod tests {
         let bfp = conv.forward_bfp(&img, &BfpConfig::new(14, 14));
         let nsr = fp.data.iter().zip(&bfp.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / fp.energy();
         assert!(nsr < 1e-5, "NSR {nsr}");
+    }
+
+    /// `forward_bfp` (tiled + fused pipeline) must equal the naive
+    /// im2col → quantize → `bfp_gemm` pipeline it replaced, bit for bit,
+    /// across lanes and schemes.
+    #[test]
+    fn conv_bfp_tiled_matches_naive_pipeline() {
+        use crate::bfp::PartitionScheme;
+        let img = Tensor::from_vec(seq(3 * 9 * 7, 2.0), &[3, 9, 7]);
+        let w = Tensor::from_vec(seq(5 * 3 * 3 * 3, 0.4), &[5, 3, 3, 3]);
+        let conv = Conv2d::new("c", w, vec![0.05, -0.1, 0.0, 0.2, -0.3], 1, 1);
+        for cfg in [
+            BfpConfig::new(8, 8),                                      // f32 lane
+            BfpConfig::new(12, 12),                                    // i32 lane
+            BfpConfig::new(16, 16),                                    // i64 lane
+            BfpConfig::new(8, 8).with_scheme(PartitionScheme::Eq2),
+            BfpConfig::new(8, 8).with_scheme(PartitionScheme::Eq3),    // PerCol input
+            BfpConfig::new(8, 8).with_scheme(PartitionScheme::Eq5),
+        ] {
+            let got = conv.forward_bfp(&img, &cfg);
+            let (col, geo) = conv.im2col(&img);
+            let (k, n) = (geo.k(), geo.n());
+            let wq = conv.quantize_weights(&cfg);
+            let iq = BfpMatrix::quantize(&col, k, n, cfg.i_format(), cfg.scheme.i_axis());
+            let mut want = bfp_gemm(&wq, &iq).data;
+            conv.add_bias(&mut want, n);
+            for (a, b) in want.iter().zip(&got.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "cfg {cfg:?}");
+            }
+        }
     }
 
     #[test]

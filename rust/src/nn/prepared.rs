@@ -11,11 +11,13 @@
 //!   configs a [`LayerSchedule`] resolves to actually depends on, so
 //!   uniform, `Bfp` and `Mixed` modes share entries and a schedule swap
 //!   only quantizes layers whose weight format actually changed — and
-//!   lazily holds the pre-packed f32 mantissa panel for the GEMM fast
-//!   lane (serving path only).
-//! * [`Workspace`] is a scratch arena (im2col panel, quantized-input
-//!   staging, GEMM mantissa scratch) that grows to the model's high-water
-//!   mark and is reused across layers, images and server requests.
+//!   lazily holds the mantissas pre-packed in `MR`-row microkernel
+//!   panel order ([`crate::bfp::kernel`]) for whichever accumulator
+//!   lane the serving config selects.
+//! * [`Workspace`] is a scratch arena (the fused pipeline's `K×NC`
+//!   im2col tile plus the packed activation panels) that grows to the
+//!   model's high-water mark and is reused across layers, images and
+//!   server requests.
 //! * [`PreparedModel`] ties both to a [`Model`] + [`LayerSchedule`] and
 //!   runs `forward`/`forward_batch` **bit-identically** to the unprepared
 //!   [`crate::nn::BfpExec`] path (tested in `tests/prepared_parallel.rs`),
@@ -27,21 +29,65 @@ use std::sync::{Arc, Mutex};
 use super::graph::Executor;
 use super::layers::{BatchNorm, Conv2d, Dense};
 use super::ops;
-use crate::bfp::gemm::{bfp_gemm_into_prepared, f32_lane_chunk, pack_mantissas, GemmScratch};
+use crate::bfp::kernel::{self, ActPanels, Lane, WeightPanels};
 use crate::bfp::partition::BfpMatrix;
 use crate::models::Model;
 use crate::quant::{BfpConfig, LayerSchedule};
 use crate::runtime::pool;
-use crate::tensor::{avg_pool2d, global_avg_pool, im2col, max_pool2d, Tensor};
+use crate::tensor::{avg_pool2d, global_avg_pool, max_pool2d, Tensor};
 
 /// A conv layer's weights, quantized once and shared read-only.
 #[derive(Clone)]
 pub struct CachedWeights {
     /// Quantized `M×K` weight matrix.
     pub wq: Arc<BfpMatrix>,
-    /// Pre-packed f32 mantissa panel when the GEMM's exact f32 lane
-    /// applies at this config (`None` → integer lanes).
-    pub packed: Option<Arc<Vec<f32>>>,
+    /// Mantissas packed into `MR`-row panels as exact f32 (the
+    /// [`Lane::F32`] fast lane; built lazily on the serving path).
+    pub packed_f32: Option<Arc<Vec<f32>>>,
+    /// Mantissas packed into `MR`-row panels as i32 (the integer
+    /// lanes). A cache entry is keyed by the *weight* format, so an
+    /// entry shared by an f32-lane and an integer-lane config carries
+    /// both packings, each built on first request.
+    pub packed_i32: Option<Arc<Vec<i32>>>,
+}
+
+impl CachedWeights {
+    /// The panel view the selected lane consumes (packing on the fly if
+    /// the cache was warmed for a different lane — correctness never
+    /// depends on the prepack).
+    fn panels_for(&self, lane: Lane) -> WeightPanelsOwned {
+        if lane.is_f32() {
+            match &self.packed_f32 {
+                Some(p) => WeightPanelsOwned::SharedF32(Arc::clone(p)),
+                None => WeightPanelsOwned::F32(kernel::pack_weights_f32(&self.wq)),
+            }
+        } else {
+            match &self.packed_i32 {
+                Some(p) => WeightPanelsOwned::SharedI32(Arc::clone(p)),
+                None => WeightPanelsOwned::I32(kernel::pack_weights_i32(&self.wq)),
+            }
+        }
+    }
+}
+
+/// Owned-or-shared weight panels (borrowed into [`WeightPanels`] at the
+/// GEMM call).
+enum WeightPanelsOwned {
+    SharedF32(Arc<Vec<f32>>),
+    SharedI32(Arc<Vec<i32>>),
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl WeightPanelsOwned {
+    fn as_panels(&self) -> WeightPanels<'_> {
+        match self {
+            WeightPanelsOwned::SharedF32(p) => WeightPanels::F32(p.as_slice()),
+            WeightPanelsOwned::SharedI32(p) => WeightPanels::Int(p.as_slice()),
+            WeightPanelsOwned::F32(p) => WeightPanels::F32(p.as_slice()),
+            WeightPanelsOwned::I32(p) => WeightPanels::Int(p.as_slice()),
+        }
+    }
 }
 
 /// Cross-schedule cache of quantized conv weights, keyed by layer name
@@ -111,40 +157,52 @@ impl WeightCache {
     }
 
     /// Look up (or quantize and insert) `layer`'s weights under `cfg`.
-    /// Does **not** build the packed f32 panel — the analysis/autotune
-    /// instrumentation only needs the quantized mantissas, and eagerly
-    /// packing every candidate would double its footprint for nothing.
+    /// Does **not** build the packed microkernel panels — the
+    /// analysis/autotune instrumentation only needs the quantized
+    /// mantissas, and eagerly packing every candidate would grow its
+    /// footprint for nothing.
     pub fn get_or_quantize(&mut self, layer: &Conv2d, cfg: BfpConfig) -> CachedWeights {
         self.lookup(layer, cfg, false)
     }
 
     /// [`WeightCache::get_or_quantize`], additionally materialising (and
-    /// caching, lazily on first request) the pre-packed f32 mantissa
-    /// panel when the GEMM fast lane applies — the serving path.
+    /// caching, lazily on first request) the `MR`-panel weight packing
+    /// for the accumulator lane `cfg` selects — the serving path. An
+    /// entry shared by configs that land on different lanes (the key
+    /// ignores the *input* width, the lane does not) accumulates both
+    /// packings.
     pub fn get_or_quantize_packed(&mut self, layer: &Conv2d, cfg: BfpConfig) -> CachedWeights {
         self.lookup(layer, cfg, true)
     }
 
     fn lookup(&mut self, layer: &Conv2d, cfg: BfpConfig, want_packed: bool) -> CachedWeights {
         let key = WeightKey::of(layer, &cfg);
-        // The packed panel is a property of the weights alone; whether a
-        // given GEMM *uses* it depends on both widths, checked here only
-        // to avoid packing for configs that will never hit the f32 lane.
-        let packable =
-            || f32_lane_chunk(cfg.w_format().frac_bits(), cfg.i_format().frac_bits()).is_some();
+        let k = layer.weights.len() / layer.out_channels();
+        let lane = kernel::select_lane(cfg.w_format().frac_bits(), cfg.i_format().frac_bits(), k);
+        let pack = |cached: &mut CachedWeights| {
+            if lane.is_f32() {
+                if cached.packed_f32.is_none() {
+                    cached.packed_f32 = Some(Arc::new(kernel::pack_weights_f32(&cached.wq)));
+                }
+            } else if cached.packed_i32.is_none() {
+                cached.packed_i32 = Some(Arc::new(kernel::pack_weights_i32(&cached.wq)));
+            }
+        };
         if let Some(list) = self.entries.get_mut(layer.name.as_str()) {
             if let Some((_, cached)) = list.iter_mut().find(|(k, _)| *k == key) {
                 self.hits += 1;
-                if want_packed && cached.packed.is_none() && packable() {
-                    cached.packed = Some(Arc::new(pack_mantissas(&cached.wq)));
+                if want_packed {
+                    pack(cached);
                 }
                 return cached.clone();
             }
         }
         self.misses += 1;
         let wq = Arc::new(layer.quantize_weights(&cfg));
-        let packed = if want_packed && packable() { Some(Arc::new(pack_mantissas(&wq))) } else { None };
-        let cached = CachedWeights { wq, packed };
+        let mut cached = CachedWeights { wq, packed_f32: None, packed_i32: None };
+        if want_packed {
+            pack(&mut cached);
+        }
         self.entries.entry(layer.name.clone()).or_default().push((key, cached.clone()));
         cached
     }
@@ -170,14 +228,18 @@ impl WeightCache {
     }
 }
 
-/// Reusable scratch arena for the prepared forward pass. Buffers only
-/// grow (to the model's high-water mark); every byte handed to a kernel
-/// is fully overwritten before use, so reuse across differently-shaped
-/// layers can never leak state (tested in `tests/prepared_parallel.rs`).
+/// Reusable scratch arena for the prepared forward pass: the fused
+/// pipeline's `K×NC` im2col staging tile and the packed activation
+/// panels. Buffers only grow (to the model's high-water mark); every
+/// element of the active region is fully overwritten before use, so
+/// reuse across differently-shaped layers can never leak state (tested
+/// in `tests/prepared_parallel.rs`). Compared to the pre-tiled arena
+/// (full `K×N` f32 im2col buffer + `K×N` i32 mantissa matrix + `K×N`
+/// f32 repack scratch ≈ 3·K·N), this holds one packed operand plus a
+/// `K×NC` tile.
 pub struct Workspace {
-    col: Vec<f32>,
-    iq: BfpMatrix,
-    scratch: GemmScratch,
+    tile: Vec<f32>,
+    acts: ActPanels,
 }
 
 impl Default for Workspace {
@@ -189,12 +251,13 @@ impl Default for Workspace {
 impl Workspace {
     /// An empty arena; it grows on first use.
     pub fn new() -> Self {
-        Self { col: Vec::new(), iq: BfpMatrix::empty(), scratch: GemmScratch::default() }
+        Self { tile: Vec::new(), acts: ActPanels::new() }
     }
 
-    /// Current im2col high-water mark in elements (reporting/tests).
+    /// Activation high-water mark in elements (reporting/tests): the
+    /// packed-panel capacity, at least `K×N` of the largest conv seen.
     pub fn col_capacity(&self) -> usize {
-        self.col.len()
+        self.acts.capacity().max(self.tile.len())
     }
 }
 
@@ -218,17 +281,16 @@ impl Executor for PreparedExec<'_> {
         let cfg = self.schedule.for_layer(&layer.name);
         let geo = layer.geometry(&x.shape);
         let (m, k, n) = (layer.out_channels(), geo.k(), geo.n());
-        let Workspace { col, iq, scratch } = &mut *self.ws;
-        if col.len() < k * n {
-            col.resize(k * n, 0.0);
-        }
-        let col = &mut col[..k * n];
-        im2col(&x.data, &geo, col);
-        iq.requantize(col, k, n, cfg.i_format(), cfg.scheme.i_axis());
+        let Workspace { tile, acts } = &mut *self.ws;
+        let lane = kernel::select_lane(cached.wq.frac_bits, cfg.i_format().frac_bits(), k);
+        // fused pipeline: im2col tiles quantized straight into packed
+        // panels — no K×N staging matrix exists on this path
+        acts.pack_im2col(&x.data, &geo, cfg.i_format(), cfg.scheme.i_axis(), lane, tile);
         // the output buffer becomes the layer's tensor, so it is the one
         // allocation this path keeps
         let mut out = vec![0f32; m * n];
-        bfp_gemm_into_prepared(&cached.wq, cached.packed.as_deref().map(|p| &p[..]), iq, &mut out, scratch);
+        let panels = cached.panels_for(lane);
+        kernel::gemm_tiled(&cached.wq, panels.as_panels(), acts, &mut out);
         layer.add_bias(&mut out, n);
         Tensor::from_vec(out, &[m, geo.out_h(), geo.out_w()])
     }

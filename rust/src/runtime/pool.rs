@@ -12,6 +12,11 @@
 //! * [`parallel_map_with`] — order-preserving parallel map with
 //!   per-thread state (an executor, a scratch [`crate::nn::prepared::Workspace`]),
 //!   used to spread `forward_batch` over images.
+//! * [`parallel_tasks`] — run `n` independent, identically-typed tasks on
+//!   the pool with atomic work-stealing. The tiled GEMM
+//!   ([`crate::bfp::kernel`]) uses it to parallelize in 2D (M panels ×
+//!   N blocks): each task owns a disjoint output tile, so results are
+//!   deterministic regardless of which worker runs which task.
 //!
 //! Thread count resolves as: [`with_threads`] override (tests) →
 //! `BFP_NUM_THREADS` env var → `std::thread::available_parallelism()`.
@@ -110,6 +115,48 @@ where
             s.spawn(move || {
                 IN_POOL.with(|c| c.set(true));
                 f(p * panel_rows, panel);
+            });
+        }
+    });
+}
+
+/// Run `tasks` independent closures-by-index on the pool. Workers pull
+/// task indices from a shared atomic counter (cheap work stealing — tile
+/// costs vary with tail sizes and zero blocks), so *which* worker runs a
+/// task is nondeterministic; callers must make each task's effect depend
+/// only on its index (the GEMM tasks write disjoint output tiles).
+///
+/// `total_work` is the caller's cost estimate for the whole call (the
+/// GEMMs pass `M·K·N` MACs); below [`MIN_PARALLEL_WORK`], and inside a
+/// nested pool region, tasks run serially in index order on the calling
+/// thread.
+pub fn parallel_tasks<F>(tasks: usize, total_work: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if tasks == 0 {
+        return;
+    }
+    let threads = if total_work < MIN_PARALLEL_WORK { 1 } else { num_threads().min(tasks) };
+    if threads <= 1 {
+        for t in 0..tasks {
+            f(t);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let (f, next) = (&f, &next);
+            s.spawn(move || {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let t = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if t >= tasks {
+                        break;
+                    }
+                    f(t);
+                }
             });
         }
     });
@@ -232,5 +279,32 @@ mod tests {
         parallel_row_panels(&mut [], 0, 4, MIN_PARALLEL_WORK, |_, _| unreachable!());
         let out: Vec<u32> = parallel_map_with(Vec::<u32>::new(), || (), |_, x| x);
         assert!(out.is_empty());
+        parallel_tasks(0, MIN_PARALLEL_WORK, |_| unreachable!());
+    }
+
+    #[test]
+    fn tasks_each_run_exactly_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        for threads in [1usize, 2, 4, 7] {
+            with_threads(threads, || {
+                let hits: Vec<AtomicU32> = (0..23).map(|_| AtomicU32::new(0)).collect();
+                parallel_tasks(hits.len(), MIN_PARALLEL_WORK, |t| {
+                    hits[t].fetch_add(1, Ordering::Relaxed);
+                });
+                for (t, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "task {t} at {threads} threads");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn tiny_task_sets_stay_serial() {
+        with_threads(4, || {
+            let caller = std::thread::current().id();
+            parallel_tasks(8, 100, |_| {
+                assert_eq!(std::thread::current().id(), caller, "small work must not spawn");
+            });
+        });
     }
 }

@@ -81,6 +81,114 @@ pub fn im2col(img: &[f32], geo: &Conv2dGeometry, out: &mut [f32]) {
     }
 }
 
+/// Emit columns `[col0, col0 + ncols)` of the im2col matrix as a
+/// `K×ncols` row-major tile — the fused activation pipeline
+/// ([`crate::bfp::kernel::ActPanels::pack_im2col`]) walks the matrix in
+/// `NC`-wide tiles instead of materialising the full `K×N` buffer.
+/// Tiling the column range produces exactly the columns [`im2col`]
+/// produces (tested below), just without the footprint.
+pub fn im2col_tile(img: &[f32], geo: &Conv2dGeometry, col0: usize, ncols: usize, out: &mut [f32]) {
+    let (c, h, w) = (geo.in_channels, geo.in_h, geo.in_w);
+    assert_eq!(img.len(), c * h * w, "image size mismatch");
+    let (oh, ow) = (geo.out_h(), geo.out_w());
+    assert!(col0 + ncols <= oh * ow, "column tile out of range");
+    assert_eq!(out.len(), geo.k() * ncols, "im2col tile buffer size mismatch");
+    let pad = geo.padding as isize;
+    let stride = geo.stride as isize;
+    let mut row = 0usize;
+    for ch in 0..c {
+        let plane = &img[ch * h * w..(ch + 1) * h * w];
+        for ky in 0..geo.kernel_h {
+            for kx in 0..geo.kernel_w {
+                let dst = &mut out[row * ncols..(row + 1) * ncols];
+                // walk the tile as runs of contiguous ox within one oy
+                let mut idx = 0usize;
+                let mut col = col0;
+                while idx < ncols {
+                    let (oy, ox0) = (col / ow, col % ow);
+                    let run = (ow - ox0).min(ncols - idx);
+                    let iy = oy as isize * stride - pad + ky as isize;
+                    if iy < 0 || iy >= h as isize {
+                        dst[idx..idx + run].fill(0.0);
+                    } else {
+                        let src_row = &plane[iy as usize * w..(iy as usize + 1) * w];
+                        for (o, ox) in dst[idx..idx + run].iter_mut().zip(ox0..ox0 + run) {
+                            let ix = ox as isize * stride - pad + kx as isize;
+                            *o = if ix < 0 || ix >= w as isize { 0.0 } else { src_row[ix as usize] };
+                        }
+                    }
+                    idx += run;
+                    col += run;
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// The whole-matrix block exponent of the im2col expansion, computed
+/// from the *source image* without materialising the matrix.
+///
+/// Every im2col entry is either a pixel whose spatial coordinates are
+/// covered by at least one receptive field, or a padding zero — and
+/// zeros never raise a block maximum. The maximum is insensitive to the
+/// duplication im2col introduces, so scanning each covered pixel once
+/// yields bit-identically the same exponent as
+/// `max_exponent(full im2col matrix)` (tested below, including
+/// geometries whose stride skips pixels). This is what lets the fused
+/// quantize-while-packing pipeline know the eq. (2)/(4) `Whole`-axis
+/// exponent before the first tile is emitted.
+pub fn im2col_whole_exponent(img: &[f32], geo: &Conv2dGeometry) -> Option<i32> {
+    let (c, h, w) = (geo.in_channels, geo.in_h, geo.in_w);
+    assert_eq!(img.len(), c * h * w, "image size mismatch");
+    let (oh, ow) = (geo.out_h(), geo.out_w());
+    let pad = geo.padding as isize;
+    let stride = geo.stride as isize;
+    // spatial coverage masks: is row iy / col ix read by any field tap?
+    let mut cov_y = vec![false; h];
+    for oy in 0..oh {
+        for ky in 0..geo.kernel_h {
+            let iy = oy as isize * stride - pad + ky as isize;
+            if iy >= 0 && iy < h as isize {
+                cov_y[iy as usize] = true;
+            }
+        }
+    }
+    let mut cov_x = vec![false; w];
+    for ox in 0..ow {
+        for kx in 0..geo.kernel_w {
+            let ix = ox as isize * stride - pad + kx as isize;
+            if ix >= 0 && ix < w as isize {
+                cov_x[ix as usize] = true;
+            }
+        }
+    }
+    // same max-|payload-bits| scan as `bfp::quantize::max_exponent`
+    let mut max_abs_bits: u32 = 0;
+    for ch in 0..c {
+        let plane = &img[ch * h * w..(ch + 1) * h * w];
+        for (iy, &cy) in cov_y.iter().enumerate() {
+            if !cy {
+                continue;
+            }
+            let row = &plane[iy * w..(iy + 1) * w];
+            for (&v, &cx) in row.iter().zip(&cov_x) {
+                if cx && v.is_finite() {
+                    let b = v.to_bits() & 0x7FFF_FFFF;
+                    if b > max_abs_bits {
+                        max_abs_bits = b;
+                    }
+                }
+            }
+        }
+    }
+    if max_abs_bits == 0 {
+        None
+    } else {
+        crate::bfp::exponent_of(f32::from_bits(max_abs_bits))
+    }
+}
+
 /// Direct (naive) convolution reference used to validate `im2col`+GEMM.
 pub fn direct_conv2d(
     img: &Tensor, // [C, H, W]
@@ -170,6 +278,78 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "conv mismatch: {a} vs {b} (c={c},h={h},stride={stride},pad={pad})");
             }
         }
+    }
+
+    /// Tiled emission must reproduce the corresponding column range of
+    /// the full im2col matrix exactly, for every tile width and offset —
+    /// including tiles that straddle output-row boundaries.
+    #[test]
+    fn tile_emission_matches_full_matrix() {
+        for (c, h, w, kh, kw, stride, pad) in
+            [(1usize, 5, 5, 3, 3, 1, 0), (3, 8, 7, 3, 3, 1, 1), (2, 9, 7, 2, 3, 2, 1), (1, 6, 6, 1, 1, 3, 0)]
+        {
+            let img = seq(c * h * w);
+            let geo = Conv2dGeometry { in_channels: c, in_h: h, in_w: w, kernel_h: kh, kernel_w: kw, stride, padding: pad };
+            let (k, n) = (geo.k(), geo.n());
+            let mut full = vec![0f32; k * n];
+            im2col(&img, &geo, &mut full);
+            for tile_w in [1usize, 3, 7, n] {
+                let mut c0 = 0usize;
+                while c0 < n {
+                    let cw = tile_w.min(n - c0);
+                    let mut tile = vec![9f32; k * cw];
+                    im2col_tile(&img, &geo, c0, cw, &mut tile);
+                    for r in 0..k {
+                        assert_eq!(
+                            &tile[r * cw..(r + 1) * cw],
+                            &full[r * n + c0..r * n + c0 + cw],
+                            "row {r} cols [{c0}, {})", c0 + cw
+                        );
+                    }
+                    c0 += cw;
+                }
+            }
+        }
+    }
+
+    /// The coverage-based whole-matrix exponent must equal the scan of
+    /// the materialised matrix bit-for-bit — including geometries whose
+    /// stride leaves pixels unread (their values must not leak into the
+    /// block exponent) and all-padding/all-zero cases.
+    #[test]
+    fn whole_exponent_matches_materialized_scan() {
+        use crate::bfp::max_exponent;
+        for (c, h, w, kh, kw, stride, pad) in [
+            (1usize, 5, 5, 3, 3, 1, 0),
+            (3, 8, 8, 3, 3, 1, 1),
+            (2, 9, 7, 3, 3, 2, 1),
+            (1, 10, 10, 2, 2, 3, 0), // stride 3 > kernel 2: pixels skipped
+            (2, 7, 7, 1, 1, 2, 0),   // 1×1 kernel, stride 2: checkerboard coverage
+        ] {
+            let mut img = seq(c * h * w);
+            let geo = Conv2dGeometry { in_channels: c, in_h: h, in_w: w, kernel_h: kh, kernel_w: kw, stride, padding: pad };
+            let check = |img: &[f32], ctx: &str| {
+                let mut col = vec![0f32; geo.k() * geo.n()];
+                im2col(img, &geo, &mut col);
+                assert_eq!(
+                    im2col_whole_exponent(img, &geo),
+                    max_exponent(&col),
+                    "{ctx} ({c}ch {h}x{w} k{kh}x{kw} s{stride} p{pad})"
+                );
+            };
+            check(&img, "plain");
+            // a huge value on an *uncovered* pixel must not change the result
+            if stride > kh {
+                img[2 * w + 2] = 1e30; // (iy=2, ix=2) uncovered for stride 3, k 2, pad 0
+                check(&img, "outlier on uncovered pixel");
+            }
+            // non-finite values are ignored, exactly like max_exponent
+            img[0] = f32::NAN;
+            check(&img, "with NaN");
+        }
+        // all-zero image: no exponent
+        let geo = Conv2dGeometry { in_channels: 1, in_h: 4, in_w: 4, kernel_h: 3, kernel_w: 3, stride: 1, padding: 1 };
+        assert_eq!(im2col_whole_exponent(&[0.0; 16], &geo), None);
     }
 
     #[test]

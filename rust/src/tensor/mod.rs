@@ -9,6 +9,6 @@ pub mod pool;
 #[allow(clippy::module_inception)]
 pub mod tensor;
 
-pub use im2col::{im2col, Conv2dGeometry};
+pub use im2col::{im2col, im2col_tile, im2col_whole_exponent, Conv2dGeometry};
 pub use pool::{avg_pool2d, global_avg_pool, max_pool2d};
 pub use tensor::Tensor;

@@ -1,0 +1,237 @@
+//! Bit-exactness of the tiled BFP GEMM microkernel and the fused
+//! im2col→quantize→pack activation pipeline against the retained naive
+//! reference (`bfp::gemm`), per the §3.4 exactness argument:
+//!
+//! * tail shapes — M/K/N that are *not* multiples of MR/NR/KC (and a
+//!   shape crossing the MC/NC task-block boundaries) — across all four
+//!   partition schemes, widths spanning the f32-lane/i32/i64 dispatch
+//!   boundaries, at 1/2/4 threads;
+//! * the fused pipeline's packed mantissas and block exponents equal
+//!   `im2col → BfpMatrix::quantize → pack_matrix` exactly, including
+//!   strided geometries whose receptive fields skip input pixels;
+//! * the prepared/`WeightCache` serving path stays bit-identical to the
+//!   unprepared executor on every lane, scheme and thread count.
+
+use bfp_cnn::bfp::kernel::{self, ActPanels, WeightPanels, KC, MC, MR, NC, NR};
+use bfp_cnn::bfp::partition::PartitionScheme;
+use bfp_cnn::bfp::{bfp_gemm, BfpFormat, BfpMatrix};
+use bfp_cnn::data::Rng;
+use bfp_cnn::models::Model;
+use bfp_cnn::nn::prepared::PreparedModel;
+use bfp_cnn::nn::{BfpExec, Block};
+use bfp_cnn::quant::{BfpConfig, LayerSchedule};
+use bfp_cnn::runtime::pool;
+use bfp_cnn::tensor::{im2col, Conv2dGeometry, Tensor};
+
+const SCHEMES: [PartitionScheme; 4] =
+    [PartitionScheme::Eq2, PartitionScheme::Eq3, PartitionScheme::Eq4, PartitionScheme::Eq5];
+
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Shapes exercising every tail case of the MR/NR register tile, the
+/// KC segmentation and the MC/NC task blocking.
+fn tail_shapes() -> Vec<(usize, usize, usize)> {
+    assert_eq!((MR, NR, MC, NC), (4, 8, 64, 256), "shape list assumes these tile constants");
+    vec![
+        (1, 1, 1),        // degenerate minimum
+        (3, 5, 7),        // everything below one register tile
+        (5, 67, 9),       // M, N tails; K just past the 10-bit chunk (64)
+        (13, 70, 33),     // mixed tails
+        (4, 8, 16),       // exact multiples (no tails at all)
+        (65, 130, 257),   // crosses the MC row-block and NC col-block boundaries
+        (2, KC + 3, 11),  // K crosses the KC segment boundary
+    ]
+}
+
+/// Tiled output == naive output, bit for bit, across the shape × width
+/// × scheme × thread matrix. Widths pin each accumulator lane:
+/// 4/8 → f32 single-chunk, 10 → f32 multi-chunk once K > 64,
+/// 12 → i32, 16 → i64.
+#[test]
+fn tiled_gemm_bit_identical_to_naive_reference() {
+    let mut rng = Rng::new(0x71D5);
+    for (m, k, n) in tail_shapes() {
+        let w = rng.normal_vec(m * k, 1.2);
+        let i = rng.normal_vec(k * n, 2.5);
+        for bits in [4u32, 8, 10, 12, 16] {
+            let fmt = BfpFormat::new(bits);
+            for scheme in SCHEMES {
+                let wq = BfpMatrix::quantize(&w, m, k, fmt, scheme.w_axis());
+                let iq = BfpMatrix::quantize(&i, k, n, fmt, scheme.i_axis());
+                let naive = pool::with_threads(1, || bfp_gemm(&wq, &iq).data);
+                for t in [1usize, 2, 4] {
+                    let mut tiled = vec![0f32; m * n];
+                    pool::with_threads(t, || kernel::bfp_gemm_tiled(&wq, &iq, &mut tiled));
+                    assert_bits_eq(&naive, &tiled, &format!("{m}x{k}x{n} L={bits} {scheme:?} t={t}"));
+                }
+            }
+        }
+    }
+}
+
+/// Zero rows/columns/matrices keep their exact +0.0 semantics through
+/// the tiled rescale (the naive kernel's zero-exponent floors).
+#[test]
+fn tiled_gemm_zero_blocks_match_naive() {
+    let fmt = BfpFormat::new(8);
+    let mut rng = Rng::new(0x5EED);
+    let (m, k, n) = (6, 10, 13);
+    // one all-zero weight row, one all-zero input column
+    let mut w = rng.normal_vec(m * k, 1.0);
+    for kk in 0..k {
+        w[2 * k + kk] = 0.0;
+    }
+    let mut i = rng.normal_vec(k * n, 1.0);
+    for kk in 0..k {
+        i[kk * n + 5] = 0.0;
+    }
+    for scheme in SCHEMES {
+        let wq = BfpMatrix::quantize(&w, m, k, fmt, scheme.w_axis());
+        let iq = BfpMatrix::quantize(&i, k, n, fmt, scheme.i_axis());
+        let naive = bfp_gemm(&wq, &iq).data;
+        let mut tiled = vec![0f32; m * n];
+        kernel::bfp_gemm_tiled(&wq, &iq, &mut tiled);
+        assert_bits_eq(&naive, &tiled, &format!("zero blocks {scheme:?}"));
+    }
+    // fully zero weight matrix
+    let zeros = vec![0.0; m * k];
+    let wq = BfpMatrix::quantize(&zeros, m, k, fmt, PartitionScheme::Eq4.w_axis());
+    let iq = BfpMatrix::quantize(&i, k, n, fmt, PartitionScheme::Eq4.i_axis());
+    let mut tiled = vec![1f32; m * n];
+    kernel::bfp_gemm_tiled(&wq, &iq, &mut tiled);
+    assert!(tiled.iter().all(|&x| x == 0.0 && x.is_sign_positive()));
+}
+
+/// The fused pipeline must emit exactly the exponents and packed
+/// mantissas of the unfused path (full im2col → `BfpMatrix::quantize` →
+/// `pack_matrix`), for both activation block axes, both panel
+/// representations, strided/padded geometries, and NC-boundary N.
+#[test]
+fn fused_pipeline_equals_unfused_quantize_pack() {
+    let mut rng = Rng::new(0xF05ED);
+    for (c, h, w, kh, kw, stride, pad) in [
+        (3usize, 8, 8, 3, 3, 1, 1),   // n = 64
+        (2, 9, 7, 3, 3, 2, 1),        // strided, odd spatial
+        (1, 10, 10, 2, 2, 3, 0),      // stride > kernel: uncovered pixels
+        (4, 16, 16, 3, 3, 1, 1),      // n = 256 = NC exactly
+        (3, 17, 15, 3, 3, 1, 1),      // n = 255: NC tail one short
+    ] {
+        let img = rng.normal_vec(c * h * w, 1.7);
+        let geo = Conv2dGeometry { in_channels: c, in_h: h, in_w: w, kernel_h: kh, kernel_w: kw, stride, padding: pad };
+        let (k, n) = (geo.k(), geo.n());
+        for (bits, i_bits) in [(8u32, 8u32), (12, 12), (16, 14)] {
+            let fmt = BfpFormat::new(i_bits);
+            let lane = kernel::select_lane(BfpFormat::new(bits).frac_bits(), fmt.frac_bits(), k);
+            for axis in [PartitionScheme::Eq4.i_axis(), PartitionScheme::Eq3.i_axis()] {
+                // unfused reference
+                let mut col = vec![0f32; k * n];
+                im2col(&img, &geo, &mut col);
+                let iq = BfpMatrix::quantize(&col, k, n, fmt, axis);
+                let mut want = ActPanels::new();
+                want.pack_matrix(&iq, lane);
+                // fused
+                let mut got = ActPanels::new();
+                let mut tile = Vec::new();
+                got.pack_im2col(&img, &geo, fmt, axis, lane, &mut tile);
+                let ctx = format!("{c}ch {h}x{w} k{kh} s{stride} p{pad} L={i_bits} {axis:?}");
+                assert_eq!(got.exponents(), want.exponents(), "{ctx}: exponents");
+                assert_eq!(got.f32_panels(), want.f32_panels(), "{ctx}: f32 panels");
+                assert_eq!(got.i32_panels(), want.i32_panels(), "{ctx}: i32 panels");
+                assert!(tile.len() <= k * NC, "{ctx}: staging tile exceeded K×NC");
+            }
+        }
+    }
+}
+
+fn tail_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    // out_channels 5 and 3 (not multiples of MR), spatial sizes giving
+    // odd GEMM N, plus a strided conv
+    Model {
+        name: "tail".into(),
+        graph: Block::seq(vec![
+            Block::Conv(bfp_cnn::models::init::conv2d("c1", 5, 2, 3, 3, 1, 1, &mut rng)),
+            Block::ReLU,
+            Block::Conv(bfp_cnn::models::init::conv2d("c2", 3, 5, 3, 3, 2, 0, &mut rng)),
+            Block::Flatten,
+        ]),
+        input_shape: vec![2, 11, 9],
+        num_classes: 0,
+    }
+}
+
+/// Prepared serving (WeightCache pre-packed panels + fused workspace
+/// pipeline) == unprepared `BfpExec`, bit for bit, on every lane,
+/// scheme and thread count — including after schedule hot-swaps across
+/// lanes.
+#[test]
+fn prepared_path_bit_identical_across_lanes_schemes_threads() {
+    let model = tail_model(42);
+    let mut rng = Rng::new(7);
+    let img = Tensor::from_vec(rng.normal_vec(2 * 11 * 9, 1.5), &[2, 11, 9]);
+    let configs = [
+        BfpConfig::new(8, 8),                                    // f32 lane
+        BfpConfig::new(12, 12),                                  // i32 lane
+        BfpConfig::new(16, 16),                                  // i64 lane
+        BfpConfig::new(8, 8).with_scheme(PartitionScheme::Eq2),
+        BfpConfig::new(8, 8).with_scheme(PartitionScheme::Eq3),  // PerCol activations
+        BfpConfig::new(8, 8).with_scheme(PartitionScheme::Eq5),
+    ];
+    for cfg in configs {
+        let schedule = LayerSchedule::uniform(cfg);
+        let want = model.graph.execute(img.clone(), &mut BfpExec::with_schedule(schedule.clone()));
+        let prepared = PreparedModel::new(model.clone(), schedule);
+        for t in [1usize, 2, 4] {
+            let got = pool::with_threads(t, || prepared.forward(&img));
+            assert_bits_eq(&want.data, &got.data, &format!("cfg {cfg:?} t={t}"));
+        }
+    }
+    // schedule hot-swap across accumulator lanes through one cache
+    let mut prepared = PreparedModel::new(model.clone(), LayerSchedule::uniform(configs[0]));
+    for cfg in [configs[2], configs[1], configs[0]] {
+        let schedule = LayerSchedule::uniform(cfg);
+        prepared.set_schedule(schedule.clone());
+        let want = model.graph.execute(img.clone(), &mut BfpExec::with_schedule(schedule));
+        let got = prepared.forward(&img);
+        assert_bits_eq(&want.data, &got.data, &format!("after swap to {cfg:?}"));
+    }
+    let (_, hits, _) = prepared.cache_stats();
+    assert!(hits >= 2, "swapping back must hit the weight cache");
+}
+
+/// Mixed per-layer schedule where the two convs land on *different*
+/// accumulator lanes at once (one cache entry carries each packing).
+#[test]
+fn mixed_lane_schedule_bit_identical() {
+    let model = tail_model(9);
+    let mut rng = Rng::new(23);
+    let img = Tensor::from_vec(rng.normal_vec(2 * 11 * 9, 2.0), &[2, 11, 9]);
+    let schedule = LayerSchedule::uniform(BfpConfig::new(8, 8)).with_layer("c2", BfpConfig::new(16, 16));
+    let want = model.graph.execute(img.clone(), &mut BfpExec::with_schedule(schedule.clone()));
+    let prepared = PreparedModel::new(model, schedule);
+    for t in [1usize, 2, 4] {
+        let got = pool::with_threads(t, || prepared.forward(&img));
+        assert_bits_eq(&want.data, &got.data, &format!("mixed lanes t={t}"));
+    }
+}
+
+/// `WeightPanels` packed for the wrong lane must be rejected loudly,
+/// never silently mis-multiplied.
+#[test]
+#[should_panic(expected = "lane")]
+fn wrong_lane_panels_are_rejected() {
+    let fmt = BfpFormat::new(8); // f32 lane
+    let wq = BfpMatrix::quantize(&[1.0; 12], 3, 4, fmt, PartitionScheme::Eq4.w_axis());
+    let iq = BfpMatrix::quantize(&[1.0; 8], 4, 2, fmt, PartitionScheme::Eq4.i_axis());
+    let lane = kernel::select_lane(wq.frac_bits, iq.frac_bits, 4);
+    let mut acts = ActPanels::new();
+    acts.pack_matrix(&iq, lane);
+    let panels = kernel::pack_weights_i32(&wq); // wrong: f32 lane selected
+    let mut out = vec![0f32; 6];
+    kernel::gemm_tiled(&wq, WeightPanels::Int(&panels), &acts, &mut out);
+}
