@@ -51,15 +51,21 @@ pub fn forward_batch(model: &Model, images: Vec<Tensor>, mode: ExecMode) -> Vec<
     for img in &images {
         assert_eq!(img.shape, model.input_shape, "input shape mismatch for {}", model.name);
     }
+    let work = model.approx_macs_per_image();
     match mode {
-        ExecMode::Fp32 => pool::parallel_map_with(images, || Fp32Exec, |e, img| model.graph.execute(img, e)),
+        ExecMode::Fp32 => {
+            pool::parallel_map_with(images, work, || Fp32Exec, |e, img| model.graph.execute(img, e))
+        }
         ExecMode::Bfp(cfg) => {
-            pool::parallel_map_with(images, move || BfpExec::new(cfg), |e, img| model.graph.execute(img, e))
+            pool::parallel_map_with(images, work, move || BfpExec::new(cfg), |e, img| {
+                model.graph.execute(img, e)
+            })
         }
         ExecMode::Mixed(sched) => {
             let sched = &sched;
             pool::parallel_map_with(
                 images,
+                work,
                 move || BfpExec::with_schedule(sched.clone()),
                 |e, img| model.graph.execute(img, e),
             )

@@ -56,15 +56,25 @@ fn bucket_index(v: u64) -> usize {
 }
 
 /// Midpoint of the bucket's value range — what percentile queries return.
-fn bucket_value(idx: usize) -> u64 {
+///
+/// A bucket in octave `o` covers the `step = 2^(o-5)` integers
+/// `[edge, edge + step)`, so the midpoint of the *recordable* values is
+/// `edge + (step − 1)/2` — computed in f64 so the first octave
+/// (`step = 1`, one value per bucket) returns the value itself instead
+/// of truncating `step/2` to zero and collapsing onto the lower edge,
+/// and even-width buckets land between their two central values rather
+/// than biased high. Worst-case error is `(step − 1)/2` against an edge
+/// of at least `32·step`: within 1/64 (≈1.6%) of any recorded value.
+fn bucket_value(idx: usize) -> f64 {
     if idx < LINEAR_CUTOVER as usize {
-        return idx as u64;
+        return idx as f64;
     }
     let rel = idx - LINEAR_CUTOVER as usize;
     let octave = 5 + rel / SUB_BUCKETS;
     let sub = (rel % SUB_BUCKETS) as u64;
     let step = 1u64 << (octave - 5);
-    (LINEAR_CUTOVER + sub) * step + step / 2
+    let edge = (LINEAR_CUTOVER + sub) as f64 * step as f64;
+    edge + (step - 1) as f64 / 2.0
 }
 
 impl LogHistogram {
@@ -101,7 +111,7 @@ impl LogHistogram {
         for (idx, &c) in self.counts.iter().enumerate() {
             seen += c;
             if seen > rank {
-                return bucket_value(idx) as f64;
+                return bucket_value(idx);
             }
         }
         self.max as f64
@@ -115,6 +125,15 @@ impl LogHistogram {
         self.total += other.total;
         self.sum = self.sum.saturating_add(other.sum);
         self.max = self.max.max(other.max);
+    }
+
+    /// Zero every counter, keeping the bucket allocation — the per-lane
+    /// executors reuse one scratch histogram across batches.
+    pub fn clear(&mut self) {
+        self.counts.fill(0);
+        self.total = 0;
+        self.sum = 0;
+        self.max = 0;
     }
 }
 
@@ -160,6 +179,22 @@ impl ClassMetrics {
             return 0.0;
         }
         self.downgrades as f64 / self.requests as f64
+    }
+
+    fn merge_from(&mut self, other: &ClassMetrics) {
+        self.latencies_us.merge(&other.latencies_us);
+        self.queue_waits_us.merge(&other.queue_waits_us);
+        self.requests += other.requests;
+        self.downgrades += other.downgrades;
+        self.deadline_misses += other.deadline_misses;
+    }
+
+    fn clear(&mut self) {
+        self.latencies_us.clear();
+        self.queue_waits_us.clear();
+        self.requests = 0;
+        self.downgrades = 0;
+        self.deadline_misses = 0;
     }
 }
 
@@ -242,6 +277,42 @@ impl Metrics {
             return 0.0;
         }
         self.total_requests as f64 / s
+    }
+
+    /// Fold another `Metrics` into this one: histograms merge bucket-wise
+    /// ([`LogHistogram::merge`]), counters add, and per-class breakdowns
+    /// are matched by label (created on first sight). `wall_time` is the
+    /// owner's clock and is left untouched. This is the aggregation path
+    /// for the per-lane QoS executors: each lane records into a local
+    /// sink and folds it into the shared `Metrics` once per batch, so no
+    /// response ever takes the global mutex individually.
+    pub fn merge_from(&mut self, other: &Metrics) {
+        self.latencies_us.merge(&other.latencies_us);
+        self.queue_waits_us.merge(&other.queue_waits_us);
+        self.batch_size_sum += other.batch_size_sum;
+        self.batch_obs += other.batch_obs;
+        self.total_requests += other.total_requests;
+        for oc in other.classes.iter().filter(|c| c.requests > 0) {
+            match self.classes.iter_mut().find(|c| c.label == oc.label) {
+                Some(c) => c.merge_from(oc),
+                None => self.classes.push(oc.clone()),
+            }
+        }
+    }
+
+    /// Zero every counter while keeping allocations (histogram buckets,
+    /// class entries) — the executors' scratch sink is cleared after each
+    /// fold instead of reallocated.
+    pub fn clear(&mut self) {
+        self.latencies_us.clear();
+        self.queue_waits_us.clear();
+        self.batch_size_sum = 0;
+        self.batch_obs = 0;
+        self.total_requests = 0;
+        self.wall_time = Duration::ZERO;
+        for c in &mut self.classes {
+            c.clear();
+        }
     }
 
     /// Per-class breakdowns (first-seen order).
@@ -337,6 +408,52 @@ mod tests {
         }
     }
 
+    /// Property: a single-valued histogram round-trips through
+    /// `percentile` within the advertised ≈1.6% relative error at every
+    /// octave — including the first log octave, where `step = 1` buckets
+    /// hold exactly one integer and the midpoint must be that value (the
+    /// old integer `step / 2` midpoint truncated to the lower edge).
+    #[test]
+    fn single_value_round_trips_across_octaves() {
+        let mut cases: Vec<u64> = (0..64).collect(); // exact range + first octave edge
+        for octave in 5..62 {
+            let lo = 1u64 << octave;
+            // sweep the octave: both edges, sub-bucket boundaries, and
+            // a deterministic scatter of interior values
+            for k in 0..SUB_BUCKETS as u64 {
+                cases.push(lo + k * (lo / SUB_BUCKETS as u64).max(1));
+            }
+            cases.push(lo);
+            cases.push(2 * lo - 1);
+            cases.push(lo + (octave as u64 * 2654435761) % lo);
+        }
+        for v in cases {
+            let mut h = LogHistogram::default();
+            h.record(v);
+            for p in [0.0, 50.0, 100.0] {
+                let got = h.percentile(p);
+                let err = (got - v as f64).abs();
+                assert!(
+                    err <= (v as f64 / 64.0).max(0.0),
+                    "value {v}: percentile({p}) = {got}, relative error {}",
+                    err / (v as f64).max(1.0)
+                );
+            }
+        }
+    }
+
+    /// The first log octave is exact: one integer per bucket, and the
+    /// midpoint is that integer, not the (identical) lower edge by luck
+    /// of truncation.
+    #[test]
+    fn first_octave_midpoints_are_exact() {
+        for v in LINEAR_CUTOVER..2 * LINEAR_CUTOVER {
+            let mut h = LogHistogram::default();
+            h.record(v);
+            assert_eq!(h.percentile(50.0), v as f64, "octave-5 bucket for {v} lost precision");
+        }
+    }
+
     #[test]
     fn histogram_merge_accumulates() {
         let (mut a, mut b) = (LogHistogram::default(), LogHistogram::default());
@@ -346,6 +463,38 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 3);
         assert_eq!(a.max(), 500);
+    }
+
+    /// The per-lane executor aggregation path: record locally, fold into
+    /// a shared sink with `merge_from`, clear and reuse the scratch.
+    #[test]
+    fn merge_from_folds_classes_and_clear_reuses_the_sink() {
+        let ms = Duration::from_millis;
+        let mut global = Metrics::default();
+        global.record_class("gold", ms(5), Duration::ZERO, 2, false, false);
+
+        let mut scratch = Metrics::default();
+        scratch.record_class("gold", ms(7), ms(1), 2, false, true);
+        scratch.record_class("economy", ms(40), ms(9), 4, true, false);
+        global.merge_from(&scratch);
+        scratch.clear();
+        assert_eq!(scratch.total_requests, 0);
+        assert_eq!(scratch.latencies_us.count(), 0);
+
+        // a second batch through the cleared scratch
+        scratch.record_class("economy", ms(50), ms(10), 4, false, false);
+        global.merge_from(&scratch);
+
+        assert_eq!(global.total_requests, 4);
+        let gold = global.class("gold").unwrap();
+        assert_eq!((gold.requests, gold.deadline_misses), (2, 1));
+        let eco = global.class("economy").unwrap();
+        assert_eq!((eco.requests, eco.downgrades), (2, 1));
+        // cleared class entries (economy had no gold traffic in batch 2)
+        // must not seed zero-count classes in the global view
+        assert_eq!(global.classes().len(), 2);
+        assert!(eco.latency_p(50.0) >= 40.0 * (1.0 - 1.0 / 32.0));
+        assert_eq!(global.mean_batch_size(), (2 + 2 + 4 + 4) as f64 / 4.0);
     }
 
     #[test]

@@ -18,6 +18,6 @@ pub use engine::{forward_batch, forward_batch_ref, ExecMode};
 pub use metrics::{ClassMetrics, LogHistogram, Metrics};
 pub use qos::{
     LaneReport, LaneSet, LaneSpec, LaneStep, QosClass, QosConfig, QosReport, QosResponse,
-    QosServer, ShedPolicy,
+    QosServer, ShedPolicy, WorkerMode,
 };
 pub use server::{InferenceServer, PreparedBackend, RustBackend, ServerConfig};

@@ -24,6 +24,43 @@
 //!   the plan's predicted §4 bound the lane hot-swaps to the next-safer
 //!   step of its precision ladder through the existing schedule-swap
 //!   path — without dropping a single in-flight request.
+//!
+//! # Execution: reference scheduler vs per-lane executors
+//!
+//! Two [`WorkerMode`]s execute the routed batches:
+//!
+//! * [`WorkerMode::Single`] — the reference scheduler: one thread owns
+//!   every lane and runs scheduling, forwards, and telemetry probes
+//!   serially. Simple and easy to reason about, but an economy batch
+//!   (plus its f32 probe forward) blocks a gold deadline behind it. The
+//!   bit-exactness suites pin against this mode.
+//! * [`WorkerMode::PerLane`] — the scaling configuration: a *dispatcher*
+//!   thread keeps ownership of the EDF queues and the linger/shed
+//!   policy, and hands each class-pure batch over a bounded queue to a
+//!   long-lived *executor* thread per lane. The dispatcher is never
+//!   parked on one lane: the EDF pick prefers the most urgent class
+//!   whose lane has queue room, and an offer that finds the lane still
+//!   full after a short grace period bounces back into the EDF heaps —
+//!   so a full economy queue cannot head-of-line-block a gold dispatch,
+//!   and the shed policy keeps seeing the true backlog. Lanes execute
+//!   concurrently, so gold never stalls behind cheaper work; the
+//!   telemetry probe runs
+//!   on the owning lane's executor *after* that batch's responses are
+//!   out, and hot-swaps stay confined to that executor. Idle executors
+//!   may *steal* eligible batches from the adjacent safer class (moving
+//!   the work exactly one lane cheaper and recording a downgrade —
+//!   never from `Gold`, and into the shed lane only when one is
+//!   configured). Per-lane metrics are recorded into a local sink and
+//!   folded into the shared [`Metrics`] once per batch
+//!   ([`Metrics::merge_from`]), so no response ever takes the global
+//!   mutex individually. Each executor budgets its nested GEMM/panel
+//!   parallelism to `ambient_threads / lanes`
+//!   ([`pool::share_threads`]), so concurrent lanes don't oversubscribe
+//!   the machine.
+//!
+//! Routing, batch formation, and per-request logits are identical in
+//! both modes (the integration suite asserts bit-exactness between
+//! them); only concurrency and metric aggregation differ.
 
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
@@ -32,11 +69,12 @@ use crate::models::Model;
 use crate::nn::prepared::{PreparedModel, SharedWeightCache, WeightCache};
 use crate::nn::Fp32Exec;
 use crate::quant::{BfpConfig, LayerSchedule};
+use crate::runtime::pool;
 use crate::telemetry::{MonitorConfig, NsrMonitor, Verdict};
 use crate::tensor::Tensor;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -85,6 +123,64 @@ impl QosClass {
             QosClass::Gold => 0,
             QosClass::Standard => 1,
             QosClass::Economy => 2,
+        }
+    }
+}
+
+/// How routed batches execute: the single-thread reference scheduler, or
+/// one dispatcher plus one executor thread per lane (see the module
+/// docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerMode {
+    /// One thread owns every lane: scheduling, forwards and telemetry
+    /// probes run serially. The bit-exactness reference.
+    Single,
+    /// Dispatcher + one executor thread per lane over bounded queues.
+    /// With `steal`, an idle executor takes eligible batches from the
+    /// adjacent safer class (one lane cheaper, never gold, recorded as a
+    /// downgrade).
+    PerLane {
+        steal: bool,
+    },
+}
+
+impl WorkerMode {
+    /// Parse a CLI/env spelling: `single`, `per-lane`,
+    /// `per-lane-nosteal`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "single" => Some(WorkerMode::Single),
+            "per-lane" | "perlane" => Some(WorkerMode::PerLane { steal: true }),
+            "per-lane-nosteal" => Some(WorkerMode::PerLane { steal: false }),
+            _ => None,
+        }
+    }
+
+    /// Resolve from `BFP_QOS_WORKERS` (the CI matrix runs the QoS suite
+    /// under both schedulers via this knob); unset or invalid values
+    /// fall back to the single-worker reference.
+    pub fn from_env() -> Self {
+        match std::env::var("BFP_QOS_WORKERS") {
+            Ok(v) => {
+                let v = v.trim();
+                Self::parse(v).unwrap_or_else(|| {
+                    if !v.is_empty() {
+                        eprintln!(
+                            "BFP_QOS_WORKERS={v} not recognized (single|per-lane|per-lane-nosteal); using single"
+                        );
+                    }
+                    WorkerMode::Single
+                })
+            }
+            Err(_) => WorkerMode::Single,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkerMode::Single => "single",
+            WorkerMode::PerLane { steal: true } => "per-lane",
+            WorkerMode::PerLane { steal: false } => "per-lane-nosteal",
         }
     }
 }
@@ -240,6 +336,7 @@ pub struct QosConfig {
     pub policy: BatchPolicy,
     pub shed: ShedPolicy,
     pub monitor: MonitorConfig,
+    pub workers: WorkerMode,
 }
 
 impl Default for QosConfig {
@@ -248,6 +345,7 @@ impl Default for QosConfig {
             policy: BatchPolicy::default(),
             shed: ShedPolicy::default(),
             monitor: MonitorConfig::default(),
+            workers: WorkerMode::from_env(),
         }
     }
 }
@@ -323,9 +421,18 @@ impl EdfQueues {
 
     /// EDF across classes: the class whose head request is most urgent.
     fn pick_class(&self) -> Option<QosClass> {
+        self.pick_class_where(|_| true)
+    }
+
+    /// [`EdfQueues::pick_class`] restricted to classes accepted by
+    /// `eligible` — the per-lane dispatcher filters out classes whose
+    /// target lane queue is backed up, so one slow lane never
+    /// head-of-line-blocks dispatch for the others.
+    fn pick_class_where(&self, eligible: impl Fn(QosClass) -> bool) -> Option<QosClass> {
         QosClass::ALL
             .iter()
             .copied()
+            .filter(|&c| eligible(c))
             .filter_map(|c| self.heaps[c.rank()].peek().map(|e| (e.0.deadline, e.0.seq, c)))
             .min_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)))
             .map(|(_, _, c)| c)
@@ -387,13 +494,16 @@ impl Lane {
         &self.ladder[self.pos]
     }
 
-    /// Forward one class-pure batch. For a sampled batch the first image
-    /// is returned as the telemetry probe input — the probe itself
+    /// Forward one class-pure batch. For a sampled batch the probe
+    /// position (rotating across sampled batches —
+    /// [`NsrMonitor::tick_batch_probe`]) and its input image are
+    /// returned as the telemetry probe ticket; the probe itself
     /// ([`Lane::probe`]) runs *after* the batch's responses have been
     /// sent, so its extra f32 reference forward never sits on the
     /// response path.
-    fn forward(&mut self, images: Vec<Tensor>) -> (Vec<Tensor>, Option<Tensor>) {
-        let probe_input = if self.monitor.tick_batch() { Some(images[0].clone()) } else { None };
+    fn forward(&mut self, images: Vec<Tensor>) -> (Vec<Tensor>, Option<(usize, Tensor)>) {
+        let probe_input =
+            self.monitor.tick_batch_probe(images.len()).map(|idx| (idx, images[idx].clone()));
         let outputs = self.prepared.forward_batch(images);
         self.batches += 1;
         (outputs, probe_input)
@@ -413,8 +523,10 @@ impl Lane {
 
     /// Hot-swap to the next-safer ladder rung through the prepared
     /// model's schedule-swap path. In-flight batches are unaffected: the
-    /// swap happens between batches on the serving thread, and queued
-    /// requests simply execute under the safer schedule.
+    /// swap happens between batches on the lane's owning thread (the
+    /// serving thread in single-worker mode, the lane's executor in
+    /// per-lane mode), and queued requests simply execute under the
+    /// safer schedule.
     fn swap_safer(&mut self) {
         if self.pos + 1 >= self.ladder.len() {
             return; // already at the safest rung
@@ -462,104 +574,156 @@ pub struct LaneReport {
 pub struct QosReport {
     pub metrics: Metrics,
     pub lanes: Vec<LaneReport>,
+    /// The serving thread (or the dispatcher) panicked before shutdown:
+    /// `metrics` covers everything recorded up to the failure, and
+    /// `lanes` holds whatever executors could still be joined — a
+    /// partial report instead of a propagated panic.
+    pub worker_panic: bool,
 }
 
-// ---- the server ------------------------------------------------------
+// ---- batch delivery (shared by both worker modes) --------------------
 
-/// Handle to a running QoS precision router.
-pub struct QosServer {
-    tx: Option<Sender<QueuedRequest>>,
-    worker: Option<JoinHandle<Vec<LaneReport>>>,
-    metrics: Arc<Mutex<Metrics>>,
-    next_id: u64,
-    started: Instant,
+/// A routed, class-pure batch in flight from the scheduler to a lane.
+struct LaneBatch {
+    class: QosClass,
+    batch_seq: u64,
+    /// The dispatcher routed it one lane cheaper under pressure, or an
+    /// idle executor stole it from the adjacent safer class.
+    downgraded: bool,
+    images: Vec<Tensor>,
+    meta: Vec<ResponseMeta>,
 }
 
-impl QosServer {
-    /// Build every lane over one shared weight cache and spawn the
-    /// scheduler/worker thread.
-    pub fn start(model: Model, set: &LaneSet, config: QosConfig) -> Self {
-        let cache = WeightCache::shared();
-        let mut lanes = vec![
-            Lane::new("gold", model.clone(), &set.gold, &cache, config.monitor),
-            Lane::new("standard", model.clone(), &set.standard, &cache, config.monitor),
-            Lane::new("economy", model.clone(), &set.economy, &cache, config.monitor),
-        ];
-        if let Some(shed) = &set.shed {
-            lanes.push(Lane::new("shed", model, shed, &cache, config.monitor));
-        }
+/// Everything needed to answer one request after its forward.
+struct ResponseMeta {
+    id: u64,
+    respond: Sender<QosResponse>,
+    enqueued_at: Instant,
+    deadline: Instant,
+}
 
-        let (tx, rx): (Sender<QueuedRequest>, Receiver<QueuedRequest>) = channel();
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let metrics_worker = Arc::clone(&metrics);
-        let worker = std::thread::spawn(move || run_worker(rx, lanes, config, metrics_worker));
-        Self { tx: Some(tx), worker: Some(worker), metrics, next_id: 0, started: Instant::now() }
+fn split_requests(batch: Vec<QueuedRequest>) -> (Vec<Tensor>, Vec<ResponseMeta>) {
+    let mut images = Vec::with_capacity(batch.len());
+    let mut meta = Vec::with_capacity(batch.len());
+    for r in batch {
+        images.push(r.image);
+        meta.push(ResponseMeta {
+            id: r.id,
+            respond: r.respond,
+            enqueued_at: r.enqueued_at,
+            deadline: r.deadline,
+        });
     }
+    (images, meta)
+}
 
-    /// Submit one image under `class` with the class-default deadline.
-    pub fn submit(&mut self, class: QosClass, image: Tensor) -> Receiver<QosResponse> {
-        let deadline = class.default_deadline();
-        self.submit_with_deadline(class, image, deadline)
+/// Execute one routed batch on `lane` and answer every request in it.
+///
+/// One completion instant is captured for the whole batch, immediately
+/// after the forward: every response derives its latency *and* its
+/// deadline-miss flag from that single clock read, so two requests
+/// served in the same batch can never disagree on miss status because
+/// later responses absorbed metrics or channel-send time (they used to:
+/// `elapsed()`/`Instant::now()` were re-evaluated per response inside
+/// the send loop). Metrics are recorded into the caller's `scratch` sink
+/// and folded into `global` once per batch ([`Metrics::merge_from`]).
+/// The sampled telemetry probe — and any hot-swap it triggers for the
+/// *next* batch — runs last, after the responses are out, so its f32
+/// reference forward never sits on the response path. Returns the
+/// completion instant (the timing regression tests pin against it).
+fn deliver_batch(
+    lane: &mut Lane,
+    batch: LaneBatch,
+    scratch: &mut Metrics,
+    global: &Mutex<Metrics>,
+) -> Instant {
+    let LaneBatch { class, batch_seq, downgraded, images, meta } = batch;
+    let t0 = Instant::now();
+    let batch_size = images.len();
+    let (outputs, probe) = lane.forward(images);
+    // retained for the post-response telemetry probe (logits are small)
+    let probe = probe.map(|(idx, img)| (img, outputs[idx].clone()));
+    let served_by = lane.label.to_string();
+    let lane_plan = lane.step().label.clone();
+    let completed = Instant::now();
+    for (m, logits) in meta.into_iter().zip(outputs) {
+        let queue_wait = t0.duration_since(m.enqueued_at);
+        let latency = completed.duration_since(m.enqueued_at);
+        let deadline_missed = completed > m.deadline;
+        scratch.record_class(
+            class.name(),
+            latency,
+            queue_wait,
+            batch_size,
+            downgraded,
+            deadline_missed,
+        );
+        let _ = m.respond.send(QosResponse {
+            id: m.id,
+            logits,
+            class,
+            served_by: served_by.clone(),
+            lane_plan: lane_plan.clone(),
+            downgraded,
+            deadline_missed,
+            queue_wait,
+            batch_size,
+            batch_seq,
+        });
     }
-
-    /// Submit with an explicit per-request deadline (relative to now).
-    pub fn submit_with_deadline(
-        &mut self,
-        class: QosClass,
-        image: Tensor,
-        deadline: Duration,
-    ) -> Receiver<QosResponse> {
-        let (tx, rx) = channel();
-        self.next_id += 1;
-        let now = Instant::now();
-        self.tx
-            .as_ref()
-            .expect("server stopped")
-            .send(QueuedRequest {
-                id: self.next_id,
-                class,
-                image,
-                respond: tx,
-                enqueued_at: now,
-                deadline: now + deadline,
-                seq: self.next_id,
-            })
-            .expect("qos worker gone");
-        rx
+    global.lock().unwrap().merge_from(scratch);
+    scratch.clear();
+    if let Some((img, out)) = probe {
+        lane.probe(img, &out);
     }
+    completed
+}
 
-    /// Submit and wait (tests / simple clients).
-    pub fn infer(&mut self, class: QosClass, image: Tensor) -> QosResponse {
-        self.submit(class, image).recv().expect("qos worker dropped response")
-    }
+// ---- the scheduler core ----------------------------------------------
 
-    /// Snapshot of the metrics so far (the wall time keeps running).
-    pub fn metrics(&self) -> Metrics {
-        let mut m = self.metrics.lock().unwrap().clone();
-        m.wall_time = self.started.elapsed();
-        m
-    }
-
-    /// Drain the queues, stop the worker, and return the final report.
-    pub fn shutdown(mut self) -> QosReport {
-        drop(self.tx.take());
-        let lanes = self
-            .worker
-            .take()
-            .map(|w| w.join().expect("qos worker panicked"))
-            .unwrap_or_default();
-        let mut metrics = self.metrics.lock().unwrap().clone();
-        metrics.wall_time = self.started.elapsed();
-        QosReport { metrics, lanes }
+/// Give a routed-but-undelivered batch back to the EDF heaps: its
+/// target lane's queue stayed full for the whole dispatch grace period.
+/// The requests keep their identity, deadlines and FIFO tie-break
+/// (`seq == id` by construction in `submit_with_deadline`), and will be
+/// re-batched — and re-routed, possibly to a cheaper lane if pressure
+/// has risen meanwhile — on a later pass.
+fn requeue(queues: &mut EdfQueues, batch: LaneBatch) {
+    let LaneBatch { class, images, meta, .. } = batch;
+    for (image, m) in images.into_iter().zip(meta) {
+        queues.push(QueuedRequest {
+            id: m.id,
+            class,
+            image,
+            respond: m.respond,
+            enqueued_at: m.enqueued_at,
+            deadline: m.deadline,
+            seq: m.id,
+        });
     }
 }
 
-fn run_worker(
-    rx: Receiver<QueuedRequest>,
-    mut lanes: Vec<Lane>,
-    config: QosConfig,
-    metrics: Arc<Mutex<Metrics>>,
-) -> Vec<LaneReport> {
+/// The EDF scheduling loop shared by the single-worker reference
+/// scheduler and the per-lane dispatcher: drain the submission channel
+/// into the per-class EDF heaps, linger anchored to the head request's
+/// enqueue time, route each class-pure batch under the shed policy, and
+/// hand `(lane index, batch)` to `dispatch` — which either executes it
+/// inline (single) or offers it to the lane's executor (per-lane).
+///
+/// `lane_ready(lane)` reports whether a lane can accept a batch right
+/// now; the EDF pick prefers the most urgent class whose routed lane is
+/// ready, so one backed-up lane never head-of-line-blocks dispatch for
+/// the other classes (a gold batch must not wait behind a full economy
+/// queue). When *no* candidate's lane is ready, plain EDF order is used
+/// and `dispatch` may return the batch undelivered — its requests go
+/// back into the heaps (where the shed policy still sees them as
+/// backlog) and the loop keeps draining the channel.
+fn scheduler_loop(
+    rx: &Receiver<QueuedRequest>,
+    config: &QosConfig,
+    lane_count: usize,
+    lane_ready: impl Fn(usize) -> bool,
+    mut dispatch: impl FnMut(usize, LaneBatch) -> Option<LaneBatch>,
+) {
     let mut queues = EdfQueues::default();
     let mut open = true;
     let mut batch_seq = 0u64;
@@ -581,7 +745,23 @@ fn run_worker(
                 Err(TryRecvError::Disconnected) => open = false,
             }
         }
-        let Some(mut class) = queues.pick_class() else { continue };
+        // most urgent class with a ready lane; with every candidate lane
+        // backed up, fall back to plain EDF and let `dispatch` bounce
+        let pick = |q: &EdfQueues| -> Option<QosClass> {
+            q.pick_class_where(|c| {
+                // readiness must validate the lane the dispatch below
+                // will actually target: route with the backlog as it
+                // will stand *after* popping this class's batch, or a
+                // candidate straddling the pressure threshold gets
+                // vetted against the downgrade lane and then offered to
+                // its (full) home lane
+                let popped = q.class_len(c).min(config.policy.max_batch);
+                let backlog = q.total() - popped;
+                lane_ready(route(c, backlog, &config.shed, lane_count).0)
+            })
+            .or_else(|| q.pick_class())
+        };
+        let Some(mut class) = pick(&queues) else { continue };
         // linger anchored at the head request's enqueue time (not batch
         // start): a request that already waited its linger in the channel
         // closes the batch immediately
@@ -605,58 +785,377 @@ fn run_worker(
                 }
             }
             // linger arrivals may be more urgent — EDF re-pick
-            class = queues.pick_class().expect("queues non-empty");
+            class = pick(&queues).expect("queues non-empty");
         }
         let batch = queues.pop_batch(class, config.policy.max_batch);
         let backlog = queues.total();
-        let (lane_idx, downgraded) = route(class, backlog, &config.shed, lanes.len());
-        let lane = &mut lanes[lane_idx];
+        let (lane_idx, downgraded) = route(class, backlog, &config.shed, lane_count);
         batch_seq += 1;
-        let t0 = Instant::now();
-        let batch_size = batch.len();
-        let mut images = Vec::with_capacity(batch_size);
-        let mut meta = Vec::with_capacity(batch_size);
-        for r in batch {
-            images.push(r.image);
-            meta.push((r.id, r.respond, r.enqueued_at, r.deadline));
-        }
-        let (outputs, probe_img) = lane.forward(images);
-        // retained for the post-response telemetry probe (logits are small)
-        let probe_out = probe_img.as_ref().map(|_| outputs[0].clone());
-        let served_by = lane.label.to_string();
-        let lane_plan = lane.step().label.clone();
-        for ((id, respond, enqueued_at, deadline), logits) in meta.into_iter().zip(outputs) {
-            let queue_wait = t0.duration_since(enqueued_at);
-            let latency = enqueued_at.elapsed();
-            let deadline_missed = Instant::now() > deadline;
-            metrics.lock().unwrap().record_class(
-                class.name(),
-                latency,
-                queue_wait,
-                batch_size,
-                downgraded,
-                deadline_missed,
-            );
-            let _ = respond.send(QosResponse {
-                id,
-                logits,
-                class,
-                served_by: served_by.clone(),
-                lane_plan: lane_plan.clone(),
-                downgraded,
-                deadline_missed,
-                queue_wait,
-                batch_size,
-                batch_seq,
-            });
-        }
-        // responses are out — now the sampled probe (and a possible
-        // hot-swap for the *next* batch) may spend its f32 forward
-        if let (Some(img), Some(out)) = (probe_img, probe_out) {
-            lane.probe(img, &out);
+        let (images, meta) = split_requests(batch);
+        let formed = LaneBatch { class, batch_seq, downgraded, images, meta };
+        if let Some(bounced) = dispatch(lane_idx, formed) {
+            requeue(&mut queues, bounced);
         }
     }
+}
+
+/// The single-worker reference scheduler: one thread owns every lane and
+/// executes each routed batch inline.
+fn run_worker(
+    rx: Receiver<QueuedRequest>,
+    mut lanes: Vec<Lane>,
+    config: QosConfig,
+    metrics: Arc<Mutex<Metrics>>,
+) -> Vec<LaneReport> {
+    let lane_count = lanes.len();
+    let mut scratch = Metrics::default();
+    scheduler_loop(
+        &rx,
+        &config,
+        lane_count,
+        |_| true, // inline execution: every lane is always "ready"
+        |lane_idx, batch| {
+            deliver_batch(&mut lanes[lane_idx], batch, &mut scratch, &metrics);
+            None
+        },
+    );
     lanes.iter().map(Lane::report).collect()
+}
+
+// ---- per-lane executors ----------------------------------------------
+
+/// Batches a lane's bounded queue may hold before the dispatcher stops
+/// offering it more. Small on purpose: backpressure keeps the backlog
+/// in the EDF heaps, where the shed policy can still see (and
+/// downgrade) it — the dispatcher skips backed-up lanes at the EDF pick
+/// and bounces (requeues) a batch whose lane stays full past the grace
+/// period, so it is never parked on one slow lane.
+const LANE_QUEUE_CAP: usize = 4;
+
+/// How long [`LaneQueues::offer`] waits for space before handing the
+/// batch back to the dispatcher. Short: the dispatcher must get back to
+/// draining the submission channel (a gold arrival must not sit behind
+/// a full economy queue for longer than this).
+const OFFER_GRACE: Duration = Duration::from_micros(500);
+
+/// The bounded hand-off queues between the dispatcher and the per-lane
+/// executors, with idle-steal across adjacent lanes.
+struct LaneQueues {
+    state: Mutex<QueueState>,
+    /// Executors wait here for work (or close).
+    work: Condvar,
+    /// The dispatcher waits here for queue space.
+    space: Condvar,
+}
+
+struct QueueState {
+    queues: Vec<VecDeque<LaneBatch>>,
+    /// The dispatcher is done: no further pushes.
+    closed: bool,
+    /// `dead[i]`: lane `i`'s executor exited (drained after close, or
+    /// panicked) — pushes to it are dropped instead of blocking forever.
+    dead: Vec<bool>,
+}
+
+impl LaneQueues {
+    fn new(lanes: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                queues: (0..lanes).map(|_| VecDeque::new()).collect(),
+                closed: false,
+                dead: vec![false; lanes],
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Can `lane` accept a batch right now? (A dead lane reports ready:
+    /// offering to it drops the batch immediately, which is how its
+    /// clients learn of the failure — blocking would help nobody.)
+    fn has_room(&self, lane: usize) -> bool {
+        let st = self.state.lock().unwrap();
+        st.dead[lane] || st.queues[lane].len() < LANE_QUEUE_CAP
+    }
+
+    /// Dispatcher: enqueue for `lane`, waiting up to [`OFFER_GRACE`] for
+    /// space. Returns the batch if the queue stayed full — the caller
+    /// requeues its requests and keeps scheduling other classes, so one
+    /// slow lane never head-of-line-blocks the dispatcher. If the lane's
+    /// executor has died, the batch is dropped — its responders
+    /// disconnect and clients observe the failure as a receive error
+    /// rather than a hang.
+    fn offer(&self, lane: usize, batch: LaneBatch) -> Option<LaneBatch> {
+        let mut st = self.state.lock().unwrap();
+        let deadline = Instant::now() + OFFER_GRACE;
+        while st.queues[lane].len() >= LANE_QUEUE_CAP && !st.dead[lane] {
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(batch); // still full — bounce it back
+            }
+            st = self.space.wait_timeout(st, deadline - now).unwrap().0;
+        }
+        if st.dead[lane] {
+            return None; // drop: responders close, clients error out
+        }
+        st.queues[lane].push_back(batch);
+        drop(st);
+        self.work.notify_all();
+        None
+    }
+
+    /// Executor for `lane`: pop its own queue; when idle and `steal` is
+    /// on, take one batch from the adjacent *safer* lane instead —
+    /// moving the work exactly one lane cheaper, which is the same edge
+    /// the pressure-downgrade path uses. Only batches still sitting on
+    /// their home lane are eligible (`!downgraded`, class matches the
+    /// source lane), so stolen work is never downgraded twice; gold
+    /// (lane 0) has no thief, and the shed lane exists only when
+    /// configured. Returns `None` once the dispatcher has closed and
+    /// nothing eligible remains; the bool is `true` for a stolen batch.
+    fn pop(&self, lane: usize, steal: bool) -> Option<(LaneBatch, bool)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(b) = st.queues[lane].pop_front() {
+                drop(st);
+                self.space.notify_all();
+                return Some((b, false));
+            }
+            if steal && lane >= 2 {
+                let src = lane - 1;
+                let eligible = st.queues[src]
+                    .iter()
+                    .position(|b| !b.downgraded && b.class.rank() == src);
+                if let Some(i) = eligible {
+                    let b = st.queues[src].remove(i).expect("position just found");
+                    drop(st);
+                    self.space.notify_all();
+                    return Some((b, true));
+                }
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.work.wait(st).unwrap();
+        }
+    }
+
+    /// Dispatcher is done: wake idle executors so they drain and exit.
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.work.notify_all();
+    }
+
+    /// Lane `lane`'s executor is gone (normal exit or panic). Drops any
+    /// batches still queued for it — their responders disconnect, so
+    /// waiting clients get an error instead of hanging — and wakes the
+    /// dispatcher so a push to the dead lane cannot block forever.
+    fn mark_dead(&self, lane: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.dead[lane] = true;
+        st.queues[lane].clear();
+        drop(st);
+        self.space.notify_all();
+        self.work.notify_all();
+    }
+}
+
+/// One lane's long-lived executor: pop (or steal) batches, execute and
+/// answer them, run the post-response telemetry probe, fold local
+/// metrics into the shared sink once per batch. Nested GEMM/panel
+/// parallelism is budgeted to `ambient / lanes` threads so concurrent
+/// executors don't oversubscribe the machine.
+fn run_executor(
+    mut lane: Lane,
+    lane_idx: usize,
+    queues: Arc<LaneQueues>,
+    steal: bool,
+    thread_budget: usize,
+    metrics: Arc<Mutex<Metrics>>,
+) -> LaneReport {
+    // mark the lane dead on ANY exit — drained or panicked — so the
+    // dispatcher never blocks pushing to a queue nobody will empty
+    struct DeadOnExit {
+        queues: Arc<LaneQueues>,
+        lane: usize,
+    }
+    impl Drop for DeadOnExit {
+        fn drop(&mut self) {
+            self.queues.mark_dead(self.lane);
+        }
+    }
+    let _guard = DeadOnExit { queues: Arc::clone(&queues), lane: lane_idx };
+    pool::with_threads(thread_budget, || {
+        let mut scratch = Metrics::default();
+        while let Some((mut batch, stolen)) = queues.pop(lane_idx, steal) {
+            if stolen {
+                batch.downgraded = true;
+            }
+            deliver_batch(&mut lane, batch, &mut scratch, &metrics);
+        }
+    });
+    lane.report()
+}
+
+/// The per-lane dispatcher: spawn one executor per lane, run the shared
+/// EDF scheduling loop handing batches over the bounded queues, then
+/// close the queues and join the executors. A panicked executor yields
+/// no `LaneReport` — the report is partial, never a propagated panic.
+fn run_dispatcher(
+    rx: Receiver<QueuedRequest>,
+    lanes: Vec<Lane>,
+    config: QosConfig,
+    metrics: Arc<Mutex<Metrics>>,
+    steal: bool,
+) -> Vec<LaneReport> {
+    // a steal serves requests on a cheaper plan — it is a downgrade, and
+    // obeys the same master switch as the pressure-downgrade path: an
+    // operator who disabled shedding gets strictly class-homed serving
+    let steal = steal && config.shed.enabled;
+    let lane_count = lanes.len();
+    let queues = Arc::new(LaneQueues::new(lane_count));
+    let thread_budget = pool::share_threads(lane_count);
+    let executors: Vec<JoinHandle<LaneReport>> = lanes
+        .into_iter()
+        .enumerate()
+        .map(|(i, lane)| {
+            let q = Arc::clone(&queues);
+            let m = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name(format!("qos-lane-{}", lane.label))
+                .spawn(move || run_executor(lane, i, q, steal, thread_budget, m))
+                .expect("spawn lane executor")
+        })
+        .collect();
+    scheduler_loop(
+        &rx,
+        &config,
+        lane_count,
+        |lane| queues.has_room(lane),
+        |lane_idx, batch| queues.offer(lane_idx, batch),
+    );
+    queues.close();
+    executors.into_iter().filter_map(|h| h.join().ok()).collect()
+}
+
+// ---- the server ------------------------------------------------------
+
+/// Handle to a running QoS precision router.
+pub struct QosServer {
+    tx: Option<Sender<QueuedRequest>>,
+    worker: Option<JoinHandle<Vec<LaneReport>>>,
+    metrics: Arc<Mutex<Metrics>>,
+    next_id: u64,
+    started: Instant,
+}
+
+impl QosServer {
+    /// Build every lane over one shared weight cache and spawn the
+    /// serving fabric per `config.workers`: the single scheduler/worker
+    /// thread, or the dispatcher plus one executor thread per lane.
+    pub fn start(model: Model, set: &LaneSet, config: QosConfig) -> Self {
+        let cache = WeightCache::shared();
+        let mut lanes = vec![
+            Lane::new("gold", model.clone(), &set.gold, &cache, config.monitor),
+            Lane::new("standard", model.clone(), &set.standard, &cache, config.monitor),
+            Lane::new("economy", model.clone(), &set.economy, &cache, config.monitor),
+        ];
+        if let Some(shed) = &set.shed {
+            lanes.push(Lane::new("shed", model, shed, &cache, config.monitor));
+        }
+
+        let (tx, rx): (Sender<QueuedRequest>, Receiver<QueuedRequest>) = channel();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics_worker = Arc::clone(&metrics);
+        let worker = match config.workers {
+            WorkerMode::Single => {
+                std::thread::spawn(move || run_worker(rx, lanes, config, metrics_worker))
+            }
+            WorkerMode::PerLane { steal } => std::thread::spawn(move || {
+                run_dispatcher(rx, lanes, config, metrics_worker, steal)
+            }),
+        };
+        Self { tx: Some(tx), worker: Some(worker), metrics, next_id: 0, started: Instant::now() }
+    }
+
+    /// Submit one image under `class` with the class-default deadline.
+    /// Errors when the serving fabric is gone (stopped, or its worker
+    /// panicked) instead of panicking the client.
+    pub fn submit(
+        &mut self,
+        class: QosClass,
+        image: Tensor,
+    ) -> anyhow::Result<Receiver<QosResponse>> {
+        let deadline = class.default_deadline();
+        self.submit_with_deadline(class, image, deadline)
+    }
+
+    /// Submit with an explicit per-request deadline (relative to now).
+    pub fn submit_with_deadline(
+        &mut self,
+        class: QosClass,
+        image: Tensor,
+        deadline: Duration,
+    ) -> anyhow::Result<Receiver<QosResponse>> {
+        let (tx, rx) = channel();
+        self.next_id += 1;
+        let now = Instant::now();
+        let worker = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("qos server already shut down"))?;
+        worker
+            .send(QueuedRequest {
+                id: self.next_id,
+                class,
+                image,
+                respond: tx,
+                enqueued_at: now,
+                deadline: now + deadline,
+                seq: self.next_id,
+            })
+            .map_err(|_| {
+                anyhow::anyhow!(
+                    "qos worker is gone (panicked or exited); {} request {} rejected",
+                    class.name(),
+                    self.next_id
+                )
+            })?;
+        Ok(rx)
+    }
+
+    /// Submit and wait (tests / simple clients). A worker that dies
+    /// mid-request surfaces as an error, not a client-side panic.
+    pub fn infer(&mut self, class: QosClass, image: Tensor) -> anyhow::Result<QosResponse> {
+        self.submit(class, image)?.recv().map_err(|_| {
+            anyhow::anyhow!("qos worker dropped the response (lane executor died mid-request)")
+        })
+    }
+
+    /// Snapshot of the metrics so far (the wall time keeps running).
+    pub fn metrics(&self) -> Metrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.wall_time = self.started.elapsed();
+        m
+    }
+
+    /// Drain the queues, stop the workers, and return the final report.
+    /// A panicked worker yields a *partial* report (`worker_panic` set,
+    /// metrics up to the failure, whatever lane reports survive) instead
+    /// of propagating the panic into the caller.
+    pub fn shutdown(mut self) -> QosReport {
+        drop(self.tx.take());
+        let (lanes, worker_panic) = match self.worker.take() {
+            Some(w) => match w.join() {
+                Ok(lanes) => (lanes, false),
+                Err(_) => (Vec::new(), true),
+            },
+            None => (Vec::new(), false),
+        };
+        let mut metrics = self.metrics.lock().unwrap().clone();
+        metrics.wall_time = self.started.elapsed();
+        QosReport { metrics, lanes, worker_panic }
+    }
 }
 
 #[cfg(test)]
@@ -695,6 +1194,11 @@ mod tests {
             deadline: now + Duration::from_millis(deadline_ms),
             seq,
         }
+    }
+
+    /// An empty routed batch shell for the queue/steal unit tests.
+    fn lane_batch(class: QosClass, batch_seq: u64, downgraded: bool) -> LaneBatch {
+        LaneBatch { class, batch_seq, downgraded, images: Vec::new(), meta: Vec::new() }
     }
 
     #[test]
@@ -764,6 +1268,107 @@ mod tests {
     }
 
     #[test]
+    fn worker_mode_parses_and_names_round_trip() {
+        for mode in [
+            WorkerMode::Single,
+            WorkerMode::PerLane { steal: true },
+            WorkerMode::PerLane { steal: false },
+        ] {
+            assert_eq!(WorkerMode::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(WorkerMode::parse("perlane"), Some(WorkerMode::PerLane { steal: true }));
+        assert_eq!(WorkerMode::parse("threads"), None);
+    }
+
+    /// Accepted offers return `None`; the tests below rely on it.
+    fn push_ok(q: &LaneQueues, lane: usize, batch: LaneBatch) {
+        assert!(q.offer(lane, batch).is_none(), "offer to lane {lane} unexpectedly bounced");
+    }
+
+    /// Steal eligibility: only from the adjacent safer lane, only
+    /// batches still on their home lane, never from gold.
+    #[test]
+    fn lane_queues_steal_moves_work_one_lane_cheaper_and_never_gold() {
+        let q = LaneQueues::new(4);
+        push_ok(&q, 0, lane_batch(QosClass::Gold, 1, false));
+        push_ok(&q, 1, lane_batch(QosClass::Standard, 2, false));
+        // a pressure-downgraded standard batch sitting on the economy
+        // lane: not stealable (it would be downgraded twice)
+        push_ok(&q, 2, lane_batch(QosClass::Standard, 3, true));
+
+        // the standard executor (lane 1) must NOT steal gold's batch:
+        // its own queue has work anyway, and after draining it the only
+        // candidate source would be lane 0, which stealing never touches
+        let (own, stolen) = q.pop(1, true).expect("own batch");
+        assert_eq!((own.batch_seq, stolen), (2, false));
+
+        // economy's executor (lane 2) pops its own (downgraded) batch
+        // first — and once lane 1 is empty there is nothing to steal
+        let (own, stolen) = q.pop(2, true).expect("own batch");
+        assert_eq!((own.batch_seq, stolen), (3, false));
+
+        // a fresh standard batch on its home lane IS stealable by the
+        // economy executor, and arrives flagged as stolen
+        push_ok(&q, 1, lane_batch(QosClass::Standard, 4, false));
+        let (sb, stolen) = q.pop(2, true).expect("stolen batch");
+        assert_eq!((sb.batch_seq, sb.class, stolen), (4, QosClass::Standard, true));
+
+        // the shed executor (lane 3) steals economy's home-lane batches
+        push_ok(&q, 2, lane_batch(QosClass::Economy, 5, false));
+        let (b, stolen) = q.pop(3, true).expect("stolen economy batch");
+        assert_eq!((b.batch_seq, stolen), (5, true));
+
+        // gold's batch is still exactly where it was left
+        let (g, stolen) = q.pop(0, true).expect("gold batch untouched");
+        assert_eq!((g.batch_seq, stolen), (1, false));
+
+        // with stealing off, an idle executor sees nothing after close
+        push_ok(&q, 1, lane_batch(QosClass::Standard, 6, false));
+        q.close();
+        assert!(q.pop(2, false).is_none(), "nosteal executor must drain only its own lane");
+        let (b, _) = q.pop(1, false).expect("home lane still drains after close");
+        assert_eq!(b.batch_seq, 6);
+        assert!(q.pop(1, false).is_none(), "closed and empty");
+    }
+
+    /// A full lane reports no room and bounces the offer back after the
+    /// grace period instead of parking the dispatcher on it; draining
+    /// one batch reopens the lane.
+    #[test]
+    fn full_lane_bounces_offers_instead_of_blocking() {
+        let q = LaneQueues::new(2);
+        for seq in 0..LANE_QUEUE_CAP as u64 {
+            push_ok(&q, 1, lane_batch(QosClass::Standard, seq, false));
+        }
+        assert!(!q.has_room(1), "lane at capacity must report backed up");
+        assert!(q.has_room(0), "other lanes are unaffected");
+        let bounced = q.offer(1, lane_batch(QosClass::Standard, 99, false));
+        let bounced = bounced.expect("offer to a full lane must bounce, not block");
+        assert_eq!(bounced.batch_seq, 99, "the bounced batch comes back intact");
+        // draining one batch reopens the lane for the retried offer
+        let (first, _) = q.pop(1, false).expect("queued batch");
+        assert_eq!(first.batch_seq, 0);
+        assert!(q.has_room(1));
+        push_ok(&q, 1, bounced);
+    }
+
+    /// A dead lane must swallow offers instead of blocking the
+    /// dispatcher forever (the batch's responders disconnect, which is
+    /// what clients observe as the executor's failure).
+    #[test]
+    fn lane_queues_drop_offers_to_dead_lanes() {
+        let q = LaneQueues::new(2);
+        q.mark_dead(1);
+        assert!(q.has_room(1), "dead lane reports ready so offers reach the drop path");
+        for seq in 0..(LANE_QUEUE_CAP as u64 + 3) {
+            // must neither block nor bounce — the batch is dropped
+            assert!(q.offer(1, lane_batch(QosClass::Standard, seq, false)).is_none());
+        }
+        q.close();
+        assert!(q.pop(1, false).is_none());
+    }
+
+    #[test]
     fn lane_set_ladders_fall_back_through_safer_classes() {
         let set = LaneSet::from_steps(
             LaneStep::uniform(9, 9),
@@ -813,9 +1418,10 @@ mod tests {
         let mcfg = MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 };
         let mut lane = Lane::new("economy", model.clone(), &spec, &cache, mcfg);
         assert_eq!(lane.pos, 0);
-        let (out_noisy, probe_img) = lane.forward(vec![image(5)]);
+        let (out_noisy, probe) = lane.forward(vec![image(5)]);
         assert_eq!(lane.pos, 0, "probe (and any swap) must wait until responses are out");
-        lane.probe(probe_img.expect("sample_every=1 probes every batch"), &out_noisy[0]);
+        let (idx, probe_img) = probe.expect("sample_every=1 probes every batch");
+        lane.probe(probe_img, &out_noisy[idx]);
         assert_eq!(lane.pos, 1, "violation did not trigger the hot-swap");
         assert_eq!(lane.swaps, 1);
         assert_eq!(lane.monitor.probes(), 0, "probe window must reset after a swap");
@@ -823,7 +1429,8 @@ mod tests {
         // standalone prepared model on that schedule
         let (out_safe, probe2) = lane.forward(vec![image(5)]);
         // the safer rung carries no finite bound → probing never swaps again
-        lane.probe(probe2.unwrap(), &out_safe[0]);
+        let (idx2, img2) = probe2.unwrap();
+        lane.probe(img2, &out_safe[idx2]);
         assert_eq!((lane.pos, lane.swaps), (1, 1));
         let safer = PreparedModel::new(model, LayerSchedule::uniform(BfpConfig::new(8, 8)));
         let reference = safer.forward(&image(5));
@@ -848,48 +1455,170 @@ mod tests {
         )]);
         let mcfg = MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 };
         let mut lane = Lane::new("gold", model, &spec, &cache, mcfg);
-        let (out, probe_img) = lane.forward(vec![image(6)]);
-        lane.probe(probe_img.unwrap(), &out[0]);
+        let (out, probe) = lane.forward(vec![image(6)]);
+        let (idx, img) = probe.unwrap();
+        lane.probe(img, &out[idx]);
         assert_eq!(lane.pos, 0);
         assert_eq!(lane.swaps, 0, "single-rung ladder cannot swap");
     }
 
-    /// End-to-end smoke over the tiny model: three classes, responses for
-    /// everyone, per-class metrics populated.
+    /// The probe position rotates across a lane's sampled batches
+    /// instead of pinning itself to the most-urgent image 0.
     #[test]
-    fn qos_server_serves_all_classes() {
+    fn lane_probe_position_covers_the_batch() {
+        let model = tiny_model(9);
+        let cache = WeightCache::shared();
+        let spec = LaneSpec::new(vec![LaneStep::uniform(8, 8)]);
+        let mcfg = MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 };
+        let mut lane = Lane::new("gold", model, &spec, &cache, mcfg);
+        let mut seen = Vec::new();
+        for round in 0..6 {
+            let batch: Vec<Tensor> = (0..3).map(|i| image(100 + round * 3 + i)).collect();
+            let (outputs, probe) = lane.forward(batch);
+            let (idx, img) = probe.expect("sample_every=1");
+            // the ticket's image is the one at the rotated position
+            assert_eq!(outputs.len(), 3);
+            seen.push(idx);
+            lane.probe(img, &outputs[idx]);
+        }
+        assert_eq!(seen, vec![0, 1, 2, 0, 1, 2], "probe index must cycle the batch");
+    }
+
+    /// Satellite regression for the per-response timing skew: every
+    /// response of a batch derives latency and deadline-miss from ONE
+    /// completion instant, so requests sharing a deadline can never
+    /// disagree on miss status because later sends absorbed
+    /// metrics/channel time.
+    #[test]
+    fn batch_responses_share_one_completion_instant() {
+        let model = tiny_model(11);
+        let cache = WeightCache::shared();
+        let spec = LaneSpec::new(vec![LaneStep::uniform(8, 8)]);
+        let mcfg = MonitorConfig { sample_every: 0, ..Default::default() };
+        let mut lane = Lane::new("gold", model, &spec, &cache, mcfg);
+
+        let enqueued_at = Instant::now();
+        // a deadline the forward may or may not beat — the point is that
+        // whichever way it lands, every member must land the same way
+        let deadline = enqueued_at + Duration::from_micros(300);
+        let mut rxs = Vec::new();
+        let mut meta = Vec::new();
+        let mut images = Vec::new();
+        for id in 0..4u64 {
+            let (tx, rx) = channel();
+            rxs.push(rx);
+            meta.push(ResponseMeta { id, respond: tx, enqueued_at, deadline });
+            images.push(image(40 + id));
+        }
+        let batch =
+            LaneBatch { class: QosClass::Gold, batch_seq: 1, downgraded: false, images, meta };
+        let global = Mutex::new(Metrics::default());
+        let mut scratch = Metrics::default();
+        let completed = deliver_batch(&mut lane, batch, &mut scratch, &global);
+
+        let responses: Vec<QosResponse> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let want_missed = completed > deadline;
+        for r in &responses {
+            assert_eq!(
+                r.deadline_missed, want_missed,
+                "response {} disagrees with the batch completion instant",
+                r.id
+            );
+        }
+        // identical enqueue instants ⇒ identical derived latencies; the
+        // old per-response elapsed() made these strictly increasing
+        let m = global.lock().unwrap();
+        let gold = m.class("gold").expect("batch recorded");
+        assert_eq!(gold.requests, 4);
+        assert_eq!(gold.deadline_misses, if want_missed { 4 } else { 0 });
+        assert_eq!(scratch.total_requests, 0, "scratch must be cleared after the fold");
+    }
+
+    /// End-to-end smoke over the tiny model: three classes, responses for
+    /// everyone, per-class metrics populated — in every worker mode.
+    #[test]
+    fn qos_server_serves_all_classes_in_every_worker_mode() {
+        for workers in [
+            WorkerMode::Single,
+            WorkerMode::PerLane { steal: true },
+            WorkerMode::PerLane { steal: false },
+        ] {
+            let set = LaneSet::from_steps(
+                LaneStep::uniform(9, 9),
+                LaneStep::uniform(7, 7),
+                LaneStep::uniform(5, 5),
+                None,
+            );
+            let config = QosConfig {
+                policy: BatchPolicy { max_batch: 4, linger: Duration::from_millis(2) },
+                shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+                monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+                workers,
+            };
+            let mut server = QosServer::start(tiny_model(8), &set, config);
+            let mut pending = Vec::new();
+            for i in 0..9u64 {
+                let class = QosClass::ALL[(i % 3) as usize];
+                pending.push((class, server.submit(class, image(50 + i)).unwrap()));
+            }
+            for (class, rx) in pending {
+                let resp = rx.recv().expect("response");
+                assert_eq!(resp.class, class);
+                assert_eq!(
+                    resp.served_by,
+                    class.name(),
+                    "downgrade with shedding disabled ({})",
+                    workers.name()
+                );
+                assert!(!resp.downgraded);
+                assert_eq!(resp.logits.shape, vec![3 * 8 * 8]);
+            }
+            let report = server.shutdown();
+            assert!(!report.worker_panic);
+            assert_eq!(report.metrics.total_requests, 9, "mode {}", workers.name());
+            for class in QosClass::ALL {
+                let cm = report.metrics.class(class.name()).expect("class metrics");
+                assert_eq!(cm.requests, 3, "mode {}", workers.name());
+                assert_eq!(cm.downgrades, 0);
+            }
+            assert_eq!(report.lanes.len(), 3, "mode {}", workers.name());
+            assert!(report.lanes.iter().all(|l| l.swaps == 0));
+        }
+    }
+
+    /// A request whose image violates the model input shape panics the
+    /// serving thread; clients must see errors (submit refused, response
+    /// dropped) and shutdown must still produce a partial report.
+    #[test]
+    fn dead_worker_surfaces_errors_not_panics() {
         let set = LaneSet::from_steps(
-            LaneStep::uniform(9, 9),
-            LaneStep::uniform(7, 7),
-            LaneStep::uniform(5, 5),
+            LaneStep::uniform(8, 8),
+            LaneStep::uniform(8, 8),
+            LaneStep::uniform(8, 8),
             None,
         );
         let config = QosConfig {
-            policy: BatchPolicy { max_batch: 4, linger: Duration::from_millis(2) },
+            policy: BatchPolicy { max_batch: 2, linger: Duration::from_millis(1) },
             shed: ShedPolicy { enabled: false, queue_pressure: 0 },
             monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+            workers: WorkerMode::Single,
         };
         let mut server = QosServer::start(tiny_model(8), &set, config);
-        let mut pending = Vec::new();
-        for i in 0..9u64 {
-            let class = QosClass::ALL[(i % 3) as usize];
-            pending.push((class, server.submit(class, image(50 + i))));
-        }
-        for (class, rx) in pending {
-            let resp = rx.recv().expect("response");
-            assert_eq!(resp.class, class);
-            assert_eq!(resp.served_by, class.name(), "downgrade with shedding disabled");
-            assert!(!resp.downgraded);
-            assert_eq!(resp.logits.shape, vec![3 * 8 * 8]);
-        }
+        // a healthy request first: metrics survive into the partial report
+        let ok = server.infer(QosClass::Gold, image(1)).expect("healthy worker");
+        assert_eq!(ok.served_by, "gold");
+        // poison pill: wrong input shape panics the worker inside forward
+        let poisoned = server.infer(QosClass::Gold, Tensor::zeros(&[1, 2, 2]));
+        assert!(poisoned.is_err(), "worker death must surface as an error");
+        // the channel to the dead worker closes; later submits error out
+        let refused = (0..50).find_map(|_| {
+            std::thread::sleep(Duration::from_millis(2));
+            server.submit(QosClass::Economy, image(2)).err()
+        });
+        assert!(refused.is_some(), "submits to a dead worker must eventually be refused");
         let report = server.shutdown();
-        assert_eq!(report.metrics.total_requests, 9);
-        for class in QosClass::ALL {
-            let cm = report.metrics.class(class.name()).expect("class metrics");
-            assert_eq!(cm.requests, 3);
-            assert_eq!(cm.downgrades, 0);
-        }
-        assert_eq!(report.lanes.len(), 3);
-        assert!(report.lanes.iter().all(|l| l.swaps == 0));
+        assert!(report.worker_panic, "partial report must flag the panic");
+        assert_eq!(report.metrics.total_requests, 1, "pre-crash metrics survive");
+        assert!(report.lanes.is_empty(), "no lane reports from a panicked worker");
     }
 }

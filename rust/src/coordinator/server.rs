@@ -68,9 +68,12 @@ impl InferenceServer {
                 let (images, responders) = split_batch(batch);
                 let logits = backend.infer_batch(images);
                 let batch_size = responders.len();
+                // one completion instant per batch: later responses must
+                // not absorb metrics-lock/send time into their latency
+                let completed = Instant::now();
                 for (resp, out) in responders.into_iter().zip(logits) {
                     let queue_wait = t0.duration_since(resp.enqueued_at);
-                    let latency = resp.enqueued_at.elapsed();
+                    let latency = completed.duration_since(resp.enqueued_at);
                     metrics_worker.lock().unwrap().record(latency, queue_wait, batch_size);
                     let _ = resp.respond.send(Response {
                         id: resp.id,

@@ -51,6 +51,9 @@ pub fn lane_table(report: &QosReport) -> Table {
 
 /// Print the full report (summary line + both tables).
 pub fn print(report: &QosReport) {
+    if report.worker_panic {
+        println!("WARNING: serving worker panicked — this report is partial");
+    }
     println!("{}", report.metrics.summary());
     println!();
     class_table(report).print();
@@ -84,6 +87,7 @@ mod tests {
                 ladder_pos: 1,
                 ladder_len: 4,
             }],
+            worker_panic: false,
         }
     }
 

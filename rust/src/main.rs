@@ -14,8 +14,9 @@
 //!                [--plan plan.txt] [--batch 8] [--prepared]
 //! bfp-cnn serve  --qos [gold=<plan.txt|9/9>] [standard=<spec>] [economy=<spec>]
 //!                [shed=<spec>] [--pressure 32] [--mix 1:1:1]
+//!                [--workers single|per-lane|per-lane-nosteal]
 //! bfp-cnn loadgen [--model lenet] [--requests 96] [--mix 1:3:8] [--lanes 4]
-//!                 [--pressure 16] [--calib 3] [--batch 8]
+//!                 [--pressure 16] [--calib 3] [--batch 8] [--workers <mode>]
 //! bfp-cnn e2e    [--requests 64] [--artifacts artifacts]
 //! bfp-cnn all    [--images 10]
 //! ```
@@ -31,9 +32,14 @@
 //! class (`gold=`/`standard=`/`economy=` each take a plan file or a
 //! `lw/li` uniform width pair; missing classes default to 9/9, 7/7 and
 //! 5/5), class-pure EDF batching, pressure-driven downgrades and online
-//! NSR telemetry. `loadgen` is the self-contained demo: it autotunes a
-//! lane set off the Pareto frontier, then drives a mixed-class workload
-//! through the router and prints the per-class / per-lane QoS report.
+//! NSR telemetry. `--workers per-lane` swaps the single-thread
+//! reference scheduler for the dispatcher + per-lane-executor fabric
+//! (one thread per lane, idle-steal between adjacent classes — see
+//! `coordinator::qos`); unset, it honours `BFP_QOS_WORKERS` and
+//! defaults to `single`. `loadgen` is the self-contained demo: it
+//! autotunes a lane set off the Pareto frontier, then drives a
+//! mixed-class workload through the router and prints the per-class /
+//! per-lane QoS report.
 
 use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
 use bfp_cnn::coordinator::server::{Backend, InferenceServer, PreparedBackend, RustBackend, ServerConfig};
@@ -198,6 +204,7 @@ fn main() {
                     args.get("pressure", 32),
                     set,
                     &mix,
+                    parse_workers(&args),
                 );
                 return;
             }
@@ -249,6 +256,7 @@ fn main() {
                 args.get("pressure", 16),
                 &parse_mix(&args.get_str("mix", "1:3:8")),
                 &opts,
+                parse_workers(&args),
             ) {
                 eprintln!("loadgen failed: {e:#}");
                 std::process::exit(1);
@@ -398,6 +406,20 @@ fn lane_set_from_specs(
     ))
 }
 
+/// Resolve the QoS worker mode: `--workers` flag first, then the
+/// `BFP_QOS_WORKERS` env var, defaulting to the single-worker reference
+/// scheduler. A typo'd mode would silently serve a different
+/// concurrency experiment, so reject it loudly.
+fn parse_workers(args: &Args) -> bfp_cnn::coordinator::WorkerMode {
+    match args.flags.get("workers") {
+        None => bfp_cnn::coordinator::WorkerMode::from_env(),
+        Some(v) => bfp_cnn::coordinator::WorkerMode::parse(v).unwrap_or_else(|| {
+            eprintln!("invalid --workers `{v}` (expected single|per-lane|per-lane-nosteal)");
+            std::process::exit(2);
+        }),
+    }
+}
+
 /// Parse a `g:s:e` class-mix ratio into a submission pattern. Rejects
 /// malformed components — a silently-coerced typo would serve a
 /// different mix than the one the experiment asked for.
@@ -438,6 +460,7 @@ fn qos_serve_demo(
     pressure: usize,
     set: bfp_cnn::coordinator::LaneSet,
     mix: &[bfp_cnn::coordinator::QosClass],
+    workers: bfp_cnn::coordinator::WorkerMode,
 ) {
     use bfp_cnn::coordinator::{QosConfig, QosServer, ShedPolicy};
     let model = id.build(size, seed, artifacts);
@@ -448,13 +471,15 @@ fn qos_serve_demo(
             linger: std::time::Duration::from_millis(2),
         },
         shed: ShedPolicy { enabled: true, queue_pressure: pressure },
+        workers,
         ..QosConfig::default()
     };
     println!(
-        "serving {} mixed-class requests on qos/{} (lanes gold/standard/economy{}) ...",
+        "serving {} mixed-class requests on qos/{} (lanes gold/standard/economy{}, workers {}) ...",
         requests,
         id.name(),
-        if set.shed.is_some() { "/shed" } else { "" }
+        if set.shed.is_some() { "/shed" } else { "" },
+        workers.name(),
     );
     let mut server = QosServer::start(model, &set, config);
     let images = gen_images(id, &input_shape, requests, seed);
@@ -463,8 +488,19 @@ fn qos_serve_demo(
         .enumerate()
         .map(|(i, img)| server.submit(mix[i % mix.len()], img))
         .collect();
+    let mut failures = 0usize;
     for rx in pending {
-        rx.recv().expect("qos response");
+        match rx {
+            Ok(rx) => {
+                if rx.recv().is_err() {
+                    failures += 1;
+                }
+            }
+            Err(_) => failures += 1,
+        }
+    }
+    if failures > 0 {
+        eprintln!("{failures} request(s) failed (serving worker died); report is partial");
     }
     let report = server.shutdown();
     bfp_cnn::harness::qos_report::print(&report);
@@ -485,6 +521,7 @@ fn loadgen(
     pressure: usize,
     mix: &[bfp_cnn::coordinator::QosClass],
     opts: &bfp_cnn::autotune::PlannerOptions,
+    workers: bfp_cnn::coordinator::WorkerMode,
 ) -> anyhow::Result<()> {
     use bfp_cnn::autotune;
     use bfp_cnn::coordinator::LaneSet;
@@ -508,7 +545,7 @@ fn loadgen(
         );
     }
     let set = LaneSet::from_plans(&plans)?;
-    qos_serve_demo(id, size, seed, artifacts, requests, batch, pressure, set, mix);
+    qos_serve_demo(id, size, seed, artifacts, requests, batch, pressure, set, mix, workers);
     Ok(())
 }
 

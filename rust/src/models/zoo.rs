@@ -14,6 +14,26 @@ pub struct Model {
     pub num_classes: usize,
 }
 
+impl Model {
+    /// Order-of-magnitude MAC count for one image through the conv
+    /// layers: per conv, `|W| · (H/stride)·(W/stride)` against the
+    /// *model input* spatial size (pooling between layers is ignored, so
+    /// deep layers over-count — an upper-bound-flavoured estimate).
+    /// This feeds the thread pool's small-work guards, which only need
+    /// the right order of magnitude: a LeNet image is ~10^6 by this
+    /// measure, the toy test models ~10^4.
+    pub fn approx_macs_per_image(&self) -> usize {
+        let (h, w) = (self.input_shape[1], self.input_shape[2]);
+        let mut macs = 0usize;
+        self.graph.visit_convs(&mut |c| {
+            let s = c.stride.max(1);
+            let out_px = ((h / s) * (w / s)).max(1);
+            macs = macs.saturating_add(c.weights.data.len().saturating_mul(out_px));
+        });
+        macs
+    }
+}
+
 /// Identifiers for every network in Table 3.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModelId {

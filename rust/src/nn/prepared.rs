@@ -355,6 +355,9 @@ pub struct PreparedModel {
     /// Idle scratch arenas, checked out per forward and returned after —
     /// the pool grows to the peak concurrency and then stops allocating.
     workspaces: Mutex<Vec<Workspace>>,
+    /// [`Model::approx_macs_per_image`], computed once — the batched
+    /// forward's work estimate for the pool's small-batch guard.
+    work_per_image: usize,
 }
 
 impl PreparedModel {
@@ -367,12 +370,14 @@ impl PreparedModel {
     /// — the multi-lane constructor: every lane built over the same handle
     /// shares quantized weights per distinct `(layer, weight format)`.
     pub fn with_cache(model: Model, schedule: LayerSchedule, cache: SharedWeightCache) -> Self {
+        let work_per_image = model.approx_macs_per_image();
         let mut prepared = Self {
             model,
             schedule: LayerSchedule::uniform(BfpConfig::paper_default()),
             cache,
             active: HashMap::new(),
             workspaces: Mutex::new(Vec::new()),
+            work_per_image,
         };
         prepared.set_schedule(schedule);
         prepared
@@ -466,6 +471,7 @@ impl PreparedModel {
         }
         pool::parallel_map_with(
             images,
+            self.work_per_image,
             || ArenaGuard { ws: Some(self.take_workspace()), owner: self },
             |guard, img| {
                 let ws = guard.ws.as_mut().expect("workspace checked out");

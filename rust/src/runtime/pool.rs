@@ -11,7 +11,9 @@
 //!   for every thread count.
 //! * [`parallel_map_with`] — order-preserving parallel map with
 //!   per-thread state (an executor, a scratch [`crate::nn::prepared::Workspace`]),
-//!   used to spread `forward_batch` over images.
+//!   used to spread `forward_batch` over images. Like the other
+//!   primitives it takes a caller work estimate and stays on the calling
+//!   thread under [`MIN_PARALLEL_WORK`].
 //! * [`parallel_tasks`] — run `n` independent, identically-typed tasks on
 //!   the pool with atomic work-stealing. The tiled GEMM
 //!   ([`crate::bfp::kernel`]) uses it to parallelize in 2D (M panels ×
@@ -162,11 +164,32 @@ where
     });
 }
 
+/// Threads each of `parts` concurrent pool users should budget so their
+/// nested parallel regions don't oversubscribe the machine: the ambient
+/// [`num_threads`] split `parts` ways, rounded up, never below one. The
+/// per-lane QoS executors each wrap their forwards in
+/// [`with_threads`]`(share_threads(lanes), ..)` — four lanes on a
+/// four-core box get one GEMM/panel worker each instead of sixteen.
+pub fn share_threads(parts: usize) -> usize {
+    num_threads().div_ceil(parts.max(1))
+}
+
 /// Order-preserving parallel map with per-thread state: each worker
 /// builds one `S` via `init` and folds its contiguous chunk of `items`
 /// through `f`. Serial (single state, in order) when one thread is
 /// available or when already inside a pool region.
-pub fn parallel_map_with<T, R, S, I, F>(items: Vec<T>, init: I, f: F) -> Vec<R>
+///
+/// `work_per_item` is the caller's cost estimate for one item (the
+/// batched forwards pass approximate per-image MACs); when
+/// `items · work_per_item` falls under [`MIN_PARALLEL_WORK`] the map
+/// runs serial on the calling thread — a two-image batch of a tiny model
+/// must not pay scoped-thread spawn/join latency.
+pub fn parallel_map_with<T, R, S, I, F>(
+    items: Vec<T>,
+    work_per_item: usize,
+    init: I,
+    f: F,
+) -> Vec<R>
 where
     T: Send,
     R: Send,
@@ -177,7 +200,11 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let threads = num_threads().min(n);
+    let threads = if n.saturating_mul(work_per_item) < MIN_PARALLEL_WORK {
+        1
+    } else {
+        num_threads().min(n)
+    };
     if threads <= 1 {
         let mut state = init();
         return items.into_iter().map(|t| f(&mut state, t)).collect();
@@ -265,19 +292,53 @@ mod tests {
     fn map_preserves_order_with_per_thread_state() {
         for threads in [1, 2, 4] {
             let got = with_threads(threads, || {
-                parallel_map_with((0..23u32).collect(), || 0u32, |count, x| {
-                    *count += 1;
-                    x * 2
-                })
+                parallel_map_with(
+                    (0..23u32).collect(),
+                    MIN_PARALLEL_WORK,
+                    || 0u32,
+                    |count, x| {
+                        *count += 1;
+                        x * 2
+                    },
+                )
             });
             assert_eq!(got, (0..23u32).map(|x| x * 2).collect::<Vec<_>>(), "threads={threads}");
         }
     }
 
+    /// The map has the same small-work guard as the other primitives: a
+    /// tiny batch must run on the calling thread, not spawn workers.
+    #[test]
+    fn tiny_map_stays_on_the_calling_thread() {
+        with_threads(4, || {
+            let caller = std::thread::current().id();
+            // 4 items × 100 work units ≪ MIN_PARALLEL_WORK → serial
+            let got = parallel_map_with((0..4u32).collect(), 100, || (), |_, x| {
+                assert_eq!(std::thread::current().id(), caller, "small map must not spawn");
+                x + 1
+            });
+            assert_eq!(got, vec![1, 2, 3, 4]);
+        });
+    }
+
+    #[test]
+    fn share_threads_splits_the_ambient_budget() {
+        with_threads(4, || {
+            assert_eq!(share_threads(1), 4);
+            assert_eq!(share_threads(2), 2);
+            assert_eq!(share_threads(3), 2, "rounded up, slight overlap beats idling");
+            assert_eq!(share_threads(4), 1);
+            assert_eq!(share_threads(100), 1, "never below one");
+            assert_eq!(share_threads(0), 4, "degenerate parts treated as one user");
+        });
+        with_threads(1, || assert_eq!(share_threads(3), 1));
+    }
+
     #[test]
     fn empty_inputs_are_fine() {
         parallel_row_panels(&mut [], 0, 4, MIN_PARALLEL_WORK, |_, _| unreachable!());
-        let out: Vec<u32> = parallel_map_with(Vec::<u32>::new(), || (), |_, x| x);
+        let out: Vec<u32> =
+            parallel_map_with(Vec::<u32>::new(), MIN_PARALLEL_WORK, || (), |_, x| x);
         assert!(out.is_empty());
         parallel_tasks(0, MIN_PARALLEL_WORK, |_| unreachable!());
     }

@@ -45,11 +45,20 @@ pub enum Verdict {
 }
 
 /// Per-lane streaming NSR monitor.
+///
+/// Owned by exactly one serving thread (in the multi-worker QoS router,
+/// the lane's executor): probing, judging and the hot-swap it triggers
+/// all happen on that thread, between batches — the monitor needs no
+/// internal synchronization.
 #[derive(Debug, Clone, Default)]
 pub struct NsrMonitor {
     cfg: MonitorConfig,
     batches: u64,
     probes: u64,
+    /// Rotates the in-batch probe position across sampled batches —
+    /// always probing a batch's first (most-urgent-deadline) image would
+    /// bias the measured NSR toward one slice of the traffic.
+    probe_cursor: u64,
     /// Linear (not dB) per-probe NSR — averaging in linear space weights
     /// noisy outliers correctly; the dB view is derived on read.
     nsr: Welford,
@@ -73,6 +82,21 @@ impl NsrMonitor {
         }
         self.batches += 1;
         self.batches % self.cfg.sample_every == 0
+    }
+
+    /// [`NsrMonitor::tick_batch`] plus probe placement: for a sampled
+    /// batch of `batch_len` images, returns the in-batch index to probe.
+    /// The position rotates across sampled batches (EDF pops batches in
+    /// deadline order, so index 0 is always the most urgent request —
+    /// pinning the probe there would sample only one slice of the
+    /// traffic and bias the measured NSR).
+    pub fn tick_batch_probe(&mut self, batch_len: usize) -> Option<usize> {
+        if batch_len == 0 || !self.tick_batch() {
+            return None;
+        }
+        let idx = (self.probe_cursor % batch_len as u64) as usize;
+        self.probe_cursor += 1;
+        Some(idx)
     }
 
     /// Fold in one probe: `reference` is the f32 forward of the sampled
@@ -157,6 +181,34 @@ mod tests {
         let probed: Vec<bool> = (0..9).map(|_| m.tick_batch()).collect();
         assert_eq!(probed, vec![false, false, true, false, false, true, false, false, true]);
         assert_eq!(m.batches(), 9);
+    }
+
+    /// The probe position must rotate across sampled batches and cover
+    /// every in-batch index, not pin itself to the most-urgent slot 0.
+    #[test]
+    fn probe_index_rotates_and_covers_the_batch() {
+        let mut m =
+            NsrMonitor::new(MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 });
+        let picked: Vec<usize> = (0..6).filter_map(|_| m.tick_batch_probe(3)).collect();
+        assert_eq!(picked, vec![0, 1, 2, 0, 1, 2], "cursor must cycle the batch positions");
+        // shrinking batches stay in range; the cursor keeps advancing
+        for len in [2usize, 1, 4, 1] {
+            let idx = m.tick_batch_probe(len).expect("sample_every=1 probes every batch");
+            assert!(idx < len, "probe index {idx} out of range for batch of {len}");
+        }
+    }
+
+    /// Rotation respects the sampling cadence: unsampled batches advance
+    /// the batch counter but not the probe cursor.
+    #[test]
+    fn probe_rotation_only_advances_on_sampled_batches() {
+        let mut m =
+            NsrMonitor::new(MonitorConfig { sample_every: 2, min_probes: 1, margin_db: 0.0 });
+        let picked: Vec<Option<usize>> = (0..6).map(|_| m.tick_batch_probe(4)).collect();
+        assert_eq!(picked, vec![None, Some(0), None, Some(1), None, Some(2)]);
+        assert_eq!(m.batches(), 6);
+        // empty batches never probe (and must not divide by zero)
+        assert_eq!(m.tick_batch_probe(0), None);
     }
 
     #[test]
