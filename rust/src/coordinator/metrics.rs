@@ -198,6 +198,46 @@ impl ClassMetrics {
     }
 }
 
+/// Per-tenant admission accounting, recorded by the TCP front's quota
+/// gate (the in-process paths carry no tenant identity, so the list
+/// stays empty there).
+#[derive(Debug, Clone)]
+pub struct TenantMetrics {
+    pub label: String,
+    /// Requests seen from this tenant, shed ones included.
+    pub requests: u64,
+    /// Requests degraded to the economy lane by the tenant quota.
+    pub quota_downgrades: u64,
+    /// Requests shed outright with an `OverQuota` error frame.
+    pub rejected: u64,
+}
+
+impl TenantMetrics {
+    fn new(label: &str) -> Self {
+        Self { label: label.to_string(), requests: 0, quota_downgrades: 0, rejected: 0 }
+    }
+
+    /// Fraction of this tenant's traffic the quota acted on.
+    pub fn over_quota_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        (self.quota_downgrades + self.rejected) as f64 / self.requests as f64
+    }
+
+    fn merge_from(&mut self, other: &TenantMetrics) {
+        self.requests += other.requests;
+        self.quota_downgrades += other.quota_downgrades;
+        self.rejected += other.rejected;
+    }
+
+    fn clear(&mut self) {
+        self.requests = 0;
+        self.quota_downgrades = 0;
+        self.rejected = 0;
+    }
+}
+
 /// Accumulated serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -210,6 +250,8 @@ pub struct Metrics {
     /// Per-class breakdowns in first-seen order (empty for classless
     /// serving through the plain [`super::InferenceServer`]).
     classes: Vec<ClassMetrics>,
+    /// Per-tenant quota accounting in first-seen order (TCP front only).
+    tenants: Vec<TenantMetrics>,
 }
 
 impl Metrics {
@@ -249,6 +291,28 @@ impl Metrics {
         }
         if deadline_missed {
             cm.deadline_misses += 1;
+        }
+    }
+
+    /// Count one request under `tenant`'s quota accounting. Unlike
+    /// [`Metrics::record_class`] this happens at *admission* (the
+    /// connection reader thread), not at response delivery — shed
+    /// requests never reach a lane but still count here.
+    pub fn record_tenant(&mut self, tenant: &str, quota_downgraded: bool, rejected: bool) {
+        let idx = match self.tenants.iter().position(|t| t.label == tenant) {
+            Some(i) => i,
+            None => {
+                self.tenants.push(TenantMetrics::new(tenant));
+                self.tenants.len() - 1
+            }
+        };
+        let tm = &mut self.tenants[idx];
+        tm.requests += 1;
+        if quota_downgraded {
+            tm.quota_downgrades += 1;
+        }
+        if rejected {
+            tm.rejected += 1;
         }
     }
 
@@ -298,6 +362,12 @@ impl Metrics {
                 None => self.classes.push(oc.clone()),
             }
         }
+        for ot in other.tenants.iter().filter(|t| t.requests > 0) {
+            match self.tenants.iter_mut().find(|t| t.label == ot.label) {
+                Some(t) => t.merge_from(ot),
+                None => self.tenants.push(ot.clone()),
+            }
+        }
     }
 
     /// Zero every counter while keeping allocations (histogram buckets,
@@ -313,6 +383,9 @@ impl Metrics {
         for c in &mut self.classes {
             c.clear();
         }
+        for t in &mut self.tenants {
+            t.clear();
+        }
     }
 
     /// Per-class breakdowns (first-seen order).
@@ -323,6 +396,17 @@ impl Metrics {
     /// The breakdown for one class label, if any requests carried it.
     pub fn class(&self, label: &str) -> Option<&ClassMetrics> {
         self.classes.iter().find(|c| c.label == label)
+    }
+
+    /// Per-tenant quota accounting (first-seen order; empty off the TCP
+    /// path).
+    pub fn tenants(&self) -> &[TenantMetrics] {
+        &self.tenants
+    }
+
+    /// The accounting for one tenant id, if it ever sent a request.
+    pub fn tenant(&self, label: &str) -> Option<&TenantMetrics> {
+        self.tenants.iter().find(|t| t.label == label)
     }
 
     /// One-line summary for logs and EXPERIMENTS.md.
@@ -495,6 +579,37 @@ mod tests {
         assert_eq!(global.classes().len(), 2);
         assert!(eco.latency_p(50.0) >= 40.0 * (1.0 - 1.0 / 32.0));
         assert_eq!(global.mean_batch_size(), (2 + 2 + 4 + 4) as f64 / 4.0);
+    }
+
+    /// Tenant accounting: recorded at admission, merged across scratch
+    /// sinks by label, cleared with everything else.
+    #[test]
+    fn tenant_accounting_records_merges_and_clears() {
+        let mut m = Metrics::default();
+        m.record_tenant("abuser", false, false);
+        m.record_tenant("abuser", true, false);
+        m.record_tenant("abuser", false, true);
+        m.record_tenant("vip", false, false);
+        let a = m.tenant("abuser").unwrap();
+        assert_eq!((a.requests, a.quota_downgrades, a.rejected), (3, 1, 1));
+        assert!((a.over_quota_rate() - 2.0 / 3.0).abs() < 1e-12);
+        let v = m.tenant("vip").unwrap();
+        assert_eq!((v.requests, v.quota_downgrades, v.rejected), (1, 0, 0));
+        assert_eq!(v.over_quota_rate(), 0.0);
+        assert!(m.tenant("ghost").is_none());
+
+        let mut global = Metrics::default();
+        global.record_tenant("vip", false, false);
+        global.merge_from(&m);
+        assert_eq!(global.tenant("vip").unwrap().requests, 2);
+        assert_eq!(global.tenant("abuser").unwrap().requests, 3);
+        assert_eq!(global.tenants().len(), 2);
+
+        m.clear();
+        assert_eq!(m.tenant("abuser").unwrap().requests, 0);
+        // cleared zero-count tenants must not seed entries on merge
+        global.merge_from(&m);
+        assert_eq!(global.tenant("abuser").unwrap().requests, 3);
     }
 
     #[test]

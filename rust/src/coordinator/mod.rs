@@ -15,7 +15,7 @@ pub mod qos;
 pub mod server;
 
 pub use engine::{forward_batch, forward_batch_ref, ExecMode};
-pub use metrics::{ClassMetrics, LogHistogram, Metrics};
+pub use metrics::{ClassMetrics, LogHistogram, Metrics, TenantMetrics};
 pub use qos::{
     LaneReport, LaneSet, LaneSpec, LaneStep, QosClass, QosConfig, QosReport, QosResponse,
     QosServer, ShedPolicy, WorkerMode,

@@ -465,6 +465,7 @@ struct Lane {
     pos: usize,
     monitor: NsrMonitor,
     swaps: u64,
+    promotions: u64,
     batches: u64,
 }
 
@@ -486,6 +487,7 @@ impl Lane {
             pos: 0,
             monitor: NsrMonitor::new(monitor),
             swaps: 0,
+            promotions: 0,
             batches: 0,
         }
     }
@@ -511,13 +513,18 @@ impl Lane {
 
     /// Telemetry probe for a sampled batch: run the f32 reference forward
     /// for `img`, fold the NSR against the lane's already-computed BFP
-    /// output into the monitor, and hot-swap one rung safer on a bound
-    /// violation.
+    /// output into the monitor, and walk the ladder — one rung safer on a
+    /// bound violation, one rung back toward the frontier after a
+    /// sustained healthy window ([`NsrMonitor::promotion_ready`]).
     fn probe(&mut self, img: Tensor, bfp_output: &Tensor) {
         let reference = self.prepared.model().graph.execute(img, &mut Fp32Exec);
         self.monitor.record_probe(&reference.data, &bfp_output.data);
         if self.monitor.verdict(self.step().predicted_snr_db) == Verdict::Violation {
             self.swap_safer();
+        } else if self.pos > 0
+            && self.monitor.promotion_ready(self.ladder[self.pos - 1].predicted_snr_db)
+        {
+            self.swap_cheaper();
         }
     }
 
@@ -537,6 +544,20 @@ impl Lane {
         self.swaps += 1;
     }
 
+    /// The inverse of [`Lane::swap_safer`]: re-promote one rung back
+    /// toward the lane's frontier operating point. Only reached after
+    /// the monitor's sustained-healthy-window + hysteresis check
+    /// ([`NsrMonitor::promotion_ready`] against the *target* rung's
+    /// bound), through the same between-batches schedule-swap path on
+    /// the lane's owning thread — in-flight batches are unaffected.
+    fn swap_cheaper(&mut self) {
+        debug_assert!(self.pos > 0, "already at the frontier rung");
+        self.pos -= 1;
+        self.prepared.set_schedule(self.ladder[self.pos].schedule.clone());
+        self.monitor.reset_probes();
+        self.promotions += 1;
+    }
+
     fn report(&self) -> LaneReport {
         LaneReport {
             label: self.label.to_string(),
@@ -546,6 +567,7 @@ impl Lane {
             probes: self.monitor.probes(),
             batches: self.batches,
             swaps: self.swaps,
+            promotions: self.promotions,
             ladder_pos: self.pos,
             ladder_len: self.ladder.len(),
         }
@@ -563,7 +585,10 @@ pub struct LaneReport {
     pub measured_snr_db: f64,
     pub probes: u64,
     pub batches: u64,
+    /// Hot-swaps one rung safer (bound violations).
     pub swaps: u64,
+    /// Walks one rung back toward the frontier (sustained health).
+    pub promotions: u64,
     pub ladder_pos: usize,
     pub ladder_len: usize,
 }
@@ -1098,7 +1123,34 @@ impl QosServer {
         deadline: Duration,
     ) -> anyhow::Result<Receiver<QosResponse>> {
         let (tx, rx) = channel();
+        let id = self.reserve_id();
+        self.submit_reserved(id, class, image, deadline, tx)?;
+        Ok(rx)
+    }
+
+    /// Reserve the next internal request id without enqueuing anything.
+    /// Callers that index their own bookkeeping by the id *before* the
+    /// response can possibly arrive (the TCP front's out-of-order writer
+    /// thread) reserve first, record the id, then enqueue with
+    /// [`QosServer::submit_reserved`] — enqueuing before recording would
+    /// race the response past the bookkeeping.
+    pub fn reserve_id(&mut self) -> u64 {
         self.next_id += 1;
+        self.next_id
+    }
+
+    /// Enqueue a request under a previously reserved id, answering on a
+    /// caller-provided channel. One channel may serve many requests (a
+    /// connection fans every response into a single writer thread);
+    /// responses carry the id so the caller can correlate.
+    pub fn submit_reserved(
+        &mut self,
+        id: u64,
+        class: QosClass,
+        image: Tensor,
+        deadline: Duration,
+        respond: Sender<QosResponse>,
+    ) -> anyhow::Result<()> {
         let now = Instant::now();
         let worker = self
             .tx
@@ -1106,22 +1158,28 @@ impl QosServer {
             .ok_or_else(|| anyhow::anyhow!("qos server already shut down"))?;
         worker
             .send(QueuedRequest {
-                id: self.next_id,
+                id,
                 class,
                 image,
-                respond: tx,
+                respond,
                 enqueued_at: now,
                 deadline: now + deadline,
-                seq: self.next_id,
+                seq: id,
             })
             .map_err(|_| {
                 anyhow::anyhow!(
-                    "qos worker is gone (panicked or exited); {} request {} rejected",
-                    class.name(),
-                    self.next_id
+                    "qos worker is gone (panicked or exited); {} request {id} rejected",
+                    class.name()
                 )
             })?;
-        Ok(rx)
+        Ok(())
+    }
+
+    /// The shared metrics sink. The TCP front records per-tenant quota
+    /// accounting into the same `Metrics` the serving fabric writes, so
+    /// one report covers both.
+    pub fn metrics_handle(&self) -> Arc<Mutex<Metrics>> {
+        Arc::clone(&self.metrics)
     }
 
     /// Submit and wait (tests / simple clients). A worker that dies
@@ -1415,7 +1473,8 @@ mod tests {
             LaneStep::new(LayerSchedule::uniform(BfpConfig::new(4, 4)), 1000.0, "impossible"),
             LaneStep::uniform(8, 8),
         ]);
-        let mcfg = MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 };
+        let mcfg =
+            MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0, ..Default::default() };
         let mut lane = Lane::new("economy", model.clone(), &spec, &cache, mcfg);
         assert_eq!(lane.pos, 0);
         let (out_noisy, probe) = lane.forward(vec![image(5)]);
@@ -1453,7 +1512,8 @@ mod tests {
             1000.0,
             "impossible",
         )]);
-        let mcfg = MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 };
+        let mcfg =
+            MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0, ..Default::default() };
         let mut lane = Lane::new("gold", model, &spec, &cache, mcfg);
         let (out, probe) = lane.forward(vec![image(6)]);
         let (idx, img) = probe.unwrap();
@@ -1469,7 +1529,8 @@ mod tests {
         let model = tiny_model(9);
         let cache = WeightCache::shared();
         let spec = LaneSpec::new(vec![LaneStep::uniform(8, 8)]);
-        let mcfg = MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 };
+        let mcfg =
+            MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0, ..Default::default() };
         let mut lane = Lane::new("gold", model, &spec, &cache, mcfg);
         let mut seen = Vec::new();
         for round in 0..6 {

@@ -137,7 +137,7 @@ pub fn section(title: &str) {
     println!("\n### {title}");
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

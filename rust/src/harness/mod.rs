@@ -4,6 +4,7 @@
 pub mod autotune_report;
 pub mod benchkit;
 pub mod fig3;
+pub mod net_report;
 pub mod qos_report;
 pub mod readout;
 pub mod report;

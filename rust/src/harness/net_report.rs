@@ -1,0 +1,132 @@
+//! Human- and machine-readable readout for the networked loadgen
+//! scenarios: one table row per (scenario, tenant) run, plus a
+//! hand-rolled `NET_*.json` mirror for CI artifacts (no serde in the
+//! offline image).
+
+use super::benchkit::json_escape;
+use super::report::Table;
+use crate::net::loadgen::RunStats;
+
+/// One row per run: client-side counters and intended-send latency.
+pub fn scenario_table(rows: &[RunStats]) -> Table {
+    let mut t = Table::new(
+        "loadgen scenarios (latency from intended send, ms)",
+        &[
+            "scenario", "tenant", "mode", "sent", "ok", "errors", "quota-dg", "dg", "ddl-miss",
+            "p50", "p99", "max", "rps",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.name.clone(),
+            r.tenant.clone(),
+            r.mode.to_string(),
+            r.sent.to_string(),
+            r.ok.to_string(),
+            r.errors.to_string(),
+            r.quota_downgraded.to_string(),
+            r.downgraded.to_string(),
+            r.deadline_missed.to_string(),
+            format!("{:.2}", r.latency_p(50.0)),
+            format!("{:.2}", r.latency_p(99.0)),
+            format!("{:.2}", r.latency_us.max() as f64 / 1000.0),
+            format!("{:.1}", r.throughput()),
+        ]);
+    }
+    t
+}
+
+/// Print the scenario table.
+pub fn print(rows: &[RunStats]) {
+    scenario_table(rows).print();
+}
+
+/// One machine-readable entry (a line inside `"runs": [...]`).
+fn json_entry(r: &RunStats) -> String {
+    format!(
+        "{{\"scenario\":\"{}\",\"tenant\":\"{}\",\"mode\":\"{}\",\"sent\":{},\"ok\":{},\
+         \"errors\":{},\"quota_downgraded\":{},\"downgraded\":{},\"deadline_missed\":{},\
+         \"p50_ms\":{:.3},\"p99_ms\":{:.3},\"max_ms\":{:.3},\"rps\":{:.2},\"wall_s\":{:.3}}}",
+        json_escape(&r.name),
+        json_escape(&r.tenant),
+        r.mode,
+        r.sent,
+        r.ok,
+        r.errors,
+        r.quota_downgraded,
+        r.downgraded,
+        r.deadline_missed,
+        r.latency_p(50.0),
+        r.latency_p(99.0),
+        r.latency_us.max() as f64 / 1000.0,
+        r.throughput(),
+        r.wall.as_secs_f64(),
+    )
+}
+
+/// Write `NET_<tag>.json` for the CI artifact trail, mirroring the
+/// `BENCH_*.json` shape (a `"runs"` array of one-line objects).
+pub fn write_json(path: &std::path::Path, tag: &str, rows: &[RunStats]) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(tag)));
+    s.push_str("  \"runs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&json_entry(r));
+        s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::LogHistogram;
+    use std::time::Duration;
+
+    fn stats(name: &str, tenant: &str) -> RunStats {
+        let mut latency_us = LogHistogram::default();
+        for v in [900, 1100, 5000] {
+            latency_us.record(v);
+        }
+        RunStats {
+            name: name.to_string(),
+            tenant: tenant.to_string(),
+            mode: "open-loop",
+            sent: 3,
+            ok: 2,
+            errors: 1,
+            downgraded: 1,
+            quota_downgraded: 1,
+            deadline_missed: 0,
+            latency_us,
+            wall: Duration::from_secs(2),
+        }
+    }
+
+    #[test]
+    fn table_renders_one_row_per_run() {
+        let rows = vec![stats("spike", "spike"), stats("tenant-mix", "vip")];
+        let s = scenario_table(&rows).render();
+        assert!(s.contains("spike"));
+        assert!(s.contains("vip"));
+        assert!(s.contains("open-loop"));
+        assert_eq!(s.lines().count(), 3 + rows.len(), "title + header + rule + rows");
+    }
+
+    #[test]
+    fn json_has_every_run_and_valid_scaffolding() {
+        let rows = vec![stats("slow-client", "sloth \"lazy\"")];
+        let path = std::env::temp_dir().join("bfp_cnn_net_report_test.json");
+        write_json(&path, "scenarios_t1_single", &rows).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(body.contains("\"suite\": \"scenarios_t1_single\""));
+        assert!(body.contains("\\\"lazy\\\""), "tenant names must be escaped: {body}");
+        assert!(body.contains("\"sent\":3"));
+        assert!(body.contains("\"rps\":1.00"));
+        assert!(body.trim_end().ends_with('}'));
+    }
+}

@@ -32,7 +32,10 @@ pub fn class_table(report: &QosReport) -> Table {
 pub fn lane_table(report: &QosReport) -> Table {
     let mut t = Table::new(
         "QoS lane telemetry (measured vs predicted NSR)",
-        &["lane", "plan", "predicted dB", "measured dB", "probes", "batches", "swaps", "ladder"],
+        &[
+            "lane", "plan", "predicted dB", "measured dB", "probes", "batches", "swaps",
+            "promotes", "ladder",
+        ],
     );
     for l in &report.lanes {
         t.row(vec![
@@ -43,7 +46,26 @@ pub fn lane_table(report: &QosReport) -> Table {
             l.probes.to_string(),
             l.batches.to_string(),
             l.swaps.to_string(),
+            l.promotions.to_string(),
             format!("{}/{}", l.ladder_pos + 1, l.ladder_len),
+        ]);
+    }
+    t
+}
+
+/// Per-tenant quota table (TCP front only; empty for in-process runs).
+pub fn tenant_table(report: &QosReport) -> Table {
+    let mut t = Table::new(
+        "tenant quota accounting",
+        &["tenant", "requests", "quota downgrades", "rejected", "over-quota %"],
+    );
+    for ten in report.metrics.tenants() {
+        t.row(vec![
+            ten.label.clone(),
+            ten.requests.to_string(),
+            ten.quota_downgrades.to_string(),
+            ten.rejected.to_string(),
+            format!("{:.1}", 100.0 * ten.over_quota_rate()),
         ]);
     }
     t
@@ -59,6 +81,10 @@ pub fn print(report: &QosReport) {
     class_table(report).print();
     println!();
     lane_table(report).print();
+    if !report.metrics.tenants().is_empty() {
+        println!();
+        tenant_table(report).print();
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +110,7 @@ mod tests {
                 probes: 7,
                 batches: 50,
                 swaps: 1,
+                promotions: 2,
                 ladder_pos: 1,
                 ladder_len: 4,
             }],
@@ -102,5 +129,19 @@ mod tests {
         assert!(lt.contains("plan[26.0dB]"));
         assert!(lt.contains("24.5"));
         assert!(lt.contains("2/4"));
+        assert!(lt.contains("promotes"), "promotion column present: {lt}");
+    }
+
+    #[test]
+    fn tenant_table_rows_follow_the_metrics() {
+        let mut r = demo_report();
+        assert_eq!(tenant_table(&r).render().lines().count(), 3, "no tenants, no rows");
+        r.metrics.record_tenant("flood", true, false);
+        r.metrics.record_tenant("flood", false, true);
+        r.metrics.record_tenant("vip", false, false);
+        let tt = tenant_table(&r).render();
+        assert!(tt.contains("flood"));
+        assert!(tt.contains("vip"));
+        assert!(tt.contains("100.0"), "flood is fully over quota: {tt}");
     }
 }

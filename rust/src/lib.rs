@@ -43,7 +43,13 @@
 //! * [`telemetry`] — online NSR telemetry: Welford-streamed BFP-vs-f32
 //!   probe forwards per lane, hot-swapping a lane to the next-safer
 //!   frontier plan when the measured SNR breaks its plan's predicted
-//!   §4 bound.
+//!   §4 bound, and walking it back toward the frontier after a
+//!   sustained healthy window (hysteresis-guarded re-promotion).
+//! * [`net`] — the networked serving fabric: a zero-dependency TCP
+//!   front (length-prefixed binary framing, per-connection reader and
+//!   writer threads, per-tenant token-bucket quotas) over the QoS
+//!   router, plus the open-loop, coordinated-omission-free load
+//!   generator and its scenario suite.
 //! * [`harness`] — drivers that regenerate every table and figure of the
 //!   paper's evaluation section.
 //! * [`data`] — synthetic workload generators (procedural digit / texture
@@ -57,6 +63,7 @@ pub mod coordinator;
 pub mod data;
 pub mod harness;
 pub mod models;
+pub mod net;
 pub mod nn;
 pub mod quant;
 pub mod runtime;

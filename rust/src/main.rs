@@ -15,8 +15,13 @@
 //! bfp-cnn serve  --qos [gold=<plan.txt|9/9>] [standard=<spec>] [economy=<spec>]
 //!                [shed=<spec>] [--pressure 32] [--mix 1:1:1]
 //!                [--workers single|per-lane|per-lane-nosteal]
+//! bfp-cnn serve  --qos --listen 127.0.0.1:0 [--serve-secs 0] [--max-conns 256]
+//!                [--quota-rps 0] [--quota-burst 32] [--quota-debt 64]
 //! bfp-cnn loadgen [--model lenet] [--requests 96] [--mix 1:3:8] [--lanes 4]
 //!                 [--pressure 16] [--calib 3] [--batch 8] [--workers <mode>]
+//! bfp-cnn loadgen --connect <addr> [--arrivals poisson:200|burst:150:4|diurnal:120]
+//!                 [--scenario spike|tenant-mix|slow-client|all] [--requests 96]
+//!                 [--rps 200] [--tenant default] [--class standard] [--json out.json]
 //! bfp-cnn e2e    [--requests 64] [--artifacts artifacts]
 //! bfp-cnn all    [--images 10]
 //! ```
@@ -27,6 +32,16 @@
 //! plan + Pareto frontier, demonstrates per-layer execution through the
 //! coordinator engine, and optionally serializes the plan for
 //! `serve --mode plan`.
+//!
+//! `serve --qos --listen <addr>` puts the zero-dependency TCP front
+//! (`net::server`) over the router: length-prefixed binary frames,
+//! per-connection reader/writer threads, connection-cap admission and
+//! per-tenant token-bucket quotas (`--quota-rps`; over-quota traffic
+//! degrades to the economy lane, then sheds). `loadgen --connect`
+//! drives it from a second process with the open-loop,
+//! coordinated-omission-free arrival engine (`net::loadgen`): latency
+//! is measured from each request's *intended* send instant, so server
+//! stalls are charged to the requests they actually delayed.
 //!
 //! `serve --qos` starts the QoS precision router: one serving lane per
 //! class (`gold=`/`standard=`/`economy=` each take a plan file or a
@@ -193,6 +208,24 @@ fn main() {
                         std::process::exit(1);
                     }
                 };
+                if let Some(listen) = args.flags.get("listen") {
+                    if let Err(e) = serve_net(
+                        id,
+                        size,
+                        seed,
+                        &artifacts,
+                        batch,
+                        args.get("pressure", 32),
+                        set,
+                        parse_workers(&args),
+                        listen,
+                        &args,
+                    ) {
+                        eprintln!("serve --listen failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                    return;
+                }
                 let mix = parse_mix(&args.get_str("mix", "1:1:1"));
                 qos_serve_demo(
                     id,
@@ -207,6 +240,10 @@ fn main() {
                     parse_workers(&args),
                 );
                 return;
+            }
+            if args.flags.contains_key("listen") {
+                eprintln!("--listen needs the QoS router: add --qos (or class= lane specs)");
+                std::process::exit(2);
             }
             let mode = match args.get_str("mode", "bfp").as_str() {
                 "fp32" => ExecMode::Fp32,
@@ -239,6 +276,13 @@ fn main() {
         }
         "loadgen" => {
             let id = model_by_name(&args.get_str("model", "lenet")).expect("unknown model");
+            if let Some(addr) = args.flags.get("connect") {
+                if let Err(e) = net_loadgen(id, size, seed, &artifacts, addr, &args) {
+                    eprintln!("loadgen --connect failed: {e:#}");
+                    std::process::exit(1);
+                }
+                return;
+            }
             let opts = bfp_cnn::autotune::PlannerOptions {
                 max_width: args.get("max-width", 10),
                 min_width: args.get("min-width", 3),
@@ -504,6 +548,115 @@ fn qos_serve_demo(
     }
     let report = server.shutdown();
     bfp_cnn::harness::qos_report::print(&report);
+}
+
+/// `serve --qos --listen`: put the TCP front over the router and block.
+/// With `--serve-secs 0` (the default) the process serves until killed;
+/// otherwise it shuts down after the window and prints the QoS report
+/// (tenant quota accounting included).
+#[allow(clippy::too_many_arguments)]
+fn serve_net(
+    id: ModelId,
+    size: usize,
+    seed: u64,
+    artifacts: &Path,
+    batch: usize,
+    pressure: usize,
+    set: bfp_cnn::coordinator::LaneSet,
+    workers: bfp_cnn::coordinator::WorkerMode,
+    listen: &str,
+    args: &Args,
+) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    use bfp_cnn::coordinator::{QosConfig, QosServer, ShedPolicy};
+    use bfp_cnn::net::{NetServer, NetServerConfig, QuotaConfig};
+    use std::io::Write as _;
+
+    let model = id.build(size, seed, artifacts);
+    let config = QosConfig {
+        policy: bfp_cnn::coordinator::batcher::BatchPolicy {
+            max_batch: batch,
+            linger: std::time::Duration::from_millis(2),
+        },
+        shed: ShedPolicy { enabled: true, queue_pressure: pressure },
+        workers,
+        ..QosConfig::default()
+    };
+    let qos = QosServer::start(model, &set, config);
+    let net_config = NetServerConfig {
+        max_conns: args.get("max-conns", 256),
+        quota: QuotaConfig {
+            rate_per_s: args.get("quota-rps", 0.0),
+            burst: args.get("quota-burst", 32.0),
+            reject_debt: args.get("quota-debt", 64.0),
+        },
+    };
+    let listener =
+        std::net::TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+    let server = NetServer::start(listener, qos, net_config)?;
+    // scripts (CI's loopback smoke) parse the port out of this line, so
+    // flush past the pipe buffering before blocking
+    println!("listening on {} (model {}, workers {})", server.addr(), id.name(), workers.name());
+    std::io::stdout().flush().ok();
+    let serve_secs: u64 = args.get("serve-secs", 0);
+    if serve_secs == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(serve_secs));
+    let report = server.shutdown();
+    bfp_cnn::harness::qos_report::print(&report);
+    Ok(())
+}
+
+/// `loadgen --connect`: drive a remote serving front with the open-loop
+/// arrival engine — either one ad-hoc `--arrivals` run or the canned
+/// `--scenario` suite — and print/emit the per-run report.
+fn net_loadgen(
+    id: ModelId,
+    size: usize,
+    seed: u64,
+    artifacts: &Path,
+    addr: &str,
+    args: &Args,
+) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    use bfp_cnn::harness::net_report;
+    use bfp_cnn::net::loadgen::{self, RunOpts};
+    use std::net::ToSocketAddrs;
+
+    let target = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving `{addr}`"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("`{addr}` resolves to no address"))?;
+    let model = id.build(size, seed, artifacts);
+    let pool = gen_images(id, &model.input_shape, 16, seed);
+    let n: usize = args.get("requests", 96);
+    let rps: f64 = args.get("rps", 200.0);
+
+    let rows = if let Some(which) = args.flags.get("scenario") {
+        println!("running scenario suite `{which}` against {target} ...");
+        loadgen::run_scenarios(target, which, &pool, n, rps, seed)?
+    } else {
+        let spec = args.get_str("arrivals", "poisson:200");
+        let kind = loadgen::parse_arrivals(&spec)?;
+        let class_name = args.get_str("class", "standard");
+        let class = bfp_cnn::coordinator::QosClass::parse(&class_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown class `{class_name}`"))?;
+        let offsets = loadgen::schedule(kind, n, seed);
+        let opts =
+            RunOpts { tenant: args.get_str("tenant", "default"), class, ..RunOpts::default() };
+        println!("open-loop `{spec}` ({n} requests) against {target} ...");
+        vec![loadgen::run_open_loop(target, &pool, &offsets, &opts, "adhoc")?]
+    };
+    net_report::print(&rows);
+    if let Some(path) = args.flags.get("json").map(PathBuf::from) {
+        net_report::write_json(&path, "loadgen", &rows)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
 }
 
 /// The `loadgen` subcommand: autotune a lane set off the Pareto

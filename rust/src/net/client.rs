@@ -1,0 +1,155 @@
+//! Blocking client for the TCP serving front.
+//!
+//! [`NetClient`] covers the simple request/response shape
+//! ([`NetClient::infer`]) and the pipelined shape (`send` N ids, then
+//! `read_reply` as responses stream back out of order). The load
+//! generator splits the client into independently-owned sender and
+//! receiver halves so intended-send pacing and reply draining can run
+//! on separate threads over one connection.
+
+use super::proto::{self, Msg, NetRequest, NetResponse, Reply};
+use crate::coordinator::qos::QosClass;
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Result};
+use std::io::{self, BufReader};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A blocking connection to a [`super::NetServer`].
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl NetClient {
+    /// Connect to a serving front.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Self> {
+        let writer = TcpStream::connect(addr)?;
+        let _ = writer.set_nodelay(true);
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(Self { reader, writer, next_id: 0 })
+    }
+
+    /// Bound every read; `None` blocks forever.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)
+    }
+
+    /// Fire one request without waiting; returns the id to correlate the
+    /// eventual reply (ids are 1, 2, 3, … per connection).
+    pub fn send(
+        &mut self,
+        tenant: &str,
+        class: QosClass,
+        deadline: Option<Duration>,
+        image: Tensor,
+    ) -> io::Result<u64> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let req = NetRequest {
+            id,
+            tenant: tenant.to_string(),
+            class,
+            deadline_us: deadline.map_or(0, |d| d.as_micros() as u64),
+            image,
+        };
+        proto::write_frame(&mut self.writer, &proto::encode_request(&req))?;
+        Ok(id)
+    }
+
+    /// Block for the next reply frame (any id — responses return out of
+    /// order as server batches complete).
+    pub fn read_reply(&mut self) -> Result<Reply> {
+        read_reply_frame(&mut self.reader)
+    }
+
+    /// One synchronous request → response round trip; error frames
+    /// become `Err`.
+    pub fn infer(&mut self, tenant: &str, class: QosClass, image: Tensor) -> Result<NetResponse> {
+        let id = self.send(tenant, class, None, image)?;
+        match self.read_reply()? {
+            Reply::Response(resp) => {
+                ensure!(
+                    resp.id == id,
+                    "reply id {} does not match the lone in-flight request {id}",
+                    resp.id
+                );
+                Ok(resp)
+            }
+            Reply::Error(e) => bail!("server refused request {}: {:?}: {}", e.id, e.code, e.message),
+        }
+    }
+
+    /// Split into independently-owned halves so a paced sender thread
+    /// and a draining receiver thread can share the connection.
+    pub fn split(self) -> (NetSender, NetReceiver) {
+        (
+            NetSender { stream: self.writer, next_id: self.next_id },
+            NetReceiver { reader: self.reader },
+        )
+    }
+}
+
+/// The write half of a split [`NetClient`].
+pub struct NetSender {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl NetSender {
+    /// Same contract as [`NetClient::send`].
+    pub fn send(
+        &mut self,
+        tenant: &str,
+        class: QosClass,
+        deadline: Option<Duration>,
+        image: Tensor,
+    ) -> io::Result<u64> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let req = NetRequest {
+            id,
+            tenant: tenant.to_string(),
+            class,
+            deadline_us: deadline.map_or(0, |d| d.as_micros() as u64),
+            image,
+        };
+        proto::write_frame(&mut self.stream, &proto::encode_request(&req))?;
+        Ok(id)
+    }
+
+    /// Half-close the write side so the server sees a clean EOF while
+    /// the receiver half keeps draining replies.
+    pub fn finish(self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Write);
+    }
+}
+
+/// The read half of a split [`NetClient`].
+pub struct NetReceiver {
+    reader: BufReader<TcpStream>,
+}
+
+impl NetReceiver {
+    /// Bound every read; `None` blocks forever.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)
+    }
+
+    /// Same contract as [`NetClient::read_reply`].
+    pub fn read_reply(&mut self) -> Result<Reply> {
+        read_reply_frame(&mut self.reader)
+    }
+}
+
+fn read_reply_frame(reader: &mut BufReader<TcpStream>) -> Result<Reply> {
+    let Some(payload) = proto::read_frame(reader)? else {
+        bail!("server closed the connection");
+    };
+    match proto::decode(&payload)? {
+        Msg::Response(resp) => Ok(Reply::Response(resp)),
+        Msg::Error(err) => Ok(Reply::Error(err)),
+        Msg::Request(_) => bail!("server sent a request frame to a client"),
+    }
+}

@@ -1,0 +1,456 @@
+//! Open-loop load generation over the TCP front.
+//!
+//! The in-process loadgen (and most naive benchmarks) are *closed
+//! loop*: each worker waits for a response before sending the next
+//! request, so when the server slows down the offered load politely
+//! slows down with it and the measured latency hides the stall —
+//! coordinated omission. The open-loop engine here fixes every
+//! *intended* send time up front from an arrival schedule (Poisson /
+//! burst / diurnal), never re-anchors when it falls behind, and
+//! measures each request's latency from its intended send instant —
+//! so time the generator spends blocked on a saturated socket is
+//! charged to the requests that should have been in flight, exactly as
+//! a real client population would experience it.
+
+use super::client::NetClient;
+use super::proto::Reply;
+use crate::coordinator::qos::QosClass;
+use crate::coordinator::LogHistogram;
+use crate::data::Rng;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+/// An arrival process, parameterised by its *mean* request rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals at a constant rate.
+    Poisson { rps: f64 },
+    /// Poisson base load with a `mult`× spike in the first quarter of
+    /// every second — the traffic-spike scenario.
+    Burst { rps: f64, mult: f64 },
+    /// Rate follows a sinusoid with an 8 s period (±75 %), a compressed
+    /// day/night cycle.
+    Diurnal { rps: f64 },
+}
+
+impl ArrivalKind {
+    /// Instantaneous rate at time `t` seconds into the run.
+    fn rate_at(self, t: f64) -> f64 {
+        match self {
+            ArrivalKind::Poisson { rps } => rps,
+            ArrivalKind::Burst { rps, mult } => {
+                if t.fract() < 0.25 {
+                    rps * mult
+                } else {
+                    rps
+                }
+            }
+            ArrivalKind::Diurnal { rps } => {
+                rps * (1.0 + 0.75 * (t * std::f64::consts::TAU / 8.0).sin())
+            }
+        }
+    }
+}
+
+/// Parse `poisson:<rps>`, `burst:<rps>:<mult>` or `diurnal:<rps>`.
+pub fn parse_arrivals(spec: &str) -> Result<ArrivalKind> {
+    let mut parts = spec.split(':');
+    let kind = parts.next().unwrap_or_default();
+    let rps: f64 = parts
+        .next()
+        .with_context(|| format!("arrival spec `{spec}` is missing a rate"))?
+        .parse()
+        .with_context(|| format!("bad rate in arrival spec `{spec}`"))?;
+    if !rps.is_finite() || rps <= 0.0 {
+        bail!("arrival rate must be positive, got {rps}");
+    }
+    let kind = match kind {
+        "poisson" => ArrivalKind::Poisson { rps },
+        "burst" => {
+            let mult: f64 = match parts.next() {
+                Some(m) => m.parse().with_context(|| format!("bad mult in `{spec}`"))?,
+                None => 4.0,
+            };
+            if !mult.is_finite() || mult < 1.0 {
+                bail!("burst mult must be >= 1, got {mult}");
+            }
+            ArrivalKind::Burst { rps, mult }
+        }
+        "diurnal" => ArrivalKind::Diurnal { rps },
+        other => bail!("unknown arrival kind `{other}` (poisson|burst|diurnal)"),
+    };
+    if parts.next().is_some() {
+        bail!("trailing fields in arrival spec `{spec}`");
+    }
+    Ok(kind)
+}
+
+/// Draw `n` arrival offsets (relative to run start) by inverting the
+/// exponential inter-arrival CDF at the instantaneous rate. Deterministic
+/// in `seed`.
+pub fn schedule(kind: ArrivalKind, n: usize, seed: u64) -> Vec<Duration> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rate = kind.rate_at(t).max(1e-6);
+        let u = rng.uniform().clamp(1e-12, 1.0 - 1e-12);
+        t += -(1.0 - u).ln() / rate;
+        out.push(Duration::from_secs_f64(t));
+    }
+    out
+}
+
+/// Per-run knobs shared by the open- and closed-loop engines.
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    pub tenant: String,
+    pub class: QosClass,
+    /// Per-request relative deadline; `None` uses the class default.
+    pub deadline: Option<Duration>,
+    /// Artificial pause after *reading* each reply — models a slow
+    /// client that drains its socket lazily (backpressure scenario).
+    pub read_stall: Duration,
+    /// Safety net so a wedged server fails the run instead of hanging.
+    pub read_timeout: Duration,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self {
+            tenant: "default".to_string(),
+            class: QosClass::Standard,
+            deadline: None,
+            read_stall: Duration::ZERO,
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What one generator run observed, from the client's side of the wire.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// Scenario / run label.
+    pub name: String,
+    pub tenant: String,
+    /// `"open-loop"` or `"closed-loop"`.
+    pub mode: &'static str,
+    pub sent: u64,
+    /// Served responses (including deadline-missed ones).
+    pub ok: u64,
+    /// Error frames (quota rejections, bad requests, server gone).
+    pub errors: u64,
+    pub downgraded: u64,
+    pub quota_downgraded: u64,
+    pub deadline_missed: u64,
+    /// Open loop: intended-send → reply. Closed loop: actual send → reply.
+    pub latency_us: LogHistogram,
+    pub wall: Duration,
+}
+
+impl RunStats {
+    fn new(name: &str, tenant: &str, mode: &'static str) -> Self {
+        Self {
+            name: name.to_string(),
+            tenant: tenant.to_string(),
+            mode,
+            sent: 0,
+            ok: 0,
+            errors: 0,
+            downgraded: 0,
+            quota_downgraded: 0,
+            deadline_missed: 0,
+            latency_us: LogHistogram::default(),
+            wall: Duration::ZERO,
+        }
+    }
+
+    /// Latency percentile in milliseconds.
+    pub fn latency_p(&self, p: f64) -> f64 {
+        self.latency_us.percentile(p) / 1000.0
+    }
+
+    /// Served responses per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.ok as f64 / s
+    }
+
+    fn absorb_reply(&mut self, reply: &Reply, latency: Option<Duration>) {
+        match reply {
+            Reply::Response(resp) => {
+                self.ok += 1;
+                if resp.downgraded {
+                    self.downgraded += 1;
+                }
+                if resp.quota_downgraded {
+                    self.quota_downgraded += 1;
+                }
+                if resp.deadline_missed {
+                    self.deadline_missed += 1;
+                }
+                if let Some(l) = latency {
+                    self.latency_us.record(l.as_micros() as u64);
+                }
+            }
+            Reply::Error(_) => self.errors += 1,
+        }
+    }
+}
+
+/// Drive one connection open loop: send on the intended schedule (never
+/// re-anchoring when behind), drain replies on a second thread, and
+/// charge each reply's latency to its *intended* send instant.
+pub fn run_open_loop(
+    addr: SocketAddr,
+    pool: &[Tensor],
+    offsets: &[Duration],
+    opts: &RunOpts,
+    name: &str,
+) -> Result<RunStats> {
+    if pool.is_empty() || offsets.is_empty() {
+        bail!("open-loop run needs a non-empty image pool and schedule");
+    }
+    let client = NetClient::connect(addr).context("connecting to the serving front")?;
+    client.set_read_timeout(Some(opts.read_timeout))?;
+    let (mut sender, mut receiver) = client.split();
+
+    let start = Instant::now();
+    let intended: Vec<Instant> = offsets.iter().map(|&off| start + off).collect();
+    let n = intended.len();
+    let read_stall = opts.read_stall;
+    let intended_rx = intended.clone();
+    let (name_owned, tenant_owned) = (name.to_string(), opts.tenant.clone());
+
+    // replies return out of order; correlate by id (client ids are
+    // 1, 2, 3, … so id i maps to intended[i - 1])
+    let drain = std::thread::spawn(move || -> Result<RunStats> {
+        let mut stats = RunStats::new(&name_owned, &tenant_owned, "open-loop");
+        let mut seen = 0usize;
+        while seen < n {
+            let reply = receiver.read_reply().context("draining replies")?;
+            let now = Instant::now();
+            let latency = match &reply {
+                Reply::Response(r) if r.id >= 1 && (r.id as usize) <= n => {
+                    Some(now.saturating_duration_since(intended_rx[(r.id - 1) as usize]))
+                }
+                _ => None,
+            };
+            stats.absorb_reply(&reply, latency);
+            seen += 1;
+            if !read_stall.is_zero() {
+                std::thread::sleep(read_stall);
+            }
+        }
+        Ok(stats)
+    });
+
+    let mut sent = 0u64;
+    for (i, when) in intended.iter().enumerate() {
+        let now = Instant::now();
+        if *when > now {
+            std::thread::sleep(*when - now);
+        }
+        // behind schedule: send immediately, do NOT shift later arrivals
+        sender
+            .send(&opts.tenant, opts.class, opts.deadline, pool[i % pool.len()].clone())
+            .context("sending a scheduled request")?;
+        sent += 1;
+    }
+    sender.finish();
+
+    let mut stats = drain.join().map_err(|_| anyhow::anyhow!("reply-drain thread panicked"))??;
+    stats.sent = sent;
+    stats.wall = start.elapsed();
+    Ok(stats)
+}
+
+/// The coordinated-omission-prone reference: wait for each reply before
+/// sending the next request; latency measured from the *actual* send.
+pub fn run_closed_loop(
+    addr: SocketAddr,
+    pool: &[Tensor],
+    n: usize,
+    opts: &RunOpts,
+    name: &str,
+) -> Result<RunStats> {
+    if pool.is_empty() || n == 0 {
+        bail!("closed-loop run needs a non-empty image pool and request count");
+    }
+    let mut client = NetClient::connect(addr).context("connecting to the serving front")?;
+    client.set_read_timeout(Some(opts.read_timeout))?;
+    let mut stats = RunStats::new(name, &opts.tenant, "closed-loop");
+    let start = Instant::now();
+    for i in 0..n {
+        let sent_at = Instant::now();
+        client.send(&opts.tenant, opts.class, opts.deadline, pool[i % pool.len()].clone())?;
+        let reply = client.read_reply().context("waiting for a reply")?;
+        stats.absorb_reply(&reply, Some(sent_at.elapsed()));
+        stats.sent += 1;
+        if !opts.read_stall.is_zero() {
+            std::thread::sleep(opts.read_stall);
+        }
+    }
+    stats.wall = start.elapsed();
+    Ok(stats)
+}
+
+/// Canonical scenario suite. `which` is `spike`, `tenant-mix`,
+/// `slow-client` or `all`; `rps` scales every schedule and `n` is the
+/// per-run request count.
+pub fn run_scenarios(
+    addr: SocketAddr,
+    which: &str,
+    pool: &[Tensor],
+    n: usize,
+    rps: f64,
+    seed: u64,
+) -> Result<Vec<RunStats>> {
+    let mut out = Vec::new();
+    let all = which == "all";
+    let mut matched = all;
+    if all || which == "spike" {
+        matched = true;
+        out.extend(scenario_spike(addr, pool, n, rps, seed)?);
+    }
+    if all || which == "tenant-mix" {
+        matched = true;
+        out.extend(scenario_tenant_mix(addr, pool, n, rps, seed)?);
+    }
+    if all || which == "slow-client" {
+        matched = true;
+        out.extend(scenario_slow_client(addr, pool, n, rps, seed)?);
+    }
+    if !matched {
+        bail!("unknown scenario `{which}` (spike|tenant-mix|slow-client|all)");
+    }
+    Ok(out)
+}
+
+/// Traffic spike: open-loop burst arrivals (4× the base rate a quarter
+/// of the time) against the standard class.
+fn scenario_spike(
+    addr: SocketAddr,
+    pool: &[Tensor],
+    n: usize,
+    rps: f64,
+    seed: u64,
+) -> Result<Vec<RunStats>> {
+    let offsets = schedule(ArrivalKind::Burst { rps, mult: 4.0 }, n, seed);
+    let opts = RunOpts { tenant: "spike".to_string(), ..RunOpts::default() };
+    Ok(vec![run_open_loop(addr, pool, &offsets, &opts, "spike")?])
+}
+
+/// Tenant mix: a flooding standard-class tenant (open loop, 4× rate)
+/// alongside a polite gold-class VIP (closed loop). The VIP's p99 is the
+/// number to watch.
+fn scenario_tenant_mix(
+    addr: SocketAddr,
+    pool: &[Tensor],
+    n: usize,
+    rps: f64,
+    seed: u64,
+) -> Result<Vec<RunStats>> {
+    let offsets = schedule(ArrivalKind::Poisson { rps: rps * 4.0 }, n, seed);
+    let flood_pool: Vec<Tensor> = pool.to_vec();
+    let flood = std::thread::spawn(move || -> Result<RunStats> {
+        let opts = RunOpts { tenant: "flood".to_string(), ..RunOpts::default() };
+        run_open_loop(addr, &flood_pool, &offsets, &opts, "tenant-mix")
+    });
+    let vip_opts =
+        RunOpts { tenant: "vip".to_string(), class: QosClass::Gold, ..RunOpts::default() };
+    let vip = run_closed_loop(addr, pool, n.div_ceil(4), &vip_opts, "tenant-mix");
+    let flood = flood.join().map_err(|_| anyhow::anyhow!("flood thread panicked"))?;
+    Ok(vec![flood?, vip?])
+}
+
+/// Slow client: a tenant that stalls between reads (its socket fills;
+/// responses queue in its per-connection channel) while a concurrent
+/// probe tenant verifies everyone else keeps their latency.
+fn scenario_slow_client(
+    addr: SocketAddr,
+    pool: &[Tensor],
+    n: usize,
+    rps: f64,
+    seed: u64,
+) -> Result<Vec<RunStats>> {
+    let sloth_n = n.min(32); // each reply stalls; keep the run bounded
+    let offsets = schedule(ArrivalKind::Poisson { rps: rps * 2.0 }, sloth_n, seed);
+    let sloth_pool: Vec<Tensor> = pool.to_vec();
+    let sloth = std::thread::spawn(move || -> Result<RunStats> {
+        let opts = RunOpts {
+            tenant: "sloth".to_string(),
+            read_stall: Duration::from_millis(25),
+            ..RunOpts::default()
+        };
+        run_open_loop(addr, &sloth_pool, &offsets, &opts, "slow-client")
+    });
+    let probe_opts =
+        RunOpts { tenant: "probe".to_string(), class: QosClass::Gold, ..RunOpts::default() };
+    let probe = run_closed_loop(addr, pool, n.div_ceil(4), &probe_opts, "slow-client");
+    let sloth = sloth.join().map_err(|_| anyhow::anyhow!("sloth thread panicked"))?;
+    Ok(vec![sloth?, probe?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_specs() {
+        assert_eq!(parse_arrivals("poisson:200").unwrap(), ArrivalKind::Poisson { rps: 200.0 });
+        assert_eq!(
+            parse_arrivals("burst:150:4").unwrap(),
+            ArrivalKind::Burst { rps: 150.0, mult: 4.0 }
+        );
+        assert_eq!(
+            parse_arrivals("burst:150").unwrap(),
+            ArrivalKind::Burst { rps: 150.0, mult: 4.0 }
+        );
+        assert_eq!(parse_arrivals("diurnal:120").unwrap(), ArrivalKind::Diurnal { rps: 120.0 });
+        for bad in ["poisson", "poisson:0", "burst:10:0.5", "nope:5", "poisson:5:9"] {
+            assert!(parse_arrivals(bad).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_monotone_and_rate_faithful() {
+        let a = schedule(ArrivalKind::Poisson { rps: 1000.0 }, 4000, 7);
+        let b = schedule(ArrivalKind::Poisson { rps: 1000.0 }, 4000, 7);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "offsets must be sorted");
+        // 4000 arrivals at 1000 rps should span ~4 s; the mean of the
+        // exponential is 1/rate so the tolerance is generous
+        let span = a.last().unwrap().as_secs_f64();
+        assert!((2.5..6.0).contains(&span), "span {span} s is not near 4 s");
+        let c = schedule(ArrivalKind::Poisson { rps: 1000.0 }, 4000, 8);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn burst_runs_hotter_than_its_base_rate() {
+        let base = schedule(ArrivalKind::Poisson { rps: 200.0 }, 2000, 11);
+        let burst = schedule(ArrivalKind::Burst { rps: 200.0, mult: 8.0 }, 2000, 11);
+        // same arrival count at a (mean) higher rate ⇒ shorter span
+        assert!(
+            burst.last().unwrap() < base.last().unwrap(),
+            "burst schedule should finish sooner than its base poisson"
+        );
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates_but_stays_positive() {
+        let kind = ArrivalKind::Diurnal { rps: 100.0 };
+        let peak = kind.rate_at(2.0); // sin(2π·2/8) = 1
+        let trough = kind.rate_at(6.0); // sin(2π·6/8) = −1
+        assert!(peak > 160.0 && peak < 180.0, "peak {peak}");
+        assert!(trough > 20.0 && trough < 30.0, "trough {trough}");
+        let sched = schedule(kind, 500, 3);
+        assert!(sched.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

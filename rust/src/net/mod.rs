@@ -1,0 +1,41 @@
+//! Networked serving fabric: a zero-dependency TCP front for the QoS
+//! precision router, plus the open-loop load generator that drives it.
+//!
+//! The paper's premise is that BFP-quantized inference is cheap enough
+//! to serve at accelerator scale; this layer is the deployment surface
+//! for that claim. Everything is built on blocking `std::net` sockets
+//! and threads — the image is offline, so there is no async runtime and
+//! no serialization crate:
+//!
+//! * [`proto`] — length-prefixed binary framing with a version byte,
+//!   request ids, tenant ids and class/deadline fields. Logits travel
+//!   as raw little-endian f32 bits, so a served tensor round-trips the
+//!   wire bit-identically (the loopback integration test pins this
+//!   against in-process [`crate::coordinator::QosServer::infer`]).
+//! * [`server`] — an acceptor plus one reader and one writer thread per
+//!   connection, feeding the existing `QosServer`. Responses return out
+//!   of order as batches complete; a slow client only backs up its own
+//!   connection (an unbounded per-connection channel decouples lane
+//!   executors from client sockets), never the acceptor or other
+//!   tenants.
+//! * [`quota`] — per-tenant token buckets in front of admission:
+//!   over-quota traffic degrades to the economy lane before it can
+//!   starve gold, and sustained abuse is shed with an error frame.
+//! * [`client`] — a reusable blocking client (loadgen, tests, demos).
+//! * [`loadgen`] — an open-loop arrival engine: Poisson/burst/diurnal
+//!   schedules are fixed *before* the run and latency is measured from
+//!   each request's intended send instant, so a backed-up server cannot
+//!   hide queueing delay behind a stalled sender (no coordinated
+//!   omission).
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod quota;
+pub mod server;
+
+pub use client::NetClient;
+pub use loadgen::{ArrivalKind, RunStats};
+pub use proto::{NetError, NetRequest, NetResponse, Reply};
+pub use quota::{Admission, QuotaConfig};
+pub use server::{NetServer, NetServerConfig};

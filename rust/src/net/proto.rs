@@ -1,0 +1,617 @@
+//! Wire protocol: length-prefixed binary frames.
+//!
+//! Every frame is a `u32` little-endian payload length followed by the
+//! payload. A payload starts with a protocol version byte and a message
+//! kind, then kind-specific fields; integers are little-endian and
+//! tensors carry their shape plus raw f32 bits, so logits round-trip
+//! the wire bit-identically. The decoder is a bounds-checked cursor —
+//! truncated, oversized or garbage frames surface as a typed
+//! [`DecodeError`], never a panic or an out-of-bounds read.
+
+use crate::coordinator::QosClass;
+use crate::tensor::Tensor;
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Bumped on any incompatible layout change; the server rejects frames
+/// carrying any other version instead of misparsing them.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard cap on a frame payload: large enough for any batch-1 CNN input
+/// in this repo, small enough that a hostile length prefix cannot make
+/// the server allocate gigabytes.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Tensor sanity bounds (a request carries exactly one image).
+const MAX_DIMS: usize = 8;
+const MAX_ELEMS: usize = MAX_FRAME_BYTES / 4;
+/// Tenant ids / error strings are short identifiers, not payloads.
+const MAX_STR_BYTES: usize = 1024;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+const KIND_ERROR: u8 = 3;
+
+/// Why a payload failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The payload ended before the field being read.
+    Truncated,
+    /// Version byte differs from [`PROTO_VERSION`].
+    BadVersion { got: u8 },
+    /// Unknown message kind byte.
+    BadKind(u8),
+    /// Unknown QoS class or error code byte.
+    BadEnum(u8),
+    /// String field is not UTF-8 or exceeds [`MAX_STR_BYTES`].
+    BadString,
+    /// Tensor shape is empty, too deep, overflows, or exceeds caps.
+    BadShape,
+    /// The payload decoded but left unread trailing bytes.
+    TrailingBytes { extra: usize },
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::Truncated => write!(f, "payload truncated mid-field"),
+            DecodeError::BadVersion { got } => {
+                write!(f, "protocol version {got} (this side speaks {PROTO_VERSION})")
+            }
+            DecodeError::BadKind(k) => write!(f, "unknown message kind {k}"),
+            DecodeError::BadEnum(v) => write!(f, "unknown enum byte {v}"),
+            DecodeError::BadString => write!(f, "string field invalid or too long"),
+            DecodeError::BadShape => write!(f, "tensor shape invalid or too large"),
+            DecodeError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after the message")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// One inference request as it travels the wire.
+#[derive(Debug, Clone)]
+pub struct NetRequest {
+    /// Client-chosen id, echoed on the response (responses return out of
+    /// order, so the client correlates by id, not arrival order).
+    pub id: u64,
+    /// Tenant identifier for quota accounting.
+    pub tenant: String,
+    pub class: QosClass,
+    /// Relative deadline in µs; 0 ⇒ the class default.
+    pub deadline_us: u64,
+    pub image: Tensor,
+}
+
+/// One served response (mirrors [`crate::coordinator::QosResponse`]).
+#[derive(Debug, Clone)]
+pub struct NetResponse {
+    /// The client id from the matching request.
+    pub id: u64,
+    /// The class the request asked for.
+    pub class: QosClass,
+    /// The lane that served it.
+    pub served_by: String,
+    /// The serving lane's active precision step.
+    pub lane_plan: String,
+    /// Served by a cheaper lane than requested (pressure or quota).
+    pub downgraded: bool,
+    /// The downgrade was the tenant quota's doing specifically.
+    pub quota_downgraded: bool,
+    pub deadline_missed: bool,
+    pub queue_wait_us: u64,
+    pub batch_size: u32,
+    pub logits: Tensor,
+}
+
+/// Why the server refused a request (or a whole connection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Tenant exceeded its hard quota debt; request shed.
+    OverQuota,
+    /// Connection-level admission: the server is at `max_conns`.
+    ConnLimit,
+    /// Unparseable or non-request frame.
+    BadRequest,
+    /// The serving fabric is shutting down.
+    ServerGone,
+}
+
+impl ErrorCode {
+    fn code(self) -> u8 {
+        match self {
+            ErrorCode::OverQuota => 1,
+            ErrorCode::ConnLimit => 2,
+            ErrorCode::BadRequest => 3,
+            ErrorCode::ServerGone => 4,
+        }
+    }
+
+    fn from_code(v: u8) -> Option<Self> {
+        match v {
+            1 => Some(ErrorCode::OverQuota),
+            2 => Some(ErrorCode::ConnLimit),
+            3 => Some(ErrorCode::BadRequest),
+            4 => Some(ErrorCode::ServerGone),
+            _ => None,
+        }
+    }
+}
+
+/// An error frame: `id` is the offending request's id when known, 0 for
+/// connection-level refusals and frames that never parsed far enough to
+/// carry one.
+#[derive(Debug, Clone)]
+pub struct NetError {
+    pub id: u64,
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+/// Any decoded payload.
+#[derive(Debug, Clone)]
+pub enum Msg {
+    Request(NetRequest),
+    Response(NetResponse),
+    Error(NetError),
+}
+
+/// What a client gets back for a request.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    Response(NetResponse),
+    Error(NetError),
+}
+
+fn class_code(c: QosClass) -> u8 {
+    match c {
+        QosClass::Gold => 0,
+        QosClass::Standard => 1,
+        QosClass::Economy => 2,
+    }
+}
+
+fn class_from_code(v: u8) -> Option<QosClass> {
+    match v {
+        0 => Some(QosClass::Gold),
+        1 => Some(QosClass::Standard),
+        2 => Some(QosClass::Economy),
+        _ => None,
+    }
+}
+
+// ---- framing ---------------------------------------------------------
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME_BYTES, "oversized outgoing frame");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame's payload. `Ok(None)` is a clean EOF *between* frames
+/// (the peer closed); EOF mid-frame and hostile length prefixes are
+/// `io::Error`s — once framing desyncs the stream cannot be trusted.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    let mut len4 = [0u8; 4];
+    match r.read(&mut len4[..1]) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) => return Err(e),
+    }
+    r.read_exact(&mut len4[1..])?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+// ---- encoding --------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= MAX_STR_BYTES, "string field too long");
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    debug_assert!(!t.shape.is_empty() && t.shape.len() <= MAX_DIMS);
+    out.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for &v in &t.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a request payload (frame it with [`write_frame`]).
+pub fn encode_request(req: &NetRequest) -> Vec<u8> {
+    let mut p = Vec::with_capacity(32 + req.tenant.len() + 4 * req.image.len());
+    p.push(PROTO_VERSION);
+    p.push(KIND_REQUEST);
+    p.extend_from_slice(&req.id.to_le_bytes());
+    put_str(&mut p, &req.tenant);
+    p.push(class_code(req.class));
+    p.extend_from_slice(&req.deadline_us.to_le_bytes());
+    put_tensor(&mut p, &req.image);
+    p
+}
+
+/// Encode a response payload.
+pub fn encode_response(resp: &NetResponse) -> Vec<u8> {
+    let mut p = Vec::with_capacity(64 + resp.served_by.len() + 4 * resp.logits.len());
+    p.push(PROTO_VERSION);
+    p.push(KIND_RESPONSE);
+    p.extend_from_slice(&resp.id.to_le_bytes());
+    p.push(class_code(resp.class));
+    put_str(&mut p, &resp.served_by);
+    put_str(&mut p, &resp.lane_plan);
+    let flags = (resp.downgraded as u8)
+        | ((resp.quota_downgraded as u8) << 1)
+        | ((resp.deadline_missed as u8) << 2);
+    p.push(flags);
+    p.extend_from_slice(&resp.queue_wait_us.to_le_bytes());
+    p.extend_from_slice(&resp.batch_size.to_le_bytes());
+    put_tensor(&mut p, &resp.logits);
+    p
+}
+
+/// Encode an error payload.
+pub fn encode_error(err: &NetError) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16 + err.message.len());
+    p.push(PROTO_VERSION);
+    p.push(KIND_ERROR);
+    p.extend_from_slice(&err.id.to_le_bytes());
+    p.push(err.code.code());
+    put_str(&mut p, &err.message);
+    p
+}
+
+// ---- decoding --------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        let end = self.pos.checked_add(n).ok_or(DecodeError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(DecodeError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String, DecodeError> {
+        let len = self.u16()? as usize;
+        if len > MAX_STR_BYTES {
+            return Err(DecodeError::BadString);
+        }
+        let raw = self.bytes(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| DecodeError::BadString)
+    }
+
+    fn tensor(&mut self) -> Result<Tensor, DecodeError> {
+        let ndim = self.u8()? as usize;
+        if ndim == 0 || ndim > MAX_DIMS {
+            return Err(DecodeError::BadShape);
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut elems = 1usize;
+        for _ in 0..ndim {
+            let d = self.u32()? as usize;
+            elems = elems.checked_mul(d).ok_or(DecodeError::BadShape)?;
+            shape.push(d);
+        }
+        if elems > MAX_ELEMS {
+            return Err(DecodeError::BadShape);
+        }
+        let raw = self.bytes(4 * elems)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Tensor::from_vec(data, &shape))
+    }
+
+    fn class(&mut self) -> Result<QosClass, DecodeError> {
+        let v = self.u8()?;
+        class_from_code(v).ok_or(DecodeError::BadEnum(v))
+    }
+
+    fn finish(self) -> Result<(), DecodeError> {
+        if self.pos != self.buf.len() {
+            return Err(DecodeError::TrailingBytes { extra: self.buf.len() - self.pos });
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame payload into a typed message.
+pub fn decode(payload: &[u8]) -> Result<Msg, DecodeError> {
+    let mut c = Cursor::new(payload);
+    let version = c.u8()?;
+    if version != PROTO_VERSION {
+        return Err(DecodeError::BadVersion { got: version });
+    }
+    let kind = c.u8()?;
+    let msg = match kind {
+        KIND_REQUEST => Msg::Request(NetRequest {
+            id: c.u64()?,
+            tenant: c.string()?,
+            class: c.class()?,
+            deadline_us: c.u64()?,
+            image: c.tensor()?,
+        }),
+        KIND_RESPONSE => {
+            let id = c.u64()?;
+            let class = c.class()?;
+            let served_by = c.string()?;
+            let lane_plan = c.string()?;
+            let flags = c.u8()?;
+            Msg::Response(NetResponse {
+                id,
+                class,
+                served_by,
+                lane_plan,
+                downgraded: flags & 1 != 0,
+                quota_downgraded: flags & 2 != 0,
+                deadline_missed: flags & 4 != 0,
+                queue_wait_us: c.u64()?,
+                batch_size: c.u32()?,
+                logits: c.tensor()?,
+            })
+        }
+        KIND_ERROR => {
+            let id = c.u64()?;
+            let code_byte = c.u8()?;
+            let code = ErrorCode::from_code(code_byte).ok_or(DecodeError::BadEnum(code_byte))?;
+            Msg::Error(NetError { id, code, message: c.string()? })
+        }
+        k => return Err(DecodeError::BadKind(k)),
+    };
+    c.finish()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn tensor_bits_equal(a: &Tensor, b: &Tensor) -> bool {
+        a.shape == b.shape
+            && a.data.len() == b.data.len()
+            && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn random_tensor(rng: &mut Rng) -> Tensor {
+        let ndim = 1 + rng.below(3);
+        let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(5)).collect();
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.uniform_range(-8.0, 8.0) as f32).collect();
+        Tensor::from_vec(data, &shape)
+    }
+
+    /// Property: every randomly generated message round-trips encode →
+    /// decode with bit-identical tensors and identical fields.
+    #[test]
+    fn round_trip_property() {
+        let mut rng = Rng::new(99);
+        for i in 0..60u64 {
+            let req = NetRequest {
+                id: rng.next_u64(),
+                tenant: format!("tenant-{}", rng.below(9)),
+                class: QosClass::ALL[rng.below(3)],
+                deadline_us: rng.next_u64() >> 40,
+                image: random_tensor(&mut rng),
+            };
+            match decode(&encode_request(&req)).unwrap() {
+                Msg::Request(d) => {
+                    assert_eq!(d.id, req.id);
+                    assert_eq!(d.tenant, req.tenant);
+                    assert_eq!(d.class, req.class);
+                    assert_eq!(d.deadline_us, req.deadline_us);
+                    assert!(tensor_bits_equal(&d.image, &req.image), "case {i}");
+                }
+                other => panic!("decoded wrong kind: {other:?}"),
+            }
+
+            let resp = NetResponse {
+                id: rng.next_u64(),
+                class: QosClass::ALL[rng.below(3)],
+                served_by: "economy".into(),
+                lane_plan: format!("plan[{}dB]", rng.below(40)),
+                downgraded: rng.below(2) == 1,
+                quota_downgraded: rng.below(2) == 1,
+                deadline_missed: rng.below(2) == 1,
+                queue_wait_us: rng.next_u64() >> 30,
+                batch_size: rng.below(16) as u32,
+                logits: random_tensor(&mut rng),
+            };
+            match decode(&encode_response(&resp)).unwrap() {
+                Msg::Response(d) => {
+                    assert_eq!(d.id, resp.id);
+                    assert_eq!(d.class, resp.class);
+                    assert_eq!(d.served_by, resp.served_by);
+                    assert_eq!(d.lane_plan, resp.lane_plan);
+                    assert_eq!(d.downgraded, resp.downgraded);
+                    assert_eq!(d.quota_downgraded, resp.quota_downgraded);
+                    assert_eq!(d.deadline_missed, resp.deadline_missed);
+                    assert_eq!(d.queue_wait_us, resp.queue_wait_us);
+                    assert_eq!(d.batch_size, resp.batch_size);
+                    assert!(tensor_bits_equal(&d.logits, &resp.logits), "case {i}");
+                }
+                other => panic!("decoded wrong kind: {other:?}"),
+            }
+        }
+        let err = NetError { id: 7, code: ErrorCode::OverQuota, message: "shed".into() };
+        match decode(&encode_error(&err)).unwrap() {
+            Msg::Error(d) => {
+                assert_eq!(d.id, 7);
+                assert_eq!(d.code, ErrorCode::OverQuota);
+                assert_eq!(d.message, "shed");
+            }
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+    }
+
+    /// Logits with special float values (−0.0, subnormals, NaN payloads)
+    /// must cross the wire with their exact bit patterns.
+    #[test]
+    fn special_float_bits_survive() {
+        let data = vec![-0.0f32, f32::MIN_POSITIVE / 2.0, f32::NAN, f32::INFINITY, -1.5e-42];
+        let t = Tensor::from_vec(data, &[5]);
+        let req = NetRequest {
+            id: 1,
+            tenant: "t".into(),
+            class: QosClass::Gold,
+            deadline_us: 0,
+            image: t.clone(),
+        };
+        match decode(&encode_request(&req)).unwrap() {
+            Msg::Request(d) => assert!(tensor_bits_equal(&d.image, &t)),
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+    }
+
+    /// Every strict prefix of a valid payload must fail with a typed
+    /// error — no panics, no partial messages.
+    #[test]
+    fn truncated_payloads_are_rejected() {
+        let req = NetRequest {
+            id: 42,
+            tenant: "acme".into(),
+            class: QosClass::Standard,
+            deadline_us: 1000,
+            image: Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]),
+        };
+        let full = encode_request(&req);
+        for cut in 0..full.len() {
+            let err = decode(&full[..cut]).unwrap_err();
+            assert!(
+                matches!(err, DecodeError::Truncated | DecodeError::BadShape),
+                "prefix {cut}: unexpected error {err:?}"
+            );
+        }
+        assert!(decode(&full).is_ok());
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let err = NetError { id: 1, code: ErrorCode::BadRequest, message: "x".into() };
+        let mut p = encode_error(&err);
+        p.push(0xAB);
+        assert_eq!(decode(&p).unwrap_err(), DecodeError::TrailingBytes { extra: 1 });
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let req = NetRequest {
+            id: 1,
+            tenant: "t".into(),
+            class: QosClass::Gold,
+            deadline_us: 0,
+            image: Tensor::from_vec(vec![0.0], &[1]),
+        };
+        let mut p = encode_request(&req);
+        p[0] = PROTO_VERSION + 1;
+        assert_eq!(decode(&p).unwrap_err(), DecodeError::BadVersion { got: PROTO_VERSION + 1 });
+    }
+
+    #[test]
+    fn unknown_kind_class_and_code_are_rejected() {
+        assert_eq!(decode(&[PROTO_VERSION, 9]).unwrap_err(), DecodeError::BadKind(9));
+        // request with class byte 7
+        let mut p = vec![PROTO_VERSION, KIND_REQUEST];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&0u16.to_le_bytes()); // empty tenant
+        p.push(7);
+        assert_eq!(decode(&p).unwrap_err(), DecodeError::BadEnum(7));
+    }
+
+    /// Random byte soup must never decode successfully (version byte 1
+    /// is excluded from position 0 to keep the property meaningful) and
+    /// must never panic.
+    #[test]
+    fn garbage_never_decodes() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let n = rng.below(64);
+            let mut p: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            if !p.is_empty() && p[0] == PROTO_VERSION {
+                p[0] = PROTO_VERSION + 1;
+            }
+            assert!(decode(&p).is_err());
+        }
+    }
+
+    /// A hostile tensor header (huge dims, overflowing element product)
+    /// must be refused before any allocation is sized from it.
+    #[test]
+    fn hostile_shapes_are_refused() {
+        // 2 dims of u32::MAX each: product overflows usize::checked_mul
+        let mut p = vec![PROTO_VERSION, KIND_REQUEST];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&0u16.to_le_bytes());
+        p.push(0); // gold
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.push(2);
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode(&p).unwrap_err();
+        assert!(matches!(err, DecodeError::BadShape), "{err:?}");
+    }
+
+    /// Framing: oversized length prefixes are an I/O error, a clean EOF
+    /// between frames is `None`, and EOF mid-frame is an error.
+    #[test]
+    fn frame_reader_guards_length_and_eof() {
+        let mut out = Vec::new();
+        write_frame(&mut out, b"hello").unwrap();
+        let mut r = &out[..];
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(&b"hello"[..]));
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+
+        let huge = (MAX_FRAME_BYTES as u32 + 1).to_le_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+
+        let mut cut = Vec::new();
+        write_frame(&mut cut, b"hello").unwrap();
+        cut.truncate(cut.len() - 2);
+        assert!(read_frame(&mut &cut[..]).is_err());
+    }
+}

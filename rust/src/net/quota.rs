@@ -1,0 +1,180 @@
+//! Per-tenant token-bucket quotas in front of QoS admission.
+//!
+//! Each tenant refills at `rate_per_s` tokens/s up to `burst`; every
+//! admitted request spends one token. Crossing zero does not reject —
+//! it *degrades*: the request is rerouted to the economy lane, feeding
+//! the same shed accounting as pressure downgrades, so an over-quota
+//! tenant loses quality before it can starve in-quota gold traffic.
+//! Only sustained abuse (debt beyond `reject_debt`) is shed outright
+//! with an error frame. Rejected requests spend no token, so the debt —
+//! and with it the recovery time — stays bounded.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Token-bucket parameters, shared by every tenant of one server.
+#[derive(Debug, Clone, Copy)]
+pub struct QuotaConfig {
+    /// Sustained admitted requests per second per tenant; `0` disables
+    /// quotas entirely (every request admits).
+    pub rate_per_s: f64,
+    /// Bucket capacity: how far a tenant may burst above the sustained
+    /// rate before degradation starts.
+    pub burst: f64,
+    /// Token debt beyond which over-quota requests are rejected with an
+    /// `OverQuota` error frame instead of degraded.
+    pub reject_debt: f64,
+}
+
+impl Default for QuotaConfig {
+    fn default() -> Self {
+        Self { rate_per_s: 0.0, burst: 32.0, reject_debt: 64.0 }
+    }
+}
+
+/// The quota's verdict on one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// In quota: serve at the requested class.
+    Admit,
+    /// Over quota: serve, but on the economy lane.
+    Degrade,
+    /// Far over quota: shed with an error frame.
+    Reject,
+}
+
+/// One tenant's bucket. Time is passed in explicitly so tests are
+/// deterministic.
+#[derive(Debug, Clone)]
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(now: Instant, cfg: &QuotaConfig) -> Self {
+        Self { tokens: cfg.burst, last: now }
+    }
+
+    fn admit_at(&mut self, now: Instant, cfg: &QuotaConfig) -> Admission {
+        if cfg.rate_per_s <= 0.0 {
+            return Admission::Admit;
+        }
+        // `saturating_duration_since`: a same-instant (or clock-skewed)
+        // call refills nothing rather than panicking.
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * cfg.rate_per_s).min(cfg.burst);
+        self.tokens -= 1.0;
+        if self.tokens >= 0.0 {
+            Admission::Admit
+        } else if self.tokens >= -cfg.reject_debt {
+            Admission::Degrade
+        } else {
+            // rejected work spends no token: debt is bounded, so the
+            // tenant recovers in O(reject_debt / rate) once it backs off
+            self.tokens += 1.0;
+            Admission::Reject
+        }
+    }
+}
+
+/// All tenants' buckets for one server, keyed by the wire tenant id.
+#[derive(Debug)]
+pub struct TenantQuotas {
+    cfg: QuotaConfig,
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+}
+
+impl TenantQuotas {
+    pub fn new(cfg: QuotaConfig) -> Self {
+        Self { cfg, buckets: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn config(&self) -> &QuotaConfig {
+        &self.cfg
+    }
+
+    /// Judge one request from `tenant` right now. Called from every
+    /// connection reader thread; the map lock is held only for the
+    /// constant-time bucket update.
+    pub fn admit(&self, tenant: &str) -> Admission {
+        let now = Instant::now();
+        let mut buckets = self.buckets.lock().unwrap();
+        let bucket =
+            buckets.entry(tenant.to_string()).or_insert_with(|| TokenBucket::new(now, &self.cfg));
+        bucket.admit_at(now, &self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    const CFG: QuotaConfig = QuotaConfig { rate_per_s: 1.0, burst: 2.0, reject_debt: 2.0 };
+
+    /// The three-zone ladder at a frozen clock: burst admits, then
+    /// degradation down to the debt floor, then rejection — and
+    /// rejection does not dig the debt deeper.
+    #[test]
+    fn admit_then_degrade_then_reject() {
+        let now = Instant::now();
+        let mut b = TokenBucket::new(now, &CFG);
+        let verdicts: Vec<Admission> = (0..6).map(|_| b.admit_at(now, &CFG)).collect();
+        assert_eq!(
+            verdicts,
+            vec![
+                Admission::Admit,
+                Admission::Admit,
+                Admission::Degrade,
+                Admission::Degrade,
+                Admission::Reject,
+                Admission::Reject,
+            ]
+        );
+        // debt stayed clamped at the floor despite repeated rejects
+        assert!((b.tokens - (-2.0)).abs() < 1e-9, "tokens {}", b.tokens);
+    }
+
+    /// Refill restores service: first back to degraded, then (after the
+    /// debt is paid off) to full admission, capped at `burst`.
+    #[test]
+    fn refill_recovers_through_the_ladder() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(t0, &CFG);
+        for _ in 0..6 {
+            b.admit_at(t0, &CFG);
+        }
+        // +1 token after 1s: −2 + 1 − 1 = −2 → still degraded
+        assert_eq!(b.admit_at(t0 + Duration::from_secs(1), &CFG), Admission::Degrade);
+        // +4 tokens (capped at burst 2): 2 − 1 = 1 → admitted again
+        assert_eq!(b.admit_at(t0 + Duration::from_secs(5), &CFG), Admission::Admit);
+    }
+
+    /// `rate_per_s: 0` disables quotas: everything admits forever.
+    #[test]
+    fn zero_rate_means_unlimited() {
+        let quotas = TenantQuotas::new(QuotaConfig::default());
+        for _ in 0..100 {
+            assert_eq!(quotas.admit("anyone"), Admission::Admit);
+        }
+    }
+
+    /// Buckets are per tenant: one tenant burning its quota must not
+    /// touch a sibling's.
+    #[test]
+    fn tenants_are_isolated() {
+        let quotas = TenantQuotas::new(QuotaConfig {
+            rate_per_s: 0.0001, // effectively no refill within the test
+            burst: 2.0,
+            reject_debt: 2.0,
+        });
+        for _ in 0..10 {
+            quotas.admit("abuser");
+        }
+        assert_eq!(quotas.admit("abuser"), Admission::Reject);
+        assert_eq!(quotas.admit("polite"), Admission::Admit);
+    }
+}

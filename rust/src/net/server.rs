@@ -1,0 +1,320 @@
+//! TCP serving front over the QoS precision router.
+//!
+//! Thread shape: one nonblocking acceptor polls for connections and
+//! enforces the `max_conns` admission cap; each admitted connection
+//! gets a *reader* thread (frames → quota gate → `QosServer`) and a
+//! *writer* thread (QoS responses → frames, out of order as batches
+//! complete). Responses flow through an unbounded per-connection
+//! channel, so a client that stops reading only fills its own channel
+//! and socket buffer — lane executors, the acceptor and every other
+//! connection keep moving. The reader and writer share the socket for
+//! writing behind one mutex (error frames come from the reader path,
+//! responses from the writer path), keeping frames interleave-safe.
+
+use super::proto::{self, ErrorCode, Msg, NetError, NetRequest, NetResponse};
+use super::quota::{Admission, QuotaConfig, TenantQuotas};
+use crate::coordinator::qos::{QosClass, QosReport, QosResponse, QosServer};
+use crate::coordinator::Metrics;
+use std::collections::HashMap;
+use std::io::{self, BufReader};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Knobs for the TCP front.
+#[derive(Debug, Clone, Copy)]
+pub struct NetServerConfig {
+    /// Connection-level admission: beyond this many live connections a
+    /// new one is refused with a `ConnLimit` error frame and closed.
+    pub max_conns: usize,
+    /// Per-tenant token-bucket quota (default: unlimited).
+    pub quota: QuotaConfig,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        Self { max_conns: 256, quota: QuotaConfig::default() }
+    }
+}
+
+/// State shared by the acceptor and every connection thread.
+struct Shared {
+    /// The QoS server, taken out at shutdown. Submissions hold the lock
+    /// only to push onto the router's unbounded queue — never across a
+    /// forward.
+    qos: Mutex<Option<QosServer>>,
+    metrics: Arc<Mutex<Metrics>>,
+    quotas: TenantQuotas,
+}
+
+/// Handle to a running TCP front. Dropping it without
+/// [`NetServer::shutdown`] leaks the serving threads (matching the
+/// `QosServer` convention: shutdown is explicit because it returns the
+/// report).
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl NetServer {
+    /// Put a TCP front over `qos`. The listener may be bound to port 0;
+    /// the resolved address is [`NetServer::addr`].
+    pub fn start(
+        listener: TcpListener,
+        qos: QosServer,
+        config: NetServerConfig,
+    ) -> io::Result<Self> {
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(Shared {
+            metrics: qos.metrics_handle(),
+            qos: Mutex::new(Some(qos)),
+            quotas: TenantQuotas::new(config.quota),
+        });
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("net-acceptor".into())
+                .spawn(move || accept_loop(listener, shared, stop, config))?
+        };
+        Ok(Self { addr, stop, acceptor: Some(acceptor), shared })
+    }
+
+    /// The bound address (resolves `--listen 127.0.0.1:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close every connection, drain the router and
+    /// return its final report (tenant accounting included).
+    pub fn shutdown(mut self) -> QosReport {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let qos = self
+            .shared
+            .qos
+            .lock()
+            .unwrap()
+            .take()
+            .expect("the net server owns the qos server until shutdown");
+        qos.shutdown()
+    }
+}
+
+/// Accept connections until the stop flag. Nonblocking accept + sleep
+/// keeps the loop responsive to shutdown without platform-specific
+/// selectors; finished connection threads are reaped on each accept so
+/// the admission count tracks *live* connections.
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    config: NetServerConfig,
+) {
+    let mut conns: Vec<(TcpStream, JoinHandle<()>)> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                conns.retain(|(_, h)| !h.is_finished());
+                if conns.len() >= config.max_conns {
+                    refuse(stream, config.max_conns);
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let handle = match stream.try_clone() {
+                    Ok(keep) => {
+                        let shared = Arc::clone(&shared);
+                        let spawned = std::thread::Builder::new()
+                            .name("net-conn".into())
+                            .spawn(move || serve_conn(stream, shared));
+                        match spawned {
+                            Ok(h) => Some((keep, h)),
+                            Err(_) => None,
+                        }
+                    }
+                    Err(_) => None,
+                };
+                if let Some(entry) = handle {
+                    conns.push(entry);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+    // shutdown: force-close the sockets so blocked readers wake, then
+    // join every connection thread (each joins its own writer)
+    for (s, _) in &conns {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    for (_, h) in conns {
+        let _ = h.join();
+    }
+}
+
+/// Refuse an over-limit connection with an error frame, then close it.
+fn refuse(mut stream: TcpStream, max_conns: usize) {
+    let err = NetError {
+        id: 0,
+        code: ErrorCode::ConnLimit,
+        message: format!("server is at its {max_conns}-connection limit"),
+    };
+    let _ = proto::write_frame(&mut stream, &proto::encode_error(&err));
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Client-side context for one in-flight request, keyed by the router's
+/// internal id (client ids are only unique per connection).
+struct ReqCtx {
+    client_id: u64,
+    class: QosClass,
+    quota_downgraded: bool,
+}
+
+/// One connection: read frames until EOF/error, submit to the router,
+/// let the writer thread stream responses back out of order.
+fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let reader_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let write_half = Arc::new(Mutex::new(stream));
+    let pending: Arc<Mutex<HashMap<u64, ReqCtx>>> = Arc::new(Mutex::new(HashMap::new()));
+    let (resp_tx, resp_rx) = channel::<QosResponse>();
+
+    let writer = {
+        let write_half = Arc::clone(&write_half);
+        let pending = Arc::clone(&pending);
+        std::thread::Builder::new().name("net-writer".into()).spawn(move || {
+            // exits when every Sender clone is gone: the reader's handle
+            // plus one per in-flight request — i.e. after the router has
+            // answered everything this connection submitted
+            while let Ok(resp) = resp_rx.recv() {
+                let ctx = pending.lock().unwrap().remove(&resp.id);
+                let Some(ctx) = ctx else { continue };
+                let frame = proto::encode_response(&NetResponse {
+                    id: ctx.client_id,
+                    class: ctx.class,
+                    served_by: resp.served_by,
+                    lane_plan: resp.lane_plan,
+                    downgraded: resp.downgraded || ctx.quota_downgraded,
+                    quota_downgraded: ctx.quota_downgraded,
+                    deadline_missed: resp.deadline_missed,
+                    queue_wait_us: resp.queue_wait.as_micros() as u64,
+                    batch_size: resp.batch_size as u32,
+                    logits: resp.logits,
+                });
+                if write_frame_locked(&write_half, &frame).is_err() {
+                    break; // client gone; in-flight responses are dropped
+                }
+            }
+        })
+    };
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+
+    let mut frames = BufReader::new(reader_half);
+    loop {
+        let payload = match proto::read_frame(&mut frames) {
+            Ok(Some(p)) => p,
+            Ok(None) => break, // clean EOF between frames
+            Err(_) => {
+                // framing desynced (hostile length prefix, mid-frame
+                // EOF): the stream cannot be trusted any further
+                send_error(&write_half, 0, ErrorCode::BadRequest, "unreadable frame");
+                break;
+            }
+        };
+        match proto::decode(&payload) {
+            Ok(Msg::Request(req)) => {
+                handle_request(req, &shared, &write_half, &pending, &resp_tx);
+            }
+            Ok(_) => {
+                // frame parsed but isn't a request; the stream is still
+                // in sync, so answer and keep serving
+                send_error(&write_half, 0, ErrorCode::BadRequest, "expected a request frame");
+            }
+            Err(e) => {
+                send_error(&write_half, 0, ErrorCode::BadRequest, &format!("bad frame: {e}"));
+            }
+        }
+    }
+    drop(resp_tx);
+    let _ = writer.join();
+    let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);
+}
+
+/// Quota-gate one request and hand it to the router.
+fn handle_request(
+    req: NetRequest,
+    shared: &Shared,
+    write_half: &Arc<Mutex<TcpStream>>,
+    pending: &Arc<Mutex<HashMap<u64, ReqCtx>>>,
+    resp_tx: &Sender<QosResponse>,
+) {
+    let admission = shared.quotas.admit(&req.tenant);
+    shared.metrics.lock().unwrap().record_tenant(
+        &req.tenant,
+        admission == Admission::Degrade,
+        admission == Admission::Reject,
+    );
+    if admission == Admission::Reject {
+        let msg = format!("tenant `{}` is over its hard quota; request shed", req.tenant);
+        send_error(write_half, req.id, ErrorCode::OverQuota, &msg);
+        return;
+    }
+    // over-quota traffic is degraded straight to the cheapest class: it
+    // keeps being served, but can no longer contend with in-quota gold
+    let effective = match admission {
+        Admission::Degrade => QosClass::Economy,
+        _ => req.class,
+    };
+    let quota_downgraded = effective != req.class;
+    let deadline = if req.deadline_us == 0 {
+        effective.default_deadline()
+    } else {
+        Duration::from_micros(req.deadline_us)
+    };
+
+    let mut qos = shared.qos.lock().unwrap();
+    let Some(qos) = qos.as_mut() else {
+        send_error(write_half, req.id, ErrorCode::ServerGone, "server is shutting down");
+        return;
+    };
+    // reserve → record → submit: the ctx must be in `pending` before the
+    // response can possibly reach the writer thread
+    let internal = qos.reserve_id();
+    pending.lock().unwrap().insert(
+        internal,
+        ReqCtx { client_id: req.id, class: req.class, quota_downgraded },
+    );
+    if let Err(e) = qos.submit_reserved(internal, effective, req.image, deadline, resp_tx.clone()) {
+        pending.lock().unwrap().remove(&internal);
+        send_error(write_half, req.id, ErrorCode::ServerGone, &format!("{e}"));
+    }
+}
+
+fn send_error(write_half: &Arc<Mutex<TcpStream>>, id: u64, code: ErrorCode, message: &str) {
+    let err = NetError { id, code, message: message.to_string() };
+    let _ = write_frame_locked(write_half, &proto::encode_error(&err));
+}
+
+/// Serialize whole frames onto the shared socket — the reader (error
+/// frames) and writer (responses) must never interleave bytes.
+fn write_frame_locked(write_half: &Arc<Mutex<TcpStream>>, payload: &[u8]) -> io::Result<()> {
+    let mut stream = write_half.lock().unwrap();
+    proto::write_frame(&mut *stream, payload)
+}

@@ -22,11 +22,27 @@ pub struct MonitorConfig {
     pub min_probes: u64,
     /// Slack below the predicted bound (dB) before a violation fires.
     pub margin_db: f64,
+    /// Probes of sustained health required before a demoted lane may
+    /// walk back toward its frontier plan (0 disables re-promotion).
+    /// Deliberately longer than `min_probes`: demotion is a safety
+    /// action, re-promotion an optimization.
+    pub promote_min_probes: u64,
+    /// Hysteresis: the measured SNR must clear the *target* rung's
+    /// predicted bound by this many dB before re-promotion. Together
+    /// with `margin_db` the two margins straddle the bound, so a lane
+    /// sitting near it holds position instead of flapping.
+    pub promote_margin_db: f64,
 }
 
 impl Default for MonitorConfig {
     fn default() -> Self {
-        Self { sample_every: 8, min_probes: 4, margin_db: 3.0 }
+        Self {
+            sample_every: 8,
+            min_probes: 4,
+            margin_db: 3.0,
+            promote_min_probes: 16,
+            promote_margin_db: 6.0,
+        }
     }
 }
 
@@ -161,6 +177,25 @@ impl NsrMonitor {
         }
     }
 
+    /// The inverse judgement of [`NsrMonitor::verdict`]: may the lane
+    /// walk one rung back toward its frontier plan? True only after a
+    /// sustained healthy window — at least `promote_min_probes` probes
+    /// accumulated since the last swap (a violation swaps and resets the
+    /// window, so the streak is violation-free by construction) — whose
+    /// measured SNR clears the *target* rung's predicted bound plus the
+    /// promotion hysteresis margin. A lane demoted for cause therefore
+    /// needs both time and headroom before it earns its way back.
+    pub fn promotion_ready(&self, target_bound_db: f64) -> bool {
+        if !target_bound_db.is_finite()
+            || self.cfg.sample_every == 0
+            || self.cfg.promote_min_probes == 0
+        {
+            return false;
+        }
+        self.probes >= self.cfg.promote_min_probes
+            && self.measured_snr_db() >= target_bound_db + self.cfg.promote_margin_db
+    }
+
     /// Forget accumulated probes (after a hot-swap: the observations
     /// describe the plan that was just retired). Batch count is kept so
     /// sampling cadence continues.
@@ -174,10 +209,14 @@ impl NsrMonitor {
 mod tests {
     use super::*;
 
+    /// Test shorthand: the demotion knobs, promotion left at defaults.
+    fn cfg(sample_every: u64, min_probes: u64, margin_db: f64) -> MonitorConfig {
+        MonitorConfig { sample_every, min_probes, margin_db, ..MonitorConfig::default() }
+    }
+
     #[test]
     fn samples_every_nth_batch() {
-        let mut m =
-            NsrMonitor::new(MonitorConfig { sample_every: 3, min_probes: 1, margin_db: 0.0 });
+        let mut m = NsrMonitor::new(cfg(3, 1, 0.0));
         let probed: Vec<bool> = (0..9).map(|_| m.tick_batch()).collect();
         assert_eq!(probed, vec![false, false, true, false, false, true, false, false, true]);
         assert_eq!(m.batches(), 9);
@@ -187,8 +226,7 @@ mod tests {
     /// every in-batch index, not pin itself to the most-urgent slot 0.
     #[test]
     fn probe_index_rotates_and_covers_the_batch() {
-        let mut m =
-            NsrMonitor::new(MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 });
+        let mut m = NsrMonitor::new(cfg(1, 1, 0.0));
         let picked: Vec<usize> = (0..6).filter_map(|_| m.tick_batch_probe(3)).collect();
         assert_eq!(picked, vec![0, 1, 2, 0, 1, 2], "cursor must cycle the batch positions");
         // shrinking batches stay in range; the cursor keeps advancing
@@ -202,8 +240,7 @@ mod tests {
     /// the batch counter but not the probe cursor.
     #[test]
     fn probe_rotation_only_advances_on_sampled_batches() {
-        let mut m =
-            NsrMonitor::new(MonitorConfig { sample_every: 2, min_probes: 1, margin_db: 0.0 });
+        let mut m = NsrMonitor::new(cfg(2, 1, 0.0));
         let picked: Vec<Option<usize>> = (0..6).map(|_| m.tick_batch_probe(4)).collect();
         assert_eq!(picked, vec![None, Some(0), None, Some(1), None, Some(2)]);
         assert_eq!(m.batches(), 6);
@@ -213,16 +250,14 @@ mod tests {
 
     #[test]
     fn disabled_sampling_never_probes_and_stays_healthy() {
-        let mut m =
-            NsrMonitor::new(MonitorConfig { sample_every: 0, min_probes: 0, margin_db: 0.0 });
+        let mut m = NsrMonitor::new(cfg(0, 0, 0.0));
         assert!(!m.tick_batch());
         assert_eq!(m.verdict(100.0), Verdict::Healthy);
     }
 
     #[test]
     fn probe_snr_matches_hand_computation() {
-        let mut m =
-            NsrMonitor::new(MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 });
+        let mut m = NsrMonitor::new(cfg(1, 1, 0.0));
         // signal energy 100, error energy 1 → SNR 20 dB
         let snr = m.record_probe(&[10.0, 0.0], &[10.0, 1.0]);
         assert!((snr - 20.0).abs() < 1e-9, "snr {snr}");
@@ -231,8 +266,7 @@ mod tests {
 
     #[test]
     fn verdict_respects_margin_and_warmup() {
-        let cfg = MonitorConfig { sample_every: 1, min_probes: 2, margin_db: 3.0 };
-        let mut m = NsrMonitor::new(cfg);
+        let mut m = NsrMonitor::new(cfg(1, 2, 3.0));
         m.record_probe(&[10.0, 0.0], &[10.0, 1.0]); // 20 dB
         assert_eq!(m.verdict(30.0), Verdict::Warming, "one probe is not evidence");
         m.record_probe(&[10.0, 0.0], &[10.0, 1.0]); // still 20 dB
@@ -246,8 +280,7 @@ mod tests {
 
     #[test]
     fn reset_probes_restarts_judgement() {
-        let mut m =
-            NsrMonitor::new(MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 });
+        let mut m = NsrMonitor::new(cfg(1, 1, 0.0));
         m.record_probe(&[1.0], &[2.0]); // 0 dB
         assert_eq!(m.verdict(10.0), Verdict::Violation);
         m.reset_probes();
@@ -258,11 +291,54 @@ mod tests {
 
     #[test]
     fn mean_is_linear_not_db() {
-        let mut m =
-            NsrMonitor::new(MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 });
+        let mut m = NsrMonitor::new(cfg(1, 1, 0.0));
         m.record_probe(&[10.0], &[10.0]); // zero noise → NSR 0
         m.record_probe(&[10.0], &[11.0]); // NSR 0.01 → 20 dB
         // mean linear NSR 0.005 → ≈23.01 dB, NOT the dB-average (∞+20)/2
         assert!((m.measured_snr_db() - 23.0103).abs() < 1e-3, "{}", m.measured_snr_db());
+    }
+
+    /// Re-promotion needs the full sustained window AND the hysteresis
+    /// headroom above the target rung's bound — either alone is not
+    /// enough, and the guards (NaN target, disabled sampling, disabled
+    /// promotion) always say no.
+    #[test]
+    fn promotion_needs_window_and_hysteresis() {
+        let mut m = NsrMonitor::new(MonitorConfig {
+            sample_every: 1,
+            min_probes: 1,
+            margin_db: 0.0,
+            promote_min_probes: 3,
+            promote_margin_db: 6.0,
+        });
+        // each probe measures 20 dB
+        m.record_probe(&[10.0, 0.0], &[10.0, 1.0]);
+        m.record_probe(&[10.0, 0.0], &[10.0, 1.0]);
+        assert!(!m.promotion_ready(10.0), "2 probes < promote_min_probes");
+        m.record_probe(&[10.0, 0.0], &[10.0, 1.0]);
+        // window met: 20 dB clears 10 + 6 but not 15 + 6
+        assert!(m.promotion_ready(10.0));
+        assert!(!m.promotion_ready(15.0), "hysteresis margin must gate");
+        // a healthy-but-tight lane (bound just met) must hold position
+        assert!(!m.promotion_ready(19.0));
+        assert_eq!(m.verdict(19.0), Verdict::Healthy, "no-flap zone: healthy yet unpromotable");
+        // guards
+        assert!(!m.promotion_ready(f64::NAN));
+        assert!(!m.promotion_ready(f64::INFINITY));
+        // the swap that follows a violation restarts the window
+        m.reset_probes();
+        assert!(!m.promotion_ready(10.0));
+        // promotion disabled entirely
+        let mut off = NsrMonitor::new(MonitorConfig {
+            sample_every: 1,
+            min_probes: 1,
+            margin_db: 0.0,
+            promote_min_probes: 0,
+            promote_margin_db: 0.0,
+        });
+        for _ in 0..8 {
+            off.record_probe(&[10.0, 0.0], &[10.0, 1.0]);
+        }
+        assert!(!off.promotion_ready(0.0));
     }
 }

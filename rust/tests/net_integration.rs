@@ -1,0 +1,314 @@
+//! Integration tests for the networked serving fabric (ISSUE 6
+//! acceptance):
+//!
+//! (a) logits served over TCP are bit-identical to the in-process
+//!     `QosServer::infer` path on the same model and lane set;
+//! (b) the open-loop load generator measures from intended send — under
+//!     saturation its latency is at least the closed-loop latency
+//!     (closed loop politely hides the queue; open loop charges it);
+//! (c) a client that stops reading only backpressures itself: other
+//!     tenants' connections keep serving, and its own replies are all
+//!     still there once it drains;
+//! (d) per-tenant token-bucket quotas walk admit → degrade → reject in
+//!     exactly the configured budget order, the degraded requests serve
+//!     on the economy lane, an in-quota gold tenant is untouched, and
+//!     the shutdown report carries the per-tenant accounting;
+//! (e) hostile frames (garbage, wrong version, hostile length prefix)
+//!     get error frames without wedging the connection — a valid
+//!     request after an in-sync decode error is still served.
+//!
+//! The suite honours `BFP_QOS_WORKERS` — CI runs it under both
+//! schedulers, like `qos_integration`.
+
+use bfp_cnn::coordinator::batcher::BatchPolicy;
+use bfp_cnn::coordinator::{
+    LaneSet, LaneStep, QosClass, QosConfig, QosServer, ShedPolicy,
+};
+use bfp_cnn::models::ModelId;
+use bfp_cnn::net::proto::{self, ErrorCode, Msg, NetRequest, Reply};
+use bfp_cnn::net::{NetClient, NetServer, NetServerConfig, QuotaConfig};
+use bfp_cnn::telemetry::MonitorConfig;
+use bfp_cnn::Tensor;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn lenet() -> bfp_cnn::models::Model {
+    ModelId::Lenet.build(32, 1, Path::new("/nonexistent"))
+}
+
+fn images(n: usize, seed: u64) -> Vec<Tensor> {
+    bfp_cnn::data::DigitDataset::generate(n, seed).images
+}
+
+fn demo_lane_set() -> LaneSet {
+    LaneSet::from_steps(
+        LaneStep::uniform(9, 9),
+        LaneStep::uniform(7, 7),
+        LaneStep::uniform(5, 5),
+        None,
+    )
+}
+
+/// Telemetry off, shedding off: pure routing (worker mode from the
+/// environment, so CI's scheduler matrix applies here too).
+fn quiet_config() -> QosConfig {
+    QosConfig {
+        policy: BatchPolicy { max_batch: 4, linger: Duration::from_millis(2) },
+        shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+        monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+        ..QosConfig::default()
+    }
+}
+
+/// Bind a loopback front over a fresh router.
+fn start_front(quota: QuotaConfig) -> (NetServer, SocketAddr) {
+    let qos = QosServer::start(lenet(), &demo_lane_set(), quiet_config());
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let server = NetServer::start(listener, qos, NetServerConfig { max_conns: 32, quota })
+        .expect("start net server");
+    let addr = server.addr();
+    (server, addr)
+}
+
+/// (a) the wire carries raw f32 bits, so TCP-served logits must match
+/// the in-process path bit for bit, class by class.
+#[test]
+fn tcp_serving_is_bit_identical_to_in_process() {
+    let imgs = images(9, 42);
+    let classes: Vec<QosClass> = (0..imgs.len()).map(|i| QosClass::ALL[i % 3]).collect();
+
+    // in-process reference on an identical (deterministically rebuilt)
+    // model and lane set
+    let mut reference = QosServer::start(lenet(), &demo_lane_set(), quiet_config());
+    let want: Vec<Tensor> = imgs
+        .iter()
+        .zip(&classes)
+        .map(|(img, &c)| reference.infer(c, img.clone()).expect("in-process serves").logits)
+        .collect();
+    reference.shutdown();
+
+    let (server, addr) = start_front(QuotaConfig::default());
+    let mut client = NetClient::connect(addr).expect("connect");
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    for (i, (img, &class)) in imgs.iter().zip(&classes).enumerate() {
+        let resp = client.infer("acme", class, img.clone()).expect("tcp serves");
+        assert_eq!(resp.class, class);
+        assert_eq!(resp.served_by, class.name(), "no downgrades with shedding off");
+        assert!(!resp.quota_downgraded, "unlimited quota must not degrade");
+        assert_eq!(resp.logits.shape, want[i].shape);
+        for (a, b) in want[i].data.iter().zip(&resp.logits.data) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "request {i}: TCP-served logits diverged from the in-process path"
+            );
+        }
+    }
+    drop(client);
+    let report = server.shutdown();
+    let acme = report.metrics.tenant("acme").expect("tenant accounting over TCP");
+    assert_eq!(acme.requests, imgs.len() as u64);
+    assert_eq!(acme.quota_downgrades + acme.rejected, 0);
+}
+
+/// (b) under saturation the open-loop (intended-send) latency must be
+/// at least the closed-loop latency: the closed loop slows its offered
+/// load to match the server, hiding the queueing the open loop charges.
+#[test]
+fn open_loop_latency_dominates_closed_loop_under_saturation() {
+    use bfp_cnn::net::loadgen::{run_closed_loop, run_open_loop, RunOpts};
+
+    let (server, addr) = start_front(QuotaConfig::default());
+    let pool = images(4, 7);
+    let opts = RunOpts { tenant: "sat".to_string(), ..RunOpts::default() };
+
+    let closed = run_closed_loop(addr, &pool, 6, &opts, "sat-closed").expect("closed loop");
+    assert_eq!(closed.ok, 6, "closed loop lost replies");
+
+    // 32 arrivals 100 µs apart: far faster than a LeNet forward, so the
+    // backlog grows and intended-send latency accumulates
+    let offsets: Vec<Duration> =
+        (0..32).map(|i| Duration::from_micros(100) * i as u32).collect();
+    let open = run_open_loop(addr, &pool, &offsets, &opts, "sat-open").expect("open loop");
+    assert_eq!(open.ok, 32, "open loop must get every reply (shedding is off)");
+    assert_eq!(open.sent, 32);
+
+    let (o50, c50) = (open.latency_p(50.0), closed.latency_p(50.0));
+    assert!(
+        o50 >= c50,
+        "open-loop p50 {o50:.2} ms < closed-loop p50 {c50:.2} ms — \
+         coordinated omission is back"
+    );
+    server.shutdown();
+}
+
+/// (c) a slow reader only backpressures itself: its replies queue in its
+/// own per-connection channel/socket while another tenant's connection
+/// keeps serving promptly, and the slow client still gets every reply
+/// once it finally drains.
+#[test]
+fn slow_client_backpressure_does_not_block_other_tenants() {
+    let (server, addr) = start_front(QuotaConfig::default());
+    let imgs = images(8, 5);
+
+    // sloth fires 8 requests and reads nothing
+    let mut sloth = NetClient::connect(addr).expect("connect sloth");
+    sloth.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    for img in &imgs {
+        sloth.send("sloth", QosClass::Standard, None, img.clone()).expect("send");
+    }
+
+    // a concurrent gold tenant on its own connection must keep serving
+    let mut probe = NetClient::connect(addr).expect("connect probe");
+    probe.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    for img in imgs.iter().take(4) {
+        let t0 = Instant::now();
+        let resp = probe.infer("probe", QosClass::Gold, img.clone()).expect("gold serves");
+        assert_eq!(resp.served_by, "gold");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "gold inference stalled behind a slow client"
+        );
+    }
+
+    // the sloth's replies were never lost — drain all 8 now
+    let mut got = 0;
+    while got < imgs.len() {
+        match sloth.read_reply().expect("sloth drains") {
+            Reply::Response(_) => got += 1,
+            Reply::Error(e) => panic!("sloth request rejected: {e:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+/// (d) the token bucket walks admit → degrade → reject in budget order:
+/// burst 2 admits, reject_debt 3 degrades (served on the economy lane,
+/// flagged `quota_downgraded`), then hard rejects — while a second
+/// tenant's gold traffic stays untouched and the report's per-tenant
+/// counters match exactly.
+#[test]
+fn tenant_quota_degrades_then_sheds_without_starving_gold() {
+    // ~zero refill rate: the budget is the burst plus the debt window
+    let quota = QuotaConfig { rate_per_s: 0.001, burst: 2.0, reject_debt: 3.0 };
+    let (server, addr) = start_front(quota);
+    let imgs = images(8, 13);
+
+    let mut abuser = NetClient::connect(addr).expect("connect abuser");
+    abuser.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut vip = NetClient::connect(addr).expect("connect vip");
+    vip.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    let mut admitted = 0u64;
+    let mut degraded = 0u64;
+    let mut rejected = 0u64;
+    let mut ladder = Vec::new();
+    for img in &imgs {
+        abuser.send("abuser", QosClass::Standard, None, img.clone()).expect("send");
+        match abuser.read_reply().expect("reply") {
+            Reply::Response(resp) => {
+                assert_eq!(resp.class, QosClass::Standard, "the response echoes the asked class");
+                if resp.quota_downgraded {
+                    degraded += 1;
+                    ladder.push("degrade");
+                    assert_eq!(resp.served_by, "economy", "over-quota serves on the cheap lane");
+                    assert!(resp.downgraded);
+                } else {
+                    admitted += 1;
+                    ladder.push("admit");
+                    assert_eq!(resp.served_by, "standard");
+                }
+            }
+            Reply::Error(err) => {
+                rejected += 1;
+                ladder.push("reject");
+                assert_eq!(err.code, ErrorCode::OverQuota, "rejects carry OverQuota: {err:?}");
+            }
+        }
+        // the vip's separate bucket keeps admitting at full class
+        let resp = vip.infer("vip", QosClass::Gold, img.clone()).expect("vip serves");
+        assert_eq!(resp.served_by, "gold", "gold tenant starved by an abuser");
+        assert!(!resp.quota_downgraded);
+    }
+    assert_eq!(
+        (admitted, degraded, rejected),
+        (2, 3, 3),
+        "budget order broke: {ladder:?}"
+    );
+    assert_eq!(
+        ladder,
+        ["admit", "admit", "degrade", "degrade", "degrade", "reject", "reject", "reject"],
+        "the ladder must be monotone: admit, then degrade, then reject"
+    );
+
+    let report = server.shutdown();
+    let ab = report.metrics.tenant("abuser").expect("abuser accounting");
+    assert_eq!((ab.requests, ab.quota_downgrades, ab.rejected), (8, 3, 3));
+    let vip_m = report.metrics.tenant("vip").expect("vip accounting");
+    assert_eq!((vip_m.requests, vip_m.quota_downgrades, vip_m.rejected), (8, 0, 0));
+}
+
+/// (e) protocol robustness on a raw socket: garbage and version-mismatch
+/// frames earn `BadRequest` error frames and the stream stays usable
+/// (framing is intact), while a hostile length prefix kills exactly that
+/// connection.
+#[test]
+fn hostile_frames_get_error_frames_and_framing_recovers() {
+    let (server, addr) = start_front(QuotaConfig::default());
+    let img = images(1, 3).remove(0);
+
+    let mut stream = TcpStream::connect(addr).expect("connect raw");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = stream.try_clone().expect("clone");
+
+    let expect_error = |reader: &mut TcpStream, code: ErrorCode, what: &str| {
+        let payload = proto::read_frame(reader).expect(what).expect("frame, not EOF");
+        match proto::decode(&payload).expect("server frames always decode") {
+            Msg::Error(e) => assert_eq!(e.code, code, "{what}: {e:?}"),
+            other => panic!("{what}: expected an error frame, got {other:?}"),
+        }
+    };
+
+    // a well-framed payload of garbage: decode fails, stream stays in sync
+    proto::write_frame(&mut stream, &[0xFF; 16]).expect("write garbage");
+    expect_error(&mut reader, ErrorCode::BadRequest, "garbage payload");
+
+    // a valid request re-encoded under the wrong protocol version
+    let req = NetRequest {
+        id: 1,
+        tenant: "raw".to_string(),
+        class: QosClass::Economy,
+        deadline_us: 0,
+        image: img.clone(),
+    };
+    let mut wrong_version = proto::encode_request(&req);
+    wrong_version[0] = proto::PROTO_VERSION.wrapping_add(9);
+    proto::write_frame(&mut stream, &wrong_version).expect("write bad version");
+    expect_error(&mut reader, ErrorCode::BadRequest, "version mismatch");
+
+    // the connection is still framed: a valid request now serves normally
+    proto::write_frame(&mut stream, &proto::encode_request(&req)).expect("write valid");
+    let payload = proto::read_frame(&mut reader).expect("read reply").expect("frame");
+    match proto::decode(&payload).expect("decodes") {
+        Msg::Response(resp) => {
+            assert_eq!(resp.id, 1);
+            assert!(!resp.logits.data.is_empty(), "resynced request must be served");
+        }
+        other => panic!("expected the served response, got {other:?}"),
+    }
+
+    // a hostile length prefix desyncs framing: error frame, then close
+    let mut evil = TcpStream::connect(addr).expect("connect evil");
+    evil.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    evil.write_all(&u32::MAX.to_le_bytes()).expect("write hostile length");
+    evil.flush().unwrap();
+    let mut evil_reader = evil.try_clone().expect("clone");
+    expect_error(&mut evil_reader, ErrorCode::BadRequest, "hostile length prefix");
+    assert!(
+        proto::read_frame(&mut evil_reader).expect("clean close").is_none(),
+        "the desynced connection must be closed, not resumed"
+    );
+    server.shutdown();
+}

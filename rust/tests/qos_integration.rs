@@ -19,7 +19,8 @@
 
 use bfp_cnn::coordinator::batcher::BatchPolicy;
 use bfp_cnn::coordinator::{
-    LaneSet, LaneStep, QosClass, QosConfig, QosResponse, QosServer, ShedPolicy, WorkerMode,
+    LaneSet, LaneSpec, LaneStep, QosClass, QosConfig, QosResponse, QosServer, ShedPolicy,
+    WorkerMode,
 };
 use bfp_cnn::models::ModelId;
 use bfp_cnn::nn::PreparedModel;
@@ -355,7 +356,12 @@ fn forced_nsr_violation_hot_swaps_without_dropping_requests() {
     let config = QosConfig {
         policy: BatchPolicy { max_batch: 2, linger: Duration::from_millis(1) },
         shed: ShedPolicy { enabled: false, queue_pressure: 0 },
-        monitor: MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 0.0 },
+        monitor: MonitorConfig {
+            sample_every: 1,
+            min_probes: 1,
+            margin_db: 0.0,
+            ..Default::default()
+        },
         ..QosConfig::default()
     };
     let mut server = QosServer::start(model.clone(), &set, config);
@@ -380,6 +386,85 @@ fn forced_nsr_violation_hot_swaps_without_dropping_requests() {
     for (a, b) in want.data.iter().zip(&last.logits.data) {
         assert_eq!(a.to_bits(), b.to_bits(), "post-swap lane is not serving the safer plan");
     }
+}
+
+/// (c) the full telemetry round trip: a frontier step whose claimed
+/// bound sits *between* the real 4/4 and 8/8 output SNRs forces a
+/// demotion off the frontier; a sustained healthy window on the safe
+/// rung then re-promotes the lane back ([`MonitorConfig`]'s
+/// `promote_min_probes` / `promote_margin_db`), and the next probe on
+/// the frontier demotes it again — swaps and promotions both land in
+/// the lane report.
+#[test]
+fn telemetry_demotes_then_promotes_back_to_the_frontier() {
+    use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
+
+    let model = lenet();
+    let imgs = images(6, 19);
+    let fp32 = forward_batch_ref(&model, &imgs, ExecMode::Fp32);
+    // measure the true per-image output SNR of both rungs, exactly as
+    // the lane probe does (full-model BFP output vs the f32 reference)
+    let snr_for = |cfg: BfpConfig| -> Vec<f64> {
+        let prepared = PreparedModel::new(model.clone(), LayerSchedule::uniform(cfg));
+        imgs.iter()
+            .zip(&fp32)
+            .map(|(img, want)| {
+                let got = prepared.forward(img);
+                let (mut sig, mut err) = (0f64, 0f64);
+                for (&x, &y) in want.data.iter().zip(&got.data) {
+                    sig += (x as f64) * (x as f64);
+                    err += ((y - x) as f64) * ((y - x) as f64);
+                }
+                bfp_cnn::analysis::snr_db(sig, err)
+            })
+            .collect()
+    };
+    let best44 = snr_for(BfpConfig::new(4, 4)).into_iter().fold(f64::NEG_INFINITY, f64::max);
+    let worst88 = snr_for(BfpConfig::new(8, 8)).into_iter().fold(f64::INFINITY, f64::min);
+    assert!(
+        worst88 > best44 + 2.0,
+        "4/4 ({best44:.1} dB) and 8/8 ({worst88:.1} dB) must separate cleanly for this test"
+    );
+    let bound = (best44 + worst88) / 2.0;
+
+    // economy's frontier rung claims `bound`: its real 4/4 SNR misses it
+    // (demote) while the safe 8/8 rung clears it (promote target met)
+    let set = LaneSet {
+        gold: LaneSpec::new(vec![LaneStep::uniform(9, 9)]),
+        standard: LaneSpec::new(vec![LaneStep::uniform(7, 7)]),
+        economy: LaneSpec::new(vec![
+            LaneStep::new(LayerSchedule::uniform(BfpConfig::new(4, 4)), bound, "frontier4/4"),
+            LaneStep::new(LayerSchedule::uniform(BfpConfig::new(8, 8)), f64::NAN, "safe8/8"),
+        ]),
+        shed: None,
+    };
+    let config = QosConfig {
+        policy: BatchPolicy { max_batch: 1, linger: Duration::from_millis(1) },
+        shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+        monitor: MonitorConfig {
+            sample_every: 1,
+            min_probes: 1,
+            margin_db: 0.0,
+            promote_min_probes: 3,
+            promote_margin_db: 0.0,
+        },
+        ..QosConfig::default()
+    };
+    let mut server = QosServer::start(model, &set, config);
+    // serial economy traffic, one probe per request: probe 1 violates on
+    // the frontier (demote), probes 2-4 are healthy on the safe rung
+    // (promote at the 3rd), probe 5 violates on the frontier again
+    for img in &imgs {
+        server.infer(QosClass::Economy, img.clone()).expect("economy serves");
+    }
+    let report = server.shutdown();
+    let economy = report.lanes.iter().find(|l| l.label == "economy").unwrap();
+    assert!(economy.swaps >= 2, "expected demote → promote → demote: {economy:?}");
+    assert!(economy.promotions >= 1, "healthy window never re-promoted: {economy:?}");
+    assert!(
+        economy.swaps > economy.promotions,
+        "every promotion is preceded by a demotion: {economy:?}"
+    );
 }
 
 /// (d) synthetic overload: with a tiny pressure threshold, queued
@@ -490,7 +575,12 @@ fn autotuned_lane_set_serves_with_healthy_telemetry() {
         shed: ShedPolicy { enabled: false, queue_pressure: 0 },
         // probe every batch with a wide margin: the surrogate is an
         // upper bound, so a generous margin must not trip a swap
-        monitor: MonitorConfig { sample_every: 1, min_probes: 1, margin_db: 30.0 },
+        monitor: MonitorConfig {
+            sample_every: 1,
+            min_probes: 1,
+            margin_db: 30.0,
+            ..Default::default()
+        },
         ..QosConfig::default()
     };
     let mut server = QosServer::start(model, &set, config);
