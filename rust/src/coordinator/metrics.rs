@@ -149,6 +149,12 @@ pub struct ClassMetrics {
     pub downgrades: u64,
     /// Requests answered after their deadline had passed.
     pub deadline_misses: u64,
+    /// Requests failed by the deadline reaper (typed `Timeout`), never
+    /// served. Not counted in `requests`.
+    pub timeouts: u64,
+    /// Requests failed with a typed error (executor panic, retired lane,
+    /// drain). Not counted in `requests`.
+    pub failures: u64,
 }
 
 impl ClassMetrics {
@@ -160,6 +166,8 @@ impl ClassMetrics {
             requests: 0,
             downgrades: 0,
             deadline_misses: 0,
+            timeouts: 0,
+            failures: 0,
         }
     }
 
@@ -187,6 +195,8 @@ impl ClassMetrics {
         self.requests += other.requests;
         self.downgrades += other.downgrades;
         self.deadline_misses += other.deadline_misses;
+        self.timeouts += other.timeouts;
+        self.failures += other.failures;
     }
 
     fn clear(&mut self) {
@@ -195,6 +205,8 @@ impl ClassMetrics {
         self.requests = 0;
         self.downgrades = 0;
         self.deadline_misses = 0;
+        self.timeouts = 0;
+        self.failures = 0;
     }
 }
 
@@ -247,6 +259,10 @@ pub struct Metrics {
     batch_obs: u64,
     pub total_requests: usize,
     pub wall_time: Duration,
+    /// Executor respawns performed by the lane supervisor.
+    pub lane_restarts: u64,
+    /// Lanes retired after exhausting their restart budget.
+    pub lanes_retired: u64,
     /// Per-class breakdowns in first-seen order (empty for classless
     /// serving through the plain [`super::InferenceServer`]).
     classes: Vec<ClassMetrics>,
@@ -275,14 +291,7 @@ impl Metrics {
         deadline_missed: bool,
     ) {
         self.record(latency, queue_wait, batch_size);
-        let idx = match self.classes.iter().position(|c| c.label == class) {
-            Some(i) => i,
-            None => {
-                self.classes.push(ClassMetrics::new(class));
-                self.classes.len() - 1
-            }
-        };
-        let cm = &mut self.classes[idx];
+        let cm = self.class_entry(class);
         cm.latencies_us.record(latency.as_micros() as u64);
         cm.queue_waits_us.record(queue_wait.as_micros() as u64);
         cm.requests += 1;
@@ -292,6 +301,40 @@ impl Metrics {
         if deadline_missed {
             cm.deadline_misses += 1;
         }
+    }
+
+    /// Count one request failed by the deadline reaper under `class`.
+    /// Reaped requests never reach a lane, so they touch no latency
+    /// histogram — only the class's `timeouts` counter.
+    pub fn record_timeout(&mut self, class: &str) {
+        self.class_entry(class).timeouts += 1;
+    }
+
+    /// Count one request failed with a typed error (panicked executor,
+    /// retired lane, drain) under `class`.
+    pub fn record_failure(&mut self, class: &str) {
+        self.class_entry(class).failures += 1;
+    }
+
+    /// Count one supervisor respawn of a lane executor.
+    pub fn record_restart(&mut self) {
+        self.lane_restarts += 1;
+    }
+
+    /// Count one lane retirement (restart budget exhausted).
+    pub fn record_retired(&mut self) {
+        self.lanes_retired += 1;
+    }
+
+    fn class_entry(&mut self, class: &str) -> &mut ClassMetrics {
+        let idx = match self.classes.iter().position(|c| c.label == class) {
+            Some(i) => i,
+            None => {
+                self.classes.push(ClassMetrics::new(class));
+                self.classes.len() - 1
+            }
+        };
+        &mut self.classes[idx]
     }
 
     /// Count one request under `tenant`'s quota accounting. Unlike
@@ -356,7 +399,11 @@ impl Metrics {
         self.batch_size_sum += other.batch_size_sum;
         self.batch_obs += other.batch_obs;
         self.total_requests += other.total_requests;
-        for oc in other.classes.iter().filter(|c| c.requests > 0) {
+        self.lane_restarts += other.lane_restarts;
+        self.lanes_retired += other.lanes_retired;
+        for oc in
+            other.classes.iter().filter(|c| c.requests > 0 || c.timeouts > 0 || c.failures > 0)
+        {
             match self.classes.iter_mut().find(|c| c.label == oc.label) {
                 Some(c) => c.merge_from(oc),
                 None => self.classes.push(oc.clone()),
@@ -380,6 +427,8 @@ impl Metrics {
         self.batch_obs = 0;
         self.total_requests = 0;
         self.wall_time = Duration::ZERO;
+        self.lane_restarts = 0;
+        self.lanes_retired = 0;
         for c in &mut self.classes {
             c.clear();
         }
@@ -610,6 +659,35 @@ mod tests {
         // cleared zero-count tenants must not seed entries on merge
         global.merge_from(&m);
         assert_eq!(global.tenant("abuser").unwrap().requests, 3);
+    }
+
+    /// Resilience accounting: timeout/failure-only class entries (a class
+    /// whose every request was reaped or error-replied) must still merge
+    /// into the global sink, and restart/retire counters accumulate.
+    #[test]
+    fn failure_only_classes_survive_the_merge() {
+        let mut scratch = Metrics::default();
+        scratch.record_timeout("economy");
+        scratch.record_timeout("economy");
+        scratch.record_failure("standard");
+        scratch.record_restart();
+        scratch.record_retired();
+        assert_eq!(scratch.total_requests, 0);
+
+        let mut global = Metrics::default();
+        global.merge_from(&scratch);
+        let eco = global.class("economy").unwrap();
+        assert_eq!((eco.requests, eco.timeouts, eco.failures), (0, 2, 0));
+        let std_c = global.class("standard").unwrap();
+        assert_eq!((std_c.requests, std_c.timeouts, std_c.failures), (0, 0, 1));
+        assert_eq!((global.lane_restarts, global.lanes_retired), (1, 1));
+
+        scratch.clear();
+        assert_eq!(scratch.lane_restarts, 0);
+        // cleared zero-count entries must not seed duplicates
+        global.merge_from(&scratch);
+        assert_eq!(global.classes().len(), 2);
+        assert_eq!(global.class("economy").unwrap().timeouts, 2);
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod server;
 pub use engine::{forward_batch, forward_batch_ref, ExecMode};
 pub use metrics::{ClassMetrics, LogHistogram, Metrics, TenantMetrics};
 pub use qos::{
-    LaneReport, LaneSet, LaneSpec, LaneStep, QosClass, QosConfig, QosReport, QosResponse,
-    QosServer, ShedPolicy, WorkerMode,
+    LaneHealth, LaneReport, LaneSet, LaneSpec, LaneStep, QosClass, QosConfig, QosError,
+    QosErrorKind, QosReport, QosResponse, QosResult, QosServer, ShedPolicy, WorkerMode,
 };
 pub use server::{InferenceServer, PreparedBackend, RustBackend, ServerConfig};

@@ -61,6 +61,26 @@
 //! Routing, batch formation, and per-request logits are identical in
 //! both modes (the integration suite asserts bit-exactness between
 //! them); only concurrency and metric aggregation differ.
+//!
+//! # Resilience
+//!
+//! Executor panics are *events*, not the end of the server: every batch
+//! executes under `catch_unwind`, a panicked batch is error-replied
+//! with a typed [`QosError`] (`ExecutorPanic`), and the lane's
+//! supervisor ([`SupervisedLane`]) rebuilds the executor over the same
+//! shared weight cache under a bounded restart budget with exponential
+//! backoff. A lane that exhausts its budget is *retired*: routing
+//! permanently moves its traffic to the adjacent safer lane (never into
+//! the shed lane), visible in [`QosServer::health`], [`Metrics`]
+//! (`lane_restarts` / `lanes_retired`) and the final [`QosReport`]. A
+//! deadline reaper ([`QosConfig::reap_grace`]) fails requests still
+//! queued past `deadline + grace` with a typed `Timeout`, and
+//! [`QosServer::begin_drain`] gives shutdown a bound: new work is
+//! refused, queued work drains until the bound expires, and the rest is
+//! failed `Draining`. Every accepted submit therefore resolves as
+//! exactly one [`QosResult`] — a response or a typed error, never a
+//! silently dropped channel. The deterministic fault-injection plane
+//! ([`crate::runtime::faults`]) drives all of these paths in CI.
 
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
@@ -69,10 +89,13 @@ use crate::models::Model;
 use crate::nn::prepared::{PreparedModel, SharedWeightCache, WeightCache};
 use crate::nn::Fp32Exec;
 use crate::quant::{BfpConfig, LayerSchedule};
+use crate::runtime::faults::FaultInjector;
 use crate::runtime::pool;
 use crate::telemetry::{MonitorConfig, NsrMonitor, Verdict};
 use crate::tensor::Tensor;
 use std::collections::{BinaryHeap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -312,6 +335,63 @@ pub struct QosResponse {
     pub batch_seq: u64,
 }
 
+/// Why a request failed with a typed error instead of a response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosErrorKind {
+    /// Failed by the deadline reaper: still queued past
+    /// `deadline + reap_grace`, never served.
+    Timeout,
+    /// The serving lane's executor panicked with this request in
+    /// flight; the supervisor respawns (or retires) the lane.
+    ExecutorPanic,
+    /// Every lane that could serve this request is retired (restart
+    /// budgets exhausted).
+    LaneRetired,
+    /// The server is draining and the drain bound expired with this
+    /// request still queued.
+    Draining,
+}
+
+impl QosErrorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            QosErrorKind::Timeout => "timeout",
+            QosErrorKind::ExecutorPanic => "executor-panic",
+            QosErrorKind::LaneRetired => "lane-retired",
+            QosErrorKind::Draining => "draining",
+        }
+    }
+}
+
+/// A typed per-request failure. Every accepted submit resolves as
+/// exactly one [`QosResult`]; this is the error arm.
+#[derive(Debug, Clone)]
+pub struct QosError {
+    pub id: u64,
+    pub class: QosClass,
+    pub kind: QosErrorKind,
+    pub message: String,
+}
+
+impl std::fmt::Display for QosError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} request {} failed ({}): {}",
+            self.class.name(),
+            self.id,
+            self.kind.name(),
+            self.message
+        )
+    }
+}
+
+impl std::error::Error for QosError {}
+
+/// What a submitted request's receiver yields: the response, or a
+/// typed failure.
+pub type QosResult = Result<QosResponse, QosError>;
+
 /// Admission/shed policy: when the total backlog exceeds
 /// `queue_pressure`, non-`Gold` batches route one lane cheaper
 /// (`Standard` → economy lane, `Economy` → shed lane when configured).
@@ -331,12 +411,26 @@ impl Default for ShedPolicy {
 }
 
 /// QoS server configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct QosConfig {
     pub policy: BatchPolicy,
     pub shed: ShedPolicy,
     pub monitor: MonitorConfig,
     pub workers: WorkerMode,
+    /// Executor respawns each lane's supervisor may perform before the
+    /// lane is retired for good.
+    pub restart_budget: u32,
+    /// Backoff before the first respawn; doubles per restart, capped at
+    /// [`MAX_RESTART_BACKOFF`].
+    pub restart_backoff: Duration,
+    /// Arm the deadline reaper: requests still queued `grace` past
+    /// their deadline are failed with a typed `Timeout` instead of
+    /// occupying batches. `None` (the default) serves late requests and
+    /// only flags `deadline_missed`, the pre-reaper behavior.
+    pub reap_grace: Option<Duration>,
+    /// Deterministic fault injection (chaos suite / CI); `None` — the
+    /// default unless `BFP_FAULTS` is set — costs nothing.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for QosConfig {
@@ -346,6 +440,10 @@ impl Default for QosConfig {
             shed: ShedPolicy::default(),
             monitor: MonitorConfig::default(),
             workers: WorkerMode::from_env(),
+            restart_budget: 3,
+            restart_backoff: Duration::from_millis(10),
+            reap_grace: None,
+            faults: FaultInjector::from_env(),
         }
     }
 }
@@ -367,7 +465,7 @@ struct QueuedRequest {
     id: u64,
     class: QosClass,
     image: Tensor,
-    respond: Sender<QosResponse>,
+    respond: Sender<QosResult>,
     enqueued_at: Instant,
     deadline: Instant,
     /// Submission order; tie-break for equal deadlines (FIFO).
@@ -453,6 +551,60 @@ impl EdfQueues {
             }
         }
         batch
+    }
+
+    /// The deadline reaper: fail every queued request whose deadline is
+    /// more than `grace` past with a typed `Timeout`. Heap order is
+    /// earliest-deadline-first, so popping while the head is expired
+    /// reaps exactly the expired set of each class.
+    fn reap(&mut self, now: Instant, grace: Duration, metrics: &Mutex<Metrics>) {
+        for class in QosClass::ALL {
+            let heap = &mut self.heaps[class.rank()];
+            let mut reaped = 0u64;
+            while let Some(head) = heap.peek() {
+                if now <= head.0.deadline + grace {
+                    break;
+                }
+                let EdfEntry(r) = heap.pop().expect("peeked head");
+                let _ = r.respond.send(Err(QosError {
+                    id: r.id,
+                    class,
+                    kind: QosErrorKind::Timeout,
+                    message: format!(
+                        "request {} reaped: still queued {:?} past its deadline",
+                        r.id, grace
+                    ),
+                }));
+                reaped += 1;
+            }
+            if reaped > 0 {
+                let mut m = metrics.lock().unwrap();
+                for _ in 0..reaped {
+                    m.record_timeout(class.name());
+                }
+            }
+        }
+    }
+
+    /// Fail everything still queued (the drain bound expired) with a
+    /// typed `Draining` error.
+    fn fail_all(&mut self, metrics: &Mutex<Metrics>) {
+        for class in QosClass::ALL {
+            let heap = &mut self.heaps[class.rank()];
+            if heap.is_empty() {
+                continue;
+            }
+            let mut m = metrics.lock().unwrap();
+            while let Some(EdfEntry(r)) = heap.pop() {
+                m.record_failure(class.name());
+                let _ = r.respond.send(Err(QosError {
+                    id: r.id,
+                    class,
+                    kind: QosErrorKind::Draining,
+                    message: "qos server drain bound expired".to_string(),
+                }));
+            }
+        }
     }
 }
 
@@ -570,6 +722,8 @@ impl Lane {
             promotions: self.promotions,
             ladder_pos: self.pos,
             ladder_len: self.ladder.len(),
+            restarts: 0,
+            retired: false,
         }
     }
 }
@@ -591,6 +745,129 @@ pub struct LaneReport {
     pub promotions: u64,
     pub ladder_pos: usize,
     pub ladder_len: usize,
+    /// Supervisor respawns of this lane's executor over its lifetime.
+    pub restarts: u64,
+    /// The lane exhausted its restart budget and serves nothing.
+    pub retired: bool,
+}
+
+/// One lane's liveness as reported by [`QosServer::health`] and the
+/// network `Health` frame.
+#[derive(Debug, Clone)]
+pub struct LaneHealth {
+    pub label: String,
+    /// Restart budget exhausted — the lane serves nothing; its traffic
+    /// re-routes to the adjacent safer lane.
+    pub retired: bool,
+    /// Supervisor respawns of this lane's executor so far.
+    pub restarts: u64,
+    /// Requests currently queued for this lane's class in the EDF heaps
+    /// (0 for the shed lane, which has no class queue of its own).
+    pub queued: u64,
+}
+
+/// Shared liveness/depth board: supervisors publish restarts and
+/// retirements, the scheduler publishes class queue depths, and routing
+/// plus [`QosServer::health`] read it lock-free.
+struct HealthBoard {
+    retired: Vec<AtomicBool>,
+    restarts: Vec<AtomicU64>,
+    /// Requests queued per class (gold/standard/economy) in the EDF
+    /// heaps, as of the scheduler's last pass.
+    depths: [AtomicUsize; 3],
+    labels: Vec<&'static str>,
+}
+
+impl HealthBoard {
+    fn new(labels: Vec<&'static str>) -> Self {
+        Self {
+            retired: labels.iter().map(|_| AtomicBool::new(false)).collect(),
+            restarts: labels.iter().map(|_| AtomicU64::new(0)).collect(),
+            depths: [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)],
+            labels,
+        }
+    }
+
+    fn retire(&self, lane: usize) {
+        self.retired[lane].store(true, Ordering::Release);
+    }
+
+    fn is_retired(&self, lane: usize) -> bool {
+        self.retired[lane].load(Ordering::Acquire)
+    }
+
+    fn record_restart(&self, lane: usize) {
+        self.restarts[lane].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn publish_depths(&self, queues: &EdfQueues) {
+        for c in QosClass::ALL {
+            self.depths[c.rank()].store(queues.class_len(c), Ordering::Relaxed);
+        }
+    }
+
+    fn snapshot(&self) -> Vec<LaneHealth> {
+        self.labels
+            .iter()
+            .enumerate()
+            .map(|(i, label)| LaneHealth {
+                label: label.to_string(),
+                retired: self.is_retired(i),
+                restarts: self.restarts[i].load(Ordering::Relaxed),
+                queued: if i < 3 { self.depths[i].load(Ordering::Relaxed) as u64 } else { 0 },
+            })
+            .collect()
+    }
+}
+
+/// Re-route a routed lane index around retired lanes. The adjacent
+/// *safer* lane is preferred (serving better than asked is never a
+/// downgrade), then cheaper lanes — but never *into* the shed lane,
+/// which only the explicit pressure-downgrade path reaches. `None`
+/// means every candidate is retired.
+fn resolve_live(
+    lane: usize,
+    board: &HealthBoard,
+    lane_count: usize,
+    shed_lane: Option<usize>,
+) -> Option<usize> {
+    if !board.is_retired(lane) {
+        return Some(lane);
+    }
+    for cand in (0..lane).rev() {
+        if !board.is_retired(cand) {
+            return Some(cand);
+        }
+    }
+    let limit = shed_lane.unwrap_or(lane_count);
+    ((lane + 1)..limit).find(|&cand| !board.is_retired(cand))
+}
+
+/// Graceful-drain state shared between [`QosServer`] and the scheduler:
+/// `begin` flips admission off first, then arms the bound the scheduler
+/// checks each pass.
+#[derive(Default)]
+struct DrainState {
+    refusing: AtomicBool,
+    deadline: Mutex<Option<Instant>>,
+}
+
+impl DrainState {
+    fn begin(&self, bound: Duration) {
+        self.refusing.store(true, Ordering::Release);
+        let mut d = self.deadline.lock().unwrap();
+        if d.is_none() {
+            *d = Some(Instant::now() + bound);
+        }
+    }
+
+    fn refusing(&self) -> bool {
+        self.refusing.load(Ordering::Acquire)
+    }
+
+    fn expired(&self) -> bool {
+        matches!(*self.deadline.lock().unwrap(), Some(d) if Instant::now() >= d)
+    }
 }
 
 /// Everything the QoS server knows at shutdown: per-class serving
@@ -622,7 +899,7 @@ struct LaneBatch {
 /// Everything needed to answer one request after its forward.
 struct ResponseMeta {
     id: u64,
-    respond: Sender<QosResponse>,
+    respond: Sender<QosResult>,
     enqueued_at: Instant,
     deadline: Instant,
 }
@@ -642,6 +919,68 @@ fn split_requests(batch: Vec<QueuedRequest>) -> (Vec<Tensor>, Vec<ResponseMeta>)
     (images, meta)
 }
 
+/// Human-readable text of a caught panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A lane executor panicked. `meta` holds the poisoned batch's pending
+/// responders (empty when the panic hit the post-response telemetry
+/// probe — those responses were already out).
+struct LaneFailure {
+    class: QosClass,
+    meta: Vec<ResponseMeta>,
+    message: String,
+}
+
+/// Error-reply every pending responder with one typed [`QosError`],
+/// accounting each under its class in `global` (`timeouts` for reaper
+/// kills, `failures` otherwise).
+fn fail_meta(
+    meta: Vec<ResponseMeta>,
+    class: QosClass,
+    kind: QosErrorKind,
+    message: &str,
+    global: Option<&Mutex<Metrics>>,
+) {
+    if meta.is_empty() {
+        return;
+    }
+    if let Some(g) = global {
+        let mut m = g.lock().unwrap();
+        for _ in &meta {
+            match kind {
+                QosErrorKind::Timeout => m.record_timeout(class.name()),
+                _ => m.record_failure(class.name()),
+            }
+        }
+    }
+    for r in meta {
+        let _ = r.respond.send(Err(QosError {
+            id: r.id,
+            class,
+            kind,
+            message: message.to_string(),
+        }));
+    }
+}
+
+/// [`fail_meta`] over a whole undelivered batch.
+fn fail_batch(
+    batch: LaneBatch,
+    kind: QosErrorKind,
+    message: &str,
+    global: Option<&Mutex<Metrics>>,
+) {
+    fail_meta(batch.meta, batch.class, kind, message, global);
+}
+
 /// Execute one routed batch on `lane` and answer every request in it.
 ///
 /// One completion instant is captured for the whole batch, immediately
@@ -656,16 +995,36 @@ fn split_requests(batch: Vec<QueuedRequest>) -> (Vec<Tensor>, Vec<ResponseMeta>)
 /// *next* batch — runs last, after the responses are out, so its f32
 /// reference forward never sits on the response path. Returns the
 /// completion instant (the timing regression tests pin against it).
+///
+/// The forward — and the fault injector's per-batch hook, which may
+/// deliberately panic — runs under `catch_unwind`: a panic yields
+/// `Err(LaneFailure)` carrying the poisoned batch's responders so the
+/// supervisor can error-reply them and respawn the lane. A probe panic
+/// yields a `LaneFailure` with no responders (the batch was already
+/// answered) — the lane still needs a respawn, nobody needs a reply.
 fn deliver_batch(
     lane: &mut Lane,
     batch: LaneBatch,
     scratch: &mut Metrics,
     global: &Mutex<Metrics>,
-) -> Instant {
+    faults: Option<&FaultInjector>,
+) -> Result<Instant, LaneFailure> {
     let LaneBatch { class, batch_seq, downgraded, images, meta } = batch;
     let t0 = Instant::now();
     let batch_size = images.len();
-    let (outputs, probe) = lane.forward(images);
+    let label = lane.label;
+    let forwarded = catch_unwind(AssertUnwindSafe(|| {
+        if let Some(f) = faults {
+            f.on_batch(label);
+        }
+        lane.forward(images)
+    }));
+    let (outputs, probe) = match forwarded {
+        Ok(v) => v,
+        Err(payload) => {
+            return Err(LaneFailure { class, meta, message: panic_message(payload) });
+        }
+    };
     // retained for the post-response telemetry probe (logits are small)
     let probe = probe.map(|(idx, img)| (img, outputs[idx].clone()));
     let served_by = lane.label.to_string();
@@ -683,7 +1042,7 @@ fn deliver_batch(
             downgraded,
             deadline_missed,
         );
-        let _ = m.respond.send(QosResponse {
+        let _ = m.respond.send(Ok(QosResponse {
             id: m.id,
             logits,
             class,
@@ -694,14 +1053,164 @@ fn deliver_batch(
             queue_wait,
             batch_size,
             batch_seq,
-        });
+        }));
     }
     global.lock().unwrap().merge_from(scratch);
     scratch.clear();
     if let Some((img, out)) = probe {
-        lane.probe(img, &out);
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| lane.probe(img, &out))) {
+            return Err(LaneFailure { class, meta: Vec::new(), message: panic_message(payload) });
+        }
     }
-    completed
+    Ok(completed)
+}
+
+// ---- lane supervision ------------------------------------------------
+
+/// Cap on the supervisor's exponential restart backoff.
+const MAX_RESTART_BACKOFF: Duration = Duration::from_secs(1);
+
+/// Everything needed to rebuild a lane after an executor panic: the
+/// supervisor respawns the [`Lane`] over the *same* shared weight cache
+/// (no requantization) with a fresh telemetry monitor.
+struct LaneSeed {
+    label: &'static str,
+    model: Model,
+    spec: LaneSpec,
+    cache: SharedWeightCache,
+    monitor: MonitorConfig,
+}
+
+impl LaneSeed {
+    fn build(&self) -> Lane {
+        Lane::new(self.label, self.model.clone(), &self.spec, &self.cache, self.monitor)
+    }
+}
+
+/// A lane under supervision: batches execute through [`deliver_batch`]'s
+/// `catch_unwind`; a panic error-replies the poisoned batch and respawns
+/// the lane within a bounded restart budget (exponential backoff,
+/// capped at [`MAX_RESTART_BACKOFF`]). Exhausting the budget *retires*
+/// the lane: it serves nothing further, the [`HealthBoard`] re-routes
+/// its traffic, and the final report says so.
+struct SupervisedLane {
+    /// `None` once retired.
+    lane: Option<Lane>,
+    seed: LaneSeed,
+    restarts: u64,
+    budget: u32,
+    next_backoff: Duration,
+    /// Telemetry counters folded in from dead incarnations, so a
+    /// respawned (or retired) lane's report covers its whole life.
+    acc_batches: u64,
+    acc_swaps: u64,
+    acc_promotions: u64,
+}
+
+impl SupervisedLane {
+    fn new(seed: LaneSeed, budget: u32, backoff: Duration) -> Self {
+        let lane = seed.build();
+        Self {
+            lane: Some(lane),
+            seed,
+            restarts: 0,
+            budget,
+            next_backoff: backoff.max(Duration::from_micros(1)),
+            acc_batches: 0,
+            acc_swaps: 0,
+            acc_promotions: 0,
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        self.seed.label
+    }
+
+    fn retired(&self) -> bool {
+        self.lane.is_none()
+    }
+
+    /// Run one batch; on an executor panic, error-reply the poisoned
+    /// batch with a typed `ExecutorPanic` and respawn or retire per the
+    /// restart budget.
+    fn deliver(
+        &mut self,
+        batch: LaneBatch,
+        scratch: &mut Metrics,
+        global: &Mutex<Metrics>,
+        faults: Option<&FaultInjector>,
+        board: &HealthBoard,
+        lane_idx: usize,
+    ) {
+        let Some(lane) = self.lane.as_mut() else {
+            let msg = format!("lane {} is retired", self.seed.label);
+            fail_batch(batch, QosErrorKind::LaneRetired, &msg, Some(global));
+            return;
+        };
+        match deliver_batch(lane, batch, scratch, global, faults) {
+            Ok(_) => {}
+            Err(failure) => {
+                scratch.clear();
+                let msg =
+                    format!("lane {} executor panicked: {}", self.seed.label, failure.message);
+                fail_meta(
+                    failure.meta,
+                    failure.class,
+                    QosErrorKind::ExecutorPanic,
+                    &msg,
+                    Some(global),
+                );
+                self.respawn_or_retire(global, board, lane_idx);
+            }
+        }
+    }
+
+    fn respawn_or_retire(&mut self, global: &Mutex<Metrics>, board: &HealthBoard, lane_idx: usize) {
+        // fold the dead incarnation's telemetry counters before dropping it
+        if let Some(old) = self.lane.take() {
+            self.acc_batches += old.batches;
+            self.acc_swaps += old.swaps;
+            self.acc_promotions += old.promotions;
+        }
+        if self.restarts >= u64::from(self.budget) {
+            board.retire(lane_idx);
+            global.lock().unwrap().record_retired();
+            return; // lane stays None: retired for good
+        }
+        std::thread::sleep(self.next_backoff);
+        self.next_backoff = (self.next_backoff * 2).min(MAX_RESTART_BACKOFF);
+        self.restarts += 1;
+        global.lock().unwrap().record_restart();
+        board.record_restart(lane_idx);
+        self.lane = Some(self.seed.build());
+    }
+
+    fn report(&self) -> LaneReport {
+        match &self.lane {
+            Some(lane) => {
+                let mut r = lane.report();
+                r.batches += self.acc_batches;
+                r.swaps += self.acc_swaps;
+                r.promotions += self.acc_promotions;
+                r.restarts = self.restarts;
+                r
+            }
+            None => LaneReport {
+                label: self.seed.label.to_string(),
+                plan: "retired".to_string(),
+                predicted_snr_db: f64::NAN,
+                measured_snr_db: f64::NAN,
+                probes: 0,
+                batches: self.acc_batches,
+                swaps: self.acc_swaps,
+                promotions: self.acc_promotions,
+                ladder_pos: 0,
+                ladder_len: self.seed.spec.ladder.len(),
+                restarts: self.restarts,
+                retired: true,
+            },
+        }
+    }
 }
 
 // ---- the scheduler core ----------------------------------------------
@@ -727,6 +1236,19 @@ fn requeue(queues: &mut EdfQueues, batch: LaneBatch) {
     }
 }
 
+/// Shared fabric state threaded from [`QosServer::start`] into both
+/// worker modes: the configuration plus the metrics sink, health board,
+/// and drain state the resilience paths write.
+struct FabricCtx {
+    config: QosConfig,
+    metrics: Arc<Mutex<Metrics>>,
+    board: Arc<HealthBoard>,
+    drain: Arc<DrainState>,
+    /// Index of the shed lane, when configured — retirement re-routing
+    /// must never move traffic into it.
+    shed_lane: Option<usize>,
+}
+
 /// The EDF scheduling loop shared by the single-worker reference
 /// scheduler and the per-lane dispatcher: drain the submission channel
 /// into the per-class EDF heaps, linger anchored to the head request's
@@ -742,16 +1264,33 @@ fn requeue(queues: &mut EdfQueues, batch: LaneBatch) {
 /// and `dispatch` may return the batch undelivered — its requests go
 /// back into the heaps (where the shed policy still sees them as
 /// backlog) and the loop keeps draining the channel.
+///
+/// Resilience housekeeping runs once per pass: class queue depths are
+/// published to the health board, the deadline reaper fails expired
+/// requests (when armed), an expired drain bound fails everything still
+/// queued, and routed lanes are re-resolved around retirements
+/// ([`resolve_live`] — with every candidate retired the batch is failed
+/// with a typed `LaneRetired`).
 fn scheduler_loop(
     rx: &Receiver<QueuedRequest>,
-    config: &QosConfig,
+    ctx: &FabricCtx,
     lane_count: usize,
     lane_ready: impl Fn(usize) -> bool,
     mut dispatch: impl FnMut(usize, LaneBatch) -> Option<LaneBatch>,
 ) {
+    let config = &ctx.config;
     let mut queues = EdfQueues::default();
     let mut open = true;
     let mut batch_seq = 0u64;
+    // route + retirement re-route: the lane a class's batch will target
+    // right now, with the final downgrade flag derived from the lane it
+    // actually lands on (a re-route to a *safer* lane is not a
+    // downgrade). `None`: every candidate lane is retired.
+    let target_lane = |class: QosClass, backlog: usize| -> Option<(usize, bool)> {
+        let (routed, _) = route(class, backlog, &config.shed, lane_count);
+        let live = resolve_live(routed, &ctx.board, lane_count, ctx.shed_lane)?;
+        Some((live, live > class.rank()))
+    };
     while open || !queues.is_empty() {
         if queues.is_empty() {
             match rx.recv() {
@@ -770,6 +1309,14 @@ fn scheduler_loop(
                 Err(TryRecvError::Disconnected) => open = false,
             }
         }
+        // resilience housekeeping before forming a batch
+        if let Some(grace) = config.reap_grace {
+            queues.reap(Instant::now(), grace, &ctx.metrics);
+        }
+        if ctx.drain.expired() {
+            queues.fail_all(&ctx.metrics);
+        }
+        ctx.board.publish_depths(&queues);
         // most urgent class with a ready lane; with every candidate lane
         // backed up, fall back to plain EDF and let `dispatch` bounce
         let pick = |q: &EdfQueues| -> Option<QosClass> {
@@ -782,7 +1329,12 @@ fn scheduler_loop(
                 // its (full) home lane
                 let popped = q.class_len(c).min(config.policy.max_batch);
                 let backlog = q.total() - popped;
-                lane_ready(route(c, backlog, &config.shed, lane_count).0)
+                match target_lane(c, backlog) {
+                    Some((lane, _)) => lane_ready(lane),
+                    // all-retired: still pick it, so the dispatch below
+                    // can fail the batch instead of parking it forever
+                    None => true,
+                }
             })
             .or_else(|| q.pick_class())
         };
@@ -814,12 +1366,19 @@ fn scheduler_loop(
         }
         let batch = queues.pop_batch(class, config.policy.max_batch);
         let backlog = queues.total();
-        let (lane_idx, downgraded) = route(class, backlog, &config.shed, lane_count);
         batch_seq += 1;
         let (images, meta) = split_requests(batch);
-        let formed = LaneBatch { class, batch_seq, downgraded, images, meta };
-        if let Some(bounced) = dispatch(lane_idx, formed) {
-            requeue(&mut queues, bounced);
+        match target_lane(class, backlog) {
+            Some((lane_idx, downgraded)) => {
+                let formed = LaneBatch { class, batch_seq, downgraded, images, meta };
+                if let Some(bounced) = dispatch(lane_idx, formed) {
+                    requeue(&mut queues, bounced);
+                }
+            }
+            None => {
+                let msg = "every lane that could serve this class is retired";
+                fail_meta(meta, class, QosErrorKind::LaneRetired, msg, Some(&ctx.metrics));
+            }
         }
     }
 }
@@ -828,23 +1387,25 @@ fn scheduler_loop(
 /// executes each routed batch inline.
 fn run_worker(
     rx: Receiver<QueuedRequest>,
-    mut lanes: Vec<Lane>,
-    config: QosConfig,
-    metrics: Arc<Mutex<Metrics>>,
+    mut lanes: Vec<SupervisedLane>,
+    ctx: FabricCtx,
 ) -> Vec<LaneReport> {
     let lane_count = lanes.len();
     let mut scratch = Metrics::default();
+    let faults = ctx.config.faults.clone();
     scheduler_loop(
         &rx,
-        &config,
+        &ctx,
         lane_count,
         |_| true, // inline execution: every lane is always "ready"
         |lane_idx, batch| {
-            deliver_batch(&mut lanes[lane_idx], batch, &mut scratch, &metrics);
+            let lane = &mut lanes[lane_idx];
+            let faults = faults.as_deref();
+            lane.deliver(batch, &mut scratch, &ctx.metrics, faults, &ctx.board, lane_idx);
             None
         },
     );
-    lanes.iter().map(Lane::report).collect()
+    lanes.iter().map(SupervisedLane::report).collect()
 }
 
 // ---- per-lane executors ----------------------------------------------
@@ -871,6 +1432,9 @@ struct LaneQueues {
     work: Condvar,
     /// The dispatcher waits here for queue space.
     space: Condvar,
+    /// Accounting sink for batches error-replied on a dead lane
+    /// (`None` in the queue-mechanics unit tests).
+    metrics: Option<Arc<Mutex<Metrics>>>,
 }
 
 struct QueueState {
@@ -883,7 +1447,7 @@ struct QueueState {
 }
 
 impl LaneQueues {
-    fn new(lanes: usize) -> Self {
+    fn new(lanes: usize, metrics: Option<Arc<Mutex<Metrics>>>) -> Self {
         Self {
             state: Mutex::new(QueueState {
                 queues: (0..lanes).map(|_| VecDeque::new()).collect(),
@@ -892,6 +1456,7 @@ impl LaneQueues {
             }),
             work: Condvar::new(),
             space: Condvar::new(),
+            metrics,
         }
     }
 
@@ -907,9 +1472,9 @@ impl LaneQueues {
     /// space. Returns the batch if the queue stayed full — the caller
     /// requeues its requests and keeps scheduling other classes, so one
     /// slow lane never head-of-line-blocks the dispatcher. If the lane's
-    /// executor has died, the batch is dropped — its responders
-    /// disconnect and clients observe the failure as a receive error
-    /// rather than a hang.
+    /// executor has died, the batch is error-replied with a typed
+    /// `LaneRetired` instead of queued — never a silent drop, never a
+    /// blocked dispatcher.
     fn offer(&self, lane: usize, batch: LaneBatch) -> Option<LaneBatch> {
         let mut st = self.state.lock().unwrap();
         let deadline = Instant::now() + OFFER_GRACE;
@@ -921,7 +1486,10 @@ impl LaneQueues {
             st = self.space.wait_timeout(st, deadline - now).unwrap().0;
         }
         if st.dead[lane] {
-            return None; // drop: responders close, clients error out
+            drop(st);
+            let msg = "lane executor is gone";
+            fail_batch(batch, QosErrorKind::LaneRetired, msg, self.metrics.as_deref());
+            return None;
         }
         st.queues[lane].push_back(batch);
         drop(st);
@@ -971,34 +1539,46 @@ impl LaneQueues {
         self.work.notify_all();
     }
 
-    /// Lane `lane`'s executor is gone (normal exit or panic). Drops any
-    /// batches still queued for it — their responders disconnect, so
-    /// waiting clients get an error instead of hanging — and wakes the
-    /// dispatcher so a push to the dead lane cannot block forever.
+    /// Lane `lane`'s executor is gone (drained after close, or retired).
+    /// Batches still queued for it are error-replied with a typed
+    /// `LaneRetired` — waiting clients get an answer, not a hang — and
+    /// the dispatcher is woken so a push to the dead lane cannot block
+    /// forever.
     fn mark_dead(&self, lane: usize) {
         let mut st = self.state.lock().unwrap();
         st.dead[lane] = true;
-        st.queues[lane].clear();
+        let orphans: Vec<LaneBatch> = st.queues[lane].drain(..).collect();
         drop(st);
+        for b in orphans {
+            let msg = "lane executor exited with this batch still queued";
+            fail_batch(b, QosErrorKind::LaneRetired, msg, self.metrics.as_deref());
+        }
         self.space.notify_all();
         self.work.notify_all();
     }
 }
 
-/// One lane's long-lived executor: pop (or steal) batches, execute and
-/// answer them, run the post-response telemetry probe, fold local
-/// metrics into the shared sink once per batch. Nested GEMM/panel
-/// parallelism is budgeted to `ambient / lanes` threads so concurrent
-/// executors don't oversubscribe the machine.
-fn run_executor(
-    mut lane: Lane,
-    lane_idx: usize,
+/// Everything a per-lane executor thread needs besides its lane.
+struct ExecEnv {
     queues: Arc<LaneQueues>,
     steal: bool,
     thread_budget: usize,
     metrics: Arc<Mutex<Metrics>>,
-) -> LaneReport {
-    // mark the lane dead on ANY exit — drained or panicked — so the
+    faults: Option<Arc<FaultInjector>>,
+    board: Arc<HealthBoard>,
+}
+
+/// One lane's long-lived executor: pop (or steal) batches, execute and
+/// answer them through the lane's supervisor (panics are caught,
+/// error-replied and respawned inside [`SupervisedLane::deliver`]), run
+/// the post-response telemetry probe, fold local metrics into the
+/// shared sink once per batch. Nested GEMM/panel parallelism is
+/// budgeted to `ambient / lanes` threads so concurrent executors don't
+/// oversubscribe the machine. A *retired* lane's executor exits: its
+/// queue is marked dead (queued batches error-replied) and the
+/// dispatcher re-routes around it via the health board.
+fn run_executor(mut lane: SupervisedLane, lane_idx: usize, env: ExecEnv) -> LaneReport {
+    // mark the lane dead on ANY exit — drained or retired — so the
     // dispatcher never blocks pushing to a queue nobody will empty
     struct DeadOnExit {
         queues: Arc<LaneQueues>,
@@ -1009,14 +1589,18 @@ fn run_executor(
             self.queues.mark_dead(self.lane);
         }
     }
-    let _guard = DeadOnExit { queues: Arc::clone(&queues), lane: lane_idx };
-    pool::with_threads(thread_budget, || {
+    let _guard = DeadOnExit { queues: Arc::clone(&env.queues), lane: lane_idx };
+    pool::with_threads(env.thread_budget, || {
         let mut scratch = Metrics::default();
-        while let Some((mut batch, stolen)) = queues.pop(lane_idx, steal) {
+        while let Some((mut batch, stolen)) = env.queues.pop(lane_idx, env.steal) {
             if stolen {
                 batch.downgraded = true;
             }
-            deliver_batch(&mut lane, batch, &mut scratch, &metrics);
+            let faults = env.faults.as_deref();
+            lane.deliver(batch, &mut scratch, &env.metrics, faults, &env.board, lane_idx);
+            if lane.retired() {
+                break;
+            }
         }
     });
     lane.report()
@@ -1024,37 +1608,43 @@ fn run_executor(
 
 /// The per-lane dispatcher: spawn one executor per lane, run the shared
 /// EDF scheduling loop handing batches over the bounded queues, then
-/// close the queues and join the executors. A panicked executor yields
-/// no `LaneReport` — the report is partial, never a propagated panic.
+/// close the queues and join the executors. Executor panics are caught
+/// *inside* the executors (lane supervision), so every lane — retired
+/// ones included — contributes its `LaneReport`.
 fn run_dispatcher(
     rx: Receiver<QueuedRequest>,
-    lanes: Vec<Lane>,
-    config: QosConfig,
-    metrics: Arc<Mutex<Metrics>>,
-    steal: bool,
+    lanes: Vec<SupervisedLane>,
+    ctx: FabricCtx,
 ) -> Vec<LaneReport> {
     // a steal serves requests on a cheaper plan — it is a downgrade, and
     // obeys the same master switch as the pressure-downgrade path: an
     // operator who disabled shedding gets strictly class-homed serving
-    let steal = steal && config.shed.enabled;
+    let steal = matches!(ctx.config.workers, WorkerMode::PerLane { steal: true })
+        && ctx.config.shed.enabled;
     let lane_count = lanes.len();
-    let queues = Arc::new(LaneQueues::new(lane_count));
+    let queues = Arc::new(LaneQueues::new(lane_count, Some(Arc::clone(&ctx.metrics))));
     let thread_budget = pool::share_threads(lane_count);
     let executors: Vec<JoinHandle<LaneReport>> = lanes
         .into_iter()
         .enumerate()
         .map(|(i, lane)| {
-            let q = Arc::clone(&queues);
-            let m = Arc::clone(&metrics);
+            let env = ExecEnv {
+                queues: Arc::clone(&queues),
+                steal,
+                thread_budget,
+                metrics: Arc::clone(&ctx.metrics),
+                faults: ctx.config.faults.clone(),
+                board: Arc::clone(&ctx.board),
+            };
             std::thread::Builder::new()
-                .name(format!("qos-lane-{}", lane.label))
-                .spawn(move || run_executor(lane, i, q, steal, thread_budget, m))
+                .name(format!("qos-lane-{}", lane.label()))
+                .spawn(move || run_executor(lane, i, env))
                 .expect("spawn lane executor")
         })
         .collect();
     scheduler_loop(
         &rx,
-        &config,
+        &ctx,
         lane_count,
         |lane| queues.has_room(lane),
         |lane_idx, batch| queues.offer(lane_idx, batch),
@@ -1070,6 +1660,8 @@ pub struct QosServer {
     tx: Option<Sender<QueuedRequest>>,
     worker: Option<JoinHandle<Vec<LaneReport>>>,
     metrics: Arc<Mutex<Metrics>>,
+    board: Arc<HealthBoard>,
+    drain: Arc<DrainState>,
     next_id: u64,
     started: Instant,
 }
@@ -1080,27 +1672,54 @@ impl QosServer {
     /// thread, or the dispatcher plus one executor thread per lane.
     pub fn start(model: Model, set: &LaneSet, config: QosConfig) -> Self {
         let cache = WeightCache::shared();
+        let monitor = config.monitor;
+        let budget = config.restart_budget;
+        let backoff = config.restart_backoff;
+        let seed = |label: &'static str, spec: &LaneSpec| LaneSeed {
+            label,
+            model: model.clone(),
+            spec: spec.clone(),
+            cache: Arc::clone(&cache),
+            monitor,
+        };
         let mut lanes = vec![
-            Lane::new("gold", model.clone(), &set.gold, &cache, config.monitor),
-            Lane::new("standard", model.clone(), &set.standard, &cache, config.monitor),
-            Lane::new("economy", model.clone(), &set.economy, &cache, config.monitor),
+            SupervisedLane::new(seed("gold", &set.gold), budget, backoff),
+            SupervisedLane::new(seed("standard", &set.standard), budget, backoff),
+            SupervisedLane::new(seed("economy", &set.economy), budget, backoff),
         ];
         if let Some(shed) = &set.shed {
-            lanes.push(Lane::new("shed", model, shed, &cache, config.monitor));
+            lanes.push(SupervisedLane::new(seed("shed", shed), budget, backoff));
         }
+        let shed_lane = set.shed.as_ref().map(|_| 3);
+        let labels: Vec<&'static str> = lanes.iter().map(|l| l.label()).collect();
+        let board = Arc::new(HealthBoard::new(labels));
+        let drain = Arc::new(DrainState::default());
 
         let (tx, rx): (Sender<QueuedRequest>, Receiver<QueuedRequest>) = channel();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let metrics_worker = Arc::clone(&metrics);
-        let worker = match config.workers {
-            WorkerMode::Single => {
-                std::thread::spawn(move || run_worker(rx, lanes, config, metrics_worker))
-            }
-            WorkerMode::PerLane { steal } => std::thread::spawn(move || {
-                run_dispatcher(rx, lanes, config, metrics_worker, steal)
-            }),
+        let workers = config.workers;
+        let ctx = FabricCtx {
+            config,
+            metrics: Arc::clone(&metrics),
+            board: Arc::clone(&board),
+            drain: Arc::clone(&drain),
+            shed_lane,
         };
-        Self { tx: Some(tx), worker: Some(worker), metrics, next_id: 0, started: Instant::now() }
+        let worker = match workers {
+            WorkerMode::Single => std::thread::spawn(move || run_worker(rx, lanes, ctx)),
+            WorkerMode::PerLane { .. } => {
+                std::thread::spawn(move || run_dispatcher(rx, lanes, ctx))
+            }
+        };
+        Self {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            board,
+            drain,
+            next_id: 0,
+            started: Instant::now(),
+        }
     }
 
     /// Submit one image under `class` with the class-default deadline.
@@ -1110,7 +1729,7 @@ impl QosServer {
         &mut self,
         class: QosClass,
         image: Tensor,
-    ) -> anyhow::Result<Receiver<QosResponse>> {
+    ) -> anyhow::Result<Receiver<QosResult>> {
         let deadline = class.default_deadline();
         self.submit_with_deadline(class, image, deadline)
     }
@@ -1121,7 +1740,7 @@ impl QosServer {
         class: QosClass,
         image: Tensor,
         deadline: Duration,
-    ) -> anyhow::Result<Receiver<QosResponse>> {
+    ) -> anyhow::Result<Receiver<QosResult>> {
         let (tx, rx) = channel();
         let id = self.reserve_id();
         self.submit_reserved(id, class, image, deadline, tx)?;
@@ -1149,8 +1768,11 @@ impl QosServer {
         class: QosClass,
         image: Tensor,
         deadline: Duration,
-        respond: Sender<QosResponse>,
+        respond: Sender<QosResult>,
     ) -> anyhow::Result<()> {
+        if self.drain.refusing() {
+            anyhow::bail!("qos server is draining; {} request {id} refused", class.name());
+        }
         let now = Instant::now();
         let worker = self
             .tx
@@ -1182,12 +1804,40 @@ impl QosServer {
         Arc::clone(&self.metrics)
     }
 
-    /// Submit and wait (tests / simple clients). A worker that dies
-    /// mid-request surfaces as an error, not a client-side panic.
+    /// Submit and wait (tests / simple clients). A typed per-request
+    /// failure (timeout, executor panic, retired lane, drain) — or a
+    /// worker that dies mid-request — surfaces as an error, not a
+    /// client-side panic.
     pub fn infer(&mut self, class: QosClass, image: Tensor) -> anyhow::Result<QosResponse> {
-        self.submit(class, image)?.recv().map_err(|_| {
-            anyhow::anyhow!("qos worker dropped the response (lane executor died mid-request)")
-        })
+        match self.submit(class, image)?.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(anyhow::anyhow!("{e}")),
+            Err(_) => Err(anyhow::anyhow!(
+                "qos worker dropped the response (serving fabric died mid-request)"
+            )),
+        }
+    }
+
+    /// Per-lane liveness snapshot: retired flags, restart counts, and
+    /// the class queue depths as of the scheduler's last pass. This is
+    /// what the network `Health` frame reports.
+    pub fn health(&self) -> Vec<LaneHealth> {
+        self.board.snapshot()
+    }
+
+    /// Start a graceful drain: new submits are refused immediately, and
+    /// requests still queued when `bound` expires are failed with a
+    /// typed `Draining` error. Already-dispatched batches always finish.
+    pub fn begin_drain(&self, bound: Duration) {
+        self.drain.begin(bound);
+    }
+
+    /// [`QosServer::begin_drain`] followed by [`QosServer::shutdown`]:
+    /// the graceful stop the TCP front's drain path uses. Every pending
+    /// request resolves — served within the bound, or failed typed.
+    pub fn shutdown_with_drain(self, bound: Duration) -> QosReport {
+        self.begin_drain(bound);
+        self.shutdown()
     }
 
     /// Snapshot of the metrics so far (the wall time keeps running).
@@ -1347,7 +1997,7 @@ mod tests {
     /// batches still on their home lane, never from gold.
     #[test]
     fn lane_queues_steal_moves_work_one_lane_cheaper_and_never_gold() {
-        let q = LaneQueues::new(4);
+        let q = LaneQueues::new(4, None);
         push_ok(&q, 0, lane_batch(QosClass::Gold, 1, false));
         push_ok(&q, 1, lane_batch(QosClass::Standard, 2, false));
         // a pressure-downgraded standard batch sitting on the economy
@@ -1394,7 +2044,7 @@ mod tests {
     /// one batch reopens the lane.
     #[test]
     fn full_lane_bounces_offers_instead_of_blocking() {
-        let q = LaneQueues::new(2);
+        let q = LaneQueues::new(2, None);
         for seq in 0..LANE_QUEUE_CAP as u64 {
             push_ok(&q, 1, lane_batch(QosClass::Standard, seq, false));
         }
@@ -1410,12 +2060,11 @@ mod tests {
         push_ok(&q, 1, bounced);
     }
 
-    /// A dead lane must swallow offers instead of blocking the
-    /// dispatcher forever (the batch's responders disconnect, which is
-    /// what clients observe as the executor's failure).
+    /// A dead lane must swallow offers (error-replying their requests)
+    /// instead of blocking the dispatcher forever.
     #[test]
     fn lane_queues_drop_offers_to_dead_lanes() {
-        let q = LaneQueues::new(2);
+        let q = LaneQueues::new(2, None);
         q.mark_dead(1);
         assert!(q.has_room(1), "dead lane reports ready so offers reach the drop path");
         for seq in 0..(LANE_QUEUE_CAP as u64 + 3) {
@@ -1575,9 +2224,11 @@ mod tests {
             LaneBatch { class: QosClass::Gold, batch_seq: 1, downgraded: false, images, meta };
         let global = Mutex::new(Metrics::default());
         let mut scratch = Metrics::default();
-        let completed = deliver_batch(&mut lane, batch, &mut scratch, &global);
+        let completed =
+            deliver_batch(&mut lane, batch, &mut scratch, &global, None).expect("no panic");
 
-        let responses: Vec<QosResponse> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let responses: Vec<QosResponse> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
         let want_missed = completed > deadline;
         for r in &responses {
             assert_eq!(
@@ -1615,6 +2266,8 @@ mod tests {
                 shed: ShedPolicy { enabled: false, queue_pressure: 0 },
                 monitor: MonitorConfig { sample_every: 0, ..Default::default() },
                 workers,
+                faults: None,
+                ..QosConfig::default()
             };
             let mut server = QosServer::start(tiny_model(8), &set, config);
             let mut pending = Vec::new();
@@ -1623,7 +2276,7 @@ mod tests {
                 pending.push((class, server.submit(class, image(50 + i)).unwrap()));
             }
             for (class, rx) in pending {
-                let resp = rx.recv().expect("response");
+                let resp = rx.recv().expect("response").expect("served ok");
                 assert_eq!(resp.class, class);
                 assert_eq!(
                     resp.served_by,
@@ -1647,39 +2300,147 @@ mod tests {
         }
     }
 
-    /// A request whose image violates the model input shape panics the
-    /// serving thread; clients must see errors (submit refused, response
-    /// dropped) and shutdown must still produce a partial report.
-    #[test]
-    fn dead_worker_surfaces_errors_not_panics() {
-        let set = LaneSet::from_steps(
+    fn plain_set() -> LaneSet {
+        LaneSet::from_steps(
             LaneStep::uniform(8, 8),
             LaneStep::uniform(8, 8),
             LaneStep::uniform(8, 8),
             None,
-        );
-        let config = QosConfig {
-            policy: BatchPolicy { max_batch: 2, linger: Duration::from_millis(1) },
+        )
+    }
+
+    fn resilience_config(workers: WorkerMode) -> QosConfig {
+        QosConfig {
+            policy: BatchPolicy { max_batch: 1, linger: Duration::ZERO },
             shed: ShedPolicy { enabled: false, queue_pressure: 0 },
             monitor: MonitorConfig { sample_every: 0, ..Default::default() },
-            workers: WorkerMode::Single,
-        };
-        let mut server = QosServer::start(tiny_model(8), &set, config);
-        // a healthy request first: metrics survive into the partial report
-        let ok = server.infer(QosClass::Gold, image(1)).expect("healthy worker");
+            workers,
+            restart_backoff: Duration::from_millis(1),
+            faults: None,
+            ..QosConfig::default()
+        }
+    }
+
+    /// A request whose image violates the model input shape panics the
+    /// lane executor; the supervisor must error-reply the poisoned batch,
+    /// respawn the lane, and keep serving — no permanently dead fabric.
+    #[test]
+    fn panicked_executor_respawns_and_keeps_serving() {
+        let mut server =
+            QosServer::start(tiny_model(8), &plain_set(), resilience_config(WorkerMode::Single));
+        // poison pill: wrong input shape panics the executor mid-forward
+        let rx = server.submit(QosClass::Gold, Tensor::zeros(&[1, 2, 2])).unwrap();
+        let err = rx.recv().expect("supervised batch must resolve").unwrap_err();
+        assert_eq!(err.kind, QosErrorKind::ExecutorPanic);
+        assert_eq!(err.class, QosClass::Gold);
+        // the respawned lane serves the very next request
+        let ok = server.infer(QosClass::Gold, image(1)).expect("respawned lane serves");
         assert_eq!(ok.served_by, "gold");
-        // poison pill: wrong input shape panics the worker inside forward
-        let poisoned = server.infer(QosClass::Gold, Tensor::zeros(&[1, 2, 2]));
-        assert!(poisoned.is_err(), "worker death must surface as an error");
-        // the channel to the dead worker closes; later submits error out
-        let refused = (0..50).find_map(|_| {
-            std::thread::sleep(Duration::from_millis(2));
-            server.submit(QosClass::Economy, image(2)).err()
-        });
-        assert!(refused.is_some(), "submits to a dead worker must eventually be refused");
+        let gold = server.health().into_iter().find(|l| l.label == "gold").unwrap();
+        assert!(gold.restarts >= 1, "health must report the respawn");
+        assert!(!gold.retired);
         let report = server.shutdown();
-        assert!(report.worker_panic, "partial report must flag the panic");
-        assert_eq!(report.metrics.total_requests, 1, "pre-crash metrics survive");
-        assert!(report.lanes.is_empty(), "no lane reports from a panicked worker");
+        assert!(!report.worker_panic, "supervision keeps the worker alive");
+        assert_eq!(report.metrics.total_requests, 1, "only the served request counts");
+        assert_eq!(report.metrics.class("gold").unwrap().failures, 1);
+        assert!(report.metrics.lane_restarts >= 1);
+        assert_eq!(report.lanes.len(), 3, "every lane reports, poisoned one included");
+        let lane = report.lanes.iter().find(|l| l.label == "gold").unwrap();
+        assert!(lane.restarts >= 1);
+        assert!(!lane.retired);
+    }
+
+    /// Exhausting the restart budget retires the lane; its traffic is
+    /// permanently re-routed to the adjacent safer lane (which is not a
+    /// downgrade), and the partial report stays complete.
+    #[test]
+    fn exhausted_restart_budget_retires_the_lane() {
+        let config = QosConfig { restart_budget: 0, ..resilience_config(WorkerMode::Single) };
+        let mut server = QosServer::start(tiny_model(8), &plain_set(), config);
+        // budget 0: the first panic retires the economy lane outright
+        let rx = server.submit(QosClass::Economy, Tensor::zeros(&[1, 2, 2])).unwrap();
+        let err = rx.recv().expect("poisoned batch must resolve").unwrap_err();
+        assert_eq!(err.kind, QosErrorKind::ExecutorPanic);
+        let retired = (0..100).find(|_| {
+            std::thread::sleep(Duration::from_millis(1));
+            server.health().iter().any(|l| l.label == "economy" && l.retired)
+        });
+        assert!(retired.is_some(), "economy lane must show up retired in health");
+        // traffic re-routes to the adjacent safer lane, not flagged as a
+        // downgrade: a safer plan is a strict upgrade for the client
+        let resp = server.infer(QosClass::Economy, image(3)).expect("re-routed request");
+        assert_eq!(resp.served_by, "standard");
+        assert!(!resp.downgraded, "a safer re-route is not a downgrade");
+        let report = server.shutdown();
+        assert_eq!(report.metrics.lanes_retired, 1);
+        assert_eq!(report.metrics.lane_restarts, 0, "budget 0 means no respawns");
+        assert_eq!(report.lanes.len(), 3, "retired lanes still report");
+        let lane = report.lanes.iter().find(|l| l.label == "economy").unwrap();
+        assert!(lane.retired);
+        assert_eq!(lane.plan, "retired");
+    }
+
+    /// With the reaper armed, a request queued past `deadline + grace`
+    /// fails with a typed `Timeout` instead of occupying a batch.
+    #[test]
+    fn reaper_times_out_expired_requests() {
+        let faults = FaultInjector::parse("delay:gold:30:1", 0).unwrap();
+        let config = QosConfig {
+            reap_grace: Some(Duration::ZERO),
+            faults: Some(Arc::new(faults)),
+            ..resilience_config(WorkerMode::Single)
+        };
+        let mut server = QosServer::start(tiny_model(8), &plain_set(), config);
+        // the gold request holds the single worker for ~30ms...
+        let slow = server.submit(QosClass::Gold, image(7)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        // ...so an already-expired economy request must be reaped, not served
+        let doomed = server
+            .submit_with_deadline(QosClass::Economy, image(8), Duration::ZERO)
+            .unwrap();
+        let ok = slow.recv().unwrap().expect("delayed gold request still serves");
+        assert_eq!(ok.served_by, "gold");
+        let err = doomed.recv().expect("reaped request must resolve").unwrap_err();
+        assert_eq!(err.kind, QosErrorKind::Timeout);
+        assert_eq!(err.class, QosClass::Economy);
+        let report = server.shutdown();
+        assert_eq!(report.metrics.class("economy").unwrap().timeouts, 1);
+        assert_eq!(report.metrics.total_requests, 1, "reaped requests are not served");
+    }
+
+    /// Graceful drain: every pending request resolves — served, or failed
+    /// with a typed `Draining` error once the bound expires — and new
+    /// submits are refused immediately.
+    #[test]
+    fn drain_resolves_every_pending_request() {
+        let mut server =
+            QosServer::start(tiny_model(8), &plain_set(), resilience_config(WorkerMode::Single));
+        let mut pending = Vec::new();
+        for i in 0..12u64 {
+            let class = QosClass::ALL[(i % 3) as usize];
+            pending.push(server.submit(class, image(60 + i)).unwrap());
+        }
+        server.begin_drain(Duration::ZERO);
+        assert!(server.submit(QosClass::Gold, image(99)).is_err(), "drain must refuse new work");
+        let mut served = 0u64;
+        let mut drained = 0u64;
+        for rx in pending {
+            match rx.recv().expect("drain must resolve every request") {
+                Ok(_) => served += 1,
+                Err(e) => {
+                    assert_eq!(e.kind, QosErrorKind::Draining);
+                    drained += 1;
+                }
+            }
+        }
+        assert_eq!(served + drained, 12, "no request may vanish during drain");
+        let report = server.shutdown();
+        assert_eq!(report.metrics.total_requests, served);
+        let failed: u64 = QosClass::ALL
+            .iter()
+            .filter_map(|c| report.metrics.class(c.name()))
+            .map(|cm| cm.failures)
+            .sum();
+        assert_eq!(failed, drained, "drained requests must be accounted as failures");
     }
 }

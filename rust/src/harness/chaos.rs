@@ -1,0 +1,435 @@
+//! Deterministic chaos scenarios for the resilience layer.
+//!
+//! Each scenario arms the seeded fault injector
+//! ([`crate::runtime::faults`]) against a real serving fabric and then
+//! *asserts recovery*, not just survival: SLO violations come back as
+//! strings so the CLI (`bfp-cnn chaos`) can fail CI with an exact
+//! explanation. Three scenarios cover the three fault domains:
+//!
+//! * `kill-lane` — panic the economy executor on its 3rd and 4th
+//!   batches (`panic:economy:3:2`). The supervisor must respawn the
+//!   lane within its restart budget, exactly the two poisoned requests
+//!   must fail with typed `ExecutorPanic` errors (nothing silently
+//!   dropped), every other request must serve, and the gold lane's
+//!   logits must be bit-identical to a no-fault run.
+//! * `slow-lane` — a 25 ms latency spike on every economy batch
+//!   (`delay:economy:25:1`). Everything still serves, no restarts; with
+//!   per-lane executors the spike must stay contained in its lane
+//!   (gold p50 < economy p50).
+//! * `flaky-net` — hard-reset the first TCP connection and answer the
+//!   second with a truncated frame (`reset:conn:1,truncate:conn:2`).
+//!   The retrying client must recover with exactly two reconnects,
+//!   serve every request with logits bit-identical to an in-process
+//!   reference, and the health frame must then report every lane live.
+//!
+//! Everything is deterministic: fixed request sequences, seeded faults,
+//! batch size 1 with zero linger, shedding and probing disabled — so a
+//! scenario that fails in CI reproduces exactly on a laptop.
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{
+    LaneSet, LaneStep, LogHistogram, QosClass, QosConfig, QosErrorKind, QosResult, QosServer,
+    ShedPolicy, WorkerMode,
+};
+use crate::models::Model;
+use crate::net::loadgen::RunStats;
+use crate::net::{NetServer, NetServerConfig, QuotaConfig, RetryPolicy, RetryingClient};
+use crate::runtime::FaultInjector;
+use crate::telemetry::MonitorConfig;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Requests per class in the lane scenarios.
+const REQUESTS: usize = 8;
+
+/// Requests driven through the retrying client in `flaky-net`.
+const FLAKY_REQUESTS: usize = 16;
+
+/// What one scenario suite observed: loadgen-shaped per-run stats (the
+/// CLI mirrors them into `CHAOS_*.json`) plus every SLO violation an
+/// operator would need to see (empty ⇒ the fabric recovered exactly as
+/// specified).
+pub struct ChaosOutcome {
+    pub stats: Vec<RunStats>,
+    pub violations: Vec<String>,
+}
+
+/// Uniform demo lanes (gold 9/9, standard 7/7, economy 5/5, no shed) —
+/// the no-fault reference runs use the same set, so logits compare
+/// bit-for-bit.
+fn lanes() -> LaneSet {
+    LaneSet::from_steps(
+        LaneStep::uniform(9, 9),
+        LaneStep::uniform(7, 7),
+        LaneStep::uniform(5, 5),
+        None,
+    )
+}
+
+/// Deterministic serving config: batch size 1 with zero linger (fault
+/// batch counters map 1:1 onto requests), shedding off (no pressure
+/// downgrades, no idle-steal), telemetry probing off.
+fn config(workers: WorkerMode, faults: Option<Arc<FaultInjector>>) -> QosConfig {
+    QosConfig {
+        policy: BatchPolicy { max_batch: 1, linger: Duration::ZERO },
+        shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+        monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+        workers,
+        faults,
+        ..QosConfig::default()
+    }
+}
+
+fn blank_stats(name: &str, tenant: &str, workers: WorkerMode) -> RunStats {
+    RunStats {
+        name: name.to_string(),
+        tenant: tenant.to_string(),
+        mode: workers.name(),
+        sent: 0,
+        ok: 0,
+        errors: 0,
+        timeouts: 0,
+        retries: 0,
+        downgraded: 0,
+        quota_downgraded: 0,
+        deadline_missed: 0,
+        latency_us: LogHistogram::default(),
+        wall: Duration::ZERO,
+    }
+}
+
+/// Serve `n` requests of `class` through a no-fault fabric and return
+/// the logits — the bit-exactness baseline the faulted runs must match.
+fn reference_logits(
+    model: &Model,
+    pool: &[Tensor],
+    class: QosClass,
+    n: usize,
+    workers: WorkerMode,
+) -> Result<Vec<Tensor>> {
+    let mut server = QosServer::start(model.clone(), &lanes(), config(workers, None));
+    let logits = (0..n)
+        .map(|i| Ok(server.infer(class, pool[i % pool.len()].clone())?.logits))
+        .collect::<Result<Vec<Tensor>>>();
+    server.shutdown();
+    logits
+}
+
+/// `panic:economy:3:2`: the economy executor dies on its 3rd and 4th
+/// batches. Asserts typed failure of exactly those two requests, full
+/// recovery within the restart budget, and gold bit-exactness against
+/// the no-fault run.
+fn kill_lane(
+    model: &Model,
+    pool: &[Tensor],
+    workers: WorkerMode,
+    seed: u64,
+) -> Result<(RunStats, Vec<String>)> {
+    let mut v: Vec<String> = Vec::new();
+    let gold_ref = reference_logits(model, pool, QosClass::Gold, REQUESTS, workers)?;
+
+    let faults = Arc::new(FaultInjector::parse("panic:economy:3:2", seed)?);
+    let mut server = QosServer::start(model.clone(), &lanes(), config(workers, Some(faults)));
+    let mut stats = blank_stats("kill-lane", "chaos", workers);
+    let mut failed: Vec<(QosClass, usize, QosErrorKind)> = Vec::new();
+    let t0 = Instant::now();
+    for i in 0..REQUESTS {
+        for class in QosClass::ALL {
+            stats.sent += 1;
+            let sent = Instant::now();
+            let outcome = server
+                .submit(class, pool[i % pool.len()].clone())
+                .context("the fabric must accept submits across injected panics")?
+                .recv();
+            match outcome {
+                Ok(Ok(resp)) => {
+                    stats.ok += 1;
+                    stats.latency_us.record(sent.elapsed().as_micros() as u64);
+                    if resp.downgraded {
+                        stats.downgraded += 1;
+                    }
+                    if class == QosClass::Gold && resp.logits.data != gold_ref[i].data {
+                        v.push(format!(
+                            "kill-lane: gold request {i} logits diverge from the no-fault run"
+                        ));
+                    }
+                }
+                Ok(Err(e)) => {
+                    stats.errors += 1;
+                    failed.push((class, i, e.kind));
+                }
+                Err(_) => {
+                    stats.errors += 1;
+                    v.push(format!(
+                        "kill-lane: {} request {i} was silently dropped (channel died)",
+                        class.name()
+                    ));
+                }
+            }
+        }
+    }
+    stats.wall = t0.elapsed();
+    let report = server.shutdown();
+
+    let expected = vec![
+        (QosClass::Economy, 2, QosErrorKind::ExecutorPanic),
+        (QosClass::Economy, 3, QosErrorKind::ExecutorPanic),
+    ];
+    if failed != expected {
+        v.push(format!(
+            "kill-lane: expected exactly economy requests 2 and 3 (0-based) to fail with \
+             executor-panic, got {failed:?}"
+        ));
+    }
+    if report.metrics.lane_restarts != 2 {
+        v.push(format!(
+            "kill-lane: expected 2 supervisor restarts, report shows {}",
+            report.metrics.lane_restarts
+        ));
+    }
+    if report.metrics.lanes_retired != 0 {
+        v.push(format!(
+            "kill-lane: no lane should exhaust its restart budget, {} retired",
+            report.metrics.lanes_retired
+        ));
+    }
+    if report.worker_panic {
+        v.push("kill-lane: the serving fabric died instead of supervising the panic".into());
+    }
+    let econ_failures = report.metrics.class("economy").map_or(0, |c| c.failures);
+    if econ_failures != 2 {
+        v.push(format!("kill-lane: report charges economy {econ_failures} failures, expected 2"));
+    }
+    if stats.ok + stats.errors != stats.sent {
+        v.push("kill-lane: some requests never resolved".into());
+    }
+    Ok((stats, v))
+}
+
+/// `delay:economy:25:1`: every economy batch eats a 25 ms spike. All
+/// requests must still serve with no restarts; with per-lane executors
+/// the spike must stay contained in its lane (gold p50 < economy p50 —
+/// the single-worker reference scheduler shares one thread, so the
+/// containment SLO only applies per-lane).
+fn slow_lane(
+    model: &Model,
+    pool: &[Tensor],
+    workers: WorkerMode,
+    seed: u64,
+) -> Result<(Vec<RunStats>, Vec<String>)> {
+    let mut v: Vec<String> = Vec::new();
+    let faults = Arc::new(FaultInjector::parse("delay:economy:25:1", seed)?);
+    let mut server = QosServer::start(model.clone(), &lanes(), config(workers, Some(faults)));
+    let mut stats: Vec<RunStats> =
+        QosClass::ALL.iter().map(|c| blank_stats("slow-lane", c.name(), workers)).collect();
+    // per-class receiver lists: draining gold's (fast) responses first
+    // keeps its recv-side latency honest — a cross-class drain order
+    // would charge economy's 25 ms spikes to gold's measurements
+    let mut pending: Vec<Vec<(Instant, Receiver<QosResult>)>> =
+        QosClass::ALL.iter().map(|_| Vec::new()).collect();
+    let t0 = Instant::now();
+    for i in 0..REQUESTS {
+        for (k, class) in QosClass::ALL.into_iter().enumerate() {
+            stats[k].sent += 1;
+            let rx = server.submit(class, pool[i % pool.len()].clone())?;
+            pending[k].push((Instant::now(), rx));
+        }
+    }
+    for (k, class_pending) in pending.into_iter().enumerate() {
+        for (sent, rx) in class_pending {
+            match rx.recv() {
+                Ok(Ok(_)) => {
+                    stats[k].ok += 1;
+                    stats[k].latency_us.record(sent.elapsed().as_micros() as u64);
+                }
+                Ok(Err(e)) => {
+                    stats[k].errors += 1;
+                    v.push(format!("slow-lane: request failed under a pure latency fault: {e}"));
+                }
+                Err(_) => {
+                    stats[k].errors += 1;
+                    v.push("slow-lane: a request was silently dropped (channel died)".into());
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    for s in &mut stats {
+        s.wall = wall;
+    }
+    let report = server.shutdown();
+    if report.metrics.lane_restarts != 0 || report.metrics.lanes_retired != 0 {
+        v.push("slow-lane: latency spikes must not trigger restarts or retirement".into());
+    }
+    if matches!(workers, WorkerMode::PerLane { .. }) {
+        let (gold, econ) = (stats[0].latency_p(50.0), stats[2].latency_p(50.0));
+        if gold >= econ {
+            v.push(format!(
+                "slow-lane: economy's 25 ms spikes leaked into gold (gold p50 {gold:.2} ms >= \
+                 economy p50 {econ:.2} ms)"
+            ));
+        }
+    }
+    Ok((stats, v))
+}
+
+/// `reset:conn:1,truncate:conn:2`: the first two TCP connections are
+/// sabotaged. The retrying client must recover with exactly two
+/// reconnects, serve every request bit-identically to an in-process
+/// reference, and the health frame must then report every lane live.
+fn flaky_net(
+    model: &Model,
+    pool: &[Tensor],
+    workers: WorkerMode,
+    seed: u64,
+) -> Result<(RunStats, Vec<String>)> {
+    let mut v: Vec<String> = Vec::new();
+    let reference = reference_logits(model, pool, QosClass::Standard, FLAKY_REQUESTS, workers)?;
+
+    let qos = QosServer::start(model.clone(), &lanes(), config(workers, None));
+    let faults = Arc::new(FaultInjector::parse("reset:conn:1,truncate:conn:2", seed)?);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").context("binding loopback")?;
+    let net_config =
+        NetServerConfig { max_conns: 16, quota: QuotaConfig::default(), faults: Some(faults) };
+    let server = NetServer::start(listener, qos, net_config)?;
+
+    let policy =
+        RetryPolicy { attempts: 4, base: Duration::from_millis(5), cap: Duration::from_millis(40) };
+    let mut client = RetryingClient::new(server.addr().to_string(), policy, seed);
+    client.set_read_timeout(Some(Duration::from_secs(10)));
+    let mut stats = blank_stats("flaky-net", "chaos", workers);
+    let t0 = Instant::now();
+    for (i, want) in reference.iter().enumerate() {
+        stats.sent += 1;
+        let sent = Instant::now();
+        match client.infer("chaos", QosClass::Standard, pool[i % pool.len()].clone()) {
+            Ok(resp) => {
+                stats.ok += 1;
+                stats.latency_us.record(sent.elapsed().as_micros() as u64);
+                if resp.logits.data != want.data {
+                    v.push(format!(
+                        "flaky-net: request {i} logits diverge from the in-process reference"
+                    ));
+                }
+            }
+            Err(e) => {
+                stats.errors += 1;
+                v.push(format!("flaky-net: request {i} failed despite retries: {e:#}"));
+            }
+        }
+    }
+    stats.wall = t0.elapsed();
+    stats.retries = client.retries;
+    match client.health() {
+        Ok(h) => {
+            if h.lanes.len() != 3 || h.lanes.iter().any(|l| l.retired) {
+                v.push(format!("flaky-net: health frame reports trouble: {:?}", h.lanes));
+            }
+        }
+        Err(e) => v.push(format!("flaky-net: health frame failed: {e:#}")),
+    }
+    let report = server.shutdown_with_drain(Duration::from_millis(250));
+    if client.retries != 2 {
+        v.push(format!(
+            "flaky-net: expected exactly 2 reconnects (reset + truncate), client performed {}",
+            client.retries
+        ));
+    }
+    if report.metrics.lane_restarts != 0 {
+        v.push("flaky-net: connection faults must never restart a lane executor".into());
+    }
+    Ok((stats, v))
+}
+
+/// Run the named scenario (`kill-lane`, `slow-lane`, `flaky-net`, or
+/// `all`) against `model`, driving requests from `pool`. Returns the
+/// loadgen-shaped stats plus every SLO violation.
+pub fn run_scenarios(
+    model: &Model,
+    pool: &[Tensor],
+    which: &str,
+    workers: WorkerMode,
+    seed: u64,
+) -> Result<ChaosOutcome> {
+    anyhow::ensure!(!pool.is_empty(), "chaos scenarios need at least one image");
+    let all = which == "all";
+    let mut out = ChaosOutcome { stats: Vec::new(), violations: Vec::new() };
+    let mut matched = false;
+    if all || which == "kill-lane" {
+        matched = true;
+        let (s, v) = kill_lane(model, pool, workers, seed)?;
+        out.stats.push(s);
+        out.violations.extend(v);
+    }
+    if all || which == "slow-lane" {
+        matched = true;
+        let (s, v) = slow_lane(model, pool, workers, seed)?;
+        out.stats.extend(s);
+        out.violations.extend(v);
+    }
+    if all || which == "flaky-net" {
+        matched = true;
+        let (s, v) = flaky_net(model, pool, workers, seed)?;
+        out.stats.push(s);
+        out.violations.extend(v);
+    }
+    anyhow::ensure!(
+        matched,
+        "unknown chaos scenario `{which}` (kill-lane|slow-lane|flaky-net|all)"
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Block;
+
+    fn tiny_model() -> Model {
+        let mut rng = crate::data::Rng::new(11);
+        Model {
+            name: "tiny".into(),
+            graph: Block::seq(vec![
+                Block::Conv(crate::models::init::conv2d("c1", 4, 2, 3, 3, 1, 1, &mut rng)),
+                Block::ReLU,
+                Block::Conv(crate::models::init::conv2d("c2", 3, 4, 3, 3, 1, 1, &mut rng)),
+                Block::Flatten,
+            ]),
+            input_shape: vec![2, 8, 8],
+            num_classes: 0,
+        }
+    }
+
+    fn pool() -> Vec<Tensor> {
+        let mut rng = crate::data::Rng::new(5);
+        (0..4).map(|_| Tensor::from_vec(rng.normal_vec(2 * 8 * 8, 1.0), &[2, 8, 8])).collect()
+    }
+
+    #[test]
+    fn kill_lane_recovers_on_both_worker_modes() {
+        for workers in [WorkerMode::Single, WorkerMode::PerLane { steal: true }] {
+            let out =
+                run_scenarios(&tiny_model(), &pool(), "kill-lane", workers, 7).expect("runs");
+            assert!(
+                out.violations.is_empty(),
+                "kill-lane SLO violations under {}: {:?}",
+                workers.name(),
+                out.violations
+            );
+            assert_eq!(out.stats.len(), 1);
+            assert_eq!(out.stats[0].sent, 24);
+            assert_eq!(out.stats[0].ok, 22);
+            assert_eq!(out.stats[0].errors, 2);
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_is_rejected() {
+        let err = run_scenarios(&tiny_model(), &pool(), "meteor-strike", WorkerMode::Single, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown chaos scenario"));
+    }
+}

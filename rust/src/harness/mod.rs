@@ -3,6 +3,7 @@
 
 pub mod autotune_report;
 pub mod benchkit;
+pub mod chaos;
 pub mod fig3;
 pub mod net_report;
 pub mod qos_report;

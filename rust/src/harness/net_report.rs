@@ -12,8 +12,8 @@ pub fn scenario_table(rows: &[RunStats]) -> Table {
     let mut t = Table::new(
         "loadgen scenarios (latency from intended send, ms)",
         &[
-            "scenario", "tenant", "mode", "sent", "ok", "errors", "quota-dg", "dg", "ddl-miss",
-            "p50", "p99", "max", "rps",
+            "scenario", "tenant", "mode", "sent", "ok", "errors", "timeouts", "retries",
+            "quota-dg", "dg", "ddl-miss", "p50", "p99", "max", "rps",
         ],
     );
     for r in rows {
@@ -24,6 +24,8 @@ pub fn scenario_table(rows: &[RunStats]) -> Table {
             r.sent.to_string(),
             r.ok.to_string(),
             r.errors.to_string(),
+            r.timeouts.to_string(),
+            r.retries.to_string(),
             r.quota_downgraded.to_string(),
             r.downgraded.to_string(),
             r.deadline_missed.to_string(),
@@ -45,7 +47,8 @@ pub fn print(rows: &[RunStats]) {
 fn json_entry(r: &RunStats) -> String {
     format!(
         "{{\"scenario\":\"{}\",\"tenant\":\"{}\",\"mode\":\"{}\",\"sent\":{},\"ok\":{},\
-         \"errors\":{},\"quota_downgraded\":{},\"downgraded\":{},\"deadline_missed\":{},\
+         \"errors\":{},\"timeouts\":{},\"retries\":{},\"quota_downgraded\":{},\
+         \"downgraded\":{},\"deadline_missed\":{},\
          \"p50_ms\":{:.3},\"p99_ms\":{:.3},\"max_ms\":{:.3},\"rps\":{:.2},\"wall_s\":{:.3}}}",
         json_escape(&r.name),
         json_escape(&r.tenant),
@@ -53,6 +56,8 @@ fn json_entry(r: &RunStats) -> String {
         r.sent,
         r.ok,
         r.errors,
+        r.timeouts,
+        r.retries,
         r.quota_downgraded,
         r.downgraded,
         r.deadline_missed,
@@ -98,6 +103,8 @@ mod tests {
             sent: 3,
             ok: 2,
             errors: 1,
+            timeouts: 2,
+            retries: 1,
             downgraded: 1,
             quota_downgraded: 1,
             deadline_missed: 0,
@@ -126,6 +133,8 @@ mod tests {
         assert!(body.contains("\"suite\": \"scenarios_t1_single\""));
         assert!(body.contains("\\\"lazy\\\""), "tenant names must be escaped: {body}");
         assert!(body.contains("\"sent\":3"));
+        assert!(body.contains("\"timeouts\":2"));
+        assert!(body.contains("\"retries\":1"));
         assert!(body.contains("\"rps\":1.00"));
         assert!(body.trim_end().ends_with('}'));
     }

@@ -9,7 +9,7 @@ use crate::coordinator::qos::QosReport;
 pub fn class_table(report: &QosReport) -> Table {
     let header = [
         "class", "requests", "p50 ms", "p99 ms", "queue p50 ms", "downgrades", "downgrade %",
-        "deadline misses",
+        "deadline misses", "timeouts", "failures",
     ];
     let mut t = Table::new("QoS per-class serving metrics", &header);
     for c in report.metrics.classes() {
@@ -22,6 +22,8 @@ pub fn class_table(report: &QosReport) -> Table {
             c.downgrades.to_string(),
             format!("{:.1}", 100.0 * c.downgrade_rate()),
             c.deadline_misses.to_string(),
+            c.timeouts.to_string(),
+            c.failures.to_string(),
         ]);
     }
     t
@@ -34,7 +36,7 @@ pub fn lane_table(report: &QosReport) -> Table {
         "QoS lane telemetry (measured vs predicted NSR)",
         &[
             "lane", "plan", "predicted dB", "measured dB", "probes", "batches", "swaps",
-            "promotes", "ladder",
+            "promotes", "ladder", "restarts", "state",
         ],
     );
     for l in &report.lanes {
@@ -48,6 +50,8 @@ pub fn lane_table(report: &QosReport) -> Table {
             l.swaps.to_string(),
             l.promotions.to_string(),
             format!("{}/{}", l.ladder_pos + 1, l.ladder_len),
+            l.restarts.to_string(),
+            if l.retired { "retired" } else { "live" }.to_string(),
         ]);
     }
     t
@@ -75,6 +79,12 @@ pub fn tenant_table(report: &QosReport) -> Table {
 pub fn print(report: &QosReport) {
     if report.worker_panic {
         println!("WARNING: serving worker panicked — this report is partial");
+    }
+    if report.metrics.lanes_retired > 0 {
+        println!(
+            "WARNING: {} lane(s) retired after exhausting their restart budget",
+            report.metrics.lanes_retired
+        );
     }
     println!("{}", report.metrics.summary());
     println!();
@@ -113,6 +123,8 @@ mod tests {
                 promotions: 2,
                 ladder_pos: 1,
                 ladder_len: 4,
+                restarts: 3,
+                retired: false,
             }],
             worker_panic: false,
         }
@@ -130,6 +142,8 @@ mod tests {
         assert!(lt.contains("24.5"));
         assert!(lt.contains("2/4"));
         assert!(lt.contains("promotes"), "promotion column present: {lt}");
+        assert!(lt.contains("restarts"), "restart column present: {lt}");
+        assert!(lt.contains("live"), "lane state column present: {lt}");
     }
 
     #[test]

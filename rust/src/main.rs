@@ -17,6 +17,10 @@
 //!                [--workers single|per-lane|per-lane-nosteal]
 //! bfp-cnn serve  --qos --listen 127.0.0.1:0 [--serve-secs 0] [--max-conns 256]
 //!                [--quota-rps 0] [--quota-burst 32] [--quota-debt 64]
+//!                [--reap-grace-ms 0] [--drain-ms 0]
+//!                [--faults panic:economy:3:2,reset:conn:1] [--faults-seed 0]
+//! bfp-cnn chaos  [--model lenet] [--scenario kill-lane|slow-lane|flaky-net|all]
+//!                [--workers <mode>] [--seed 1] [--json CHAOS_all.json]
 //! bfp-cnn loadgen [--model lenet] [--requests 96] [--mix 1:3:8] [--lanes 4]
 //!                 [--pressure 16] [--calib 3] [--batch 8] [--workers <mode>]
 //! bfp-cnn loadgen --connect <addr> [--arrivals poisson:200|burst:150:4|diurnal:120]
@@ -55,6 +59,15 @@
 //! autotunes a lane set off the Pareto frontier, then drives a
 //! mixed-class workload through the router and prints the per-class /
 //! per-lane QoS report.
+//!
+//! Resilience: `--reap-grace-ms` arms the deadline reaper (requests
+//! still queued that long past their deadline fail with a typed
+//! `Timeout`), `--drain-ms` turns the timed shutdown into a graceful
+//! drain, and `--faults` arms the deterministic fault injector
+//! (`runtime::faults` grammar; also via `BFP_FAULTS`/`BFP_FAULTS_SEED`).
+//! `chaos` runs the seeded fault scenarios from `harness::chaos` —
+//! kill-lane / slow-lane / flaky-net — asserts their recovery SLOs, and
+//! exits non-zero on any violation (CI's chaos smoke job).
 
 use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
 use bfp_cnn::coordinator::server::{Backend, InferenceServer, PreparedBackend, RustBackend, ServerConfig};
@@ -306,6 +319,15 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "chaos" => {
+            let id = model_by_name(&args.get_str("model", "lenet")).expect("unknown model");
+            let which = args.get_str("scenario", "all");
+            let workers = parse_workers(&args);
+            if let Err(e) = chaos_cmd(id, size, seed, &artifacts, &which, workers, &args) {
+                eprintln!("chaos failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
         "e2e" => {
             let requests: usize = args.get("requests", 64);
             if let Err(e) = e2e(&artifacts, requests, args.get("batch", 8)) {
@@ -332,7 +354,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: bfp-cnn <table1|table2|table3|table4|fig3|autotune|serve|loadgen|e2e|all> [--flags]"
+                "usage: bfp-cnn <table1|table2|table3|table4|fig3|autotune|serve|loadgen|chaos|e2e|all> [--flags]"
             );
             eprintln!("see rust/src/main.rs docs for flags");
             std::process::exit(2);
@@ -534,26 +556,78 @@ fn qos_serve_demo(
         .collect();
     let mut failures = 0usize;
     for rx in pending {
+        // every accepted submit resolves: a served response, or a typed
+        // failure (timeout / executor panic / retired lane / drain)
         match rx {
-            Ok(rx) => {
-                if rx.recv().is_err() {
-                    failures += 1;
-                }
-            }
+            Ok(rx) => match rx.recv() {
+                Ok(Ok(_)) => {}
+                _ => failures += 1,
+            },
             Err(_) => failures += 1,
         }
     }
     if failures > 0 {
-        eprintln!("{failures} request(s) failed (serving worker died); report is partial");
+        eprintln!("{failures} request(s) failed with typed errors; the report accounts for them");
     }
     let report = server.shutdown();
     bfp_cnn::harness::qos_report::print(&report);
 }
 
+/// The `chaos` subcommand: run the deterministic fault scenarios
+/// (`harness::chaos`), print the loadgen-shaped stats, optionally
+/// mirror them to a `CHAOS_*.json` artifact, and exit non-zero if any
+/// recovery SLO was violated.
+fn chaos_cmd(
+    id: ModelId,
+    size: usize,
+    seed: u64,
+    artifacts: &Path,
+    which: &str,
+    workers: bfp_cnn::coordinator::WorkerMode,
+    args: &Args,
+) -> anyhow::Result<()> {
+    use bfp_cnn::harness::{chaos, net_report};
+
+    let model = id.build(size, seed, artifacts);
+    let pool = gen_images(id, &model.input_shape, 8, seed);
+    println!("chaos `{which}` on {} (workers {}, seed {seed}) ...", id.name(), workers.name());
+    let out = chaos::run_scenarios(&model, &pool, which, workers, seed)?;
+    net_report::print(&out.stats);
+    if let Some(path) = args.flags.get("json").map(PathBuf::from) {
+        let tag = format!("chaos_{}_{}", which, workers.name());
+        net_report::write_json(&path, &tag, &out.stats)?;
+        println!("wrote {}", path.display());
+    }
+    if out.violations.is_empty() {
+        println!("chaos `{which}`: every recovery SLO held");
+        return Ok(());
+    }
+    for v in &out.violations {
+        eprintln!("SLO VIOLATION: {v}");
+    }
+    anyhow::bail!("{} recovery SLO violation(s)", out.violations.len());
+}
+
+/// Parse `--faults`/`--faults-seed` into an armed injector; `None`
+/// falls through to the `BFP_FAULTS` environment arming in the config
+/// defaults.
+fn parse_faults(args: &Args) -> Option<std::sync::Arc<bfp_cnn::runtime::FaultInjector>> {
+    let spec = args.flags.get("faults")?;
+    match bfp_cnn::runtime::FaultInjector::parse(spec, args.get("faults-seed", 0u64)) {
+        Ok(inj) => Some(std::sync::Arc::new(inj)),
+        Err(e) => {
+            eprintln!("invalid --faults `{spec}`: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// `serve --qos --listen`: put the TCP front over the router and block.
 /// With `--serve-secs 0` (the default) the process serves until killed;
 /// otherwise it shuts down after the window and prints the QoS report
-/// (tenant quota accounting included).
+/// (tenant quota accounting included). `--drain-ms` makes that timed
+/// stop graceful: submits are refused, queued work gets the bound to
+/// finish, and every accepted request still resolves as a frame.
 #[allow(clippy::too_many_arguments)]
 fn serve_net(
     id: ModelId,
@@ -573,7 +647,8 @@ fn serve_net(
     use std::io::Write as _;
 
     let model = id.build(size, seed, artifacts);
-    let config = QosConfig {
+    let faults = parse_faults(args);
+    let mut config = QosConfig {
         policy: bfp_cnn::coordinator::batcher::BatchPolicy {
             max_batch: batch,
             linger: std::time::Duration::from_millis(2),
@@ -582,15 +657,26 @@ fn serve_net(
         workers,
         ..QosConfig::default()
     };
+    let reap_grace_ms: u64 = args.get("reap-grace-ms", 0);
+    if reap_grace_ms > 0 {
+        config.reap_grace = Some(std::time::Duration::from_millis(reap_grace_ms));
+    }
+    if faults.is_some() {
+        config.faults = faults.clone();
+    }
     let qos = QosServer::start(model, &set, config);
-    let net_config = NetServerConfig {
+    let mut net_config = NetServerConfig {
         max_conns: args.get("max-conns", 256),
         quota: QuotaConfig {
             rate_per_s: args.get("quota-rps", 0.0),
             burst: args.get("quota-burst", 32.0),
             reject_debt: args.get("quota-debt", 64.0),
         },
+        ..NetServerConfig::default()
     };
+    if faults.is_some() {
+        net_config.faults = faults;
+    }
     let listener =
         std::net::TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
     let server = NetServer::start(listener, qos, net_config)?;
@@ -605,7 +691,12 @@ fn serve_net(
         }
     }
     std::thread::sleep(std::time::Duration::from_secs(serve_secs));
-    let report = server.shutdown();
+    let drain_ms: u64 = args.get("drain-ms", 0);
+    let report = if drain_ms > 0 {
+        server.shutdown_with_drain(std::time::Duration::from_millis(drain_ms))
+    } else {
+        server.shutdown()
+    };
     bfp_cnn::harness::qos_report::print(&report);
     Ok(())
 }

@@ -5,9 +5,13 @@
 //! `read_reply` as responses stream back out of order). The load
 //! generator splits the client into independently-owned sender and
 //! receiver halves so intended-send pacing and reply draining can run
-//! on separate threads over one connection.
+//! on separate threads over one connection. [`RetryingClient`] wraps the
+//! one-shot shape with reconnect + jittered exponential backoff for
+//! reset sockets and `ServerGone` refusals — safe because a request is
+//! only ever retried on a *fresh* connection, so a reply can never be
+//! double-matched.
 
-use super::proto::{self, Msg, NetRequest, NetResponse, Reply};
+use super::proto::{self, ErrorCode, Msg, NetHealth, NetRequest, NetResponse, Reply};
 use crate::coordinator::qos::QosClass;
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
@@ -81,6 +85,20 @@ impl NetClient {
         }
     }
 
+    /// Probe the server's lane health. Only valid with no in-flight
+    /// requests on this connection — a pending response frame would be
+    /// misread as the health answer.
+    pub fn health(&mut self) -> Result<NetHealth> {
+        proto::write_frame(&mut self.writer, &proto::encode_health_req())?;
+        let Some(payload) = proto::read_frame(&mut self.reader)? else {
+            bail!("server closed the connection before answering the health probe");
+        };
+        match proto::decode(&payload)? {
+            Msg::Health(h) => Ok(h),
+            other => bail!("expected a health frame, got {other:?}"),
+        }
+    }
+
     /// Split into independently-owned halves so a paced sender thread
     /// and a draining receiver thread can share the connection.
     pub fn split(self) -> (NetSender, NetReceiver) {
@@ -150,6 +168,161 @@ fn read_reply_frame(reader: &mut BufReader<TcpStream>) -> Result<Reply> {
     match proto::decode(&payload)? {
         Msg::Response(resp) => Ok(Reply::Response(resp)),
         Msg::Error(err) => Ok(Reply::Error(err)),
-        Msg::Request(_) => bail!("server sent a request frame to a client"),
+        other => bail!("unexpected frame from the server: {other:?}"),
+    }
+}
+
+// ---- retrying client -------------------------------------------------
+
+/// Reconnect/backoff policy for [`RetryingClient`].
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts per request (first try included).
+    pub attempts: u32,
+    /// Backoff before the first retry; doubles per retry (jittered).
+    pub base: Duration,
+    /// Backoff ceiling.
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { attempts: 4, base: Duration::from_millis(20), cap: Duration::from_millis(500) }
+    }
+}
+
+/// How one [`RetryingClient`] attempt ended: served, refused for good,
+/// or lost to a transport fault / draining server (worth a retry).
+enum Attempt {
+    Served(NetResponse),
+    Final(anyhow::Error),
+    Lost(anyhow::Error),
+}
+
+/// A one-shot client that survives reset sockets and server restarts:
+/// on a transport error or a `ServerGone` refusal it drops the
+/// connection, sleeps a jittered exponential backoff, reconnects, and
+/// resends. Requests are only retried on a fresh connection (one
+/// request in flight at a time), so stale replies cannot be matched to
+/// a retried request. Typed refusals other than `ServerGone` are the
+/// server's final word and are not retried.
+pub struct RetryingClient {
+    addr: String,
+    policy: RetryPolicy,
+    read_timeout: Option<Duration>,
+    inner: Option<NetClient>,
+    /// xorshift64 state for backoff jitter (seeded, deterministic).
+    rng: u64,
+    /// Reconnect-and-resend cycles performed over this client's life.
+    pub retries: u64,
+}
+
+impl RetryingClient {
+    /// Lazily-connecting client; `seed` fixes the jitter sequence.
+    pub fn new(addr: impl Into<String>, policy: RetryPolicy, seed: u64) -> Self {
+        Self {
+            addr: addr.into(),
+            policy,
+            read_timeout: None,
+            inner: None,
+            rng: seed | 1,
+            retries: 0,
+        }
+    }
+
+    /// Bound every read on current and future connections.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) {
+        self.read_timeout = timeout;
+        if let Some(c) = &self.inner {
+            let _ = c.set_read_timeout(timeout);
+        }
+    }
+
+    fn next_jitter(&mut self, bound: u64) -> u64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x % bound
+    }
+
+    fn connect(&mut self) -> Result<&mut NetClient> {
+        if self.inner.is_none() {
+            let client = NetClient::connect(&self.addr)?;
+            client.set_read_timeout(self.read_timeout)?;
+            self.inner = Some(client);
+        }
+        Ok(self.inner.as_mut().expect("just connected"))
+    }
+
+    /// One attempt over the current (or a fresh) connection.
+    fn try_once(&mut self, tenant: &str, class: QosClass, image: &Tensor) -> Attempt {
+        let client = match self.connect() {
+            Ok(c) => c,
+            Err(e) => return Attempt::Lost(e),
+        };
+        let id = match client.send(tenant, class, None, image.clone()) {
+            Ok(id) => id,
+            Err(e) => return Attempt::Lost(e.into()),
+        };
+        match client.read_reply() {
+            Ok(Reply::Response(resp)) if resp.id == id => Attempt::Served(resp),
+            Ok(Reply::Response(resp)) => Attempt::Lost(anyhow::anyhow!(
+                "reply id {} does not match the lone in-flight request {id}",
+                resp.id
+            )),
+            // the fabric behind this socket is going away — reconnect
+            Ok(Reply::Error(e)) if e.code == ErrorCode::ServerGone => {
+                Attempt::Lost(anyhow::anyhow!("server gone: {}", e.message))
+            }
+            // any other typed refusal is the server's final word
+            Ok(Reply::Error(e)) => Attempt::Final(anyhow::anyhow!(
+                "server refused request {}: {:?}: {}",
+                e.id,
+                e.code,
+                e.message
+            )),
+            Err(e) => Attempt::Lost(e),
+        }
+    }
+
+    /// One request → response, retried across reconnects. `Err` means
+    /// the attempts are exhausted or the server refused the request
+    /// with a final (non-`ServerGone`) error.
+    pub fn infer(&mut self, tenant: &str, class: QosClass, image: Tensor) -> Result<NetResponse> {
+        let mut backoff = self.policy.base.max(Duration::from_millis(1));
+        let mut last_err = None;
+        for attempt in 0..self.policy.attempts.max(1) {
+            if attempt > 0 {
+                self.retries += 1;
+                let half = (backoff.as_millis() as u64) / 2;
+                let jitter = self.next_jitter(half + 1);
+                std::thread::sleep(Duration::from_millis(half + jitter));
+                backoff = (backoff * 2).min(self.policy.cap);
+            }
+            match self.try_once(tenant, class, &image) {
+                Attempt::Served(resp) => return Ok(resp),
+                // the connection stays healthy after a typed refusal
+                Attempt::Final(e) => return Err(e),
+                Attempt::Lost(e) => {
+                    self.inner = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        let attempts = self.policy.attempts.max(1);
+        let e = last_err.expect("at least one attempt ran");
+        Err(e.context(format!("request still failing after {attempts} attempts")))
+    }
+
+    /// Probe lane health, reconnecting if needed (no retries — health is
+    /// advisory and the caller polls anyway).
+    pub fn health(&mut self) -> Result<NetHealth> {
+        let out = self.connect()?.health();
+        if out.is_err() {
+            self.inner = None;
+        }
+        out
     }
 }

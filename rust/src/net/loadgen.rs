@@ -13,7 +13,7 @@
 //! a real client population would experience it.
 
 use super::client::NetClient;
-use super::proto::Reply;
+use super::proto::{ErrorCode, Reply};
 use crate::coordinator::qos::QosClass;
 use crate::coordinator::LogHistogram;
 use crate::data::Rng;
@@ -140,8 +140,14 @@ pub struct RunStats {
     pub sent: u64,
     /// Served responses (including deadline-missed ones).
     pub ok: u64,
-    /// Error frames (quota rejections, bad requests, server gone).
+    /// Error frames (quota rejections, bad requests, server gone) plus
+    /// requests whose reply was lost to a dead connection — failed
+    /// requests never silently shrink the sample.
     pub errors: u64,
+    /// Typed `Timeout` refusals: requests reaped past their deadline.
+    pub timeouts: u64,
+    /// Reconnect-and-resend cycles (only a retrying driver records these).
+    pub retries: u64,
     pub downgraded: u64,
     pub quota_downgraded: u64,
     pub deadline_missed: u64,
@@ -159,6 +165,8 @@ impl RunStats {
             sent: 0,
             ok: 0,
             errors: 0,
+            timeouts: 0,
+            retries: 0,
             downgraded: 0,
             quota_downgraded: 0,
             deadline_missed: 0,
@@ -198,6 +206,7 @@ impl RunStats {
                     self.latency_us.record(l.as_micros() as u64);
                 }
             }
+            Reply::Error(e) if e.code == ErrorCode::Timeout => self.timeouts += 1,
             Reply::Error(_) => self.errors += 1,
         }
     }
@@ -233,7 +242,16 @@ pub fn run_open_loop(
         let mut stats = RunStats::new(&name_owned, &tenant_owned, "open-loop");
         let mut seen = 0usize;
         while seen < n {
-            let reply = receiver.read_reply().context("draining replies")?;
+            let reply = match receiver.read_reply() {
+                Ok(r) => r,
+                Err(_) => {
+                    // the connection died mid-drain: account every
+                    // outstanding request as an error instead of
+                    // failing the run and losing the sample
+                    stats.errors += (n - seen) as u64;
+                    break;
+                }
+            };
             let now = Instant::now();
             let latency = match &reply {
                 Reply::Response(r) if r.id >= 1 && (r.id as usize) <= n => {

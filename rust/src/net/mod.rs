@@ -21,7 +21,9 @@
 //! * [`quota`] — per-tenant token buckets in front of admission:
 //!   over-quota traffic degrades to the economy lane before it can
 //!   starve gold, and sustained abuse is shed with an error frame.
-//! * [`client`] — a reusable blocking client (loadgen, tests, demos).
+//! * [`client`] — a reusable blocking client (loadgen, tests, demos),
+//!   plus [`client::RetryingClient`]: reconnect + jittered exponential
+//!   backoff across reset sockets and draining servers.
 //! * [`loadgen`] — an open-loop arrival engine: Poisson/burst/diurnal
 //!   schedules are fixed *before* the run and latency is measured from
 //!   each request's intended send instant, so a backed-up server cannot
@@ -34,8 +36,8 @@ pub mod proto;
 pub mod quota;
 pub mod server;
 
-pub use client::NetClient;
+pub use client::{NetClient, RetryPolicy, RetryingClient};
 pub use loadgen::{ArrivalKind, RunStats};
-pub use proto::{NetError, NetRequest, NetResponse, Reply};
+pub use proto::{NetError, NetHealth, NetRequest, NetResponse, Reply};
 pub use quota::{Admission, QuotaConfig};
 pub use server::{NetServer, NetServerConfig};

@@ -31,6 +31,12 @@ const MAX_STR_BYTES: usize = 1024;
 const KIND_REQUEST: u8 = 1;
 const KIND_RESPONSE: u8 = 2;
 const KIND_ERROR: u8 = 3;
+const KIND_HEALTH_REQ: u8 = 4;
+const KIND_HEALTH: u8 = 5;
+
+/// Lanes a health frame may claim (a sanity cap, far above the four
+/// real lanes, so hostile frames cannot demand huge allocations).
+const MAX_HEALTH_LANES: usize = 64;
 
 /// Why a payload failed to decode.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -117,6 +123,11 @@ pub enum ErrorCode {
     BadRequest,
     /// The serving fabric is shutting down.
     ServerGone,
+    /// The request sat queued past `deadline + grace` and was reaped.
+    Timeout,
+    /// The serving lane failed the request (executor panic, retired
+    /// lane) — a server-side fault, not the client's.
+    Internal,
 }
 
 impl ErrorCode {
@@ -126,6 +137,8 @@ impl ErrorCode {
             ErrorCode::ConnLimit => 2,
             ErrorCode::BadRequest => 3,
             ErrorCode::ServerGone => 4,
+            ErrorCode::Timeout => 5,
+            ErrorCode::Internal => 6,
         }
     }
 
@@ -135,6 +148,8 @@ impl ErrorCode {
             2 => Some(ErrorCode::ConnLimit),
             3 => Some(ErrorCode::BadRequest),
             4 => Some(ErrorCode::ServerGone),
+            5 => Some(ErrorCode::Timeout),
+            6 => Some(ErrorCode::Internal),
             _ => None,
         }
     }
@@ -150,12 +165,32 @@ pub struct NetError {
     pub message: String,
 }
 
+/// One lane's liveness as carried by a health frame (mirrors
+/// [`crate::coordinator::LaneHealth`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneHealthWire {
+    pub label: String,
+    pub retired: bool,
+    pub restarts: u64,
+    pub queued: u64,
+}
+
+/// The server's answer to a health probe: per-lane liveness, restart
+/// counts and queue depths as of the scheduler's last pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetHealth {
+    pub lanes: Vec<LaneHealthWire>,
+}
+
 /// Any decoded payload.
 #[derive(Debug, Clone)]
 pub enum Msg {
     Request(NetRequest),
     Response(NetResponse),
     Error(NetError),
+    /// Client → server: report your lane health.
+    HealthReq,
+    Health(NetHealth),
 }
 
 /// What a client gets back for a request.
@@ -274,6 +309,27 @@ pub fn encode_error(err: &NetError) -> Vec<u8> {
     p.extend_from_slice(&err.id.to_le_bytes());
     p.push(err.code.code());
     put_str(&mut p, &err.message);
+    p
+}
+
+/// Encode a health probe (no fields beyond the kind).
+pub fn encode_health_req() -> Vec<u8> {
+    vec![PROTO_VERSION, KIND_HEALTH_REQ]
+}
+
+/// Encode a health report payload.
+pub fn encode_health(health: &NetHealth) -> Vec<u8> {
+    debug_assert!(health.lanes.len() <= MAX_HEALTH_LANES);
+    let mut p = Vec::with_capacity(8 + 32 * health.lanes.len());
+    p.push(PROTO_VERSION);
+    p.push(KIND_HEALTH);
+    p.extend_from_slice(&(health.lanes.len() as u16).to_le_bytes());
+    for lane in &health.lanes {
+        put_str(&mut p, &lane.label);
+        p.push(lane.retired as u8);
+        p.extend_from_slice(&lane.restarts.to_le_bytes());
+        p.extend_from_slice(&lane.queued.to_le_bytes());
+    }
     p
 }
 
@@ -400,6 +456,23 @@ pub fn decode(payload: &[u8]) -> Result<Msg, DecodeError> {
             let code_byte = c.u8()?;
             let code = ErrorCode::from_code(code_byte).ok_or(DecodeError::BadEnum(code_byte))?;
             Msg::Error(NetError { id, code, message: c.string()? })
+        }
+        KIND_HEALTH_REQ => Msg::HealthReq,
+        KIND_HEALTH => {
+            let n = c.u16()? as usize;
+            if n > MAX_HEALTH_LANES {
+                return Err(DecodeError::BadShape);
+            }
+            let mut lanes = Vec::with_capacity(n);
+            for _ in 0..n {
+                lanes.push(LaneHealthWire {
+                    label: c.string()?,
+                    retired: c.u8()? != 0,
+                    restarts: c.u64()?,
+                    queued: c.u64()?,
+                });
+            }
+            Msg::Health(NetHealth { lanes })
         }
         k => return Err(DecodeError::BadKind(k)),
     };
@@ -528,6 +601,37 @@ mod tests {
             );
         }
         assert!(decode(&full).is_ok());
+    }
+
+    /// Health frames round-trip, including the empty probe and the new
+    /// resilience error codes.
+    #[test]
+    fn health_and_resilience_codes_round_trip() {
+        match decode(&encode_health_req()).unwrap() {
+            Msg::HealthReq => {}
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+        let health = NetHealth {
+            lanes: vec![
+                LaneHealthWire { label: "gold".into(), retired: false, restarts: 0, queued: 3 },
+                LaneHealthWire { label: "economy".into(), retired: true, restarts: 4, queued: 0 },
+            ],
+        };
+        match decode(&encode_health(&health)).unwrap() {
+            Msg::Health(d) => assert_eq!(d, health),
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+        match decode(&encode_health(&NetHealth { lanes: Vec::new() })).unwrap() {
+            Msg::Health(d) => assert!(d.lanes.is_empty()),
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+        for code in [ErrorCode::Timeout, ErrorCode::Internal] {
+            let err = NetError { id: 9, code, message: "late".into() };
+            match decode(&encode_error(&err)).unwrap() {
+                Msg::Error(d) => assert_eq!(d.code, code),
+                other => panic!("decoded wrong kind: {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -11,12 +11,15 @@
 //! writing behind one mutex (error frames come from the reader path,
 //! responses from the writer path), keeping frames interleave-safe.
 
-use super::proto::{self, ErrorCode, Msg, NetError, NetRequest, NetResponse};
+use super::proto::{
+    self, ErrorCode, LaneHealthWire, Msg, NetError, NetHealth, NetRequest, NetResponse,
+};
 use super::quota::{Admission, QuotaConfig, TenantQuotas};
-use crate::coordinator::qos::{QosClass, QosReport, QosResponse, QosServer};
+use crate::coordinator::qos::{QosClass, QosErrorKind, QosReport, QosResult, QosServer};
 use crate::coordinator::Metrics;
+use crate::runtime::faults::{ConnFault, FaultInjector};
 use std::collections::HashMap;
-use std::io::{self, BufReader};
+use std::io::{self, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -25,18 +28,21 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Knobs for the TCP front.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct NetServerConfig {
     /// Connection-level admission: beyond this many live connections a
     /// new one is refused with a `ConnLimit` error frame and closed.
     pub max_conns: usize,
     /// Per-tenant token-bucket quota (default: unlimited).
     pub quota: QuotaConfig,
+    /// Connection-level fault injection (`reset:conn:*` /
+    /// `truncate:conn:*` specs); `None` costs nothing.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for NetServerConfig {
     fn default() -> Self {
-        Self { max_conns: 256, quota: QuotaConfig::default() }
+        Self { max_conns: 256, quota: QuotaConfig::default(), faults: FaultInjector::from_env() }
     }
 }
 
@@ -57,6 +63,9 @@ struct Shared {
 pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    /// Drain-style stop: half-close connections (read side) so queued
+    /// responses still flush, instead of hard-closing the sockets.
+    drain: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
     shared: Arc<Shared>,
 }
@@ -72,6 +81,7 @@ impl NetServer {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let drain = Arc::new(AtomicBool::new(false));
         let shared = Arc::new(Shared {
             metrics: qos.metrics_handle(),
             qos: Mutex::new(Some(qos)),
@@ -80,11 +90,12 @@ impl NetServer {
         let acceptor = {
             let shared = Arc::clone(&shared);
             let stop = Arc::clone(&stop);
+            let drain = Arc::clone(&drain);
             std::thread::Builder::new()
                 .name("net-acceptor".into())
-                .spawn(move || accept_loop(listener, shared, stop, config))?
+                .spawn(move || accept_loop(listener, shared, stop, drain, config))?
         };
-        Ok(Self { addr, stop, acceptor: Some(acceptor), shared })
+        Ok(Self { addr, stop, drain, acceptor: Some(acceptor), shared })
     }
 
     /// The bound address (resolves `--listen 127.0.0.1:0`).
@@ -108,6 +119,30 @@ impl NetServer {
             .expect("the net server owns the qos server until shutdown");
         qos.shutdown()
     }
+
+    /// Graceful stop: refuse new submits immediately, give requests
+    /// already queued up to `bound` to be served (anything still queued
+    /// after that fails with a typed `Draining` error), half-close the
+    /// connections so every pending reply still flushes, and return the
+    /// final report. No request this server accepted goes unanswered.
+    pub fn shutdown_with_drain(mut self, bound: Duration) -> QosReport {
+        if let Some(qos) = self.shared.qos.lock().unwrap().as_ref() {
+            qos.begin_drain(bound);
+        }
+        self.drain.store(true, Ordering::SeqCst);
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let qos = self
+            .shared
+            .qos
+            .lock()
+            .unwrap()
+            .take()
+            .expect("the net server owns the qos server until shutdown");
+        qos.shutdown()
+    }
 }
 
 /// Accept connections until the stop flag. Nonblocking accept + sleep
@@ -118,6 +153,7 @@ fn accept_loop(
     listener: TcpListener,
     shared: Arc<Shared>,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
     config: NetServerConfig,
 ) {
     let mut conns: Vec<(TcpStream, JoinHandle<()>)> = Vec::new();
@@ -130,12 +166,17 @@ fn accept_loop(
                     continue;
                 }
                 let _ = stream.set_nodelay(true);
+                let fault = config.faults.as_ref().map_or(ConnFault::None, |f| f.on_conn());
                 let handle = match stream.try_clone() {
                     Ok(keep) => {
                         let shared = Arc::clone(&shared);
-                        let spawned = std::thread::Builder::new()
-                            .name("net-conn".into())
-                            .spawn(move || serve_conn(stream, shared));
+                        let spawned =
+                            std::thread::Builder::new().name("net-conn".into()).spawn(move || {
+                                match fault {
+                                    ConnFault::None => serve_conn(stream, shared),
+                                    f => sabotage_conn(stream, f),
+                                }
+                            });
                         match spawned {
                             Ok(h) => Some((keep, h)),
                             Err(_) => None,
@@ -153,14 +194,37 @@ fn accept_loop(
             Err(_) => std::thread::sleep(Duration::from_millis(2)),
         }
     }
-    // shutdown: force-close the sockets so blocked readers wake, then
-    // join every connection thread (each joins its own writer)
+    // shutdown: close the sockets so blocked readers wake, then join
+    // every connection thread (each joins its own writer). A drain stop
+    // half-closes (read side only): readers see EOF and stop taking new
+    // work, while the write side stays open for every queued reply.
+    let how = if drain.load(Ordering::SeqCst) { Shutdown::Read } else { Shutdown::Both };
     for (s, _) in &conns {
-        let _ = s.shutdown(Shutdown::Both);
+        let _ = s.shutdown(how);
     }
     for (_, h) in conns {
         let _ = h.join();
     }
+}
+
+/// Deliberately break one connection (fault injection): wait for the
+/// client's first request so it is mid-round-trip, then either reset
+/// the socket outright or answer with a truncated frame — a length
+/// prefix promising more bytes than ever arrive — and close.
+fn sabotage_conn(stream: TcpStream, fault: ConnFault) {
+    let reader_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut frames = BufReader::new(reader_half);
+    let _ = proto::read_frame(&mut frames);
+    let mut w = stream;
+    if fault == ConnFault::Truncate {
+        let _ = w.write_all(&64u32.to_le_bytes());
+        let _ = w.write_all(&[proto::PROTO_VERSION, 2, 0]);
+        let _ = w.flush();
+    }
+    let _ = w.shutdown(Shutdown::Both);
 }
 
 /// Refuse an over-limit connection with an error frame, then close it.
@@ -191,7 +255,7 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
     };
     let write_half = Arc::new(Mutex::new(stream));
     let pending: Arc<Mutex<HashMap<u64, ReqCtx>>> = Arc::new(Mutex::new(HashMap::new()));
-    let (resp_tx, resp_rx) = channel::<QosResponse>();
+    let (resp_tx, resp_rx) = channel::<QosResult>();
 
     let writer = {
         let write_half = Arc::clone(&write_half);
@@ -200,21 +264,38 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
             // exits when every Sender clone is gone: the reader's handle
             // plus one per in-flight request — i.e. after the router has
             // answered everything this connection submitted
-            while let Ok(resp) = resp_rx.recv() {
-                let ctx = pending.lock().unwrap().remove(&resp.id);
-                let Some(ctx) = ctx else { continue };
-                let frame = proto::encode_response(&NetResponse {
-                    id: ctx.client_id,
-                    class: ctx.class,
-                    served_by: resp.served_by,
-                    lane_plan: resp.lane_plan,
-                    downgraded: resp.downgraded || ctx.quota_downgraded,
-                    quota_downgraded: ctx.quota_downgraded,
-                    deadline_missed: resp.deadline_missed,
-                    queue_wait_us: resp.queue_wait.as_micros() as u64,
-                    batch_size: resp.batch_size as u32,
-                    logits: resp.logits,
-                });
+            while let Ok(result) = resp_rx.recv() {
+                let frame = match result {
+                    Ok(resp) => {
+                        let ctx = pending.lock().unwrap().remove(&resp.id);
+                        let Some(ctx) = ctx else { continue };
+                        proto::encode_response(&NetResponse {
+                            id: ctx.client_id,
+                            class: ctx.class,
+                            served_by: resp.served_by,
+                            lane_plan: resp.lane_plan,
+                            downgraded: resp.downgraded || ctx.quota_downgraded,
+                            quota_downgraded: ctx.quota_downgraded,
+                            deadline_missed: resp.deadline_missed,
+                            queue_wait_us: resp.queue_wait.as_micros() as u64,
+                            batch_size: resp.batch_size as u32,
+                            logits: resp.logits,
+                        })
+                    }
+                    // typed per-request failures (reaped, executor
+                    // panic, retired lane, drain) become error frames
+                    Err(e) => {
+                        let ctx = pending.lock().unwrap().remove(&e.id);
+                        let Some(ctx) = ctx else { continue };
+                        let code = match e.kind {
+                            QosErrorKind::Timeout => ErrorCode::Timeout,
+                            QosErrorKind::Draining => ErrorCode::ServerGone,
+                            _ => ErrorCode::Internal,
+                        };
+                        let err = NetError { id: ctx.client_id, code, message: e.to_string() };
+                        proto::encode_error(&err)
+                    }
+                };
                 if write_frame_locked(&write_half, &frame).is_err() {
                     break; // client gone; in-flight responses are dropped
                 }
@@ -242,6 +323,29 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
             Ok(Msg::Request(req)) => {
                 handle_request(req, &shared, &write_half, &pending, &resp_tx);
             }
+            Ok(Msg::HealthReq) => {
+                let lanes = shared.qos.lock().unwrap().as_ref().map(|q| q.health());
+                match lanes {
+                    Some(lanes) => {
+                        let wire: Vec<LaneHealthWire> = lanes
+                            .into_iter()
+                            .map(|l| LaneHealthWire {
+                                label: l.label,
+                                retired: l.retired,
+                                restarts: l.restarts,
+                                queued: l.queued,
+                            })
+                            .collect();
+                        let frame = proto::encode_health(&NetHealth { lanes: wire });
+                        if write_frame_locked(&write_half, &frame).is_err() {
+                            break;
+                        }
+                    }
+                    None => {
+                        send_error(&write_half, 0, ErrorCode::ServerGone, "server is shutting down")
+                    }
+                }
+            }
             Ok(_) => {
                 // frame parsed but isn't a request; the stream is still
                 // in sync, so answer and keep serving
@@ -263,7 +367,7 @@ fn handle_request(
     shared: &Shared,
     write_half: &Arc<Mutex<TcpStream>>,
     pending: &Arc<Mutex<HashMap<u64, ReqCtx>>>,
-    resp_tx: &Sender<QosResponse>,
+    resp_tx: &Sender<QosResult>,
 ) {
     let admission = shared.quotas.admit(&req.tenant);
     shared.metrics.lock().unwrap().record_tenant(

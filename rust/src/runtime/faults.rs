@@ -1,0 +1,272 @@
+//! Deterministic fault injection for the serving fabric.
+//!
+//! The resilience layer (lane supervision, deadline reaper, retrying
+//! client) is only trustworthy if its failure paths run continuously —
+//! so this module provides a *deterministic*, seeded injector that the
+//! chaos scenario suite and CI arm through the environment or the CLI:
+//!
+//! * `panic:<lane>:<nth>[:<times>]` — panic the named lane's executor on
+//!   its `nth` batch (1-based), for `times` consecutive batches
+//!   (default 1). Batch counts survive respawns: the supervisor rebuilds
+//!   the lane, not the counter, so `panic:economy:3:2` kills exactly
+//!   batches 3 and 4 however often the lane restarts.
+//! * `delay:<lane>:<ms>:<every>` — sleep `ms` before every `every`-th
+//!   batch on the named lane (a slow-lane latency spike).
+//! * `reset:conn:<nth>` — hard-reset the `nth` accepted TCP connection
+//!   after its first request frame (the client sees a dead socket).
+//! * `truncate:conn:<nth>` — answer the `nth` accepted connection's
+//!   first request with a truncated frame (a length prefix promising
+//!   more bytes than arrive), then close.
+//!
+//! Specs combine comma-separated (`BFP_FAULTS=panic:economy:3,reset:conn:1`,
+//! seed from `BFP_FAULTS_SEED`). Everything keys off monotone per-lane
+//! batch counters and a per-process connection counter, so a scenario is
+//! reproducible run-to-run; the seed is carried for consumers that add
+//! randomness on top (the retrying client's jitter). When no spec is
+//! configured the injector is simply absent (`Option<Arc<FaultInjector>>`
+//! is `None`) and the hot path pays nothing.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One configured fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// Panic the lane's executor on batches `nth .. nth + times` (1-based).
+    PanicLane { lane: String, nth: u64, times: u64 },
+    /// Sleep `ms` before every `every`-th batch on the lane.
+    DelayLane { lane: String, ms: u64, every: u64 },
+    /// Hard-reset the `nth` accepted connection after its first request.
+    ResetConn { nth: u64 },
+    /// Send the `nth` accepted connection a truncated frame, then close.
+    TruncateConn { nth: u64 },
+}
+
+/// Parse one `kind:...` spec (grammar in the module docs).
+pub fn parse_spec(spec: &str) -> Result<FaultSpec> {
+    let fields: Vec<&str> = spec.split(':').collect();
+    let num = |i: usize, what: &str| -> Result<u64> {
+        fields
+            .get(i)
+            .with_context(|| format!("fault spec `{spec}` is missing its {what} field"))?
+            .parse::<u64>()
+            .with_context(|| format!("bad {what} in fault spec `{spec}`"))
+    };
+    let lane = |i: usize| -> Result<String> {
+        let l = *fields.get(i).with_context(|| format!("fault spec `{spec}` names no lane"))?;
+        if l.is_empty() {
+            bail!("fault spec `{spec}` names no lane");
+        }
+        Ok(l.to_string())
+    };
+    let parsed = match fields[0] {
+        "panic" => {
+            let times = if fields.len() > 3 { num(3, "times")? } else { 1 };
+            if fields.len() > 4 {
+                bail!("trailing fields in fault spec `{spec}`");
+            }
+            FaultSpec::PanicLane { lane: lane(1)?, nth: num(2, "nth-batch")?.max(1), times }
+        }
+        "delay" => {
+            if fields.len() > 4 {
+                bail!("trailing fields in fault spec `{spec}`");
+            }
+            let every = num(3, "every")?.max(1);
+            FaultSpec::DelayLane { lane: lane(1)?, ms: num(2, "ms")?, every }
+        }
+        "reset" | "truncate" => {
+            if fields.get(1) != Some(&"conn") || fields.len() != 3 {
+                bail!("connection fault spec must be `{}:conn:<nth>`, got `{spec}`", fields[0]);
+            }
+            let nth = num(2, "nth-connection")?.max(1);
+            if fields[0] == "reset" {
+                FaultSpec::ResetConn { nth }
+            } else {
+                FaultSpec::TruncateConn { nth }
+            }
+        }
+        other => bail!("unknown fault kind `{other}` (panic|delay|reset|truncate)"),
+    };
+    Ok(parsed)
+}
+
+/// Parse a comma-separated spec list (the `BFP_FAULTS` / `--faults` grammar).
+pub fn parse_specs(specs: &str) -> Result<Vec<FaultSpec>> {
+    specs.split(',').map(str::trim).filter(|s| !s.is_empty()).map(parse_spec).collect()
+}
+
+/// What, if anything, the fabric should do to one accepted connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnFault {
+    None,
+    Reset,
+    Truncate,
+}
+
+/// The armed injector: deterministic counters over the configured specs.
+/// Shared as `Option<Arc<FaultInjector>>` — absent means every hook is
+/// never called and costs nothing.
+#[derive(Debug)]
+pub struct FaultInjector {
+    specs: Vec<FaultSpec>,
+    seed: u64,
+    /// Batches seen per lane label — deliberately *outside* the lanes, so
+    /// the count survives a supervisor respawn.
+    lane_batches: Mutex<HashMap<String, u64>>,
+    /// Connections accepted so far.
+    conns: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(specs: Vec<FaultSpec>, seed: u64) -> Self {
+        Self { specs, seed, lane_batches: Mutex::new(HashMap::new()), conns: AtomicU64::new(0) }
+    }
+
+    /// Parse-and-build from one comma-separated spec string.
+    pub fn parse(specs: &str, seed: u64) -> Result<Self> {
+        Ok(Self::new(parse_specs(specs)?, seed))
+    }
+
+    /// Arm from `BFP_FAULTS` / `BFP_FAULTS_SEED`. Unset ⇒ `None` (the
+    /// common case); a malformed spec is reported and ignored rather
+    /// than taking the server down.
+    pub fn from_env() -> Option<Arc<FaultInjector>> {
+        let spec = std::env::var("BFP_FAULTS").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        let seed = std::env::var("BFP_FAULTS_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(0);
+        match FaultInjector::parse(&spec, seed) {
+            Ok(inj) => Some(Arc::new(inj)),
+            Err(e) => {
+                eprintln!("ignoring BFP_FAULTS ({e:#})");
+                None
+            }
+        }
+    }
+
+    /// The configured randomness seed (consumers add jitter on top; the
+    /// injector itself is counter-deterministic).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Executor hook: called once per batch on the owning lane, *inside*
+    /// the supervised (`catch_unwind`) region and before the forward.
+    /// May sleep (delay specs) and may panic (panic specs) — an injected
+    /// panic exercises exactly the respawn path a real one would.
+    pub fn on_batch(&self, lane: &str) {
+        let n = {
+            let mut counts = self.lane_batches.lock().unwrap();
+            let c = counts.entry(lane.to_string()).or_insert(0);
+            *c += 1;
+            *c
+        };
+        for spec in &self.specs {
+            match spec {
+                FaultSpec::DelayLane { lane: l, ms, every } if l == lane && n % every == 0 => {
+                    std::thread::sleep(Duration::from_millis(*ms));
+                }
+                FaultSpec::PanicLane { lane: l, nth, times }
+                    if l == lane && n >= *nth && n < nth + times =>
+                {
+                    panic!("injected fault: lane {lane} batch {n}");
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Acceptor hook: called once per accepted connection; the returned
+    /// plan tells the connection handler whether (and how) to sabotage
+    /// this connection.
+    pub fn on_conn(&self) -> ConnFault {
+        let c = self.conns.fetch_add(1, Ordering::Relaxed) + 1;
+        for spec in &self.specs {
+            match spec {
+                FaultSpec::ResetConn { nth } if *nth == c => return ConnFault::Reset,
+                FaultSpec::TruncateConn { nth } if *nth == c => return ConnFault::Truncate,
+                _ => {}
+            }
+        }
+        ConnFault::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        assert_eq!(
+            parse_spec("panic:economy:3").unwrap(),
+            FaultSpec::PanicLane { lane: "economy".into(), nth: 3, times: 1 }
+        );
+        assert_eq!(
+            parse_spec("panic:economy:3:2").unwrap(),
+            FaultSpec::PanicLane { lane: "economy".into(), nth: 3, times: 2 }
+        );
+        assert_eq!(
+            parse_spec("delay:gold:25:4").unwrap(),
+            FaultSpec::DelayLane { lane: "gold".into(), ms: 25, every: 4 }
+        );
+        assert_eq!(parse_spec("reset:conn:1").unwrap(), FaultSpec::ResetConn { nth: 1 });
+        assert_eq!(parse_spec("truncate:conn:2").unwrap(), FaultSpec::TruncateConn { nth: 2 });
+        let both = parse_specs(" panic:economy:3:2 , reset:conn:1 ").unwrap();
+        assert_eq!(both.len(), 2);
+        for bad in [
+            "panic:economy",
+            "panic::3",
+            "delay:gold:25",
+            "reset:sock:1",
+            "reset:conn:x",
+            "nuke:everything",
+            "panic:economy:3:2:9",
+        ] {
+            assert!(parse_spec(bad).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn panic_fires_on_exactly_the_configured_batches() {
+        let inj = FaultInjector::parse("panic:economy:3:2", 7).unwrap();
+        // batches 1, 2 pass; 3 and 4 panic; 5 passes again
+        for _ in 0..2 {
+            inj.on_batch("economy");
+        }
+        for expect_panic in [true, true, false] {
+            let got =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| inj.on_batch("economy")));
+            assert_eq!(got.is_err(), expect_panic);
+        }
+        // other lanes keep their own counters and never fire
+        for _ in 0..6 {
+            inj.on_batch("gold");
+        }
+    }
+
+    #[test]
+    fn conn_faults_hit_only_the_named_connection() {
+        let inj = FaultInjector::parse("reset:conn:2,truncate:conn:3", 0).unwrap();
+        assert_eq!(inj.on_conn(), ConnFault::None);
+        assert_eq!(inj.on_conn(), ConnFault::Reset);
+        assert_eq!(inj.on_conn(), ConnFault::Truncate);
+        assert_eq!(inj.on_conn(), ConnFault::None);
+    }
+
+    #[test]
+    fn delay_is_periodic_and_panic_free() {
+        let inj = FaultInjector::parse("delay:standard:0:2", 0).unwrap();
+        for _ in 0..5 {
+            inj.on_batch("standard"); // ms=0: exercises the arm without sleeping
+        }
+        assert_eq!(inj.seed(), 0);
+    }
+}

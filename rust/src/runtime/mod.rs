@@ -1,12 +1,15 @@
 //! Execution runtimes: the scoped thread [`pool`] that parallelizes the
-//! pure-Rust hot path, and the PJRT loader for AOT-compiled HLO-text
-//! artifacts produced by `python/compile/aot.py`.
+//! pure-Rust hot path, the deterministic [`faults`] injection plane the
+//! chaos suite arms against the serving fabric, and the PJRT loader for
+//! AOT-compiled HLO-text artifacts produced by `python/compile/aot.py`.
 //!
 //! Interchange is HLO **text**, not serialized `HloModuleProto` — jax ≥0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
 
+pub mod faults;
 pub mod pjrt;
 pub mod pool;
 
+pub use faults::{ConnFault, FaultInjector, FaultSpec};
 pub use pjrt::{CompiledArtifact, PjrtRuntime};

@@ -231,7 +231,13 @@ where
                 })
             })
             .collect();
-        handles.into_iter().flat_map(|h| h.join().expect("pool worker panicked")).collect()
+        // a panicking worker propagates its original payload to the
+        // caller (scope joins the siblings first); swallowing it here
+        // would deadlock callers waiting on results that never come
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+            .collect()
     })
 }
 
@@ -367,5 +373,71 @@ mod tests {
                 assert_eq!(std::thread::current().id(), caller, "small work must not spawn");
             });
         });
+    }
+
+    /// A panicking task must propagate out of the pool (no deadlocked
+    /// join, no hung work-stealing loop) while every sibling task still
+    /// runs exactly once.
+    #[test]
+    fn panicking_task_propagates_without_deadlock() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        for threads in [2usize, 4] {
+            with_threads(threads, || {
+                let hits: Vec<AtomicU32> = (0..16).map(|_| AtomicU32::new(0)).collect();
+                let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    parallel_tasks(hits.len(), MIN_PARALLEL_WORK, |t| {
+                        if t == 7 {
+                            panic!("injected task fault");
+                        }
+                        hits[t].fetch_add(1, Ordering::Relaxed);
+                    });
+                }));
+                assert!(got.is_err(), "the panic must propagate at {threads} threads");
+                for (t, h) in hits.iter().enumerate() {
+                    if t == 7 {
+                        continue;
+                    }
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "task {t} at {threads} threads");
+                }
+            });
+        }
+    }
+
+    /// Same contract for the order-preserving map, plus the original
+    /// panic payload must survive the join; items chunked onto the
+    /// *other* workers all complete.
+    #[test]
+    fn panicking_map_item_propagates_with_its_payload() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        for threads in [2usize, 4] {
+            with_threads(threads, || {
+                let done = AtomicU32::new(0);
+                let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    parallel_map_with(
+                        (0..16u32).collect(),
+                        MIN_PARALLEL_WORK,
+                        || (),
+                        |_, x| {
+                            if x == 3 {
+                                panic!("injected map fault");
+                            }
+                            done.fetch_add(1, Ordering::Relaxed);
+                            x
+                        },
+                    )
+                }));
+                assert!(got.is_err(), "the panic must propagate at {threads} threads");
+                let payload = got.unwrap_err();
+                let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+                assert_eq!(msg, "injected map fault", "payload must survive the join");
+                // item 3 kills its own chunk's tail; every other chunk
+                // (16/threads items each) still finishes
+                let other_chunks = 16 - 16 / threads as u32;
+                assert!(
+                    done.load(Ordering::Relaxed) >= other_chunks,
+                    "sibling chunks must finish at {threads} threads"
+                );
+            });
+        }
     }
 }

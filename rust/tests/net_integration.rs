@@ -15,23 +15,29 @@
 //!     the shutdown report carries the per-tenant accounting;
 //! (e) hostile frames (garbage, wrong version, hostile length prefix)
 //!     get error frames without wedging the connection — a valid
-//!     request after an in-sync decode error is still served.
+//!     request after an in-sync decode error is still served;
+//! (f) resilience over the wire (PR 7): health frames report per-lane
+//!     liveness, the retrying client survives seeded reset/truncated
+//!     connections counting its reconnects exactly, and the deadline
+//!     reaper turns hopeless requests into typed `Timeout` error frames
+//!     without wedging the connection.
 //!
 //! The suite honours `BFP_QOS_WORKERS` — CI runs it under both
-//! schedulers, like `qos_integration`.
+//! schedulers, like `qos_integration` (and once more with `BFP_FAULTS`
+//! arming benign delay injection).
 
 use bfp_cnn::coordinator::batcher::BatchPolicy;
-use bfp_cnn::coordinator::{
-    LaneSet, LaneStep, QosClass, QosConfig, QosServer, ShedPolicy,
-};
+use bfp_cnn::coordinator::{LaneSet, LaneStep, QosClass, QosConfig, QosServer, ShedPolicy};
 use bfp_cnn::models::ModelId;
 use bfp_cnn::net::proto::{self, ErrorCode, Msg, NetRequest, Reply};
 use bfp_cnn::net::{NetClient, NetServer, NetServerConfig, QuotaConfig};
+use bfp_cnn::runtime::FaultInjector;
 use bfp_cnn::telemetry::MonitorConfig;
 use bfp_cnn::Tensor;
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn lenet() -> bfp_cnn::models::Model {
@@ -62,12 +68,22 @@ fn quiet_config() -> QosConfig {
     }
 }
 
-/// Bind a loopback front over a fresh router.
+/// Bind a loopback front over a fresh router. Connection faults stay
+/// off so the protocol tests are exactly reproducible; lane-level
+/// faults still arm from `BFP_FAULTS` through `quiet_config`.
 fn start_front(quota: QuotaConfig) -> (NetServer, SocketAddr) {
-    let qos = QosServer::start(lenet(), &demo_lane_set(), quiet_config());
+    start_front_with(quiet_config(), quota, None)
+}
+
+fn start_front_with(
+    config: QosConfig,
+    quota: QuotaConfig,
+    faults: Option<Arc<FaultInjector>>,
+) -> (NetServer, SocketAddr) {
+    let qos = QosServer::start(lenet(), &demo_lane_set(), config);
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
-    let server = NetServer::start(listener, qos, NetServerConfig { max_conns: 32, quota })
-        .expect("start net server");
+    let net_config = NetServerConfig { max_conns: 32, quota, faults };
+    let server = NetServer::start(listener, qos, net_config).expect("start net server");
     let addr = server.addr();
     (server, addr)
 }
@@ -311,4 +327,95 @@ fn hostile_frames_get_error_frames_and_framing_recovers() {
         "the desynced connection must be closed, not resumed"
     );
     server.shutdown();
+}
+
+/// (f) the health frame: a fresh server reports every lane live with
+/// zero restarts, in lane order, and the probe leaves the connection
+/// perfectly usable for inference.
+#[test]
+fn health_frame_reports_live_lanes() {
+    let (server, addr) = start_front(QuotaConfig::default());
+    let mut client = NetClient::connect(addr).expect("connect");
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let health = client.health().expect("health frame");
+    let labels: Vec<&str> = health.lanes.iter().map(|l| l.label.as_str()).collect();
+    assert_eq!(labels, ["gold", "standard", "economy"], "one row per lane, safest first");
+    for lane in &health.lanes {
+        assert!(!lane.retired, "fresh lane {} reports retired", lane.label);
+        assert_eq!(lane.restarts, 0, "fresh lane {} reports restarts", lane.label);
+    }
+    // the probe is a normal frame round trip: inference still works
+    let resp = client.infer("probe", QosClass::Gold, images(1, 2).remove(0)).expect("serves");
+    assert_eq!(resp.served_by, "gold");
+    server.shutdown();
+}
+
+/// (f) transport-fault recovery: the server's fault plane resets the
+/// first connection mid-round-trip and answers the second with a
+/// truncated frame; the retrying client reconnects under jittered
+/// backoff, resends, serves every request bit-normally, and counts
+/// exactly the two reconnect cycles.
+#[test]
+fn retrying_client_survives_reset_and_truncated_connections() {
+    use bfp_cnn::net::{RetryPolicy, RetryingClient};
+
+    let faults = FaultInjector::parse("reset:conn:1,truncate:conn:2", 9).expect("spec parses");
+    let (server, addr) =
+        start_front_with(quiet_config(), QuotaConfig::default(), Some(Arc::new(faults)));
+
+    let (base, cap) = (Duration::from_millis(5), Duration::from_millis(40));
+    let policy = RetryPolicy { attempts: 4, base, cap };
+    let mut client = RetryingClient::new(addr.to_string(), policy, 7);
+    client.set_read_timeout(Some(Duration::from_secs(30)));
+    let imgs = images(4, 21);
+    for (i, img) in imgs.iter().enumerate() {
+        let resp = client.infer("flaky", QosClass::Standard, img.clone()).expect("recovers");
+        assert_eq!(resp.served_by, "standard", "request {i} downgraded");
+    }
+    assert_eq!(client.retries, 2, "exactly the two sabotaged connections cost a reconnect");
+    // the surviving connection also answers health probes
+    let health = client.health().expect("health over the recovered connection");
+    assert!(health.lanes.iter().all(|l| !l.retired));
+    server.shutdown();
+}
+
+/// (f) the deadline reaper over the wire: with a zero grace, a burst of
+/// 1 µs deadlines cannot all be served — the hopeless ones come back as
+/// typed `Timeout` error frames, every request is answered one way or
+/// the other, the accounting matches frame for frame, and the
+/// connection serves a sane follow-up request afterwards.
+#[test]
+fn reaped_deadline_returns_timeout_error_frame() {
+    let config = QosConfig { reap_grace: Some(Duration::ZERO), ..quiet_config() };
+    let (server, addr) = start_front_with(config, QuotaConfig::default(), None);
+    let mut client = NetClient::connect(addr).expect("connect");
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let imgs = images(8, 6);
+    for img in &imgs {
+        client
+            .send("hasty", QosClass::Standard, Some(Duration::from_micros(1)), img.clone())
+            .unwrap();
+    }
+    let mut served = 0u64;
+    let mut reaped = 0u64;
+    for _ in 0..imgs.len() {
+        match client.read_reply().expect("every request is answered") {
+            Reply::Response(resp) => {
+                served += 1;
+                assert!(resp.deadline_missed, "a 1 µs deadline cannot be met");
+            }
+            Reply::Error(e) => {
+                reaped += 1;
+                assert_eq!(e.code, ErrorCode::Timeout, "reaped requests carry Timeout: {e:?}");
+            }
+        }
+    }
+    assert_eq!(served + reaped, imgs.len() as u64, "a request went unanswered");
+    assert!(reaped > 0, "an expired burst of 8 must see the reaper at least once");
+    // the reaper kills requests, not connections
+    let resp = client.infer("hasty", QosClass::Standard, imgs[0].clone()).expect("still serves");
+    assert_eq!(resp.served_by, "standard");
+    let report = server.shutdown();
+    let cm = report.metrics.class("standard").expect("standard metrics");
+    assert_eq!(cm.timeouts, reaped, "Timeout frames must match the reaper accounting");
 }

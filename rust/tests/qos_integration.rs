@@ -11,16 +11,21 @@
 //! (e) the per-lane multi-worker executor serves per-request logits
 //!     bit-identical to the single-worker reference scheduler, preserves
 //!     class purity and never-downgrade-gold under work-stealing, and a
-//!     dead executor surfaces as client errors plus a partial report —
-//!     never a client-side panic.
+//!     panicking executor surfaces as a typed per-request error plus a
+//!     supervisor respawn — never a client-side panic;
+//! (f) a lane that exhausts its restart budget retires, its traffic
+//!     re-routes to the adjacent safer lane, and the final report still
+//!     carries the complete pre-fault per-class/per-tenant/per-lane
+//!     accounting (PR 7 regression).
 //!
 //! Unless a test pins `workers` explicitly, the suite honours
-//! `BFP_QOS_WORKERS` — CI runs it under both schedulers.
+//! `BFP_QOS_WORKERS` — CI runs it under both schedulers (and once more
+//! with `BFP_FAULTS` arming benign delay injection).
 
 use bfp_cnn::coordinator::batcher::BatchPolicy;
 use bfp_cnn::coordinator::{
-    LaneSet, LaneSpec, LaneStep, QosClass, QosConfig, QosResponse, QosServer, ShedPolicy,
-    WorkerMode,
+    LaneSet, LaneSpec, LaneStep, QosClass, QosConfig, QosErrorKind, QosResponse, QosServer,
+    ShedPolicy, WorkerMode,
 };
 use bfp_cnn::models::ModelId;
 use bfp_cnn::nn::PreparedModel;
@@ -84,7 +89,8 @@ fn mixed_workload_is_bit_identical_class_pure_and_metered() {
         .zip(&classes)
         .map(|(img, &c)| server.submit(c, img.clone()).unwrap())
         .collect();
-    let responses: Vec<QosResponse> = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let responses: Vec<QosResponse> =
+        pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
     let report = server.shutdown();
 
     // (a) bit-identical to a standalone PreparedModel on the same plan
@@ -165,7 +171,7 @@ fn pre_expired_deadlines_are_uniformly_missed() {
             })
             .collect();
         let responses: Vec<QosResponse> =
-            pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+            pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
         let report = server.shutdown();
         assert!(
             responses.iter().all(|r| r.deadline_missed),
@@ -197,7 +203,7 @@ fn per_lane_executor_is_bit_identical_to_the_reference_scheduler() {
             .zip(&classes)
             .map(|(img, &c)| server.submit(c, img.clone()).unwrap())
             .collect();
-        let responses = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let responses = pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
         let report = server.shutdown();
         assert!(!report.worker_panic);
         responses
@@ -248,6 +254,7 @@ fn work_stealing_moves_batches_one_lane_cheaper_and_never_gold() {
         shed: ShedPolicy { enabled: true, queue_pressure: usize::MAX },
         monitor: MonitorConfig { sample_every: 0, ..Default::default() },
         workers: WorkerMode::PerLane { steal: true },
+        ..QosConfig::default()
     };
     let mut server = QosServer::start(model.clone(), &set, config);
     let imgs = images(36, 11);
@@ -262,7 +269,8 @@ fn work_stealing_moves_batches_one_lane_cheaper_and_never_gold() {
             server.submit_with_deadline(c, img.clone(), Duration::from_secs(5)).unwrap()
         })
         .collect();
-    let responses: Vec<QosResponse> = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let responses: Vec<QosResponse> =
+        pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
     let report = server.shutdown();
     assert!(!report.worker_panic);
     assert_eq!(responses.len(), 36, "stealing dropped requests");
@@ -304,39 +312,118 @@ fn work_stealing_moves_batches_one_lane_cheaper_and_never_gold() {
     assert_eq!(std_downgrades, stolen as u64);
 }
 
-/// (e) a lane executor that dies must not panic clients: its requests
-/// surface as receive errors, other lanes keep serving, and shutdown
-/// returns a partial report missing only the dead lane.
+/// (e) a lane executor that panics must not panic clients: the poisoned
+/// request comes back as a typed [`QosErrorKind::ExecutorPanic`] error,
+/// the supervisor respawns the lane over the shared weight cache, and
+/// every lane — the respawned one included — keeps serving and lands in
+/// the final report with its restart accounted.
 #[test]
-fn dead_lane_executor_surfaces_errors_and_partial_report() {
-    let model = lenet();
-    let set = demo_lane_set();
-    let config = QosConfig {
-        policy: BatchPolicy { max_batch: 1, linger: Duration::from_millis(1) },
-        shed: ShedPolicy { enabled: false, queue_pressure: 0 },
-        monitor: MonitorConfig { sample_every: 0, ..Default::default() },
-        workers: WorkerMode::PerLane { steal: false },
-    };
-    let mut server = QosServer::start(model, &set, config);
-    // healthy traffic on gold first
-    let ok = server.infer(QosClass::Gold, images(1, 3).remove(0)).expect("gold serves");
-    assert_eq!(ok.served_by, "gold");
-    // poison pill: wrong input shape panics the economy executor mid-forward
-    let poisoned = server.submit(QosClass::Economy, Tensor::zeros(&[1, 2, 2])).unwrap();
-    assert!(poisoned.recv().is_err(), "executor death must drop the response, not hang");
-    // economy requests now fail (dropped batch → disconnected responder)
-    // while gold keeps serving — the whole point of lane isolation
-    let after = server.submit(QosClass::Economy, images(1, 4).remove(0)).unwrap();
-    assert!(after.recv().is_err(), "requests to a dead lane must error out");
-    let still_ok = server.infer(QosClass::Gold, images(1, 5).remove(0)).expect("gold survives");
-    assert_eq!(still_ok.served_by, "gold");
+fn panicked_lane_executor_respawns_and_keeps_reporting() {
+    for workers in [WorkerMode::Single, WorkerMode::PerLane { steal: false }] {
+        let model = lenet();
+        let set = demo_lane_set();
+        let config = QosConfig {
+            policy: BatchPolicy { max_batch: 1, linger: Duration::from_millis(1) },
+            shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+            monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+            workers,
+            ..QosConfig::default()
+        };
+        let mut server = QosServer::start(model, &set, config);
+        // healthy traffic on gold first
+        let ok = server.infer(QosClass::Gold, images(1, 3).remove(0)).expect("gold serves");
+        assert_eq!(ok.served_by, "gold");
+        // poison pill: wrong input shape panics the economy executor
+        // mid-forward; supervision turns that into a typed error reply
+        let poisoned = server.submit(QosClass::Economy, Tensor::zeros(&[1, 2, 2])).unwrap();
+        let err = poisoned
+            .recv()
+            .expect("a supervised panic answers with a typed error, never a hang")
+            .expect_err("a poisoned batch cannot produce logits");
+        assert_eq!(err.kind, QosErrorKind::ExecutorPanic, "{}: {err:?}", workers.name());
+        // the supervisor respawned the lane: economy serves again, and
+        // gold was never disturbed — the whole point of lane isolation
+        let after = server.infer(QosClass::Economy, images(1, 4).remove(0)).unwrap();
+        assert_eq!(after.served_by, "economy", "respawned lane must serve its own class");
+        assert!(!after.downgraded);
+        let ok2 = server.infer(QosClass::Gold, images(1, 5).remove(0)).expect("gold survives");
+        assert_eq!(ok2.served_by, "gold");
 
-    let report = server.shutdown();
-    assert!(!report.worker_panic, "the dispatcher itself never panicked");
-    let labels: Vec<&str> = report.lanes.iter().map(|l| l.label.as_str()).collect();
-    assert!(!labels.contains(&"economy"), "dead lane cannot produce a report: {labels:?}");
-    assert!(labels.contains(&"gold") && labels.contains(&"standard"));
-    assert!(report.metrics.total_requests >= 2, "healthy traffic stays metered");
+        let report = server.shutdown();
+        assert!(!report.worker_panic, "the dispatcher itself never panicked");
+        let labels: Vec<&str> = report.lanes.iter().map(|l| l.label.as_str()).collect();
+        assert!(labels.contains(&"economy"), "respawned lane must report: {labels:?}");
+        assert!(labels.contains(&"gold") && labels.contains(&"standard"));
+        let economy = report.lanes.iter().find(|l| l.label == "economy").unwrap();
+        assert!(economy.restarts >= 1, "restart not accounted: {economy:?}");
+        assert!(!economy.retired, "one panic is within the default budget");
+        assert!(report.metrics.lane_restarts >= 1);
+        assert_eq!(report.metrics.lanes_retired, 0);
+        let eco = report.metrics.class("economy").expect("economy metrics survive the panic");
+        assert_eq!(eco.failures, 1, "exactly the poisoned request failed ({})", workers.name());
+    }
+}
+
+/// (f) PR 7 regression: a lane that exhausts a zero restart budget
+/// retires, later traffic for its class re-routes to the adjacent safer
+/// lane (never into shed), and the *partial* report still carries the
+/// complete accounting recorded before the fault — per-class counters,
+/// per-tenant rows, and a lane row for the retired lane itself.
+#[test]
+fn retired_lane_report_keeps_prefault_metrics_complete() {
+    for workers in [WorkerMode::Single, WorkerMode::PerLane { steal: false }] {
+        let model = lenet();
+        let set = demo_lane_set();
+        let config = QosConfig {
+            policy: BatchPolicy { max_batch: 1, linger: Duration::from_millis(1) },
+            shed: ShedPolicy { enabled: false, queue_pressure: 0 },
+            monitor: MonitorConfig { sample_every: 0, ..Default::default() },
+            workers,
+            restart_budget: 0,
+            ..QosConfig::default()
+        };
+        let mut server = QosServer::start(model, &set, config);
+        // pre-fault traffic on every class, plus a tenant row recorded
+        // the way the TCP front records one
+        for class in QosClass::ALL {
+            for seed in 0..2 {
+                let resp = server.infer(class, images(1, 40 + seed).remove(0)).unwrap();
+                assert_eq!(resp.served_by, class.name());
+            }
+        }
+        server.metrics_handle().lock().unwrap().record_tenant("vip", false, false);
+        // the fault: one panic against a zero budget retires the lane
+        let poisoned = server.submit(QosClass::Economy, Tensor::zeros(&[1, 2, 2])).unwrap();
+        let err = poisoned.recv().expect("typed reply").expect_err("poison cannot serve");
+        assert_eq!(err.kind, QosErrorKind::ExecutorPanic);
+        let retired = (0..200).any(|_| {
+            std::thread::sleep(Duration::from_millis(2));
+            server.health().iter().any(|l| l.label == "economy" && l.retired)
+        });
+        assert!(retired, "zero budget must retire the lane ({})", workers.name());
+        // economy traffic now re-routes one lane safer — standard, not shed
+        let rerouted = server.infer(QosClass::Economy, images(1, 44).remove(0)).unwrap();
+        assert_eq!(rerouted.served_by, "standard", "retired traffic moves to the safer lane");
+
+        let report = server.shutdown();
+        assert!(!report.worker_panic);
+        // the partial report is complete about everything pre-fault
+        let labels: Vec<&str> = report.lanes.iter().map(|l| l.label.as_str()).collect();
+        for lane in ["gold", "standard", "economy", "shed"] {
+            assert!(labels.contains(&lane), "lane {lane} missing from report: {labels:?}");
+        }
+        let economy = report.lanes.iter().find(|l| l.label == "economy").unwrap();
+        assert!(economy.retired, "retirement must be visible in the lane report");
+        for class in QosClass::ALL {
+            let cm = report.metrics.class(class.name()).expect("pre-fault class metrics");
+            assert!(cm.requests >= 2, "{}: pre-fault requests lost ({cm:?})", workers.name());
+            assert!(cm.latency_p(50.0) > 0.0, "pre-fault latency histogram lost");
+        }
+        let eco = report.metrics.class("economy").unwrap();
+        assert_eq!(eco.failures, 1, "exactly the poisoned request failed");
+        assert!(report.metrics.tenants().iter().any(|t| t.label == "vip"), "tenant row lost");
+        assert_eq!(report.metrics.lanes_retired, 1);
+    }
 }
 
 /// (c) a lane whose measured NSR breaks its (impossibly optimistic)
@@ -368,7 +455,8 @@ fn forced_nsr_violation_hot_swaps_without_dropping_requests() {
     let imgs = images(12, 7);
     let pending: Vec<_> =
         imgs.iter().map(|img| server.submit(QosClass::Economy, img.clone()).unwrap()).collect();
-    let responses: Vec<QosResponse> = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let responses: Vec<QosResponse> =
+        pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
     assert_eq!(responses.len(), 12, "in-flight requests were dropped");
     let report = server.shutdown();
 
@@ -488,7 +576,8 @@ fn overload_downgrades_non_gold_and_accounts_for_it() {
         .zip(&classes)
         .map(|(img, &c)| server.submit_with_deadline(c, img, Duration::from_secs(5)).unwrap())
         .collect();
-    let responses: Vec<QosResponse> = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let responses: Vec<QosResponse> =
+        pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
     let report = server.shutdown();
 
     // gold is never downgraded, even under pressure
@@ -542,7 +631,7 @@ fn late_arrival_joins_the_lingering_batch() {
     let late = server
         .submit_with_deadline(QosClass::Economy, imgs[1].clone(), Duration::from_millis(50))
         .unwrap();
-    let (r1, r2) = (first.recv().unwrap(), late.recv().unwrap());
+    let (r1, r2) = (first.recv().unwrap().unwrap(), late.recv().unwrap().unwrap());
     let elapsed = t0.elapsed();
     server.shutdown();
     assert_eq!(r1.batch_seq, r2.batch_seq, "late arrival did not join the lingering batch");
@@ -591,7 +680,7 @@ fn autotuned_lane_set_serves_with_healthy_telemetry() {
         .map(|(i, img)| server.submit(QosClass::ALL[i % 3], img.clone()).unwrap())
         .collect();
     for rx in pending {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let report = server.shutdown();
     for lane in report.lanes.iter().filter(|l| l.label != "shed") {
