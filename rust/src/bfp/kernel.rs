@@ -254,6 +254,9 @@ impl ActPanels {
         lane: Lane,
         tile: &mut Vec<f32>,
     ) {
+        // the pack span covers the whole fused pipeline; the im2col_tile
+        // calls inside cut their own nested im2col spans
+        let _span = crate::obs::span(crate::obs::Stage::Pack);
         let (k, n) = (geo.k(), geo.n());
         self.begin(k, n, axis, fmt.frac_bits(), lane);
         let max_m = fmt.max_mantissa();
@@ -401,6 +404,7 @@ impl ActPanels {
 /// quantized matrices (see the module docs for why), at every thread
 /// count.
 pub fn gemm_tiled(w: &BfpMatrix, panels: WeightPanels<'_>, acts: &ActPanels, out: &mut [f32]) {
+    let _span = crate::obs::span(crate::obs::Stage::Gemm);
     let (m, k, n) = (w.rows, w.cols, acts.n);
     assert_eq!(k, acts.k, "GEMM inner dimension mismatch");
     assert_eq!(out.len(), m * n, "output buffer shape mismatch");

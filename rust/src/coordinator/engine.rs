@@ -51,6 +51,7 @@ pub fn forward_batch(model: &Model, images: Vec<Tensor>, mode: ExecMode) -> Vec<
     for img in &images {
         assert_eq!(img.shape, model.input_shape, "input shape mismatch for {}", model.name);
     }
+    let _span = crate::obs::span(crate::obs::Stage::Forward);
     let work = model.approx_macs_per_image();
     match mode {
         ExecMode::Fp32 => {

@@ -473,6 +473,51 @@ impl Metrics {
     }
 }
 
+// ---- span-derived stage breakdowns -----------------------------------
+
+/// One (lane, stage) cell of the stage-latency breakdown: every
+/// completed span of a flight-recorder snapshot carrying that lane tag
+/// and stage name, folded into one duration histogram.
+#[derive(Debug, Clone)]
+pub struct StageRow {
+    /// Lane label (`-` for spans recorded outside any lane scope).
+    pub lane: String,
+    pub stage: &'static str,
+    /// Span durations in µs.
+    pub hist: LogHistogram,
+}
+
+/// Group a flight-recorder snapshot's spans into per-(lane, stage)
+/// duration histograms — the data behind the qos_report stage table and
+/// the network `Stats` frame. Instant events carry no duration and are
+/// skipped. Rows come back lane-major (gold, standard, economy, shed,
+/// then untagged) with stages in pipeline order.
+pub fn stage_rows(records: &[crate::obs::SpanRecord]) -> Vec<StageRow> {
+    let mut rows: Vec<StageRow> = Vec::new();
+    for r in records.iter().filter(|r| !r.instant) {
+        match rows.iter_mut().find(|row| row.lane == r.lane && row.stage == r.name) {
+            Some(row) => row.hist.record(r.dur_us),
+            None => {
+                let mut hist = LogHistogram::default();
+                hist.record(r.dur_us);
+                rows.push(StageRow { lane: r.lane.to_string(), stage: r.name, hist });
+            }
+        }
+    }
+    let lane_rank = |lane: &str| match lane {
+        "gold" => 0,
+        "standard" => 1,
+        "economy" => 2,
+        "shed" => 3,
+        _ => 4,
+    };
+    let stage_rank = |stage: &str| {
+        crate::obs::Stage::ALL.iter().position(|s| s.name() == stage).unwrap_or(usize::MAX)
+    };
+    rows.sort_by_key(|r| (lane_rank(&r.lane), stage_rank(r.stage)));
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -688,6 +733,43 @@ mod tests {
         global.merge_from(&scratch);
         assert_eq!(global.classes().len(), 2);
         assert_eq!(global.class("economy").unwrap().timeouts, 2);
+    }
+
+    /// Stage rows group span records by (lane, stage), skip instant
+    /// events, and come back lane-major in pipeline-stage order.
+    #[test]
+    fn stage_rows_group_and_order_span_records() {
+        let span = |lane: &'static str, name: &'static str, dur_us: u64| crate::obs::SpanRecord {
+            ring: 0,
+            seq: 0,
+            start_us: 0,
+            dur_us,
+            instant: false,
+            name,
+            lane,
+            layer: None,
+            wbits: 0,
+            ibits: 0,
+        };
+        let mut records = vec![
+            span("economy", "gemm", 300),
+            span("gold", "forward", 120),
+            span("gold", "queue", 40),
+            span("gold", "queue", 60),
+            span("-", "gemm", 10),
+        ];
+        records.push(crate::obs::SpanRecord { instant: true, ..span("gold", "swap", 0) });
+        let rows = stage_rows(&records);
+        let keys: Vec<(&str, &str)> = rows.iter().map(|r| (r.lane.as_str(), r.stage)).collect();
+        assert_eq!(
+            keys,
+            vec![("gold", "queue"), ("gold", "forward"), ("economy", "gemm"), ("-", "gemm")],
+            "lane-major, pipeline-stage-ordered, instants skipped"
+        );
+        let queue = &rows[0].hist;
+        assert_eq!(queue.count(), 2);
+        assert_eq!(queue.max(), 60);
+        assert!(queue.percentile(99.0) >= 59.0);
     }
 
     #[test]

@@ -15,9 +15,9 @@ pub mod qos;
 pub mod server;
 
 pub use engine::{forward_batch, forward_batch_ref, ExecMode};
-pub use metrics::{ClassMetrics, LogHistogram, Metrics, TenantMetrics};
+pub use metrics::{stage_rows, ClassMetrics, LogHistogram, Metrics, StageRow, TenantMetrics};
 pub use qos::{
-    LaneHealth, LaneReport, LaneSet, LaneSpec, LaneStep, QosClass, QosConfig, QosError,
+    LaneHealth, LaneReport, LaneSet, LaneSpec, LaneStep, LaneStats, QosClass, QosConfig, QosError,
     QosErrorKind, QosReport, QosResponse, QosResult, QosServer, ShedPolicy, WorkerMode,
 };
 pub use server::{InferenceServer, PreparedBackend, RustBackend, ServerConfig};

@@ -88,6 +88,7 @@ use crate::autotune::PrecisionPlan;
 use crate::models::Model;
 use crate::nn::prepared::{PreparedModel, SharedWeightCache, WeightCache};
 use crate::nn::Fp32Exec;
+use crate::obs::{self, Clock};
 use crate::quant::{BfpConfig, LayerSchedule};
 use crate::runtime::faults::FaultInjector;
 use crate::runtime::pool;
@@ -566,6 +567,7 @@ impl EdfQueues {
                     break;
                 }
                 let EdfEntry(r) = heap.pop().expect("peeked head");
+                obs::event_lane(obs::EventKind::Timeout, class.name());
                 let _ = r.respond.send(Err(QosError {
                     id: r.id,
                     class,
@@ -694,6 +696,7 @@ impl Lane {
         self.prepared.set_schedule(self.ladder[self.pos].schedule.clone());
         self.monitor.reset_probes();
         self.swaps += 1;
+        obs::event_lane(obs::EventKind::Swap, self.label);
     }
 
     /// The inverse of [`Lane::swap_safer`]: re-promote one rung back
@@ -708,6 +711,7 @@ impl Lane {
         self.prepared.set_schedule(self.ladder[self.pos].schedule.clone());
         self.monitor.reset_probes();
         self.promotions += 1;
+        obs::event_lane(obs::EventKind::Promote, self.label);
     }
 
     fn report(&self) -> LaneReport {
@@ -766,6 +770,29 @@ pub struct LaneHealth {
     pub queued: u64,
 }
 
+/// One lane's live counters as reported by [`QosServer::stats`], the
+/// network `Stats` frame, and the `top` dashboard: the [`LaneHealth`]
+/// liveness fields plus the lane's current ladder position and its
+/// swap/promotion totals.
+#[derive(Debug, Clone)]
+pub struct LaneStats {
+    pub label: String,
+    pub retired: bool,
+    pub restarts: u64,
+    /// Requests queued for this lane's class (0 for the shed lane).
+    pub queued: u64,
+    /// Current precision-ladder rung, 1-based (1 = the frontier
+    /// operating point; higher = safer fallbacks). 0 until the lane has
+    /// published — callers treat that as "unknown".
+    pub rung: u32,
+    /// Total rungs in this lane's ladder.
+    pub ladder: u32,
+    /// Hot-swaps one rung safer (bound violations) over the lane's life.
+    pub swaps: u64,
+    /// Walks back toward the frontier (sustained health).
+    pub promotions: u64,
+}
+
 /// Shared liveness/depth board: supervisors publish restarts and
 /// retirements, the scheduler publishes class queue depths, and routing
 /// plus [`QosServer::health`] read it lock-free.
@@ -775,6 +802,14 @@ struct HealthBoard {
     /// Requests queued per class (gold/standard/economy) in the EDF
     /// heaps, as of the scheduler's last pass.
     depths: [AtomicUsize; 3],
+    /// Ladder position per lane, packed `(pos + 1) << 8 | ladder_len`
+    /// (0 = not yet published) — one word so a rung and its ladder
+    /// length can never be read torn.
+    rungs: Vec<AtomicU64>,
+    /// Lifetime swap / promotion totals per lane, published by the
+    /// owning executor after each batch.
+    swaps: Vec<AtomicU64>,
+    promotions: Vec<AtomicU64>,
     labels: Vec<&'static str>,
 }
 
@@ -784,6 +819,9 @@ impl HealthBoard {
             retired: labels.iter().map(|_| AtomicBool::new(false)).collect(),
             restarts: labels.iter().map(|_| AtomicU64::new(0)).collect(),
             depths: [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)],
+            rungs: labels.iter().map(|_| AtomicU64::new(0)).collect(),
+            swaps: labels.iter().map(|_| AtomicU64::new(0)).collect(),
+            promotions: labels.iter().map(|_| AtomicU64::new(0)).collect(),
             labels,
         }
     }
@@ -806,6 +844,17 @@ impl HealthBoard {
         }
     }
 
+    /// Publish one lane's ladder position and swap/promotion totals (the
+    /// owning executor calls this after each delivered batch, and the
+    /// server once at startup so `stats` never reports rung 0 for a
+    /// healthy lane).
+    fn publish_lane(&self, lane: usize, pos: usize, len: usize, swaps: u64, promotions: u64) {
+        let packed = ((pos as u64 + 1) << 8) | (len as u64).min(0xff);
+        self.rungs[lane].store(packed, Ordering::Relaxed);
+        self.swaps[lane].store(swaps, Ordering::Relaxed);
+        self.promotions[lane].store(promotions, Ordering::Relaxed);
+    }
+
     fn snapshot(&self) -> Vec<LaneHealth> {
         self.labels
             .iter()
@@ -815,6 +864,26 @@ impl HealthBoard {
                 retired: self.is_retired(i),
                 restarts: self.restarts[i].load(Ordering::Relaxed),
                 queued: if i < 3 { self.depths[i].load(Ordering::Relaxed) as u64 } else { 0 },
+            })
+            .collect()
+    }
+
+    fn stats(&self) -> Vec<LaneStats> {
+        self.labels
+            .iter()
+            .enumerate()
+            .map(|(i, label)| {
+                let packed = self.rungs[i].load(Ordering::Relaxed);
+                LaneStats {
+                    label: label.to_string(),
+                    retired: self.is_retired(i),
+                    restarts: self.restarts[i].load(Ordering::Relaxed),
+                    queued: if i < 3 { self.depths[i].load(Ordering::Relaxed) as u64 } else { 0 },
+                    rung: (packed >> 8) as u32,
+                    ladder: (packed & 0xff) as u32,
+                    swaps: self.swaps[i].load(Ordering::Relaxed),
+                    promotions: self.promotions[i].load(Ordering::Relaxed),
+                }
             })
             .collect()
     }
@@ -857,7 +926,8 @@ impl DrainState {
         self.refusing.store(true, Ordering::Release);
         let mut d = self.deadline.lock().unwrap();
         if d.is_none() {
-            *d = Some(Instant::now() + bound);
+            obs::event(obs::EventKind::Drain);
+            *d = Some(Clock::now() + bound);
         }
     }
 
@@ -866,7 +936,7 @@ impl DrainState {
     }
 
     fn expired(&self) -> bool {
-        matches!(*self.deadline.lock().unwrap(), Some(d) if Instant::now() >= d)
+        matches!(*self.deadline.lock().unwrap(), Some(d) if Clock::now() >= d)
     }
 }
 
@@ -1010,15 +1080,27 @@ fn deliver_batch(
     faults: Option<&FaultInjector>,
 ) -> Result<Instant, LaneFailure> {
     let LaneBatch { class, batch_seq, downgraded, images, meta } = batch;
-    let t0 = Instant::now();
+    let _lane_ctx = obs::armed().then(|| obs::lane_scope(lane.label));
+    let t0 = Clock::now();
+    // close each member's queue-wait span: enqueue → the instant its
+    // batch started executing
+    if obs::armed() {
+        let t0_us = Clock::micros_of(t0);
+        for m in &meta {
+            let q0 = Clock::micros_of(m.enqueued_at);
+            obs::record_span_at(obs::Stage::Queue, q0, t0_us.saturating_sub(q0));
+        }
+    }
     let batch_size = images.len();
     let label = lane.label;
+    let fwd_span = obs::span(obs::Stage::Forward);
     let forwarded = catch_unwind(AssertUnwindSafe(|| {
         if let Some(f) = faults {
             f.on_batch(label);
         }
         lane.forward(images)
     }));
+    drop(fwd_span);
     let (outputs, probe) = match forwarded {
         Ok(v) => v,
         Err(payload) => {
@@ -1029,7 +1111,8 @@ fn deliver_batch(
     let probe = probe.map(|(idx, img)| (img, outputs[idx].clone()));
     let served_by = lane.label.to_string();
     let lane_plan = lane.step().label.clone();
-    let completed = Instant::now();
+    let completed = Clock::now();
+    let reply_span = obs::span(obs::Stage::Reply);
     for (m, logits) in meta.into_iter().zip(outputs) {
         let queue_wait = t0.duration_since(m.enqueued_at);
         let latency = completed.duration_since(m.enqueued_at);
@@ -1055,6 +1138,7 @@ fn deliver_batch(
             batch_seq,
         }));
     }
+    drop(reply_span);
     global.lock().unwrap().merge_from(scratch);
     scratch.clear();
     if let Some((img, out)) = probe {
@@ -1148,7 +1232,15 @@ impl SupervisedLane {
             return;
         };
         match deliver_batch(lane, batch, scratch, global, faults) {
-            Ok(_) => {}
+            Ok(_) => {
+                board.publish_lane(
+                    lane_idx,
+                    lane.pos,
+                    lane.ladder.len(),
+                    self.acc_swaps + lane.swaps,
+                    self.acc_promotions + lane.promotions,
+                );
+            }
             Err(failure) => {
                 scratch.clear();
                 let msg =
@@ -1173,6 +1265,7 @@ impl SupervisedLane {
             self.acc_promotions += old.promotions;
         }
         if self.restarts >= u64::from(self.budget) {
+            obs::event_lane(obs::EventKind::Retire, self.seed.label);
             board.retire(lane_idx);
             global.lock().unwrap().record_retired();
             return; // lane stays None: retired for good
@@ -1180,6 +1273,7 @@ impl SupervisedLane {
         std::thread::sleep(self.next_backoff);
         self.next_backoff = (self.next_backoff * 2).min(MAX_RESTART_BACKOFF);
         self.restarts += 1;
+        obs::event_lane(obs::EventKind::Restart, self.seed.label);
         global.lock().unwrap().record_restart();
         board.record_restart(lane_idx);
         self.lane = Some(self.seed.build());
@@ -1311,7 +1405,7 @@ fn scheduler_loop(
         }
         // resilience housekeeping before forming a batch
         if let Some(grace) = config.reap_grace {
-            queues.reap(Instant::now(), grace, &ctx.metrics);
+            queues.reap(Clock::now(), grace, &ctx.metrics);
         }
         if ctx.drain.expired() {
             queues.fail_all(&ctx.metrics);
@@ -1339,6 +1433,7 @@ fn scheduler_loop(
             .or_else(|| q.pick_class())
         };
         let Some(mut class) = pick(&queues) else { continue };
+        let assemble_start = obs::armed().then(Clock::micros);
         // linger anchored at the head request's enqueue time (not batch
         // start): a request that already waited its linger in the channel
         // closes the batch immediately
@@ -1348,7 +1443,7 @@ fn scheduler_loop(
                 if queues.class_len(class) >= config.policy.max_batch {
                     break;
                 }
-                let now = Instant::now();
+                let now = Clock::now();
                 if now >= anchor {
                     break;
                 }
@@ -1368,8 +1463,16 @@ fn scheduler_loop(
         let backlog = queues.total();
         batch_seq += 1;
         let (images, meta) = split_requests(batch);
+        if let Some(t0) = assemble_start {
+            // linger + pop + split: the time spent forming this batch
+            let _g = obs::lane_scope(class.name());
+            obs::record_span_at(obs::Stage::Assemble, t0, Clock::micros().saturating_sub(t0));
+        }
         match target_lane(class, backlog) {
             Some((lane_idx, downgraded)) => {
+                if downgraded {
+                    obs::event_lane(obs::EventKind::Shed, class.name());
+                }
                 let formed = LaneBatch { class, batch_seq, downgraded, images, meta };
                 if let Some(bounced) = dispatch(lane_idx, formed) {
                     requeue(&mut queues, bounced);
@@ -1477,9 +1580,9 @@ impl LaneQueues {
     /// blocked dispatcher.
     fn offer(&self, lane: usize, batch: LaneBatch) -> Option<LaneBatch> {
         let mut st = self.state.lock().unwrap();
-        let deadline = Instant::now() + OFFER_GRACE;
+        let deadline = Clock::now() + OFFER_GRACE;
         while st.queues[lane].len() >= LANE_QUEUE_CAP && !st.dead[lane] {
-            let now = Instant::now();
+            let now = Clock::now();
             if now >= deadline {
                 return Some(batch); // still full — bounce it back
             }
@@ -1595,6 +1698,7 @@ fn run_executor(mut lane: SupervisedLane, lane_idx: usize, env: ExecEnv) -> Lane
         while let Some((mut batch, stolen)) = env.queues.pop(lane_idx, env.steal) {
             if stolen {
                 batch.downgraded = true;
+                obs::event_lane(obs::EventKind::Steal, lane.label());
             }
             let faults = env.faults.as_deref();
             lane.deliver(batch, &mut scratch, &env.metrics, faults, &env.board, lane_idx);
@@ -1693,6 +1797,11 @@ impl QosServer {
         let shed_lane = set.shed.as_ref().map(|_| 3);
         let labels: Vec<&'static str> = lanes.iter().map(|l| l.label()).collect();
         let board = Arc::new(HealthBoard::new(labels));
+        // seed the stats board so a lane that has served nothing yet
+        // still reports its frontier rung and ladder depth
+        for (i, lane) in lanes.iter().enumerate() {
+            board.publish_lane(i, 0, lane.seed.spec.ladder.len(), 0, 0);
+        }
         let drain = Arc::new(DrainState::default());
 
         let (tx, rx): (Sender<QueuedRequest>, Receiver<QueuedRequest>) = channel();
@@ -1718,7 +1827,7 @@ impl QosServer {
             board,
             drain,
             next_id: 0,
-            started: Instant::now(),
+            started: Clock::now(),
         }
     }
 
@@ -1773,7 +1882,7 @@ impl QosServer {
         if self.drain.refusing() {
             anyhow::bail!("qos server is draining; {} request {id} refused", class.name());
         }
-        let now = Instant::now();
+        let now = Clock::now();
         let worker = self
             .tx
             .as_ref()
@@ -1823,6 +1932,13 @@ impl QosServer {
     /// what the network `Health` frame reports.
     pub fn health(&self) -> Vec<LaneHealth> {
         self.board.snapshot()
+    }
+
+    /// Per-lane live counters for the network `Stats` frame and the
+    /// `top` dashboard: [`LaneHealth`] plus each lane's current
+    /// precision-ladder rung and its swap/promotion totals.
+    pub fn stats(&self) -> Vec<LaneStats> {
+        self.board.stats()
     }
 
     /// Start a graceful drain: new submits are refused immediately, and
@@ -2442,5 +2558,34 @@ mod tests {
             .map(|cm| cm.failures)
             .sum();
         assert_eq!(failed, drained, "drained requests must be accounted as failures");
+    }
+
+    /// The stats board reports every lane's ladder position from the
+    /// moment the server starts — before any batch has been served —
+    /// and keeps the `health` fields in agreement.
+    #[test]
+    fn stats_snapshot_reports_rungs() {
+        let mut server =
+            QosServer::start(tiny_model(8), &plain_set(), resilience_config(WorkerMode::Single));
+        let stats = server.stats();
+        assert_eq!(stats.len(), 3);
+        for lane in &stats {
+            assert_eq!(lane.rung, 1, "{}: fresh lanes sit on their frontier rung", lane.label);
+            assert!(lane.ladder >= 1, "{}", lane.label);
+            assert!(!lane.retired);
+            assert_eq!((lane.swaps, lane.promotions, lane.restarts), (0, 0, 0));
+        }
+        // rung stays published (and consistent with health) after serving
+        let resp = server.infer(QosClass::Gold, image(2)).expect("served");
+        assert_eq!(resp.served_by, "gold");
+        let stats = server.stats();
+        let health = server.health();
+        let gold = stats.iter().find(|l| l.label == "gold").unwrap();
+        assert_eq!(gold.rung, 1);
+        assert_eq!(gold.ladder as usize, plain_set().gold.ladder.len());
+        let gold_health = health.iter().find(|l| l.label == "gold").unwrap();
+        assert_eq!(gold.restarts, gold_health.restarts);
+        assert_eq!(gold.retired, gold_health.retired);
+        server.shutdown();
     }
 }

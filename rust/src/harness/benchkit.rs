@@ -137,20 +137,9 @@ pub fn section(title: &str) {
     println!("\n### {title}");
 }
 
-pub(crate) fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
+// the one shared JSON escaper lives in `report`; re-exported here so
+// existing `benchkit::json_escape` callers keep working
+pub(crate) use super::report::json_escape;
 
 /// Write a machine-readable `BENCH_<tag>.json` so the perf trajectory
 /// (EXPERIMENTS.md §Perf) can be tracked across PRs and checked in CI.

@@ -3,8 +3,7 @@
 //! hand-rolled `NET_*.json` mirror for CI artifacts (no serde in the
 //! offline image).
 
-use super::benchkit::json_escape;
-use super::report::Table;
+use super::report::{json_escape, ms, Table};
 use crate::net::loadgen::RunStats;
 
 /// One row per run: client-side counters and intended-send latency.
@@ -29,9 +28,9 @@ pub fn scenario_table(rows: &[RunStats]) -> Table {
             r.quota_downgraded.to_string(),
             r.downgraded.to_string(),
             r.deadline_missed.to_string(),
-            format!("{:.2}", r.latency_p(50.0)),
-            format!("{:.2}", r.latency_p(99.0)),
-            format!("{:.2}", r.latency_us.max() as f64 / 1000.0),
+            ms(r.latency_p(50.0)),
+            ms(r.latency_p(99.0)),
+            ms(r.latency_us.max() as f64 / 1000.0),
             format!("{:.1}", r.throughput()),
         ]);
     }

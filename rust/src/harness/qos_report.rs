@@ -1,8 +1,9 @@
 //! QoS serving report: per-class latency/downgrade tables plus per-lane
 //! measured-vs-predicted NSR telemetry (EXPERIMENTS.md §QoS).
 
-use super::report::{db, Table};
+use super::report::{db, ms, pct, stage_table, Table};
 use crate::coordinator::qos::QosReport;
+use crate::coordinator::stage_rows;
 
 /// Per-class serving table: request counts, latency percentiles,
 /// downgrade and deadline-miss accounting.
@@ -16,11 +17,11 @@ pub fn class_table(report: &QosReport) -> Table {
         t.row(vec![
             c.label.clone(),
             c.requests.to_string(),
-            format!("{:.2}", c.latency_p(50.0)),
-            format!("{:.2}", c.latency_p(99.0)),
-            format!("{:.2}", c.queue_wait_p(50.0)),
+            ms(c.latency_p(50.0)),
+            ms(c.latency_p(99.0)),
+            ms(c.queue_wait_p(50.0)),
             c.downgrades.to_string(),
-            format!("{:.1}", 100.0 * c.downgrade_rate()),
+            pct(c.downgrade_rate()),
             c.deadline_misses.to_string(),
             c.timeouts.to_string(),
             c.failures.to_string(),
@@ -69,7 +70,7 @@ pub fn tenant_table(report: &QosReport) -> Table {
             ten.requests.to_string(),
             ten.quota_downgrades.to_string(),
             ten.rejected.to_string(),
-            format!("{:.1}", 100.0 * ten.over_quota_rate()),
+            pct(ten.over_quota_rate()),
         ]);
     }
     t
@@ -94,6 +95,13 @@ pub fn print(report: &QosReport) {
     if !report.metrics.tenants().is_empty() {
         println!();
         tenant_table(report).print();
+    }
+    // per-stage latency attribution, present only when tracing was armed
+    // for the run (the recorder is empty otherwise)
+    let spans = crate::obs::snapshot();
+    if !spans.is_empty() {
+        println!();
+        stage_table(&stage_rows(&spans)).print();
     }
 }
 

@@ -1,4 +1,9 @@
-//! Minimal fixed-width table rendering for harness output.
+//! Minimal fixed-width table rendering for harness output, plus the
+//! shared cell formatters (`ms`, `pct`, `db`) and JSON escaping that
+//! every report module uses — one definition, so the qos/net/bench
+//! readouts cannot drift apart column by column.
+
+use crate::coordinator::StageRow;
 
 /// A simple printable table.
 #[derive(Debug, Clone, Default)]
@@ -65,6 +70,55 @@ pub fn drop_cell(v: f64) -> String {
     format!("{v:.4}")
 }
 
+/// Format a millisecond latency cell (two decimals, the column style
+/// shared by the qos and loadgen tables).
+pub fn ms(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Format a rate in `[0, 1]` as a percentage cell (one decimal).
+pub fn pct(fraction: f64) -> String {
+    format!("{:.1}", 100.0 * fraction)
+}
+
+/// Escape a string for inclusion in hand-rolled JSON output (the
+/// offline image has no serde; every report writer shares this).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Per-(lane, stage) latency attribution table from flight-recorder
+/// span rows — the single definition used by `qos_report`, the `top`
+/// dashboard and anything else that prints stage breakdowns.
+pub fn stage_table(rows: &[StageRow]) -> Table {
+    let mut t = Table::new(
+        "stage latency attribution (from span flight recorder, ms)",
+        &["lane", "stage", "spans", "p50", "p99", "max"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.lane.clone(),
+            r.stage.to_string(),
+            r.hist.count().to_string(),
+            ms(r.hist.percentile(50.0) / 1000.0),
+            ms(r.hist.percentile(99.0) / 1000.0),
+            ms(r.hist.max() as f64 / 1000.0),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +146,29 @@ mod tests {
     fn db_formatting() {
         assert_eq!(db(f64::NAN), "-");
         assert_eq!(db(26.7227), "26.7227");
+    }
+
+    #[test]
+    fn shared_cell_formatters() {
+        assert_eq!(ms(4.236), "4.24");
+        assert_eq!(pct(0.3333), "33.3");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn stage_table_converts_us_to_ms() {
+        let mut hist = crate::coordinator::LogHistogram::default();
+        for v in [1000, 2000, 3000] {
+            hist.record(v);
+        }
+        let rows = vec![StageRow { lane: "gold".into(), stage: "gemm", hist }];
+        let s = stage_table(&rows).render();
+        assert!(s.contains("gold"));
+        assert!(s.contains("gemm"));
+        assert!(s.contains('3'), "span count: {s}");
+        // max 3000 µs renders as 3.00 ms, not 3000
+        assert!(s.contains("3.00"), "ms conversion: {s}");
+        assert!(!s.contains("3000"), "raw µs must not leak: {s}");
     }
 }

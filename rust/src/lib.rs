@@ -50,6 +50,12 @@
 //!   writer threads, per-tenant token-bucket quotas) over the QoS
 //!   router, plus the open-loop, coordinated-omission-free load
 //!   generator and its scenario suite.
+//! * [`obs`] — zero-dependency observability: one monotonic clock, a
+//!   lock-free span flight recorder threaded through every serving
+//!   stage (queue→assemble→forward→im2col/pack/gemm→reply, tagged with
+//!   lane / layer / BFP widths), Chrome/Perfetto trace export, and the
+//!   per-stage latency attribution behind `qos_report` and the `Stats`
+//!   wire frame.
 //! * [`harness`] — drivers that regenerate every table and figure of the
 //!   paper's evaluation section.
 //! * [`data`] — synthetic workload generators (procedural digit / texture
@@ -65,6 +71,7 @@ pub mod harness;
 pub mod models;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod telemetry;

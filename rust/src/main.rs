@@ -26,9 +26,20 @@
 //! bfp-cnn loadgen --connect <addr> [--arrivals poisson:200|burst:150:4|diurnal:120]
 //!                 [--scenario spike|tenant-mix|slow-client|all] [--requests 96]
 //!                 [--rps 200] [--tenant default] [--class standard] [--json out.json]
+//! bfp-cnn top    --connect <addr> [--interval-ms 500] [--iters 0]
 //! bfp-cnn e2e    [--requests 64] [--artifacts artifacts]
 //! bfp-cnn all    [--images 10]
 //! ```
+//!
+//! Every subcommand also takes `--trace <path>`: it arms the span
+//! flight recorder (`obs`) and dumps a Chrome/Perfetto `trace_event`
+//! JSON there about once a second (atomic rename, loadable mid-run in
+//! [ui.perfetto.dev](https://ui.perfetto.dev)), with a final dump on
+//! clean exit. Unarmed, tracing costs one relaxed atomic load per
+//! span site. `top --connect` polls the serving front's `Stats` frame
+//! (lane rungs, queue depths, tenant quota balances, per-stage latency
+//! attribution) into a refreshing terminal dashboard; the stage table
+//! needs the *server* started with `--trace`.
 //!
 //! `autotune` runs the NSR-guided mixed-precision planner: it calibrates
 //! on generated images, searches per-layer mantissa widths against the
@@ -124,6 +135,41 @@ fn argmax(xs: &[f32]) -> usize {
     best
 }
 
+/// Arm the span flight recorder when `--trace <path>` is present and
+/// spawn the periodic dump thread (~1 s cadence, atomic tmp+rename
+/// writes, so a `kill` mid-run still leaves a loadable trace). Returns
+/// the path so the caller can cut a final dump before exiting; `None`
+/// leaves tracing disarmed and zero-cost.
+fn arm_tracing(args: &Args) -> Option<PathBuf> {
+    let path = args.flags.get("trace").map(PathBuf::from)?;
+    bfp_cnn::obs::arm();
+    {
+        let path = path.clone();
+        std::thread::Builder::new()
+            .name("trace-dump".into())
+            .spawn(move || loop {
+                std::thread::sleep(std::time::Duration::from_secs(1));
+                if bfp_cnn::obs::write_chrome_trace(&path).is_err() {
+                    return;
+                }
+            })
+            .ok();
+    }
+    eprintln!("tracing armed; writing Perfetto trace to {}", path.display());
+    Some(path)
+}
+
+/// Cut a final trace dump on the way out (the periodic thread may be
+/// mid-sleep with newer spans still only in the rings).
+fn finish_tracing(path: &Option<PathBuf>) {
+    if let Some(path) = path {
+        match bfp_cnn::obs::write_chrome_trace(path) {
+            Ok(()) => eprintln!("wrote trace {}", path.display()),
+            Err(e) => eprintln!("final trace dump failed: {e}"),
+        }
+    }
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
@@ -131,6 +177,7 @@ fn main() {
     let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
     let size: usize = args.get("size", 32);
     let seed: u64 = args.get("seed", 1);
+    let trace = arm_tracing(&args);
 
     match cmd {
         "table1" => {
@@ -237,6 +284,7 @@ fn main() {
                         eprintln!("serve --listen failed: {e:#}");
                         std::process::exit(1);
                     }
+                    finish_tracing(&trace);
                     return;
                 }
                 let mix = parse_mix(&args.get_str("mix", "1:1:1"));
@@ -252,6 +300,7 @@ fn main() {
                     &mix,
                     parse_workers(&args),
                 );
+                finish_tracing(&trace);
                 return;
             }
             if args.flags.contains_key("listen") {
@@ -294,6 +343,7 @@ fn main() {
                     eprintln!("loadgen --connect failed: {e:#}");
                     std::process::exit(1);
                 }
+                finish_tracing(&trace);
                 return;
             }
             let opts = bfp_cnn::autotune::PlannerOptions {
@@ -328,6 +378,18 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "top" => {
+            let Some(addr) = args.flags.get("connect") else {
+                eprintln!("top needs --connect <addr> (a running `serve --qos --listen` front)");
+                std::process::exit(2);
+            };
+            let interval = std::time::Duration::from_millis(args.get("interval-ms", 500));
+            let iters: usize = args.get("iters", 0);
+            if let Err(e) = top_cmd(addr, interval, iters) {
+                eprintln!("top failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
         "e2e" => {
             let requests: usize = args.get("requests", 64);
             if let Err(e) = e2e(&artifacts, requests, args.get("batch", 8)) {
@@ -354,12 +416,13 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: bfp-cnn <table1|table2|table3|table4|fig3|autotune|serve|loadgen|chaos|e2e|all> [--flags]"
+                "usage: bfp-cnn <table1|table2|table3|table4|fig3|autotune|serve|loadgen|top|chaos|e2e|all> [--flags]"
             );
             eprintln!("see rust/src/main.rs docs for flags");
             std::process::exit(2);
         }
     }
+    finish_tracing(&trace);
 }
 
 /// Generate a model-appropriate synthetic image batch.
@@ -748,6 +811,82 @@ fn net_loadgen(
         println!("wrote {}", path.display());
     }
     Ok(())
+}
+
+/// `top --connect`: poll the server's `Stats` frame into a refreshing
+/// terminal dashboard (ANSI clear-and-home between frames). `--iters 0`
+/// polls until killed; a positive count exits after that many frames
+/// (useful for CI and scripts). The stage table is empty unless the
+/// *server* was started with `--trace` (the recorder is per-process).
+fn top_cmd(addr: &str, interval: std::time::Duration, iters: usize) -> anyhow::Result<()> {
+    use bfp_cnn::harness::report::{ms, Table};
+    use bfp_cnn::net::NetClient;
+    use std::io::Write as _;
+
+    let mut client = NetClient::connect(addr)?;
+    client.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut frame = 0usize;
+    loop {
+        let stats = client.stats()?;
+        frame += 1;
+        print!("\x1b[2J\x1b[H");
+        println!(
+            "bfp-cnn top — {addr} | up {:.1}s | {} requests served | frame {frame}",
+            stats.uptime_ms as f64 / 1000.0,
+            stats.total_requests,
+        );
+        println!();
+        let mut lanes = Table::new(
+            "lanes",
+            &["lane", "state", "rung", "queued", "restarts", "swaps", "promotes"],
+        );
+        for l in &stats.lanes {
+            lanes.row(vec![
+                l.label.clone(),
+                if l.retired { "retired" } else { "live" }.to_string(),
+                if l.rung == 0 { "-".to_string() } else { format!("{}/{}", l.rung, l.ladder) },
+                l.queued.to_string(),
+                l.restarts.to_string(),
+                l.swaps.to_string(),
+                l.promotions.to_string(),
+            ]);
+        }
+        lanes.print();
+        if !stats.tenants.is_empty() {
+            println!();
+            let mut t = Table::new("tenant quota balances", &["tenant", "tokens"]);
+            for ten in &stats.tenants {
+                let balance = format!("{:.3}", ten.tokens_milli as f64 / 1000.0);
+                t.row(vec![ten.tenant.clone(), balance]);
+            }
+            t.print();
+        }
+        println!();
+        if stats.stages.is_empty() {
+            println!("(no stage spans — start the server with --trace to arm the recorder)");
+        } else {
+            let mut t = Table::new(
+                "stage latency attribution (ms)",
+                &["lane", "stage", "spans", "p50", "p99", "max"],
+            );
+            for s in &stats.stages {
+                t.row(vec![
+                    s.lane.clone(),
+                    s.stage.clone(),
+                    s.count.to_string(),
+                    ms(s.p50_us as f64 / 1000.0),
+                    ms(s.p99_us as f64 / 1000.0),
+                    ms(s.max_us as f64 / 1000.0),
+                ]);
+            }
+            t.print();
+        }
+        std::io::stdout().flush().ok();
+        if iters > 0 && frame >= iters {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
 }
 
 /// The `loadgen` subcommand: autotune a lane set off the Pareto

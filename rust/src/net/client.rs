@@ -11,7 +11,7 @@
 //! only ever retried on a *fresh* connection, so a reply can never be
 //! double-matched.
 
-use super::proto::{self, ErrorCode, Msg, NetHealth, NetRequest, NetResponse, Reply};
+use super::proto::{self, ErrorCode, Msg, NetHealth, NetRequest, NetResponse, NetStats, Reply};
 use crate::coordinator::qos::QosClass;
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
@@ -96,6 +96,20 @@ impl NetClient {
         match proto::decode(&payload)? {
             Msg::Health(h) => Ok(h),
             other => bail!("expected a health frame, got {other:?}"),
+        }
+    }
+
+    /// Probe the server's live serving stats (lane rungs, quota
+    /// balances, stage latency attribution). Same contract as
+    /// [`NetClient::health`]: only valid with no in-flight requests.
+    pub fn stats(&mut self) -> Result<NetStats> {
+        proto::write_frame(&mut self.writer, &proto::encode_stats_req())?;
+        let Some(payload) = proto::read_frame(&mut self.reader)? else {
+            bail!("server closed the connection before answering the stats probe");
+        };
+        match proto::decode(&payload)? {
+            Msg::Stats(s) => Ok(s),
+            other => bail!("expected a stats frame, got {other:?}"),
         }
     }
 
@@ -320,6 +334,16 @@ impl RetryingClient {
     /// advisory and the caller polls anyway).
     pub fn health(&mut self) -> Result<NetHealth> {
         let out = self.connect()?.health();
+        if out.is_err() {
+            self.inner = None;
+        }
+        out
+    }
+
+    /// Probe serving stats, reconnecting if needed (no retries — the
+    /// caller polls anyway, e.g. the `top` dashboard).
+    pub fn stats(&mut self) -> Result<NetStats> {
+        let out = self.connect()?.stats();
         if out.is_err() {
             self.inner = None;
         }

@@ -17,6 +17,7 @@ use super::proto::{ErrorCode, Reply};
 use crate::coordinator::qos::QosClass;
 use crate::coordinator::LogHistogram;
 use crate::data::Rng;
+use crate::obs::Clock;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::net::SocketAddr;
@@ -229,7 +230,7 @@ pub fn run_open_loop(
     client.set_read_timeout(Some(opts.read_timeout))?;
     let (mut sender, mut receiver) = client.split();
 
-    let start = Instant::now();
+    let start = Clock::now();
     let intended: Vec<Instant> = offsets.iter().map(|&off| start + off).collect();
     let n = intended.len();
     let read_stall = opts.read_stall;
@@ -252,7 +253,7 @@ pub fn run_open_loop(
                     break;
                 }
             };
-            let now = Instant::now();
+            let now = Clock::now();
             let latency = match &reply {
                 Reply::Response(r) if r.id >= 1 && (r.id as usize) <= n => {
                     Some(now.saturating_duration_since(intended_rx[(r.id - 1) as usize]))
@@ -270,7 +271,7 @@ pub fn run_open_loop(
 
     let mut sent = 0u64;
     for (i, when) in intended.iter().enumerate() {
-        let now = Instant::now();
+        let now = Clock::now();
         if *when > now {
             std::thread::sleep(*when - now);
         }
@@ -303,9 +304,9 @@ pub fn run_closed_loop(
     let mut client = NetClient::connect(addr).context("connecting to the serving front")?;
     client.set_read_timeout(Some(opts.read_timeout))?;
     let mut stats = RunStats::new(name, &opts.tenant, "closed-loop");
-    let start = Instant::now();
+    let start = Clock::now();
     for i in 0..n {
-        let sent_at = Instant::now();
+        let sent_at = Clock::now();
         client.send(&opts.tenant, opts.class, opts.deadline, pool[i % pool.len()].clone())?;
         let reply = client.read_reply().context("waiting for a reply")?;
         stats.absorb_reply(&reply, Some(sent_at.elapsed()));

@@ -38,6 +38,9 @@ pub mod server;
 
 pub use client::{NetClient, RetryPolicy, RetryingClient};
 pub use loadgen::{ArrivalKind, RunStats};
-pub use proto::{NetError, NetHealth, NetRequest, NetResponse, Reply};
+pub use proto::{
+    LaneStatsWire, NetError, NetHealth, NetRequest, NetResponse, NetStats, Reply, StageStatsWire,
+    TenantStatsWire,
+};
 pub use quota::{Admission, QuotaConfig};
 pub use server::{NetServer, NetServerConfig};

@@ -33,10 +33,20 @@ const KIND_RESPONSE: u8 = 2;
 const KIND_ERROR: u8 = 3;
 const KIND_HEALTH_REQ: u8 = 4;
 const KIND_HEALTH: u8 = 5;
+const KIND_STATS_REQ: u8 = 6;
+const KIND_STATS: u8 = 7;
 
 /// Lanes a health frame may claim (a sanity cap, far above the four
 /// real lanes, so hostile frames cannot demand huge allocations).
 const MAX_HEALTH_LANES: usize = 64;
+
+/// Tenants a stats frame may claim (sanity cap against hostile frames;
+/// the server truncates its own report to fit).
+pub const MAX_STATS_TENANTS: usize = 256;
+
+/// (lane, stage) latency rows a stats frame may claim — 5 lane labels ×
+/// 7 stages is the real ceiling; the cap just bounds allocation.
+pub const MAX_STATS_STAGES: usize = 1024;
 
 /// Why a payload failed to decode.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -182,6 +192,55 @@ pub struct NetHealth {
     pub lanes: Vec<LaneHealthWire>,
 }
 
+/// One lane's live counters as carried by a stats frame (mirrors
+/// [`crate::coordinator::LaneStats`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneStatsWire {
+    pub label: String,
+    pub retired: bool,
+    pub restarts: u64,
+    pub queued: u64,
+    /// Active precision rung, 1-based; 0 when the lane has not
+    /// published yet.
+    pub rung: u32,
+    /// Ladder length, so clients can render `rung/ladder`.
+    pub ladder: u32,
+    pub swaps: u64,
+    pub promotions: u64,
+}
+
+/// One tenant's quota balance as carried by a stats frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantStatsWire {
+    pub tenant: String,
+    /// Remaining token balance in milli-tokens, clamped at zero (debt
+    /// is not exposed on the wire).
+    pub tokens_milli: u64,
+}
+
+/// One (lane, stage) latency cell from the span flight recorder.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageStatsWire {
+    pub lane: String,
+    pub stage: String,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// The server's answer to a stats probe: uptime and request totals,
+/// per-lane counters, per-tenant quota balances, and per-stage latency
+/// attribution (empty unless tracing is armed on the server).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetStats {
+    pub uptime_ms: u64,
+    pub total_requests: u64,
+    pub lanes: Vec<LaneStatsWire>,
+    pub tenants: Vec<TenantStatsWire>,
+    pub stages: Vec<StageStatsWire>,
+}
+
 /// Any decoded payload.
 #[derive(Debug, Clone)]
 pub enum Msg {
@@ -191,6 +250,9 @@ pub enum Msg {
     /// Client → server: report your lane health.
     HealthReq,
     Health(NetHealth),
+    /// Client → server: report your live serving stats.
+    StatsReq,
+    Stats(NetStats),
 }
 
 /// What a client gets back for a request.
@@ -329,6 +391,51 @@ pub fn encode_health(health: &NetHealth) -> Vec<u8> {
         p.push(lane.retired as u8);
         p.extend_from_slice(&lane.restarts.to_le_bytes());
         p.extend_from_slice(&lane.queued.to_le_bytes());
+    }
+    p
+}
+
+/// Encode a stats probe (no fields beyond the kind).
+pub fn encode_stats_req() -> Vec<u8> {
+    vec![PROTO_VERSION, KIND_STATS_REQ]
+}
+
+/// Encode a stats report payload.
+pub fn encode_stats(stats: &NetStats) -> Vec<u8> {
+    debug_assert!(stats.lanes.len() <= MAX_HEALTH_LANES);
+    debug_assert!(stats.tenants.len() <= MAX_STATS_TENANTS);
+    debug_assert!(stats.stages.len() <= MAX_STATS_STAGES);
+    let mut p = Vec::with_capacity(
+        32 + 64 * stats.lanes.len() + 24 * stats.tenants.len() + 48 * stats.stages.len(),
+    );
+    p.push(PROTO_VERSION);
+    p.push(KIND_STATS);
+    p.extend_from_slice(&stats.uptime_ms.to_le_bytes());
+    p.extend_from_slice(&stats.total_requests.to_le_bytes());
+    p.extend_from_slice(&(stats.lanes.len() as u16).to_le_bytes());
+    for lane in &stats.lanes {
+        put_str(&mut p, &lane.label);
+        p.push(lane.retired as u8);
+        p.extend_from_slice(&lane.restarts.to_le_bytes());
+        p.extend_from_slice(&lane.queued.to_le_bytes());
+        p.extend_from_slice(&lane.rung.to_le_bytes());
+        p.extend_from_slice(&lane.ladder.to_le_bytes());
+        p.extend_from_slice(&lane.swaps.to_le_bytes());
+        p.extend_from_slice(&lane.promotions.to_le_bytes());
+    }
+    p.extend_from_slice(&(stats.tenants.len() as u16).to_le_bytes());
+    for t in &stats.tenants {
+        put_str(&mut p, &t.tenant);
+        p.extend_from_slice(&t.tokens_milli.to_le_bytes());
+    }
+    p.extend_from_slice(&(stats.stages.len() as u16).to_le_bytes());
+    for s in &stats.stages {
+        put_str(&mut p, &s.lane);
+        put_str(&mut p, &s.stage);
+        p.extend_from_slice(&s.count.to_le_bytes());
+        p.extend_from_slice(&s.p50_us.to_le_bytes());
+        p.extend_from_slice(&s.p99_us.to_le_bytes());
+        p.extend_from_slice(&s.max_us.to_le_bytes());
     }
     p
 }
@@ -473,6 +580,52 @@ pub fn decode(payload: &[u8]) -> Result<Msg, DecodeError> {
                 });
             }
             Msg::Health(NetHealth { lanes })
+        }
+        KIND_STATS_REQ => Msg::StatsReq,
+        KIND_STATS => {
+            let uptime_ms = c.u64()?;
+            let total_requests = c.u64()?;
+            let n_lanes = c.u16()? as usize;
+            if n_lanes > MAX_HEALTH_LANES {
+                return Err(DecodeError::BadShape);
+            }
+            let mut lanes = Vec::with_capacity(n_lanes);
+            for _ in 0..n_lanes {
+                lanes.push(LaneStatsWire {
+                    label: c.string()?,
+                    retired: c.u8()? != 0,
+                    restarts: c.u64()?,
+                    queued: c.u64()?,
+                    rung: c.u32()?,
+                    ladder: c.u32()?,
+                    swaps: c.u64()?,
+                    promotions: c.u64()?,
+                });
+            }
+            let n_tenants = c.u16()? as usize;
+            if n_tenants > MAX_STATS_TENANTS {
+                return Err(DecodeError::BadShape);
+            }
+            let mut tenants = Vec::with_capacity(n_tenants);
+            for _ in 0..n_tenants {
+                tenants.push(TenantStatsWire { tenant: c.string()?, tokens_milli: c.u64()? });
+            }
+            let n_stages = c.u16()? as usize;
+            if n_stages > MAX_STATS_STAGES {
+                return Err(DecodeError::BadShape);
+            }
+            let mut stages = Vec::with_capacity(n_stages);
+            for _ in 0..n_stages {
+                stages.push(StageStatsWire {
+                    lane: c.string()?,
+                    stage: c.string()?,
+                    count: c.u64()?,
+                    p50_us: c.u64()?,
+                    p99_us: c.u64()?,
+                    max_us: c.u64()?,
+                });
+            }
+            Msg::Stats(NetStats { uptime_ms, total_requests, lanes, tenants, stages })
         }
         k => return Err(DecodeError::BadKind(k)),
     };
@@ -632,6 +785,115 @@ mod tests {
                 other => panic!("decoded wrong kind: {other:?}"),
             }
         }
+    }
+
+    fn sample_stats(rng: &mut Rng) -> NetStats {
+        let lanes = (0..3usize)
+            .map(|i| LaneStatsWire {
+                label: ["gold", "standard", "economy"][i].into(),
+                retired: rng.below(2) == 1,
+                restarts: rng.next_u64() >> 56,
+                queued: rng.next_u64() >> 56,
+                rung: 1 + rng.below(4) as u32,
+                ladder: 4,
+                swaps: rng.next_u64() >> 56,
+                promotions: rng.next_u64() >> 56,
+            })
+            .collect();
+        let tenants = (0..rng.below(4))
+            .map(|i| TenantStatsWire { tenant: format!("t{i}"), tokens_milli: rng.next_u64() >> 32 })
+            .collect();
+        let stages = (0..rng.below(6))
+            .map(|i| StageStatsWire {
+                lane: "gold".into(),
+                stage: format!("stage{i}"),
+                count: rng.next_u64() >> 48,
+                p50_us: rng.next_u64() >> 40,
+                p99_us: rng.next_u64() >> 40,
+                max_us: rng.next_u64() >> 40,
+            })
+            .collect();
+        NetStats {
+            uptime_ms: rng.next_u64() >> 24,
+            total_requests: rng.next_u64() >> 24,
+            lanes,
+            tenants,
+            stages,
+        }
+    }
+
+    /// Stats frames round-trip exactly, including the empty probe and an
+    /// all-empty report.
+    #[test]
+    fn stats_frames_round_trip() {
+        match decode(&encode_stats_req()).unwrap() {
+            Msg::StatsReq => {}
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+        let mut rng = Rng::new(41);
+        for _ in 0..40 {
+            let stats = sample_stats(&mut rng);
+            match decode(&encode_stats(&stats)).unwrap() {
+                Msg::Stats(d) => assert_eq!(d, stats),
+                other => panic!("decoded wrong kind: {other:?}"),
+            }
+        }
+        let empty = NetStats {
+            uptime_ms: 0,
+            total_requests: 0,
+            lanes: Vec::new(),
+            tenants: Vec::new(),
+            stages: Vec::new(),
+        };
+        match decode(&encode_stats(&empty)).unwrap() {
+            Msg::Stats(d) => assert_eq!(d, empty),
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+    }
+
+    /// Every strict prefix of a stats payload fails with a typed error,
+    /// and trailing garbage after one is rejected.
+    #[test]
+    fn truncated_or_padded_stats_are_rejected() {
+        let mut rng = Rng::new(43);
+        let full = encode_stats(&sample_stats(&mut rng));
+        for cut in 0..full.len() {
+            let err = decode(&full[..cut]).unwrap_err();
+            assert!(
+                matches!(err, DecodeError::Truncated | DecodeError::BadShape),
+                "prefix {cut}: unexpected error {err:?}"
+            );
+        }
+        let mut padded = full.clone();
+        padded.push(0);
+        assert_eq!(decode(&padded).unwrap_err(), DecodeError::TrailingBytes { extra: 1 });
+        assert!(decode(&full).is_ok());
+    }
+
+    /// Hostile stats counts beyond the sanity caps are refused before
+    /// any allocation is sized from them.
+    #[test]
+    fn hostile_stats_counts_are_refused() {
+        let mut p = vec![PROTO_VERSION, KIND_STATS];
+        p.extend_from_slice(&0u64.to_le_bytes()); // uptime
+        p.extend_from_slice(&0u64.to_le_bytes()); // total
+        p.extend_from_slice(&u16::MAX.to_le_bytes()); // absurd lane count
+        assert_eq!(decode(&p).unwrap_err(), DecodeError::BadShape);
+
+        let mut p = vec![PROTO_VERSION, KIND_STATS];
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&0u16.to_le_bytes()); // no lanes
+        p.extend_from_slice(&u16::MAX.to_le_bytes()); // absurd tenant count
+        assert_eq!(decode(&p).unwrap_err(), DecodeError::BadShape);
+
+        let mut p = vec![PROTO_VERSION, KIND_STATS];
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&0u16.to_le_bytes());
+        p.extend_from_slice(&0u16.to_le_bytes());
+        p.extend_from_slice(&u16::MAX.to_le_bytes()); // absurd stage count
+        assert_eq!(decode(&p).unwrap_err(), DecodeError::BadShape);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! with an error frame. Rejected requests spend no token, so the debt —
 //! and with it the recovery time — stays bounded.
 
+use crate::obs::Clock;
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -100,11 +101,22 @@ impl TenantQuotas {
     /// connection reader thread; the map lock is held only for the
     /// constant-time bucket update.
     pub fn admit(&self, tenant: &str) -> Admission {
-        let now = Instant::now();
+        let now = Clock::now();
         let mut buckets = self.buckets.lock().unwrap();
         let bucket =
             buckets.entry(tenant.to_string()).or_insert_with(|| TokenBucket::new(now, &self.cfg));
         bucket.admit_at(now, &self.cfg)
+    }
+
+    /// Snapshot every tenant's current token balance (in milli-tokens,
+    /// clamped at zero on the way to the wire by the caller), sorted by
+    /// tenant id — the `Stats` frame's per-tenant quota state.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let buckets = self.buckets.lock().unwrap();
+        let mut out: Vec<(String, f64)> =
+            buckets.iter().map(|(t, b)| (t.clone(), b.tokens)).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 }
 
@@ -176,5 +188,23 @@ mod tests {
         }
         assert_eq!(quotas.admit("abuser"), Admission::Reject);
         assert_eq!(quotas.admit("polite"), Admission::Admit);
+    }
+
+    /// The stats snapshot lists every tenant seen so far, sorted by id,
+    /// with the heavier spender showing the lower balance.
+    #[test]
+    fn snapshot_reports_sorted_tenant_balances() {
+        let quotas = TenantQuotas::new(QuotaConfig {
+            rate_per_s: 0.0001,
+            burst: 8.0,
+            reject_debt: 2.0,
+        });
+        quotas.admit("zeta");
+        quotas.admit("alpha");
+        quotas.admit("alpha");
+        let snap = quotas.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(t, _)| t.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "zeta"]);
+        assert!(snap[0].1 < snap[1].1, "alpha spent more tokens than zeta");
     }
 }

@@ -12,11 +12,12 @@
 //! responses from the writer path), keeping frames interleave-safe.
 
 use super::proto::{
-    self, ErrorCode, LaneHealthWire, Msg, NetError, NetHealth, NetRequest, NetResponse,
+    self, ErrorCode, LaneHealthWire, LaneStatsWire, Msg, NetError, NetHealth, NetRequest,
+    NetResponse, NetStats, StageStatsWire, TenantStatsWire,
 };
 use super::quota::{Admission, QuotaConfig, TenantQuotas};
-use crate::coordinator::qos::{QosClass, QosErrorKind, QosReport, QosResult, QosServer};
-use crate::coordinator::Metrics;
+use crate::coordinator::qos::{LaneStats, QosClass, QosErrorKind, QosReport, QosResult, QosServer};
+use crate::coordinator::{stage_rows, Metrics};
 use crate::runtime::faults::{ConnFault, FaultInjector};
 use std::collections::HashMap;
 use std::io::{self, BufReader, Write};
@@ -296,7 +297,10 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                         proto::encode_error(&err)
                     }
                 };
-                if write_frame_locked(&write_half, &frame).is_err() {
+                let span = crate::obs::span(crate::obs::Stage::Reply);
+                let sent = write_frame_locked(&write_half, &frame);
+                drop(span);
+                if sent.is_err() {
                     break; // client gone; in-flight responses are dropped
                 }
             }
@@ -337,6 +341,21 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                             })
                             .collect();
                         let frame = proto::encode_health(&NetHealth { lanes: wire });
+                        if write_frame_locked(&write_half, &frame).is_err() {
+                            break;
+                        }
+                    }
+                    None => {
+                        send_error(&write_half, 0, ErrorCode::ServerGone, "server is shutting down")
+                    }
+                }
+            }
+            Ok(Msg::StatsReq) => {
+                let snap = shared.qos.lock().unwrap().as_ref().map(|q| (q.stats(), q.metrics()));
+                match snap {
+                    Some((lanes, metrics)) => {
+                        let stats = build_stats(lanes, &metrics, &shared.quotas);
+                        let frame = proto::encode_stats(&stats);
                         if write_frame_locked(&write_half, &frame).is_err() {
                             break;
                         }
@@ -408,6 +427,54 @@ fn handle_request(
     if let Err(e) = qos.submit_reserved(internal, effective, req.image, deadline, resp_tx.clone()) {
         pending.lock().unwrap().remove(&internal);
         send_error(write_half, req.id, ErrorCode::ServerGone, &format!("{e}"));
+    }
+}
+
+/// Assemble one `Stats` frame: router lane counters, tenant quota
+/// balances (milli-tokens, clamped at zero), and per-stage latency
+/// attribution from the span flight recorder (empty unless tracing is
+/// armed in this process).
+fn build_stats(lanes: Vec<LaneStats>, metrics: &Metrics, quotas: &TenantQuotas) -> NetStats {
+    let lanes = lanes
+        .into_iter()
+        .map(|l| LaneStatsWire {
+            label: l.label,
+            retired: l.retired,
+            restarts: l.restarts,
+            queued: l.queued,
+            rung: l.rung,
+            ladder: l.ladder,
+            swaps: l.swaps,
+            promotions: l.promotions,
+        })
+        .collect();
+    let mut tenants: Vec<TenantStatsWire> = quotas
+        .snapshot()
+        .into_iter()
+        .map(|(tenant, tokens)| TenantStatsWire {
+            tenant,
+            tokens_milli: (tokens.max(0.0) * 1000.0) as u64,
+        })
+        .collect();
+    tenants.truncate(proto::MAX_STATS_TENANTS);
+    let mut stages: Vec<StageStatsWire> = stage_rows(&crate::obs::snapshot())
+        .into_iter()
+        .map(|r| StageStatsWire {
+            lane: r.lane,
+            stage: r.stage.to_string(),
+            count: r.hist.count(),
+            p50_us: r.hist.percentile(50.0) as u64,
+            p99_us: r.hist.percentile(99.0) as u64,
+            max_us: r.hist.max(),
+        })
+        .collect();
+    stages.truncate(proto::MAX_STATS_STAGES);
+    NetStats {
+        uptime_ms: metrics.wall_time.as_millis() as u64,
+        total_requests: metrics.total_requests as u64,
+        lanes,
+        tenants,
+        stages,
     }
 }
 

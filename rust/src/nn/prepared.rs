@@ -266,6 +266,8 @@ impl Workspace {
 /// weight cache and staging through the workspace arena.
 struct PreparedExec<'a> {
     convs: &'a HashMap<String, CachedWeights>,
+    /// Conv layer name → graph-order index, for span tagging.
+    index: &'a HashMap<String, u16>,
     schedule: &'a LayerSchedule,
     ws: &'a mut Workspace,
 }
@@ -281,6 +283,15 @@ impl Executor for PreparedExec<'_> {
         let cfg = self.schedule.for_layer(&layer.name);
         let geo = layer.geometry(&x.shape);
         let (m, k, n) = (layer.out_channels(), geo.k(), geo.n());
+        // tag this thread's spans (pack/im2col/gemm below) with the conv
+        // layer index and the schedule's BFP widths while tracing
+        let _layer_ctx = crate::obs::armed().then(|| {
+            crate::obs::layer_scope(
+                self.index.get(layer.name.as_str()).copied().unwrap_or(u16::MAX),
+                cached.wq.frac_bits as u8,
+                cfg.i_format().frac_bits() as u8,
+            )
+        });
         let Workspace { tile, acts } = &mut *self.ws;
         let lane = kernel::select_lane(cached.wq.frac_bits, cfg.i_format().frac_bits(), k);
         // fused pipeline: im2col tiles quantized straight into packed
@@ -352,6 +363,9 @@ pub struct PreparedModel {
     cache: SharedWeightCache,
     /// Active view for the current schedule: layer name → cached weights.
     active: HashMap<String, CachedWeights>,
+    /// Conv layer name → graph-traversal index (stable across schedule
+    /// swaps; tags trace spans with the layer they belong to).
+    conv_index: HashMap<String, u16>,
     /// Idle scratch arenas, checked out per forward and returned after —
     /// the pool grows to the peak concurrency and then stops allocating.
     workspaces: Mutex<Vec<Workspace>>,
@@ -376,6 +390,7 @@ impl PreparedModel {
             schedule: LayerSchedule::uniform(BfpConfig::paper_default()),
             cache,
             active: HashMap::new(),
+            conv_index: HashMap::new(),
             workspaces: Mutex::new(Vec::new()),
             work_per_image,
         };
@@ -388,14 +403,17 @@ impl PreparedModel {
     /// other layer is a cache hit.
     pub fn set_schedule(&mut self, schedule: LayerSchedule) {
         let mut active = HashMap::new();
+        let mut index = HashMap::new();
         let mut cache = self.cache.lock().unwrap();
         let graph = &self.model.graph;
         graph.visit_convs(&mut |c: &Conv2d| {
             let cfg = schedule.for_layer(&c.name);
+            index.insert(c.name.clone(), index.len().min(u16::MAX as usize) as u16);
             active.insert(c.name.clone(), cache.get_or_quantize_packed(c, cfg));
         });
         drop(cache);
         self.active = active;
+        self.conv_index = index;
         self.schedule = schedule;
     }
 
@@ -446,7 +464,12 @@ impl PreparedModel {
     /// (benchmarks and the stale-data tests).
     pub fn forward_with(&self, input: &Tensor, ws: &mut Workspace) -> Tensor {
         assert_eq!(input.shape, self.model.input_shape, "input shape mismatch for {}", self.model.name);
-        let mut exec = PreparedExec { convs: &self.active, schedule: &self.schedule, ws };
+        let mut exec = PreparedExec {
+            convs: &self.active,
+            index: &self.conv_index,
+            schedule: &self.schedule,
+            ws,
+        };
         self.model.graph.execute(input.clone(), &mut exec)
     }
 
@@ -475,7 +498,12 @@ impl PreparedModel {
             || ArenaGuard { ws: Some(self.take_workspace()), owner: self },
             |guard, img| {
                 let ws = guard.ws.as_mut().expect("workspace checked out");
-                let mut exec = PreparedExec { convs: &self.active, schedule: &self.schedule, ws };
+                let mut exec = PreparedExec {
+                    convs: &self.active,
+                    index: &self.conv_index,
+                    schedule: &self.schedule,
+                    ws,
+                };
                 self.model.graph.execute(img, &mut exec)
             },
         )

@@ -1,0 +1,94 @@
+//! One monotonic time base for the whole serving stack.
+//!
+//! Span timestamps, latency measurements, reaper deadlines and pacing
+//! decisions used to call `Instant::now()` independently; they now share
+//! this clock, so a trace span and the latency histogram it explains are
+//! guaranteed to agree on when things happened. The clock is mockable in
+//! tests only through [`Clock::advance`], which skews every subsequent
+//! reading forward — serving code never calls it, so in production the
+//! clock is exactly the OS monotonic clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Microseconds of artificial forward skew (test mocking; 0 in serving).
+static SKEW_US: AtomicU64 = AtomicU64::new(0);
+
+/// The process-wide origin every microsecond timestamp is relative to.
+/// Pinned lazily on first use; [`Clock::init`] (called by `obs::arm`)
+/// pins it eagerly so trace timestamps start near process start.
+fn origin() -> Instant {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    *ORIGIN.get_or_init(Instant::now)
+}
+
+/// The single monotonic clock (see the module docs).
+pub struct Clock;
+
+impl Clock {
+    /// The current instant, including any test skew. Drop-in for
+    /// `Instant::now()` — the returned `Instant` composes with
+    /// `Duration` arithmetic and deadlines exactly as before.
+    #[inline]
+    pub fn now() -> Instant {
+        let skew = SKEW_US.load(Ordering::Relaxed);
+        let now = Instant::now();
+        if skew == 0 {
+            now
+        } else {
+            now + Duration::from_micros(skew)
+        }
+    }
+
+    /// Microseconds since the process origin (the trace time base).
+    #[inline]
+    pub fn micros() -> u64 {
+        Self::micros_of(Self::now())
+    }
+
+    /// Microseconds since the origin for an already-captured instant
+    /// (saturates to 0 for instants that predate the origin).
+    #[inline]
+    pub fn micros_of(t: Instant) -> u64 {
+        t.saturating_duration_since(origin()).as_micros() as u64
+    }
+
+    /// Pin the origin (idempotent). Arming the recorder calls this so
+    /// span timestamps are anchored before the first span is cut.
+    pub fn init() {
+        let _ = origin();
+    }
+
+    /// Skew the clock forward — the test mock. Affects every consumer
+    /// process-wide; serving code must never call it.
+    pub fn advance(d: Duration) {
+        SKEW_US.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic_and_origin_relative() {
+        Clock::init();
+        let a = Clock::micros();
+        let b = Clock::micros();
+        assert!(b >= a, "clock went backwards");
+        let t = Clock::now();
+        let us = Clock::micros_of(t);
+        assert!(us >= a, "instant conversion disagrees with direct reads");
+    }
+
+    #[test]
+    fn advance_skews_every_subsequent_reading() {
+        // keep the skew tiny: it is process-global and other tests run
+        // concurrently against the same clock
+        let before = Clock::micros();
+        Clock::advance(Duration::from_micros(700));
+        let after = Clock::micros();
+        assert!(after >= before + 700, "skew not applied: {before} -> {after}");
+    }
+}

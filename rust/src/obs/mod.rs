@@ -1,0 +1,31 @@
+//! Zero-dependency observability for the serving stack.
+//!
+//! Three pieces, threaded through every layer of the serving path:
+//!
+//! * [`clock`] — the single monotonic time base (mockable in tests)
+//!   that spans, latency histograms, reaper deadlines, and pacing all
+//!   share.
+//! * [`recorder`] — the span flight recorder: per-thread lock-free
+//!   seqlock rings behind a process-wide registry, recording
+//!   queue→assemble→forward→im2col/pack/gemm→reply stage spans (tagged
+//!   with lane, conv layer, and BFP widths) plus instant events for
+//!   swaps, promotions, restarts, retirements, steals, sheds, faults,
+//!   timeouts, and drains. One relaxed atomic load when unarmed;
+//!   bounded memory when armed.
+//! * [`trace`] — Chrome/Perfetto `trace_event` JSON export with atomic
+//!   (tmp + rename) file writes.
+//!
+//! Arm with [`arm`] (the CLI does this for `--trace`), cut spans with
+//! [`span`]/[`event`], dump with [`write_chrome_trace`] or aggregate
+//! with `coordinator::metrics::stage_rows` for the report tables.
+
+pub mod clock;
+pub mod recorder;
+pub mod trace;
+
+pub use clock::Clock;
+pub use recorder::{
+    arm, armed, current_ctx, disarm, event, event_lane, lane_scope, layer_scope, record_span_at,
+    set_ctx, snapshot, span, span_for_lane, Ctx, CtxGuard, EventKind, SpanGuard, SpanRecord, Stage,
+};
+pub use trace::{chrome_trace_json, write_chrome_trace};

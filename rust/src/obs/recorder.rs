@@ -1,0 +1,683 @@
+//! The span flight recorder: fixed-capacity, lock-free, always-on-able.
+//!
+//! Each recording thread owns one ring of [`RING_SLOTS`] slots taken
+//! from a process-wide registry. A slot is four `AtomicU64` words —
+//! `[seq, t0_us, dur_us, meta]` — written under a seqlock protocol
+//! (odd `seq` while the words are in flux, even once stable), so the
+//! owning thread appends without locks while `snapshot()` reads every
+//! ring concurrently and simply discards slots it catches mid-write.
+//! Wraparound keeps the newest records; memory is bounded by the peak
+//! number of concurrently recording threads (rings are recycled through
+//! a free list when threads exit, and their contents are retained for
+//! the dump).
+//!
+//! Everything is gated on one process-wide `ARMED` atomic: unarmed,
+//! `span()` returns an inert guard and the hot path performs one
+//! relaxed load — no clock read, no allocation, no ring write.
+
+use super::clock::Clock;
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ---- arming ---------------------------------------------------------------
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Arm the recorder process-wide (idempotent). Pins the clock origin so
+/// span timestamps share one time base from here on.
+pub fn arm() {
+    Clock::init();
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm the recorder (tests; serving arms once and never disarms).
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Whether tracing is armed — the one relaxed load unarmed hot paths pay.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+// ---- stage and event vocabulary -------------------------------------------
+
+/// The span stage classes of the serving pipeline, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Enqueue → batch dispatch (queue wait, recorded per request).
+    Queue,
+    /// Batch formation: EDF class pick + linger + pop.
+    Assemble,
+    /// One batched forward pass on a serving lane.
+    Forward,
+    /// Patch gather into a column tile (per GEMM tile).
+    Im2col,
+    /// Activation quantize + BFP panel pack (per conv layer).
+    Pack,
+    /// The tiled BFP GEMM microkernel sweep (per conv layer).
+    Gemm,
+    /// Response encode + channel/socket write.
+    Reply,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order (also the wire/code order).
+    pub const ALL: [Stage; 7] = [
+        Stage::Queue,
+        Stage::Assemble,
+        Stage::Forward,
+        Stage::Im2col,
+        Stage::Pack,
+        Stage::Gemm,
+        Stage::Reply,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Assemble => "assemble",
+            Stage::Forward => "forward",
+            Stage::Im2col => "im2col",
+            Stage::Pack => "pack",
+            Stage::Gemm => "gemm",
+            Stage::Reply => "reply",
+        }
+    }
+
+    fn code(self) -> u8 {
+        self as u8
+    }
+
+    fn from_code(v: u8) -> Option<Stage> {
+        Stage::ALL.get(v as usize).copied()
+    }
+}
+
+/// Instant (zero-duration) fabric events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EventKind {
+    /// NSR monitor demanded a safer rung (hot-swap).
+    Swap,
+    /// NSR headroom allowed a cheaper rung (promotion).
+    Promote,
+    /// Lane supervisor respawned a panicked executor.
+    Restart,
+    /// Lane supervisor exhausted its budget and retired the lane.
+    Retire,
+    /// A per-lane worker stole a batch from a hotter lane.
+    Steal,
+    /// A batch was shed/downgraded out of its home class.
+    Shed,
+    /// The fault injector fired on a batch.
+    Fault,
+    /// The deadline reaper expired a queued request.
+    Timeout,
+    /// Drain began refusing new work.
+    Drain,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; 9] = [
+        EventKind::Swap,
+        EventKind::Promote,
+        EventKind::Restart,
+        EventKind::Retire,
+        EventKind::Steal,
+        EventKind::Shed,
+        EventKind::Fault,
+        EventKind::Timeout,
+        EventKind::Drain,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Swap => "swap",
+            EventKind::Promote => "promote",
+            EventKind::Restart => "restart",
+            EventKind::Retire => "retire",
+            EventKind::Steal => "steal",
+            EventKind::Shed => "shed",
+            EventKind::Fault => "fault",
+            EventKind::Timeout => "timeout",
+            EventKind::Drain => "drain",
+        }
+    }
+
+    fn code(self) -> u8 {
+        self as u8
+    }
+
+    fn from_code(v: u8) -> Option<EventKind> {
+        EventKind::ALL.get(v as usize).copied()
+    }
+}
+
+// ---- thread-local tagging context -----------------------------------------
+
+pub(crate) const LANE_NONE: u8 = u8::MAX;
+pub(crate) const LAYER_NONE: u16 = u16::MAX;
+
+fn lane_code(label: &str) -> u8 {
+    match label {
+        "gold" => 0,
+        "standard" => 1,
+        "economy" => 2,
+        "shed" => 3,
+        _ => LANE_NONE,
+    }
+}
+
+fn lane_name(code: u8) -> &'static str {
+    match code {
+        0 => "gold",
+        1 => "standard",
+        2 => "economy",
+        3 => "shed",
+        _ => "-",
+    }
+}
+
+/// The per-thread tagging context every recorded span inherits: lane,
+/// conv layer index, and the BFP weight/activation fraction widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ctx {
+    pub lane: u8,
+    pub layer: u16,
+    pub wbits: u8,
+    pub ibits: u8,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Self { lane: LANE_NONE, layer: LAYER_NONE, wbits: 0, ibits: 0 }
+    }
+}
+
+thread_local! {
+    static CTX: Cell<Ctx> =
+        const { Cell::new(Ctx { lane: u8::MAX, layer: u16::MAX, wbits: 0, ibits: 0 }) };
+}
+
+/// This thread's current tagging context.
+pub fn current_ctx() -> Ctx {
+    CTX.try_with(Cell::get).unwrap_or_default()
+}
+
+/// Overwrite this thread's tagging context (pool workers install the
+/// spawner's context with this; scoped code uses the guards below).
+pub fn set_ctx(ctx: Ctx) {
+    let _ = CTX.try_with(|c| c.set(ctx));
+}
+
+/// Restores the previous context on drop.
+pub struct CtxGuard {
+    prev: Ctx,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        set_ctx(self.prev);
+    }
+}
+
+/// Tag this thread's spans with a lane until the guard drops.
+#[must_use = "the context reverts when the guard drops"]
+pub fn lane_scope(label: &str) -> CtxGuard {
+    let prev = current_ctx();
+    set_ctx(Ctx { lane: lane_code(label), ..prev });
+    CtxGuard { prev }
+}
+
+/// Tag this thread's spans with a conv layer index and its BFP widths
+/// until the guard drops.
+#[must_use = "the context reverts when the guard drops"]
+pub fn layer_scope(layer: u16, wbits: u8, ibits: u8) -> CtxGuard {
+    let prev = current_ctx();
+    set_ctx(Ctx { layer, wbits, ibits, ..prev });
+    CtxGuard { prev }
+}
+
+// ---- record encoding ------------------------------------------------------
+
+const KIND_SPAN: u8 = 0;
+const KIND_INSTANT: u8 = 1;
+
+/// Pack kind + stage/event code + context into one word:
+/// `byte0 kind · byte1 code · byte2 lane · byte3 wbits · byte4 ibits ·
+/// bytes5-6 layer`.
+fn pack(kind: u8, code: u8, ctx: Ctx) -> u64 {
+    (kind as u64)
+        | (code as u64) << 8
+        | (ctx.lane as u64) << 16
+        | (ctx.wbits as u64) << 24
+        | (ctx.ibits as u64) << 32
+        | (ctx.layer as u64) << 40
+}
+
+// ---- the seqlock ring -----------------------------------------------------
+
+/// Slots per ring; at 32 B/slot one ring is 128 KiB of bounded memory.
+pub(crate) const RING_SLOTS: usize = 4096;
+const WORDS: usize = 4;
+
+struct RawRecord {
+    seq: u64,
+    t0_us: u64,
+    dur_us: u64,
+    meta: u64,
+}
+
+struct Ring {
+    id: u32,
+    /// Claimed by exactly one live thread at a time (free-list CAS).
+    in_use: AtomicBool,
+    /// Monotone write counter; slot = head % RING_SLOTS.
+    head: AtomicU64,
+    /// `RING_SLOTS × [seq, t0_us, dur_us, meta]`.
+    slots: Vec<AtomicU64>,
+}
+
+impl Ring {
+    fn new(id: u32) -> Self {
+        Self {
+            id,
+            in_use: AtomicBool::new(false),
+            head: AtomicU64::new(0),
+            slots: (0..RING_SLOTS * WORDS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Single-writer append (only the owning thread calls this), safe
+    /// against concurrent `read_all`. Seqlock: `seq` goes odd (2n+1)
+    /// before the data words change and even (2n+2) after, with a
+    /// release fence between, so a reader that sees matching even
+    /// generations on both sides of its data loads saw a whole record.
+    fn write(&self, t0_us: u64, dur_us: u64, meta: u64) {
+        let n = self.head.fetch_add(1, Ordering::Relaxed);
+        let base = (n as usize % RING_SLOTS) * WORDS;
+        self.slots[base].store(2 * n + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        self.slots[base + 1].store(t0_us, Ordering::Relaxed);
+        self.slots[base + 2].store(dur_us, Ordering::Relaxed);
+        self.slots[base + 3].store(meta, Ordering::Relaxed);
+        self.slots[base].store(2 * n + 2, Ordering::Release);
+    }
+
+    /// Read every stable slot; slots the writer is inside (odd seq or a
+    /// generation change across the data loads) are retried briefly and
+    /// then skipped — a snapshot never blocks the hot path.
+    fn read_all(&self) -> Vec<RawRecord> {
+        let mut out = Vec::new();
+        for chunk in self.slots.chunks_exact(WORDS) {
+            for _ in 0..16 {
+                let s1 = chunk[0].load(Ordering::Acquire);
+                if s1 == 0 {
+                    break; // never written
+                }
+                if s1 & 1 == 1 {
+                    std::hint::spin_loop();
+                    continue; // writer is inside this record
+                }
+                let t0_us = chunk[1].load(Ordering::Relaxed);
+                let dur_us = chunk[2].load(Ordering::Relaxed);
+                let meta = chunk[3].load(Ordering::Relaxed);
+                fence(Ordering::Acquire);
+                if chunk[0].load(Ordering::Relaxed) == s1 {
+                    out.push(RawRecord { seq: s1 / 2 - 1, t0_us, dur_us, meta });
+                    break;
+                }
+                std::hint::spin_loop();
+            }
+        }
+        out
+    }
+}
+
+// ---- registry and per-thread ownership ------------------------------------
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Releases the ring back to the free list when the thread exits; the
+/// ring (and its records) stays in the registry for the dump.
+struct LocalRing(Arc<Ring>);
+
+impl Drop for LocalRing {
+    fn drop(&mut self) {
+        self.0.in_use.store(false, Ordering::Release);
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalRing>> = const { RefCell::new(None) };
+}
+
+fn acquire_ring() -> Arc<Ring> {
+    let mut reg = registry().lock().unwrap();
+    for ring in reg.iter() {
+        if ring
+            .in_use
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            return Arc::clone(ring);
+        }
+    }
+    let ring = Arc::new(Ring::new(reg.len() as u32));
+    ring.in_use.store(true, Ordering::Relaxed);
+    reg.push(Arc::clone(&ring));
+    ring
+}
+
+fn write_record(t0_us: u64, dur_us: u64, meta: u64) {
+    // try_with: a span dropped during thread teardown records nothing
+    // rather than panicking in a destructor
+    let _ = LOCAL.try_with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let local = slot.get_or_insert_with(|| LocalRing(acquire_ring()));
+        local.0.write(t0_us, dur_us, meta);
+    });
+}
+
+// ---- the recording API ----------------------------------------------------
+
+/// RAII span guard: records `[creation, drop]` into the flight recorder
+/// when tracing is armed; an inert shell otherwise.
+pub struct SpanGuard {
+    start_us: u64,
+    meta: u64,
+    live: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.live {
+            let dur = Clock::micros().saturating_sub(self.start_us);
+            write_record(self.start_us, dur, self.meta);
+        }
+    }
+}
+
+/// Open a span for `stage`, tagged with this thread's current context.
+#[must_use = "the span is recorded when the guard drops"]
+#[inline]
+pub fn span(stage: Stage) -> SpanGuard {
+    if !armed() {
+        return SpanGuard { start_us: 0, meta: 0, live: false };
+    }
+    SpanGuard {
+        start_us: Clock::micros(),
+        meta: pack(KIND_SPAN, stage.code(), current_ctx()),
+        live: true,
+    }
+}
+
+/// Open a span tagged with an explicit lane (overrides the context lane).
+#[must_use = "the span is recorded when the guard drops"]
+#[inline]
+pub fn span_for_lane(stage: Stage, lane: &str) -> SpanGuard {
+    if !armed() {
+        return SpanGuard { start_us: 0, meta: 0, live: false };
+    }
+    let ctx = Ctx { lane: lane_code(lane), ..current_ctx() };
+    SpanGuard { start_us: Clock::micros(), meta: pack(KIND_SPAN, stage.code(), ctx), live: true }
+}
+
+/// Record a span with explicit timing — for cross-thread stages like
+/// queue wait, where no single guard can straddle both ends.
+#[inline]
+pub fn record_span_at(stage: Stage, start_us: u64, dur_us: u64) {
+    if armed() {
+        write_record(start_us, dur_us, pack(KIND_SPAN, stage.code(), current_ctx()));
+    }
+}
+
+/// Record an instant event tagged with this thread's current context.
+#[inline]
+pub fn event(kind: EventKind) {
+    if armed() {
+        write_record(Clock::micros(), 0, pack(KIND_INSTANT, kind.code(), current_ctx()));
+    }
+}
+
+/// Record an instant event tagged with an explicit lane.
+#[inline]
+pub fn event_lane(kind: EventKind, lane: &str) {
+    if armed() {
+        let ctx = Ctx { lane: lane_code(lane), ..current_ctx() };
+        write_record(Clock::micros(), 0, pack(KIND_INSTANT, kind.code(), ctx));
+    }
+}
+
+// ---- snapshots ------------------------------------------------------------
+
+/// One decoded flight-recorder record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Flight-recorder ring id — a stable per-thread "virtual tid".
+    pub ring: u32,
+    /// Per-ring write sequence (newest-wins wraparound order).
+    pub seq: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// `true` for instant events (`dur_us` is 0).
+    pub instant: bool,
+    /// Stage or event name.
+    pub name: &'static str,
+    /// Lane label, `-` when untagged.
+    pub lane: &'static str,
+    /// Conv layer index, when tagged.
+    pub layer: Option<u16>,
+    pub wbits: u8,
+    pub ibits: u8,
+}
+
+/// Decode every stable record in every ring, sorted by start time.
+/// Safe to call while recording continues.
+pub fn snapshot() -> Vec<SpanRecord> {
+    let rings: Vec<Arc<Ring>> = registry().lock().unwrap().iter().map(Arc::clone).collect();
+    let mut out = Vec::new();
+    for ring in rings {
+        for raw in ring.read_all() {
+            if let Some(rec) = decode(ring.id, raw) {
+                out.push(rec);
+            }
+        }
+    }
+    out.sort_by_key(|r| (r.start_us, r.ring, r.seq));
+    out
+}
+
+fn decode(ring: u32, raw: RawRecord) -> Option<SpanRecord> {
+    let kind = (raw.meta & 0xff) as u8;
+    let code = ((raw.meta >> 8) & 0xff) as u8;
+    let lane = ((raw.meta >> 16) & 0xff) as u8;
+    let wbits = ((raw.meta >> 24) & 0xff) as u8;
+    let ibits = ((raw.meta >> 32) & 0xff) as u8;
+    let layer = ((raw.meta >> 40) & 0xffff) as u16;
+    let (instant, name) = match kind {
+        KIND_SPAN => (false, Stage::from_code(code)?.name()),
+        KIND_INSTANT => (true, EventKind::from_code(code)?.name()),
+        _ => return None,
+    };
+    Some(SpanRecord {
+        ring,
+        seq: raw.seq,
+        start_us: raw.t0_us,
+        dur_us: raw.dur_us,
+        instant,
+        name,
+        lane: lane_name(lane),
+        layer: (layer != LAYER_NONE).then_some(layer),
+        wbits,
+        ibits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::MutexGuard;
+
+    /// Serializes tests that flip the process-global `ARMED` flag so
+    /// concurrent armed/unarmed assertions cannot cross-contaminate.
+    fn arm_lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_the_newest_records() {
+        let ring = Ring::new(0);
+        let total = (RING_SLOTS + 123) as u64;
+        for i in 0..total {
+            ring.write(i, i * 2, i * 3);
+        }
+        let mut recs = ring.read_all();
+        assert_eq!(recs.len(), RING_SLOTS);
+        recs.sort_by_key(|r| r.seq);
+        assert_eq!(recs.first().unwrap().seq, total - RING_SLOTS as u64);
+        assert_eq!(recs.last().unwrap().seq, total - 1);
+        for r in &recs {
+            assert_eq!(r.t0_us, r.seq);
+            assert_eq!(r.dur_us, r.seq * 2);
+            assert_eq!(r.meta, r.seq * 3);
+        }
+    }
+
+    #[test]
+    fn concurrent_reads_never_observe_torn_records() {
+        const MAGIC: u64 = 0xdead_beef;
+        let ring = Arc::new(Ring::new(1));
+        let writer = {
+            let ring = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                for i in 0..50_000u64 {
+                    // self-validating pattern: any torn mix of two
+                    // records breaks at least one equation below
+                    ring.write(i, i ^ MAGIC, i.wrapping_mul(31));
+                }
+            })
+        };
+        let mut seen = 0usize;
+        let mut validate = |recs: Vec<RawRecord>| {
+            for r in recs {
+                assert_eq!(r.t0_us, r.seq, "torn record: seq/t0 mismatch");
+                assert_eq!(r.dur_us, r.t0_us ^ MAGIC, "torn record: dur mismatch");
+                assert_eq!(r.meta, r.t0_us.wrapping_mul(31), "torn record: meta mismatch");
+                seen += 1;
+            }
+        };
+        while !writer.is_finished() {
+            validate(ring.read_all());
+        }
+        writer.join().unwrap();
+        validate(ring.read_all());
+        assert!(seen >= RING_SLOTS, "reader never saw a full ring");
+    }
+
+    #[test]
+    fn ctx_scopes_nest_and_restore() {
+        let base = current_ctx();
+        {
+            let _lane = lane_scope("gold");
+            assert_eq!(current_ctx().lane, 0);
+            {
+                let _layer = layer_scope(3, 8, 7);
+                let c = current_ctx();
+                assert_eq!((c.lane, c.layer, c.wbits, c.ibits), (0, 3, 8, 7));
+            }
+            assert_eq!(current_ctx().layer, LAYER_NONE);
+            assert_eq!(current_ctx().lane, 0);
+        }
+        assert_eq!(current_ctx(), base);
+    }
+
+    #[test]
+    fn unarmed_spans_record_nothing() {
+        let _lock = arm_lock();
+        disarm();
+        let before = snapshot().len();
+        {
+            let _g = span(Stage::Reply);
+            let _h = span_for_lane(Stage::Gemm, "gold");
+            event(EventKind::Drain);
+            event_lane(EventKind::Steal, "economy");
+            record_span_at(Stage::Queue, 1, 2);
+        }
+        assert_eq!(snapshot().len(), before, "unarmed recording leaked records");
+    }
+
+    #[test]
+    fn released_rings_are_reused_and_snapshots_retain_thread_spans() {
+        let _lock = arm_lock();
+        arm();
+        // a marker layer index no real model reaches, to pick our spans
+        // out of whatever else the process recorded
+        let marker = 912u16;
+        let t = std::thread::spawn(move || {
+            let _ctx = layer_scope(marker, 6, 5);
+            let _lane = lane_scope("economy");
+            drop(span(Stage::Gemm));
+            event(EventKind::Fault);
+        });
+        t.join().unwrap();
+        disarm();
+        let mine: Vec<SpanRecord> =
+            snapshot().into_iter().filter(|r| r.layer == Some(marker)).collect();
+        assert_eq!(mine.len(), 2, "thread-exit dropped retained records: {mine:?}");
+        let gemm = mine.iter().find(|r| r.name == "gemm").expect("gemm span");
+        assert!(!gemm.instant);
+        assert_eq!((gemm.lane, gemm.wbits, gemm.ibits), ("economy", 6, 5));
+        let fault = mine.iter().find(|r| r.name == "fault").expect("fault event");
+        assert!(fault.instant);
+        // the exited thread's ring is back on the free list
+        let reused = registry().lock().unwrap().iter().any(|r| !r.in_use.load(Ordering::Relaxed));
+        assert!(reused, "no ring returned to the free list after thread exit");
+    }
+
+    #[test]
+    fn armed_tracing_never_changes_logits() {
+        use crate::models::Model;
+        use crate::nn::prepared::PreparedModel;
+        use crate::nn::Block;
+        use crate::quant::{BfpConfig, LayerSchedule};
+        use crate::tensor::Tensor;
+
+        let _lock = arm_lock();
+        let mut rng = crate::data::Rng::new(5);
+        let model = Model {
+            name: "obs-tiny".into(),
+            graph: Block::seq(vec![
+                Block::Conv(crate::models::init::conv2d("c1", 4, 2, 3, 3, 1, 1, &mut rng)),
+                Block::ReLU,
+                Block::Conv(crate::models::init::conv2d("c2", 3, 4, 3, 3, 1, 1, &mut rng)),
+                Block::Flatten,
+            ]),
+            input_shape: vec![2, 8, 8],
+            num_classes: 0,
+        };
+        let img =
+            Tensor::from_vec(crate::data::Rng::new(7).normal_vec(2 * 8 * 8, 1.0), &[2, 8, 8]);
+        let prepared = PreparedModel::new(model, LayerSchedule::uniform(BfpConfig::new(7, 7)));
+        disarm();
+        let cold = prepared.forward(&img);
+        arm();
+        let hot = prepared.forward(&img);
+        disarm();
+        assert_eq!(cold.data.len(), hot.data.len());
+        for (a, b) in cold.data.iter().zip(&hot.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "armed tracing changed the math");
+        }
+        // and the armed run actually recorded the conv-stage spans
+        let names: std::collections::HashSet<&str> = snapshot().iter().map(|r| r.name).collect();
+        for want in ["im2col", "pack", "gemm"] {
+            assert!(names.contains(want), "armed forward recorded no `{want}` span");
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! Chrome/Perfetto `trace_event` export of the flight recorder.
+//!
+//! The emitted JSON is the "JSON Array Format" both `chrome://tracing`
+//! and [ui.perfetto.dev](https://ui.perfetto.dev) load directly: spans
+//! as complete events (`ph:"X"`, microsecond `ts`/`dur`) and fabric
+//! events as global instants (`ph:"i"`, `s:"g"`), one virtual `tid` per
+//! recorder ring, with lane / layer / BFP widths in `args`. Written by
+//! hand — the crate stays zero-dependency.
+
+use super::recorder::{self, SpanRecord};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render records as a Chrome `trace_event` JSON document.
+pub fn chrome_trace_json(recs: &[SpanRecord]) -> String {
+    let mut out = String::with_capacity(recs.len() * 128 + 32);
+    out.push_str("{\"traceEvents\":[");
+    for (i, r) in recs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        // stage/event/lane names are fixed identifiers — nothing to escape
+        if r.instant {
+            write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"event\",\"ph\":\"i\",\"s\":\"g\",\"ts\":{},\
+                 \"pid\":1,\"tid\":{},\"args\":{{\"lane\":\"{}\"}}}}",
+                r.name, r.start_us, r.ring, r.lane
+            )
+            .expect("write to String cannot fail");
+        } else {
+            write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"stage\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":1,\"tid\":{},\"args\":{{\"lane\":\"{}\"",
+                r.name, r.start_us, r.dur_us, r.ring, r.lane
+            )
+            .expect("write to String cannot fail");
+            if let Some(layer) = r.layer {
+                write!(out, ",\"layer\":{layer},\"wbits\":{},\"ibits\":{}", r.wbits, r.ibits)
+                    .expect("write to String cannot fail");
+            }
+            out.push_str("}}");
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Snapshot the recorder and write the Chrome trace file atomically:
+/// the JSON is staged to `<path>.tmp` and renamed over `path`, so a
+/// concurrent reader — or a `kill` between periodic dumps — never sees
+/// a half-written file.
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
+    let json = chrome_trace_json(&recorder::snapshot());
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, json)?;
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- a minimal JSON parser: just enough to round-trip the trace ----
+
+    #[derive(Debug, PartialEq)]
+    enum Json {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Json>),
+        Obj(Vec<(String, Json)>),
+    }
+
+    impl Json {
+        fn get(&self, key: &str) -> Option<&Json> {
+            match self {
+                Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+
+        fn num(&self) -> f64 {
+            match self {
+                Json::Num(v) => *v,
+                other => panic!("expected a number, got {other:?}"),
+            }
+        }
+
+        fn str(&self) -> &str {
+            match self {
+                Json::Str(s) => s,
+                other => panic!("expected a string, got {other:?}"),
+            }
+        }
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl<'a> Parser<'a> {
+        fn parse(text: &'a str) -> Json {
+            let mut p = Parser { b: text.as_bytes(), i: 0 };
+            let v = p.value();
+            p.ws();
+            assert_eq!(p.i, p.b.len(), "trailing garbage after the document");
+            v
+        }
+
+        fn ws(&mut self) {
+            while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+                self.i += 1;
+            }
+        }
+
+        fn peek(&mut self) -> u8 {
+            self.ws();
+            self.b[self.i]
+        }
+
+        fn eat(&mut self, c: u8) {
+            assert_eq!(self.peek(), c, "expected `{}` at byte {}", c as char, self.i);
+            self.i += 1;
+        }
+
+        fn lit(&mut self, s: &str) {
+            self.ws();
+            assert_eq!(&self.b[self.i..self.i + s.len()], s.as_bytes());
+            self.i += s.len();
+        }
+
+        fn value(&mut self) -> Json {
+            match self.peek() {
+                b'{' => self.obj(),
+                b'[' => self.arr(),
+                b'"' => Json::Str(self.string()),
+                b't' => {
+                    self.lit("true");
+                    Json::Bool(true)
+                }
+                b'f' => {
+                    self.lit("false");
+                    Json::Bool(false)
+                }
+                b'n' => {
+                    self.lit("null");
+                    Json::Null
+                }
+                _ => self.number(),
+            }
+        }
+
+        fn obj(&mut self) -> Json {
+            self.eat(b'{');
+            let mut fields = Vec::new();
+            if self.peek() != b'}' {
+                loop {
+                    self.ws();
+                    let k = self.string();
+                    self.eat(b':');
+                    fields.push((k, self.value()));
+                    if self.peek() == b',' {
+                        self.eat(b',');
+                    } else {
+                        break;
+                    }
+                }
+            }
+            self.eat(b'}');
+            Json::Obj(fields)
+        }
+
+        fn arr(&mut self) -> Json {
+            self.eat(b'[');
+            let mut items = Vec::new();
+            if self.peek() != b']' {
+                loop {
+                    items.push(self.value());
+                    if self.peek() == b',' {
+                        self.eat(b',');
+                    } else {
+                        break;
+                    }
+                }
+            }
+            self.eat(b']');
+            Json::Arr(items)
+        }
+
+        fn string(&mut self) -> String {
+            self.eat(b'"');
+            let mut s = String::new();
+            while self.b[self.i] != b'"' {
+                let c = self.b[self.i];
+                if c == b'\\' {
+                    self.i += 1;
+                    s.push(self.b[self.i] as char);
+                } else {
+                    s.push(c as char);
+                }
+                self.i += 1;
+            }
+            self.i += 1;
+            s
+        }
+
+        fn number(&mut self) -> Json {
+            self.ws();
+            let start = self.i;
+            while self.i < self.b.len()
+                && (self.b[self.i].is_ascii_digit()
+                    || matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E'))
+            {
+                self.i += 1;
+            }
+            let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+            Json::Num(text.parse().expect("malformed number"))
+        }
+    }
+
+    fn sample_records() -> Vec<SpanRecord> {
+        vec![
+            SpanRecord {
+                ring: 0,
+                seq: 0,
+                start_us: 10,
+                dur_us: 40,
+                instant: false,
+                name: "gemm",
+                lane: "gold",
+                layer: Some(2),
+                wbits: 8,
+                ibits: 7,
+            },
+            SpanRecord {
+                ring: 1,
+                seq: 3,
+                start_us: 55,
+                dur_us: 0,
+                instant: true,
+                name: "swap",
+                lane: "economy",
+                layer: None,
+                wbits: 0,
+                ibits: 0,
+            },
+            SpanRecord {
+                ring: 0,
+                seq: 1,
+                start_us: 60,
+                dur_us: 5,
+                instant: false,
+                name: "reply",
+                lane: "-",
+                layer: None,
+                wbits: 0,
+                ibits: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn perfetto_json_round_trips_through_the_parser() {
+        let doc = Parser::parse(&chrome_trace_json(&sample_records()));
+        let events = match doc.get("traceEvents").unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("traceEvents is not an array: {other:?}"),
+        };
+        assert_eq!(events.len(), 3);
+
+        let gemm = &events[0];
+        assert_eq!(gemm.get("name").unwrap().str(), "gemm");
+        assert_eq!(gemm.get("ph").unwrap().str(), "X");
+        assert_eq!(gemm.get("ts").unwrap().num(), 10.0);
+        assert_eq!(gemm.get("dur").unwrap().num(), 40.0);
+        assert_eq!(gemm.get("tid").unwrap().num(), 0.0);
+        let args = gemm.get("args").unwrap();
+        assert_eq!(args.get("lane").unwrap().str(), "gold");
+        assert_eq!(args.get("layer").unwrap().num(), 2.0);
+        assert_eq!(args.get("wbits").unwrap().num(), 8.0);
+        assert_eq!(args.get("ibits").unwrap().num(), 7.0);
+
+        let swap = &events[1];
+        assert_eq!(swap.get("ph").unwrap().str(), "i");
+        assert_eq!(swap.get("s").unwrap().str(), "g");
+        assert!(swap.get("dur").is_none(), "instants carry no duration");
+        assert_eq!(swap.get("args").unwrap().get("lane").unwrap().str(), "economy");
+
+        let reply = &events[2];
+        assert_eq!(reply.get("args").unwrap().get("lane").unwrap().str(), "-");
+        assert!(reply.get("args").unwrap().get("layer").is_none());
+    }
+
+    #[test]
+    fn empty_snapshot_is_still_a_valid_document() {
+        let doc = Parser::parse(&chrome_trace_json(&[]));
+        assert!(matches!(doc.get("traceEvents").unwrap(), Json::Arr(v) if v.is_empty()));
+    }
+
+    #[test]
+    fn trace_file_write_is_atomic() {
+        let dir = std::env::temp_dir().join("bfp_obs_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Parser::parse(&text);
+        assert!(doc.get("traceEvents").is_some());
+        assert!(!path.with_extension("tmp").exists(), "staging file left behind");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -171,11 +171,13 @@ impl FaultInjector {
         for spec in &self.specs {
             match spec {
                 FaultSpec::DelayLane { lane: l, ms, every } if l == lane && n % every == 0 => {
+                    crate::obs::event_lane(crate::obs::EventKind::Fault, lane);
                     std::thread::sleep(Duration::from_millis(*ms));
                 }
                 FaultSpec::PanicLane { lane: l, nth, times }
                     if l == lane && n >= *nth && n < nth + times =>
                 {
+                    crate::obs::event_lane(crate::obs::EventKind::Fault, lane);
                     panic!("injected fault: lane {lane} batch {n}");
                 }
                 _ => {}

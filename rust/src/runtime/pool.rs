@@ -27,6 +27,10 @@
 //! parallelism compose without oversubscription: a batch of one image
 //! parallelizes its GEMM panels, a full batch parallelizes over images
 //! and runs each GEMM serially.
+//!
+//! Workers inherit the spawner's [`crate::obs`] tagging context (lane /
+//! layer / BFP widths), so spans cut inside a parallel region land in
+//! the flight recorder with the same tags as the calling thread's.
 
 use std::cell::Cell;
 use std::sync::OnceLock;
@@ -111,11 +115,13 @@ where
         return;
     }
     let panel_rows = rows.div_ceil(threads);
+    let ctx = crate::obs::current_ctx();
     std::thread::scope(|s| {
         for (p, panel) in out.chunks_mut(panel_rows * row_width).enumerate() {
             let f = &f;
             s.spawn(move || {
                 IN_POOL.with(|c| c.set(true));
+                crate::obs::set_ctx(ctx);
                 f(p * panel_rows, panel);
             });
         }
@@ -147,11 +153,13 @@ where
         return;
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
+    let ctx = crate::obs::current_ctx();
     std::thread::scope(|s| {
         for _ in 0..threads {
             let (f, next) = (&f, &next);
             s.spawn(move || {
                 IN_POOL.with(|c| c.set(true));
+                crate::obs::set_ctx(ctx);
                 loop {
                     let t = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     if t >= tasks {
@@ -219,6 +227,7 @@ where
         }
         chunks.push(c);
     }
+    let ctx = crate::obs::current_ctx();
     std::thread::scope(|s| {
         let handles: Vec<_> = chunks
             .into_iter()
@@ -226,6 +235,7 @@ where
                 let (init, f) = (&init, &f);
                 s.spawn(move || {
                     IN_POOL.with(|cell| cell.set(true));
+                    crate::obs::set_ctx(ctx);
                     let mut state = init();
                     c.into_iter().map(|t| f(&mut state, t)).collect::<Vec<R>>()
                 })

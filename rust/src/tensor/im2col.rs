@@ -88,6 +88,7 @@ pub fn im2col(img: &[f32], geo: &Conv2dGeometry, out: &mut [f32]) {
 /// Tiling the column range produces exactly the columns [`im2col`]
 /// produces (tested below), just without the footprint.
 pub fn im2col_tile(img: &[f32], geo: &Conv2dGeometry, col0: usize, ncols: usize, out: &mut [f32]) {
+    let _span = crate::obs::span(crate::obs::Stage::Im2col);
     let (c, h, w) = (geo.in_channels, geo.in_h, geo.in_w);
     assert_eq!(img.len(), c * h * w, "image size mismatch");
     let (oh, ow) = (geo.out_h(), geo.out_w());
