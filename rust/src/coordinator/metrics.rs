@@ -263,6 +263,21 @@ pub struct Metrics {
     pub lane_restarts: u64,
     /// Lanes retired after exhausting their restart budget.
     pub lanes_retired: u64,
+    /// Weight-cache scrub passes that actually verified checksums (a
+    /// pass skipped because the cache generation was unchanged does not
+    /// count).
+    pub scrub_passes: u64,
+    /// Cache entries whose checksum mismatched and were requantized from
+    /// the fp32 weights by the scrubber.
+    pub scrub_repairs: u64,
+    /// Inbound frames rejected for a payload CRC mismatch.
+    pub frame_crc_errors: u64,
+    /// Requests refused at admission for NaN/Inf values or a shape the
+    /// model cannot take.
+    pub bad_inputs: u64,
+    /// Batches whose lane produced non-finite logits and was failed with
+    /// a typed `CorruptOutput` error instead of replying with garbage.
+    pub corrupt_outputs: u64,
     /// Per-class breakdowns in first-seen order (empty for classless
     /// serving through the plain [`super::InferenceServer`]).
     classes: Vec<ClassMetrics>,
@@ -324,6 +339,29 @@ impl Metrics {
     /// Count one lane retirement (restart budget exhausted).
     pub fn record_retired(&mut self) {
         self.lanes_retired += 1;
+    }
+
+    /// Count one weight-cache scrub pass that verified checksums, with
+    /// however many corrupted entries it repaired.
+    pub fn record_scrub(&mut self, repairs: u64) {
+        self.scrub_passes += 1;
+        self.scrub_repairs += repairs;
+    }
+
+    /// Count one inbound frame rejected for a payload CRC mismatch.
+    pub fn record_frame_crc_error(&mut self) {
+        self.frame_crc_errors += 1;
+    }
+
+    /// Count one request refused at admission for non-finite values or a
+    /// bad shape.
+    pub fn record_bad_input(&mut self) {
+        self.bad_inputs += 1;
+    }
+
+    /// Count one batch failed for non-finite lane output.
+    pub fn record_corrupt_output(&mut self) {
+        self.corrupt_outputs += 1;
     }
 
     fn class_entry(&mut self, class: &str) -> &mut ClassMetrics {
@@ -401,6 +439,11 @@ impl Metrics {
         self.total_requests += other.total_requests;
         self.lane_restarts += other.lane_restarts;
         self.lanes_retired += other.lanes_retired;
+        self.scrub_passes += other.scrub_passes;
+        self.scrub_repairs += other.scrub_repairs;
+        self.frame_crc_errors += other.frame_crc_errors;
+        self.bad_inputs += other.bad_inputs;
+        self.corrupt_outputs += other.corrupt_outputs;
         for oc in
             other.classes.iter().filter(|c| c.requests > 0 || c.timeouts > 0 || c.failures > 0)
         {
@@ -429,6 +472,11 @@ impl Metrics {
         self.wall_time = Duration::ZERO;
         self.lane_restarts = 0;
         self.lanes_retired = 0;
+        self.scrub_passes = 0;
+        self.scrub_repairs = 0;
+        self.frame_crc_errors = 0;
+        self.bad_inputs = 0;
+        self.corrupt_outputs = 0;
         for c in &mut self.classes {
             c.clear();
         }
@@ -717,6 +765,11 @@ mod tests {
         scratch.record_failure("standard");
         scratch.record_restart();
         scratch.record_retired();
+        scratch.record_scrub(2);
+        scratch.record_scrub(0);
+        scratch.record_frame_crc_error();
+        scratch.record_bad_input();
+        scratch.record_corrupt_output();
         assert_eq!(scratch.total_requests, 0);
 
         let mut global = Metrics::default();
@@ -726,9 +779,16 @@ mod tests {
         let std_c = global.class("standard").unwrap();
         assert_eq!((std_c.requests, std_c.timeouts, std_c.failures), (0, 0, 1));
         assert_eq!((global.lane_restarts, global.lanes_retired), (1, 1));
+        assert_eq!((global.scrub_passes, global.scrub_repairs), (2, 2));
+        assert_eq!(
+            (global.frame_crc_errors, global.bad_inputs, global.corrupt_outputs),
+            (1, 1, 1)
+        );
 
         scratch.clear();
         assert_eq!(scratch.lane_restarts, 0);
+        assert_eq!(scratch.scrub_passes, 0);
+        assert_eq!(scratch.corrupt_outputs, 0);
         // cleared zero-count entries must not seed duplicates
         global.merge_from(&scratch);
         assert_eq!(global.classes().len(), 2);

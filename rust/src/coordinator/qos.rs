@@ -351,6 +351,11 @@ pub enum QosErrorKind {
     /// The server is draining and the drain bound expired with this
     /// request still queued.
     Draining,
+    /// The serving lane's forward produced non-finite logits (NaN/Inf)
+    /// — data corruption caught by the output guard rail, not a crash.
+    /// The batch is failed typed and the lane hot-swaps one rung safer
+    /// through the same path an NSR violation takes; no respawn.
+    CorruptOutput,
 }
 
 impl QosErrorKind {
@@ -360,6 +365,7 @@ impl QosErrorKind {
             QosErrorKind::ExecutorPanic => "executor-panic",
             QosErrorKind::LaneRetired => "lane-retired",
             QosErrorKind::Draining => "draining",
+            QosErrorKind::CorruptOutput => "corrupt-output",
         }
     }
 }
@@ -697,6 +703,19 @@ impl Lane {
         self.monitor.reset_probes();
         self.swaps += 1;
         obs::event_lane(obs::EventKind::Swap, self.label);
+    }
+
+    /// Fault-injection hook (`flip:weights:<lane>:<layer>:<nth>`): flip
+    /// one mantissa bit of `layer`'s entry in the *shared* weight
+    /// cache. The lane's own in-flight views share `Arc`s that stay
+    /// clean — this models store-level corruption for the background
+    /// scrubber to detect and repair, not corruption of data already
+    /// handed to the execution engine.
+    fn corrupt_cached_weights(&self, layer: &str) {
+        let cache = self.prepared.shared_cache();
+        if cache.lock().unwrap().corrupt_entry_bit(layer, 0) {
+            obs::event_lane(obs::EventKind::Corrupt, self.label);
+        }
     }
 
     /// The inverse of [`Lane::swap_safer`]: re-promote one rung back
@@ -1066,6 +1085,13 @@ fn fail_batch(
 /// reference forward never sits on the response path. Returns the
 /// completion instant (the timing regression tests pin against it).
 ///
+/// Between the forward and the replies sits the numeric guard rail: a
+/// batch whose logits contain NaN/Inf is *corrupt output* — every
+/// member is failed with a typed [`QosErrorKind::CorruptOutput`], the
+/// `corrupt_outputs` counter bumps once per batch, and the lane swaps
+/// one rung safer. The lane stays live (`Ok` is returned): corruption
+/// is a data problem, not an executor crash.
+///
 /// The forward — and the fault injector's per-batch hook, which may
 /// deliberately panic — runs under `catch_unwind`: a panic yields
 /// `Err(LaneFailure)` carrying the poisoned batch's responders so the
@@ -1096,7 +1122,9 @@ fn deliver_batch(
     let fwd_span = obs::span(obs::Stage::Forward);
     let forwarded = catch_unwind(AssertUnwindSafe(|| {
         if let Some(f) = faults {
-            f.on_batch(label);
+            if let Some(layer) = f.on_batch(label) {
+                lane.corrupt_cached_weights(&layer);
+            }
         }
         lane.forward(images)
     }));
@@ -1107,6 +1135,25 @@ fn deliver_batch(
             return Err(LaneFailure { class, meta, message: panic_message(payload) });
         }
     };
+    // Numeric guard rail: a non-finite logit is data corruption, not a
+    // crash. Fail the whole batch with a typed `CorruptOutput`, count
+    // it, and move the lane one rung safer through the same
+    // schedule-swap path an NSR violation takes — the lane stays live,
+    // no respawn.
+    if outputs.iter().any(|t| t.data.iter().any(|v| !v.is_finite())) {
+        let completed = Clock::now();
+        obs::event_lane(obs::EventKind::Corrupt, lane.label);
+        global.lock().unwrap().record_corrupt_output();
+        fail_meta(
+            meta,
+            class,
+            QosErrorKind::CorruptOutput,
+            &format!("lane {} produced non-finite logits", lane.label),
+            Some(global),
+        );
+        lane.swap_safer();
+        return Ok(completed);
+    }
     // retained for the post-response telemetry probe (logits are small)
     let probe = probe.map(|(idx, img)| (img, outputs[idx].clone()));
     let served_by = lane.label.to_string();
@@ -1759,6 +1806,52 @@ fn run_dispatcher(
 
 // ---- the server ------------------------------------------------------
 
+/// Background integrity-scrub cadence. Short enough that the chaos
+/// suite's "corruption detected within one scrub period" SLO resolves
+/// quickly; generation parking keeps the idle-cache cost to one lock +
+/// one load per period regardless.
+pub const SCRUB_PERIOD: Duration = Duration::from_millis(25);
+
+/// Spawn the background integrity scrubber: a low-priority thread that
+/// walks the shared weight cache verifying every entry's checksum
+/// ([`WeightCache::scrub`]) and requantizing corrupted entries from the
+/// still-resident fp32 weights. The thread *parks* while the cache
+/// generation is unchanged since its last pass — the clean steady state
+/// pays one mutex lock and one integer compare per period, never a
+/// checksum walk. Each completed pass records
+/// [`Metrics::record_scrub`]; repairs additionally emit a `corrupt`
+/// instant event per healed layer.
+fn spawn_scrubber(
+    model: Model,
+    cache: SharedWeightCache,
+    metrics: Arc<Mutex<Metrics>>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        // sentinel: the first tick always verifies, so entries quantized
+        // during lane warmup get one startup pass before parking
+        let mut seen_gen = u64::MAX;
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(SCRUB_PERIOD);
+            if cache.lock().unwrap().generation() == seen_gen {
+                continue; // parked: cache unchanged since the last pass
+            }
+            let report = {
+                let mut c = cache.lock().unwrap();
+                let r = c.scrub(&model);
+                // re-read: a repair pass bumps the generation itself
+                seen_gen = c.generation();
+                r
+            };
+            metrics.lock().unwrap().record_scrub(report.repaired.len() as u64);
+            obs::event(obs::EventKind::Scrub);
+            for layer in &report.repaired {
+                obs::event_lane(obs::EventKind::Corrupt, layer);
+            }
+        }
+    })
+}
+
 /// Handle to a running QoS precision router.
 pub struct QosServer {
     tx: Option<Sender<QueuedRequest>>,
@@ -1768,6 +1861,9 @@ pub struct QosServer {
     drain: Arc<DrainState>,
     next_id: u64,
     started: Instant,
+    /// Tells the integrity scrubber to exit at its next tick.
+    scrub_stop: Arc<AtomicBool>,
+    scrubber: Option<JoinHandle<()>>,
 }
 
 impl QosServer {
@@ -1806,6 +1902,13 @@ impl QosServer {
 
         let (tx, rx): (Sender<QueuedRequest>, Receiver<QueuedRequest>) = channel();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let scrub_stop = Arc::new(AtomicBool::new(false));
+        let scrubber = spawn_scrubber(
+            model,
+            Arc::clone(&cache),
+            Arc::clone(&metrics),
+            Arc::clone(&scrub_stop),
+        );
         let workers = config.workers;
         let ctx = FabricCtx {
             config,
@@ -1828,6 +1931,8 @@ impl QosServer {
             drain,
             next_id: 0,
             started: Clock::now(),
+            scrub_stop,
+            scrubber: Some(scrubber),
         }
     }
 
@@ -1969,6 +2074,8 @@ impl QosServer {
     /// of propagating the panic into the caller.
     pub fn shutdown(mut self) -> QosReport {
         drop(self.tx.take());
+        // flag first so the scrubber winds down while the worker drains
+        self.scrub_stop.store(true, Ordering::Relaxed);
         let (lanes, worker_panic) = match self.worker.take() {
             Some(w) => match w.join() {
                 Ok(lanes) => (lanes, false),
@@ -1976,6 +2083,9 @@ impl QosServer {
             },
             None => (Vec::new(), false),
         };
+        if let Some(s) = self.scrubber.take() {
+            let _ = s.join();
+        }
         let mut metrics = self.metrics.lock().unwrap().clone();
         metrics.wall_time = self.started.elapsed();
         QosReport { metrics, lanes, worker_panic }
@@ -2360,6 +2470,51 @@ mod tests {
         assert_eq!(gold.requests, 4);
         assert_eq!(gold.deadline_misses, if want_missed { 4 } else { 0 });
         assert_eq!(scratch.total_requests, 0, "scratch must be cleared after the fold");
+    }
+
+    /// Numeric guard rail: a forward whose logits overflow to Inf is
+    /// *corrupt output*, not a crash — the batch fails with a typed
+    /// `CorruptOutput`, the counter bumps, and the lane hot-swaps one
+    /// rung safer while staying live (no `LaneFailure`, no respawn).
+    #[test]
+    fn non_finite_logits_fail_typed_and_swap_the_lane_safer() {
+        let mut rng = crate::data::Rng::new(3);
+        let mut conv = crate::models::init::conv2d("c1", 4, 2, 3, 3, 1, 1, &mut rng);
+        for w in conv.weights.data.iter_mut() {
+            *w = 1.0e30; // finite weights whose products overflow f32
+        }
+        let model = Model {
+            name: "overflow".into(),
+            graph: Block::seq(vec![Block::Conv(conv), Block::Flatten]),
+            input_shape: vec![2, 8, 8],
+            num_classes: 0,
+        };
+        let cache = WeightCache::shared();
+        let spec = LaneSpec::new(vec![LaneStep::uniform(6, 6), LaneStep::uniform(8, 8)]);
+        let mcfg = MonitorConfig { sample_every: 0, ..Default::default() };
+        let mut lane = Lane::new("gold", model, &spec, &cache, mcfg);
+
+        let enqueued_at = Instant::now();
+        let deadline = enqueued_at + Duration::from_secs(5);
+        let (tx, rx) = channel();
+        let meta = vec![ResponseMeta { id: 7, respond: tx, enqueued_at, deadline }];
+        let images = vec![Tensor::from_vec(vec![1.0e10; 2 * 8 * 8], &[2, 8, 8])];
+        let batch =
+            LaneBatch { class: QosClass::Gold, batch_seq: 1, downgraded: false, images, meta };
+        let global = Mutex::new(Metrics::default());
+        let mut scratch = Metrics::default();
+        deliver_batch(&mut lane, batch, &mut scratch, &global, None)
+            .expect("corrupt output is a data problem, not an executor crash");
+
+        let err = rx.recv().expect("poisoned batch must resolve").unwrap_err();
+        assert_eq!(err.kind, QosErrorKind::CorruptOutput);
+        assert_eq!(err.class, QosClass::Gold);
+        assert!(err.message.contains("non-finite"), "message: {}", err.message);
+        let m = global.lock().unwrap();
+        assert_eq!(m.corrupt_outputs, 1, "guard must count once per batch");
+        assert_eq!(m.class("gold").unwrap().failures, 1);
+        assert_eq!(lane.pos, 1, "guard must move the lane one rung safer");
+        assert_eq!(lane.swaps, 1);
     }
 
     /// End-to-end smoke over the tiny model: three classes, responses for

@@ -4,7 +4,7 @@
 //! ([`crate::runtime::faults`]) against a real serving fabric and then
 //! *asserts recovery*, not just survival: SLO violations come back as
 //! strings so the CLI (`bfp-cnn chaos`) can fail CI with an exact
-//! explanation. Three scenarios cover the three fault domains:
+//! explanation. Five scenarios cover the fault domains:
 //!
 //! * `kill-lane` — panic the economy executor on its 3rd and 4th
 //!   batches (`panic:economy:3:2`). The supervisor must respawn the
@@ -21,19 +21,33 @@
 //!   The retrying client must recover with exactly two reconnects,
 //!   serve every request with logits bit-identical to an in-process
 //!   reference, and the health frame must then report every lane live.
+//! * `bit-flip` — flip one mantissa bit of the first conv layer's entry
+//!   in the shared weight cache on the gold lane's 3rd batch
+//!   (`flip:weights:gold:<layer>:3`). Storage corruption, not in-flight
+//!   corruption: every response must stay bit-identical to the
+//!   no-fault run (lanes hold clean `Arc` views), and the background
+//!   scrubber must detect the checksum mismatch, requantize the entry
+//!   from the fp32 weights, and go quiet — exactly one repair, visible
+//!   in the metrics.
+//! * `poison-input` — the 3rd decoded request's payload goes non-finite
+//!   after the frame CRC check (`nan:input:3`). The admission guard
+//!   must refuse exactly that request with a typed `BadInput` error
+//!   frame — never enqueueing it — while every other request serves
+//!   bit-identically to an in-process reference.
 //!
 //! Everything is deterministic: fixed request sequences, seeded faults,
 //! batch size 1 with zero linger, shedding and probing disabled — so a
 //! scenario that fails in CI reproduces exactly on a laptop.
 
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::qos::SCRUB_PERIOD;
 use crate::coordinator::{
     LaneSet, LaneStep, LogHistogram, QosClass, QosConfig, QosErrorKind, QosResult, QosServer,
     ShedPolicy, WorkerMode,
 };
 use crate::models::Model;
 use crate::net::loadgen::RunStats;
-use crate::net::{NetServer, NetServerConfig, QuotaConfig, RetryPolicy, RetryingClient};
+use crate::net::{NetClient, NetServer, NetServerConfig, QuotaConfig, RetryPolicy, RetryingClient};
 use crate::runtime::FaultInjector;
 use crate::telemetry::MonitorConfig;
 use crate::tensor::Tensor;
@@ -344,9 +358,183 @@ fn flaky_net(
     Ok((stats, v))
 }
 
-/// Run the named scenario (`kill-lane`, `slow-lane`, `flaky-net`, or
-/// `all`) against `model`, driving requests from `pool`. Returns the
-/// loadgen-shaped stats plus every SLO violation.
+/// `flip:weights:gold:<first-conv>:3`: on the gold lane's 3rd batch,
+/// one mantissa bit of the model's first conv layer's entry in the
+/// shared weight cache is flipped — storage corruption, not in-flight
+/// corruption: the lanes' active views share clean `Arc`s, so every
+/// response must stay bit-identical to the no-fault run. The
+/// background scrubber must wake on the cache generation bump, detect
+/// the checksum mismatch, requantize the entry from the still-resident
+/// fp32 weights, and go quiet: exactly one repair, visible in
+/// `scrub_repairs`. A repair that were not bit-identical to a fresh
+/// quantize would fail its checksum again on the next pass and be
+/// repaired anew — quiescence is the proof.
+fn bit_flip(
+    model: &Model,
+    pool: &[Tensor],
+    workers: WorkerMode,
+    seed: u64,
+) -> Result<(RunStats, Vec<String>)> {
+    let mut v: Vec<String> = Vec::new();
+    let gold_ref = reference_logits(model, pool, QosClass::Gold, REQUESTS, workers)?;
+
+    let mut layer: Option<String> = None;
+    model.graph.visit_convs(&mut |c| {
+        if layer.is_none() {
+            layer = Some(c.name.clone());
+        }
+    });
+    let layer = layer.context("bit-flip needs a model with at least one conv layer")?;
+    let faults = Arc::new(FaultInjector::parse(&format!("flip:weights:gold:{layer}:3"), seed)?);
+    let mut server = QosServer::start(model.clone(), &lanes(), config(workers, Some(faults)));
+    let mut stats = blank_stats("bit-flip", "chaos", workers);
+    let t0 = Instant::now();
+    for (i, want) in gold_ref.iter().enumerate() {
+        stats.sent += 1;
+        let sent = Instant::now();
+        match server.infer(QosClass::Gold, pool[i % pool.len()].clone()) {
+            Ok(resp) => {
+                stats.ok += 1;
+                stats.latency_us.record(sent.elapsed().as_micros() as u64);
+                if resp.logits.data != want.data {
+                    v.push(format!(
+                        "bit-flip: gold request {i} logits diverge from the no-fault run \
+                         (in-flight views must not see store corruption)"
+                    ));
+                }
+            }
+            Err(e) => {
+                stats.errors += 1;
+                v.push(format!("bit-flip: gold request {i} failed: {e:#}"));
+            }
+        }
+    }
+    // detection SLO: the corruption bumped the cache generation, so the
+    // scrubber's next tick must find and repair it — allow a generous
+    // multiple of the period for slow CI machines
+    let deadline = Instant::now() + SCRUB_PERIOD * 40;
+    let mut repaired = server.metrics().scrub_repairs;
+    while repaired == 0 && Instant::now() < deadline {
+        std::thread::sleep(SCRUB_PERIOD / 5);
+        repaired = server.metrics().scrub_repairs;
+    }
+    if repaired == 0 {
+        v.push("bit-flip: the scrubber never repaired the flipped entry within its SLO".into());
+    } else {
+        // repair-is-bit-identical SLO by quiescence: a mis-repaired
+        // entry would keep failing its checksum and re-repairing
+        std::thread::sleep(SCRUB_PERIOD * 10);
+        let m = server.metrics();
+        if m.scrub_repairs != repaired {
+            v.push(format!(
+                "bit-flip: repaired entry failed re-verification ({} repairs after {repaired})",
+                m.scrub_repairs
+            ));
+        }
+    }
+    stats.wall = t0.elapsed();
+    let report = server.shutdown();
+    if report.metrics.scrub_repairs != 1 {
+        v.push(format!(
+            "bit-flip: exactly one repair must show in the final report, got {}",
+            report.metrics.scrub_repairs
+        ));
+    }
+    if report.metrics.scrub_passes == 0 {
+        v.push("bit-flip: the scrubber never completed a verification pass".into());
+    }
+    if report.metrics.lane_restarts != 0 || report.metrics.lanes_retired != 0 {
+        v.push("bit-flip: store corruption must never restart or retire a lane".into());
+    }
+    if report.metrics.corrupt_outputs != 0 {
+        v.push("bit-flip: no corrupt outputs should surface (lanes hold clean views)".into());
+    }
+    if stats.ok != stats.sent {
+        v.push("bit-flip: every request must serve — the store, not the traffic, is hurt".into());
+    }
+    Ok((stats, v))
+}
+
+/// `nan:input:3`: the 3rd decoded request's payload goes non-finite
+/// *after* the frame CRC check — modeling request memory corrupting
+/// between transport and admission. The admission guard must refuse
+/// exactly that request with a typed `BadInput` error frame (never
+/// enqueueing it, never touching a lane), while every other request
+/// serves bit-identically to an in-process reference.
+fn poison_input(
+    model: &Model,
+    pool: &[Tensor],
+    workers: WorkerMode,
+    seed: u64,
+) -> Result<(RunStats, Vec<String>)> {
+    let mut v: Vec<String> = Vec::new();
+    let reference = reference_logits(model, pool, QosClass::Standard, REQUESTS, workers)?;
+
+    let qos = QosServer::start(model.clone(), &lanes(), config(workers, None));
+    let faults = Arc::new(FaultInjector::parse("nan:input:3", seed)?);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").context("binding loopback")?;
+    let net_config =
+        NetServerConfig { max_conns: 16, quota: QuotaConfig::default(), faults: Some(faults) };
+    let server = NetServer::start(listener, qos, net_config)?;
+
+    let mut client = NetClient::connect(server.addr()).context("connecting to the front")?;
+    client.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut stats = blank_stats("poison-input", "chaos", workers);
+    let mut failed: Vec<usize> = Vec::new();
+    let t0 = Instant::now();
+    for (i, want) in reference.iter().enumerate() {
+        stats.sent += 1;
+        let sent = Instant::now();
+        match client.infer("chaos", QosClass::Standard, pool[i % pool.len()].clone()) {
+            Ok(resp) => {
+                stats.ok += 1;
+                stats.latency_us.record(sent.elapsed().as_micros() as u64);
+                if resp.logits.data != want.data {
+                    v.push(format!(
+                        "poison-input: request {i} logits diverge from the in-process reference"
+                    ));
+                }
+            }
+            Err(e) => {
+                stats.errors += 1;
+                failed.push(i);
+                let msg = format!("{e:#}");
+                if !msg.contains("BadInput") || !msg.contains("non-finite") {
+                    v.push(format!("poison-input: request {i} failed with the wrong error: {msg}"));
+                }
+            }
+        }
+    }
+    stats.wall = t0.elapsed();
+    if failed != vec![2] {
+        v.push(format!(
+            "poison-input: exactly the 3rd request (0-based index 2) must fail, got {failed:?}"
+        ));
+    }
+    let report = server.shutdown_with_drain(Duration::from_millis(250));
+    if report.metrics.bad_inputs != 1 {
+        v.push(format!(
+            "poison-input: report counts {} bad inputs, expected exactly 1",
+            report.metrics.bad_inputs
+        ));
+    }
+    if report.metrics.total_requests as usize != REQUESTS - 1 {
+        v.push(format!(
+            "poison-input: the poisoned request must never be enqueued ({} served, expected {})",
+            report.metrics.total_requests,
+            REQUESTS - 1
+        ));
+    }
+    if report.metrics.lane_restarts != 0 {
+        v.push("poison-input: a refused input must never touch a lane executor".into());
+    }
+    Ok((stats, v))
+}
+
+/// Run the named scenario (`kill-lane`, `slow-lane`, `flaky-net`,
+/// `bit-flip`, `poison-input`, or `all`) against `model`, driving
+/// requests from `pool`. Returns the loadgen-shaped stats plus every
+/// SLO violation.
 pub fn run_scenarios(
     model: &Model,
     pool: &[Tensor],
@@ -376,9 +564,21 @@ pub fn run_scenarios(
         out.stats.push(s);
         out.violations.extend(v);
     }
+    if all || which == "bit-flip" {
+        matched = true;
+        let (s, v) = bit_flip(model, pool, workers, seed)?;
+        out.stats.push(s);
+        out.violations.extend(v);
+    }
+    if all || which == "poison-input" {
+        matched = true;
+        let (s, v) = poison_input(model, pool, workers, seed)?;
+        out.stats.push(s);
+        out.violations.extend(v);
+    }
     anyhow::ensure!(
         matched,
-        "unknown chaos scenario `{which}` (kill-lane|slow-lane|flaky-net|all)"
+        "unknown chaos scenario `{which}` (kill-lane|slow-lane|flaky-net|bit-flip|poison-input|all)"
     );
     Ok(out)
 }
@@ -424,6 +624,28 @@ mod tests {
             assert_eq!(out.stats[0].ok, 22);
             assert_eq!(out.stats[0].errors, 2);
         }
+    }
+
+    #[test]
+    fn bit_flip_detects_and_repairs_store_corruption() {
+        let out =
+            run_scenarios(&tiny_model(), &pool(), "bit-flip", WorkerMode::Single, 7).expect("runs");
+        assert!(out.violations.is_empty(), "bit-flip SLO violations: {:?}", out.violations);
+        assert_eq!(out.stats.len(), 1);
+        assert_eq!(out.stats[0].sent, 8);
+        assert_eq!(out.stats[0].ok, 8, "store corruption must not hurt traffic");
+        assert_eq!(out.stats[0].errors, 0);
+    }
+
+    #[test]
+    fn poison_input_fails_exactly_the_poisoned_request() {
+        let out = run_scenarios(&tiny_model(), &pool(), "poison-input", WorkerMode::Single, 7)
+            .expect("runs");
+        assert!(out.violations.is_empty(), "poison-input SLO violations: {:?}", out.violations);
+        assert_eq!(out.stats.len(), 1);
+        assert_eq!(out.stats[0].sent, 8);
+        assert_eq!(out.stats[0].ok, 7);
+        assert_eq!(out.stats[0].errors, 1);
     }
 
     #[test]

@@ -19,7 +19,8 @@
 //!                [--quota-rps 0] [--quota-burst 32] [--quota-debt 64]
 //!                [--reap-grace-ms 0] [--drain-ms 0]
 //!                [--faults panic:economy:3:2,reset:conn:1] [--faults-seed 0]
-//! bfp-cnn chaos  [--model lenet] [--scenario kill-lane|slow-lane|flaky-net|all]
+//! bfp-cnn chaos  [--model lenet]
+//!                [--scenario kill-lane|slow-lane|flaky-net|bit-flip|poison-input|all]
 //!                [--workers <mode>] [--seed 1] [--json CHAOS_all.json]
 //! bfp-cnn loadgen [--model lenet] [--requests 96] [--mix 1:3:8] [--lanes 4]
 //!                 [--pressure 16] [--calib 3] [--batch 8] [--workers <mode>]
@@ -75,10 +76,17 @@
 //! still queued that long past their deadline fail with a typed
 //! `Timeout`), `--drain-ms` turns the timed shutdown into a graceful
 //! drain, and `--faults` arms the deterministic fault injector
-//! (`runtime::faults` grammar; also via `BFP_FAULTS`/`BFP_FAULTS_SEED`).
+//! (`runtime::faults` grammar, including the integrity faults
+//! `flip:weights:<lane>:<layer>:<n>`, `corrupt:frame:<n>` and
+//! `nan:input:<n>`; also via `BFP_FAULTS`/`BFP_FAULTS_SEED`).
 //! `chaos` runs the seeded fault scenarios from `harness::chaos` —
-//! kill-lane / slow-lane / flaky-net — asserts their recovery SLOs, and
-//! exits non-zero on any violation (CI's chaos smoke job).
+//! kill-lane / slow-lane / flaky-net / bit-flip / poison-input —
+//! asserts their recovery SLOs, and exits non-zero on any violation
+//! (CI's chaos smoke job). Integrity is end-to-end: every wire frame
+//! carries a payload CRC, request tensors are validated at admission,
+//! cached weight panels are checksummed and scrubbed/repaired by a
+//! background thread, and non-finite lane output fails typed — the
+//! counters all surface in the `Stats` frame and the `top` dashboard.
 
 use bfp_cnn::coordinator::engine::{forward_batch_ref, ExecMode};
 use bfp_cnn::coordinator::server::{Backend, InferenceServer, PreparedBackend, RustBackend, ServerConfig};
@@ -834,6 +842,16 @@ fn top_cmd(addr: &str, interval: std::time::Duration, iters: usize) -> anyhow::R
             "bfp-cnn top — {addr} | up {:.1}s | {} requests served | frame {frame}",
             stats.uptime_ms as f64 / 1000.0,
             stats.total_requests,
+        );
+        let integ = &stats.integrity;
+        println!(
+            "integrity — scrubs {} (repairs {}) | frame CRC errors {} | bad inputs {} | \
+             corrupt outputs {}",
+            integ.scrub_passes,
+            integ.scrub_repairs,
+            integ.frame_crc_errors,
+            integ.bad_inputs,
+            integ.corrupt_outputs,
         );
         println!();
         let mut lanes = Table::new(

@@ -213,12 +213,14 @@ enum Attempt {
     Lost(anyhow::Error),
 }
 
-/// A one-shot client that survives reset sockets and server restarts:
-/// on a transport error or a `ServerGone` refusal it drops the
-/// connection, sleeps a jittered exponential backoff, reconnects, and
-/// resends. Requests are only retried on a fresh connection (one
-/// request in flight at a time), so stale replies cannot be matched to
-/// a retried request. Typed refusals other than `ServerGone` are the
+/// A one-shot client that survives reset sockets, server restarts, and
+/// corrupted frames: on a transport error, a `ServerGone` refusal, a
+/// `Corrupt` refusal (the server's CRC check rejected our request), or
+/// a reply that fails our own CRC check, it drops the connection,
+/// sleeps a jittered exponential backoff, reconnects, and resends.
+/// Requests are only retried on a fresh connection (one request in
+/// flight at a time), so stale replies cannot be matched to a retried
+/// request. Typed refusals other than `ServerGone`/`Corrupt` are the
 /// server's final word and are not retried.
 pub struct RetryingClient {
     addr: String,
@@ -289,6 +291,13 @@ impl RetryingClient {
             // the fabric behind this socket is going away — reconnect
             Ok(Reply::Error(e)) if e.code == ErrorCode::ServerGone => {
                 Attempt::Lost(anyhow::anyhow!("server gone: {}", e.message))
+            }
+            // bits flipped somewhere between us and the server (either
+            // our request failed its CRC there, or the reply frame is
+            // refusing to decode here — the transport is suspect either
+            // way): retry on a fresh connection
+            Ok(Reply::Error(e)) if e.code == ErrorCode::Corrupt => {
+                Attempt::Lost(anyhow::anyhow!("corrupt frame: {}", e.message))
             }
             // any other typed refusal is the server's final word
             Ok(Reply::Error(e)) => Attempt::Final(anyhow::anyhow!(

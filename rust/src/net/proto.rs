@@ -2,11 +2,15 @@
 //!
 //! Every frame is a `u32` little-endian payload length followed by the
 //! payload. A payload starts with a protocol version byte and a message
-//! kind, then kind-specific fields; integers are little-endian and
+//! kind, then kind-specific fields, and ends with a little-endian
+//! FNV-1a CRC over everything before it; integers are little-endian and
 //! tensors carry their shape plus raw f32 bits, so logits round-trip
 //! the wire bit-identically. The decoder is a bounds-checked cursor —
-//! truncated, oversized or garbage frames surface as a typed
-//! [`DecodeError`], never a panic or an out-of-bounds read.
+//! truncated, oversized, bit-flipped or garbage frames surface as a
+//! typed [`DecodeError`], never a panic or an out-of-bounds read. The
+//! version byte is checked *before* the CRC, so a peer speaking an
+//! older protocol is told so ([`DecodeError::BadVersion`]) instead of
+//! being accused of corruption.
 
 use crate::coordinator::QosClass;
 use crate::tensor::Tensor;
@@ -14,8 +18,12 @@ use std::fmt;
 use std::io::{self, Read, Write};
 
 /// Bumped on any incompatible layout change; the server rejects frames
-/// carrying any other version instead of misparsing them.
-pub const PROTO_VERSION: u8 = 1;
+/// carrying any other version instead of misparsing them. Version 2
+/// added the trailing payload CRC.
+pub const PROTO_VERSION: u8 = 2;
+
+/// Bytes of the trailing payload CRC.
+const CRC_BYTES: usize = 4;
 
 /// Hard cap on a frame payload: large enough for any batch-1 CNN input
 /// in this repo, small enough that a hostile length prefix cannot make
@@ -65,6 +73,9 @@ pub enum DecodeError {
     BadShape,
     /// The payload decoded but left unread trailing bytes.
     TrailingBytes { extra: usize },
+    /// The trailing payload CRC does not match: the frame was damaged
+    /// in flight (or forged). Nothing in it can be trusted.
+    Corrupt,
 }
 
 impl fmt::Display for DecodeError {
@@ -81,6 +92,7 @@ impl fmt::Display for DecodeError {
             DecodeError::TrailingBytes { extra } => {
                 write!(f, "{extra} trailing bytes after the message")
             }
+            DecodeError::Corrupt => write!(f, "payload CRC mismatch (corrupt frame)"),
         }
     }
 }
@@ -138,6 +150,13 @@ pub enum ErrorCode {
     /// The serving lane failed the request (executor panic, retired
     /// lane) — a server-side fault, not the client's.
     Internal,
+    /// The request tensor failed admission validation (NaN/Inf values
+    /// or a shape the model cannot take); it was never enqueued.
+    BadInput,
+    /// Data corruption: the request frame failed its CRC, or the
+    /// serving lane produced non-finite logits and refused to reply
+    /// with garbage.
+    Corrupt,
 }
 
 impl ErrorCode {
@@ -149,6 +168,8 @@ impl ErrorCode {
             ErrorCode::ServerGone => 4,
             ErrorCode::Timeout => 5,
             ErrorCode::Internal => 6,
+            ErrorCode::BadInput => 7,
+            ErrorCode::Corrupt => 8,
         }
     }
 
@@ -160,6 +181,8 @@ impl ErrorCode {
             4 => Some(ErrorCode::ServerGone),
             5 => Some(ErrorCode::Timeout),
             6 => Some(ErrorCode::Internal),
+            7 => Some(ErrorCode::BadInput),
+            8 => Some(ErrorCode::Corrupt),
             _ => None,
         }
     }
@@ -236,9 +259,30 @@ pub struct StageStatsWire {
 pub struct NetStats {
     pub uptime_ms: u64,
     pub total_requests: u64,
+    /// Data-integrity counters (weight-cache scrubber, frame CRCs,
+    /// numeric guard rails).
+    pub integrity: IntegrityWire,
     pub lanes: Vec<LaneStatsWire>,
     pub tenants: Vec<TenantStatsWire>,
     pub stages: Vec<StageStatsWire>,
+}
+
+/// The integrity counters carried by a stats frame (mirrors the
+/// corresponding [`crate::coordinator::Metrics`] fields).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IntegrityWire {
+    /// Weight-cache scrub passes that actually verified checksums.
+    pub scrub_passes: u64,
+    /// Cache entries whose checksum mismatched and were requantized
+    /// from the fp32 weights.
+    pub scrub_repairs: u64,
+    /// Inbound frames rejected for a payload CRC mismatch.
+    pub frame_crc_errors: u64,
+    /// Requests refused at admission for NaN/Inf values or a bad shape.
+    pub bad_inputs: u64,
+    /// Batches whose lane produced non-finite logits and was failed
+    /// with a typed error instead of replying with garbage.
+    pub corrupt_outputs: u64,
 }
 
 /// Any decoded payload.
@@ -312,6 +356,28 @@ pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
     Ok(Some(buf))
 }
 
+// ---- payload CRC -----------------------------------------------------
+
+/// 32-bit FNV-1a over the payload body. Not cryptographic — it guards
+/// against accidental corruption (flipped bits, truncated copies), not
+/// an adversary, and costs one multiply-add per byte with zero tables.
+fn payload_crc(body: &[u8]) -> u32 {
+    let mut hash: u32 = 0x811c_9dc5;
+    for &b in body {
+        hash ^= u32::from(b);
+        hash = hash.wrapping_mul(0x0100_0193);
+    }
+    hash
+}
+
+/// Append the trailing CRC to a fully encoded payload body. Every
+/// `encode_*` returns through here.
+fn seal(mut p: Vec<u8>) -> Vec<u8> {
+    let crc = payload_crc(&p);
+    p.extend_from_slice(&crc.to_le_bytes());
+    p
+}
+
 // ---- encoding --------------------------------------------------------
 
 fn put_str(out: &mut Vec<u8>, s: &str) {
@@ -341,7 +407,7 @@ pub fn encode_request(req: &NetRequest) -> Vec<u8> {
     p.push(class_code(req.class));
     p.extend_from_slice(&req.deadline_us.to_le_bytes());
     put_tensor(&mut p, &req.image);
-    p
+    seal(p)
 }
 
 /// Encode a response payload.
@@ -360,7 +426,7 @@ pub fn encode_response(resp: &NetResponse) -> Vec<u8> {
     p.extend_from_slice(&resp.queue_wait_us.to_le_bytes());
     p.extend_from_slice(&resp.batch_size.to_le_bytes());
     put_tensor(&mut p, &resp.logits);
-    p
+    seal(p)
 }
 
 /// Encode an error payload.
@@ -371,12 +437,12 @@ pub fn encode_error(err: &NetError) -> Vec<u8> {
     p.extend_from_slice(&err.id.to_le_bytes());
     p.push(err.code.code());
     put_str(&mut p, &err.message);
-    p
+    seal(p)
 }
 
 /// Encode a health probe (no fields beyond the kind).
 pub fn encode_health_req() -> Vec<u8> {
-    vec![PROTO_VERSION, KIND_HEALTH_REQ]
+    seal(vec![PROTO_VERSION, KIND_HEALTH_REQ])
 }
 
 /// Encode a health report payload.
@@ -392,12 +458,12 @@ pub fn encode_health(health: &NetHealth) -> Vec<u8> {
         p.extend_from_slice(&lane.restarts.to_le_bytes());
         p.extend_from_slice(&lane.queued.to_le_bytes());
     }
-    p
+    seal(p)
 }
 
 /// Encode a stats probe (no fields beyond the kind).
 pub fn encode_stats_req() -> Vec<u8> {
-    vec![PROTO_VERSION, KIND_STATS_REQ]
+    seal(vec![PROTO_VERSION, KIND_STATS_REQ])
 }
 
 /// Encode a stats report payload.
@@ -412,6 +478,11 @@ pub fn encode_stats(stats: &NetStats) -> Vec<u8> {
     p.push(KIND_STATS);
     p.extend_from_slice(&stats.uptime_ms.to_le_bytes());
     p.extend_from_slice(&stats.total_requests.to_le_bytes());
+    p.extend_from_slice(&stats.integrity.scrub_passes.to_le_bytes());
+    p.extend_from_slice(&stats.integrity.scrub_repairs.to_le_bytes());
+    p.extend_from_slice(&stats.integrity.frame_crc_errors.to_le_bytes());
+    p.extend_from_slice(&stats.integrity.bad_inputs.to_le_bytes());
+    p.extend_from_slice(&stats.integrity.corrupt_outputs.to_le_bytes());
     p.extend_from_slice(&(stats.lanes.len() as u16).to_le_bytes());
     for lane in &stats.lanes {
         put_str(&mut p, &lane.label);
@@ -437,7 +508,7 @@ pub fn encode_stats(stats: &NetStats) -> Vec<u8> {
         p.extend_from_slice(&s.p99_us.to_le_bytes());
         p.extend_from_slice(&s.max_us.to_le_bytes());
     }
-    p
+    seal(p)
 }
 
 // ---- decoding --------------------------------------------------------
@@ -524,12 +595,30 @@ impl<'a> Cursor<'a> {
 }
 
 /// Decode one frame payload into a typed message.
+///
+/// Check order matters: the version byte is judged before the CRC so
+/// an old peer gets [`DecodeError::BadVersion`] (its frames carry no
+/// CRC at all); only then is the trailing CRC verified, so a single
+/// flipped bit anywhere in a current-version payload — fields or CRC
+/// alike — surfaces as [`DecodeError::Corrupt`] before any field is
+/// believed.
 pub fn decode(payload: &[u8]) -> Result<Msg, DecodeError> {
-    let mut c = Cursor::new(payload);
-    let version = c.u8()?;
+    let Some(&version) = payload.first() else {
+        return Err(DecodeError::Truncated);
+    };
     if version != PROTO_VERSION {
         return Err(DecodeError::BadVersion { got: version });
     }
+    if payload.len() < 2 + CRC_BYTES {
+        return Err(DecodeError::Truncated);
+    }
+    let (body, tail) = payload.split_at(payload.len() - CRC_BYTES);
+    let got = u32::from_le_bytes(tail.try_into().expect("CRC tail is 4 bytes"));
+    if got != payload_crc(body) {
+        return Err(DecodeError::Corrupt);
+    }
+    let mut c = Cursor::new(body);
+    let _version = c.u8()?; // already checked above
     let kind = c.u8()?;
     let msg = match kind {
         KIND_REQUEST => Msg::Request(NetRequest {
@@ -585,6 +674,13 @@ pub fn decode(payload: &[u8]) -> Result<Msg, DecodeError> {
         KIND_STATS => {
             let uptime_ms = c.u64()?;
             let total_requests = c.u64()?;
+            let integrity = IntegrityWire {
+                scrub_passes: c.u64()?,
+                scrub_repairs: c.u64()?,
+                frame_crc_errors: c.u64()?,
+                bad_inputs: c.u64()?,
+                corrupt_outputs: c.u64()?,
+            };
             let n_lanes = c.u16()? as usize;
             if n_lanes > MAX_HEALTH_LANES {
                 return Err(DecodeError::BadShape);
@@ -625,7 +721,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, DecodeError> {
                     max_us: c.u64()?,
                 });
             }
-            Msg::Stats(NetStats { uptime_ms, total_requests, lanes, tenants, stages })
+            Msg::Stats(NetStats { uptime_ms, total_requests, integrity, lanes, tenants, stages })
         }
         k => return Err(DecodeError::BadKind(k)),
     };
@@ -749,7 +845,10 @@ mod tests {
         for cut in 0..full.len() {
             let err = decode(&full[..cut]).unwrap_err();
             assert!(
-                matches!(err, DecodeError::Truncated | DecodeError::BadShape),
+                matches!(
+                    err,
+                    DecodeError::Truncated | DecodeError::BadShape | DecodeError::Corrupt
+                ),
                 "prefix {cut}: unexpected error {err:?}"
             );
         }
@@ -778,7 +877,9 @@ mod tests {
             Msg::Health(d) => assert!(d.lanes.is_empty()),
             other => panic!("decoded wrong kind: {other:?}"),
         }
-        for code in [ErrorCode::Timeout, ErrorCode::Internal] {
+        for code in
+            [ErrorCode::Timeout, ErrorCode::Internal, ErrorCode::BadInput, ErrorCode::Corrupt]
+        {
             let err = NetError { id: 9, code, message: "late".into() };
             match decode(&encode_error(&err)).unwrap() {
                 Msg::Error(d) => assert_eq!(d.code, code),
@@ -816,6 +917,13 @@ mod tests {
         NetStats {
             uptime_ms: rng.next_u64() >> 24,
             total_requests: rng.next_u64() >> 24,
+            integrity: IntegrityWire {
+                scrub_passes: rng.next_u64() >> 48,
+                scrub_repairs: rng.next_u64() >> 56,
+                frame_crc_errors: rng.next_u64() >> 56,
+                bad_inputs: rng.next_u64() >> 56,
+                corrupt_outputs: rng.next_u64() >> 56,
+            },
             lanes,
             tenants,
             stages,
@@ -841,6 +949,7 @@ mod tests {
         let empty = NetStats {
             uptime_ms: 0,
             total_requests: 0,
+            integrity: IntegrityWire::default(),
             lanes: Vec::new(),
             tenants: Vec::new(),
             stages: Vec::new(),
@@ -860,48 +969,141 @@ mod tests {
         for cut in 0..full.len() {
             let err = decode(&full[..cut]).unwrap_err();
             assert!(
-                matches!(err, DecodeError::Truncated | DecodeError::BadShape),
+                matches!(
+                    err,
+                    DecodeError::Truncated | DecodeError::BadShape | DecodeError::Corrupt
+                ),
                 "prefix {cut}: unexpected error {err:?}"
             );
         }
+        // a raw extra byte breaks the CRC before trailing-byte detection
         let mut padded = full.clone();
         padded.push(0);
-        assert_eq!(decode(&padded).unwrap_err(), DecodeError::TrailingBytes { extra: 1 });
+        assert_eq!(decode(&padded).unwrap_err(), DecodeError::Corrupt);
+        // extra bytes *inside* a correctly sealed payload are trailing
+        let mut body = full[..full.len() - 4].to_vec();
+        body.push(0);
+        assert_eq!(decode(&seal(body)).unwrap_err(), DecodeError::TrailingBytes { extra: 1 });
         assert!(decode(&full).is_ok());
     }
 
     /// Hostile stats counts beyond the sanity caps are refused before
     /// any allocation is sized from them.
+    /// Header shared by the hand-built hostile stats payloads: version,
+    /// kind, zeroed uptime/total and integrity counters.
+    fn stats_header() -> Vec<u8> {
+        let mut p = vec![PROTO_VERSION, KIND_STATS];
+        for _ in 0..7 {
+            p.extend_from_slice(&0u64.to_le_bytes());
+        }
+        p
+    }
+
     #[test]
     fn hostile_stats_counts_are_refused() {
-        let mut p = vec![PROTO_VERSION, KIND_STATS];
-        p.extend_from_slice(&0u64.to_le_bytes()); // uptime
-        p.extend_from_slice(&0u64.to_le_bytes()); // total
+        let mut p = stats_header();
         p.extend_from_slice(&u16::MAX.to_le_bytes()); // absurd lane count
-        assert_eq!(decode(&p).unwrap_err(), DecodeError::BadShape);
+        assert_eq!(decode(&seal(p)).unwrap_err(), DecodeError::BadShape);
 
-        let mut p = vec![PROTO_VERSION, KIND_STATS];
-        p.extend_from_slice(&0u64.to_le_bytes());
-        p.extend_from_slice(&0u64.to_le_bytes());
+        let mut p = stats_header();
         p.extend_from_slice(&0u16.to_le_bytes()); // no lanes
         p.extend_from_slice(&u16::MAX.to_le_bytes()); // absurd tenant count
-        assert_eq!(decode(&p).unwrap_err(), DecodeError::BadShape);
+        assert_eq!(decode(&seal(p)).unwrap_err(), DecodeError::BadShape);
 
-        let mut p = vec![PROTO_VERSION, KIND_STATS];
-        p.extend_from_slice(&0u64.to_le_bytes());
-        p.extend_from_slice(&0u64.to_le_bytes());
+        let mut p = stats_header();
         p.extend_from_slice(&0u16.to_le_bytes());
         p.extend_from_slice(&0u16.to_le_bytes());
         p.extend_from_slice(&u16::MAX.to_le_bytes()); // absurd stage count
-        assert_eq!(decode(&p).unwrap_err(), DecodeError::BadShape);
+        assert_eq!(decode(&seal(p)).unwrap_err(), DecodeError::BadShape);
     }
 
     #[test]
     fn trailing_garbage_is_rejected() {
         let err = NetError { id: 1, code: ErrorCode::BadRequest, message: "x".into() };
-        let mut p = encode_error(&err);
+        let sealed = encode_error(&err);
+        // garbage appended after sealing breaks the CRC
+        let mut p = sealed.clone();
         p.push(0xAB);
-        assert_eq!(decode(&p).unwrap_err(), DecodeError::TrailingBytes { extra: 1 });
+        assert_eq!(decode(&p).unwrap_err(), DecodeError::Corrupt);
+        // garbage inside a correctly re-sealed payload is trailing bytes
+        let mut body = sealed[..sealed.len() - 4].to_vec();
+        body.push(0xAB);
+        assert_eq!(decode(&seal(body)).unwrap_err(), DecodeError::TrailingBytes { extra: 1 });
+    }
+
+    /// The mutation sweep: flipping any single byte of any valid frame
+    /// kind must yield a typed error (CRC or structural), never a panic
+    /// and never a silently different message.
+    #[test]
+    fn single_byte_mutations_never_decode() {
+        let mut rng = Rng::new(17);
+        let frames: Vec<(&str, Vec<u8>)> = vec![
+            (
+                "request",
+                encode_request(&NetRequest {
+                    id: 3,
+                    tenant: "acme".into(),
+                    class: QosClass::Gold,
+                    deadline_us: 500,
+                    image: Tensor::from_vec(vec![1.0, -2.0, 0.5, 4.0], &[2, 2]),
+                }),
+            ),
+            (
+                "response",
+                encode_response(&NetResponse {
+                    id: 3,
+                    class: QosClass::Gold,
+                    served_by: "gold".into(),
+                    lane_plan: "plan[30dB]".into(),
+                    downgraded: false,
+                    quota_downgraded: false,
+                    deadline_missed: false,
+                    queue_wait_us: 12,
+                    batch_size: 1,
+                    logits: Tensor::from_vec(vec![0.25, -0.5], &[2]),
+                }),
+            ),
+            (
+                "error",
+                encode_error(&NetError {
+                    id: 9,
+                    code: ErrorCode::Corrupt,
+                    message: "bad".into(),
+                }),
+            ),
+            ("health_req", encode_health_req()),
+            (
+                "health",
+                encode_health(&NetHealth {
+                    lanes: vec![LaneHealthWire {
+                        label: "gold".into(),
+                        retired: false,
+                        restarts: 1,
+                        queued: 2,
+                    }],
+                }),
+            ),
+            ("stats_req", encode_stats_req()),
+            ("stats", encode_stats(&sample_stats(&mut rng))),
+        ];
+        for (name, full) in frames {
+            assert!(decode(&full).is_ok(), "{name}: pristine frame must decode");
+            for pos in 0..full.len() {
+                for flip in [0x01u8, 0x80, 0xFF] {
+                    let mut p = full.clone();
+                    p[pos] ^= flip;
+                    let err = decode(&p).unwrap_err();
+                    // position 0 is the version byte — rejected before
+                    // the CRC so old peers are told about the version
+                    if pos == 0 {
+                        assert!(
+                            matches!(err, DecodeError::BadVersion { .. }),
+                            "{name} @0^{flip:#x}: {err:?}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]
@@ -920,13 +1122,14 @@ mod tests {
 
     #[test]
     fn unknown_kind_class_and_code_are_rejected() {
-        assert_eq!(decode(&[PROTO_VERSION, 9]).unwrap_err(), DecodeError::BadKind(9));
-        // request with class byte 7
+        assert_eq!(decode(&seal(vec![PROTO_VERSION, 9])).unwrap_err(), DecodeError::BadKind(9));
+        // request with class byte 7 (sealed, so the CRC passes and the
+        // enum check is what fires)
         let mut p = vec![PROTO_VERSION, KIND_REQUEST];
         p.extend_from_slice(&1u64.to_le_bytes());
         p.extend_from_slice(&0u16.to_le_bytes()); // empty tenant
         p.push(7);
-        assert_eq!(decode(&p).unwrap_err(), DecodeError::BadEnum(7));
+        assert_eq!(decode(&seal(p)).unwrap_err(), DecodeError::BadEnum(7));
     }
 
     /// Random byte soup must never decode successfully (version byte 1
@@ -958,7 +1161,7 @@ mod tests {
         p.push(2);
         p.extend_from_slice(&u32::MAX.to_le_bytes());
         p.extend_from_slice(&u32::MAX.to_le_bytes());
-        let err = decode(&p).unwrap_err();
+        let err = decode(&seal(p)).unwrap_err();
         assert!(matches!(err, DecodeError::BadShape), "{err:?}");
     }
 

@@ -12,8 +12,8 @@
 //! responses from the writer path), keeping frames interleave-safe.
 
 use super::proto::{
-    self, ErrorCode, LaneHealthWire, LaneStatsWire, Msg, NetError, NetHealth, NetRequest,
-    NetResponse, NetStats, StageStatsWire, TenantStatsWire,
+    self, ErrorCode, IntegrityWire, LaneHealthWire, LaneStatsWire, Msg, NetError, NetHealth,
+    NetRequest, NetResponse, NetStats, StageStatsWire, TenantStatsWire,
 };
 use super::quota::{Admission, QuotaConfig, TenantQuotas};
 use crate::coordinator::qos::{LaneStats, QosClass, QosErrorKind, QosReport, QosResult, QosServer};
@@ -36,8 +36,9 @@ pub struct NetServerConfig {
     pub max_conns: usize,
     /// Per-tenant token-bucket quota (default: unlimited).
     pub quota: QuotaConfig,
-    /// Connection-level fault injection (`reset:conn:*` /
-    /// `truncate:conn:*` specs); `None` costs nothing.
+    /// Network-front fault injection (`reset:conn:*` / `truncate:conn:*`
+    /// / `corrupt:frame:*` connection sabotage, `nan:input:*` payload
+    /// poisoning); `None` costs nothing.
     pub faults: Option<Arc<FaultInjector>>,
 }
 
@@ -171,10 +172,11 @@ fn accept_loop(
                 let handle = match stream.try_clone() {
                     Ok(keep) => {
                         let shared = Arc::clone(&shared);
+                        let faults = config.faults.clone();
                         let spawned =
                             std::thread::Builder::new().name("net-conn".into()).spawn(move || {
                                 match fault {
-                                    ConnFault::None => serve_conn(stream, shared),
+                                    ConnFault::None => serve_conn(stream, shared, faults),
                                     f => sabotage_conn(stream, f),
                                 }
                             });
@@ -209,9 +211,11 @@ fn accept_loop(
 }
 
 /// Deliberately break one connection (fault injection): wait for the
-/// client's first request so it is mid-round-trip, then either reset
-/// the socket outright or answer with a truncated frame — a length
-/// prefix promising more bytes than ever arrive — and close.
+/// client's first request so it is mid-round-trip, then reset the
+/// socket outright, answer with a truncated frame — a length prefix
+/// promising more bytes than ever arrive — or answer with a whole,
+/// well-framed reply whose payload had bits flipped after sealing
+/// (the client's CRC check must refuse it), and close.
 fn sabotage_conn(stream: TcpStream, fault: ConnFault) {
     let reader_half = match stream.try_clone() {
         Ok(s) => s,
@@ -220,10 +224,26 @@ fn sabotage_conn(stream: TcpStream, fault: ConnFault) {
     let mut frames = BufReader::new(reader_half);
     let _ = proto::read_frame(&mut frames);
     let mut w = stream;
-    if fault == ConnFault::Truncate {
-        let _ = w.write_all(&64u32.to_le_bytes());
-        let _ = w.write_all(&[proto::PROTO_VERSION, 2, 0]);
-        let _ = w.flush();
+    match fault {
+        ConnFault::Truncate => {
+            let _ = w.write_all(&64u32.to_le_bytes());
+            let _ = w.write_all(&[proto::PROTO_VERSION, 2, 0]);
+            let _ = w.flush();
+        }
+        ConnFault::Corrupt => {
+            // framing stays in sync — the length prefix is honest — but
+            // the payload no longer matches its trailing CRC
+            let mut payload = proto::encode_error(&NetError {
+                id: 0,
+                code: ErrorCode::Internal,
+                message: "this frame was corrupted in flight".to_string(),
+            });
+            let mid = payload.len() / 2;
+            payload[mid] ^= 0x10;
+            let _ = proto::write_frame(&mut w, &payload);
+            let _ = w.flush();
+        }
+        _ => {}
     }
     let _ = w.shutdown(Shutdown::Both);
 }
@@ -249,7 +269,7 @@ struct ReqCtx {
 
 /// One connection: read frames until EOF/error, submit to the router,
 /// let the writer thread stream responses back out of order.
-fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
+fn serve_conn(stream: TcpStream, shared: Arc<Shared>, faults: Option<Arc<FaultInjector>>) {
     let reader_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -291,6 +311,7 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                         let code = match e.kind {
                             QosErrorKind::Timeout => ErrorCode::Timeout,
                             QosErrorKind::Draining => ErrorCode::ServerGone,
+                            QosErrorKind::CorruptOutput => ErrorCode::Corrupt,
                             _ => ErrorCode::Internal,
                         };
                         let err = NetError { id: ctx.client_id, code, message: e.to_string() };
@@ -325,7 +346,7 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
         };
         match proto::decode(&payload) {
             Ok(Msg::Request(req)) => {
-                handle_request(req, &shared, &write_half, &pending, &resp_tx);
+                handle_request(req, &shared, &write_half, &pending, &resp_tx, faults.as_deref());
             }
             Ok(Msg::HealthReq) => {
                 let lanes = shared.qos.lock().unwrap().as_ref().map(|q| q.health());
@@ -370,6 +391,14 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                 // in sync, so answer and keep serving
                 send_error(&write_half, 0, ErrorCode::BadRequest, "expected a request frame");
             }
+            Err(proto::DecodeError::Corrupt) => {
+                // the frame arrived whole but its payload CRC does not
+                // match: bits flipped between the peer's seal and us.
+                // The length prefix was honest, so framing is still in
+                // sync — count it, answer typed, keep serving
+                shared.metrics.lock().unwrap().record_frame_crc_error();
+                send_error(&write_half, 0, ErrorCode::Corrupt, "payload CRC mismatch");
+            }
             Err(e) => {
                 send_error(&write_half, 0, ErrorCode::BadRequest, &format!("bad frame: {e}"));
             }
@@ -380,14 +409,54 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
     let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);
 }
 
-/// Quota-gate one request and hand it to the router.
+/// Admission guard: a request tensor that is empty, inconsistent with
+/// its declared shape, or contains non-finite values is refused with a
+/// typed `BadInput` before it can reach a lane. Decode already refuses
+/// hostile shapes, so this catches payload memory that went bad *after*
+/// the frame CRC passed (and the `nan:input` fault plane, which models
+/// exactly that).
+fn validate_image(image: &crate::tensor::Tensor) -> Option<String> {
+    let elems: usize = image.shape.iter().product();
+    if image.shape.is_empty() || elems == 0 {
+        return Some("empty input tensor".to_string());
+    }
+    if image.data.len() != elems {
+        return Some(format!(
+            "input data length {} does not match shape {:?}",
+            image.data.len(),
+            image.shape
+        ));
+    }
+    if let Some(pos) = image.data.iter().position(|v| !v.is_finite()) {
+        return Some(format!("non-finite input value at index {pos}"));
+    }
+    None
+}
+
+/// Validate, quota-gate, and hand one request to the router.
 fn handle_request(
-    req: NetRequest,
+    mut req: NetRequest,
     shared: &Shared,
     write_half: &Arc<Mutex<TcpStream>>,
     pending: &Arc<Mutex<HashMap<u64, ReqCtx>>>,
     resp_tx: &Sender<QosResult>,
+    faults: Option<&FaultInjector>,
 ) {
+    // deterministic fault injection (`nan:input:<nth>`): poison this
+    // request's payload after the CRC check — the guard below must
+    // catch it, fail it typed, and never enqueue it
+    if let Some(f) = faults {
+        if f.poison_input() {
+            if let Some(v) = req.image.data.first_mut() {
+                *v = f32::NAN;
+            }
+        }
+    }
+    if let Some(reason) = validate_image(&req.image) {
+        shared.metrics.lock().unwrap().record_bad_input();
+        send_error(write_half, req.id, ErrorCode::BadInput, &reason);
+        return;
+    }
     let admission = shared.quotas.admit(&req.tenant);
     shared.metrics.lock().unwrap().record_tenant(
         &req.tenant,
@@ -472,6 +541,13 @@ fn build_stats(lanes: Vec<LaneStats>, metrics: &Metrics, quotas: &TenantQuotas) 
     NetStats {
         uptime_ms: metrics.wall_time.as_millis() as u64,
         total_requests: metrics.total_requests as u64,
+        integrity: IntegrityWire {
+            scrub_passes: metrics.scrub_passes,
+            scrub_repairs: metrics.scrub_repairs,
+            frame_crc_errors: metrics.frame_crc_errors,
+            bad_inputs: metrics.bad_inputs,
+            corrupt_outputs: metrics.corrupt_outputs,
+        },
         lanes,
         tenants,
         stages,

@@ -49,6 +49,32 @@ pub struct CachedWeights {
     /// entry shared by an f32-lane and an integer-lane config carries
     /// both packings, each built on first request.
     pub packed_i32: Option<Arc<Vec<i32>>>,
+    /// [`weight_checksum`] of `wq` taken at quantize time — the
+    /// scrubber's ground truth. The lazy panel packings are pure
+    /// functions of `wq`, so they are not separately checksummed: a
+    /// repair requantizes and repacks everything from the fp32 source.
+    pub checksum: u32,
+}
+
+/// 32-bit FNV-1a over a quantized matrix's mantissas and block
+/// exponents (little-endian element bytes) — the same zero-dependency
+/// hash the wire CRC uses. It guards against accidental bit flips in
+/// the resident cache, not an adversary.
+pub fn weight_checksum(wq: &BfpMatrix) -> u32 {
+    let mut hash: u32 = 0x811c_9dc5;
+    let mut eat = |v: i32| {
+        for b in v.to_le_bytes() {
+            hash ^= u32::from(b);
+            hash = hash.wrapping_mul(0x0100_0193);
+        }
+    };
+    for &m in &wq.mantissas {
+        eat(m);
+    }
+    for &e in &wq.exponents {
+        eat(e);
+    }
+    hash
 }
 
 impl CachedWeights {
@@ -99,10 +125,29 @@ impl WeightPanelsOwned {
 #[derive(Default)]
 pub struct WeightCache {
     /// Per layer: the weight formats seen so far (a handful at most —
-    /// linear scan beats hashing).
-    entries: HashMap<String, Vec<(WeightKey, CachedWeights)>>,
+    /// linear scan beats hashing). Each entry keeps the [`BfpConfig`]
+    /// that produced it so the scrubber can requantize a corrupted
+    /// entry from the fp32 source without guessing.
+    entries: HashMap<String, Vec<(WeightKey, BfpConfig, CachedWeights)>>,
     hits: usize,
     misses: usize,
+    /// Bumped whenever the cache's contents change (a fill, a repair,
+    /// or an injected corruption). The background scrubber parks while
+    /// this is unchanged, so a steady-state cache costs nothing.
+    generation: u64,
+}
+
+/// What one [`WeightCache::scrub`] pass found.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Entries whose checksum verified clean.
+    pub verified: usize,
+    /// Layer names of entries whose checksum mismatched and were
+    /// requantized from the fp32 weights (one per repaired entry).
+    pub repaired: Vec<String>,
+    /// Entries that mismatched but had no fp32 source in the scrubbed
+    /// model — evicted outright (requantize-on-next-miss).
+    pub evicted: usize,
 }
 
 /// What weight quantization depends on: `W`'s format, block axis, and a
@@ -189,7 +234,7 @@ impl WeightCache {
             }
         };
         if let Some(list) = self.entries.get_mut(layer.name.as_str()) {
-            if let Some((_, cached)) = list.iter_mut().find(|(k, _)| *k == key) {
+            if let Some((_, _, cached)) = list.iter_mut().find(|(k, _, _)| *k == key) {
                 self.hits += 1;
                 if want_packed {
                     pack(cached);
@@ -198,12 +243,14 @@ impl WeightCache {
             }
         }
         self.misses += 1;
+        self.generation += 1;
         let wq = Arc::new(layer.quantize_weights(&cfg));
-        let mut cached = CachedWeights { wq, packed_f32: None, packed_i32: None };
+        let checksum = weight_checksum(&wq);
+        let mut cached = CachedWeights { wq, packed_f32: None, packed_i32: None, checksum };
         if want_packed {
             pack(&mut cached);
         }
-        self.entries.entry(layer.name.clone()).or_default().push((key, cached.clone()));
+        self.entries.entry(layer.name.clone()).or_default().push((key, cfg, cached.clone()));
         cached
     }
 
@@ -225,6 +272,95 @@ impl WeightCache {
     /// True when nothing has been cached yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Content generation: bumped on every fill, repair, or injected
+    /// corruption. The scrubber verifies only when this moved since its
+    /// last pass, so the clean steady state pays one lock + one load
+    /// per scrub period.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Verify every entry's checksum against its resident mantissas and
+    /// exponents. A mismatch is repaired by requantizing from `model`'s
+    /// still-resident fp32 weights under the entry's recorded config
+    /// (lazy panel packings are rebuilt from the fresh matrix), so the
+    /// repaired entry is bit-identical to a fresh quantize. Corrupt
+    /// entries whose fp32 source is not in `model` (or whose weights
+    /// changed underneath, per the fingerprint) are evicted so the next
+    /// lookup requantizes. Hit/miss counters are untouched — a scrub is
+    /// maintenance, not traffic.
+    pub fn scrub(&mut self, model: &Model) -> ScrubReport {
+        let verify = |c: &CachedWeights| weight_checksum(&c.wq) == c.checksum;
+        let mut report = ScrubReport::default();
+        let mut any_corrupt = false;
+        for list in self.entries.values() {
+            for (_, _, cached) in list {
+                if verify(cached) {
+                    report.verified += 1;
+                } else {
+                    any_corrupt = true;
+                }
+            }
+        }
+        if !any_corrupt {
+            return report;
+        }
+        let entries = &mut self.entries;
+        model.graph.visit_convs(&mut |c: &Conv2d| {
+            let Some(list) = entries.get_mut(c.name.as_str()) else { return };
+            for (key, cfg, cached) in list.iter_mut() {
+                if verify(cached) || key.fingerprint != weights_fingerprint(&c.weights) {
+                    continue;
+                }
+                let wq = Arc::new(c.quantize_weights(cfg));
+                let checksum = weight_checksum(&wq);
+                *cached = CachedWeights {
+                    packed_f32: cached
+                        .packed_f32
+                        .as_ref()
+                        .map(|_| Arc::new(kernel::pack_weights_f32(&wq))),
+                    packed_i32: cached
+                        .packed_i32
+                        .as_ref()
+                        .map(|_| Arc::new(kernel::pack_weights_i32(&wq))),
+                    wq,
+                    checksum,
+                };
+                report.repaired.push(c.name.clone());
+            }
+        });
+        for list in self.entries.values_mut() {
+            let before = list.len();
+            list.retain(|(_, _, cached)| verify(cached));
+            report.evicted += before - list.len();
+        }
+        self.entries.retain(|_, list| !list.is_empty());
+        self.generation += 1;
+        report
+    }
+
+    /// Deterministically flip one mantissa bit of the `nth` cached
+    /// entry for `layer` — the storage half of the fault plane
+    /// (`flip:weights:…`). The flip lands on this cache's copy of the
+    /// matrix ([`Arc::make_mut`]): lanes holding a clone keep their
+    /// clean view, which is the storage-corruption model — the shared
+    /// store is poisoned, in-flight readers are not. Returns `false`
+    /// when no such entry exists.
+    pub fn corrupt_entry_bit(&mut self, layer: &str, nth: usize) -> bool {
+        let Some((_, _, cached)) = self.entries.get_mut(layer).and_then(|l| l.get_mut(nth))
+        else {
+            return false;
+        };
+        if cached.wq.mantissas.is_empty() {
+            return false;
+        }
+        let wq = Arc::make_mut(&mut cached.wq);
+        let mid = wq.mantissas.len() / 2;
+        wq.mantissas[mid] ^= 1 << 6;
+        self.generation += 1;
+        true
     }
 }
 
@@ -639,5 +775,99 @@ mod tests {
     fn rejects_wrong_input_shape() {
         let prepared = PreparedModel::new(tiny_model(1), LayerSchedule::uniform(BfpConfig::paper_default()));
         prepared.forward(&Tensor::zeros(&[2, 8, 8]));
+    }
+
+    /// The integrity loop end to end at cache level: an injected
+    /// mantissa flip bumps the generation (waking a parked scrubber),
+    /// is detected by `scrub`, and the repaired entry is bit-identical
+    /// to a fresh quantize — while hit/miss counters and lanes'
+    /// resident clones stay untouched.
+    #[test]
+    fn scrub_repairs_a_flipped_entry_bit_identically() {
+        let model = tiny_model(21);
+        let cfg = BfpConfig::paper_default();
+        let cache = WeightCache::shared();
+        let prepared = PreparedModel::with_cache(
+            model.clone(),
+            LayerSchedule::uniform(cfg),
+            Arc::clone(&cache),
+        );
+        let img = image(3);
+        let clean = prepared.forward(&img);
+
+        let mut c1 = None;
+        model.graph.visit_convs(&mut |c: &Conv2d| {
+            if c.name == "c1" {
+                c1 = Some(c);
+            }
+        });
+        let c1 = c1.expect("tiny model has a c1 conv");
+        let truth = c1.quantize_weights(&cfg);
+
+        {
+            let mut cache = cache.lock().unwrap();
+            let gen0 = cache.generation();
+            assert!(!cache.corrupt_entry_bit("ghost", 0), "unknown layer must be a no-op");
+            assert_eq!(cache.generation(), gen0);
+            assert!(cache.corrupt_entry_bit("c1", 0));
+            assert!(cache.generation() > gen0, "corruption must wake the parked scrubber");
+            let (len, hits, misses) = (cache.len(), cache.hits(), cache.misses());
+            let report = cache.scrub(&model);
+            assert_eq!(report.repaired, vec!["c1".to_string()]);
+            assert_eq!((report.verified, report.evicted), (len - 1, 0));
+            assert_eq!(
+                (cache.len(), cache.hits(), cache.misses()),
+                (len, hits, misses),
+                "scrub is maintenance, not traffic"
+            );
+            let again = cache.scrub(&model);
+            assert!(again.repaired.is_empty() && again.evicted == 0);
+            assert_eq!(again.verified, len);
+        }
+        // the repaired entry is bit-identical to a fresh quantize
+        let repaired = cache.lock().unwrap().get_or_quantize(c1, cfg);
+        assert_eq!(repaired.wq.mantissas, truth.mantissas);
+        assert_eq!(repaired.wq.exponents, truth.exponents);
+        assert_eq!(repaired.checksum, weight_checksum(&truth));
+        // the lane's active clone never saw the flip: the forward is
+        // bit-identical to the pre-corruption run
+        let after = prepared.forward(&img);
+        for (a, b) in clean.data.iter().zip(&after.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// A corrupt entry whose fp32 source is absent from the scrubbed
+    /// model (fingerprint mismatch) cannot be repaired — it is evicted
+    /// so the next lookup requantizes instead of serving garbage.
+    #[test]
+    fn scrub_evicts_corrupt_entries_without_a_source() {
+        let cfg = BfpConfig::paper_default();
+        let model_a = tiny_model(31);
+        let model_b = tiny_model(32); // same layer names, different weights
+        let cache = WeightCache::shared();
+        let _lane = PreparedModel::with_cache(
+            model_a.clone(),
+            LayerSchedule::uniform(cfg),
+            Arc::clone(&cache),
+        );
+        let mut cache = cache.lock().unwrap();
+        assert!(cache.corrupt_entry_bit("c2", 0));
+        let len = cache.len();
+        let report = cache.scrub(&model_b);
+        assert!(report.repaired.is_empty(), "wrong-model weights must never repair an entry");
+        assert_eq!(report.evicted, 1);
+        assert_eq!(cache.len(), len - 1);
+        // the evicted entry refills on the next lookup, clean
+        let misses = cache.misses();
+        let mut c2 = None;
+        model_a.graph.visit_convs(&mut |c: &Conv2d| {
+            if c.name == "c2" {
+                c2 = Some(c);
+            }
+        });
+        let refilled = cache.get_or_quantize(c2.unwrap(), cfg);
+        assert_eq!(cache.misses(), misses + 1);
+        assert_eq!(refilled.checksum, weight_checksum(&refilled.wq));
     }
 }

@@ -117,10 +117,16 @@ pub enum EventKind {
     Timeout,
     /// Drain began refusing new work.
     Drain,
+    /// The weight-cache scrubber verified the cache (one pass).
+    Scrub,
+    /// Data corruption detected: a weight-cache checksum mismatch (the
+    /// entry is evicted and requantized), a frame CRC failure, or a
+    /// non-finite lane output.
+    Corrupt,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 9] = [
+    pub const ALL: [EventKind; 11] = [
         EventKind::Swap,
         EventKind::Promote,
         EventKind::Restart,
@@ -130,6 +136,8 @@ impl EventKind {
         EventKind::Fault,
         EventKind::Timeout,
         EventKind::Drain,
+        EventKind::Scrub,
+        EventKind::Corrupt,
     ];
 
     pub fn name(self) -> &'static str {
@@ -143,6 +151,8 @@ impl EventKind {
             EventKind::Fault => "fault",
             EventKind::Timeout => "timeout",
             EventKind::Drain => "drain",
+            EventKind::Scrub => "scrub",
+            EventKind::Corrupt => "corrupt",
         }
     }
 

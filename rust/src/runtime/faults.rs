@@ -17,6 +17,15 @@
 //! * `truncate:conn:<nth>` — answer the `nth` accepted connection's
 //!   first request with a truncated frame (a length prefix promising
 //!   more bytes than arrive), then close.
+//! * `flip:weights:<lane>:<layer>:<nth>` — on the named lane's `nth`
+//!   batch, flip one mantissa bit of `layer`'s entry in the shared
+//!   weight cache (the scrubber must detect and repair it).
+//! * `corrupt:frame:<nth>` — answer the `nth` accepted connection's
+//!   first request with a well-framed but bit-flipped payload (the
+//!   client's CRC check must refuse it), then close.
+//! * `nan:input:<nth>` — smuggle a NaN into the `nth` decoded request's
+//!   tensor *after* the wire CRC passes (admission validation must
+//!   refuse it with a typed `BadInput`).
 //!
 //! Specs combine comma-separated (`BFP_FAULTS=panic:economy:3,reset:conn:1`,
 //! seed from `BFP_FAULTS_SEED`). Everything keys off monotone per-lane
@@ -43,6 +52,13 @@ pub enum FaultSpec {
     ResetConn { nth: u64 },
     /// Send the `nth` accepted connection a truncated frame, then close.
     TruncateConn { nth: u64 },
+    /// Flip one cached-weight mantissa bit of `layer` on the lane's
+    /// `nth` batch (1-based).
+    FlipWeights { lane: String, layer: String, nth: u64 },
+    /// Send the `nth` accepted connection a bit-flipped frame, then close.
+    CorruptFrame { nth: u64 },
+    /// Poison the `nth` decoded request's tensor with a NaN (1-based).
+    NanInput { nth: u64 },
 }
 
 /// Parse one `kind:...` spec (grammar in the module docs).
@@ -88,7 +104,33 @@ pub fn parse_spec(spec: &str) -> Result<FaultSpec> {
                 FaultSpec::TruncateConn { nth }
             }
         }
-        other => bail!("unknown fault kind `{other}` (panic|delay|reset|truncate)"),
+        "flip" => {
+            if fields.get(1) != Some(&"weights") || fields.len() != 5 {
+                bail!("weight-flip fault spec must be `flip:weights:<lane>:<layer>:<nth>`, got `{spec}`");
+            }
+            let layer = fields[3];
+            if layer.is_empty() {
+                bail!("fault spec `{spec}` names no layer");
+            }
+            FaultSpec::FlipWeights {
+                lane: lane(2)?,
+                layer: layer.to_string(),
+                nth: num(4, "nth-batch")?.max(1),
+            }
+        }
+        "corrupt" => {
+            if fields.get(1) != Some(&"frame") || fields.len() != 3 {
+                bail!("frame fault spec must be `corrupt:frame:<nth>`, got `{spec}`");
+            }
+            FaultSpec::CorruptFrame { nth: num(2, "nth-connection")?.max(1) }
+        }
+        "nan" => {
+            if fields.get(1) != Some(&"input") || fields.len() != 3 {
+                bail!("input fault spec must be `nan:input:<nth>`, got `{spec}`");
+            }
+            FaultSpec::NanInput { nth: num(2, "nth-request")?.max(1) }
+        }
+        other => bail!("unknown fault kind `{other}` (panic|delay|reset|truncate|flip|corrupt|nan)"),
     };
     Ok(parsed)
 }
@@ -104,6 +146,8 @@ pub enum ConnFault {
     None,
     Reset,
     Truncate,
+    /// Reply with a well-framed but bit-flipped payload, then close.
+    Corrupt,
 }
 
 /// The armed injector: deterministic counters over the configured specs.
@@ -118,11 +162,19 @@ pub struct FaultInjector {
     lane_batches: Mutex<HashMap<String, u64>>,
     /// Connections accepted so far.
     conns: AtomicU64,
+    /// Requests decoded so far (the `nan:input` counter).
+    requests: AtomicU64,
 }
 
 impl FaultInjector {
     pub fn new(specs: Vec<FaultSpec>, seed: u64) -> Self {
-        Self { specs, seed, lane_batches: Mutex::new(HashMap::new()), conns: AtomicU64::new(0) }
+        Self {
+            specs,
+            seed,
+            lane_batches: Mutex::new(HashMap::new()),
+            conns: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+        }
     }
 
     /// Parse-and-build from one comma-separated spec string.
@@ -160,14 +212,18 @@ impl FaultInjector {
     /// Executor hook: called once per batch on the owning lane, *inside*
     /// the supervised (`catch_unwind`) region and before the forward.
     /// May sleep (delay specs) and may panic (panic specs) — an injected
-    /// panic exercises exactly the respawn path a real one would.
-    pub fn on_batch(&self, lane: &str) {
+    /// panic exercises exactly the respawn path a real one would. A
+    /// `flip:weights` spec firing on this batch is *returned* as the
+    /// layer name to corrupt rather than performed — the injector holds
+    /// no weight-cache handle; the executor does.
+    pub fn on_batch(&self, lane: &str) -> Option<String> {
         let n = {
             let mut counts = self.lane_batches.lock().unwrap();
             let c = counts.entry(lane.to_string()).or_insert(0);
             *c += 1;
             *c
         };
+        let mut flip = None;
         for spec in &self.specs {
             match spec {
                 FaultSpec::DelayLane { lane: l, ms, every } if l == lane && n % every == 0 => {
@@ -180,9 +236,24 @@ impl FaultInjector {
                     crate::obs::event_lane(crate::obs::EventKind::Fault, lane);
                     panic!("injected fault: lane {lane} batch {n}");
                 }
+                FaultSpec::FlipWeights { lane: l, layer, nth } if l == lane && n == *nth => {
+                    crate::obs::event_lane(crate::obs::EventKind::Fault, lane);
+                    flip = Some(layer.clone());
+                }
                 _ => {}
             }
         }
+        flip
+    }
+
+    /// Admission hook: called once per decoded request frame on the TCP
+    /// front. `true` means smuggle a NaN into this request's tensor
+    /// before validation — modelling payload memory going bad *after*
+    /// the wire CRC passed (or a hostile client that computes correct
+    /// CRCs over garbage).
+    pub fn poison_input(&self) -> bool {
+        let r = self.requests.fetch_add(1, Ordering::Relaxed) + 1;
+        self.specs.iter().any(|s| matches!(s, FaultSpec::NanInput { nth } if *nth == r))
     }
 
     /// Acceptor hook: called once per accepted connection; the returned
@@ -194,6 +265,7 @@ impl FaultInjector {
             match spec {
                 FaultSpec::ResetConn { nth } if *nth == c => return ConnFault::Reset,
                 FaultSpec::TruncateConn { nth } if *nth == c => return ConnFault::Truncate,
+                FaultSpec::CorruptFrame { nth } if *nth == c => return ConnFault::Corrupt,
                 _ => {}
             }
         }
@@ -221,6 +293,12 @@ mod tests {
         );
         assert_eq!(parse_spec("reset:conn:1").unwrap(), FaultSpec::ResetConn { nth: 1 });
         assert_eq!(parse_spec("truncate:conn:2").unwrap(), FaultSpec::TruncateConn { nth: 2 });
+        assert_eq!(
+            parse_spec("flip:weights:gold:c1:2").unwrap(),
+            FaultSpec::FlipWeights { lane: "gold".into(), layer: "c1".into(), nth: 2 }
+        );
+        assert_eq!(parse_spec("corrupt:frame:3").unwrap(), FaultSpec::CorruptFrame { nth: 3 });
+        assert_eq!(parse_spec("nan:input:4").unwrap(), FaultSpec::NanInput { nth: 4 });
         let both = parse_specs(" panic:economy:3:2 , reset:conn:1 ").unwrap();
         assert_eq!(both.len(), 2);
         for bad in [
@@ -231,6 +309,13 @@ mod tests {
             "reset:conn:x",
             "nuke:everything",
             "panic:economy:3:2:9",
+            "flip:weights:gold:c1",
+            "flip:mantissa:gold:c1:2",
+            "flip:weights:gold::2",
+            "corrupt:conn:1",
+            "corrupt:frame:x",
+            "nan:input",
+            "nan:logits:1",
         ] {
             assert!(parse_spec(bad).is_err(), "`{bad}` should be rejected");
         }
@@ -256,11 +341,28 @@ mod tests {
 
     #[test]
     fn conn_faults_hit_only_the_named_connection() {
-        let inj = FaultInjector::parse("reset:conn:2,truncate:conn:3", 0).unwrap();
+        let inj = FaultInjector::parse("reset:conn:2,truncate:conn:3,corrupt:frame:4", 0).unwrap();
         assert_eq!(inj.on_conn(), ConnFault::None);
         assert_eq!(inj.on_conn(), ConnFault::Reset);
         assert_eq!(inj.on_conn(), ConnFault::Truncate);
+        assert_eq!(inj.on_conn(), ConnFault::Corrupt);
         assert_eq!(inj.on_conn(), ConnFault::None);
+    }
+
+    #[test]
+    fn weight_flip_fires_once_on_the_named_lane_and_batch() {
+        let inj = FaultInjector::parse("flip:weights:economy:c1:2", 0).unwrap();
+        assert_eq!(inj.on_batch("gold"), None, "other lanes never flip");
+        assert_eq!(inj.on_batch("economy"), None);
+        assert_eq!(inj.on_batch("economy"), Some("c1".to_string()));
+        assert_eq!(inj.on_batch("economy"), None, "the flip is one-shot");
+    }
+
+    #[test]
+    fn input_poison_hits_exactly_the_named_request() {
+        let inj = FaultInjector::parse("nan:input:3", 0).unwrap();
+        let hits: Vec<bool> = (0..5).map(|_| inj.poison_input()).collect();
+        assert_eq!(hits, vec![false, false, true, false, false]);
     }
 
     #[test]

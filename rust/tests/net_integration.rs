@@ -18,9 +18,10 @@
 //!     request after an in-sync decode error is still served;
 //! (f) resilience over the wire (PR 7): health frames report per-lane
 //!     liveness, the retrying client survives seeded reset/truncated
-//!     connections counting its reconnects exactly, and the deadline
-//!     reaper turns hopeless requests into typed `Timeout` error frames
-//!     without wedging the connection.
+//!     connections and CRC-failing corrupted reply frames counting its
+//!     reconnects exactly, and the deadline reaper turns hopeless
+//!     requests into typed `Timeout` error frames without wedging the
+//!     connection.
 //!
 //! The suite honours `BFP_QOS_WORKERS` — CI runs it under both
 //! schedulers, like `qos_integration` (and once more with `BFP_FAULTS`
@@ -376,6 +377,49 @@ fn retrying_client_survives_reset_and_truncated_connections() {
     // the surviving connection also answers health probes
     let health = client.health().expect("health over the recovered connection");
     assert!(health.lanes.iter().all(|l| !l.retired));
+    server.shutdown();
+}
+
+/// (f) integrity over the wire: the server's fault plane answers the
+/// first connection with a whole, well-framed reply whose payload had a
+/// bit flipped after sealing. The length prefix is honest, so only the
+/// trailing CRC betrays the damage — the retrying client must refuse
+/// the frame, reconnect, and serve every request with logits identical
+/// to a clean round trip, counting exactly one reconnect.
+#[test]
+fn retrying_client_refuses_a_corrupted_reply_frame() {
+    use bfp_cnn::net::{RetryPolicy, RetryingClient};
+
+    let imgs = images(3, 33);
+
+    // clean reference logits on an identical deterministic stack
+    let (clean_server, clean_addr) = start_front(QuotaConfig::default());
+    let mut reference = NetClient::connect(clean_addr).expect("connect clean front");
+    reference.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let want: Vec<Tensor> = imgs
+        .iter()
+        .map(|img| {
+            reference.infer("ref", QosClass::Standard, img.clone()).expect("clean").logits
+        })
+        .collect();
+    clean_server.shutdown();
+
+    let faults = FaultInjector::parse("corrupt:frame:1", 5).expect("spec parses");
+    let (server, addr) =
+        start_front_with(quiet_config(), QuotaConfig::default(), Some(Arc::new(faults)));
+
+    let (base, cap) = (Duration::from_millis(5), Duration::from_millis(40));
+    let policy = RetryPolicy { attempts: 4, base, cap };
+    let mut client = RetryingClient::new(addr.to_string(), policy, 11);
+    client.set_read_timeout(Some(Duration::from_secs(30)));
+    for (i, img) in imgs.iter().enumerate() {
+        let resp = client.infer("ref", QosClass::Standard, img.clone()).expect("recovers");
+        assert_eq!(
+            resp.logits.data, want[i].data,
+            "request {i} logits drifted across the retry"
+        );
+    }
+    assert_eq!(client.retries, 1, "exactly the corrupted frame costs a reconnect");
     server.shutdown();
 }
 
