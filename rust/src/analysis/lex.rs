@@ -1,0 +1,357 @@
+//! Comment/string-aware line lexer for the project linter.
+//!
+//! Splits a Rust source file into [`Line`]s whose `code` field has every
+//! comment and string-literal *body* masked with spaces (delimiters are
+//! kept so column positions and brace counts survive), and whose
+//! `comment` field collects the comment text that appeared on the line.
+//! On top of the mask it tracks brace depth to mark `#[cfg(test)]` /
+//! `mod tests` regions, so rules can skip test code without parsing.
+//!
+//! This is deliberately a lexer, not a parser: the rules in
+//! [`super::rules`] are line-oriented heuristics, and masking is exactly
+//! the fidelity they need (an `unsafe` inside a string or doc comment
+//! must not trip the SAFETY rule; a `{` inside a char literal must not
+//! skew the depth that decides where a test module ends).
+
+/// One source line, post-masking.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: u32,
+    /// The line's code with comment and string bodies replaced by
+    /// spaces (same length in chars as the original, minus nothing —
+    /// delimiters like `"` and `//`'s columns are preserved as `"` and
+    /// two spaces respectively).
+    pub code: String,
+    /// Concatenated comment text that appeared on this line, including
+    /// the `//` / `/*` markers.
+    pub comment: String,
+    /// True when the line sits inside `#[cfg(test)]` / `mod tests`
+    /// scope (or the whole file is a test file, e.g. under `tests/`).
+    pub in_test: bool,
+}
+
+#[derive(PartialEq)]
+enum State {
+    Normal,
+    LineComment,
+    Block,
+    Str,
+    RawStr,
+    Char,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `\bmod\s+tests\s*$` over accumulated masked code.
+fn ends_with_mod_tests(code: &str) -> bool {
+    let t = code.trim_end();
+    let Some(rest) = t.strip_suffix("tests") else {
+        return false;
+    };
+    if !rest.ends_with(|c: char| c.is_whitespace()) {
+        return false;
+    }
+    let Some(head) = rest.trim_end().strip_suffix("mod") else {
+        return false;
+    };
+    match head.chars().next_back() {
+        None => true,
+        Some(c) => !is_ident(c),
+    }
+}
+
+/// Lex `src` into masked lines. `file_in_test` marks every line of the
+/// file as test code (used for files under `tests/`).
+pub fn lex(src: &str, file_in_test: bool) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut state = State::Normal;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut depth = 0i64;
+    let mut pending_test = false;
+    // brace depths at which test regions opened
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_comment = String::new();
+    let mut lineno: u32 = 1;
+    let mut line_started_in_test = file_in_test;
+
+    macro_rules! flush {
+        () => {{
+            let in_test = file_in_test || line_started_in_test || !test_stack.is_empty();
+            lines.push(Line {
+                number: lineno,
+                code: std::mem::take(&mut cur_code),
+                comment: std::mem::take(&mut cur_comment),
+                in_test,
+            });
+            lineno += 1;
+            line_started_in_test = file_in_test || !test_stack.is_empty();
+        }};
+    }
+
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Normal;
+            }
+            flush!();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::LineComment => {
+                cur_comment.push(c);
+                cur_code.push(' ');
+                i += 1;
+                continue;
+            }
+            State::Block => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    block_depth += 1;
+                    cur_comment.push_str("/*");
+                    cur_code.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    block_depth -= 1;
+                    cur_comment.push_str("*/");
+                    cur_code.push_str("  ");
+                    i += 2;
+                    if block_depth == 0 {
+                        state = State::Normal;
+                    }
+                    continue;
+                }
+                cur_comment.push(c);
+                cur_code.push(' ');
+                i += 1;
+                continue;
+            }
+            State::Str => {
+                if c == '\\' {
+                    // keep a `\` at end-of-line from swallowing the
+                    // newline (string line-continuation)
+                    if chars.get(i + 1) == Some(&'\n') {
+                        cur_code.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                    for _ in 0..2.min(n - i) {
+                        cur_code.push(' ');
+                    }
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    cur_code.push('"');
+                    state = State::Normal;
+                    i += 1;
+                    continue;
+                }
+                cur_code.push(' ');
+                i += 1;
+                continue;
+            }
+            State::RawStr => {
+                if c == '"' && (1..=raw_hashes).all(|k| chars.get(i + k) == Some(&'#')) {
+                    cur_code.push('"');
+                    for _ in 0..raw_hashes {
+                        cur_code.push('#');
+                    }
+                    i += 1 + raw_hashes;
+                    state = State::Normal;
+                    continue;
+                }
+                cur_code.push(' ');
+                i += 1;
+                continue;
+            }
+            State::Char => {
+                if c == '\\' {
+                    if chars.get(i + 1) == Some(&'\n') {
+                        cur_code.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                    cur_code.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '\'' {
+                    cur_code.push('\'');
+                    state = State::Normal;
+                    i += 1;
+                    continue;
+                }
+                cur_code.push(' ');
+                i += 1;
+                continue;
+            }
+            State::Normal => {}
+        }
+
+        // normal state
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            state = State::LineComment;
+            cur_code.push_str("  ");
+            cur_comment.push_str("//");
+            i += 2;
+            continue;
+        }
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            state = State::Block;
+            block_depth = 1;
+            cur_code.push_str("  ");
+            cur_comment.push_str("/*");
+            i += 2;
+            continue;
+        }
+        if c == '"' {
+            // raw string? scan back over the `#`s to `r` / `br`
+            let mut j = i as i64 - 1;
+            let mut hashes = 0usize;
+            while j >= 0 && chars[j as usize] == '#' {
+                hashes += 1;
+                j -= 1;
+            }
+            let mut is_raw = false;
+            if j >= 0 && chars[j as usize] == 'r' {
+                let mut k = j - 1;
+                if k >= 0 && chars[k as usize] == 'b' {
+                    k -= 1;
+                }
+                if k < 0 || !is_ident(chars[k as usize]) {
+                    is_raw = true;
+                }
+            }
+            if is_raw {
+                state = State::RawStr;
+                raw_hashes = hashes;
+            } else {
+                state = State::Str;
+            }
+            cur_code.push('"');
+            i += 1;
+            continue;
+        }
+        if c == '\'' {
+            let nxt = chars.get(i + 1).copied().unwrap_or('\0');
+            let nxt2 = chars.get(i + 2).copied().unwrap_or('\0');
+            if nxt == '\\' || (nxt2 == '\'' && nxt != '\'') {
+                state = State::Char;
+                cur_code.push('\'');
+                i += 1;
+                continue;
+            }
+            // lifetime or loop label: leave as-is
+            cur_code.push('\'');
+            i += 1;
+            continue;
+        }
+        // brace / test tracking happens only on real code chars
+        match c {
+            '{' => {
+                if pending_test {
+                    test_stack.push(depth);
+                    pending_test = false;
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth -= 1;
+                if test_stack.last() == Some(&depth) {
+                    test_stack.pop();
+                }
+            }
+            ';' => {
+                pending_test = false;
+            }
+            _ => {}
+        }
+        cur_code.push(c);
+        i += 1;
+        // test-region markers are detected on the accumulated masked
+        // code so `#[cfg(test)]` inside a string cannot open a region
+        if cur_code.ends_with("#[cfg(test)]") || ends_with_mod_tests(&cur_code) {
+            pending_test = true;
+            line_started_in_test = true;
+        }
+    }
+    if !cur_code.is_empty() || !cur_comment.is_empty() {
+        flush!();
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_strings_and_comments() {
+        let src = "let x = \"unsafe { }\"; // unsafe in comment\nunsafe { y() }\n";
+        let lines = lex(src, false);
+        assert_eq!(lines.len(), 2);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].comment.contains("unsafe in comment"));
+        assert!(lines[1].code.contains("unsafe"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* one /* two */ still */ b\nc\n";
+        let lines = lex(src, false);
+        assert!(lines[0].code.starts_with('a'));
+        assert!(lines[0].code.trim_end().ends_with('b'));
+        assert!(!lines[0].code.contains("one"));
+        assert_eq!(lines[1].code, "c");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let r = r#\"quote \" inside\"#; after();\n";
+        let lines = lex(src, false);
+        assert!(lines[0].code.contains("after()"));
+        assert!(!lines[0].code.contains("inside"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let src = "let c = '{'; fn f<'a>(x: &'a str) {}\n";
+        let lines = lex(src, false);
+        // the brace inside the char literal must be masked...
+        assert!(!lines[0].code.contains("'{'"));
+        // ...while the lifetimes stay as code
+        assert!(lines[0].code.contains("<'a>"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracking() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let lines = lex(src, false);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test);
+        assert!(lines[2].in_test);
+        assert!(lines[3].in_test);
+        assert!(lines[4].in_test);
+        assert!(!lines[5].in_test);
+    }
+
+    #[test]
+    fn string_backslash_newline_keeps_line_numbers() {
+        let src = "let s = \"a\\\nb\";\nafter();\n";
+        let lines = lex(src, false);
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[2].code, "after();");
+        assert_eq!(lines[2].number, 3);
+    }
+}

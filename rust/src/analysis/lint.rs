@@ -1,0 +1,273 @@
+//! The `bfp-cnn lint` driver: walk the repo's own Rust sources, run the
+//! [`super::rules`] passes, and diff the findings against a committed
+//! grandfather baseline (`rust/analysis/baseline.txt`).
+//!
+//! The baseline holds one key per tolerated violation —
+//! `path:rule:<trimmed source line>` — deliberately line-number-free so
+//! unrelated edits above a grandfathered site do not churn the file.
+//! `--fix-baseline` rewrites it from the current findings; the goal
+//! state (and the committed state) is an *empty* baseline, every
+//! invariant holding tree-wide.
+
+use super::lex::{lex, Line};
+use super::rules::{run_all, Violation};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Lexed + raw views of every linted file, keyed by `rust/`-relative
+/// path (`src/net/server.rs`).
+pub struct SourceTree {
+    pub lexed: BTreeMap<String, Vec<Line>>,
+    raw: BTreeMap<String, Vec<String>>,
+}
+
+/// Locate the repo root (the directory containing `rust/Cargo.toml`):
+/// the compile-time manifest dir when it still exists (normal case —
+/// the binary runs in the workspace it was built in), else walk up from
+/// the current directory.
+pub fn repo_root() -> Option<PathBuf> {
+    if let Some(manifest) = option_env!("CARGO_MANIFEST_DIR") {
+        let p = Path::new(manifest);
+        if p.join("Cargo.toml").is_file() {
+            if let Some(root) = p.parent() {
+                return Some(root.to_path_buf());
+            }
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        if cur.join("rust").join("Cargo.toml").is_file() {
+            return Some(cur);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+fn walk_dir(dir: &Path, rust_root: &Path, in_test: bool, tree: &mut SourceTree) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            // fixture trees contain deliberate violations for the
+            // linter's own tests — never lint them as project code
+            if name == "fixtures" {
+                continue;
+            }
+            walk_dir(&path, rust_root, in_test, tree)?;
+            continue;
+        }
+        if !name.ends_with(".rs") {
+            continue;
+        }
+        let src = fs::read_to_string(&path).with_context(|| format!("reading {name}"))?;
+        let rel = path
+            .strip_prefix(rust_root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        tree.raw.insert(rel.clone(), src.lines().map(str::to_string).collect());
+        tree.lexed.insert(rel, lex(&src, in_test));
+    }
+    Ok(())
+}
+
+/// Lex every `.rs` file under `rust/src` and `rust/tests` (fixture
+/// directories and the vendored `rust/anyhow` excluded).
+pub fn collect_sources(root: &Path) -> Result<SourceTree> {
+    let rust_root = root.join("rust");
+    let mut tree = SourceTree { lexed: BTreeMap::new(), raw: BTreeMap::new() };
+    walk_dir(&rust_root.join("src"), &rust_root, false, &mut tree)?;
+    let tests = rust_root.join("tests");
+    if tests.is_dir() {
+        walk_dir(&tests, &rust_root, true, &mut tree)?;
+    }
+    Ok(tree)
+}
+
+/// Stable baseline key for a finding: `path:rule:<trimmed line text>`.
+/// Line-number-free so edits elsewhere in the file don't churn it.
+pub fn baseline_key(v: &Violation, tree: &SourceTree) -> String {
+    let text = tree
+        .raw
+        .get(&v.path)
+        .and_then(|ls| ls.get(v.line.saturating_sub(1) as usize))
+        .map(|s| s.trim())
+        .unwrap_or("");
+    format!("{}:{}:{}", v.path, v.rule, text)
+}
+
+/// Parse a baseline file: one key per line, `#` comments and blank
+/// lines ignored. A missing file is an empty baseline.
+pub fn load_baseline(path: &Path) -> BTreeSet<String> {
+    let Ok(text) = fs::read_to_string(path) else {
+        return BTreeSet::new();
+    };
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+fn write_baseline(path: &Path, keys: &BTreeSet<String>) -> Result<()> {
+    let mut out = String::new();
+    out.push_str("# bfp-cnn lint grandfather baseline.\n");
+    out.push_str("# One `path:rule:<trimmed line>` key per tolerated violation;\n");
+    out.push_str("# regenerate with `bfp-cnn lint --fix-baseline`. Keep me empty.\n");
+    for k in keys {
+        out.push_str(k);
+        out.push('\n');
+    }
+    fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn write_json(
+    path: &Path,
+    violations: &[Violation],
+    baselined: &BTreeSet<String>,
+    tree: &SourceTree,
+    files: usize,
+    stale: usize,
+) -> Result<()> {
+    let mut rows = Vec::new();
+    for v in violations {
+        let grandfathered = baselined.contains(&baseline_key(v, tree));
+        rows.push(format!(
+            "    {{\"path\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\", \
+             \"baselined\": {}}}",
+            json_escape(&v.path),
+            v.line,
+            json_escape(v.rule),
+            json_escape(&v.message),
+            grandfathered
+        ));
+    }
+    let new = violations
+        .iter()
+        .filter(|v| !baselined.contains(&baseline_key(v, tree)))
+        .count();
+    let body = format!(
+        "{{\n  \"files_scanned\": {},\n  \"total\": {},\n  \"new\": {},\n  \
+         \"stale_baseline\": {},\n  \"violations\": [\n{}\n  ]\n}}\n",
+        files,
+        violations.len(),
+        new,
+        stale,
+        rows.join(",\n")
+    );
+    fs::write(path, body).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Run the linter against the working tree. Returns the process exit
+/// code: 0 when no *new* (non-baselined) violations were found, 2
+/// otherwise. `fix_baseline` rewrites the baseline instead of failing;
+/// `json` additionally writes a machine-readable report.
+pub fn cli(fix_baseline: bool, json: Option<&Path>) -> Result<i32> {
+    let Some(root) = repo_root() else {
+        bail!("cannot locate the repo root (no rust/Cargo.toml above the current directory)");
+    };
+    let tree = collect_sources(&root)?;
+    let violations = run_all(&tree.lexed);
+    let files = tree.lexed.len();
+
+    let baseline_path = root.join("rust").join("analysis").join("baseline.txt");
+    let baseline = load_baseline(&baseline_path);
+    let current: BTreeSet<String> = violations.iter().map(|v| baseline_key(v, &tree)).collect();
+    let stale: Vec<&String> = baseline.difference(&current).collect();
+
+    if fix_baseline {
+        if let Some(dir) = baseline_path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        write_baseline(&baseline_path, &current)?;
+        println!(
+            "baseline rewritten: {} entr{} ({})",
+            current.len(),
+            if current.len() == 1 { "y" } else { "ies" },
+            baseline_path.display()
+        );
+        if let Some(p) = json {
+            write_json(p, &violations, &current, &tree, files, 0)?;
+        }
+        return Ok(0);
+    }
+
+    let mut new = 0usize;
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for v in &violations {
+        if baseline.contains(&baseline_key(v, &tree)) {
+            continue;
+        }
+        new += 1;
+        writeln!(out, "{v}")?;
+    }
+    for s in &stale {
+        eprintln!("warning: stale baseline entry (violation no longer fires): {s}");
+    }
+    if let Some(p) = json {
+        write_json(p, &violations, &baseline, &tree, files, stale.len())?;
+    }
+    eprintln!(
+        "lint: {} violation{} ({} new, {} baselined, {} stale) in {} files",
+        violations.len(),
+        if violations.len() == 1 { "" } else { "s" },
+        new,
+        violations.len() - new,
+        stale.len(),
+        files
+    );
+    Ok(if new == 0 { 0 } else { 2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_parse_ignores_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("bfp_lint_baseline_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("baseline.txt");
+        fs::write(&p, "# header\n\nsrc/a.rs:bare-sleep:thread::sleep(d);\n").unwrap();
+        let b = load_baseline(&p);
+        assert_eq!(b.len(), 1);
+        assert!(b.contains("src/a.rs:bare-sleep:thread::sleep(d);"));
+        // round-trip through the writer
+        write_baseline(&p, &b).unwrap();
+        assert_eq!(load_baseline(&p), b);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -8,10 +8,24 @@
 //! * [`instrument`] — the dual (FP32 ∥ BFP) forward pass that gathers the
 //!   experimental SNRs and the per-layer statistics the theory consumes.
 //! * [`energy`] — normalized-magnitude energy histograms (Figure 3).
+//!
+//! It also hosts the project's *self*-analysis — the invariant linter
+//! behind `bfp-cnn lint`:
+//!
+//! * [`lex`] — comment/string-aware line lexer with `#[cfg(test)]` /
+//!   `mod tests` region tracking.
+//! * [`rules`] — the rule passes (SAFETY comments on `unsafe`, clock
+//!   discipline, atomic-ordering justifications, serving-path unwrap
+//!   bans, lock-nesting annotations, wire-protocol exhaustiveness).
+//! * [`lint`] — the driver: repo walk, grandfather baseline, JSON
+//!   report, CLI entry point.
 
 pub mod energy;
 pub mod instrument;
+pub mod lex;
+pub mod lint;
 pub mod multi_layer;
+pub mod rules;
 pub mod single_layer;
 pub mod snr;
 

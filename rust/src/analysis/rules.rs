@@ -1,0 +1,686 @@
+//! The project-invariant rule passes behind `bfp-cnn lint`.
+//!
+//! Each rule is a line-oriented heuristic over the masked [`Line`]s
+//! produced by [`super::lex`]. Paths are repo-relative with the `rust/`
+//! prefix stripped (`src/net/server.rs`), so rules can scope themselves
+//! to the serving modules, exempt `obs::clock`, and so on — and so the
+//! fixture tests can lint an in-memory string under any pretend path.
+//!
+//! Escape hatches, all grep-able:
+//! * `// LINT-ALLOW: <rule-id> — reason` on the flagged line or in the
+//!   comment block directly above silences that one site.
+//! * `// SAFETY:` (or a `# Safety` doc section) satisfies the unsafe
+//!   rule; `// LOCK-ORDER:` satisfies the lock-nesting rule.
+
+use super::lex::Line;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One finding: `path:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Violation {
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Serving-path modules where `unwrap()/expect()` is a lint error.
+const SERVING: [&str; 4] = ["src/coordinator/", "src/net/", "src/runtime/", "src/nn/prepared.rs"];
+/// Methods returning poison-carrying `Result`s whose unwrap is idiomatic.
+const POISON_METHODS: [&str; 3] = ["lock", "wait", "wait_timeout"];
+const ALLOW: &str = "LINT-ALLOW:";
+const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of `word` in `code` with non-identifier boundaries on
+/// both sides (`\bword\b`).
+fn word_positions(code: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (pos, _) in code.match_indices(word) {
+        let before_ok = code[..pos].chars().next_back().is_none_or(|c| !is_ident(c));
+        let after_ok = code[pos + word.len()..].chars().next().is_none_or(|c| !is_ident(c));
+        if before_ok && after_ok {
+            out.push(pos);
+        }
+    }
+    out
+}
+
+fn contains_word(code: &str, word: &str) -> bool {
+    !word_positions(code, word).is_empty()
+}
+
+/// Occurrences of `pattern` followed by optional whitespace and `(` —
+/// `\bpattern\s*\(`, the boundary applying only when the pattern starts
+/// with an identifier char (so `.lock` matches mid-chain).
+fn pattern_then_paren(code: &str, pattern: &str) -> usize {
+    let needs_boundary = pattern.chars().next().is_some_and(is_ident);
+    let mut count = 0;
+    for (pos, _) in code.match_indices(pattern) {
+        let prev_ok =
+            !needs_boundary || code[..pos].chars().next_back().is_none_or(|c| !is_ident(c));
+        if prev_ok && code[pos + pattern.len()..].trim_start().starts_with('(') {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// `Ordering::X` mentions on the line (any of the five variants).
+fn ordering_mentions(code: &str) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for (pos, _) in code.match_indices("Ordering::") {
+        let rest = &code[pos + "Ordering::".len()..];
+        for v in ORDERINGS {
+            if !rest.starts_with(v) {
+                continue;
+            }
+            if rest[v.len()..].chars().next().is_none_or(|c| !is_ident(c)) {
+                out.push(v);
+            }
+        }
+    }
+    out
+}
+
+fn comment_text(cm: &str) -> &str {
+    cm.trim_matches(|c: char| matches!(c, '/' | ' ' | '\t' | '*' | '!'))
+}
+
+/// Allow marker for `rule` on the same line or in the contiguous block
+/// of comment-only lines directly above.
+fn allowed(lines: &[Line], idx: usize, rule: &str) -> bool {
+    let cm = &lines[idx].comment;
+    if cm.contains(ALLOW) && cm.contains(rule) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let ln = &lines[j];
+        if !ln.code.trim().is_empty() || ln.comment.trim().is_empty() {
+            break;
+        }
+        if ln.comment.contains(ALLOW) && ln.comment.contains(rule) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Comment on the same line, the preceding line, or above an unbroken
+/// run of lines that themselves satisfy `in_run` (a comment block above
+/// a run of atomic ops justifies the whole run). Returns the whole
+/// contiguous comment block, joined.
+fn justifying_comment(
+    lines: &[Line],
+    idx: usize,
+    in_run: impl Fn(&str) -> bool,
+) -> Option<String> {
+    let mut j = idx as i64;
+    while j >= 0 {
+        let ju = j as usize;
+        if !comment_text(&lines[ju].comment).is_empty() {
+            let mut parts = vec![lines[ju].comment.clone()];
+            let mut k = j - 1;
+            while k >= 0 {
+                let ln = &lines[k as usize];
+                if !ln.code.trim().is_empty() || ln.comment.trim().is_empty() {
+                    break;
+                }
+                parts.push(ln.comment.clone());
+                k -= 1;
+            }
+            parts.reverse();
+            return Some(parts.join(" "));
+        }
+        if ju == idx || in_run(&lines[ju].code) {
+            j -= 1;
+            continue;
+        }
+        break;
+    }
+    None
+}
+
+/// R1 `unsafe-safety`: every `unsafe` site carries a `// SAFETY:`
+/// comment (or sits under a `# Safety` doc section) on the same line or
+/// above it, across comment / attribute / blank lines. Applies to test
+/// code too — a test's unsafe is no safer.
+pub fn rule_unsafe_safety(path: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    for (idx, ln) in lines.iter().enumerate() {
+        if !contains_word(&ln.code, "unsafe") {
+            continue;
+        }
+        let mut ok = false;
+        let mut j = idx as i64;
+        while j >= 0 {
+            let lj = &lines[j as usize];
+            if lj.comment.contains("SAFETY:") || lj.comment.contains("# Safety") {
+                ok = true;
+                break;
+            }
+            let code = lj.code.trim();
+            if j as usize != idx && !code.is_empty() && !code.starts_with("#[") {
+                break;
+            }
+            j -= 1;
+        }
+        if !ok {
+            out.push(Violation {
+                path: path.to_string(),
+                line: ln.number,
+                rule: "unsafe-safety",
+                message: "`unsafe` without a SAFETY comment".to_string(),
+            });
+        }
+    }
+}
+
+/// R2 `clock-source`: `Instant::now()` / `SystemTime::now()` belong in
+/// `obs::clock` (so chaos tests and drills can warp time). The bench /
+/// chaos harness measures real wall-clock SLOs and is exempt.
+pub fn rule_clock_source(path: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    if path == "src/obs/clock.rs" || path.starts_with("src/harness/") {
+        return;
+    }
+    for (idx, ln) in lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        if (ln.code.contains("Instant::now") || ln.code.contains("SystemTime::now"))
+            && !allowed(lines, idx, "clock-source")
+        {
+            out.push(Violation {
+                path: path.to_string(),
+                line: ln.number,
+                rule: "clock-source",
+                message: "raw time source outside obs::clock (use Clock::now)".to_string(),
+            });
+        }
+    }
+}
+
+/// R3 `bare-sleep`: `thread::sleep` in serving code ignores mocked
+/// time; use `Clock::sleep` or allow-list with a justification.
+pub fn rule_bare_sleep(path: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    if path == "src/obs/clock.rs" || path.starts_with("src/harness/") {
+        return;
+    }
+    for (idx, ln) in lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        if pattern_then_paren(&ln.code, "thread::sleep") > 0 && !allowed(lines, idx, "bare-sleep")
+        {
+            out.push(Violation {
+                path: path.to_string(),
+                line: ln.number,
+                rule: "bare-sleep",
+                message: "bare thread::sleep (use Clock::sleep or allow-list)".to_string(),
+            });
+        }
+    }
+}
+
+/// R4 `ordering-comment`: every atomic `Ordering::*` site carries a
+/// justification comment; `SeqCst` additionally needs its rationale to
+/// mention `SeqCst` (why the strongest order, or why not downgraded).
+pub fn rule_ordering_comment(path: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    for (idx, ln) in lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        let mentions = ordering_mentions(&ln.code);
+        if mentions.is_empty() {
+            continue;
+        }
+        let cm = justifying_comment(lines, idx, |code| !ordering_mentions(code).is_empty());
+        let Some(cm) = cm else {
+            out.push(Violation {
+                path: path.to_string(),
+                line: ln.number,
+                rule: "ordering-comment",
+                message: "atomic Ordering without a justification comment".to_string(),
+            });
+            continue;
+        };
+        if mentions.contains(&"SeqCst") && !cm.contains("SeqCst") {
+            out.push(Violation {
+                path: path.to_string(),
+                line: ln.number,
+                rule: "ordering-comment",
+                message: "SeqCst without downgrade rationale mentioning SeqCst".to_string(),
+            });
+        }
+    }
+}
+
+/// Does the `.unwrap()` / `.expect(` at (`idx`, byte `col`) chain
+/// directly off a poison-carrying call (`.lock()` / `.wait()` /
+/// `.wait_timeout()`)? Matched backwards across lines through the
+/// closing paren of the preceding call.
+fn poison_chained(lines: &[Line], idx: usize, col: usize) -> bool {
+    let mut li = idx;
+    let mut before: Vec<char> = lines[idx].code[..col].trim_end().chars().collect();
+    while before.is_empty() {
+        if li == 0 {
+            return false;
+        }
+        li -= 1;
+        let t = lines[li].code.trim_end();
+        if t.trim().is_empty() {
+            continue;
+        }
+        before = t.chars().collect();
+    }
+    if before.last() != Some(&')') {
+        return false;
+    }
+    // backwards paren match, possibly across lines
+    let mut depth = 0i64;
+    let mut text = before;
+    let mut row = li;
+    let mut pos = text.len() as i64 - 1;
+    loop {
+        match text[pos as usize] {
+            ')' => depth += 1,
+            '(' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        pos -= 1;
+        while pos < 0 {
+            if row == 0 {
+                return false;
+            }
+            row -= 1;
+            text = lines[row].code.chars().collect();
+            pos = text.len() as i64 - 1;
+        }
+    }
+    // `.method` directly before the matched `(`?
+    let head: String = text[..pos as usize].iter().collect();
+    let head = head.trim_end();
+    let rev_ident: String = head.chars().rev().take_while(|&c| is_ident(c)).collect();
+    let ident: String = rev_ident.chars().rev().collect();
+    if ident.is_empty() || !head[..head.len() - ident.len()].ends_with('.') {
+        return false;
+    }
+    POISON_METHODS.contains(&ident.as_str())
+}
+
+/// R5 `serving-unwrap`: no `unwrap()/expect()` on serving paths —
+/// return a typed error instead. Mutex/Condvar poison unwraps are
+/// idiomatic and excluded structurally.
+pub fn rule_serving_unwrap(path: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    if !SERVING.iter().any(|p| path.starts_with(p) || path == *p) {
+        return;
+    }
+    for (idx, ln) in lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        let mut sites: Vec<usize> = Vec::new();
+        sites.extend(ln.code.match_indices(".unwrap()").map(|(p, _)| p));
+        sites.extend(ln.code.match_indices(".expect(").map(|(p, _)| p));
+        sites.sort_unstable();
+        for col in sites {
+            if poison_chained(lines, idx, col) || allowed(lines, idx, "serving-unwrap") {
+                continue;
+            }
+            out.push(Violation {
+                path: path.to_string(),
+                line: ln.number,
+                rule: "serving-unwrap",
+                message: "unwrap/expect on a serving path (return a typed error)".to_string(),
+            });
+        }
+    }
+}
+
+/// R6 `lock-order`: a fn taking two or more `.lock()`s is a deadlock
+/// candidate — annotate the intended order with `// LOCK-ORDER:` (in
+/// the fn or in the comment block above its signature).
+pub fn rule_lock_order(path: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    struct Frame {
+        start: usize,
+        depth: i64,
+        locks: usize,
+        lock_lines: Vec<u32>,
+    }
+    let mut depth = 0i64;
+    let mut fn_stack: Vec<Frame> = Vec::new();
+    let mut pending_fn: Option<(usize, i64)> = None;
+    let mut results: Vec<(Frame, usize)> = Vec::new();
+    for (idx, ln) in lines.iter().enumerate() {
+        if !ln.in_test {
+            // `\bfn\s+name` — a fn signature starts (the last match on
+            // the line wins)
+            for pos in word_positions(&ln.code, "fn") {
+                let rest = &ln.code[pos + 2..];
+                let trimmed = rest.trim_start();
+                let has_ws = trimmed.len() < rest.len();
+                if has_ws && trimmed.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_')
+                {
+                    pending_fn = Some((idx, depth));
+                }
+            }
+        }
+        for ch in ln.code.chars() {
+            match ch {
+                '{' => {
+                    if pending_fn.is_some_and(|(_, d)| d == depth) {
+                        let (start, _) = pending_fn.take().unwrap_or((0, 0));
+                        let f = Frame { start, depth, locks: 0, lock_lines: Vec::new() };
+                        fn_stack.push(f);
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if fn_stack.last().map(|f| f.depth) == Some(depth) {
+                        if let Some(f) = fn_stack.pop() {
+                            results.push((f, idx));
+                        }
+                    }
+                }
+                ';' => {
+                    if pending_fn.is_some_and(|(_, d)| d == depth) {
+                        pending_fn = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if !ln.in_test {
+            let cnt = pattern_then_paren(&ln.code, ".lock");
+            if cnt > 0 {
+                if let Some(f) = fn_stack.last_mut() {
+                    f.locks += cnt;
+                    f.lock_lines.push(ln.number);
+                }
+            }
+        }
+    }
+    for (f, end_idx) in results {
+        if f.locks < 2 {
+            continue;
+        }
+        // accept the annotation inside the fn or in the contiguous
+        // comment/attribute block directly above its signature
+        let mut scan_from = f.start;
+        let mut k = f.start as i64 - 1;
+        while k >= 0 {
+            let ln = &lines[k as usize];
+            let code = ln.code.trim();
+            if code.starts_with("#[") || (code.is_empty() && !ln.comment.trim().is_empty()) {
+                scan_from = k as usize;
+                k -= 1;
+                continue;
+            }
+            break;
+        }
+        let annotated = (scan_from..=end_idx).any(|j| lines[j].comment.contains("LOCK-ORDER:"));
+        if !annotated {
+            out.push(Violation {
+                path: path.to_string(),
+                line: lines[f.start].number,
+                rule: "lock-order",
+                message: format!(
+                    "{} .lock() calls in one fn (lines {:?}) without LOCK-ORDER comment",
+                    f.locks, f.lock_lines
+                ),
+            });
+        }
+    }
+}
+
+/// R7 `wire-exhaustive`: cross-file protocol exhaustiveness — every
+/// `QosErrorKind` variant maps to a wire `ErrorCode` in `net::server`,
+/// and every `KIND_*` frame tag in `net::proto` is referenced beyond
+/// its declaration (encode + decode) and exercised by an
+/// `encode_<kind>(` round-trip in proto's tests.
+pub fn rule_wire_exhaustive(files: &BTreeMap<String, Vec<Line>>, out: &mut Vec<Violation>) {
+    let (Some(qos), Some(server), Some(proto)) = (
+        files.get("src/coordinator/qos.rs"),
+        files.get("src/net/server.rs"),
+        files.get("src/net/proto.rs"),
+    ) else {
+        out.push(Violation {
+            path: "src/net/proto.rs".to_string(),
+            line: 1,
+            rule: "wire-exhaustive",
+            message: "missing cross-file inputs".to_string(),
+        });
+        return;
+    };
+    let joined = |ls: &[Line]| ls.iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join("\n");
+
+    // QosErrorKind variants → explicit mapping mentions in net::server
+    let qos_code = joined(qos);
+    let mut variants: Vec<String> = Vec::new();
+    if let Some(pos) = qos_code.find("pub enum QosErrorKind") {
+        let after = qos_code[pos + "pub enum QosErrorKind".len()..].trim_start();
+        if let Some(body) = after.strip_prefix('{') {
+            let body = body.split("\n}").next().unwrap_or("");
+            for line in body.lines() {
+                let t = line.trim_start();
+                if t.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                    variants.push(t.chars().take_while(|&c| is_ident(c)).collect());
+                }
+            }
+        }
+    }
+    let server_code = joined(server);
+    for v in &variants {
+        if !server_code.contains(&format!("QosErrorKind::{v}")) {
+            out.push(Violation {
+                path: "src/net/server.rs".to_string(),
+                line: 1,
+                rule: "wire-exhaustive",
+                message: format!(
+                    "QosErrorKind::{v} has no explicit ErrorCode mapping in net::server"
+                ),
+            });
+        }
+    }
+
+    // wire frame tags: declaration + ≥2 uses + a test round-trip
+    let nontest: Vec<&str> =
+        proto.iter().filter(|l| !l.in_test).map(|l| l.code.as_str()).collect();
+    let proto_nontest = nontest.join("\n");
+    let test: Vec<&str> = proto.iter().filter(|l| l.in_test).map(|l| l.code.as_str()).collect();
+    let proto_test = test.join("\n");
+    let mut kinds: Vec<String> = Vec::new();
+    for (pos, _) in proto_nontest.match_indices("const KIND_") {
+        let ident_start = pos + "const ".len();
+        let ident: String = proto_nontest[ident_start..]
+            .chars()
+            .take_while(|&c| c.is_ascii_uppercase() || c == '_')
+            .collect();
+        let rest = proto_nontest[ident_start + ident.len()..].trim_start();
+        if let Some(r) = rest.strip_prefix(':') {
+            if r.trim_start().starts_with("u8") {
+                kinds.push(ident);
+            }
+        }
+    }
+    for kind in kinds {
+        let uses = word_positions(&proto_nontest, &kind).len().saturating_sub(1);
+        if uses < 2 {
+            out.push(Violation {
+                path: "src/net/proto.rs".to_string(),
+                line: 1,
+                rule: "wire-exhaustive",
+                message: format!("{kind} lacks encode+decode references ({uses} uses)"),
+            });
+        }
+        let enc = format!("encode_{}", kind["KIND_".len()..].to_lowercase());
+        if pattern_then_paren(&proto_test, &enc) == 0 {
+            out.push(Violation {
+                path: "src/net/proto.rs".to_string(),
+                line: 1,
+                rule: "wire-exhaustive",
+                message: format!("{kind}: no test mention of {enc}()"),
+            });
+        }
+    }
+}
+
+/// Run every rule over a lexed tree (keys are `rust/`-relative paths
+/// with `/` separators). Returns findings sorted by path/line/rule.
+pub fn run_all(files: &BTreeMap<String, Vec<Line>>) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (path, lines) in files {
+        rule_unsafe_safety(path, lines, &mut out);
+        if path.starts_with("src/") {
+            rule_clock_source(path, lines, &mut out);
+            rule_bare_sleep(path, lines, &mut out);
+            rule_ordering_comment(path, lines, &mut out);
+            rule_serving_unwrap(path, lines, &mut out);
+            rule_lock_order(path, lines, &mut out);
+        }
+    }
+    rule_wire_exhaustive(files, &mut out);
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lex::lex;
+
+    fn lint_one(path: &str, src: &str) -> Vec<Violation> {
+        let lines = lex(src, false);
+        let mut out = Vec::new();
+        rule_unsafe_safety(path, &lines, &mut out);
+        rule_clock_source(path, &lines, &mut out);
+        rule_bare_sleep(path, &lines, &mut out);
+        rule_ordering_comment(path, &lines, &mut out);
+        rule_serving_unwrap(path, &lines, &mut out);
+        rule_lock_order(path, &lines, &mut out);
+        out
+    }
+
+    fn rules_of(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f(p: *mut u8) { unsafe { p.write(0) } }\n";
+        assert_eq!(rules_of(&lint_one("src/x.rs", bad)), ["unsafe-safety"]);
+        let ok = "fn f(p: *mut u8) {\n    // SAFETY: p is valid\n    unsafe { p.write(0) }\n}\n";
+        assert!(lint_one("src/x.rs", ok).is_empty());
+        // the word inside a string or comment is not code
+        let masked = "fn f() { log(\"unsafe stuff\"); } // unsafe-sounding\n";
+        assert!(lint_one("src/x.rs", masked).is_empty());
+    }
+
+    #[test]
+    fn clock_source_scoped_and_allowed() {
+        let bad = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(rules_of(&lint_one("src/net/x.rs", bad)), ["clock-source"]);
+        // exempt locations
+        assert!(lint_one("src/obs/clock.rs", bad).is_empty());
+        assert!(lint_one("src/harness/bench.rs", bad).is_empty());
+        // allow marker in the comment block above
+        let ok = "fn f() {\n    // LINT-ALLOW: clock-source — operator timer\n    let t = Instant::now();\n}\n";
+        assert!(lint_one("src/net/x.rs", ok).is_empty());
+        // test code is exempt
+        let test = "#[cfg(test)]\nmod tests {\n    fn f() { let t = Instant::now(); }\n}\n";
+        assert!(lint_one("src/net/x.rs", test).is_empty());
+    }
+
+    #[test]
+    fn bare_sleep_flagged() {
+        let bad = "fn f() { std::thread::sleep(d); }\n";
+        assert_eq!(rules_of(&lint_one("src/coordinator/x.rs", bad)), ["bare-sleep"]);
+        let ok = "fn f() { Clock::sleep(d); }\n";
+        assert!(lint_one("src/coordinator/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn ordering_needs_comment_and_seqcst_rationale() {
+        let bad = "fn f() { a.store(true, Ordering::Relaxed); }\n";
+        assert_eq!(rules_of(&lint_one("src/x.rs", bad)), ["ordering-comment"]);
+        let ok = "fn f() {\n    // Relaxed: independent counter\n    a.store(true, Ordering::Relaxed);\n}\n";
+        assert!(lint_one("src/x.rs", ok).is_empty());
+        // a comment block justifies an unbroken run of atomic lines
+        let run = "fn f() {\n    // Relaxed ×2: gauges\n    a.store(1, Ordering::Relaxed);\n    b.store(2, Ordering::Relaxed);\n}\n";
+        assert!(lint_one("src/x.rs", run).is_empty());
+        // SeqCst with a comment that never says why SeqCst
+        let sc = "fn f() {\n    // stop flag\n    a.store(true, Ordering::SeqCst);\n}\n";
+        let vs = lint_one("src/x.rs", sc);
+        assert_eq!(rules_of(&vs), ["ordering-comment"]);
+        assert!(vs[0].message.contains("SeqCst"));
+        let sc_ok = "fn f() {\n    // SeqCst: cold path, keep total order\n    a.store(true, Ordering::SeqCst);\n}\n";
+        assert!(lint_one("src/x.rs", sc_ok).is_empty());
+    }
+
+    #[test]
+    fn serving_unwrap_scoped_with_poison_exclusion() {
+        let bad = "fn f() { let v = parse().unwrap(); }\n";
+        assert_eq!(rules_of(&lint_one("src/net/x.rs", bad)), ["serving-unwrap"]);
+        // outside serving modules the rule does not apply
+        assert!(lint_one("src/bfp/x.rs", bad).is_empty());
+        // mutex poison unwraps are idiomatic
+        let poison = "fn f() { let g = m.lock().unwrap(); }\n";
+        assert!(lint_one("src/net/x.rs", poison).is_empty());
+        // ...including split across lines
+        let ml = "fn f() {\n    let g = m\n        .lock()\n        .unwrap();\n}\n";
+        assert!(lint_one("src/net/x.rs", ml).is_empty());
+        // expect() chained off a non-poison call still flags
+        let exp = "fn f() { let v = m.take().expect(\"gone\"); }\n";
+        assert_eq!(rules_of(&lint_one("src/net/x.rs", exp)), ["serving-unwrap"]);
+    }
+
+    #[test]
+    fn lock_order_heuristic() {
+        let bad = "fn f() {\n    let a = x.lock().unwrap();\n    let b = y.lock().unwrap();\n}\n";
+        let vs = lint_one("src/x.rs", bad);
+        assert_eq!(rules_of(&vs), ["lock-order"]);
+        let ok = "// LOCK-ORDER: x before y, always\nfn f() {\n    let a = x.lock().unwrap();\n    let b = y.lock().unwrap();\n}\n";
+        assert!(lint_one("src/x.rs", ok).is_empty());
+        // one lock is fine
+        let one = "fn f() { let a = x.lock().unwrap(); }\n";
+        assert!(lint_one("src/x.rs", one).is_empty());
+    }
+
+    #[test]
+    fn wire_exhaustive_cross_file() {
+        let qos = "pub enum QosErrorKind {\n    Timeout,\n    Draining,\n}\n";
+        let server_ok = "fn map() { let _ = (QosErrorKind::Timeout, QosErrorKind::Draining); }\n";
+        let server_bad = "fn map() { let _ = QosErrorKind::Timeout; }\n";
+        let proto = "pub const KIND_PING: u8 = 1;\nfn enc() { w(KIND_PING); }\nfn dec() { r(KIND_PING); }\n#[cfg(test)]\nmod tests {\n    fn t() { encode_ping(1); }\n}\n";
+        let mk = |server: &str| {
+            let mut files = BTreeMap::new();
+            files.insert("src/coordinator/qos.rs".to_string(), lex(qos, false));
+            files.insert("src/net/server.rs".to_string(), lex(server, false));
+            files.insert("src/net/proto.rs".to_string(), lex(proto, false));
+            let mut out = Vec::new();
+            rule_wire_exhaustive(&files, &mut out);
+            out
+        };
+        assert!(mk(server_ok).is_empty());
+        let vs = mk(server_bad);
+        assert_eq!(vs.len(), 1);
+        assert!(vs[0].message.contains("Draining"));
+    }
+}

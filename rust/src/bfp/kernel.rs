@@ -434,14 +434,21 @@ pub fn gemm_tiled(w: &BfpMatrix, panels: WeightPanels<'_>, acts: &ActPanels, out
         let (mb, nb) = (t / nblocks, t % nblocks);
         let (r0, r1) = (mb * MC, ((mb + 1) * MC).min(m));
         let (c0, c1) = (nb * NC, ((nb + 1) * NC).min(n));
-        // SAFETY: each task writes only rows [r0, r1) × cols [c0, c1) of
-        // `out`; the task grid tiles the output disjointly.
         match (lane, panels) {
-            (Lane::F32 { chunk }, WeightPanels::F32(wp)) => unsafe {
-                block_f32(w, wp, acts, outp, r0, r1, c0, c1, chunk)
-            },
-            (Lane::I32, WeightPanels::Int(wp)) => unsafe { block_int::<i32>(w, wp, acts, outp, r0, r1, c0, c1) },
-            (Lane::I64, WeightPanels::Int(wp)) => unsafe { block_int::<i64>(w, wp, acts, outp, r0, r1, c0, c1) },
+            (Lane::F32 { chunk }, WeightPanels::F32(wp)) => {
+                // SAFETY: this task exclusively owns rows [r0, r1) ×
+                // cols [c0, c1) of `out` — the (mb, nb) grid tiles the
+                // output disjointly, and `block_f32` writes only there.
+                unsafe { block_f32(w, wp, acts, outp, r0, r1, c0, c1, chunk) }
+            }
+            (Lane::I32, WeightPanels::Int(wp)) => {
+                // SAFETY: same disjoint-tile ownership as the f32 arm.
+                unsafe { block_int::<i32>(w, wp, acts, outp, r0, r1, c0, c1) }
+            }
+            (Lane::I64, WeightPanels::Int(wp)) => {
+                // SAFETY: same disjoint-tile ownership as the f32 arm.
+                unsafe { block_int::<i64>(w, wp, acts, outp, r0, r1, c0, c1) }
+            }
             _ => unreachable!("panel kind verified against lane above"),
         }
     });
@@ -464,12 +471,21 @@ pub fn bfp_gemm_tiled(w: &BfpMatrix, i: &BfpMatrix, out: &mut [f32]) {
 /// disjoint tile — see the SAFETY note at the spawn site).
 #[derive(Clone, Copy)]
 struct OutPtr(*mut f32);
+// SAFETY: the wrapper carries a plain address; it may move between
+// threads because every task writes a disjoint tile of the buffer
+// behind it (the `gemm_tiled` grid) for the buffer's whole lifetime.
 unsafe impl Send for OutPtr {}
+// SAFETY: `&OutPtr` only exposes the copied address; the disjoint-tile
+// contract above makes concurrent use across threads sound.
 unsafe impl Sync for OutPtr {}
 
 /// f32-lane block: `MR×NR` register tiles, `KC`-segmented (≤ `chunk`)
 /// f32 accumulation flushed into f64 per segment — the exact mirror of
 /// the naive lane's chunked reduction, re-associated.
+///
+/// # Safety
+/// The caller guarantees rows `[r0, r1)` × cols `[c0, c1)` of the
+/// `w.rows × acts.n` output behind `out` are owned by this task.
 #[allow(clippy::too_many_arguments)]
 unsafe fn block_f32(
     w: &BfpMatrix,
@@ -513,13 +529,19 @@ unsafe fn block_f32(
                 k0 = k1;
             }
             let rbase = p * MR;
-            store_tile(out, w, acts, rbase, MR.min(r1 - rbase), cbase, cols, &acc64);
+            // SAFETY: the tile [rbase, rbase+rows) × [cbase, cbase+cols)
+            // is inside this task's [r0, r1) × [c0, c1) ownership region.
+            unsafe { store_tile(out, w, acts, rbase, MR.min(r1 - rbase), cbase, cols, &acc64) };
         }
     }
 }
 
 /// Integer-lane block (`A` = i32 or i64): exact integer accumulation is
 /// associative at any grouping, so the register tile streams the whole K.
+///
+/// # Safety
+/// The caller guarantees rows `[r0, r1)` × cols `[c0, c1)` of the
+/// `w.rows × acts.n` output behind `out` are owned by this task.
 #[allow(clippy::too_many_arguments)]
 unsafe fn block_int<A: AccLane>(
     w: &BfpMatrix,
@@ -556,7 +578,9 @@ unsafe fn block_int<A: AccLane>(
                 }
             }
             let rbase = p * MR;
-            store_tile(out, w, acts, rbase, MR.min(r1 - rbase), cbase, cols, &acc64);
+            // SAFETY: the tile [rbase, rbase+rows) × [cbase, cbase+cols)
+            // is inside this task's [r0, r1) × [c0, c1) ownership region.
+            unsafe { store_tile(out, w, acts, rbase, MR.min(r1 - rbase), cbase, cols, &acc64) };
         }
     }
 }
@@ -587,7 +611,10 @@ unsafe fn store_tile(
             BlockAxis::PerRow => w.exponents[gr],
             BlockAxis::PerCol => unreachable!(),
         };
-        let orow = std::slice::from_raw_parts_mut(out.0.add(gr * n + c0), cols);
+        // SAFETY: gr < w.rows and c0 + cols ≤ n (caller contract), so
+        // the row slice lies inside the output allocation and inside
+        // this task's exclusively-owned tile.
+        let orow = unsafe { std::slice::from_raw_parts_mut(out.0.add(gr * n + c0), cols) };
         if we <= ZERO_EXP_FLOOR {
             orow.fill(0.0);
             continue;

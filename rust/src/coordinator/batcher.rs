@@ -3,6 +3,7 @@
 //! pattern (a hardware BFP engine amortises block formatting and weight
 //! reuse across the batch).
 
+use crate::obs::Clock;
 use crate::tensor::Tensor;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -71,7 +72,7 @@ pub fn next_batch(rx: &Receiver<Request>, policy: BatchPolicy) -> Option<Vec<Req
     let deadline = first.enqueued_at + policy.linger;
     let mut batch = vec![first];
     while batch.len() < policy.max_batch {
-        let now = Instant::now();
+        let now = Clock::now();
         if now >= deadline {
             // linger budget spent: take only what is already queued
             match rx.try_recv() {

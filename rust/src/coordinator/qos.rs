@@ -283,12 +283,12 @@ impl LaneSet {
         fn ladder(own: &LaneStep, safer: &[&LaneStep]) -> Vec<LaneStep> {
             let mut steps = vec![own.clone()];
             for s in safer {
-                if steps.last().unwrap().schedule != s.schedule {
+                if steps.last().is_none_or(|last| last.schedule != s.schedule) {
                     steps.push((*s).clone());
                 }
             }
             let fallback = LaneStep::uniform_paper();
-            if steps.last().unwrap().schedule != fallback.schedule {
+            if steps.last().is_none_or(|last| last.schedule != fallback.schedule) {
                 steps.push(fallback);
             }
             steps
@@ -572,7 +572,7 @@ impl EdfQueues {
                 if now <= head.0.deadline + grace {
                     break;
                 }
-                let EdfEntry(r) = heap.pop().expect("peeked head");
+                let Some(EdfEntry(r)) = heap.pop() else { break };
                 obs::event_lane(obs::EventKind::Timeout, class.name());
                 let _ = r.respond.send(Err(QosError {
                     id: r.id,
@@ -846,19 +846,24 @@ impl HealthBoard {
     }
 
     fn retire(&self, lane: usize) {
+        // Release: the retiring executor's final metrics/queue writes
+        // happen-before a router that Acquire-observes the retirement.
         self.retired[lane].store(true, Ordering::Release);
     }
 
     fn is_retired(&self, lane: usize) -> bool {
+        // Acquire: pairs with `retire`'s Release (see there).
         self.retired[lane].load(Ordering::Acquire)
     }
 
     fn record_restart(&self, lane: usize) {
+        // Relaxed: monotone stat counter, read only for reporting.
         self.restarts[lane].fetch_add(1, Ordering::Relaxed);
     }
 
     fn publish_depths(&self, queues: &EdfQueues) {
         for c in QosClass::ALL {
+            // Relaxed: best-effort gauge for stats; staleness is fine.
             self.depths[c.rank()].store(queues.class_len(c), Ordering::Relaxed);
         }
     }
@@ -869,6 +874,8 @@ impl HealthBoard {
     /// healthy lane).
     fn publish_lane(&self, lane: usize, pos: usize, len: usize, swaps: u64, promotions: u64) {
         let packed = ((pos as u64 + 1) << 8) | (len as u64).min(0xff);
+        // Relaxed ×3: independent stats gauges; readers tolerate a torn
+        // *set* (each word itself is atomic) — display only.
         self.rungs[lane].store(packed, Ordering::Relaxed);
         self.swaps[lane].store(swaps, Ordering::Relaxed);
         self.promotions[lane].store(promotions, Ordering::Relaxed);
@@ -881,8 +888,8 @@ impl HealthBoard {
             .map(|(i, label)| LaneHealth {
                 label: label.to_string(),
                 retired: self.is_retired(i),
-                restarts: self.restarts[i].load(Ordering::Relaxed),
-                queued: if i < 3 { self.depths[i].load(Ordering::Relaxed) as u64 } else { 0 },
+                restarts: self.restarts[i].load(Ordering::Relaxed), // Relaxed: stats gauge
+                queued: if i < 3 { self.depths[i].load(Ordering::Relaxed) as u64 } else { 0 }, // Relaxed: gauge
             })
             .collect()
     }
@@ -892,16 +899,18 @@ impl HealthBoard {
             .iter()
             .enumerate()
             .map(|(i, label)| {
+                // Relaxed loads throughout: independent display gauges,
+                // no cross-field consistency required.
                 let packed = self.rungs[i].load(Ordering::Relaxed);
                 LaneStats {
                     label: label.to_string(),
                     retired: self.is_retired(i),
-                    restarts: self.restarts[i].load(Ordering::Relaxed),
-                    queued: if i < 3 { self.depths[i].load(Ordering::Relaxed) as u64 } else { 0 },
+                    restarts: self.restarts[i].load(Ordering::Relaxed), // Relaxed: gauge
+                    queued: if i < 3 { self.depths[i].load(Ordering::Relaxed) as u64 } else { 0 }, // Relaxed: gauge
                     rung: (packed >> 8) as u32,
                     ladder: (packed & 0xff) as u32,
-                    swaps: self.swaps[i].load(Ordering::Relaxed),
-                    promotions: self.promotions[i].load(Ordering::Relaxed),
+                    swaps: self.swaps[i].load(Ordering::Relaxed), // Relaxed: gauge
+                    promotions: self.promotions[i].load(Ordering::Relaxed), // Relaxed: gauge
                 }
             })
             .collect()
@@ -942,6 +951,8 @@ struct DrainState {
 
 impl DrainState {
     fn begin(&self, bound: Duration) {
+        // Release: admission readers that Acquire-see `refusing` also see
+        // any state written before the drain began.
         self.refusing.store(true, Ordering::Release);
         let mut d = self.deadline.lock().unwrap();
         if d.is_none() {
@@ -951,6 +962,7 @@ impl DrainState {
     }
 
     fn refusing(&self) -> bool {
+        // Acquire: pairs with the Release store in `begin`.
         self.refusing.load(Ordering::Acquire)
     }
 
@@ -1098,6 +1110,9 @@ fn fail_batch(
 /// supervisor can error-reply them and respawn the lane. A probe panic
 /// yields a `LaneFailure` with no responders (the batch was already
 /// answered) — the lane still needs a respawn, nobody needs a reply.
+// LOCK-ORDER: `global` (the shared metrics mutex) is the only lock this
+// function takes; each guard is a single-statement scope, never held
+// across the other acquisition or any wait.
 fn deliver_batch(
     lane: &mut Lane,
     batch: LaneBatch,
@@ -1304,6 +1319,9 @@ impl SupervisedLane {
         }
     }
 
+    // LOCK-ORDER: only the shared metrics mutex is taken, in two disjoint
+    // single-statement scopes — never nested, never held across the
+    // backoff sleep.
     fn respawn_or_retire(&mut self, global: &Mutex<Metrics>, board: &HealthBoard, lane_idx: usize) {
         // fold the dead incarnation's telemetry counters before dropping it
         if let Some(old) = self.lane.take() {
@@ -1317,7 +1335,9 @@ impl SupervisedLane {
             global.lock().unwrap().record_retired();
             return; // lane stays None: retired for good
         }
-        std::thread::sleep(self.next_backoff);
+        // Clock-aware: chaos/test runs can fast-forward the backoff by
+        // advancing the mocked clock instead of waiting wall time.
+        Clock::sleep(self.next_backoff);
         self.next_backoff = (self.next_backoff * 2).min(MAX_RESTART_BACKOFF);
         self.restarts += 1;
         obs::event_lane(obs::EventKind::Restart, self.seed.label);
@@ -1485,7 +1505,11 @@ fn scheduler_loop(
         // start): a request that already waited its linger in the channel
         // closes the batch immediately
         if open && queues.class_len(class) < config.policy.max_batch {
-            let anchor = queues.head_enqueued(class).expect("head exists") + config.policy.linger;
+            let anchor = match queues.head_enqueued(class) {
+                Some(head) => head + config.policy.linger,
+                // unreachable in practice: pick() just returned this class
+                None => continue,
+            };
             loop {
                 if queues.class_len(class) >= config.policy.max_batch {
                     break;
@@ -1504,7 +1528,11 @@ fn scheduler_loop(
                 }
             }
             // linger arrivals may be more urgent — EDF re-pick
-            class = pick(&queues).expect("queues non-empty");
+            class = match pick(&queues) {
+                Some(c) => c,
+                // unreachable in practice: the picked head is still queued
+                None => continue,
+            };
         }
         let batch = queues.pop_batch(class, config.policy.max_batch);
         let backlog = queues.total();
@@ -1669,8 +1697,7 @@ impl LaneQueues {
                 let eligible = st.queues[src]
                     .iter()
                     .position(|b| !b.downgraded && b.class.rank() == src);
-                if let Some(i) = eligible {
-                    let b = st.queues[src].remove(i).expect("position just found");
+                if let Some(b) = eligible.and_then(|i| st.queues[src].remove(i)) {
                     drop(st);
                     self.space.notify_all();
                     return Some((b, true));
@@ -1790,6 +1817,8 @@ fn run_dispatcher(
             std::thread::Builder::new()
                 .name(format!("qos-lane-{}", lane.label()))
                 .spawn(move || run_executor(lane, i, env))
+                // LINT-ALLOW: serving-unwrap — OS thread spawn failing at
+                // server startup is unrecoverable; no request is in flight.
                 .expect("spawn lane executor")
         })
         .collect();
@@ -1821,6 +1850,8 @@ pub const SCRUB_PERIOD: Duration = Duration::from_millis(25);
 /// checksum walk. Each completed pass records
 /// [`Metrics::record_scrub`]; repairs additionally emit a `corrupt`
 /// instant event per healed layer.
+// LOCK-ORDER: cache before metrics; the cache guard is dropped before
+// the metrics lock is taken, so the two are never held together.
 fn spawn_scrubber(
     model: Model,
     cache: SharedWeightCache,
@@ -1831,8 +1862,11 @@ fn spawn_scrubber(
         // sentinel: the first tick always verifies, so entries quantized
         // during lane warmup get one startup pass before parking
         let mut seen_gen = u64::MAX;
+        // Relaxed: shutdown flag; one stale read costs one extra period.
         while !stop.load(Ordering::Relaxed) {
-            std::thread::sleep(SCRUB_PERIOD);
+            // Clock-aware: tests fast-forward the scrub cadence by
+            // advancing the mocked clock instead of sleeping for real.
+            Clock::sleep(SCRUB_PERIOD);
             if cache.lock().unwrap().generation() == seen_gen {
                 continue; // parked: cache unchanged since the last pass
             }

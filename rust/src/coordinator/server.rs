@@ -4,6 +4,7 @@
 
 use super::batcher::{next_batch, split_batch, BatchPolicy, Request, Response};
 use super::metrics::Metrics;
+use crate::obs::Clock;
 use crate::tensor::Tensor;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -63,14 +64,14 @@ impl InferenceServer {
         let worker = std::thread::spawn(move || {
             let mut backend = factory();
             while let Some(batch) = next_batch(&rx, config.policy) {
-                let t0 = Instant::now();
+                let t0 = Clock::now();
                 // images move out of the requests — no per-request copy
                 let (images, responders) = split_batch(batch);
                 let logits = backend.infer_batch(images);
                 let batch_size = responders.len();
                 // one completion instant per batch: later responses must
                 // not absorb metrics-lock/send time into their latency
-                let completed = Instant::now();
+                let completed = Clock::now();
                 for (resp, out) in responders.into_iter().zip(logits) {
                     let queue_wait = t0.duration_since(resp.enqueued_at);
                     let latency = completed.duration_since(resp.enqueued_at);
@@ -84,7 +85,7 @@ impl InferenceServer {
                 }
             }
         });
-        Self { tx: Some(tx), worker: Some(worker), metrics, next_id: 0, started: Instant::now() }
+        Self { tx: Some(tx), worker: Some(worker), metrics, next_id: 0, started: Clock::now() }
     }
 
     /// Submit one image; returns the receiver for its response.
@@ -93,14 +94,20 @@ impl InferenceServer {
         self.next_id += 1;
         self.tx
             .as_ref()
+            // LINT-ALLOW: serving-unwrap — `tx` is Some until shutdown
+            // consumes `self`; no call can follow it.
             .expect("server stopped")
-            .send(Request { id: self.next_id, image, respond: tx, enqueued_at: Instant::now() })
+            .send(Request { id: self.next_id, image, respond: tx, enqueued_at: Clock::now() })
+            // LINT-ALLOW: serving-unwrap — the worker outlives `tx` by
+            // construction; a dead worker here is a crashed process.
             .expect("worker gone");
         rx
     }
 
     /// Submit and wait (convenience for tests / simple clients).
     pub fn infer(&mut self, image: Tensor) -> Response {
+        // LINT-ALLOW: serving-unwrap — single-process convenience path;
+        // the worker answers every request it dequeues.
         self.submit(image).recv().expect("worker dropped response")
     }
 

@@ -61,6 +61,16 @@
 //! * [`data`] — synthetic workload generators (procedural digit / texture
 //!   datasets, ImageNet-statistics activation generators) substituting for
 //!   the proprietary datasets per `DESIGN.md` §4.
+//!
+//! Project invariants (SAFETY comments on every `unsafe`, clock
+//! discipline, ordering justifications, serving-path unwrap bans) are
+//! machine-checked by `bfp-cnn lint` — see [`analysis::lint`].
+
+// every `unsafe` operation must sit in its own explicitly-audited block
+#![deny(unsafe_op_in_unsafe_fn)]
+// and every unsafe block carries a `// SAFETY:` comment (also enforced,
+// with more context, by `bfp-cnn lint`)
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod analysis;
 pub mod autotune;

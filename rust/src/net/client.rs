@@ -269,7 +269,10 @@ impl RetryingClient {
             client.set_read_timeout(self.read_timeout)?;
             self.inner = Some(client);
         }
-        Ok(self.inner.as_mut().expect("just connected"))
+        match self.inner.as_mut() {
+            Some(c) => Ok(c),
+            None => Err(anyhow::anyhow!("connection closed while connecting")),
+        }
     }
 
     /// One attempt over the current (or a fresh) connection.
@@ -321,6 +324,9 @@ impl RetryingClient {
                 self.retries += 1;
                 let half = (backoff.as_millis() as u64) / 2;
                 let jitter = self.next_jitter(half + 1);
+                // LINT-ALLOW: bare-sleep — reconnect pacing against a
+                // *remote* server must burn real wall time; a mocked
+                // fast-forward would hammer a struggling peer.
                 std::thread::sleep(Duration::from_millis(half + jitter));
                 backoff = (backoff * 2).min(self.policy.cap);
             }
@@ -335,7 +341,8 @@ impl RetryingClient {
             }
         }
         let attempts = self.policy.attempts.max(1);
-        let e = last_err.expect("at least one attempt ran");
+        let e = last_err
+            .unwrap_or_else(|| anyhow::anyhow!("no attempt ran (attempt budget is zero?)"));
         Err(e.context(format!("request still failing after {attempts} attempts")))
     }
 

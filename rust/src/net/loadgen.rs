@@ -263,6 +263,9 @@ pub fn run_open_loop(
             stats.absorb_reply(&reply, latency);
             seen += 1;
             if !read_stall.is_zero() {
+                // LINT-ALLOW: bare-sleep — the slow-client scenario
+                // models a real peer stalling its socket reads; it must
+                // hold TCP backpressure for genuine wall time.
                 std::thread::sleep(read_stall);
             }
         }
@@ -273,6 +276,9 @@ pub fn run_open_loop(
     for (i, when) in intended.iter().enumerate() {
         let now = Clock::now();
         if *when > now {
+            // LINT-ALLOW: bare-sleep — open-loop arrival pacing against
+            // a real server socket; mocked time would collapse the
+            // schedule and destroy the arrival process under test.
             std::thread::sleep(*when - now);
         }
         // behind schedule: send immediately, do NOT shift later arrivals
@@ -312,6 +318,8 @@ pub fn run_closed_loop(
         stats.absorb_reply(&reply, Some(sent_at.elapsed()));
         stats.sent += 1;
         if !opts.read_stall.is_zero() {
+            // LINT-ALLOW: bare-sleep — same slow-client modelling as the
+            // open-loop drain: real socket backpressure needs real time.
             std::thread::sleep(opts.read_stall);
         }
     }

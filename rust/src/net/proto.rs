@@ -538,15 +538,18 @@ impl<'a> Cursor<'a> {
     }
 
     fn u16(&mut self) -> Result<u16, DecodeError> {
-        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
     fn u32(&mut self) -> Result<u32, DecodeError> {
-        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     fn u64(&mut self) -> Result<u64, DecodeError> {
-        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     fn string(&mut self) -> Result<String, DecodeError> {
@@ -576,7 +579,7 @@ impl<'a> Cursor<'a> {
         let raw = self.bytes(4 * elems)?;
         let data = raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         Ok(Tensor::from_vec(data, &shape))
     }
@@ -613,7 +616,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg, DecodeError> {
         return Err(DecodeError::Truncated);
     }
     let (body, tail) = payload.split_at(payload.len() - CRC_BYTES);
-    let got = u32::from_le_bytes(tail.try_into().expect("CRC tail is 4 bytes"));
+    let got = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
     if got != payload_crc(body) {
         return Err(DecodeError::Corrupt);
     }

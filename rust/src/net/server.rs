@@ -108,6 +108,10 @@ impl NetServer {
     /// Stop accepting, close every connection, drain the router and
     /// return its final report (tenant accounting included).
     pub fn shutdown(mut self) -> QosReport {
+        // SeqCst: stop/drain form a two-flag protocol with the acceptor;
+        // Release/Acquire would suffice (join() below is the real sync
+        // point), but the shutdown path is cold so keep SeqCst for the
+        // simpler single-total-order reading.
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
@@ -118,6 +122,8 @@ impl NetServer {
             .lock()
             .unwrap()
             .take()
+            // LINT-ALLOW: serving-unwrap — the net server owns the qos
+            // router from construction to this take(); absence is a bug
             .expect("the net server owns the qos server until shutdown");
         qos.shutdown()
     }
@@ -127,10 +133,18 @@ impl NetServer {
     /// after that fails with a typed `Draining` error), half-close the
     /// connections so every pending reply still flushes, and return the
     /// final report. No request this server accepted goes unanswered.
+    // LOCK-ORDER: shared.qos is taken and released before the acceptor
+    // join; the second take happens after the acceptor (and with it
+    // every connection thread) is gone, so the two lock scopes never
+    // overlap another holder.
     pub fn shutdown_with_drain(mut self, bound: Duration) -> QosReport {
         if let Some(qos) = self.shared.qos.lock().unwrap().as_ref() {
             qos.begin_drain(bound);
         }
+        // SeqCst ×2: drain must be observable before stop so the
+        // acceptor picks Shutdown::Read; a Release/Acquire pair would
+        // do, but this cold path keeps SeqCst so the two flags read as
+        // one totally-ordered protocol.
         self.drain.store(true, Ordering::SeqCst);
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.acceptor.take() {
@@ -142,6 +156,8 @@ impl NetServer {
             .lock()
             .unwrap()
             .take()
+            // LINT-ALLOW: serving-unwrap — the net server owns the qos
+            // router from construction to this take(); absence is a bug
             .expect("the net server owns the qos server until shutdown");
         qos.shutdown()
     }
@@ -159,6 +175,9 @@ fn accept_loop(
     config: NetServerConfig,
 ) {
     let mut conns: Vec<(TcpStream, JoinHandle<()>)> = Vec::new();
+    // SeqCst: pairs with the SeqCst stores in shutdown(); the poll loop
+    // re-reads every 2ms so even a relaxed load would converge, but the
+    // flag stays SeqCst to match its writers.
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
@@ -192,8 +211,12 @@ fn accept_loop(
                 }
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                // LINT-ALLOW: bare-sleep — nonblocking-accept poll
+                // against a real OS socket; mocked time cannot make the
+                // kernel deliver a connection sooner.
                 std::thread::sleep(Duration::from_millis(2));
             }
+            // LINT-ALLOW: bare-sleep — same accept-poll backoff as above.
             Err(_) => std::thread::sleep(Duration::from_millis(2)),
         }
     }
@@ -201,6 +224,11 @@ fn accept_loop(
     // every connection thread (each joins its own writer). A drain stop
     // half-closes (read side only): readers see EOF and stop taking new
     // work, while the write side stays open for every queued reply.
+    // SeqCst: pairs with shutdown_with_drain's SeqCst store; drain was
+    // written before stop, and this load runs after the stop load broke
+    // the loop, so SeqCst's total order guarantees we see it. A
+    // downgrade from SeqCst to Acquire would also be correct but this
+    // runs once per server lifetime.
     let how = if drain.load(Ordering::SeqCst) { Shutdown::Read } else { Shutdown::Both };
     for (s, _) in &conns {
         let _ = s.shutdown(how);
@@ -269,6 +297,10 @@ struct ReqCtx {
 
 /// One connection: read frames until EOF/error, submit to the router,
 /// let the writer thread stream responses back out of order.
+// LOCK-ORDER: pending → write_half (writer thread), and shared.qos /
+// shared.metrics are each taken alone; no scope ever holds two of
+// {qos, metrics, pending, write_half} except pending-then-write_half,
+// which every path takes in that same order.
 fn serve_conn(stream: TcpStream, shared: Arc<Shared>, faults: Option<Arc<FaultInjector>>) {
     let reader_half = match stream.try_clone() {
         Ok(s) => s,
@@ -312,7 +344,9 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>, faults: Option<Arc<FaultIn
                             QosErrorKind::Timeout => ErrorCode::Timeout,
                             QosErrorKind::Draining => ErrorCode::ServerGone,
                             QosErrorKind::CorruptOutput => ErrorCode::Corrupt,
-                            _ => ErrorCode::Internal,
+                            QosErrorKind::ExecutorPanic | QosErrorKind::LaneRetired => {
+                                ErrorCode::Internal
+                            }
                         };
                         let err = NetError { id: ctx.client_id, code, message: e.to_string() };
                         proto::encode_error(&err)
@@ -434,6 +468,11 @@ fn validate_image(image: &crate::tensor::Tensor) -> Option<String> {
 }
 
 /// Validate, quota-gate, and hand one request to the router.
+// LOCK-ORDER: metrics alone, then qos → pending; write_half is only
+// taken by send_error with no other lock held except qos (qos →
+// write_half), so the global order is qos → {pending, write_half},
+// metrics disjoint — consistent with serve_conn's pending → write_half
+// because no path here holds pending while writing.
 fn handle_request(
     mut req: NetRequest,
     shared: &Shared,

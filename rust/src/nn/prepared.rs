@@ -633,6 +633,8 @@ impl PreparedModel {
             self.work_per_image,
             || ArenaGuard { ws: Some(self.take_workspace()), owner: self },
             |guard, img| {
+                // LINT-ALLOW: serving-unwrap — ws is Some for the
+                // guard's whole life; only Drop takes it out.
                 let ws = guard.ws.as_mut().expect("workspace checked out");
                 let mut exec = PreparedExec {
                     convs: &self.active,

@@ -9,11 +9,19 @@
 //! clock is exactly the OS monotonic clock.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Microseconds of artificial forward skew (test mocking; 0 in serving).
 static SKEW_US: AtomicU64 = AtomicU64::new(0);
+
+/// Wakes [`Clock::sleep`]ers when the clock skews forward: sleepers
+/// wait on the condvar against a [`Clock::now`]-based deadline, and
+/// [`Clock::advance`] notifies so mocked time passes without real time.
+fn sleepers() -> &'static (Mutex<()>, Condvar) {
+    static SLEEPERS: OnceLock<(Mutex<()>, Condvar)> = OnceLock::new();
+    SLEEPERS.get_or_init(|| (Mutex::new(()), Condvar::new()))
+}
 
 /// The process-wide origin every microsecond timestamp is relative to.
 /// Pinned lazily on first use; [`Clock::init`] (called by `obs::arm`)
@@ -32,6 +40,8 @@ impl Clock {
     /// `Duration` arithmetic and deadlines exactly as before.
     #[inline]
     pub fn now() -> Instant {
+        // Relaxed: the skew is a monotone test knob; readers only need
+        // *some* recent value, not cross-thread ordering with it.
         let skew = SKEW_US.load(Ordering::Relaxed);
         let now = Instant::now();
         if skew == 0 {
@@ -63,7 +73,34 @@ impl Clock {
     /// Skew the clock forward — the test mock. Affects every consumer
     /// process-wide; serving code must never call it.
     pub fn advance(d: Duration) {
+        // Relaxed: monotone counter, no other memory is published with it.
         SKEW_US.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+        // wake sleepers so mocked time passes without real waiting
+        sleepers().1.notify_all();
+    }
+
+    /// Clock-aware sleep: blocks until `Clock::now() >= start + d`.
+    /// In serving this is an ordinary bounded wait; under test mocking,
+    /// [`Clock::advance`] wakes sleepers immediately, so periodic
+    /// threads (scrubber cadence, restart backoff) fast-forward instead
+    /// of stalling the test for real wall time.
+    pub fn sleep(d: Duration) {
+        let deadline = Self::now() + d;
+        let (mutex, condvar) = sleepers();
+        let mut guard = match mutex.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        loop {
+            let now = Self::now();
+            if now >= deadline {
+                return;
+            }
+            guard = match condvar.wait_timeout(guard, deadline - now) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
     }
 }
 

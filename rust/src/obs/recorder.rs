@@ -28,17 +28,23 @@ static ARMED: AtomicBool = AtomicBool::new(false);
 /// span timestamps share one time base from here on.
 pub fn arm() {
     Clock::init();
+    // SeqCst: arming is a once-per-process cold toggle; a downgrade to
+    // Release would be sound (armed() tolerates staleness) but saves
+    // nothing off the hot path, so keep the strongest order for clarity.
     ARMED.store(true, Ordering::SeqCst);
 }
 
 /// Disarm the recorder (tests; serving arms once and never disarms).
 pub fn disarm() {
+    // SeqCst: test-only cold toggle, same rationale as `arm`.
     ARMED.store(false, Ordering::SeqCst);
 }
 
 /// Whether tracing is armed — the one relaxed load unarmed hot paths pay.
 #[inline]
 pub fn armed() -> bool {
+    // Relaxed: a stale read only delays span capture by one check; no
+    // data is published through this flag.
     ARMED.load(Ordering::Relaxed)
 }
 
@@ -306,13 +312,20 @@ impl Ring {
     /// release fence between, so a reader that sees matching even
     /// generations on both sides of its data loads saw a whole record.
     fn write(&self, t0_us: u64, dur_us: u64, meta: u64) {
+        // Relaxed: single-writer counter; only this thread increments it.
         let n = self.head.fetch_add(1, Ordering::Relaxed);
         let base = (n as usize % RING_SLOTS) * WORDS;
+        // Relaxed store + the Release fence below: the odd seq must be
+        // visible before any data word changes (fence orders them).
         self.slots[base].store(2 * n + 1, Ordering::Relaxed);
         fence(Ordering::Release);
+        // Relaxed: the surrounding seq protocol, not these stores,
+        // carries the ordering (fence above, Release seq store below).
         self.slots[base + 1].store(t0_us, Ordering::Relaxed);
         self.slots[base + 2].store(dur_us, Ordering::Relaxed);
         self.slots[base + 3].store(meta, Ordering::Relaxed);
+        // Release: publishes the data words to readers that Acquire-load
+        // an even seq.
         self.slots[base].store(2 * n + 2, Ordering::Release);
     }
 
@@ -323,6 +336,8 @@ impl Ring {
         let mut out = Vec::new();
         for chunk in self.slots.chunks_exact(WORDS) {
             for _ in 0..16 {
+                // Acquire: pairs with the writer's Release seq store, so
+                // an even seq means the data words below are visible.
                 let s1 = chunk[0].load(Ordering::Acquire);
                 if s1 == 0 {
                     break; // never written
@@ -331,10 +346,15 @@ impl Ring {
                     std::hint::spin_loop();
                     continue; // writer is inside this record
                 }
+                // Relaxed: validated by the seq recheck after the
+                // Acquire fence below; torn reads are detected, not
+                // prevented.
                 let t0_us = chunk[1].load(Ordering::Relaxed);
                 let dur_us = chunk[2].load(Ordering::Relaxed);
                 let meta = chunk[3].load(Ordering::Relaxed);
                 fence(Ordering::Acquire);
+                // Relaxed: the fence above orders this recheck after the
+                // data loads; equality with s1 proves stability.
                 if chunk[0].load(Ordering::Relaxed) == s1 {
                     out.push(RawRecord { seq: s1 / 2 - 1, t0_us, dur_us, meta });
                     break;
@@ -359,6 +379,8 @@ struct LocalRing(Arc<Ring>);
 
 impl Drop for LocalRing {
     fn drop(&mut self) {
+        // Release: the exiting thread's ring writes happen-before any
+        // thread that re-acquires the ring (Acquire CAS in acquire_ring).
         self.0.in_use.store(false, Ordering::Release);
     }
 }
@@ -370,15 +392,20 @@ thread_local! {
 fn acquire_ring() -> Arc<Ring> {
     let mut reg = registry().lock().unwrap();
     for ring in reg.iter() {
+        // Acquire on success: pairs with the Release in LocalRing::drop
+        // so the previous owner's writes are visible; Relaxed on failure
+        // (the loop just moves on).
         if ring
             .in_use
-            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed) // see above
             .is_ok()
         {
             return Arc::clone(ring);
         }
     }
     let ring = Arc::new(Ring::new(reg.len() as u32));
+    // Relaxed: the ring is brand new and unshared until pushed under the
+    // registry lock, which publishes it.
     ring.in_use.store(true, Ordering::Relaxed);
     reg.push(Arc::clone(&ring));
     ring

@@ -228,6 +228,10 @@ impl FaultInjector {
             match spec {
                 FaultSpec::DelayLane { lane: l, ms, every } if l == lane && n % every == 0 => {
                     crate::obs::event_lane(crate::obs::EventKind::Fault, lane);
+                    // LINT-ALLOW: bare-sleep — an injected latency spike
+                    // must stall the executor for real wall time; routing
+                    // it through the mockable clock would let tests skip
+                    // the very delay the chaos scenario is asserting on.
                     std::thread::sleep(Duration::from_millis(*ms));
                 }
                 FaultSpec::PanicLane { lane: l, nth, times }
@@ -252,6 +256,7 @@ impl FaultInjector {
     /// the wire CRC passed (or a hostile client that computes correct
     /// CRCs over garbage).
     pub fn poison_input(&self) -> bool {
+        // Relaxed: monotone request counter; no memory is published.
         let r = self.requests.fetch_add(1, Ordering::Relaxed) + 1;
         self.specs.iter().any(|s| matches!(s, FaultSpec::NanInput { nth } if *nth == r))
     }
@@ -260,6 +265,7 @@ impl FaultInjector {
     /// plan tells the connection handler whether (and how) to sabotage
     /// this connection.
     pub fn on_conn(&self) -> ConnFault {
+        // Relaxed: monotone connection counter; no memory is published.
         let c = self.conns.fetch_add(1, Ordering::Relaxed) + 1;
         for spec in &self.specs {
             match spec {

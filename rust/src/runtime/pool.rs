@@ -161,6 +161,10 @@ where
                 IN_POOL.with(|c| c.set(true));
                 crate::obs::set_ctx(ctx);
                 loop {
+                    // Relaxed: work-stealing ticket counter — the claim
+                    // itself is the synchronization-free contract (each
+                    // task index is handed out exactly once); the scope
+                    // join publishes the results.
                     let t = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     if t >= tasks {
                         break;

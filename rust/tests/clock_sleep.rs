@@ -1,0 +1,35 @@
+//! `obs::clock::Clock::sleep` end to end: a real sleep before any mock
+//! skew exists, then prompt wake-up of a far-future sleeper when the
+//! mock clock advances.
+//!
+//! Lives in its own test binary on purpose: `Clock`'s skew is
+//! process-global, so advancing it here must not share a process with
+//! tests that assume real time.
+
+use bfp_cnn::obs::clock::Clock;
+use std::time::{Duration, Instant};
+
+#[test]
+fn sleep_tracks_real_time_then_wakes_on_advance() {
+    // With no skew applied yet, Clock::sleep is an honest sleep.
+    let t0 = Instant::now();
+    Clock::sleep(Duration::from_millis(50));
+    assert!(t0.elapsed() >= Duration::from_millis(45), "slept only {:?}", t0.elapsed());
+
+    // A 30 s mocked sleep must return as soon as the clock jumps past
+    // its deadline — not after 30 s of wall time.
+    let t1 = Instant::now();
+    let h = std::thread::spawn(|| Clock::sleep(Duration::from_secs(30)));
+    std::thread::sleep(Duration::from_millis(200));
+    // Keep advancing: the sleeper may compute its deadline before or
+    // after any single advance lands, so one notify is not enough.
+    for _ in 0..150 {
+        Clock::advance(Duration::from_secs(31));
+        if h.is_finished() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    h.join().expect("sleeper thread panicked");
+    assert!(t1.elapsed() < Duration::from_secs(20), "mocked sleep took {:?}", t1.elapsed());
+}

@@ -1,0 +1,40 @@
+// Negative fixture: every marker/justification form the linter
+// accepts. Linting this file under a serving path must yield zero
+// findings.
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub fn operator_timer() -> Instant {
+    // LINT-ALLOW: clock-source — operator-facing timer; wall time is
+    // exactly what we want to show
+    Instant::now()
+}
+
+pub fn paced_wait() {
+    // LINT-ALLOW: bare-sleep — pacing against a remote peer needs real
+    // wall time
+    std::thread::sleep(Duration::from_millis(1));
+}
+
+pub fn read_ptr(p: *const u8) -> u8 {
+    // SAFETY: the caller guarantees `p` points at a live byte
+    unsafe { *p }
+}
+
+pub fn publish(flag: &AtomicBool) {
+    // Release: pairs with the Acquire load in the reader
+    flag.store(true, Ordering::Release);
+}
+
+pub fn stop(flag: &AtomicBool) {
+    // SeqCst: cold shutdown flag; keep the total order for simplicity
+    flag.store(true, Ordering::SeqCst);
+}
+
+// LOCK-ORDER: a before b, everywhere
+pub fn both(a: &Mutex<u8>, b: &Mutex<u8>) -> u8 {
+    let x = *a.lock().unwrap();
+    let y = *b.lock().unwrap();
+    x + y
+}

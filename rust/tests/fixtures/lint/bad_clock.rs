@@ -1,0 +1,6 @@
+// Seeded fixture: raw time source on a serving path.
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

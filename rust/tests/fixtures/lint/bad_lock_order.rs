@@ -1,0 +1,9 @@
+// Seeded fixture: two lock acquisitions in one fn, no LOCK-ORDER
+// annotation.
+use std::sync::Mutex;
+
+pub fn both(a: &Mutex<u8>, b: &Mutex<u8>) -> u8 {
+    let x = *a.lock().unwrap();
+    let y = *b.lock().unwrap();
+    x + y
+}

@@ -1,0 +1,12 @@
+// Seeded fixture: atomic orderings with no justification comment, and
+// a SeqCst whose comment never explains why SeqCst.
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub fn set(flag: &AtomicBool) {
+    flag.store(true, Ordering::Relaxed);
+}
+
+pub fn set_strong(flag: &AtomicBool) {
+    // stop flag for shutdown
+    flag.store(true, Ordering::SeqCst);
+}

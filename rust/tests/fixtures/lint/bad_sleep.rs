@@ -1,0 +1,6 @@
+// Seeded fixture: bare sleep on a serving path.
+use std::time::Duration;
+
+pub fn nap() {
+    std::thread::sleep(Duration::from_millis(1));
+}

@@ -1,0 +1,4 @@
+// Seeded fixture: `unsafe` with no SAFETY comment anywhere above it.
+pub fn read_first(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,11 @@
+// Seeded fixture: unwrap on the serving path. The mutex poison unwrap
+// below must NOT fire (structural exclusion).
+use std::sync::Mutex;
+
+pub fn first(v: &[u8]) -> u8 {
+    *v.first().unwrap()
+}
+
+pub fn guarded(m: &Mutex<u8>) -> u8 {
+    *m.lock().unwrap()
+}

@@ -1,0 +1,132 @@
+//! Integration tests for `bfp-cnn lint`: the committed tree must be
+//! clean against the committed baseline, the seeded fixture files under
+//! `tests/fixtures/lint/` must fire exactly the expected rules when
+//! planted in a pretend repo, and a full baseline must grandfather
+//! every finding.
+
+use bfp_cnn::analysis::lint::{baseline_key, collect_sources, load_baseline, repo_root};
+use bfp_cnn::analysis::rules::run_all;
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Minimal wire-clean cross-file inputs so `rule_wire_exhaustive` has
+/// its three files and emits nothing for the pretend repo.
+const WIRE_QOS: &str = "pub enum QosErrorKind {\n    Timeout,\n}\n";
+const WIRE_SERVER: &str = "pub fn map() {\n    let _ = QosErrorKind::Timeout;\n}\n";
+const WIRE_PROTO: &str = r#"pub const KIND_PING: u8 = 1;
+
+pub fn enc(mut w: impl FnMut(u8)) {
+    w(KIND_PING);
+}
+
+pub fn dec(r: u8) -> bool {
+    r == KIND_PING
+}
+
+#[cfg(test)]
+mod tests {
+    fn round_trip() {
+        encode_ping(1);
+    }
+}
+"#;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/lint").join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Plant the seeded fixtures in a fresh temp repo under pretend serving
+/// paths, so every path-scoped rule is in scope for them.
+fn build_temp_repo(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("bfp_lint_it_{tag}_{}", std::process::id()));
+    fs::remove_dir_all(&root).ok();
+    let rust = root.join("rust");
+    for (rel, body) in [
+        ("src/bfp/bad_unsafe.rs", fixture("bad_unsafe.rs")),
+        ("src/coordinator/bad_sleep.rs", fixture("bad_sleep.rs")),
+        ("src/net/bad_clock.rs", fixture("bad_clock.rs")),
+        ("src/net/bad_unwrap.rs", fixture("bad_unwrap.rs")),
+        ("src/obs/bad_ordering.rs", fixture("bad_ordering.rs")),
+        ("src/runtime/bad_lock_order.rs", fixture("bad_lock_order.rs")),
+        ("src/net/allowed_clean.rs", fixture("allowed_clean.rs")),
+        ("src/coordinator/qos.rs", WIRE_QOS.to_string()),
+        ("src/net/server.rs", WIRE_SERVER.to_string()),
+        ("src/net/proto.rs", WIRE_PROTO.to_string()),
+    ] {
+        let p = rust.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(&p, body).unwrap();
+    }
+    root
+}
+
+#[test]
+fn real_tree_is_clean_against_committed_baseline() {
+    let root = repo_root().expect("repo root not found");
+    let tree = collect_sources(&root).expect("collect sources");
+    let violations = run_all(&tree.lexed);
+    let baseline = load_baseline(&root.join("rust/analysis/baseline.txt"));
+    let new: Vec<String> = violations
+        .iter()
+        .filter(|v| !baseline.contains(&baseline_key(v, &tree)))
+        .map(|v| v.to_string())
+        .collect();
+    assert!(
+        new.is_empty(),
+        "lint found new violations in the real tree:\n{}",
+        new.join("\n")
+    );
+    let current: BTreeSet<String> = violations.iter().map(|v| baseline_key(v, &tree)).collect();
+    let stale: Vec<&String> = baseline.difference(&current).collect();
+    assert!(stale.is_empty(), "stale baseline entries: {stale:?}");
+}
+
+#[test]
+fn seeded_fixtures_fire_exactly_the_expected_rules() {
+    let root = build_temp_repo("fixtures");
+    let tree = collect_sources(&root).expect("collect temp sources");
+    let violations = run_all(&tree.lexed);
+    let mut got: Vec<(String, &str)> =
+        violations.iter().map(|v| (v.path.clone(), v.rule)).collect();
+    got.sort();
+    let want = vec![
+        ("src/bfp/bad_unsafe.rs".to_string(), "unsafe-safety"),
+        ("src/coordinator/bad_sleep.rs".to_string(), "bare-sleep"),
+        ("src/net/bad_clock.rs".to_string(), "clock-source"),
+        ("src/net/bad_unwrap.rs".to_string(), "serving-unwrap"),
+        ("src/obs/bad_ordering.rs".to_string(), "ordering-comment"),
+        ("src/obs/bad_ordering.rs".to_string(), "ordering-comment"),
+        ("src/runtime/bad_lock_order.rs".to_string(), "lock-order"),
+    ];
+    assert_eq!(
+        got,
+        want,
+        "unexpected finding set:\n{}",
+        violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn baseline_grandfathers_every_finding() {
+    let root = build_temp_repo("baseline");
+    let tree = collect_sources(&root).expect("collect temp sources");
+    let violations = run_all(&tree.lexed);
+    assert!(!violations.is_empty(), "fixture tree should have findings");
+    let keys: BTreeSet<String> = violations.iter().map(|v| baseline_key(v, &tree)).collect();
+    let path = root.join("rust/analysis/baseline.txt");
+    fs::create_dir_all(path.parent().unwrap()).unwrap();
+    let mut body = String::from("# grandfathered by the round-trip test\n\n");
+    for k in &keys {
+        body.push_str(k);
+        body.push('\n');
+    }
+    fs::write(&path, body).unwrap();
+    let loaded = load_baseline(&path);
+    assert_eq!(loaded, keys, "baseline must round-trip through the parser");
+    let new = violations.iter().filter(|v| !loaded.contains(&baseline_key(v, &tree))).count();
+    assert_eq!(new, 0, "a full baseline must grandfather every finding");
+    fs::remove_dir_all(&root).ok();
+}
